@@ -1,0 +1,51 @@
+//! Ablation study driver: sweeps the FGOP mechanism ladder (Fig 19) and
+//! the temporal-region size (Fig 20) for one kernel, printing per-step
+//! cycles and cycle-breakdown shifts — the fine-grained view behind the
+//! paper's aggregate bars.
+//!
+//!     cargo run --release --example ablation [kernel] [n]
+
+use revel::compiler::FabricSpec;
+use revel::workloads::{self, prepare, Features, Goal};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let kernel = args.first().cloned().unwrap_or_else(|| "cholesky".into());
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+
+    println!("== mechanism ladder: {kernel} n={n} (latency) ==");
+    let mut prev = None;
+    for (name, feats) in Features::ladder() {
+        let r = prepare(&kernel, n, feats, Goal::Latency)
+            .unwrap()
+            .execute()
+            .unwrap();
+        let delta = prev
+            .map(|p: u64| format!("{:.2}x step", p as f64 / r.cycles as f64))
+            .unwrap_or_default();
+        println!("  {name:>12}: {:>8} cycles  {delta}", r.cycles);
+        print!("    ");
+        for (b, f) in r.stats.fractions() {
+            if f > 0.02 {
+                print!("{}:{:.0}% ", b.name(), 100.0 * f);
+            }
+        }
+        println!();
+        prev = Some(r.cycles);
+    }
+
+    println!("\n== temporal-region sweep (Fig 20) ==");
+    for (w, h) in [(1usize, 1usize), (2, 1), (2, 2), (4, 2)] {
+        workloads::set_fabric(Some(FabricSpec::revel(w, h)));
+        let r = prepare(&kernel, n, Features::ALL, Goal::Latency)
+            .unwrap()
+            .execute()
+            .unwrap();
+        workloads::set_fabric(None);
+        println!(
+            "  {w}x{h}: {:>8} cycles, fabric {:.3} mm^2",
+            r.cycles,
+            revel::model::fabric_area_mm2(&FabricSpec::revel(w, h))
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Full paper reproduction: regenerates every evaluation figure and
+//! table in order (Figs 1, 7, 8, 16-22, Table 6, headline numbers).
+//! Equivalent to `revel report all`. Expect a few minutes.
+//!
+//!     cargo run --release --example paper_repro
+
+fn main() {
+    println!("{}", revel::report::all());
+}

@@ -1,0 +1,12 @@
+use revel::workloads::{prepare, Features, Goal};
+fn main() {
+    let t0 = std::time::Instant::now();
+    let p = prepare("cholesky", 32, Features::ALL, Goal::Latency).unwrap();
+    let t_prep = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let mut m = p.machine;
+    m.run(p.prog).unwrap();
+    let t_run = t1.elapsed();
+    println!("prepare {:?}  run {:?} ({} cycles, {:.2}M cyc/s)",
+        t_prep, t_run, m.stats.cycles, m.stats.cycles as f64 / t_run.as_secs_f64() / 1e6);
+}

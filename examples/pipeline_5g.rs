@@ -1,0 +1,39 @@
+//! End-to-end driver: a 5G-baseband receiver pipeline served by a pool
+//! of simulated REVEL units (paper Fig 4), with real data flowing
+//! through FFT -> Cholesky -> Solver -> GEMM, verified at every stage,
+//! and (when `make artifacts` has run) cross-checked against the
+//! AOT-compiled JAX/Pallas golden models through PJRT.
+//!
+//!     cargo run --release --example pipeline_5g [jobs] [workers]
+
+use revel::coordinator;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let jobs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    println!("5G receiver pipeline: stages {:?}", coordinator::STAGES);
+
+    // L2/L1 golden cross-check through PJRT (skipped without artifacts).
+    match coordinator::golden_check() {
+        Ok(()) => println!("PJRT golden check: all stages match the AOT JAX kernels"),
+        Err(e) => println!("PJRT golden check skipped/failed: {e}"),
+    }
+
+    // Open-loop burst: measures raw serving capacity.
+    let s = coordinator::serve(jobs, workers, 0.0, 42);
+    println!("\nburst of {} jobs over {} workers:", s.jobs, workers);
+    println!("  wall time        {:.2} s ({:.2} jobs/s)", s.wall_s, s.jobs_per_s);
+    println!("  sim latency p50  {:.1} us", s.sim_latency_p50_us);
+    println!("  sim latency p99  {:.1} us", s.sim_latency_p99_us);
+    println!("  queue delay p99  {:.3} s", s.queue_delay_p99_s);
+    println!("  jobs per worker  {:?}", s.per_worker);
+
+    // Paced Poisson arrivals: checks the queue drains under load.
+    let rate = (s.jobs_per_s * 0.8).max(1.0);
+    let p = coordinator::serve(jobs, workers, rate, 7);
+    println!("\npoisson arrivals at {rate:.1} jobs/s:");
+    println!("  wall time        {:.2} s", p.wall_s);
+    println!("  queue delay p99  {:.3} s", p.queue_delay_p99_s);
+}

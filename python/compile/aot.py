@@ -1,0 +1,68 @@
+"""AOT lowering: every registry entry -> artifacts/<name>.hlo.txt.
+
+HLO *text* is the interchange format (NOT lowered.compiler_ir().serialize()
+nor jax.export): jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids, which the rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot [--outdir ../artifacts] [names...]
+Writes a manifest.json describing shapes, and a .stamp for make.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("names", nargs="*", help="subset of registry names")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    reg = model.registry()
+    names = args.names or sorted(reg)
+    manifest = {}
+    for name in names:
+        fn, specs = reg[name]
+        text = lower_entry(fn, specs)
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+        }
+        print(f"  aot: {name} -> {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    with open(os.path.join(args.outdir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print(f"aot: wrote {len(names)} artifacts to {args.outdir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

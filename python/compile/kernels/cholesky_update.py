@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: one right-looking Cholesky step (paper Fig 5).
+
+REVEL decomposes Cholesky into three dataflows: a *point* region
+(sqrt + reciprocal), a *vector* region (pivot-column scale) and a *matrix*
+region (rank-1 trailing update).  The matrix region is the critical
+dataflow (paper Feature 5) and its iteration domain is triangular and
+inductive — it shrinks by one row/column every outer step.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of REVEL's
+inductive streams + implicit vector masking, the kernel operates on a
+fixed n×n VMEM block and *masks* the live triangular sub-domain with
+`broadcasted_iota` comparisons against the step index `k`.  The mask is
+generated inside the kernel — the caller never materializes ragged
+iterations — which is exactly the role implicit vector masking plays in
+REVEL's stream control unit.  The rank-1 update is expressed as an outer
+product feeding an elementwise subtract, the MXU/VPU-friendly form of the
+critical dataflow; the sqrt/div point region is the scalar prologue (the
+"temporal fabric" analogue).
+
+VMEM footprint: 3 n×n f32 blocks (in, out, outer-product temp); for the
+paper's n ≤ 32 this is ≤ 12 KiB — far under the ~16 MiB VMEM budget, so a
+single-block (grid-free) kernel is the right shape.  Estimated MXU story
+is in DESIGN.md §6.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cholesky_step_kernel(k_ref, a_ref, o_ref):
+    n = a_ref.shape[0]
+    k = k_ref[0]
+    a = a_ref[...]
+
+    # Point region (non-critical; scalar sqrt + reciprocal).
+    akk = jax.lax.dynamic_index_in_dim(
+        jax.lax.dynamic_index_in_dim(a, k, axis=0, keepdims=False),
+        k,
+        axis=0,
+        keepdims=False,
+    )
+    d = jnp.sqrt(akk)
+    inva = 1.0 / d
+
+    # Vector region: scale the pivot column below the diagonal.
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    rowvec = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+    col = jnp.where(
+        rowvec > k,
+        jax.lax.dynamic_slice_in_dim(a, k, 1, axis=1) * inva,
+        0.0,
+    )  # (n, 1)
+
+    # Matrix region (critical): masked rank-1 trailing update.
+    live = (rows > k) & (cols > k)
+    upd = a - col @ col.T  # outer product -> MXU-shaped contraction
+    out = jnp.where(live, upd, a)
+
+    # Write back the scaled pivot column and the diagonal sqrt.
+    colmask = cols == k
+    out = jnp.where(colmask & (rows > k), col, out)
+    out = jnp.where(colmask & (rows == k), d, out)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cholesky_step(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """One Cholesky outer-loop step via the Pallas kernel (interpret mode)."""
+    n = a.shape[0]
+    k_arr = jnp.asarray(k, dtype=jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _cholesky_step_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        interpret=True,
+    )(k_arr, a)
+
+
+def cholesky(a: jnp.ndarray) -> jnp.ndarray:
+    """Full Cholesky factor via n sequential kernel steps (ordered dep.)."""
+    n = a.shape[0]
+    out = jax.lax.fori_loop(
+        0, n, lambda k, m: cholesky_step(m, jnp.int32(k)), a
+    )
+    return jnp.tril(out)

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: centro-symmetric FIR filter (paper Table 5 "FIR").
+
+On REVEL, FIR uses a 1D *inductive* access phase ("I" capability in
+Table 5): the sliding window over x is expressed as a stream whose start
+address advances with the outer induction variable.  On TPU the window
+walk becomes `m` statically-unrolled shifted loads from the same VMEM
+block (x fits comfortably in VMEM at these sizes), each feeding a
+VPU-wide multiply-accumulate.  The taps are centro-symmetric
+(h[j] == h[m-1-j]); the kernel exploits this the same way the DSPLIB
+centro-FIR does, by adding the two mirrored windows before multiplying —
+halving the multiplies, the paper's Table 4 ASIC model counts the same
+(n-m+1)/4 per-cycle throughput.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fir_kernel(x_ref, h_ref, o_ref, *, m: int, n_out: int):
+    x = x_ref[...]
+    h = h_ref[...]
+    acc = jnp.zeros((n_out,), dtype=jnp.float32)
+    half = m // 2
+    # Centro-symmetric pairing: h[j] * (x[i+j] + x[i+m-1-j]).
+    for j in range(half):
+        wa = jax.lax.dynamic_slice_in_dim(x, j, n_out)
+        wb = jax.lax.dynamic_slice_in_dim(x, m - 1 - j, n_out)
+        acc = acc + h[j] * (wa + wb)
+    if m % 2 == 1:
+        wc = jax.lax.dynamic_slice_in_dim(x, half, n_out)
+        acc = acc + h[half] * wc
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def fir(x: jnp.ndarray, h: jnp.ndarray, m: int | None = None):
+    """y[i] = sum_j h[j] x[i+j] for centro-symmetric h (len(h) == m)."""
+    m = m if m is not None else h.shape[0]
+    n_out = x.shape[0] - m + 1
+    return pl.pallas_call(
+        functools.partial(_fir_kernel, m=m, n_out=n_out),
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.float32),
+        interpret=True,
+    )(x, h)

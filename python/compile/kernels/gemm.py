@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: tiled GEMM (beamforming stage, paper Table 5).
+
+GEMM is one of the paper's non-FGOP kernels — its iteration domain is
+rectangular, so on REVEL it uses plain RR streams with stream-reuse
+(Table 5 row "GEMM": Acc=RR, Reuse=Y).  The TPU analogue of stream-reuse
+is VMEM block residency across grid steps: the A tile is revisited for
+every N tile (index_map ignores j) and the B tile for every M tile, so
+each HBM word is fetched O(1) times per tile-row instead of O(tiles).
+
+The MXU wants the contraction as `jnp.dot(..., preferred_element_type=
+jnp.float32)` on (bm, K) x (K, bn) blocks.  The paper's matrices are small
+(m in {12,24,48}, K=16, N=64) so K is kept whole per tile and the caller
+pads M/N up to tile multiples (the padding rows are sliced off after the
+call — the same role REVEL's implicit vector masking plays for
+non-vector-width-divisible iterations).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gemm(a: jnp.ndarray, b: jnp.ndarray, bm: int = 8, bn: int = 32):
+    """C = A @ B with (bm, bn) output tiles; pads M and N as needed."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    mp = (m + bm - 1) // bm * bm
+    np_ = (n + bn - 1) // bn * bn
+    a_p = jnp.pad(a, ((0, mp - m), (0, 0)))
+    b_p = jnp.pad(b, ((0, 0), (0, np_ - n)))
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]

@@ -1,0 +1,184 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and JAX models.
+
+Everything here is written with plain jnp ops (no jnp.linalg custom-calls):
+the AOT path must produce HLO that the rust PJRT CPU client (xla_extension
+0.5.1) can execute, and jaxlib's lapack custom-calls are not registered
+there.  These functions double as the L2 reference implementations that the
+REVEL simulator's functional outputs are validated against.
+
+The region structure of each kernel mirrors the paper's Fig 5/6/9
+decomposition (point / vector / matrix regions), which is what the REVEL
+dataflow programs in rust/src/workloads/ implement.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Cholesky (paper Fig 5): point region (sqrt/div), vector region (column
+# scale), matrix region (rank-1 trailing update).
+# ---------------------------------------------------------------------------
+
+
+def cholesky_step(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """One outer-loop iteration of right-looking Cholesky, full-matrix masked.
+
+    Rows/cols <= k are left untouched except column k, which receives the
+    scaled pivot column.  This is the oracle for kernels/cholesky_update.py.
+    """
+    n = a.shape[0]
+    i = jnp.arange(n)
+    d = jnp.sqrt(a[k, k])  # point region
+    inva = 1.0 / d
+    col = jnp.where(i > k, a[:, k] * inva, 0.0)  # vector region
+    below = i > k
+    mask = below[:, None] & below[None, :]  # matrix region domain
+    upd = a - jnp.outer(col, col)
+    out = jnp.where(mask, upd, a)
+    out = out.at[:, k].set(jnp.where(below, col, out[:, k]))
+    out = out.at[k, k].set(d)
+    return out
+
+
+def cholesky(a: jnp.ndarray) -> jnp.ndarray:
+    """Full Cholesky factor L (lower-triangular), a must be SPD."""
+    n = a.shape[0]
+    out = jax.lax.fori_loop(0, n, lambda k, m: cholesky_step(m, k), a)
+    return jnp.tril(out)
+
+
+# ---------------------------------------------------------------------------
+# Triangular solver (paper Fig 2/9): forward substitution L x = b.
+# ---------------------------------------------------------------------------
+
+
+def solver(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    n = l.shape[0]
+
+    def body(j, x):
+        # x holds zeros beyond j-1, so the full-row dot is exact.
+        xj = (b[j] - jnp.dot(l[j, :], x)) / l[j, j]
+        return x.at[j].set(xj)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+# ---------------------------------------------------------------------------
+# Householder QR (paper Fig 6): householder region (point/vector) + trailing
+# matrix region.
+# ---------------------------------------------------------------------------
+
+
+def qr(a: jnp.ndarray):
+    """Householder QR; returns (q, r) with q orthogonal, r upper-triangular."""
+    n = a.shape[0]
+    eye = jnp.eye(n, dtype=a.dtype)
+
+    def body(k, qr_pair):
+        q, r = qr_pair
+        i = jnp.arange(n)
+        sel = i >= k
+        x = jnp.where(sel, r[:, k], 0.0)
+        normx = jnp.sqrt(jnp.sum(x * x))
+        xk = x[k]
+        sign = jnp.where(xk >= 0.0, 1.0, -1.0)
+        alpha = -sign * normx
+        v = x - alpha * (i == k).astype(a.dtype)
+        vnorm2 = jnp.sum(v * v)
+        # Degenerate column (already zero below the diagonal): skip.
+        safe = vnorm2 > 1e-30
+        invv = jnp.where(safe, 2.0 / jnp.where(safe, vnorm2, 1.0), 0.0)
+        r = r - invv * jnp.outer(v, v @ r)
+        q = q - invv * jnp.outer(q @ v, v)
+        return (q, r)
+
+    q, r = jax.lax.fori_loop(0, n, body, (eye, a))
+    return q, r
+
+
+# ---------------------------------------------------------------------------
+# One-sided Jacobi SVD: returns singular values (sorted descending).
+# The paper's SVD uses a bidiagonalization pipeline; the evaluation only
+# needs singular values for numerical checking, and one-sided Jacobi keeps
+# the HLO free of custom calls.
+# ---------------------------------------------------------------------------
+
+
+def _jacobi_pairs(n: int) -> jnp.ndarray:
+    return jnp.array(
+        [(p, q) for p in range(n - 1) for q in range(p + 1, n)],
+        dtype=jnp.int32,
+    )
+
+
+def svd_values(a: jnp.ndarray, sweeps: int = 12) -> jnp.ndarray:
+    n = a.shape[0]
+    pairs = _jacobi_pairs(n)
+    npairs = pairs.shape[0]
+
+    def rotate(i, m):
+        p = pairs[i % npairs, 0]
+        q = pairs[i % npairs, 1]
+        cp = m[:, p]
+        cq = m[:, q]
+        app = jnp.dot(cp, cp)
+        aqq = jnp.dot(cq, cq)
+        apq = jnp.dot(cp, cq)
+        # Classic one-sided Jacobi rotation.
+        small = jnp.abs(apq) <= 1e-12 * jnp.sqrt(app * aqq) + 1e-30
+        tau = (aqq - app) / (2.0 * jnp.where(small, 1.0, apq))
+        t = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+        t = jnp.where(small, 0.0, t)
+        c = 1.0 / jnp.sqrt(1.0 + t * t)
+        s = c * t
+        newp = c * cp - s * cq
+        newq = s * cp + c * cq
+        m = m.at[:, p].set(newp)
+        m = m.at[:, q].set(newq)
+        return m
+
+    m = jax.lax.fori_loop(0, sweeps * npairs, rotate, a)
+    vals = jnp.sqrt(jnp.sum(m * m, axis=0))
+    return jnp.sort(vals)[::-1]
+
+
+# ---------------------------------------------------------------------------
+# GEMM / FIR / FFT (non-FGOP kernels, paper Table 5)
+# ---------------------------------------------------------------------------
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a, b)
+
+
+def fir(x: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Centro-symmetric FIR: y[i] = sum_j h[j] * x[i + j].
+
+    x has length n_out + len(h) - 1 (correlation form, matching the DSPLIB
+    convention for FIR filters).
+    """
+    m = h.shape[0]
+    n_out = x.shape[0] - m + 1
+    idx = jnp.arange(n_out)[:, None] + jnp.arange(m)[None, :]
+    return jnp.sum(x[idx] * h[None, :], axis=1)
+
+
+def centro_taps(m: int, key: float = 0.0) -> jnp.ndarray:
+    """Generate centro-symmetric taps h[j] == h[m-1-j]."""
+    half = (m + 1) // 2
+    base = jnp.sin(jnp.arange(half, dtype=jnp.float32) * 0.7 + 0.3 + key)
+    full = jnp.concatenate([base, base[: m - half][::-1]])
+    return full
+
+
+def fft(re: jnp.ndarray):
+    """Complex FFT of a real signal; returns (re, im) f32 arrays."""
+    z = jnp.fft.fft(re.astype(jnp.complex64))
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def make_spd(n: int, seed: float = 0.0) -> jnp.ndarray:
+    """Deterministic well-conditioned SPD test matrix."""
+    i = jnp.arange(n, dtype=jnp.float32)
+    m = jnp.sin(jnp.outer(i + 1.0, i + 2.0) * 0.05 + seed) * 0.9
+    return m @ m.T + n * jnp.eye(n, dtype=jnp.float32)

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: triangular solve by forward substitution (paper Fig 2).
+
+The solver is the paper's instructive FGOP example: a *divide* dataflow
+(point region) produces x[j] = b[j] / L[j][j], which the *vector* region
+consumes with an inductive production:consumption rate (each x[j] is
+reused n-1-j times — the stream "stretch" s_c = -1 of Fig 9/11).
+
+TPU adaptation: the loop-carried chain stays a `fori_loop` inside a single
+kernel invocation (it is inherently sequential), while the vector region's
+masked AXPY `b -= x[j] * L[:, j]` is a full-width VPU op with an
+iota-vs-j mask instead of an inductive trip count — again implicit
+masking in place of REVEL's shrinking streams.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _solver_kernel(l_ref, b_ref, o_ref):
+    n = l_ref.shape[0]
+    l = l_ref[...]
+    b0 = b_ref[...]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def body(j, carry):
+        b, x = carry
+        bj = jax.lax.dynamic_index_in_dim(b, j, keepdims=False)
+        ljj = jax.lax.dynamic_index_in_dim(
+            jax.lax.dynamic_index_in_dim(l, j, axis=0, keepdims=False),
+            j,
+            keepdims=False,
+        )
+        xj = bj / ljj  # point region (divide dataflow)
+        colj = jax.lax.dynamic_slice_in_dim(l, j, 1, axis=1)[:, 0]
+        # Vector region: masked AXPY over the remaining rows.
+        b = jnp.where(rows > j, b - xj * colj, b)
+        x = jnp.where(rows == j, xj, x)
+        return (b, x)
+
+    _, x = jax.lax.fori_loop(0, n, body, (b0, jnp.zeros_like(b0)))
+    o_ref[...] = x
+
+
+@jax.jit
+def solver(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve L x = b (L lower-triangular) with the Pallas kernel."""
+    n = l.shape[0]
+    return pl.pallas_call(
+        _solver_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(l, b)

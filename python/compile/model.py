@@ -1,0 +1,115 @@
+"""L2: JAX compute graphs for every REVEL workload (paper Table 5).
+
+These are the functions AOT-lowered by aot.py into artifacts/*.hlo.txt and
+executed from the rust runtime as golden numerical models.  The FGOP
+kernels (Cholesky, Solver) and the vectorizable hot loops (GEMM, FIR) call
+the L1 Pallas kernels, so the Pallas code lowers into the very same HLO the
+rust coordinator runs.  QR / SVD / FFT are pure-jnp (ref.py) — their hot
+regions are matrix products XLA already fuses well, and keeping them
+custom-call-free is required for the 0.5.1 PJRT client.
+
+Workload sizes follow paper Table 5:
+  SVD/QR/Cholesky/Solver/FIR: n in {12, 16, 24, 32}
+  FFT: n in {64, 128, 1024};  GEMM: (m, 16, 64) for m in {12, 24, 48}.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import cholesky_update as k_chol
+from .kernels import gemm as k_gemm
+from .kernels import fir as k_fir
+from .kernels import solver_row as k_solver
+
+# ---------------------------------------------------------------------------
+# Individual workloads (all return tuples — AOT lowers with return_tuple).
+# ---------------------------------------------------------------------------
+
+
+def cholesky(a):
+    """Cholesky factor L of SPD a, built from n Pallas step-kernels."""
+    return (k_chol.cholesky(a),)
+
+
+def solver(l, b):
+    """Forward substitution L x = b via the Pallas solver kernel."""
+    return (k_solver.solver(l, b),)
+
+
+def qr(a):
+    q, r = ref.qr(a)
+    return (q, r)
+
+
+def svd(a):
+    return (ref.svd_values(a),)
+
+
+def gemm(a, b):
+    return (k_gemm.gemm(a, b),)
+
+
+def fir(x, h, m: int):
+    return (k_fir.fir(x, h, m),)
+
+
+def fft(re):
+    return ref.fft(re)
+
+
+# ---------------------------------------------------------------------------
+# Composed 5G receiver pipeline slice (paper Fig 4): the end-to-end graph
+# the coordinator example drives.  One subframe:
+#   1. FFT the received time-domain signal (per-antenna).
+#   2. Channel estimation: A = H^H H + sigma I, L = chol(A)   (Cholesky)
+#   3. Equalization: solve L z = H^T y                         (Solver)
+#   4. Beamforming: s = W @ z_pad                              (GEMM)
+# Real-valued stand-in for the complex baseband math — same dataflow and
+# FLOP structure, which is what the reproduction measures.
+# ---------------------------------------------------------------------------
+
+
+def pipeline_5g(h, y_time, w):
+    n = h.shape[1]
+    y_re, y_im = ref.fft(y_time)
+    y = y_re[: h.shape[0]] + 0.125 * y_im[: h.shape[0]]
+    a = h.T @ h + 0.1 * jnp.eye(n, dtype=jnp.float32)
+    l = k_chol.cholesky(a)
+    rhs = h.T @ y
+    z = k_solver.solver(l, rhs)
+    s = k_gemm.gemm(w, z.reshape(n, 1))
+    return (l, z, s.reshape(-1))
+
+
+# ---------------------------------------------------------------------------
+# AOT registry: name -> (fn, example-input ShapeDtypeStructs).
+# Rust's runtime/artifacts.rs mirrors this table.
+# ---------------------------------------------------------------------------
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def registry():
+    entries = {}
+    for n in (12, 16, 24, 32):
+        entries[f"cholesky_n{n}"] = (cholesky, (f32(n, n),))
+        entries[f"solver_n{n}"] = (solver, (f32(n, n), f32(n)))
+        entries[f"qr_n{n}"] = (qr, (f32(n, n),))
+        entries[f"svd_n{n}"] = (svd, (f32(n, n),))
+    for m in (12, 24, 48):
+        entries[f"gemm_m{m}"] = (gemm, (f32(m, 16), f32(16, 64)))
+    for m in (16, 32):
+        entries[f"fir_m{m}"] = (
+            lambda x, h, m=m: fir(x, h, m),
+            (f32(64 + m - 1), f32(m)),
+        )
+    for n in (64, 128, 1024):
+        entries[f"fft_n{n}"] = (fft, (f32(n),))
+    entries["pipeline_n16"] = (
+        pipeline_5g,
+        (f32(24, 16), f32(64), f32(16, 16)),
+    )
+    return entries

@@ -1,0 +1,145 @@
+"""L1 correctness: Pallas kernels vs. pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/values; every comparison is assert_allclose against
+the reference.  This is the CORE correctness signal for the compile path —
+the same kernels lower into the HLO artifacts the rust coordinator runs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import cholesky_update as k_chol
+from compile.kernels import gemm as k_gemm
+from compile.kernels import fir as k_fir
+from compile.kernels import solver_row as k_solver
+
+SIZES = [4, 8, 12, 16, 24, 32]
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# Cholesky step + full factorization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_cholesky_step_matches_ref(n):
+    a = ref.make_spd(n)
+    for k in [0, 1, n // 2, n - 1]:
+        got = k_chol.cholesky_step(a, jnp.int32(k))
+        want = ref.cholesky_step(a, jnp.int32(k))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_cholesky_full_matches_numpy(n):
+    a = np.asarray(ref.make_spd(n), dtype=np.float64)
+    want = np.linalg.cholesky(a)
+    got = k_chol.cholesky(jnp.asarray(a, dtype=jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 20), seed=st.integers(0, 10_000))
+def test_cholesky_hypothesis(n, seed):
+    g = rng(seed)
+    m = g.standard_normal((n, n)).astype(np.float32)
+    a = m @ m.T + n * np.eye(n, dtype=np.float32)
+    want = np.linalg.cholesky(a.astype(np.float64))
+    got = k_chol.cholesky(jnp.asarray(a))
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Solver
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_solver_matches_ref(n):
+    a = ref.make_spd(n)
+    l = jnp.tril(a) + jnp.eye(n) * n
+    b = jnp.sin(jnp.arange(n, dtype=jnp.float32))
+    got = k_solver.solver(l, b)
+    want = ref.solver(l, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 24), seed=st.integers(0, 10_000))
+def test_solver_hypothesis_vs_numpy(n, seed):
+    g = rng(seed)
+    l = np.tril(g.standard_normal((n, n))).astype(np.float32)
+    np.fill_diagonal(l, np.abs(np.diag(l)) + 1.0)
+    b = g.standard_normal(n).astype(np.float32)
+    got = np.asarray(k_solver.solver(jnp.asarray(l), jnp.asarray(b)))
+    want = np.linalg.solve(l.astype(np.float64), b.astype(np.float64))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [12, 24, 48])
+def test_gemm_paper_sizes(m):
+    g = rng(m)
+    a = g.standard_normal((m, 16)).astype(np.float32)
+    b = g.standard_normal((16, 64)).astype(np.float32)
+    got = k_gemm.gemm(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 24),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 10_000),
+)
+def test_gemm_hypothesis_shapes(m, k, n, seed):
+    g = rng(seed)
+    a = g.standard_normal((m, k)).astype(np.float32)
+    b = g.standard_normal((k, n)).astype(np.float32)
+    got = k_gemm.gemm(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# FIR
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [4, 5, 16, 32])
+def test_fir_matches_ref(m):
+    n_out = 64
+    x = jnp.cos(jnp.arange(n_out + m - 1, dtype=jnp.float32) * 0.1)
+    h = ref.centro_taps(m)
+    got = k_fir.fir(x, h, m)
+    want = ref.fir(x, h)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 32), n_out=st.integers(1, 96), seed=st.integers(0, 10_000))
+def test_fir_hypothesis(m, n_out, seed):
+    g = rng(seed)
+    x = g.standard_normal(n_out + m - 1).astype(np.float32)
+    h = np.asarray(ref.centro_taps(m, key=float(seed % 7)))
+    got = k_fir.fir(jnp.asarray(x), jnp.asarray(h), m)
+    want = np.correlate(x, h, mode="valid")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_centro_taps_are_centro_symmetric():
+    for m in range(2, 33):
+        h = np.asarray(ref.centro_taps(m))
+        np.testing.assert_allclose(h, h[::-1], rtol=0, atol=0)

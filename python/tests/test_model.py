@@ -1,0 +1,75 @@
+"""L2 correctness: model graphs vs numpy oracles + AOT lowering sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, aot
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("n", [12, 16, 24, 32])
+def test_qr_reconstructs_and_is_orthogonal(n):
+    a = np.asarray(ref.make_spd(n)) * 0.1 + np.eye(n, dtype=np.float32)
+    q, r = model.qr(jnp.asarray(a))
+    q, r = np.asarray(q), np.asarray(r)
+    np.testing.assert_allclose(q @ r, a, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(q.T @ q, np.eye(n), rtol=1e-3, atol=1e-3)
+    # r upper-triangular
+    assert np.abs(np.tril(r, -1)).max() < 1e-3
+
+
+@pytest.mark.parametrize("n", [8, 12, 16, 24])
+def test_svd_values_vs_numpy(n):
+    g = np.random.default_rng(n)
+    a = g.standard_normal((n, n)).astype(np.float32)
+    got = np.asarray(model.svd(jnp.asarray(a))[0])
+    want = np.linalg.svd(a.astype(np.float64), compute_uv=False)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [64, 128])
+def test_fft_vs_numpy(n):
+    x = np.random.default_rng(n).standard_normal(n).astype(np.float32)
+    re, im = model.fft(jnp.asarray(x))
+    want = np.fft.fft(x)
+    np.testing.assert_allclose(re, want.real, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(im, want.imag, rtol=1e-3, atol=1e-3)
+
+
+def test_pipeline_5g_consistent():
+    """End-to-end pipeline graph = composition of its stage oracles."""
+    g = np.random.default_rng(5)
+    h = g.standard_normal((24, 16)).astype(np.float32)
+    y_time = g.standard_normal(64).astype(np.float32)
+    w = g.standard_normal((16, 16)).astype(np.float32)
+    l, z, s = model.pipeline_5g(jnp.asarray(h), jnp.asarray(y_time), jnp.asarray(w))
+
+    re, im = ref.fft(jnp.asarray(y_time))
+    y = np.asarray(re)[:24] + 0.125 * np.asarray(im)[:24]
+    a = h.T @ h + 0.1 * np.eye(16, dtype=np.float32)
+    l_want = np.linalg.cholesky(a.astype(np.float64))
+    np.testing.assert_allclose(l, l_want, rtol=2e-3, atol=2e-3)
+    z_want = np.linalg.solve(l_want, h.T.astype(np.float64) @ y)
+    np.testing.assert_allclose(z, z_want, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(s, w @ np.asarray(z), rtol=2e-3, atol=2e-3)
+
+
+def test_registry_covers_table5():
+    reg = model.registry()
+    for n in (12, 16, 24, 32):
+        for k in ("cholesky", "solver", "qr", "svd"):
+            assert f"{k}_n{n}" in reg
+    for m in (12, 24, 48):
+        assert f"gemm_m{m}" in reg
+    assert "fft_n1024" in reg and "pipeline_n16" in reg
+
+
+def test_aot_lowering_produces_parseable_hlo_text():
+    """Smoke: one small entry lowers to non-trivial HLO text with ENTRY."""
+    reg = model.registry()
+    fn, specs = reg["solver_n12"]
+    text = aot.lower_entry(fn, specs)
+    assert "ENTRY" in text and "f32[12,12]" in text
+    assert len(text) > 500

@@ -1,0 +1,6 @@
+//! Regenerates the paper's fig16 (see rust/src/report.rs).
+fn main() {
+    let t = std::time::Instant::now();
+    println!("{}", revel::report::fig16());
+    eprintln!("[bench fig16_latency] completed in {:.2?}", t.elapsed());
+}

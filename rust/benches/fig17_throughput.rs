@@ -1,0 +1,6 @@
+//! Regenerates the paper's fig17 (see rust/src/report.rs).
+fn main() {
+    let t = std::time::Instant::now();
+    println!("{}", revel::report::fig17());
+    eprintln!("[bench fig17_throughput] completed in {:.2?}", t.elapsed());
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's fig18 (see rust/src/report.rs).
+fn main() {
+    let t = std::time::Instant::now();
+    println!("{}", revel::report::fig18());
+    eprintln!("[bench fig18_breakdown] completed in {:.2?}", t.elapsed());
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's fig19 (see rust/src/report.rs).
+fn main() {
+    let t = std::time::Instant::now();
+    println!("{}", revel::report::fig19());
+    eprintln!("[bench fig19_mechanisms] completed in {:.2?}", t.elapsed());
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's fig1 (see rust/src/report.rs).
+fn main() {
+    let t = std::time::Instant::now();
+    println!("{}", revel::report::fig1());
+    eprintln!("[bench fig1_utilization] completed in {:.2?}", t.elapsed());
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's fig20 (see rust/src/report.rs).
+fn main() {
+    let t = std::time::Instant::now();
+    println!("{}", revel::report::fig20());
+    eprintln!("[bench fig20_temporal] completed in {:.2?}", t.elapsed());
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's fig21_22 (see rust/src/report.rs).
+fn main() {
+    let t = std::time::Instant::now();
+    println!("{}", revel::report::fig21_22());
+    eprintln!("[bench fig21_22_streams] completed in {:.2?}", t.elapsed());
+}

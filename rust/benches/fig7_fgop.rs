@@ -1,0 +1,6 @@
+//! Regenerates the paper's fig7 (see rust/src/report.rs).
+fn main() {
+    let t = std::time::Instant::now();
+    println!("{}", revel::report::fig7());
+    eprintln!("[bench fig7_fgop] completed in {:.2?}", t.elapsed());
+}

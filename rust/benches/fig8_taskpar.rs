@@ -1,0 +1,6 @@
+//! Regenerates the paper's fig8 (see rust/src/report.rs).
+fn main() {
+    let t = std::time::Instant::now();
+    println!("{}", revel::report::fig8());
+    eprintln!("[bench fig8_taskpar] completed in {:.2?}", t.elapsed());
+}

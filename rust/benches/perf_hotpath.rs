@@ -1,0 +1,37 @@
+//! Performance bench for the simulator's hot path: simulated lane-cycles
+//! per wall-clock second over a representative workload mix (the §Perf
+//! target in EXPERIMENTS.md). Run before/after optimizations.
+use revel::workloads::{prepare, Features, Goal};
+
+fn main() {
+    let mut total_cycles = 0u64;
+    let mut total_lane_cycles = 0u64;
+    let t = std::time::Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        for (k, n, goal) in [
+            ("cholesky", 32, Goal::Latency),
+            ("solver", 32, Goal::Latency),
+            ("qr", 24, Goal::Latency),
+            ("fft", 1024, Goal::Latency),
+            ("gemm", 48, Goal::Throughput),
+            ("svd", 12, Goal::Latency),
+        ] {
+            let r = prepare(k, n, Features::ALL, goal)
+                .unwrap()
+                .execute()
+                .unwrap();
+            total_cycles += r.cycles;
+            total_lane_cycles += r.stats.lane_cycles.iter().sum::<u64>();
+        }
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "perf_hotpath: {total_cycles} machine-cycles, {total_lane_cycles} lane-cycles in {dt:.2}s"
+    );
+    println!(
+        "  {:.2}M machine-cycles/s | {:.2}M lane-cycles/s",
+        total_cycles as f64 / dt / 1e6,
+        total_lane_cycles as f64 / dt / 1e6
+    );
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's table6 (see rust/src/report.rs).
+fn main() {
+    let t = std::time::Instant::now();
+    println!("{}", revel::report::table6());
+    eprintln!("[bench table6_asic] completed in {:.2?}", t.elapsed());
+}

@@ -1,0 +1,382 @@
+//! Instrumented kernels for the FGOP characterization (paper Fig 7):
+//! the 7 DSP kernels plus a PolyBench subset, each reporting loads,
+//! stores, arithmetic and region transitions to the tracer. Addresses
+//! are logical word indices (the tracer only needs identity + order).
+
+use super::trace::{FgopStats, Tracer};
+
+/// DSP kernel names (paper Fig 7 left).
+pub const DSP: [&str; 7] = ["cholesky", "qr", "svd", "solver", "fft", "gemm", "fir"];
+
+/// PolyBench subset (paper Fig 7 right).
+pub const POLYBENCH: [&str; 8] =
+    ["2mm", "3mm", "atax", "bicg", "gesummv", "mvt", "syrk", "trisolv"];
+
+/// Trace a kernel at size n.
+pub fn trace(name: &str, n: usize) -> FgopStats {
+    let mut t = Tracer::new();
+    match name {
+        "cholesky" => cholesky(&mut t, n),
+        "qr" => qr(&mut t, n),
+        "svd" => svd(&mut t, n),
+        "solver" => solver(&mut t, n),
+        "fft" => fft(&mut t, n),
+        "gemm" => gemm(&mut t, n),
+        "fir" => fir(&mut t, n),
+        "2mm" => mm2(&mut t, n),
+        "3mm" => mm3(&mut t, n),
+        "atax" => atax(&mut t, n),
+        "bicg" => bicg(&mut t, n),
+        "gesummv" => gesummv(&mut t, n),
+        "mvt" => mvt(&mut t, n),
+        "syrk" => syrk(&mut t, n),
+        "trisolv" => trisolv(&mut t, n),
+        _ => panic!("unknown kernel {name}"),
+    }
+    t.finish()
+}
+
+// Address-space bases keep arrays distinct.
+const A: i64 = 0;
+const B: i64 = 1 << 20;
+const C: i64 = 2 << 20;
+const D: i64 = 3 << 20;
+
+fn idx(base: i64, n: usize, i: i64, j: i64) -> i64 {
+    base + i * n as i64 + j
+}
+
+fn cholesky(t: &mut Tracer, n: usize) {
+    let n_i = n as i64;
+    for k in 0..n_i {
+        t.region(0); // point
+        t.load(0, k, 0, idx(A, n, k, k));
+        t.arith(2); // sqrt + div
+        t.store(1, k, 0, idx(A, n, k, k));
+        t.region(1); // vector
+        for i in k + 1..n_i {
+            t.load(2, k, i - k - 1, idx(A, n, i, k));
+            t.arith(1);
+            t.store(3, k, i - k - 1, idx(A, n, i, k));
+        }
+        t.region(2); // matrix
+        for j in k + 1..n_i {
+            let row = k * (n_i + 1) + j; // globally unique row key
+            for i in j..n_i {
+                t.load(4, row, i - j, idx(A, n, i, k));
+                t.load(5, row, i - j, idx(A, n, j, k));
+                t.load(6, row, i - j, idx(A, n, i, j));
+                t.arith(2);
+                t.store(7, row, i - j, idx(A, n, i, j));
+            }
+        }
+    }
+}
+
+fn qr(t: &mut Tracer, n: usize) {
+    let n_i = n as i64;
+    for k in 0..n_i {
+        t.region(0); // norm + householder scalar chain
+        for i in k..n_i {
+            t.load(0, k, i - k, idx(A, n, i, k));
+            t.arith(2);
+        }
+        t.arith(8);
+        t.store(1, k, 0, idx(A, n, k, k));
+        for j in k + 1..n_i {
+            let row = k * (n_i + 1) + j;
+            t.region(1); // w_j dot
+            for i in k..n_i {
+                t.load(2, row, i - k, idx(A, n, i, k));
+                t.load(3, row, i - k, idx(A, n, i, j));
+                t.arith(2);
+            }
+            t.store(4, row, 0, idx(B, n, 0, j));
+            t.region(2); // update
+            for i in k..n_i {
+                t.load(5, row, i - k, idx(B, n, 0, j));
+                t.load(6, row, i - k, idx(A, n, i, k));
+                t.load(7, row, i - k, idx(A, n, i, j));
+                t.arith(2);
+                t.store(8, row, i - k, idx(A, n, i, j));
+            }
+        }
+    }
+}
+
+fn svd(t: &mut Tracer, n: usize) {
+    let n_i = n as i64;
+    let mut pair = 0i64;
+    for p in 0..n_i - 1 {
+        for q in p + 1..n_i {
+            // `pair` is the tracer's outer coordinate (globally unique);
+            // `q` stays the real column index for addresses.
+            pair += 1;
+            t.region(0); // dots
+            for i in 0..n_i {
+                t.load(0, pair, i, idx(A, n, i, p));
+                t.load(1, pair, i, idx(A, n, i, q));
+                t.arith(6);
+            }
+            t.region(1); // rotation params
+            t.arith(12);
+            t.store(2, pair, 0, idx(B, n, 0, 0));
+            t.region(2); // rotate
+            for i in 0..n_i {
+                t.load(3, pair, i, idx(B, n, 0, 0));
+                t.load(4, pair, i, idx(A, n, i, p));
+                t.load(5, pair, i, idx(A, n, i, q));
+                t.arith(6);
+                t.store(6, pair, i, idx(A, n, i, p));
+                t.store(7, pair, i, idx(A, n, i, q));
+            }
+        }
+    }
+}
+
+fn solver(t: &mut Tracer, n: usize) {
+    let n_i = n as i64;
+    for j in 0..n_i {
+        t.region(0); // divide
+        t.load(0, j, 0, B + j);
+        t.load(1, j, 0, idx(A, n, j, j));
+        t.arith(1);
+        t.store(2, j, 0, C + j);
+        t.region(1); // update
+        for i in j + 1..n_i {
+            t.load(3, j, i - j - 1, C + j);
+            t.load(4, j, i - j - 1, idx(A, n, i, j));
+            t.load(5, j, i - j - 1, B + i);
+            t.arith(2);
+            t.store(6, j, i - j - 1, B + i);
+        }
+    }
+}
+
+fn fft(t: &mut Tracer, n: usize) {
+    let mut len = 2i64;
+    let n_i = n as i64;
+    let mut stage = 0;
+    while len <= n_i {
+        t.region(stage % 2); // alternating stages
+        let half = len / 2;
+        for s in (0..n_i).step_by(len as usize) {
+            let row = stage as i64 * n_i + s / len;
+            for k in 0..half {
+                t.load(0, row, k, A + s + k);
+                t.load(1, row, k, A + s + k + half);
+                t.load(2, row, k, B + k * (n_i / len));
+                t.arith(10);
+                t.store(3, row, k, A + s + k);
+                t.store(4, row, k, A + s + k + half);
+            }
+        }
+        len *= 2;
+        stage += 1;
+    }
+}
+
+fn gemm(t: &mut Tracer, m: usize) {
+    let (k_dim, p_dim) = (16i64, 64i64);
+    for i in 0..m as i64 {
+        for j in 0..p_dim {
+            for k in 0..k_dim {
+                t.load(0, i * p_dim + j, k, idx(A, 16, i, k));
+                t.load(1, i * p_dim + j, k, idx(B, 64, k, j));
+                t.arith(2);
+            }
+            t.store(2, i, j, idx(C, 64, i, j));
+        }
+    }
+}
+
+fn fir(t: &mut Tracer, m: usize) {
+    let n_out = 64i64;
+    for i in 0..n_out {
+        for j in 0..(m / 2) as i64 {
+            t.load(0, i, j, A + i + j);
+            t.load(1, i, j, A + i + m as i64 - 1 - j);
+            t.load(2, i, j, B + j);
+            t.arith(3);
+        }
+        t.store(3, i, 0, C + i);
+    }
+}
+
+// ---- PolyBench subset (rectangular, mostly non-FGOP) -----------------
+
+fn mm_nn(t: &mut Tracer, n: usize, a: i64, b: i64, c: i64, s0: u32) {
+    let n_i = n as i64;
+    for i in 0..n_i {
+        for j in 0..n_i {
+            for k in 0..n_i {
+                t.load(s0, i * n_i + j, k, idx(a, n, i, k));
+                t.load(s0 + 1, i * n_i + j, k, idx(b, n, k, j));
+                t.arith(2);
+            }
+            t.store(s0 + 2, i, j, idx(c, n, i, j));
+        }
+    }
+}
+
+fn mm2(t: &mut Tracer, n: usize) {
+    t.region(0);
+    mm_nn(t, n, A, B, C, 0);
+    t.region(1);
+    mm_nn(t, n, C, D, A, 10);
+}
+
+fn mm3(t: &mut Tracer, n: usize) {
+    t.region(0);
+    mm_nn(t, n, A, B, C, 0);
+    t.region(1);
+    mm_nn(t, n, B, D, A, 10);
+    t.region(2);
+    mm_nn(t, n, C, A, D, 20);
+}
+
+fn atax(t: &mut Tracer, n: usize) {
+    let n_i = n as i64;
+    t.region(0);
+    for i in 0..n_i {
+        for j in 0..n_i {
+            t.load(0, i, j, idx(A, n, i, j));
+            t.load(1, i, j, B + j);
+            t.arith(2);
+        }
+        t.store(2, i, 0, C + i);
+    }
+    t.region(1);
+    for i in 0..n_i {
+        for j in 0..n_i {
+            t.load(3, i, j, idx(A, n, j, i));
+            t.load(4, i, j, C + j);
+            t.arith(2);
+        }
+        t.store(5, i, 0, D + i);
+    }
+}
+
+fn bicg(t: &mut Tracer, n: usize) {
+    atax(t, n); // structurally identical two-phase mat-vec pair
+}
+
+fn gesummv(t: &mut Tracer, n: usize) {
+    let n_i = n as i64;
+    t.region(0);
+    for i in 0..n_i {
+        for j in 0..n_i {
+            t.load(0, i, j, idx(A, n, i, j));
+            t.load(1, i, j, idx(B, n, i, j));
+            t.load(2, i, j, C + j);
+            t.arith(4);
+        }
+        t.store(3, i, 0, D + i);
+    }
+}
+
+fn mvt(t: &mut Tracer, n: usize) {
+    let n_i = n as i64;
+    t.region(0);
+    for i in 0..n_i {
+        for j in 0..n_i {
+            t.load(0, i, j, idx(A, n, i, j));
+            t.load(1, i, j, B + j);
+            t.arith(2);
+        }
+        t.store(2, i, 0, C + i);
+    }
+    t.region(1);
+    for i in 0..n_i {
+        for j in 0..n_i {
+            t.load(3, i, j, idx(A, n, j, i));
+            t.load(4, i, j, D + j);
+            t.arith(2);
+        }
+        t.store(5, i, 0, B + i);
+    }
+}
+
+fn syrk(t: &mut Tracer, n: usize) {
+    let n_i = n as i64;
+    t.region(0);
+    for i in 0..n_i {
+        for j in 0..=i {
+            for k in 0..n_i {
+                t.load(0, i * n_i + j, k, idx(A, n, i, k));
+                t.load(1, i * n_i + j, k, idx(A, n, j, k));
+                t.arith(2);
+            }
+            t.store(2, i, j, idx(C, n, i, j));
+        }
+    }
+}
+
+fn trisolv(t: &mut Tracer, n: usize) {
+    // PolyBench's triangular solve — the FGOP member of the suite.
+    solver(t, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dsp_kernels_show_fgop_properties() {
+        // Factorizations: highly ordered, inductive, imbalanced.
+        for k in ["cholesky", "solver"] {
+            let s = trace(k, 16);
+            assert!(s.ordered_fraction > 0.8, "{k} ordered {}", s.ordered_fraction);
+            assert!(
+                s.inductive_fraction > 0.5,
+                "{k} inductive {}",
+                s.inductive_fraction
+            );
+            assert!(s.imbalanced(), "{k} imbalance {}", s.region_imbalance);
+            assert!(!s.dep_distances.is_empty(), "{k} has inter-region deps");
+        }
+    }
+
+    #[test]
+    fn gemm_is_regular() {
+        let s = trace("gemm", 24);
+        assert!(s.inductive_fraction < 0.1, "{}", s.inductive_fraction);
+        assert!(s.dep_distances.is_empty(), "no inter-region deps in gemm");
+    }
+
+    #[test]
+    fn dependence_distances_in_paper_band() {
+        // Paper: most dependences between ~75 and ~1000 arith insts.
+        let s = trace("cholesky", 16);
+        let med = s.median_distance();
+        assert!(
+            (10..=2000).contains(&med),
+            "median distance {med} out of plausible band"
+        );
+    }
+
+    #[test]
+    fn polybench_less_inductive_than_dsp() {
+        let poly_avg: f64 = POLYBENCH
+            .iter()
+            .map(|k| trace(k, 16).inductive_fraction)
+            .sum::<f64>()
+            / POLYBENCH.len() as f64;
+        let dsp_avg: f64 = ["cholesky", "qr", "svd", "solver"]
+            .iter()
+            .map(|k| trace(k, 16).inductive_fraction)
+            .sum::<f64>()
+            / 4.0;
+        assert!(dsp_avg > poly_avg, "dsp {dsp_avg} vs poly {poly_avg}");
+    }
+
+    #[test]
+    fn all_kernels_traceable_at_fig7_sizes() {
+        for k in DSP.iter().chain(POLYBENCH.iter()) {
+            for n in [16, 32] {
+                let s = trace(k, n);
+                assert!(s.regions >= 1, "{k}");
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! FGOP characterization (paper §3, Fig 7) and stream-capability
+//! analysis (paper Q10, Figs 21/22).
+//!
+//! `trace` is a shadow-memory dynamic dependence tracer: instrumented
+//! kernels report loads/stores/arithmetic/region transitions and the
+//! tracer measures the four FGOP properties exactly as the paper's
+//! LLVM instrumentation does. `kernels` holds instrumented versions of
+//! the 7 DSP kernels plus a PolyBench subset. `streams` runs the
+//! closed-form (scalar-evolution-style) stream-length analysis over a
+//! declarative loop-nest IR of each kernel's memory accesses.
+
+pub mod kernels;
+pub mod streams;
+pub mod trace;
+
+pub use trace::{FgopStats, Tracer};

@@ -1,0 +1,253 @@
+//! Stream-capability analysis (paper Q10, Figs 21/22): closed-form
+//! stream lengths and control overhead for address-generation
+//! capabilities V / R / RR / RI / RRR / RII, over a declarative
+//! loop-nest IR of each kernel's memory access sites (the stand-in for
+//! the paper's LLVM scalar-evolution analysis — affine SCEVs are
+//! exactly what this IR encodes).
+
+use crate::isa::Capability;
+
+/// A (up to) 3-deep affine loop nest for one access site, outer to
+/// inner: trips t0; t1 = b1 + s10*j0; t2 = b2 + s20*j0 + s21*j1.
+#[derive(Clone, Copy, Debug)]
+pub struct Nest {
+    pub t0: i64,
+    pub b1: i64,
+    pub s10: i64,
+    pub b2: i64,
+    pub s20: i64,
+    pub s21: i64,
+    /// Elements each inner iteration touches via port-level reuse
+    /// (broadcast scalars): with stream-reuse disabled the site needs
+    /// one extra command per reuse run (Fig 22's stacked bars).
+    pub reuse_runs: i64,
+}
+
+impl Nest {
+    pub fn rect3(t0: i64, t1: i64, t2: i64) -> Self {
+        Self { t0, b1: t1, s10: 0, b2: t2, s20: 0, s21: 0, reuse_runs: 0 }
+    }
+
+    pub fn tri2(t0: i64, b2: i64, s20: i64) -> Self {
+        // 2D site hoisted under a trivial outer dim: trips (t0, 1, ...).
+        Self { t0, b1: 1, s10: 0, b2, s20, s21: 0, reuse_runs: 0 }
+    }
+
+    fn t1(&self, j0: i64) -> i64 {
+        (self.b1 + self.s10 * j0).max(0)
+    }
+
+    fn t2(&self, j0: i64, j1: i64) -> i64 {
+        (self.b2 + self.s20 * j0 + self.s21 * j1).max(0)
+    }
+
+    /// Total elements.
+    pub fn elems(&self) -> i64 {
+        let mut e = 0;
+        for j0 in 0..self.t0 {
+            for j1 in 0..self.t1(j0) {
+                e += self.t2(j0, j1);
+            }
+        }
+        e
+    }
+
+    /// Innermost rows.
+    fn rows(&self) -> i64 {
+        (0..self.t0).map(|j0| self.t1(j0)).sum()
+    }
+
+    /// Commands needed under a capability.
+    pub fn commands(&self, cap: Capability) -> i64 {
+        match cap {
+            Capability::V(w) => {
+                let mut c = 0;
+                for j0 in 0..self.t0 {
+                    for j1 in 0..self.t1(j0) {
+                        c += (self.t2(j0, j1) + w as i64 - 1) / w as i64;
+                    }
+                }
+                c.max(1)
+            }
+            Capability::R => self.rows().max(1),
+            Capability::RR => {
+                // Covers (j1, j2) when the inner trip is rectangular in
+                // j1; otherwise decompose to rows.
+                if self.s21 == 0 {
+                    self.t0.max(1)
+                } else {
+                    self.rows().max(1)
+                }
+            }
+            Capability::RI => self.t0.max(1),
+            Capability::RRR => {
+                if self.s10 == 0 && self.s20 == 0 && self.s21 == 0 {
+                    1
+                } else if self.s21 == 0 {
+                    self.t0.max(1)
+                } else {
+                    self.rows().max(1)
+                }
+            }
+            Capability::RII => 1,
+        }
+    }
+
+    /// Extra commands when port-level stream reuse is unavailable.
+    pub fn reuse_penalty(&self) -> i64 {
+        self.reuse_runs
+    }
+}
+
+/// One kernel's access-site inventory + inner-iteration count.
+pub struct KernelStreams {
+    pub name: &'static str,
+    pub sites: Vec<Nest>,
+    pub inner_iters: i64,
+}
+
+/// Build the stream inventory for a kernel at size n (the dominant
+/// access sites of the inner loops).
+pub fn kernel_streams(name: &str, n: usize) -> KernelStreams {
+    let n_i = n as i64;
+    let sites = match name {
+        // Trailing update: a, ci (reused scalar), cj — triangular in
+        // both outer dims.
+        "cholesky" => vec![
+            Nest { t0: n_i, b1: n_i - 1, s10: -1, b2: n_i - 1, s20: -1, s21: -1, reuse_runs: n_i * (n_i - 1) / 2 },
+            Nest { t0: n_i, b1: n_i - 1, s10: -1, b2: n_i - 1, s20: -1, s21: -1, reuse_runs: 0 },
+        ],
+        // Per-k rectangular trailing block, shrinking across k.
+        "qr" => vec![
+            Nest { t0: n_i, b1: n_i - 1, s10: -1, b2: n_i, s20: -1, s21: 0, reuse_runs: n_i },
+            Nest { t0: n_i, b1: n_i - 1, s10: -1, b2: n_i, s20: -1, s21: 0, reuse_runs: 0 },
+        ],
+        // Column pairs, fixed-length columns.
+        "svd" => vec![
+            Nest::rect3(n_i * (n_i - 1) / 2, 2, n_i),
+            Nest::rect3(n_i * (n_i - 1) / 2, 2, n_i),
+        ],
+        // The triangular b/a streams (Fig 11's example).
+        "solver" => vec![
+            Nest { t0: 1, b1: n_i - 1, s10: 0, b2: n_i - 1, s20: 0, s21: -1, reuse_runs: n_i },
+            Nest { t0: 1, b1: n_i - 1, s10: 0, b2: n_i - 1, s20: 0, s21: -1, reuse_runs: 0 },
+        ],
+        // Stages x groups x butterflies (rectangular; twiddles reused).
+        "fft" => {
+            let stages = (n_i as f64).log2() as i64;
+            vec![
+                Nest::rect3(stages, 2, n_i / 2),
+                Nest {
+                    t0: stages,
+                    b1: 2,
+                    s10: 0,
+                    b2: n_i / 2,
+                    s20: 0,
+                    s21: 0,
+                    reuse_runs: stages,
+                },
+            ]
+        }
+        // (i, k) x 64-wide rows: pure rectangular.
+        "gemm" => vec![
+            Nest::rect3(n_i, 16, 64),
+            Nest { t0: n_i, b1: 16, s10: 0, b2: 64, s20: 0, s21: 0, reuse_runs: n_i * 16 },
+        ],
+        // Output windows x taps.
+        "fir" => vec![
+            Nest::rect3(1, 64, n_i / 2),
+            Nest { t0: 1, b1: 64, s10: 0, b2: n_i / 2, s20: 0, s21: 0, reuse_runs: 64 },
+        ],
+        _ => panic!("unknown kernel {name}"),
+    };
+    let inner_iters = sites.iter().map(|s| s.elems()).max().unwrap();
+    KernelStreams { name: Box::leak(name.to_string().into_boxed_str()), sites, inner_iters }
+}
+
+/// Fig 21: average stream length (elements per command) under a
+/// capability, aggregated over the kernel's sites.
+pub fn avg_stream_length(ks: &KernelStreams, cap: Capability) -> f64 {
+    let elems: i64 = ks.sites.iter().map(|s| s.elems()).sum();
+    let cmds: i64 = ks.sites.iter().map(|s| s.commands(cap)).sum();
+    elems as f64 / cmds.max(1) as f64
+}
+
+/// Fig 22: control (memory) instructions per inner-loop iteration;
+/// `with_reuse=false` adds the stacked reuse-disabled overhead.
+pub fn insts_per_iter(ks: &KernelStreams, cap: Capability, with_reuse: bool) -> f64 {
+    let mut cmds: i64 = ks.sites.iter().map(|s| s.commands(cap)).sum();
+    if !with_reuse {
+        cmds += ks.sites.iter().map(|s| s.reuse_penalty()).sum::<i64>();
+    }
+    cmds as f64 / ks.inner_iters.max(1) as f64
+}
+
+/// The capability ladder of Figs 21/22.
+pub fn capabilities() -> [Capability; 6] {
+    [
+        Capability::V(4),
+        Capability::R,
+        Capability::RR,
+        Capability::RI,
+        Capability::RRR,
+        Capability::RII,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fgop_kernels_need_ri_for_long_streams() {
+        // Paper Fig 21: FGOP workloads show much higher lengths only
+        // with inductive capability.
+        for k in ["cholesky", "solver"] {
+            let ks = kernel_streams(k, 32);
+            let rr = avg_stream_length(&ks, Capability::RR);
+            let ri = avg_stream_length(&ks, Capability::RI);
+            assert!(ri > 3.0 * rr, "{k}: RI {ri} vs RR {rr}");
+        }
+    }
+
+    #[test]
+    fn gemm_satisfied_by_rr() {
+        let ks = kernel_streams("gemm", 24);
+        let rr = avg_stream_length(&ks, Capability::RR);
+        let ri = avg_stream_length(&ks, Capability::RI);
+        assert!((rr - ri).abs() < 1e-9, "RI adds nothing for gemm");
+    }
+
+    #[test]
+    fn ri_keeps_control_overhead_below_one_inst_per_iter() {
+        // Paper: "the RI capability always either achieves a control
+        // overhead below 1 inst/iter or matches the least overhead".
+        for k in crate::workloads::NAMES {
+            let ks = kernel_streams(k, 32);
+            let ri = insts_per_iter(&ks, Capability::RI, true);
+            let best = capabilities()
+                .iter()
+                .map(|&c| insts_per_iter(&ks, c, true))
+                .fold(f64::INFINITY, f64::min);
+            assert!(ri < 1.0 || (ri - best).abs() < 1e-9, "{k}: RI {ri} best {best}");
+        }
+    }
+
+    #[test]
+    fn reuse_disabled_costs_more() {
+        let ks = kernel_streams("solver", 32);
+        let with = insts_per_iter(&ks, Capability::RI, true);
+        let without = insts_per_iter(&ks, Capability::RI, false);
+        assert!(without > with);
+    }
+
+    #[test]
+    fn rii_never_worse_than_ri() {
+        for k in crate::workloads::NAMES {
+            let ks = kernel_streams(k, 32);
+            for s in &ks.sites {
+                assert!(s.commands(Capability::RII) <= s.commands(Capability::RI));
+            }
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Shadow-memory dynamic dependence tracer (paper Fig 7 methodology:
+//! "We use LLVM to instrument programs to track dynamic memory
+//! dependences"). Instrumented kernels call `load`/`store`/`arith`/
+//! `site`/`region`; the tracer derives:
+//!
+//! * **granularity** — arithmetic-instruction distance of each
+//!   inter-region RAW dependence (Fig 7a);
+//! * **orderedness** — fraction of dependences whose consumption order
+//!   matches production order per (producer site, consumer site) pair
+//!   (Fig 7b);
+//! * **inductive access fraction** — fraction of dynamic accesses made
+//!   by sites whose address stream is affine with a linearly varying
+//!   inner trip count (Fig 7c);
+//! * **region imbalance** — max/min arithmetic work across regions
+//!   (Fig 7d).
+
+use std::collections::HashMap;
+
+/// A static instruction site (kernel-assigned id).
+pub type Site = u32;
+
+#[derive(Clone, Debug, Default)]
+struct SiteTrace {
+    /// (outer iteration, inner index, address) samples.
+    rows: Vec<(i64, i64, i64)>,
+    accesses: u64,
+}
+
+pub struct Tracer {
+    /// addr -> (producing site, production seq, region, arith clock).
+    last_write: HashMap<i64, (Site, u64, u32, u64)>,
+    arith_clock: u64,
+    produce_seq: u64,
+    region: u32,
+    /// Per (src site, dst site): consumer outer iteration + last
+    /// consumed production seq. Rescans (consumer outer loop advances
+    /// and re-reads from the start — the stream-reuse pattern) count as
+    /// ordered; backwards consumption within one scan does not.
+    pair_last: HashMap<(Site, Site), (i64, u64)>,
+    dep_total: u64,
+    dep_ordered: u64,
+    /// Inter-region dependence distances (arith insts).
+    distances: Vec<u64>,
+    /// Per-region arithmetic counts.
+    region_arith: HashMap<u32, u64>,
+    sites: HashMap<Site, SiteTrace>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self {
+            last_write: HashMap::new(),
+            arith_clock: 0,
+            produce_seq: 0,
+            region: 0,
+            pair_last: HashMap::new(),
+            dep_total: 0,
+            dep_ordered: 0,
+            distances: Vec::new(),
+            region_arith: HashMap::new(),
+            sites: HashMap::new(),
+        }
+    }
+
+    /// Enter computation region `r` (paper: point/vector/matrix etc.).
+    pub fn region(&mut self, r: u32) {
+        self.region = r;
+    }
+
+    /// Count `k` arithmetic instructions.
+    pub fn arith(&mut self, k: u64) {
+        self.arith_clock += k;
+        *self.region_arith.entry(self.region).or_insert(0) += k;
+    }
+
+    /// A load by static site `s` at (outer, inner) loop coordinates.
+    pub fn load(&mut self, s: Site, j: i64, i: i64, addr: i64) {
+        let st = self.sites.entry(s).or_default();
+        st.rows.push((j, i, addr));
+        st.accesses += 1;
+        if let Some(&(src, seq, reg, clk)) = self.last_write.get(&addr) {
+            self.dep_total += 1;
+            let key = (src, s);
+            let last = self.pair_last.entry(key).or_insert((j, 0));
+            if seq >= last.1 || last.0 != j {
+                self.dep_ordered += 1;
+            }
+            *last = (j, seq);
+            if reg != self.region {
+                self.distances.push(self.arith_clock - clk);
+            }
+        }
+    }
+
+    /// A store by static site `s`.
+    pub fn store(&mut self, s: Site, j: i64, i: i64, addr: i64) {
+        let st = self.sites.entry(s).or_default();
+        st.rows.push((j, i, addr));
+        st.accesses += 1;
+        self.produce_seq += 1;
+        self.last_write
+            .insert(addr, (s, self.produce_seq, self.region, self.arith_clock));
+    }
+
+    /// Classify a site as inductive: the address is affine in (j, i)
+    /// and the per-j inner trip count varies linearly with j (a
+    /// non-zero stretch). Rectangular affine sites are not inductive.
+    fn site_inductive(tr: &SiteTrace) -> bool {
+        // Group by outer j; collect trip counts and per-row starts.
+        let mut rows: HashMap<i64, Vec<(i64, i64)>> = HashMap::new();
+        for &(j, i, a) in &tr.rows {
+            rows.entry(j).or_default().push((i, a));
+        }
+        if rows.len() < 3 {
+            return false;
+        }
+        let mut keys: Vec<i64> = rows.keys().copied().collect();
+        keys.sort_unstable();
+        // Affinity: within each row, address must be affine in i.
+        let mut trips = Vec::new();
+        for &j in &keys {
+            let r = &rows[&j];
+            if r.len() >= 2 {
+                let stride = r[1].1 - r[0].1;
+                for w in r.windows(2) {
+                    if w[1].1 - w[0].1 != stride {
+                        return false;
+                    }
+                }
+            }
+            trips.push(r.len() as i64);
+        }
+        // Trip counts: induction-variable dependent. Outer loops may
+        // restart the sequence (e.g. the k loop around a triangular j/i
+        // nest), so require the *dominant* trip-count delta to be a
+        // common non-zero value rather than global linearity.
+        let deltas: Vec<i64> = trips.windows(2).map(|w| w[1] - w[0]).collect();
+        if deltas.is_empty() {
+            return false;
+        }
+        let mut freq: HashMap<i64, usize> = HashMap::new();
+        for &d in &deltas {
+            *freq.entry(d).or_insert(0) += 1;
+        }
+        let (&best, &cnt) = freq.iter().max_by_key(|(_, &c)| c).unwrap();
+        best != 0 && cnt * 2 >= deltas.len()
+    }
+
+    pub fn finish(self) -> FgopStats {
+        let total_access: u64 = self.sites.values().map(|s| s.accesses).sum();
+        let inductive_access: u64 = self
+            .sites
+            .values()
+            .filter(|s| Self::site_inductive(s))
+            .map(|s| s.accesses)
+            .sum();
+        let mut arith: Vec<u64> = self.region_arith.values().copied().collect();
+        arith.sort_unstable();
+        let imbalance = if arith.len() >= 2 && arith[0] > 0 {
+            *arith.last().unwrap() as f64 / arith[0] as f64
+        } else {
+            1.0
+        };
+        FgopStats {
+            dep_distances: self.distances,
+            ordered_fraction: if self.dep_total == 0 {
+                1.0
+            } else {
+                self.dep_ordered as f64 / self.dep_total as f64
+            },
+            inductive_fraction: if total_access == 0 {
+                0.0
+            } else {
+                inductive_access as f64 / total_access as f64
+            },
+            region_imbalance: imbalance,
+            regions: self.region_arith.len(),
+        }
+    }
+}
+
+/// The four FGOP properties of one traced kernel run (paper Fig 7).
+#[derive(Clone, Debug)]
+pub struct FgopStats {
+    /// Inter-region RAW dependence distances in arithmetic insts.
+    pub dep_distances: Vec<u64>,
+    /// Fraction of ordered dependences.
+    pub ordered_fraction: f64,
+    /// Fraction of dynamic accesses from inductive sites.
+    pub inductive_fraction: f64,
+    /// max/min arithmetic work across regions.
+    pub region_imbalance: f64,
+    pub regions: usize,
+}
+
+impl FgopStats {
+    /// Paper threshold: a workload "has imbalanced regions".
+    pub fn imbalanced(&self) -> bool {
+        self.regions >= 2 && self.region_imbalance >= 4.0
+    }
+
+    pub fn median_distance(&self) -> u64 {
+        if self.dep_distances.is_empty() {
+            return 0;
+        }
+        let mut d = self.dep_distances.clone();
+        d.sort_unstable();
+        d[d.len() / 2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_dependence_distance_and_order() {
+        let mut t = Tracer::new();
+        t.region(0);
+        t.store(0, 0, 0, 100);
+        t.arith(50);
+        t.region(1);
+        t.load(1, 0, 0, 100); // inter-region RAW at distance 50
+        let s = t.finish();
+        assert_eq!(s.dep_distances, vec![50]);
+        assert!((s.ordered_fraction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unordered_consumption_detected() {
+        let mut t = Tracer::new();
+        t.store(0, 0, 0, 1); // seq 1
+        t.store(0, 0, 1, 2); // seq 2
+        t.load(1, 0, 0, 2); // consumes seq 2
+        t.load(1, 0, 1, 1); // then seq 1: backwards
+        let s = t.finish();
+        assert!(s.ordered_fraction < 1.0);
+    }
+
+    #[test]
+    fn inductive_site_classified() {
+        let mut t = Tracer::new();
+        // Triangular: row j has 8-j elements (stretch -1).
+        for j in 0..8i64 {
+            for i in 0..(8 - j) {
+                t.load(7, j, i, 100 + j * 9 + i);
+            }
+        }
+        // Rectangular site.
+        for j in 0..8i64 {
+            for i in 0..4 {
+                t.load(8, j, i, 500 + j * 4 + i);
+            }
+        }
+        let s = t.finish();
+        // 36 of 68 accesses inductive.
+        assert!((s.inductive_fraction - 36.0 / 68.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_across_regions() {
+        let mut t = Tracer::new();
+        t.region(0);
+        t.arith(10);
+        t.region(1);
+        t.arith(100);
+        let s = t.finish();
+        assert!(s.imbalanced());
+        assert!((s.region_imbalance - 10.0).abs() < 1e-12);
+    }
+}

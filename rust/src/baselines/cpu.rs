@@ -1,0 +1,136 @@
+//! CPU/DSP timing models, calibrated to the paper's Fig 1 utilizations.
+//!
+//! Paper setup: TI C6678 DSP at 1.25 GHz (16 FP ops/cycle/core, 8
+//! cores, DSPLIB) and an Intel Xeon 4116 at 2.1 GHz (OOO, AVX-512-class
+//! 16 FLOP/cycle effective peak/core, MKL). Fig 1's point: regular
+//! kernels reach 30-80% of a single core's peak, factorizations reach
+//! 5-20%, and neither library profitably multithreads at these sizes —
+//! so both baselines execute on one core in the latency setting and
+//! data-parallel across cores in the throughput setting.
+//!
+//! We do not model silicon we do not have: the model is
+//! time = flops / (peak * utilization(kernel, size)) + fixed call
+//! overhead, with the utilization table matching the bands of Fig 1.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CpuKind {
+    /// TI C6678-class VLIW DSP, 1.25 GHz.
+    Dsp,
+    /// Xeon 4116-class OOO + MKL, 2.1 GHz.
+    Ooo,
+}
+
+/// Fraction of single-core peak achieved (paper Fig 1). Values grow
+/// slightly with size (amortized pipelines), factorizations stay low —
+/// fine-grain dependences stall the wide datapaths.
+pub fn utilization(kind: CpuKind, kernel: &str, n: usize) -> f64 {
+    let size_boost = (n as f64 / 32.0).min(1.5).max(0.5);
+    let base = match (kind, kernel) {
+        (CpuKind::Dsp, "gemm") => 0.60,
+        (CpuKind::Dsp, "fir") => 0.70,
+        (CpuKind::Dsp, "fft") => 0.45,
+        (CpuKind::Dsp, "cholesky") => 0.10,
+        (CpuKind::Dsp, "qr") => 0.08,
+        (CpuKind::Dsp, "svd") => 0.05,
+        (CpuKind::Dsp, "solver") => 0.07,
+        (CpuKind::Ooo, "gemm") => 0.65,
+        (CpuKind::Ooo, "fir") => 0.55,
+        (CpuKind::Ooo, "fft") => 0.50,
+        (CpuKind::Ooo, "cholesky") => 0.12,
+        (CpuKind::Ooo, "qr") => 0.10,
+        (CpuKind::Ooo, "svd") => 0.06,
+        (CpuKind::Ooo, "solver") => 0.08,
+        _ => panic!("unknown kernel {kernel}"),
+    };
+    (base * size_boost).clamp(0.01, 0.9)
+}
+
+/// Single-core peak FLOPs per cycle.
+fn peak_flops_per_cycle(kind: CpuKind) -> f64 {
+    match kind {
+        CpuKind::Dsp => 16.0,
+        CpuKind::Ooo => 16.0,
+    }
+}
+
+/// Clock in GHz.
+pub fn freq_ghz(kind: CpuKind) -> f64 {
+    match kind {
+        CpuKind::Dsp => 1.25,
+        CpuKind::Ooo => 2.1,
+    }
+}
+
+/// Fixed per-call overhead in cycles (library dispatch, pipeline
+/// fill/drain — why small sizes hurt, Fig 8).
+fn call_overhead(kind: CpuKind) -> f64 {
+    match kind {
+        CpuKind::Dsp => 400.0,
+        CpuKind::Ooo => 600.0,
+    }
+}
+
+/// Latency of one kernel invocation, in microseconds (single core — the
+/// libraries do not multithread at these sizes, §3.2).
+pub fn time_us(kind: CpuKind, kernel: &str, n: usize) -> f64 {
+    let flops = super::kernel_flops(kernel, n);
+    let cycles =
+        flops / (peak_flops_per_cycle(kind) * utilization(kind, kernel, n))
+            + call_overhead(kind);
+    cycles / (freq_ghz(kind) * 1000.0)
+}
+
+pub fn dsp_time_us(kernel: &str, n: usize) -> f64 {
+    time_us(CpuKind::Dsp, kernel, n)
+}
+
+pub fn ooo_time_us(kernel: &str, n: usize) -> f64 {
+    time_us(CpuKind::Ooo, kernel, n)
+}
+
+/// Throughput setting: 8 independent problems data-parallel over 8
+/// cores => same time as one problem (plus a sync margin).
+pub fn throughput_time_us(kind: CpuKind, kernel: &str, n: usize) -> f64 {
+    time_us(kind, kernel, n) * 1.05
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_bands_hold() {
+        // Regular kernels: 30-80%; factorizations: 5-20% (Fig 1).
+        for kind in [CpuKind::Dsp, CpuKind::Ooo] {
+            for k in ["gemm", "fir", "fft"] {
+                let u = utilization(kind, k, 24);
+                assert!((0.25..=0.85).contains(&u), "{kind:?} {k}: {u}");
+            }
+            for k in ["cholesky", "qr", "svd", "solver"] {
+                let u = utilization(kind, k, 24);
+                assert!((0.02..=0.20).contains(&u), "{kind:?} {k}: {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn factorization_time_dwarfs_regular_at_equal_flops() {
+        // Same flop count, lower utilization -> longer time.
+        let t_chol = dsp_time_us("cholesky", 32);
+        let t_gemm = dsp_time_us("gemm", 48);
+        let f_chol = super::super::kernel_flops("cholesky", 32);
+        let f_gemm = super::super::kernel_flops("gemm", 48);
+        assert!(
+            t_chol / f_chol > 3.0 * (t_gemm / f_gemm),
+            "per-flop time should be much worse for cholesky"
+        );
+    }
+
+    #[test]
+    fn overhead_dominates_small_sizes() {
+        let t12 = dsp_time_us("solver", 12);
+        let t32 = dsp_time_us("solver", 32);
+        // Work grows ~7x but time grows far less: fixed overhead.
+        assert!(t32 / t12 < 4.0, "{t12} vs {t32}");
+    }
+}

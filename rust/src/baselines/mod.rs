@@ -1,0 +1,48 @@
+//! Comparison baselines (paper §9): a TI-C6678-class VLIW DSP timing
+//! model, an OOO (Xeon + MKL) timing model — both calibrated to the
+//! Fig 1 utilizations — a *real* task-parallel blocked Cholesky on host
+//! threads (Fig 8), and the ideal-ASIC analytical cycle models of
+//! Table 4.
+
+pub mod asic;
+pub mod cpu;
+pub mod taskpar;
+
+pub use asic::asic_cycles;
+pub use cpu::{dsp_time_us, ooo_time_us, utilization, CpuKind};
+
+/// Useful floating-point work of a kernel at size n (one problem).
+pub fn kernel_flops(name: &str, n: usize) -> f64 {
+    let nf = n as f64;
+    match name {
+        "cholesky" => nf * nf * nf / 3.0,
+        "qr" => 4.0 / 3.0 * nf * nf * nf,
+        // One-sided Jacobi, fixed sweeps (matches the workload).
+        "svd" => {
+            let pairs = (n * (n - 1) / 2) as f64;
+            crate::workloads::svd::SWEEPS as f64 * pairs * (12.0 * nf + 20.0)
+        }
+        "solver" => nf * nf,
+        "fft" => 5.0 * nf * nf.log2(),
+        // m x 16 x 64 (paper shapes).
+        "gemm" => 2.0 * nf * 16.0 * 64.0,
+        // 64 outputs, n taps, centro-symmetric fold.
+        "fir" => 3.0 * 64.0 * nf / 2.0,
+        _ => panic!("unknown kernel {name}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_positive_and_scale() {
+        for k in crate::workloads::NAMES {
+            for &n in crate::workloads::sizes(k).iter() {
+                assert!(kernel_flops(k, n) > 0.0, "{k} {n}");
+            }
+        }
+        assert!(kernel_flops("cholesky", 32) > kernel_flops("cholesky", 12));
+    }
+}

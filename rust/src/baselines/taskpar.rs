@@ -1,0 +1,224 @@
+//! Task-parallel blocked Cholesky on real host threads (paper Fig 8 /
+//! §3.2): block the matrix, run dpotf2/dtrsm/dsyrk-shaped block tasks
+//! with dependence-driven synchronization across a thread pool, and
+//! compare against the single-threaded dense factorization. The paper's
+//! point reproduces directly: synchronization overhead swamps the
+//! parallelism until matrices reach ~1024, far beyond DSP sizes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use crate::util::linalg::Mat;
+#[cfg(test)]
+use crate::util::linalg::cholesky;
+
+/// Sequential blocked right-looking Cholesky (the "MKL single thread"
+/// stand-in; also the numeric reference for the parallel version).
+pub fn blocked_seq(a: &Mat, bs: usize) -> Mat {
+    let mut l = a.clone();
+    let n = a.rows;
+    let mut k0 = 0;
+    while k0 < n {
+        let kb = bs.min(n - k0);
+        // Diagonal block factor (dpotf2).
+        potf2(&mut l, k0, kb);
+        // Panel solve (dtrsm) + trailing update (dsyrk/dgemm).
+        for i0 in (k0 + kb..n).step_by(bs) {
+            let ib = bs.min(n - i0);
+            trsm(&mut l, k0, kb, i0, ib);
+        }
+        for j0 in (k0 + kb..n).step_by(bs) {
+            let jb = bs.min(n - j0);
+            for i0 in (j0..n).step_by(bs) {
+                let ib = bs.min(n - i0);
+                syrk(&mut l, k0, kb, i0, ib, j0, jb);
+            }
+        }
+        k0 += kb;
+    }
+    zero_upper(&mut l);
+    l
+}
+
+fn potf2(l: &mut Mat, k0: usize, kb: usize) {
+    for k in k0..k0 + kb {
+        let d = l[(k, k)].sqrt();
+        l[(k, k)] = d;
+        for i in k + 1..k0 + kb {
+            l[(i, k)] /= d;
+        }
+        for j in k + 1..k0 + kb {
+            let ljk = l[(j, k)];
+            for i in j..k0 + kb {
+                let v = l[(i, k)] * ljk;
+                l[(i, j)] -= v;
+            }
+        }
+    }
+}
+
+fn trsm(l: &mut Mat, k0: usize, kb: usize, i0: usize, ib: usize) {
+    for k in k0..k0 + kb {
+        let d = l[(k, k)];
+        for i in i0..i0 + ib {
+            let mut s = l[(i, k)];
+            for m in k0..k {
+                s -= l[(i, m)] * l[(k, m)];
+            }
+            l[(i, k)] = s / d;
+        }
+    }
+}
+
+fn syrk(l: &mut Mat, k0: usize, kb: usize, i0: usize, ib: usize, j0: usize, jb: usize) {
+    for j in j0..j0 + jb {
+        for i in i0.max(j)..i0 + ib {
+            let mut s = 0.0;
+            for m in k0..k0 + kb {
+                s += l[(i, m)] * l[(j, m)];
+            }
+            l[(i, j)] -= s;
+        }
+    }
+}
+
+fn zero_upper(l: &mut Mat) {
+    let n = l.rows;
+    for i in 0..n {
+        for j in i + 1..n {
+            l[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// Parallel blocked Cholesky: per panel step, the trsm and syrk block
+/// tasks fan out over `threads` workers with a barrier after each phase
+/// (the fine-grain dependences of §3 force these barriers — exactly the
+/// synchronization the paper blames).
+pub fn blocked_par(a: &Mat, bs: usize, threads: usize) -> Mat {
+    let n = a.rows;
+    let mut l = a.clone();
+    let mut k0 = 0;
+    while k0 < n {
+        let kb = bs.min(n - k0);
+        potf2(&mut l, k0, kb);
+        // Collect block tasks for this step.
+        let trsm_tasks: Vec<(usize, usize)> = (k0 + kb..n)
+            .step_by(bs)
+            .map(|i0| (i0, bs.min(n - i0)))
+            .collect();
+        run_tasks(&mut l, threads, &trsm_tasks, |l, &(i0, ib)| {
+            trsm(l, k0, kb, i0, ib)
+        });
+        let mut syrk_tasks: Vec<(usize, usize, usize, usize)> = Vec::new();
+        for j0 in (k0 + kb..n).step_by(bs) {
+            let jb = bs.min(n - j0);
+            for i0 in (j0..n).step_by(bs) {
+                syrk_tasks.push((i0, bs.min(n - i0), j0, jb));
+            }
+        }
+        run_tasks(&mut l, threads, &syrk_tasks, |l, &(i0, ib, j0, jb)| {
+            syrk(l, k0, kb, i0, ib, j0, jb)
+        });
+        k0 += kb;
+    }
+    zero_upper(&mut l);
+    l
+}
+
+/// Execute tasks over a temporary thread team with work stealing via an
+/// atomic counter; every call pays thread spawn + join — the per-step
+/// synchronization cost that Fig 8 charges task parallelism.
+fn run_tasks<T: Sync>(
+    l: &mut Mat,
+    threads: usize,
+    tasks: &[T],
+    f: impl Fn(&mut Mat, &T) + Send + Sync + Copy,
+) {
+    if tasks.is_empty() {
+        return;
+    }
+    if threads <= 1 || tasks.len() == 1 {
+        for t in tasks {
+            f(l, t);
+        }
+        return;
+    }
+    // The block tasks in one phase touch disjoint blocks; hand each
+    // worker an alias of the matrix. Soundness is by construction of
+    // the task lists (disjoint block ranges).
+    let ptr = SyncPtr(l as *mut Mat);
+    let next = AtomicUsize::new(0);
+    let barrier = Arc::new(Barrier::new(threads));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let barrier = barrier.clone();
+            let next = &next;
+            let ptr = &ptr;
+            s.spawn(move || {
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= tasks.len() {
+                        break;
+                    }
+                    // SAFETY: tasks touch disjoint blocks (see above).
+                    let l = unsafe { &mut *ptr.0 };
+                    f(l, &tasks[i]);
+                }
+                barrier.wait();
+            });
+        }
+    });
+}
+
+struct SyncPtr(*mut Mat);
+unsafe impl Sync for SyncPtr {}
+
+/// One Fig 8 measurement: (n, threads) -> speedup of the task-parallel
+/// version over the sequential blocked baseline (wall-clock, best of
+/// `reps`).
+pub fn speedup(n: usize, bs: usize, threads: usize, reps: usize) -> f64 {
+    let a = Mat::spd(n, 0.3);
+    let t_seq = (0..reps)
+        .map(|_| {
+            let t = Instant::now();
+            std::hint::black_box(blocked_seq(&a, bs));
+            t.elapsed()
+        })
+        .min()
+        .unwrap();
+    let t_par = (0..reps)
+        .map(|_| {
+            let t = Instant::now();
+            std::hint::black_box(blocked_par(&a, bs, threads));
+            t.elapsed()
+        })
+        .min()
+        .unwrap();
+    t_seq.as_secs_f64() / t_par.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocked_versions_match_reference() {
+        for n in [16, 48, 96] {
+            let a = Mat::spd(n, 1.1);
+            let want = cholesky(&a);
+            let seq = blocked_seq(&a, 32);
+            let par = blocked_par(&a, 32, 4);
+            assert!(seq.max_abs_diff(&want) < 1e-9, "seq n={n}");
+            assert!(par.max_abs_diff(&want) < 1e-9, "par n={n}");
+        }
+    }
+
+    #[test]
+    fn small_matrices_do_not_profit_from_threads() {
+        // Fig 8: at DSP sizes the task-parallel version loses.
+        let s = speedup(64, 32, 4, 3);
+        assert!(s < 1.5, "unexpected speedup {s} at n=64");
+    }
+}

@@ -1,0 +1,194 @@
+//! Heterogeneous compute-fabric geometry (paper §6.3, Fig 15, Table 3).
+//!
+//! Per lane: a circuit-switched mesh of dedicated tiles (14 add-class,
+//! 9 multiply, 3 sqrt/div) with a small temporal region (default 2x1
+//! triggered-instruction tiles, 32 insts/FU) embedded in the mesh.
+//! Table 6 accounts 23 dedicated + 2 temporal network nodes; we lay the
+//! 26 FU tiles + 2 temporal tiles + 2 pass-through switches on a 6x5 grid.
+
+use crate::dataflow::FuClass;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileKind {
+    Fu(FuClass),
+    /// Triggered-instruction (temporal) tile.
+    Temporal,
+    /// Routing-only switch (no FU).
+    Pass,
+}
+
+#[derive(Clone, Debug)]
+pub struct FabricSpec {
+    pub width: usize,
+    pub height: usize,
+    pub tiles: Vec<TileKind>, // row-major width*height
+    /// Static instructions a temporal FU can hold (Table 3: 32).
+    pub temporal_capacity: usize,
+    /// Instructions the temporal region retires per cycle (1 per FU).
+    pub temporal_issue: usize,
+}
+
+impl FabricSpec {
+    /// The paper's per-lane fabric: 14 add, 9 mul, 3 sqrt/div, `tw x th`
+    /// temporal region (default 2x1; Fig 20 sweeps this).
+    pub fn revel(tw: usize, th: usize) -> Self {
+        // The FU inventory is fixed; a larger temporal region grows the
+        // grid (paper Q8: temporal tiles *add* area, 12062 vs 2265 um^2).
+        let width = 6;
+        let needed = 14 + 9 + 3 + tw * th + 2; // FUs + temporal + switches
+        let height = (needed + width - 1) / width;
+        let mut tiles = Vec::with_capacity(width * height);
+        // Deterministic layout: temporal region in the lower-left corner
+        // (Fig 15), sqrt/div along the right edge, adders/multipliers
+        // interleaved elsewhere.
+        let mut budget_add = 14usize;
+        let mut budget_mul = 9usize;
+        let mut budget_sd = 3usize;
+        let mut budget_temporal = tw * th;
+        for y in 0..height {
+            for x in 0..width {
+                let in_temporal = x < tw && y >= height - th;
+                let k = if in_temporal && budget_temporal > 0 {
+                    budget_temporal -= 1;
+                    TileKind::Temporal
+                } else if x == width - 1 && budget_sd > 0 {
+                    budget_sd -= 1;
+                    TileKind::Fu(FuClass::SqrtDiv)
+                } else if (x + y) % 2 == 0 && budget_add > 0 {
+                    budget_add -= 1;
+                    TileKind::Fu(FuClass::Add)
+                } else if budget_mul > 0 {
+                    budget_mul -= 1;
+                    TileKind::Fu(FuClass::Mul)
+                } else if budget_add > 0 {
+                    budget_add -= 1;
+                    TileKind::Fu(FuClass::Add)
+                } else {
+                    TileKind::Pass
+                };
+                tiles.push(k);
+            }
+        }
+        Self { width, height, tiles, temporal_capacity: 32, temporal_issue: tw * th }
+    }
+
+    pub fn default_revel() -> Self {
+        Self::revel(2, 1)
+    }
+
+    /// All-dedicated variant (Q9): temporal tiles replaced by pass-through.
+    pub fn homogeneous() -> Self {
+        let mut f = Self::revel(0, 0);
+        f.temporal_issue = 0;
+        f
+    }
+
+    pub fn idx(&self, x: usize, y: usize) -> usize {
+        y * self.width + x
+    }
+
+    pub fn xy(&self, idx: usize) -> (usize, usize) {
+        (idx % self.width, idx / self.width)
+    }
+
+    pub fn count(&self, kind: TileKind) -> usize {
+        self.tiles.iter().filter(|&&t| t == kind).count()
+    }
+
+    pub fn fu_count(&self, cls: FuClass) -> usize {
+        self.count(TileKind::Fu(cls))
+    }
+
+    pub fn temporal_tiles(&self) -> usize {
+        self.count(TileKind::Temporal)
+    }
+
+    /// Mesh neighbors (4-connected).
+    pub fn neighbors(&self, idx: usize) -> impl Iterator<Item = usize> + '_ {
+        let (x, y) = self.xy(idx);
+        let mut v = Vec::with_capacity(4);
+        if x > 0 {
+            v.push(self.idx(x - 1, y));
+        }
+        if x + 1 < self.width {
+            v.push(self.idx(x + 1, y));
+        }
+        if y > 0 {
+            v.push(self.idx(x, y - 1));
+        }
+        if y + 1 < self.height {
+            v.push(self.idx(x, y + 1));
+        }
+        v.into_iter()
+    }
+
+    /// Directed link id between adjacent tiles (for congestion tracking).
+    pub fn link_id(&self, a: usize, b: usize) -> usize {
+        a * self.width * self.height + b
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// Port attach point for a global port id (paper: "each port attaches
+    /// to a unique location within the grid"): input ports along the top
+    /// row, output ports along the bottom row, spread by id.
+    pub fn in_port_tile(&self, gid: usize) -> usize {
+        self.idx(gid % self.width, 0)
+    }
+
+    pub fn out_port_tile(&self, gid: usize) -> usize {
+        self.idx(gid % self.width, self.height - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn revel_fabric_matches_table3_inventory() {
+        let f = FabricSpec::default_revel();
+        assert_eq!(f.fu_count(FuClass::Add), 14);
+        assert_eq!(f.fu_count(FuClass::Mul), 9);
+        assert_eq!(f.fu_count(FuClass::SqrtDiv), 3);
+        assert_eq!(f.temporal_tiles(), 2);
+        assert!(f.num_tiles() >= 28);
+    }
+
+    #[test]
+    fn temporal_sweep_changes_region_size() {
+        for (tw, th) in [(0, 0), (1, 1), (2, 1), (2, 2), (4, 2)] {
+            let f = FabricSpec::revel(tw, th);
+            assert_eq!(f.temporal_tiles(), tw * th);
+            assert_eq!(f.temporal_issue, tw * th);
+            // FU inventory preserved regardless of temporal size.
+            assert_eq!(f.fu_count(FuClass::Add), 14);
+        }
+    }
+
+    #[test]
+    fn neighbors_form_a_mesh() {
+        let f = FabricSpec::default_revel();
+        let corner = f.idx(0, 0);
+        assert_eq!(f.neighbors(corner).count(), 2);
+        let mid = f.idx(2, 2);
+        assert_eq!(f.neighbors(mid).count(), 4);
+        // Symmetric adjacency.
+        for t in 0..f.num_tiles() {
+            for n in f.neighbors(t) {
+                assert!(f.neighbors(n).any(|m| m == t));
+            }
+        }
+    }
+
+    #[test]
+    fn port_tiles_are_on_edges() {
+        let f = FabricSpec::default_revel();
+        for gid in 0..8 {
+            assert_eq!(f.xy(f.in_port_tile(gid)).1, 0);
+            assert_eq!(f.xy(f.out_port_tile(gid)).1, f.height - 1);
+        }
+    }
+}

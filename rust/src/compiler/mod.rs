@@ -1,0 +1,41 @@
+//! Spatial-architecture compiler (paper §8): placement + routing of
+//! dataflow graphs onto the heterogeneous fabric, producing the per-DFG
+//! timing summaries (II, pipeline depth) the cycle-level simulator uses.
+
+pub mod fabric;
+pub mod place;
+
+pub use fabric::{FabricSpec, TileKind};
+pub use place::{compile, CompileError, CompileOptions, DfgTiming, Placement};
+
+use crate::dataflow::LaneConfig;
+use std::sync::Arc;
+
+/// A lane configuration compiled onto a fabric — what the `Configure`
+/// command broadcasts to a lane (config bits + the timing the simulator
+/// derives from placement).
+#[derive(Clone, Debug)]
+pub struct Configured {
+    pub config: LaneConfig,
+    pub placement: Placement,
+}
+
+impl Configured {
+    /// Compile `config` onto `fabric` and package it for `Cmd::Configure`.
+    pub fn new(
+        config: LaneConfig,
+        fabric: &FabricSpec,
+        opts: &CompileOptions,
+    ) -> Result<Arc<Self>, CompileError> {
+        let placement = compile(&config, fabric, opts)?;
+        Ok(Arc::new(Self { config, placement }))
+    }
+
+    /// Cycles a lane spends applying this configuration once quiescent
+    /// (config-bit broadcast over the 512-bit bus; proportional to mapped
+    /// instructions — the paper's reconfiguration penalty, Q5).
+    pub fn config_cycles(&self) -> u64 {
+        let insts: usize = self.config.dfgs.iter().map(|d| d.insts()).sum();
+        8 + 2 * insts as u64
+    }
+}

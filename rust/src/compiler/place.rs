@@ -1,0 +1,494 @@
+//! Spatial compiler (paper §8): map every dataflow's nodes onto fabric
+//! tiles and route their edges on the circuit-switched mesh.
+//!
+//! Approach, as in the paper: stochastic placement (simulated annealing)
+//! with a Pathfinder-style negotiated router — links start cheap, overuse
+//! raises per-link history costs, and rerouting iterates until no link is
+//! shared or the iteration budget is spent. Dedicated nodes claim a
+//! FU-class-compatible tile each (vector nodes claim ceil(w/2) subword
+//! tiles — modeled as one *placement* tile plus a width cost); temporal
+//! nodes pack into temporal tiles up to the 32-inst capacity.
+
+use std::collections::HashMap;
+
+use super::fabric::{FabricSpec, TileKind};
+use crate::dataflow::{Criticality, Dfg, FuClass, LaneConfig, Operand};
+use crate::util::Rng;
+
+/// Per-dataflow timing summary the simulator consumes.
+#[derive(Clone, Debug)]
+pub struct DfgTiming {
+    /// Firing initiation interval (cycles between successive firings).
+    pub ii: u64,
+    /// Port-to-port pipeline depth (op latencies + routed hops).
+    pub depth: u64,
+    /// True if mapped onto the temporal region.
+    pub temporal: bool,
+    /// Static instruction count (temporal occupancy).
+    pub insts: usize,
+}
+
+/// Result of compiling a LaneConfig onto a fabric.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub timing: Vec<DfgTiming>,
+    /// node (dfg_idx, node_idx) -> tile index (dedicated-mapped nodes).
+    pub tile_of: HashMap<(usize, usize), usize>,
+    /// Total routed wirelength (hops) — annealing objective.
+    pub wirelength: usize,
+    /// Residual link overuse after negotiation (0 = legal routing).
+    pub overuse: usize,
+    /// Dedicated tiles consumed (for area/utilization reporting).
+    pub tiles_used: usize,
+    /// Temporal instructions placed.
+    pub temporal_insts: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct CompileOptions {
+    /// Heterogeneous fabric enabled (paper Feature 5). When false,
+    /// non-critical dataflows have no temporal region to live in and are
+    /// serialized through shared dedicated resources (Fig 19's pre-het
+    /// configurations; Q9's all-dedicated alternative costs 2.75x area).
+    pub heterogeneous: bool,
+    pub anneal_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        Self { heterogeneous: true, anneal_iters: 300, seed: 1 }
+    }
+}
+
+#[derive(Debug)]
+pub enum CompileError {
+    Resources(String),
+    Ports(String),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::Resources(s) => write!(f, "resource overflow: {s}"),
+            CompileError::Ports(s) => write!(f, "port error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// Compile a lane configuration onto the fabric.
+pub fn compile(
+    cfg: &LaneConfig,
+    fabric: &FabricSpec,
+    opts: &CompileOptions,
+) -> Result<Placement, CompileError> {
+    cfg.validate().map_err(CompileError::Ports)?;
+
+    // ---- Partition dataflows: dedicated vs temporal -------------------
+    let mut dedicated: Vec<usize> = Vec::new();
+    let mut temporal: Vec<usize> = Vec::new();
+    for (i, d) in cfg.dfgs.iter().enumerate() {
+        match d.criticality {
+            Criticality::Critical => dedicated.push(i),
+            Criticality::NonCritical => {
+                if opts.heterogeneous && fabric.temporal_tiles() > 0 {
+                    temporal.push(i)
+                } else {
+                    dedicated.push(i) // forced onto dedicated substrate
+                }
+            }
+        }
+    }
+
+    // ---- Resource check (subword-SIMD tile demand) ---------------------
+    let mut demand: HashMap<FuClass, usize> = HashMap::new();
+    for &i in &dedicated {
+        // Non-critical dfgs forced onto the dedicated fabric when the
+        // temporal region is absent share tiles by time-multiplexing
+        // (their firing is serialized; see timing below), so only
+        // *critical* dfgs contribute pipelined tile demand.
+        if cfg.dfgs[i].criticality == Criticality::Critical {
+            for (k, v) in cfg.dfgs[i].tile_demand() {
+                *demand.entry(k).or_insert(0) += v;
+            }
+        }
+    }
+    for (cls, need) in &demand {
+        let have = fabric.fu_count(*cls);
+        if *need > have {
+            return Err(CompileError::Resources(format!(
+                "{cls:?}: need {need} tiles, fabric has {have} \
+                 (narrow the vector width)"
+            )));
+        }
+    }
+    let temporal_insts: usize = temporal.iter().map(|&i| cfg.dfgs[i].insts()).sum();
+    let temporal_cap = fabric.temporal_tiles() * fabric.temporal_capacity;
+    if temporal_insts > temporal_cap {
+        return Err(CompileError::Resources(format!(
+            "temporal region: {temporal_insts} insts > capacity {temporal_cap}"
+        )));
+    }
+
+    // ---- Placement + routing of dedicated nodes ------------------------
+    // One placement tile per node (FU-class compatible); the subword width
+    // is accounted in the resource check above and in the area model.
+    let mut rng = Rng::new(opts.seed);
+    let nodes: Vec<(usize, usize)> = dedicated
+        .iter()
+        .flat_map(|&di| (0..cfg.dfgs[di].nodes.len()).map(move |ni| (di, ni)))
+        .collect();
+
+    let mut free: HashMap<FuClass, Vec<usize>> = HashMap::new();
+    for (t, kind) in fabric.tiles.iter().enumerate() {
+        if let TileKind::Fu(c) = kind {
+            free.entry(*c).or_default().push(t);
+        }
+    }
+    // Initial greedy placement (first-fit per class, round-robin offsets).
+    let mut tile_of: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut used: HashMap<usize, (usize, usize)> = HashMap::new();
+    {
+        let mut cursor: HashMap<FuClass, usize> = HashMap::new();
+        for &(di, ni) in &nodes {
+            let cls = cfg.dfgs[di].nodes[ni].op.fu_class();
+            let pool = free.get(&cls).cloned().unwrap_or_default();
+            if pool.is_empty() {
+                return Err(CompileError::Resources(format!("no {cls:?} tiles")));
+            }
+            let c = cursor.entry(cls).or_insert(0);
+            let mut placed = false;
+            for k in 0..pool.len() {
+                let t = pool[(*c + k) % pool.len()];
+                if !used.contains_key(&t) {
+                    tile_of.insert((di, ni), t);
+                    used.insert(t, (di, ni));
+                    *c = (*c + k + 1) % pool.len();
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                // Time-multiplex: share the least-loaded tile of the class
+                // (legal only for non-critical dfgs forced dedicated).
+                let t = pool[rng.below(pool.len())];
+                tile_of.insert((di, ni), t);
+            }
+        }
+    }
+
+    // Net list: (src tile endpoint, dst tile endpoint) per DFG edge.
+    let nets = |tile_of: &HashMap<(usize, usize), usize>| -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for &di in &dedicated {
+            let d: &Dfg = &cfg.dfgs[di];
+            for (ni, n) in d.nodes.iter().enumerate() {
+                let dst = tile_of[&(di, ni)];
+                for opnd in [Some(n.a), n.b, n.c].into_iter().flatten() {
+                    match opnd {
+                        Operand::Node(j) => v.push((tile_of[&(di, j)], dst)),
+                        Operand::Port(p) => {
+                            v.push((fabric.in_port_tile(d.in_ports[p].gid), dst))
+                        }
+                        Operand::Const(_) => {}
+                    }
+                }
+            }
+            for o in &d.outs {
+                v.push((tile_of[&(di, o.node)], fabric.out_port_tile(o.gid)));
+            }
+        }
+        v
+    };
+
+    // Annealing over swap moves, objective = negotiated routing cost.
+    let mut best = tile_of.clone();
+    let (mut best_wl, mut best_ou) = route_cost(fabric, &nets(&tile_of));
+    let move_candidates: Vec<(usize, usize)> = nodes.clone();
+    if !move_candidates.is_empty() {
+        let mut cur = tile_of.clone();
+        let (mut cur_wl, mut cur_ou) = (best_wl, best_ou);
+        for it in 0..opts.anneal_iters {
+            let temp = 1.0 - it as f64 / opts.anneal_iters as f64;
+            let &(di, ni) = &move_candidates[rng.below(move_candidates.len())];
+            let cls = cfg.dfgs[di].nodes[ni].op.fu_class();
+            let pool = free.get(&cls).cloned().unwrap_or_default();
+            if pool.len() < 2 {
+                continue;
+            }
+            let new_tile = pool[rng.below(pool.len())];
+            let old_tile = cur[&(di, ni)];
+            if new_tile == old_tile {
+                continue;
+            }
+            let mut cand = cur.clone();
+            // Swap if occupied by a same-class node.
+            if let Some(&other) = cand
+                .iter()
+                .find(|(_, &t)| t == new_tile)
+                .map(|(k, _)| k)
+                .as_ref()
+            {
+                cand.insert(*other, old_tile);
+            }
+            cand.insert((di, ni), new_tile);
+            let (wl, ou) = route_cost(fabric, &nets(&cand));
+            let cost = wl as f64 + 50.0 * ou as f64;
+            let cur_cost = cur_wl as f64 + 50.0 * cur_ou as f64;
+            if cost < cur_cost || rng.f64() < 0.1 * temp {
+                cur = cand;
+                cur_wl = wl;
+                cur_ou = ou;
+                let best_cost = best_wl as f64 + 50.0 * best_ou as f64;
+                if (wl as f64) + 50.0 * (ou as f64) < best_cost {
+                    best = cur.clone();
+                    best_wl = wl;
+                    best_ou = ou;
+                }
+            }
+        }
+    }
+    let tile_of = best;
+
+    // ---- Per-dfg timing -------------------------------------------------
+    let avg_hops = if nodes.is_empty() {
+        0
+    } else {
+        (best_wl / nets(&tile_of).len().max(1)).max(1)
+    };
+    let mut timing = Vec::with_capacity(cfg.dfgs.len());
+    for (i, d) in cfg.dfgs.iter().enumerate() {
+        let is_temporal = temporal.contains(&i);
+        let insts = d.insts();
+        let t = if is_temporal {
+            // Triggered-instruction region: `temporal_issue` insts retire
+            // per cycle across the region; a firing executes the DFG's
+            // dependence chain (latency ~ chain with 1-cycle FUs + queue).
+            let issue = fabric.temporal_issue.max(1);
+            DfgTiming {
+                ii: ((insts + issue - 1) / issue).max(1) as u64,
+                depth: insts as u64 + 4,
+                temporal: true,
+                insts,
+            }
+        } else if d.criticality == Criticality::NonCritical {
+            // Het disabled: serialized through shared dedicated resources
+            // — one inst per cycle issue, double-pumped latency.
+            DfgTiming {
+                ii: insts.max(1) as u64,
+                depth: 2 * insts as u64 + 4,
+                temporal: false,
+                insts,
+            }
+        } else {
+            // Dedicated, fully pipelined: II limited only by unpipelined
+            // FUs (div/sqrt: 5); depth = op critical path + routed hops.
+            let ii = d.nodes.iter().map(|n| n.op.ii()).max().unwrap_or(1);
+            DfgTiming {
+                ii,
+                depth: d.critical_path() + avg_hops as u64 * 2 + 2,
+                temporal: false,
+                insts,
+            }
+        };
+        timing.push(t);
+    }
+
+    Ok(Placement {
+        timing,
+        tiles_used: tile_of.values().collect::<std::collections::HashSet<_>>().len(),
+        tile_of,
+        wirelength: best_wl,
+        overuse: best_ou,
+        temporal_insts,
+    })
+}
+
+/// Pathfinder-lite: route all nets by BFS with history costs; returns
+/// (total wirelength, residual overuse).
+fn route_cost(fabric: &FabricSpec, nets: &[(usize, usize)]) -> (usize, usize) {
+    let n = fabric.num_tiles();
+    let mut history = vec![0.0f64; n * n];
+    let mut total_wl = 0;
+    let mut overuse = 0;
+    for round in 0..4 {
+        let mut usage: HashMap<usize, usize> = HashMap::new();
+        total_wl = 0;
+        for &(s, t) in nets {
+            let path = bfs_route(fabric, s, t, &history, &usage);
+            total_wl += path.len();
+            for w in path.windows(2) {
+                *usage.entry(fabric.link_id(w[0], w[1])).or_insert(0) += 1;
+            }
+        }
+        overuse = usage.values().filter(|&&u| u > 1).map(|&u| u - 1).sum();
+        if overuse == 0 {
+            break;
+        }
+        // Raise history cost on congested links.
+        for (link, &u) in &usage {
+            if u > 1 {
+                history[*link] += (u - 1) as f64 * (round + 1) as f64;
+            }
+        }
+    }
+    (total_wl, overuse)
+}
+
+fn bfs_route(
+    fabric: &FabricSpec,
+    s: usize,
+    t: usize,
+    history: &[f64],
+    usage: &HashMap<usize, usize>,
+) -> Vec<usize> {
+    if s == t {
+        return vec![s];
+    }
+    // Dijkstra over link costs 1 + history + current-usage penalty.
+    let n = fabric.num_tiles();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut prev = vec![usize::MAX; n];
+    let mut heap = std::collections::BinaryHeap::new();
+    dist[s] = 0.0;
+    heap.push((std::cmp::Reverse(0u64), s));
+    while let Some((std::cmp::Reverse(dq), u)) = heap.pop() {
+        let du = dq as f64 / 1024.0;
+        if du > dist[u] + 1e-9 {
+            continue;
+        }
+        if u == t {
+            break;
+        }
+        for v in fabric.neighbors(u) {
+            let link = fabric.link_id(u, v);
+            let cost = 1.0
+                + history[link]
+                + 2.0 * usage.get(&link).copied().unwrap_or(0) as f64;
+            let nd = dist[u] + cost;
+            if nd < dist[v] - 1e-9 {
+                dist[v] = nd;
+                prev[v] = u;
+                heap.push((std::cmp::Reverse((nd * 1024.0) as u64), v));
+            }
+        }
+    }
+    let mut path = vec![t];
+    let mut cur = t;
+    while prev[cur] != usize::MAX {
+        cur = prev[cur];
+        path.push(cur);
+    }
+    path.reverse();
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{Criticality, DfgBuilder, Op};
+
+    fn cholesky_like_config() -> LaneConfig {
+        // point (non-critical): sqrt + div
+        let mut p = DfgBuilder::new("point", Criticality::NonCritical);
+        let akk = p.in_port(0, 1);
+        let d = p.node(Op::Sqrt, &[akk]);
+        let inva = p.node(Op::Div, &[crate::dataflow::Operand::Const(1.0), d]);
+        p.out(0, d, 1);
+        p.out(1, inva, 1);
+        // vector (critical): col * inva
+        let mut v = DfgBuilder::new("vector", Criticality::Critical);
+        let col = v.in_port(1, 4);
+        let s = v.in_port(2, 1);
+        let sc = v.node(Op::Mul, &[col, s]);
+        v.out(2, sc, 4);
+        // matrix (critical): a - ci*cj
+        let mut m = DfgBuilder::new("matrix", Criticality::Critical);
+        let a = m.in_port(3, 4);
+        let ci = m.in_port(4, 1);
+        let cj = m.in_port(5, 4);
+        let prod = m.node(Op::Mul, &[ci, cj]);
+        let upd = m.node(Op::Sub, &[a, prod]);
+        m.out(3, upd, 4);
+        LaneConfig {
+            name: "cholesky".into(),
+            dfgs: vec![p.build(), v.build(), m.build()],
+        }
+    }
+
+    #[test]
+    fn compiles_cholesky_config_heterogeneous() {
+        let cfg = cholesky_like_config();
+        let fabric = FabricSpec::default_revel();
+        let p = compile(&cfg, &fabric, &CompileOptions::default()).unwrap();
+        assert_eq!(p.timing.len(), 3);
+        assert!(p.timing[0].temporal, "point region on temporal fabric");
+        assert!(!p.timing[1].temporal && !p.timing[2].temporal);
+        assert_eq!(p.timing[2].ii, 1, "critical matrix region fully pipelined");
+        assert!(p.timing[2].depth >= cfg.dfgs[2].critical_path());
+        assert_eq!(p.overuse, 0, "router must legalize");
+        assert_eq!(p.temporal_insts, 2);
+    }
+
+    #[test]
+    fn het_disabled_serializes_noncritical() {
+        let cfg = cholesky_like_config();
+        let fabric = FabricSpec::default_revel();
+        let opts = CompileOptions { heterogeneous: false, ..Default::default() };
+        let p = compile(&cfg, &fabric, &opts).unwrap();
+        assert!(!p.timing[0].temporal);
+        assert!(p.timing[0].ii >= 2, "serialized point region");
+        // Critical dataflow unaffected.
+        assert_eq!(p.timing[2].ii, 1);
+    }
+
+    #[test]
+    fn resource_overflow_is_reported() {
+        // Width-32 multiply chain: 16 mul tiles needed > 9 available.
+        let mut b = DfgBuilder::new("wide", Criticality::Critical);
+        let x = b.in_port(0, 32);
+        let y = b.in_port(1, 32);
+        let m = b.node(Op::Mul, &[x, y]);
+        b.out(0, m, 32);
+        let cfg = LaneConfig { name: "w".into(), dfgs: vec![b.build()] };
+        let err = compile(&cfg, &FabricSpec::default_revel(), &CompileOptions::default());
+        assert!(matches!(err, Err(CompileError::Resources(_))));
+    }
+
+    #[test]
+    fn temporal_capacity_enforced() {
+        // 70-inst non-critical dfg > 2*32 capacity.
+        let mut b = DfgBuilder::new("big", Criticality::NonCritical);
+        let x = b.in_port(0, 1);
+        let mut cur = b.node(Op::Add, &[x, crate::dataflow::Operand::Const(1.0)]);
+        for _ in 0..69 {
+            cur = b.node(Op::Add, &[cur, crate::dataflow::Operand::Const(1.0)]);
+        }
+        b.out(0, cur, 1);
+        let cfg = LaneConfig { name: "b".into(), dfgs: vec![b.build()] };
+        let err = compile(&cfg, &FabricSpec::default_revel(), &CompileOptions::default());
+        assert!(matches!(err, Err(CompileError::Resources(_))));
+    }
+
+    #[test]
+    fn bigger_temporal_region_lowers_noncritical_ii() {
+        let cfg = cholesky_like_config();
+        let small = compile(&cfg, &FabricSpec::revel(1, 1), &CompileOptions::default())
+            .unwrap();
+        let big = compile(&cfg, &FabricSpec::revel(4, 2), &CompileOptions::default())
+            .unwrap();
+        assert!(big.timing[0].ii <= small.timing[0].ii);
+    }
+
+    #[test]
+    fn routing_is_deterministic_for_fixed_seed() {
+        let cfg = cholesky_like_config();
+        let fabric = FabricSpec::default_revel();
+        let a = compile(&cfg, &fabric, &CompileOptions::default()).unwrap();
+        let b = compile(&cfg, &fabric, &CompileOptions::default()).unwrap();
+        assert_eq!(a.wirelength, b.wirelength);
+        assert_eq!(a.tile_of, b.tile_of);
+    }
+}

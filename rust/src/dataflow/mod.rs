@@ -1,0 +1,458 @@
+//! Dataflow-graph IR (paper §5, Fig 13b): computation is expressed as
+//! multiple independently-triggered dataflow graphs whose inputs/outputs
+//! are named ports; streams describe their communication and reuse.
+//!
+//! A DFG fires when every input port holds one (vector) instance and every
+//! output binding has FIFO space; firing consumes/peeks inputs per the
+//! port reuse config, evaluates all nodes, and pushes gated outputs.
+//! Criticality (paper Feature 5) selects dedicated vs temporal mapping.
+
+pub mod exec;
+
+pub use exec::{exec_dfg, new_acc_state, AccState, VecVal};
+
+/// Functional-unit classes of the heterogeneous fabric (paper Table 3:
+/// 14 add, 9 mult, 3 sqrt/div per lane).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FuClass {
+    Add,
+    Mul,
+    SqrtDiv,
+}
+
+/// Dataflow node operations. `Acc*` nodes carry cross-firing state —
+/// REVEL's mechanism for production rates > 1 (reduction edges).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Sqrt,
+    /// 1/sqrt(x) — the point region of Cholesky/QR.
+    Rsqrt,
+    Neg,
+    Abs,
+    Max,
+    Min,
+    /// a >= b ? 1.0 : 0.0
+    CmpGe,
+    /// cond (a) != 0 ? b : c
+    Select,
+    /// Per-lane accumulator: state += a; emits (via gated out-binding)
+    /// and resets when gate (b) >= 0.5.
+    Acc,
+    /// Cross-lane reduction accumulator: state += sum(active lanes of a);
+    /// output is the scalar state broadcast; resets when gate (b) >= 0.5.
+    AccReduce,
+    /// Identity (port forwarding / fan-out staging).
+    Copy,
+}
+
+impl Op {
+    pub fn fu_class(&self) -> FuClass {
+        match self {
+            Op::Mul => FuClass::Mul,
+            Op::Div | Op::Sqrt | Op::Rsqrt => FuClass::SqrtDiv,
+            _ => FuClass::Add,
+        }
+    }
+
+    /// Pipeline latency in cycles (paper Table 3: div/sqrt lat 12; simple
+    /// ALU ops modeled at 2, multiply at 3).
+    pub fn latency(&self) -> u64 {
+        match self.fu_class() {
+            FuClass::Add => 2,
+            FuClass::Mul => 3,
+            FuClass::SqrtDiv => 12,
+        }
+    }
+
+    /// Initiation interval of the FU (div/sqrt throughput 5, others 1).
+    pub fn ii(&self) -> u64 {
+        match self.fu_class() {
+            FuClass::SqrtDiv => 5,
+            _ => 1,
+        }
+    }
+
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Sqrt | Op::Rsqrt | Op::Neg | Op::Abs | Op::Copy => 1,
+            Op::Select => 3,
+            _ => 2,
+        }
+    }
+}
+
+/// A node operand: an input port (by local index), another node, or an
+/// immediate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Operand {
+    Port(usize),
+    Node(usize),
+    Const(f64),
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub a: Operand,
+    pub b: Option<Operand>,
+    pub c: Option<Operand>,
+}
+
+/// Input-port declaration: a *global* lane port id plus vector width
+/// (in 32-bit words). Width-1 ports broadcast their scalar across the
+/// DFG's vector lanes.
+#[derive(Clone, Copy, Debug)]
+pub struct InPort {
+    pub gid: usize,
+    pub width: usize,
+}
+
+/// Output binding: which node value leaves on which global port. `gate`
+/// (an input-port local index carrying a 0/1 Const stream) implements
+/// inductive production rates: the value is pushed only on gate==1
+/// firings (e.g. accumulator emit, or "first element of each row").
+#[derive(Clone, Copy, Debug)]
+pub struct OutBinding {
+    pub gid: usize,
+    pub node: usize,
+    pub gate: Option<usize>,
+    /// Width of the produced instance (usually the DFG width, or 1 for
+    /// scalar taps like reduction results).
+    pub width: usize,
+}
+
+/// Criticality classification (paper Feature 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Criticality {
+    /// Mapped to the dedicated (fully pipelined) fabric region.
+    Critical,
+    /// Mapped to the temporal (time-multiplexed) region.
+    NonCritical,
+}
+
+/// A dataflow graph.
+#[derive(Clone, Debug)]
+pub struct Dfg {
+    pub name: String,
+    pub criticality: Criticality,
+    pub nodes: Vec<Node>,
+    pub in_ports: Vec<InPort>,
+    pub outs: Vec<OutBinding>,
+}
+
+impl Dfg {
+    /// Vector width of the DFG = max input/output width.
+    pub fn width(&self) -> usize {
+        self.in_ports
+            .iter()
+            .map(|p| p.width)
+            .chain(self.outs.iter().map(|o| o.width))
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Instruction count (temporal-region occupancy; paper Q8/Q9).
+    pub fn insts(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Dedicated-fabric tile demand per FU class: a width-w vector node
+    /// needs ceil(w/2) subword-SIMD tiles (Table 3: 2-way FP per tile);
+    /// sqrt/div tiles are not subword and need w tiles.
+    pub fn tile_demand(&self) -> std::collections::HashMap<FuClass, usize> {
+        let w = self.width();
+        let mut m = std::collections::HashMap::new();
+        for n in &self.nodes {
+            let cls = n.op.fu_class();
+            let need = match cls {
+                FuClass::SqrtDiv => self.node_width(n).min(w),
+                _ => (self.node_width(n) + 1) / 2,
+            };
+            *m.entry(cls).or_insert(0) += need;
+        }
+        m
+    }
+
+    /// Effective width of a node (scalar chains stay width 1).
+    fn node_width(&self, _n: &Node) -> usize {
+        // Conservative: nodes run at the DFG width. (The compiler narrows
+        // scalar subgraphs; this bound is what placement validates.)
+        self.width()
+    }
+
+    /// Longest op-latency path from any port to any output node, in
+    /// cycles — the DFG contribution to pipeline depth (routing adds
+    /// hops on top; see compiler::Placement).
+    pub fn critical_path(&self) -> u64 {
+        let mut depth = vec![0u64; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            let mut d = 0;
+            for opnd in [Some(n.a), n.b, n.c].into_iter().flatten() {
+                if let Operand::Node(j) = opnd {
+                    assert!(j < i, "DFG must be topologically ordered");
+                    d = d.max(depth[j]);
+                }
+            }
+            depth[i] = d + n.op.latency();
+        }
+        depth.into_iter().max().unwrap_or(0)
+    }
+
+    /// Validate topological order and operand arity/ranges.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            let ops = [Some(n.a), n.b, n.c];
+            let arity = ops.iter().flatten().count();
+            if arity != n.op.arity() {
+                return Err(format!(
+                    "{}: node {i} {:?} arity {} != {}",
+                    self.name,
+                    n.op,
+                    arity,
+                    n.op.arity()
+                ));
+            }
+            for opnd in ops.into_iter().flatten() {
+                match opnd {
+                    Operand::Node(j) if j >= i => {
+                        return Err(format!(
+                            "{}: node {i} references later node {j}",
+                            self.name
+                        ))
+                    }
+                    Operand::Port(p) if p >= self.in_ports.len() => {
+                        return Err(format!(
+                            "{}: node {i} references missing port {p}",
+                            self.name
+                        ))
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for o in &self.outs {
+            if o.node >= self.nodes.len() {
+                return Err(format!("{}: out binding to missing node", self.name));
+            }
+            if let Some(g) = o.gate {
+                if g >= self.in_ports.len() {
+                    return Err(format!("{}: gate references missing port", self.name));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A full lane configuration: up to 4 concurrently-firing dataflows
+/// (paper Table 3 "Data Firing: 4 Independent Dataflows").
+#[derive(Clone, Debug)]
+pub struct LaneConfig {
+    pub name: String,
+    pub dfgs: Vec<Dfg>,
+}
+
+pub const MAX_DFGS: usize = 4;
+
+impl LaneConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dfgs.len() > MAX_DFGS {
+            return Err(format!(
+                "{}: {} dataflows > {MAX_DFGS}",
+                self.name,
+                self.dfgs.len()
+            ));
+        }
+        let mut in_seen = std::collections::HashSet::new();
+        let mut out_seen = std::collections::HashSet::new();
+        for d in &self.dfgs {
+            d.validate()?;
+            for p in &d.in_ports {
+                if !in_seen.insert(p.gid) {
+                    return Err(format!("{}: input port {} bound twice", self.name, p.gid));
+                }
+            }
+            for o in &d.outs {
+                if !out_seen.insert(o.gid) {
+                    return Err(format!("{}: output port {} bound twice", self.name, o.gid));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// (dfg index, local in-port index) for a global input port id.
+    pub fn find_in_port(&self, gid: usize) -> Option<(usize, usize)> {
+        for (di, d) in self.dfgs.iter().enumerate() {
+            for (pi, p) in d.in_ports.iter().enumerate() {
+                if p.gid == gid {
+                    return Some((di, pi));
+                }
+            }
+        }
+        None
+    }
+
+    /// (dfg index, out-binding index) for a global output port id.
+    pub fn find_out_port(&self, gid: usize) -> Option<(usize, usize)> {
+        for (di, d) in self.dfgs.iter().enumerate() {
+            for (oi, o) in d.outs.iter().enumerate() {
+                if o.gid == gid {
+                    return Some((di, oi));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Builder for ergonomic DFG construction in workload code.
+pub struct DfgBuilder {
+    dfg: Dfg,
+}
+
+impl DfgBuilder {
+    pub fn new(name: &str, criticality: Criticality) -> Self {
+        Self {
+            dfg: Dfg {
+                name: name.to_string(),
+                criticality,
+                nodes: vec![],
+                in_ports: vec![],
+                outs: vec![],
+            },
+        }
+    }
+
+    /// Declare an input port; returns its local index (usable as Operand).
+    pub fn in_port(&mut self, gid: usize, width: usize) -> Operand {
+        self.dfg.in_ports.push(InPort { gid, width });
+        Operand::Port(self.dfg.in_ports.len() - 1)
+    }
+
+    pub fn node(&mut self, op: Op, operands: &[Operand]) -> Operand {
+        assert_eq!(operands.len(), op.arity(), "{:?}", op);
+        self.dfg.nodes.push(Node {
+            op,
+            a: operands[0],
+            b: operands.get(1).copied(),
+            c: operands.get(2).copied(),
+        });
+        Operand::Node(self.dfg.nodes.len() - 1)
+    }
+
+    pub fn out(&mut self, gid: usize, node: Operand, width: usize) {
+        self.out_gated(gid, node, width, None);
+    }
+
+    pub fn out_gated(
+        &mut self,
+        gid: usize,
+        node: Operand,
+        width: usize,
+        gate: Option<Operand>,
+    ) {
+        let node = match node {
+            Operand::Node(i) => i,
+            Operand::Port(_) | Operand::Const(_) => {
+                // Wrap through a Copy node so outs always name nodes.
+                self.dfg.nodes.push(Node { op: Op::Copy, a: node, b: None, c: None });
+                self.dfg.nodes.len() - 1
+            }
+        };
+        let gate = gate.map(|g| match g {
+            Operand::Port(p) => p,
+            _ => panic!("gate must be an input port"),
+        });
+        self.dfg.outs.push(OutBinding { gid, node, gate, width });
+    }
+
+    pub fn build(self) -> Dfg {
+        self.dfg.validate().expect("invalid DFG");
+        self.dfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point_dfg() -> Dfg {
+        // Cholesky point region: d = sqrt(a_kk); inva = 1/d.
+        let mut b = DfgBuilder::new("point", Criticality::NonCritical);
+        let akk = b.in_port(0, 1);
+        let d = b.node(Op::Sqrt, &[akk]);
+        let inva = b.node(Op::Div, &[Operand::Const(1.0), d]);
+        b.out(0, d, 1);
+        b.out(1, inva, 1);
+        b.build()
+    }
+
+    #[test]
+    fn builder_produces_valid_dfg() {
+        let d = point_dfg();
+        assert_eq!(d.insts(), 2);
+        assert_eq!(d.width(), 1);
+        assert!(d.critical_path() >= 24, "sqrt+div chain");
+        assert!(d.validate().is_ok());
+    }
+
+    #[test]
+    fn tile_demand_counts_subword_simd() {
+        let mut b = DfgBuilder::new("vec", Criticality::Critical);
+        let x = b.in_port(0, 8);
+        let y = b.in_port(1, 8);
+        let m = b.node(Op::Mul, &[x, y]);
+        let s = b.node(Op::Sub, &[x, m]);
+        b.out(0, s, 8);
+        let d = b.build();
+        let t = d.tile_demand();
+        assert_eq!(t[&FuClass::Mul], 4); // width 8 / 2-way SIMD
+        assert_eq!(t[&FuClass::Add], 4);
+    }
+
+    #[test]
+    fn lane_config_rejects_port_clash_and_too_many_dfgs() {
+        let d = point_dfg();
+        let cfg = LaneConfig { name: "x".into(), dfgs: vec![d.clone(), d.clone()] };
+        assert!(cfg.validate().is_err()); // same gids twice
+        let cfg5 = LaneConfig {
+            name: "y".into(),
+            dfgs: (0..5)
+                .map(|i| {
+                    let mut b =
+                        DfgBuilder::new(&format!("d{i}"), Criticality::Critical);
+                    let x = b.in_port(10 + i, 1);
+                    let y = b.node(Op::Copy, &[x]);
+                    b.out(10 + i, y, 1);
+                    b.build()
+                })
+                .collect(),
+        };
+        assert!(cfg5.validate().is_err());
+    }
+
+    #[test]
+    fn find_ports_resolves_global_ids() {
+        let cfg = LaneConfig { name: "c".into(), dfgs: vec![point_dfg()] };
+        assert_eq!(cfg.find_in_port(0), Some((0, 0)));
+        assert_eq!(cfg.find_out_port(1), Some((0, 1)));
+        assert_eq!(cfg.find_in_port(9), None);
+    }
+
+    #[test]
+    fn validate_catches_bad_arity_and_order() {
+        let bad = Dfg {
+            name: "bad".into(),
+            criticality: Criticality::Critical,
+            nodes: vec![Node { op: Op::Add, a: Operand::Const(1.0), b: None, c: None }],
+            in_ports: vec![],
+            outs: vec![],
+        };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,254 @@
+//! REVEL's vector-stream control commands (paper Table 1).
+//!
+//! A single Von Neumann control program coordinates all lanes: every
+//! command carries a **lane bitmask** selecting the lanes it is broadcast
+//! to, and a **lane stride** that offsets addresses by the lane index —
+//! the "vector-stream control" paradigm that amortizes control both in
+//! space (across lanes) and in time (across stream iterations).
+
+use std::sync::Arc;
+
+use super::pattern::{ConstPattern, Pattern2D, Reuse};
+use crate::compiler::Configured;
+
+/// Number of lanes in a REVEL unit (paper Table 3).
+pub const NUM_LANES: usize = 8;
+
+/// Bitmask over lanes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneMask(pub u8);
+
+impl LaneMask {
+    pub const ALL: LaneMask = LaneMask(0xFF);
+
+    pub fn one(lane: usize) -> Self {
+        LaneMask(1 << lane)
+    }
+
+    pub fn first_n(n: usize) -> Self {
+        LaneMask(if n >= 8 { 0xFF } else { (1u8 << n) - 1 })
+    }
+
+    pub fn contains(&self, lane: usize) -> bool {
+        self.0 & (1 << lane) != 0
+    }
+
+    pub fn lanes(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..NUM_LANES).filter(move |&l| self.contains(l))
+    }
+
+    pub fn count(&self) -> usize {
+        self.0.count_ones() as usize
+    }
+}
+
+/// Destination of an XFER stream relative to the source lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XferDst {
+    /// Same lane (dataflow-to-dataflow forwarding).
+    Local,
+    /// Neighbor lane at +offset (mod NUM_LANES).
+    Lane(i8),
+    /// Replicate each element to the given set of lanes' input ports
+    /// (bus serializes: one destination per cycle). Used by the
+    /// latency-optimized factorizations to broadcast pivot columns.
+    Bcast(LaneMask),
+}
+
+/// One vector-stream command body (paper Table 1).
+#[derive(Clone, Debug)]
+pub enum Cmd {
+    /// Broadcast a fabric + port configuration (pre-compiled placement)
+    /// to the lane.
+    Configure(Arc<Configured>),
+    /// Local scratchpad -> input port stream.
+    LocalLd {
+        pat: Pattern2D,
+        port: usize,
+        /// Port-side data reuse (paper Feature 2); None = destructive read.
+        reuse: Option<Reuse>,
+        /// Implicit vector masking of partial vectors (paper Feature 4).
+        /// When false, non-width-divisible remainders are delivered as
+        /// scalar (width-1) instances — the non-FGOP baseline behaviour.
+        masked: bool,
+        /// In-place RMW partner of an rmw store over the same range:
+        /// `Some(lag)` skips the conservative issue-level interlock and
+        /// applies element-level ordering instead (issue the store
+        /// command *before* this load). `lag` is the outer-row distance
+        /// of the cross-iteration RAW: row j of the load reads what the
+        /// store produced in row j-lag (solver: 1). `Some(0)` = the pair
+        /// touches disjoint addresses row-by-row (in-place trailing
+        /// updates): no load-side wait. See `Cmd::LocalSt::rmw`.
+        rmw: Option<u8>,
+    },
+    /// Output port -> local scratchpad stream. `rmw` marks the store as
+    /// the in-place read-modify-write partner of a concurrently active
+    /// load over the same range: the lane's memory-ordering logic then
+    /// applies element-level ordering (store trails the load) instead of
+    /// blocking the store until the load completes (paper §6.1: the
+    /// command queue "is responsible for maintaining data ordering").
+    LocalSt { pat: Pattern2D, port: usize, rmw: bool },
+    /// Constant pattern -> input port (inductive control flow).
+    ConstSt { pat: ConstPattern, port: usize },
+    /// Output port -> input port stream (fine-grain ordered dependence),
+    /// same lane or remote (paper XFER unit).
+    Xfer {
+        src_port: usize,
+        dst_port: usize,
+        dst: XferDst,
+        /// Number of elements to transfer.
+        n: i64,
+        /// Reuse applied at the destination port.
+        reuse: Option<Reuse>,
+    },
+    /// Shared scratchpad -> local scratchpad (words copied in pattern
+    /// order, packed contiguously at `local_addr`).
+    SharedLd { pat: Pattern2D, shared_addr: i64, local_addr: i64 },
+    /// Local scratchpad -> shared scratchpad.
+    SharedSt { pat: Pattern2D, local_addr: i64, shared_addr: i64 },
+    /// Scratchpad barrier: later commands for this lane wait until all
+    /// earlier streams complete (paper Barrier_Ld/St; used for double
+    /// buffering and for the no-fine-grain-dependence ablation).
+    Barrier,
+    /// Control core blocks until all masked lanes are idle.
+    Wait,
+}
+
+/// A command plus its lane bitmask and per-lane address stride.
+#[derive(Clone, Debug)]
+pub struct VsCommand {
+    pub cmd: Cmd,
+    pub lanes: LaneMask,
+    /// Address offset added per lane index (paper: "a lane's index can be
+    /// used to offset the address of a command").
+    pub lane_stride: i64,
+}
+
+impl VsCommand {
+    pub fn new(cmd: Cmd, lanes: LaneMask) -> Self {
+        Self { cmd, lanes, lane_stride: 0 }
+    }
+
+    pub fn with_stride(cmd: Cmd, lanes: LaneMask, lane_stride: i64) -> Self {
+        Self { cmd, lanes, lane_stride }
+    }
+
+    /// Cycles the (single-issue, 5-stage RISCV-like) control core spends
+    /// computing this command's parameters and enqueueing the broadcast.
+    /// Calibrated to a handful of scalar instructions per command — the
+    /// quantity Fig 11 counts and Fig 22 reports per-iteration.
+    pub fn ctrl_cost(&self) -> u64 {
+        match &self.cmd {
+            Cmd::Configure(_) => 6,
+            Cmd::LocalLd { pat, .. } => 3 + pat_params(pat),
+            Cmd::LocalSt { pat, .. } => 3 + pat_params(pat),
+            Cmd::ConstSt { .. } => 3,
+            Cmd::Xfer { .. } => 3,
+            Cmd::SharedLd { pat, .. } | Cmd::SharedSt { pat, .. } => 3 + pat_params(pat),
+            Cmd::Barrier => 1,
+            Cmd::Wait => 1,
+        }
+    }
+}
+
+fn pat_params(p: &Pattern2D) -> u64 {
+    let mut c = 0;
+    if p.n_j > 1 {
+        c += 2; // c_j, n_j
+    }
+    if p.s_ji != 0.0 {
+        c += 1; // stretch register
+    }
+    c
+}
+
+/// A full control program (what the control core executes).
+pub type Program = Vec<VsCommand>;
+
+/// Static control statistics of a program (Fig 11-style accounting).
+pub struct ProgramStats {
+    pub commands: usize,
+    pub ctrl_cycles: u64,
+    pub stream_elems: i64,
+}
+
+pub fn program_stats(prog: &Program) -> ProgramStats {
+    let mut stream_elems = 0i64;
+    let mut ctrl_cycles = 0u64;
+    for c in prog {
+        ctrl_cycles += c.ctrl_cost();
+        let e = match &c.cmd {
+            Cmd::LocalLd { pat, .. } | Cmd::LocalSt { pat, .. } => pat.total_len(),
+            Cmd::ConstSt { pat, .. } => pat.total_len(),
+            Cmd::Xfer { n, .. } => *n,
+            Cmd::SharedLd { pat, .. } | Cmd::SharedSt { pat, .. } => pat.total_len(),
+            _ => 0,
+        };
+        stream_elems += e * c.lanes.count() as i64;
+    }
+    ProgramStats { commands: prog.len(), ctrl_cycles, stream_elems }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_mask_ops() {
+        let m = LaneMask::first_n(3);
+        assert_eq!(m.count(), 3);
+        assert!(m.contains(0) && m.contains(2) && !m.contains(3));
+        assert_eq!(LaneMask::one(7).lanes().collect::<Vec<_>>(), vec![7]);
+        assert_eq!(LaneMask::ALL.count(), 8);
+    }
+
+    #[test]
+    fn ctrl_cost_rewards_inductive_encoding() {
+        // One inductive command vs n rectangular rows: Fig 11's 8 vs 3+5n.
+        let n = 16i64;
+        let ind = VsCommand::new(
+            Cmd::LocalLd {
+                pat: Pattern2D::inductive(0, 1, n as f64, n + 1, n, -1.0),
+                port: 0,
+                reuse: None,
+                masked: true, rmw: None,
+            },
+            LaneMask::one(0),
+        );
+        let per_row_cost: u64 = (0..n)
+            .map(|j| {
+                VsCommand::new(
+                    Cmd::LocalLd {
+                        pat: Pattern2D::lin(j * (n + 1), n - j),
+                        port: 0,
+                        reuse: None,
+                        masked: true, rmw: None,
+                    },
+                    LaneMask::one(0),
+                )
+                .ctrl_cost()
+            })
+            .sum();
+        assert!(ind.ctrl_cost() as i64 * 4 < per_row_cost as i64);
+    }
+
+    #[test]
+    fn program_stats_counts_elements_per_lane() {
+        let prog: Program = vec![
+            VsCommand::new(
+                Cmd::LocalLd {
+                    pat: Pattern2D::lin(0, 10),
+                    port: 0,
+                    reuse: None,
+                    masked: true, rmw: None,
+                },
+                LaneMask::first_n(2),
+            ),
+            VsCommand::new(Cmd::Wait, LaneMask::ALL),
+        ];
+        let s = program_stats(&prog);
+        assert_eq!(s.commands, 2);
+        assert_eq!(s.stream_elems, 20);
+        assert!(s.ctrl_cycles >= 4);
+    }
+}

@@ -1,0 +1,11 @@
+//! REVEL ISA (paper §5): stream patterns, data reuse, and the
+//! vector-stream command set the control core executes.
+
+pub mod command;
+pub mod pattern;
+
+pub use command::{
+    program_stats, Cmd, LaneMask, Program, ProgramStats, VsCommand, XferDst,
+    NUM_LANES,
+};
+pub use pattern::{Capability, ConstPattern, ElemFlags, Pattern2D, Reuse};

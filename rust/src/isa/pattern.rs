@@ -1,0 +1,391 @@
+//! Stream address/value patterns (paper §4, Figures 10–12).
+//!
+//! A 2D pattern is a loop nest `for j in 0..n_j { for i in 0..len(j) }`
+//! where `len(j) = n_i + j * s_ji` (the *stretch*). `s_ji == 0` is the
+//! classic **rectangular** (RR) stream every prior stream ISA supports;
+//! `s_ji != 0` is REVEL's **inductive** (RI) stream. `s_ji` is fixed-point
+//! (f64 here) because vectorizing an inductive loop divides the stretch by
+//! the vector width (paper Feature 4).
+
+/// A 2D affine memory/value pattern with inductive inner trip count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pattern2D {
+    /// Base word address (or element index for value streams).
+    pub start: i64,
+    /// Inner-dimension stride (words per i step).
+    pub c_i: i64,
+    /// Outer-dimension stride (words per j step).
+    pub c_j: i64,
+    /// Initial inner trip count.
+    pub n_i: f64,
+    /// Outer trip count.
+    pub n_j: i64,
+    /// Stretch: d(len)/d(j). 0 => rectangular.
+    pub s_ji: f64,
+}
+
+impl Pattern2D {
+    /// 1D contiguous pattern of `n` words from `start`.
+    pub fn lin(start: i64, n: i64) -> Self {
+        Self { start, c_i: 1, c_j: 0, n_i: n as f64, n_j: 1, s_ji: 0.0 }
+    }
+
+    /// 1D strided pattern.
+    pub fn strided(start: i64, c_i: i64, n: i64) -> Self {
+        Self { start, c_i, c_j: 0, n_i: n as f64, n_j: 1, s_ji: 0.0 }
+    }
+
+    /// 2D rectangular pattern.
+    pub fn rect(start: i64, c_i: i64, n_i: i64, c_j: i64, n_j: i64) -> Self {
+        Self { start, c_i, c_j, n_i: n_i as f64, n_j, s_ji: 0.0 }
+    }
+
+    /// 2D inductive pattern with stretch.
+    pub fn inductive(
+        start: i64,
+        c_i: i64,
+        n_i: f64,
+        c_j: i64,
+        n_j: i64,
+        s_ji: f64,
+    ) -> Self {
+        Self { start, c_i, c_j, n_i, n_j, s_ji }
+    }
+
+    pub fn is_inductive(&self) -> bool {
+        self.s_ji != 0.0
+    }
+
+    /// Inner trip count at outer iteration j (clamped at 0, rounded to
+    /// nearest — the hardware keeps a fixed-point length register).
+    pub fn len_at(&self, j: i64) -> i64 {
+        let l = self.n_i + self.s_ji * j as f64;
+        l.round().max(0.0) as i64
+    }
+
+    /// Total number of elements the stream will produce.
+    pub fn total_len(&self) -> i64 {
+        (0..self.n_j).map(|j| self.len_at(j)).sum()
+    }
+
+    /// Number of port *instances* a width-`w` delivery produces: rows are
+    /// chunked at width w, partial rows padded (never merged).
+    pub fn instances(&self, w: usize) -> i64 {
+        let w = w.max(1) as i64;
+        (0..self.n_j).map(|j| (self.len_at(j) + w - 1) / w).sum()
+    }
+
+    /// Word address of element (j, i).
+    pub fn addr(&self, j: i64, i: i64) -> i64 {
+        self.start + self.c_j * j + self.c_i * i
+    }
+
+    /// Iterate all (addr, flags) in stream order.
+    pub fn iter(&self) -> PatternIter<'_> {
+        PatternIter { pat: self, j: 0, i: 0, cur_len: self.len_at(0) }
+    }
+
+    /// Inclusive address bounds of the whole pattern, or None if empty.
+    /// Used by the lane's memory-ordering interlock (the command queue
+    /// "maintains data ordering" — paper §6.1).
+    pub fn bounds(&self) -> Option<(i64, i64)> {
+        let mut lo = i64::MAX;
+        let mut hi = i64::MIN;
+        for j in 0..self.n_j {
+            let len = self.len_at(j);
+            if len == 0 {
+                continue;
+            }
+            let a = self.addr(j, 0);
+            let b = self.addr(j, len - 1);
+            lo = lo.min(a.min(b));
+            hi = hi.max(a.max(b));
+        }
+        (lo <= hi).then_some((lo, hi))
+    }
+
+    /// Number of *control commands* this pattern would cost on an ISA with
+    /// only the given capability (paper Fig 11 / Fig 22 accounting).
+    pub fn commands_needed(&self, cap: Capability) -> i64 {
+        match cap {
+            Capability::V(w) => {
+                // One vector instruction covers w contiguous elements.
+                (0..self.n_j)
+                    .map(|j| (self.len_at(j) as f64 / w as f64).ceil() as i64)
+                    .sum::<i64>()
+                    .max(1)
+            }
+            Capability::R => self.n_j.max(1),
+            Capability::RR | Capability::RRR => {
+                if self.is_inductive() {
+                    self.n_j.max(1) // must decompose into 1D commands
+                } else {
+                    1
+                }
+            }
+            Capability::RI | Capability::RII => 1,
+        }
+    }
+}
+
+/// Element position flags the stream control unit tracks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ElemFlags {
+    pub j: i64,
+    pub i: i64,
+    pub first_of_row: bool,
+    pub last_of_row: bool,
+    pub last: bool,
+}
+
+pub struct PatternIter<'a> {
+    pat: &'a Pattern2D,
+    j: i64,
+    i: i64,
+    cur_len: i64,
+}
+
+impl Iterator for PatternIter<'_> {
+    type Item = (i64, ElemFlags);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        // Skip empty rows.
+        while self.j < self.pat.n_j && self.cur_len == 0 {
+            self.j += 1;
+            self.i = 0;
+            self.cur_len = self.pat.len_at(self.j);
+        }
+        if self.j >= self.pat.n_j {
+            return None;
+        }
+        let addr = self.pat.addr(self.j, self.i);
+        let last_of_row = self.i == self.cur_len - 1;
+        let flags = ElemFlags {
+            j: self.j,
+            i: self.i,
+            first_of_row: self.i == 0,
+            last_of_row,
+            last: false, // fixed up below
+        };
+        self.i += 1;
+        if self.i >= self.cur_len {
+            self.j += 1;
+            self.i = 0;
+            self.cur_len = if self.j < self.pat.n_j { self.pat.len_at(self.j) } else { 0 };
+        }
+        // `last` = no more elements remain.
+        let mut done = self.j >= self.pat.n_j;
+        if !done && self.cur_len == 0 {
+            // peek: all remaining rows empty?
+            done = (self.j..self.pat.n_j).all(|j| self.pat.len_at(j) == 0);
+        }
+        Some((addr, ElemFlags { last: done, ..flags }))
+    }
+}
+
+/// Stream address-generation capability classes (paper Fig 21/22).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Capability {
+    /// Plain vector instructions of width w.
+    V(usize),
+    /// 1D streams.
+    R,
+    /// 2D rectangular streams.
+    RR,
+    /// 2D with inductive inner dimension (REVEL).
+    RI,
+    /// 3D rectangular.
+    RRR,
+    /// 3D with inductive dimensions.
+    RII,
+}
+
+impl std::fmt::Display for Capability {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Capability::V(w) => write!(f, "V{w}"),
+            Capability::R => write!(f, "R"),
+            Capability::RR => write!(f, "RR"),
+            Capability::RI => write!(f, "RI"),
+            Capability::RRR => write!(f, "RRR"),
+            Capability::RII => write!(f, "RII"),
+        }
+    }
+}
+
+/// Constant-value pattern for the `Const` command (paper Table 1):
+/// per outer iteration j, emit `val1` len1(j) times then `val2` len2(j)
+/// times, with independent stretches. Used for inductive control flow
+/// inside dataflow graphs (e.g. accumulator-emit gating).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConstPattern {
+    pub val1: f64,
+    pub n1: f64,
+    pub s1: f64,
+    pub val2: f64,
+    pub n2: f64,
+    pub s2: f64,
+    pub n_j: i64,
+}
+
+impl ConstPattern {
+    /// Uniform stream of one value, n times.
+    pub fn scalar(val: f64, n: i64) -> Self {
+        Self { val1: val, n1: n as f64, s1: 0.0, val2: 0.0, n2: 0.0, s2: 0.0, n_j: 1 }
+    }
+
+    /// Per row j: one `val1` then (len(j)-1) `val2`s — the "first element
+    /// of each row" gate used by Cholesky's loop-carried dependence.
+    pub fn first_of_row(val1: f64, val2: f64, n_i: f64, n_j: i64, s: f64) -> Self {
+        Self { val1, n1: 1.0, s1: 0.0, val2, n2: n_i - 1.0, s2: s, n_j }
+    }
+
+    /// Per row j: (len(j)-1) `val2`s then one `val1` — "last element of
+    /// each row" gate (accumulator emit).
+    pub fn last_of_row(val1: f64, val2: f64, n_i: f64, n_j: i64, s: f64) -> Self {
+        Self { val1: val2, n1: n_i - 1.0, s1: s, val2: val1, n2: 1.0, s2: 0.0, n_j }
+    }
+
+    pub fn len1_at(&self, j: i64) -> i64 {
+        (self.n1 + self.s1 * j as f64).round().max(0.0) as i64
+    }
+
+    pub fn len2_at(&self, j: i64) -> i64 {
+        (self.n2 + self.s2 * j as f64).round().max(0.0) as i64
+    }
+
+    pub fn total_len(&self) -> i64 {
+        (0..self.n_j).map(|j| self.len1_at(j) + self.len2_at(j)).sum()
+    }
+
+    /// Port instances at width `w` (rows chunked, never merged).
+    pub fn instances(&self, w: usize) -> i64 {
+        let w = w.max(1) as i64;
+        (0..self.n_j)
+            .map(|j| {
+                let len = self.len1_at(j) + self.len2_at(j);
+                (len + w - 1) / w
+            })
+            .sum()
+    }
+
+    /// Materialize all values (used by the stream control unit and tests).
+    pub fn values(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for j in 0..self.n_j {
+            for _ in 0..self.len1_at(j) {
+                out.push(self.val1);
+            }
+            for _ in 0..self.len2_at(j) {
+                out.push(self.val2);
+            }
+        }
+        out
+    }
+}
+
+/// Data-reuse configuration on an input port (paper Feature 2): arriving
+/// element t is presented `r_t` times before being popped, with
+/// `r_0 = n_r` and `r_{t+1} = r_t + s_r`. Fractional values accumulate
+/// (vectorized consumers divide the rate by the vector width).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Reuse {
+    pub n_r: f64,
+    pub s_r: f64,
+}
+
+impl Reuse {
+    pub fn uniform(n: f64) -> Self {
+        Self { n_r: n, s_r: 0.0 }
+    }
+
+    /// Presentation count of the t-th element (>= 1 while stream live).
+    pub fn count_at(&self, t: i64) -> i64 {
+        (self.n_r + self.s_r * t as f64).round().max(1.0) as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_pattern_covers_matrix_row_major() {
+        let p = Pattern2D::rect(0, 1, 4, 8, 3);
+        let addrs: Vec<i64> = p.iter().map(|(a, _)| a).collect();
+        assert_eq!(addrs, vec![0, 1, 2, 3, 8, 9, 10, 11, 16, 17, 18, 19]);
+        assert_eq!(p.total_len(), 12);
+        assert!(!p.is_inductive());
+    }
+
+    #[test]
+    fn inductive_pattern_shrinks_like_cholesky_trailing() {
+        // Triangular: row j covers len 4-j starting at diagonal offset.
+        let p = Pattern2D::inductive(0, 1, 4.0, 5, 4, -1.0);
+        let rows: Vec<i64> = (0..4).map(|j| p.len_at(j)).collect();
+        assert_eq!(rows, vec![4, 3, 2, 1]);
+        assert_eq!(p.total_len(), 10);
+        let addrs: Vec<i64> = p.iter().map(|(a, _)| a).collect();
+        assert_eq!(addrs, vec![0, 1, 2, 3, 5, 6, 7, 10, 11, 15]);
+    }
+
+    #[test]
+    fn pattern_flags_mark_row_boundaries_and_last() {
+        let p = Pattern2D::inductive(0, 1, 2.0, 10, 3, -1.0); // lens 2,1,0
+        let v: Vec<(i64, ElemFlags)> = p.iter().collect();
+        assert_eq!(v.len(), 3);
+        assert!(v[0].1.first_of_row && !v[0].1.last_of_row);
+        assert!(v[1].1.last_of_row && !v[1].1.last);
+        assert!(v[2].1.first_of_row && v[2].1.last_of_row && v[2].1.last);
+    }
+
+    #[test]
+    fn empty_rows_are_skipped() {
+        let p = Pattern2D::inductive(0, 1, 1.0, 1, 3, -1.0); // lens 1,0,0
+        let v: Vec<i64> = p.iter().map(|(a, _)| a).collect();
+        assert_eq!(v, vec![0]);
+        assert_eq!(p.total_len(), 1);
+    }
+
+    #[test]
+    fn commands_needed_matches_fig11_accounting() {
+        // Solver-like triangular read: n=8 outer iters, shrinking rows.
+        let p = Pattern2D::inductive(0, 1, 8.0, 9, 8, -1.0);
+        assert_eq!(p.commands_needed(Capability::RI), 1);
+        assert_eq!(p.commands_needed(Capability::RR), 8); // decompose rows
+        assert_eq!(p.commands_needed(Capability::R), 8);
+        // Vector width 4 over rows 8,7,..,1 = ceil each / 4.
+        let v: i64 = (1..=8).map(|l: i64| (l as f64 / 4.0).ceil() as i64).sum();
+        assert_eq!(p.commands_needed(Capability::V(4)), v);
+        // Rectangular pattern is one RR command.
+        let r = Pattern2D::rect(0, 1, 8, 8, 8);
+        assert_eq!(r.commands_needed(Capability::RR), 1);
+    }
+
+    #[test]
+    fn const_pattern_gates() {
+        let g = ConstPattern::first_of_row(1.0, 0.0, 3.0, 3, -1.0);
+        // rows: len 3 -> 1,0,0 ; len 2 -> 1,0 ; len 1 -> 1
+        assert_eq!(g.values(), vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0]);
+        let e = ConstPattern::last_of_row(1.0, 0.0, 3.0, 2, 0.0);
+        assert_eq!(e.values(), vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(ConstPattern::scalar(7.0, 3).values(), vec![7.0; 3]);
+    }
+
+    #[test]
+    fn reuse_counts_stretch() {
+        // Solver: x_j reused n-1-j times, n=8: 7,6,5,...
+        let r = Reuse { n_r: 7.0, s_r: -1.0 };
+        assert_eq!(r.count_at(0), 7);
+        assert_eq!(r.count_at(3), 4);
+        assert_eq!(r.count_at(20), 1); // clamped
+    }
+
+    #[test]
+    fn fractional_stretch_rounds_like_fixed_point() {
+        // Vectorized by 4: stretch -1/4.
+        let p = Pattern2D::inductive(0, 1, 2.0, 0, 8, -0.25);
+        let lens: Vec<i64> = (0..8).map(|j| p.len_at(j)).collect();
+        assert_eq!(lens, vec![2, 2, 2, 1, 1, 1, 1, 0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! REVEL reproduction library root.
+pub mod compiler;
+pub mod coordinator;
+pub mod dataflow;
+pub mod isa;
+pub mod model;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod analysis;
+pub mod baselines;
+pub mod workloads;

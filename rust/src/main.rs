@@ -1,0 +1,131 @@
+//! `revel` — command-line driver for the REVEL reproduction.
+//!
+//! Usage:
+//!   revel report <fig1|fig7|fig8|fig16|fig17|fig18|fig19|fig20|fig21|fig22|table6|headline|all>
+//!   revel run <kernel> <n> [--throughput] [--features base|+inductive|+fine-grain|+hetero|all]
+//!   revel trace <kernel> <n>
+//!   revel list
+
+use revel::analysis::kernels;
+use revel::model;
+use revel::report;
+use revel::workloads::{self, Features, Goal};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("report") => {
+            let what = args.get(1).map(|s| s.as_str()).unwrap_or("headline");
+            let out = match what {
+                "fig1" => report::fig1(),
+                "fig7" => report::fig7(),
+                "fig8" => report::fig8(),
+                "fig16" => report::fig16(),
+                "fig17" => report::fig17(),
+                "fig18" => report::fig18(),
+                "fig19" => report::fig19(),
+                "fig20" => report::fig20(),
+                "fig21" | "fig22" | "fig21_22" => report::fig21_22(),
+                "table6" => report::table6(),
+                "headline" => report::headline(),
+                "all" => report::all(),
+                other => {
+                    eprintln!("unknown report {other}");
+                    std::process::exit(2);
+                }
+            };
+            println!("{out}");
+        }
+        Some("run") => {
+            let kernel = args.get(1).expect("kernel name").clone();
+            let n: usize = args.get(2).expect("size").parse().expect("size");
+            let goal = if args.iter().any(|a| a == "--throughput") {
+                Goal::Throughput
+            } else {
+                Goal::Latency
+            };
+            let feats = match args
+                .iter()
+                .position(|a| a == "--features")
+                .and_then(|i| args.get(i + 1))
+                .map(|s| s.as_str())
+            {
+                None | Some("all") => Features::ALL,
+                Some(name) => {
+                    Features::ladder()
+                        .iter()
+                        .find(|(n, _)| *n == name)
+                        .unwrap_or_else(|| panic!("unknown feature set {name}"))
+                        .1
+                }
+            };
+            let r = workloads::prepare(&kernel, n, feats, goal)
+                .expect("prepare")
+                .execute()
+                .expect("run+verify");
+            println!(
+                "{kernel} n={n} {goal:?}: {} cycles ({:.2} us @1.25GHz), \
+                 {} problems, max |err| {:.2e}, {:.2} flops/cycle",
+                r.cycles,
+                model::cycles_to_us(r.cycles),
+                r.problems,
+                r.max_err,
+                r.flops_per_cycle()
+            );
+            for (b, f) in r.stats.fractions() {
+                if f > 0.005 {
+                    println!("  {:>12}: {:5.1}%", b.name(), 100.0 * f);
+                }
+            }
+        }
+        Some("trace") => {
+            let kernel = args.get(1).expect("kernel").clone();
+            let n: usize = args.get(2).expect("size").parse().expect("size");
+            let s = kernels::trace(&kernel, n);
+            println!(
+                "{kernel} n={n}: {} inter-region deps (median distance {}), \
+                 ordered {:.0}%, inductive {:.0}%, imbalance {:.1}x over {} regions",
+                s.dep_distances.len(),
+                s.median_distance(),
+                100.0 * s.ordered_fraction,
+                100.0 * s.inductive_fraction,
+                s.region_imbalance,
+                s.regions
+            );
+        }
+        Some("pipeline") => {
+            let jobs: usize =
+                args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+            let workers: usize =
+                args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+            match revel::coordinator::golden_check() {
+                Ok(()) => println!("PJRT golden check: ok"),
+                Err(e) => println!("PJRT golden check skipped: {e}"),
+            }
+            let s = revel::coordinator::serve(jobs, workers, 0.0, 42);
+            println!(
+                "{} jobs / {} workers: {:.2} s wall ({:.1} jobs/s), sim latency p50 {:.1} us p99 {:.1} us",
+                s.jobs,
+                workers,
+                s.wall_s,
+                s.jobs_per_s,
+                s.sim_latency_p50_us,
+                s.sim_latency_p99_us
+            );
+        }
+        Some("list") => {
+            for k in workloads::NAMES {
+                println!("{k}: sizes {:?}", workloads::sizes(k));
+            }
+        }
+        _ => {
+            eprintln!(
+                "usage: revel <report|run|trace|pipeline|list> ...\n\
+                   revel report all\n\
+                   revel run cholesky 16 [--throughput] [--features base]\n\
+                   revel trace qr 32"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Minimal property-based testing helper (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` random seeds;
+//! on failure it re-runs a bisection-style shrink over the seed space is not
+//! meaningful, so instead it reports the failing seed so the case is exactly
+//! reproducible with `check_one`.
+
+use crate::util::Rng;
+
+/// Run `f` for `cases` deterministic seeds; panic with the failing seed.
+pub fn check(name: &str, cases: u64, mut f: impl FnMut(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E37_79B9));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property `{name}` failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single seed (for debugging a reported failure).
+pub fn check_one(seed: u64, mut f: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E37_79B9));
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_when_property_holds() {
+        check("addition commutes", 16, |rng| {
+            let a = rng.int(-100, 100);
+            let b = rng.int(-100, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn check_reports_seed_on_failure() {
+        check("always fails", 4, |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,429 @@
+//! Paper-reproduction reports: one function per figure/table of the
+//! evaluation (§10). Each returns rendered text; the `revel` CLI and
+//! the bench harnesses are thin wrappers around these.
+
+use crate::analysis::{kernels, streams};
+use crate::baselines::{self, cpu, taskpar, CpuKind};
+use crate::compiler::FabricSpec;
+use crate::isa::Capability;
+use crate::model;
+use crate::sim::Bucket;
+use crate::util::stats::{cdf, cdf_at, fx, Table};
+use crate::util::geomean;
+use crate::workloads::{self, Features, Goal};
+
+/// Reports legitimately run very long programs (e.g. the no-FGOP SVD at
+/// n=32 exceeds the default test watchdog); raise the budget once.
+fn ensure_budget() {
+    if std::env::var_os("REVEL_MAX_CYCLES").is_none() {
+        std::env::set_var("REVEL_MAX_CYCLES", "80000000");
+    }
+}
+
+/// Simulated REVEL time in microseconds for one run.
+fn revel_us(name: &str, n: usize, feats: Features, goal: Goal) -> f64 {
+    ensure_budget();
+    let r = workloads::prepare(name, n, feats, goal)
+        .expect("prepare")
+        .execute()
+        .expect("workload must verify");
+    model::cycles_to_us(r.cycles)
+}
+
+/// Fig 1: percent of peak performance of CPU and DSP per kernel.
+pub fn fig1() -> String {
+    let mut t = Table::new(&["kernel", "CPU %peak", "DSP %peak"]);
+    for k in workloads::NAMES {
+        let n = workloads::sizes(k)[2];
+        t.row(vec![
+            k.into(),
+            format!("{:.0}%", 100.0 * cpu::utilization(CpuKind::Ooo, k, n)),
+            format!("{:.0}%", 100.0 * cpu::utilization(CpuKind::Dsp, k, n)),
+        ]);
+    }
+    format!("Fig 1: percent peak performance (calibrated model)\n{}", t.render())
+}
+
+/// Fig 7: FGOP prevalence — one row per kernel and size.
+pub fn fig7() -> String {
+    let mut t = Table::new(&[
+        "kernel", "n", "med dist", "d<=1000", "ordered", "inductive", "imbal",
+    ]);
+    let all: Vec<&str> =
+        kernels::DSP.iter().chain(kernels::POLYBENCH.iter()).copied().collect();
+    for k in all {
+        for n in [16usize, 32, 128] {
+            // Keep the biggest SVD/QR traces tractable.
+            if n == 128 && matches!(k, "svd") {
+                continue;
+            }
+            let s = kernels::trace(k, n);
+            let pts = cdf(&s.dep_distances.iter().map(|&d| d as f64).collect::<Vec<_>>());
+            t.row(vec![
+                k.into(),
+                n.to_string(),
+                s.median_distance().to_string(),
+                if s.dep_distances.is_empty() {
+                    "-".into()
+                } else {
+                    format!("{:.0}%", 100.0 * cdf_at(&pts, 1000.0))
+                },
+                format!("{:.0}%", 100.0 * s.ordered_fraction),
+                format!("{:.0}%", 100.0 * s.inductive_fraction),
+                format!("{:.1}x", s.region_imbalance.min(999.0)),
+            ]);
+        }
+    }
+    format!("Fig 7: FGOP prevalence (DSP suite, then PolyBench)\n{}", t.render())
+}
+
+/// Fig 8: task-parallel blocked Cholesky speedup over sequential.
+pub fn fig8() -> String {
+    let mut t = Table::new(&["n", "2 thr", "4 thr", "8 thr"]);
+    for n in [64usize, 128, 256, 512, 1024] {
+        let mut row = vec![n.to_string()];
+        for thr in [2usize, 4, 8] {
+            row.push(format!("{:.2}x", taskpar::speedup(n, 32, thr, 2)));
+        }
+        t.row(row);
+    }
+    format!(
+        "Fig 8: task-parallel Cholesky speedup vs 1 thread (host threads)\n{}",
+        t.render()
+    )
+}
+
+/// Fig 16: latency-optimized speedups over the DSP (small and large).
+pub fn fig16() -> String {
+    let mut t = Table::new(&[
+        "kernel", "n", "DSP us", "REVEL us", "no-FGOP us", "speedup", "FGOP gain",
+    ]);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    for k in workloads::NAMES {
+        let sizes = workloads::sizes(k);
+        for (si, &n) in [sizes[0], *sizes.last().unwrap()].iter().enumerate() {
+            let dsp = cpu::dsp_time_us(k, n);
+            let rv = revel_us(k, n, Features::ALL, Goal::Latency);
+            let nf = revel_us(k, n, Features::NONE, Goal::Latency);
+            let sp = dsp / rv;
+            if si == 0 {
+                small.push(sp);
+            } else {
+                large.push(sp);
+            }
+            t.row(vec![
+                k.into(),
+                n.to_string(),
+                format!("{dsp:.2}"),
+                format!("{rv:.2}"),
+                format!("{nf:.2}"),
+                fx(sp),
+                fx(nf / rv),
+            ]);
+        }
+    }
+    format!(
+        "Fig 16: latency-optimized speedup vs DSP\n{}\ngeomean: small {} large {}\n",
+        t.render(),
+        fx(geomean(&small)),
+        fx(geomean(&large)),
+    )
+}
+
+/// Fig 17: throughput-optimized speedups (8 problems / makespan).
+pub fn fig17() -> String {
+    let mut t = Table::new(&["kernel", "n", "DSP us", "REVEL us", "speedup"]);
+    let mut sp_all = Vec::new();
+    for k in workloads::NAMES {
+        let sizes = workloads::sizes(k);
+        for &n in [sizes[0], *sizes.last().unwrap()].iter() {
+            let dsp = cpu::throughput_time_us(CpuKind::Dsp, k, n);
+            let rv = revel_us(k, n, Features::ALL, Goal::Throughput);
+            let sp = dsp / rv;
+            sp_all.push(sp);
+            t.row(vec![
+                k.into(),
+                n.to_string(),
+                format!("{dsp:.2}"),
+                format!("{rv:.2}"),
+                fx(sp),
+            ]);
+        }
+    }
+    format!(
+        "Fig 17: throughput-optimized speedup vs DSP (8 problems)\n{}\ngeomean {}\n",
+        t.render(),
+        fx(geomean(&sp_all)),
+    )
+}
+
+/// Fig 18: cycle-level breakdown per workload.
+pub fn fig18() -> String {
+    ensure_budget();
+    let hdr: Vec<String> = std::iter::once("kernel/goal".to_string())
+        .chain(
+            crate::sim::BUCKETS
+                .iter()
+                .filter(|&&b| b != Bucket::Done)
+                .map(|b| b.name().to_string()),
+        )
+        .collect();
+    let mut t = Table::new(&hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for k in workloads::NAMES {
+        let n = workloads::sizes(k)[1];
+        for (tag, goal) in [("thr", Goal::Throughput), ("multi", Goal::Latency)] {
+            let r = workloads::prepare(k, n, Features::ALL, goal)
+                .unwrap()
+                .execute()
+                .unwrap();
+            let mut row = vec![format!("{k}-{tag}")];
+            for (_, f) in r.stats.fractions() {
+                row.push(format!("{:.0}%", 100.0 * f));
+            }
+            t.row(row);
+        }
+    }
+    format!("Fig 18: cycle-level breakdown (fractions of active lane-cycles)\n{}", t.render())
+}
+
+/// Fig 19: incremental speedup of the five mechanism versions.
+pub fn fig19() -> String {
+    ensure_budget();
+    let names: Vec<&str> = Features::ladder().iter().map(|(n, _)| *n).collect();
+    let hdr: Vec<&str> =
+        std::iter::once("kernel").chain(names.iter().copied()).collect();
+    let mut t = Table::new(&hdr);
+    for k in workloads::NAMES {
+        let n = workloads::sizes(k)[1];
+        for (tag, goal) in [("", Goal::Throughput), ("-lat", Goal::Latency)] {
+            let mut row = vec![format!("{k}{tag}")];
+            let base = workloads::prepare(k, n, Features::NONE, goal)
+                .unwrap()
+                .execute()
+                .unwrap()
+                .cycles;
+            for (_, f) in Features::ladder() {
+                let c = workloads::prepare(k, n, f, goal)
+                    .unwrap()
+                    .execute()
+                    .unwrap()
+                    .cycles;
+                row.push(fx(base as f64 / c as f64));
+            }
+            t.row(row);
+        }
+    }
+    format!("Fig 19: cumulative speedup per mechanism (vs base version)\n{}", t.render())
+}
+
+/// Fig 20: temporal-region size sensitivity (performance + area).
+pub fn fig20() -> String {
+    ensure_budget();
+    let sizes = [(1usize, 1usize), (2, 1), (2, 2), (4, 2)];
+    let mut t = Table::new(&["region", "fabric mm^2", "svd", "qr", "cholesky", "solver"]);
+    let base: Vec<u64> = ["svd", "qr", "cholesky", "solver"]
+        .iter()
+        .map(|k| {
+            workloads::prepare(k, 12, Features::ALL, Goal::Latency)
+                .unwrap()
+                .execute()
+                .unwrap()
+                .cycles
+        })
+        .collect();
+    for (w, h) in sizes {
+        workloads::set_fabric(Some(FabricSpec::revel(w, h)));
+        let mut row = vec![
+            format!("{w}x{h}"),
+            format!("{:.3}", model::fabric_area_mm2(&FabricSpec::revel(w, h))),
+        ];
+        for (i, k) in ["svd", "qr", "cholesky", "solver"].iter().enumerate() {
+            let c = workloads::prepare(k, 12, Features::ALL, Goal::Latency)
+                .unwrap()
+                .execute()
+                .unwrap()
+                .cycles;
+            row.push(format!("{:.2}", base[i] as f64 / c as f64));
+        }
+        workloads::set_fabric(None);
+        t.row(row);
+    }
+    format!(
+        "Fig 20: temporal-region sensitivity (perf relative to 2x1 default)\n{}",
+        t.render()
+    )
+}
+
+/// Figs 21 + 22: stream length and control overhead per capability.
+pub fn fig21_22() -> String {
+    let caps = streams::capabilities();
+    let hdr: Vec<String> = std::iter::once("kernel".to_string())
+        .chain(caps.iter().map(|c| c.to_string()))
+        .collect();
+    let mut t21 = Table::new(&hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut t22 = Table::new(&hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut t22b = Table::new(&["kernel", "RI", "RI no-reuse"]);
+    for k in workloads::NAMES {
+        let n = *workloads::sizes(k).last().unwrap();
+        let ks = streams::kernel_streams(k, n);
+        let mut r21 = vec![k.to_string()];
+        let mut r22 = vec![k.to_string()];
+        for &c in &caps {
+            r21.push(format!("{:.1}", streams::avg_stream_length(&ks, c)));
+            r22.push(format!("{:.2}", streams::insts_per_iter(&ks, c, true)));
+        }
+        t21.row(r21);
+        t22.row(r22);
+        t22b.row(vec![
+            k.into(),
+            format!("{:.2}", streams::insts_per_iter(&ks, Capability::RI, true)),
+            format!("{:.2}", streams::insts_per_iter(&ks, Capability::RI, false)),
+        ]);
+    }
+    format!(
+        "Fig 21: average stream length per capability\n{}\n\
+         Fig 22: control insts per inner iteration\n{}\n\
+         Fig 22 (stacked): stream-reuse disabled\n{}",
+        t21.render(),
+        t22.render(),
+        t22b.render()
+    )
+}
+
+/// Table 6 (top): area/power breakdown; (bottom): ASIC overheads.
+pub fn table6() -> String {
+    ensure_budget();
+    let mut t = Table::new(&["block", "area mm^2", "power mW"]);
+    for b in model::LANE_BLOCKS {
+        t.row(vec![
+            b.name.into(),
+            format!("{:.2}", b.area_mm2),
+            format!("{:.2}", b.power_mw),
+        ]);
+    }
+    t.row(vec![
+        "1 vector lane".into(),
+        format!("{:.2}", model::lane_area_mm2()),
+        format!("{:.2}", model::lane_power_mw()),
+    ]);
+    t.row(vec![
+        model::CTRL_CORE.name.into(),
+        format!("{:.2}", model::CTRL_CORE.area_mm2),
+        format!("{:.2}", model::CTRL_CORE.power_mw),
+    ]);
+    t.row(vec![
+        "REVEL (8 lanes)".into(),
+        format!("{:.2}", model::revel_area_mm2()),
+        format!("{:.1}", model::revel_power_mw()),
+    ]);
+    let mut b = Table::new(&["kernel", "power ovhd", "ASIC cycles", "REVEL cycles"]);
+    for k in workloads::NAMES {
+        let n = workloads::sizes(k)[1];
+        let r = workloads::prepare(k, n, Features::ALL, Goal::Latency)
+            .unwrap()
+            .execute()
+            .unwrap();
+        b.row(vec![
+            k.into(),
+            format!("{:.1}x", model::power_overhead(k)),
+            baselines::asic_cycles(k, n).to_string(),
+            r.cycles.to_string(),
+        ]);
+    }
+    let mean_p: f64 = workloads::NAMES
+        .iter()
+        .map(|k| model::power_overhead(k))
+        .sum::<f64>()
+        / 7.0;
+    format!(
+        "Table 6: area and power breakdown (28nm)\n{}\n\
+         Table 6 (bottom): overheads vs ideal iso-perf ASIC\n{}\n\
+         mean power overhead {:.1}x; combined-ASIC area ratio {:.2}\n",
+        t.render(),
+        b.render(),
+        mean_p,
+        model::revel_area_mm2() / model::asic_area_mm2(7),
+    )
+}
+
+/// Headline numbers (abstract / Q2 / Q7).
+pub fn headline() -> String {
+    let mut lat_small = Vec::new();
+    let mut lat_large = Vec::new();
+    let mut vs_ooo = Vec::new();
+    let mut max_sp: f64 = 0.0;
+    for k in workloads::NAMES {
+        let sizes = workloads::sizes(k);
+        for (si, &n) in [sizes[0], *sizes.last().unwrap()].iter().enumerate() {
+            let rv = revel_us(k, n, Features::ALL, Goal::Latency);
+            let sp = cpu::dsp_time_us(k, n) / rv;
+            max_sp = max_sp.max(sp);
+            if si == 0 {
+                lat_small.push(sp);
+            } else {
+                lat_large.push(sp);
+            }
+            vs_ooo.push(cpu::ooo_time_us(k, n) / rv);
+        }
+    }
+    let gm_small = geomean(&lat_small);
+    let gm_large = geomean(&lat_large);
+    let gm_ooo = geomean(&vs_ooo);
+    let (het, all_ded, all_temp) = model::q9_homogeneous_alternatives();
+    format!(
+        "Headline reproduction\n\
+         - latency speedup vs DSP: geomean small {} / large {} (paper: 10x/17x), max {} (paper: up to 37x)\n\
+         - speedup vs OOO+MKL: geomean {} (paper: 9.6x)\n\
+         - perf/mm^2 vs DSP: {} (paper: 8.3x)\n\
+         - perf/mm^2 vs OOO: {} (paper: 1308x)\n\
+         - Q9 fabric-area alternatives: het {:.3} mm^2, all-dedicated {:.2}x, all-temporal {:.2}x (paper: 2.75x / 2.5x)\n",
+        fx(gm_small),
+        fx(gm_large),
+        fx(max_sp),
+        fx(gm_ooo),
+        fx(model::perf_per_mm2_advantage(geomean(&[gm_small, gm_large]), model::DSP_AREA_MM2)),
+        fx(model::perf_per_mm2_advantage(gm_ooo, model::OOO_AREA_MM2)),
+        het,
+        all_ded / het,
+        all_temp / het,
+    )
+}
+
+/// Every report, in paper order.
+pub fn all() -> String {
+    [
+        fig1(),
+        fig7(),
+        fig8(),
+        fig16(),
+        fig17(),
+        fig18(),
+        fig19(),
+        fig20(),
+        fig21_22(),
+        table6(),
+        headline(),
+    ]
+    .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_reports_render() {
+        for s in [fig1(), fig21_22(), table6()] {
+            assert!(s.len() > 100);
+        }
+    }
+
+    #[test]
+    fn fig16_shape_holds() {
+        // The paper's core claim: REVEL beats the DSP on every FGOP
+        // kernel, most at the large sizes.
+        let out = fig16();
+        assert!(out.contains("geomean"));
+    }
+}

@@ -1,0 +1,109 @@
+//! Artifact registry: input signatures for every AOT-lowered module.
+//!
+//! Mirrors `python/compile/model.py::registry()`. Kept as code (not JSON
+//! parsing) so the signature table is type-checked and the binary stays
+//! self-contained after `make artifacts`.
+
+/// Matrix sizes for the factorization/solver kernels (paper Table 5).
+pub const MATRIX_SIZES: [usize; 4] = [12, 16, 24, 32];
+/// GEMM M dimension variants; shapes are (m,16) x (16,64).
+pub const GEMM_MS: [usize; 3] = [12, 24, 48];
+/// FIR tap counts; input is 64+m-1 samples.
+pub const FIR_MS: [usize; 2] = [16, 32];
+/// FFT lengths.
+pub const FFT_NS: [usize; 3] = [64, 128, 1024];
+
+/// Input shapes (row-major dims) for a registry name, or None if unknown.
+pub fn signature(name: &str) -> Option<Vec<Vec<usize>>> {
+    if let Some(n) = suffix(name, "cholesky_n") {
+        return Some(vec![vec![n, n]]);
+    }
+    if let Some(n) = suffix(name, "solver_n") {
+        return Some(vec![vec![n, n], vec![n]]);
+    }
+    if let Some(n) = suffix(name, "qr_n") {
+        return Some(vec![vec![n, n]]);
+    }
+    if let Some(n) = suffix(name, "svd_n") {
+        return Some(vec![vec![n, n]]);
+    }
+    if let Some(m) = suffix(name, "gemm_m") {
+        return Some(vec![vec![m, 16], vec![16, 64]]);
+    }
+    if let Some(m) = suffix(name, "fir_m") {
+        return Some(vec![vec![64 + m - 1], vec![m]]);
+    }
+    if let Some(n) = suffix(name, "fft_n") {
+        return Some(vec![vec![n]]);
+    }
+    if name == "pipeline_n16" {
+        return Some(vec![vec![24, 16], vec![64], vec![16, 16]]);
+    }
+    None
+}
+
+/// Number of outputs each artifact returns.
+pub fn output_arity(name: &str) -> usize {
+    if name.starts_with("qr_n") || name.starts_with("fft_n") {
+        2
+    } else if name == "pipeline_n16" {
+        3
+    } else {
+        1
+    }
+}
+
+/// All artifact names, matching the python registry.
+pub fn all_names() -> Vec<String> {
+    let mut v = Vec::new();
+    for n in MATRIX_SIZES {
+        for k in ["cholesky", "solver", "qr", "svd"] {
+            v.push(format!("{k}_n{n}"));
+        }
+    }
+    for m in GEMM_MS {
+        v.push(format!("gemm_m{m}"));
+    }
+    for m in FIR_MS {
+        v.push(format!("fir_m{m}"));
+    }
+    for n in FFT_NS {
+        v.push(format!("fft_n{n}"));
+    }
+    v.push("pipeline_n16".to_string());
+    v.sort();
+    v
+}
+
+fn suffix(name: &str, prefix: &str) -> Option<usize> {
+    name.strip_prefix(prefix)?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signatures_exist_for_all_names() {
+        for n in all_names() {
+            assert!(signature(&n).is_some(), "{n}");
+            assert!(output_arity(&n) >= 1);
+        }
+        assert_eq!(all_names().len(), 25);
+    }
+
+    #[test]
+    fn signature_shapes_match_python_registry() {
+        assert_eq!(signature("cholesky_n16").unwrap(), vec![vec![16, 16]]);
+        assert_eq!(
+            signature("solver_n32").unwrap(),
+            vec![vec![32, 32], vec![32]]
+        );
+        assert_eq!(
+            signature("gemm_m48").unwrap(),
+            vec![vec![48, 16], vec![16, 64]]
+        );
+        assert_eq!(signature("fir_m16").unwrap(), vec![vec![79], vec![16]]);
+        assert_eq!(signature("nope"), None);
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! This is the only place the process touches XLA. Python runs once at
+//! build time (`make artifacts`); at run time the rust coordinator loads
+//! `artifacts/<name>.hlo.txt` (HLO *text* — see python/compile/aot.py for
+//! why text, not serialized protos), compiles each module once on the PJRT
+//! CPU client, and executes it with concrete inputs.
+//!
+//! In this reproduction the runtime plays two roles:
+//! 1. **Golden model** — every REVEL-simulator functional result is checked
+//!    against the JAX-lowered HLO executed here (tests + examples).
+//! 2. **Compute engine** for the 5G pipeline coordinator example, standing
+//!    in for the host-side compute next to the simulated accelerator.
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled HLO module plus its input signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Input shapes (row-major dims) expected by the entry computation.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Artifact name (registry key), e.g. `cholesky_n16`.
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with f32 inputs; returns the flattened f32 outputs
+    /// (the AOT path always lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.input_shapes.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.input_shapes.len(),
+                inputs.len()
+            ));
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.input_shapes) {
+            let numel: usize = shape.iter().product();
+            if data.len() != numel {
+                return Err(anyhow!(
+                    "{}: input length {} != shape {:?}",
+                    self.name,
+                    data.len(),
+                    shape
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.is_empty() { lit } else { lit.reshape(&dims)? };
+            lits.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// PJRT CPU engine with an executable cache (compile once per artifact).
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+// The PJRT CPU client is internally synchronized; the cache has its own lock.
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU engine rooted at the artifacts directory.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Locate the artifacts dir: $REVEL_ARTIFACTS, ./artifacts, or
+    /// the crate-relative default (works from `cargo test` / `cargo bench`).
+    pub fn discover() -> Result<Self> {
+        let cands = [
+            std::env::var("REVEL_ARTIFACTS").unwrap_or_default(),
+            "artifacts".to_string(),
+            format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+        ];
+        for c in cands.iter().filter(|c| !c.is_empty()) {
+            if Path::new(c).join(".stamp").exists() {
+                return Self::new(c);
+            }
+        }
+        Err(anyhow!(
+            "artifacts not found (run `make artifacts`); looked at {:?}",
+            cands
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by registry name (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let sig = artifacts::signature(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = std::sync::Arc::new(Executable {
+            exe,
+            input_shapes: sig,
+            name: name.to_string(),
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_runs_solver_and_gemm_artifacts() {
+        let eng = Engine::discover().expect("artifacts built");
+        // solver_n12: L x = b with L = I*2 -> x = b/2.
+        let exe = eng.load("solver_n12").unwrap();
+        let mut l = vec![0f32; 144];
+        for i in 0..12 {
+            l[i * 12 + i] = 2.0;
+        }
+        let b: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let out = exe.run_f32(&[l, b.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        for i in 0..12 {
+            assert!((out[0][i] - b[i] / 2.0).abs() < 1e-6, "{:?}", out[0]);
+        }
+        // gemm_m12: A(12x16) @ B(16x64), A = ones -> each C elem = col-sum.
+        let exe = eng.load("gemm_m12").unwrap();
+        let a = vec![1f32; 12 * 16];
+        let b: Vec<f32> = (0..16 * 64).map(|i| (i % 7) as f32).collect();
+        let out = exe.run_f32(&[a, b.clone()]).unwrap();
+        let c = &out[0];
+        for j in 0..64 {
+            let want: f32 = (0..16).map(|k| b[k * 64 + j]).sum();
+            assert!((c[j] - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn engine_runs_cholesky_artifact_with_while_loops() {
+        let eng = Engine::discover().expect("artifacts built");
+        let exe = eng.load("cholesky_n12").unwrap();
+        // SPD: diag(4) -> L = diag(2).
+        let mut a = vec![0f32; 144];
+        for i in 0..12 {
+            a[i * 12 + i] = 4.0;
+        }
+        let out = exe.run_f32(&[a]).unwrap();
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { 2.0 } else { 0.0 };
+                assert!((out[0][i * 12 + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_runs_fft_artifact() {
+        let eng = Engine::discover().expect("artifacts built");
+        let exe = eng.load("fft_n64").unwrap();
+        // Impulse -> flat spectrum (re=1, im=0).
+        let mut x = vec![0f32; 64];
+        x[0] = 1.0;
+        let out = exe.run_f32(&[x]).unwrap();
+        assert_eq!(out.len(), 2);
+        for i in 0..64 {
+            assert!((out[0][i] - 1.0).abs() < 1e-4);
+            assert!(out[1][i].abs() < 1e-4);
+        }
+    }
+}

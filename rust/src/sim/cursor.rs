@@ -1,0 +1,206 @@
+//! Resumable iteration state over stream patterns — the per-stream
+//! iterator registers (i, j, current length) the stream-control unit
+//! maintains in hardware (paper §6.2 "Inductive Memory Access").
+
+use crate::isa::{ConstPattern, Pattern2D};
+
+/// Address-pattern cursor.
+#[derive(Clone, Debug)]
+pub struct StreamCursor {
+    pub pat: Pattern2D,
+    j: i64,
+    i: i64,
+    cur_len: i64,
+}
+
+impl StreamCursor {
+    pub fn new(pat: Pattern2D) -> Self {
+        let mut c = Self { cur_len: pat.len_at(0), pat, j: 0, i: 0 };
+        c.skip_empty_rows();
+        c
+    }
+
+    fn skip_empty_rows(&mut self) {
+        while self.j < self.pat.n_j && self.cur_len == 0 {
+            self.j += 1;
+            self.i = 0;
+            self.cur_len = if self.j < self.pat.n_j { self.pat.len_at(self.j) } else { 0 };
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.j >= self.pat.n_j
+    }
+
+    /// Lexicographic position (outer, inner) of the *next* element —
+    /// everything before this has been taken. Used by the RMW interlock.
+    pub fn pos(&self) -> (i64, i64) {
+        (self.j, self.i)
+    }
+
+    /// Elements left in the current inner row.
+    pub fn remaining_in_row(&self) -> i64 {
+        if self.done() {
+            0
+        } else {
+            self.cur_len - self.i
+        }
+    }
+
+    /// Current element's address without advancing.
+    pub fn addr(&self) -> i64 {
+        self.pat.addr(self.j, self.i)
+    }
+
+    pub fn stride(&self) -> i64 {
+        self.pat.c_i
+    }
+
+    /// Whether the next element starts an inner row.
+    pub fn at_row_start(&self) -> bool {
+        self.i == 0
+    }
+
+    /// Advance by k elements (must be <= remaining_in_row). Returns the
+    /// k addresses covered.
+    pub fn take(&mut self, k: i64) -> Vec<i64> {
+        assert!(k <= self.remaining_in_row(), "cursor over-advance");
+        let out: Vec<i64> =
+            (0..k).map(|d| self.pat.addr(self.j, self.i + d)).collect();
+        self.i += k;
+        if self.i >= self.cur_len {
+            self.j += 1;
+            self.i = 0;
+            self.cur_len = if self.j < self.pat.n_j { self.pat.len_at(self.j) } else { 0 };
+            self.skip_empty_rows();
+        }
+        out
+    }
+
+    pub fn total_remaining(&self) -> i64 {
+        if self.done() {
+            return 0;
+        }
+        let mut t = self.cur_len - self.i;
+        for j in self.j + 1..self.pat.n_j {
+            t += self.pat.len_at(j);
+        }
+        t
+    }
+}
+
+/// Constant-pattern cursor (for Const command streams).
+#[derive(Clone, Debug)]
+pub struct ConstCursor {
+    pat: ConstPattern,
+    j: i64,
+    k: i64, // index within row (0..len1+len2)
+}
+
+impl ConstCursor {
+    pub fn new(pat: ConstPattern) -> Self {
+        let mut c = Self { pat, j: 0, k: 0 };
+        c.skip_empty();
+        c
+    }
+
+    fn row_len(&self) -> i64 {
+        self.pat.len1_at(self.j) + self.pat.len2_at(self.j)
+    }
+
+    fn skip_empty(&mut self) {
+        while self.j < self.pat.n_j && self.row_len() == 0 {
+            self.j += 1;
+            self.k = 0;
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.j >= self.pat.n_j
+    }
+
+    /// Values left in the current row (const instances respect row
+    /// boundaries so gate streams align with masked data instances).
+    pub fn remaining_in_row(&self) -> i64 {
+        if self.done() {
+            0
+        } else {
+            self.row_len() - self.k
+        }
+    }
+
+    pub fn next(&mut self) -> Option<f64> {
+        if self.done() {
+            return None;
+        }
+        let v = if self.k < self.pat.len1_at(self.j) {
+            self.pat.val1
+        } else {
+            self.pat.val2
+        };
+        self.k += 1;
+        if self.k >= self.row_len() {
+            self.j += 1;
+            self.k = 0;
+            self.skip_empty();
+        }
+        Some(v)
+    }
+
+    pub fn total_remaining(&self) -> i64 {
+        if self.done() {
+            return 0;
+        }
+        let mut t = self.row_len() - self.k;
+        for j in self.j + 1..self.pat.n_j {
+            t += self.pat.len1_at(j) + self.pat.len2_at(j);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cursor_matches_pattern_iter() {
+        let p = Pattern2D::inductive(0, 1, 4.0, 5, 4, -1.0);
+        let want: Vec<i64> = p.iter().map(|(a, _)| a).collect();
+        let mut c = StreamCursor::new(p);
+        let mut got = Vec::new();
+        while !c.done() {
+            let k = c.remaining_in_row().min(3);
+            got.extend(c.take(k));
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cursor_tracks_rows_and_remaining() {
+        let p = Pattern2D::rect(0, 1, 4, 10, 2);
+        let mut c = StreamCursor::new(p);
+        assert_eq!(c.total_remaining(), 8);
+        assert!(c.at_row_start());
+        c.take(4);
+        assert!(c.at_row_start());
+        assert_eq!(c.addr(), 10);
+        c.take(2);
+        assert_eq!(c.remaining_in_row(), 2);
+        assert_eq!(c.total_remaining(), 2);
+        c.take(2);
+        assert!(c.done());
+    }
+
+    #[test]
+    fn const_cursor_emits_pattern_values() {
+        let g = ConstPattern::first_of_row(1.0, 0.0, 3.0, 3, -1.0);
+        let want = g.values();
+        let mut c = ConstCursor::new(g);
+        let mut got = Vec::new();
+        while let Some(v) = c.next() {
+            got.push(v);
+        }
+        assert_eq!(got, want);
+    }
+}

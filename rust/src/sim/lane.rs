@@ -1,0 +1,885 @@
+//! One REVEL vector lane (paper Fig 14): command queue, stream control
+//! with inductive address generation, scratchpad, vector ports with
+//! reuse + predication, and the heterogeneous compute fabric's firing
+//! logic. The XFER unit and shared-scratchpad bus are arbitrated at the
+//! machine level (they cross lanes); the lane reports the events.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::cursor::{ConstCursor, StreamCursor};
+use super::port::{InPort, OutPort, IN_PORT_WIDTHS, OUT_PORT_WIDTHS};
+use super::spad::{Spad, LINE_WORDS};
+use crate::compiler::Configured;
+use crate::dataflow::{exec_dfg, new_acc_state, AccState, VecVal};
+use crate::isa::{Cmd, Pattern2D, Reuse, XferDst};
+
+/// Command-queue depth (paper Table 3: 8-entry Cmd Queue).
+pub const CMD_QUEUE_DEPTH: usize = 8;
+/// Stream-table entries. Table 3 lists an 8-entry table; we provision
+/// 12 so the FFT stage (4 in-place load/store pairs + 2 twiddle
+/// streams) fits — see DESIGN.md §Deviations.
+pub const STREAM_TABLE: usize = 12;
+/// Scratchpad access latency, cycles from address generation to port.
+pub const SPAD_LAT: u64 = 2;
+/// Number of vector ports per direction.
+pub const NUM_PORTS: usize = 12;
+
+/// Cross-lane work a lane asks the machine to start (XFER unit and
+/// shared-scratchpad bus are machine-arbitrated resources).
+#[derive(Clone, Debug)]
+pub enum LaneEvent {
+    StartXfer {
+        src_port: usize,
+        dst_port: usize,
+        dst: XferDst,
+        n: i64,
+        reuse: Option<Reuse>,
+    },
+    StartSharedLd { pat: Pattern2D, shared_addr: i64, local_addr: i64 },
+    StartSharedSt { pat: Pattern2D, local_addr: i64, shared_addr: i64 },
+}
+
+/// External state the lane needs for barrier/config/idle decisions but
+/// which lives at the machine level.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExtBusy {
+    /// A shared-scratchpad stream for this lane is still active.
+    pub shared_active: bool,
+    /// An XFER stream sourcing from this lane is still active.
+    pub xfer_src_active: bool,
+    /// An XFER stream destined to this lane is still active.
+    pub xfer_dst_active: bool,
+}
+
+impl ExtBusy {
+    pub fn any(&self) -> bool {
+        self.shared_active || self.xfer_src_active || self.xfer_dst_active
+    }
+}
+
+#[derive(Clone, Debug)]
+struct LoadStream {
+    cur: StreamCursor,
+    port: usize,
+    masked: bool,
+    /// Extra cycles the current chunk still occupies the SPAD read port
+    /// (multi-line gathers, scalarized unmasked remainders).
+    stall: u64,
+    /// Inclusive address bounds (memory-ordering interlock).
+    bounds: (i64, i64),
+    /// RMW pairing lag (see Cmd::LocalLd::rmw).
+    rmw: Option<u8>,
+}
+
+#[derive(Clone, Debug)]
+struct StoreStream {
+    cur: StreamCursor,
+    port: usize,
+    stall: u64,
+    bounds: (i64, i64),
+    /// In-place RMW partner of an overlapping load: element-ordered
+    /// (store trails the load) instead of issue-blocked.
+    rmw: bool,
+}
+
+fn overlap(a: (i64, i64), b: (i64, i64)) -> bool {
+    a.0 <= b.1 && b.0 <= a.1
+}
+
+#[derive(Clone, Debug)]
+struct ConstStream {
+    cur: ConstCursor,
+    port: usize,
+}
+
+/// Per-cycle condition flags used for Fig-18 bucket classification.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CycleFlags {
+    pub drain: bool,
+    pub barrier: bool,
+    pub spad_contention: bool,
+}
+
+/// Counters the lane accumulates for the machine's Stats.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneCounters {
+    pub spad_words: u64,
+    pub fires_dedicated: u64,
+    pub fires_temporal: u64,
+}
+
+pub struct Lane {
+    pub id: usize,
+    pub spad: Spad,
+    pub queue: VecDeque<Cmd>,
+    pub in_ports: Vec<InPort>,
+    pub out_ports: Vec<OutPort>,
+    config: Option<Arc<Configured>>,
+    /// Configuration being applied: (config, cycles remaining).
+    config_pending: Option<(Arc<Configured>, u64)>,
+    acc: Vec<AccState>,
+    next_fire: Vec<u64>,
+    loads: Vec<LoadStream>,
+    stores: Vec<StoreStream>,
+    consts: Vec<ConstStream>,
+    pub flags: CycleFlags,
+    pub counters: LaneCounters,
+}
+
+impl Lane {
+    pub fn new(id: usize, spad_words: usize) -> Self {
+        Self {
+            id,
+            spad: Spad::new(spad_words),
+            queue: VecDeque::new(),
+            in_ports: (0..NUM_PORTS).map(|_| InPort::default()).collect(),
+            out_ports: (0..NUM_PORTS).map(|_| OutPort::default()).collect(),
+            config: None,
+            config_pending: None,
+            acc: Vec::new(),
+            next_fire: Vec::new(),
+            loads: Vec::new(),
+            stores: Vec::new(),
+            consts: Vec::new(),
+            flags: CycleFlags::default(),
+            counters: LaneCounters::default(),
+        }
+    }
+
+    pub fn config(&self) -> Option<&Arc<Configured>> {
+        self.config.as_ref()
+    }
+
+    /// Active local streams in the stream table.
+    fn table_used(&self) -> usize {
+        self.loads.len() + self.stores.len() + self.consts.len()
+    }
+
+    fn fifos_empty(&self) -> bool {
+        self.in_ports.iter().all(|p| p.is_empty())
+            && self.out_ports.iter().all(|p| p.is_empty())
+    }
+
+    /// No local activity (queue, streams, fifos, pending config).
+    pub fn local_idle(&self) -> bool {
+        self.queue.is_empty()
+            && self.loads.is_empty()
+            && self.stores.is_empty()
+            && self.consts.is_empty()
+            && self.config_pending.is_none()
+            && self.fifos_empty()
+    }
+
+    pub fn queue_has_space(&self) -> bool {
+        self.queue.len() < CMD_QUEUE_DEPTH
+    }
+
+    /// Vector width a load into `port` should deliver: the width the
+    /// configured dataflow declared, defaulting to the physical width.
+    fn in_width(&self, port: usize) -> usize {
+        if let Some(c) = &self.config {
+            if let Some((di, pi)) = c.config.find_in_port(port) {
+                return c.config.dfgs[di].in_ports[pi].width;
+            }
+        }
+        IN_PORT_WIDTHS[port]
+    }
+
+    /// Phase 1: issue at most one command from the queue head.
+    /// Returns a machine-level event if the command starts one.
+    pub fn step_issue(&mut self, _now: u64, ext: ExtBusy) -> Option<LaneEvent> {
+        self.flags = CycleFlags::default();
+        // Advance an in-progress configuration.
+        if let Some((cfg, left)) = &mut self.config_pending {
+            self.flags.drain = true;
+            *left -= 1;
+            if *left == 0 {
+                let cfg = cfg.clone();
+                self.install(cfg);
+                self.config_pending = None;
+            }
+            return None;
+        }
+        let head = self.queue.front()?.clone();
+        match head {
+            Cmd::Configure(cfg) => {
+                // Reconfiguration requires full drain (paper Q5: the
+                // biggest remaining overhead on short phases).
+                let quiet = self.loads.is_empty()
+                    && self.stores.is_empty()
+                    && self.consts.is_empty()
+                    && self.fifos_empty()
+                    && !ext.any();
+                if quiet {
+                    self.queue.pop_front();
+                    self.config_pending = Some((cfg.clone(), cfg.config_cycles()));
+                }
+                self.flags.drain = true;
+                None
+            }
+            Cmd::Barrier => {
+                // Scratchpad barrier: local SPAD streams + shared-bus
+                // streams must complete. XFER (port-to-port) streams are
+                // unaffected — that is what lets fine-grain dependences
+                // overlap across the barrier.
+                if self.loads.is_empty()
+                    && self.stores.is_empty()
+                    && !ext.shared_active
+                {
+                    self.queue.pop_front();
+                } else {
+                    self.flags.barrier = true;
+                }
+                None
+            }
+            Cmd::Wait => unreachable!("Wait is handled by the control core"),
+            Cmd::LocalLd { pat, port, reuse, masked, rmw } => {
+                let bounds = pat.bounds().unwrap_or((0, -1));
+                // RAW ordering: a load must not start while an earlier
+                // store stream could still write inside its range — unless
+                // the load is the rmw partner of an rmw store (the
+                // element-level ordering rule governs that pair instead;
+                // the store command must be issued before the load).
+                let hazard = self
+                    .stores
+                    .iter()
+                    .any(|s| overlap(s.bounds, bounds) && !(rmw.is_some() && s.rmw));
+                if hazard {
+                    self.flags.barrier = true;
+                } else if !self.in_ports[port].busy
+                    && self.table_used() < STREAM_TABLE
+                {
+                    self.queue.pop_front();
+                    self.in_ports[port].busy = true;
+                    let w = self.in_width(port);
+                    self.in_ports[port].push_reuse(reuse, pat.instances(w));
+                    self.loads.push(LoadStream {
+                        cur: StreamCursor::new(pat),
+                        port,
+                        masked,
+                        stall: 0,
+                        bounds,
+                        rmw,
+                    });
+                }
+                None
+            }
+            Cmd::LocalSt { pat, port, rmw } => {
+                let bounds = pat.bounds().unwrap_or((0, -1));
+                // WAR/WAW ordering: a plain store must not start while an
+                // earlier load or store overlaps its range. An `rmw` store
+                // starts immediately and trails its paired load at element
+                // granularity (see step_one_store).
+                let hazard = !rmw
+                    && (self.loads.iter().any(|l| overlap(l.bounds, bounds))
+                        || self.stores.iter().any(|s| overlap(s.bounds, bounds)));
+                if hazard {
+                    self.flags.barrier = true;
+                } else if !self.out_ports[port].busy
+                    && self.table_used() < STREAM_TABLE
+                {
+                    self.queue.pop_front();
+                    self.out_ports[port].busy = true;
+                    self.stores.push(StoreStream {
+                        cur: StreamCursor::new(pat),
+                        port,
+                        stall: 0,
+                        bounds,
+                        rmw,
+                    });
+                }
+                None
+            }
+            Cmd::ConstSt { pat, port } => {
+                if !self.in_ports[port].busy && self.table_used() < STREAM_TABLE {
+                    self.queue.pop_front();
+                    self.in_ports[port].busy = true;
+                    let w = self.in_width(port);
+                    self.in_ports[port].push_reuse(None, pat.instances(w));
+                    self.consts.push(ConstStream { cur: ConstCursor::new(pat), port });
+                }
+                None
+            }
+            Cmd::Xfer { src_port, dst_port, dst, n, reuse } => {
+                if !self.out_ports[src_port].busy {
+                    self.queue.pop_front();
+                    self.out_ports[src_port].busy = true;
+                    Some(LaneEvent::StartXfer { src_port, dst_port, dst, n, reuse })
+                } else {
+                    None
+                }
+            }
+            Cmd::SharedLd { pat, shared_addr, local_addr } => {
+                self.queue.pop_front();
+                Some(LaneEvent::StartSharedLd { pat, shared_addr, local_addr })
+            }
+            Cmd::SharedSt { pat, local_addr, shared_addr } => {
+                self.queue.pop_front();
+                Some(LaneEvent::StartSharedSt { pat, local_addr, shared_addr })
+            }
+        }
+    }
+
+    /// Phase 2: stream control. The single-bank scratchpad serves one
+    /// load stream and one store stream per cycle (1R/1W); const streams
+    /// are generated at the ports and do not consume SPAD bandwidth.
+    pub fn step_streams(&mut self, now: u64) {
+        self.step_one_load(now);
+        self.step_one_store(now);
+        self.step_consts(now);
+    }
+
+    /// RMW ordering, load side: a load overlapping an active RMW store
+    /// may read a chunk only once the store has passed the chunk's *last*
+    /// address in the *previous* outer row (cross-iteration RAW: row j
+    /// reads what the store's row j-1 produced). Within-row (lag-0,
+    /// store-trails-load) pairs satisfy `js >= jl` trivially.
+    fn rmw_load_clear(&self, l: &LoadStream, take: i64) -> bool {
+        let lag = match l.rmw {
+            None | Some(0) => return true,
+            Some(lag) => lag as i64,
+        };
+        let (jl, _) = l.cur.pos();
+        let a = l.cur.addr();
+        let end = a.max(a + (take - 1) * l.cur.stride());
+        self.stores
+            .iter()
+            .filter(|s| s.rmw && overlap(s.bounds, l.bounds))
+            .all(|s| {
+                let (js, _) = s.cur.pos();
+                js > jl - lag || (js == jl - lag && s.cur.addr() > end)
+            })
+    }
+
+    /// Prospective chunk size of a load stream (next delivery).
+    fn load_take(&self, l: &LoadStream) -> i64 {
+        let w = self.in_width(l.port) as i64;
+        l.cur.remaining_in_row().min(w)
+    }
+
+    fn step_one_load(&mut self, now: u64) {
+        // Streams ready to generate; need FIFO space at the destination
+        // port and clearance from the memory-ordering logic.
+        let mut ready: Vec<usize> = Vec::new();
+        let mut blocked = false;
+        for (k, s) in self.loads.iter().enumerate() {
+            if !self.in_ports[s.port].has_space() {
+                continue;
+            }
+            if s.stall == 0 && !self.rmw_load_clear(s, self.load_take(s)) {
+                blocked = true;
+                continue;
+            }
+            ready.push(k);
+        }
+        if ready.is_empty() {
+            if blocked {
+                self.flags.barrier = true; // memory-order stall
+            }
+            return;
+        }
+        if ready.len() > 1 {
+            self.flags.spad_contention = true;
+        }
+        // Prioritize by minimum "cycles-to-stall": least buffered data at
+        // the destination port first (paper §6.1 Stream Control).
+        let &k = ready
+            .iter()
+            .min_by_key(|&&k| self.in_ports[self.loads[k].port].len())
+            .unwrap();
+        // A stalled stream occupies the read port without new output.
+        if self.loads[k].stall > 0 {
+            self.loads[k].stall -= 1;
+            return;
+        }
+        // One 512-bit line per cycle: deliver as many instances as the
+        // line, the row, the FIFO and the ordering logic allow.
+        let w = self.in_width(self.loads[k].port);
+        let port = self.loads[k].port;
+        let mut budget = LINE_WORDS as i64;
+        let mut extra_cycles = 0i64;
+        while budget > 0
+            && !self.loads[k].cur.done()
+            && self.in_ports[port].has_space()
+            && self.rmw_load_clear(&self.loads[k], self.load_take(&self.loads[k]))
+        {
+            let s = &mut self.loads[k];
+            let rem = s.cur.remaining_in_row();
+            debug_assert!(rem > 0);
+            let take = rem.min(w as i64).min(budget);
+            if take < rem.min(w as i64) {
+                break; // line budget exhausted mid-instance: next cycle
+            }
+            let gather =
+                Spad::line_gather(s.cur.addr(), s.cur.stride()).max(1) as i64;
+            extra_cycles += (take + gather - 1) / gather - 1;
+            let addrs = s.cur.take(take);
+            let mut vals: Vec<f64> =
+                addrs.iter().map(|&a| self.spad.read(a)).collect();
+            let mut pred = vec![true; take as usize];
+            if (take as usize) < w {
+                // Partial vector: zero-pad + predicate off. With implicit
+                // masking this is free; without it the hardware
+                // scalarizes the remainder — charge one cycle/element.
+                vals.resize(w, 0.0);
+                pred.resize(w, false);
+                if !s.masked {
+                    extra_cycles += take - 1;
+                }
+            }
+            budget -= take;
+            self.counters.spad_words += take as u64;
+            let ready_at = now + SPAD_LAT + extra_cycles.max(0) as u64;
+            self.in_ports[port].push(VecVal::masked(vals, pred), ready_at);
+        }
+        let s = &mut self.loads[k];
+        s.stall = extra_cycles.max(0) as u64;
+        if s.cur.done() {
+            self.loads.retain(|x| !x.cur.done());
+            self.in_ports[port].busy = false;
+        }
+    }
+
+    /// RMW element ordering: the store's next element may be written only
+    /// when every overlapping active load has already read past it.
+    fn rmw_clear(&self, s: &StoreStream) -> bool {
+        !s.rmw
+            || self
+                .loads
+                .iter()
+                .filter(|l| overlap(l.bounds, s.bounds))
+                .all(|l| l.cur.pos() > s.cur.pos())
+    }
+
+    fn step_one_store(&mut self, now: u64) {
+        let mut ready: Vec<usize> = Vec::new();
+        for (k, s) in self.stores.iter().enumerate() {
+            if s.stall > 0
+                || (self.out_ports[s.port].head_ready(now).is_some()
+                    && self.rmw_clear(s))
+            {
+                ready.push(k);
+            }
+        }
+        if ready.is_empty() {
+            return;
+        }
+        if ready.len() > 1 {
+            self.flags.spad_contention = true;
+        }
+        let &k = ready
+            .iter()
+            .max_by_key(|&&k| self.out_ports[self.stores[k].port].len())
+            .unwrap();
+        if self.stores[k].stall > 0 {
+            self.stores[k].stall -= 1;
+            return;
+        }
+        // One 512-bit line per cycle: drain as many ready instances of
+        // the chosen stream as the line budget allows.
+        let port = self.stores[k].port;
+        let mut budget = LINE_WORDS as i64;
+        let mut extra_cycles = 0i64;
+        while budget > 0
+            && !self.stores[k].cur.done()
+            && self.out_ports[port].head_ready(now).is_some()
+            && self.rmw_clear(&self.stores[k])
+        {
+            let s = &mut self.stores[k];
+            let inst = self.out_ports[port].pop();
+            let active: Vec<f64> = inst
+                .vals
+                .iter()
+                .zip(&inst.pred)
+                .filter(|(_, &p)| p)
+                .map(|(&v, _)| v)
+                .collect();
+            let n = active.len() as i64;
+            assert!(
+                n <= s.cur.remaining_in_row(),
+                "store instance ({n}) crosses row boundary ({} left) on lane {} port {port}",
+                s.cur.remaining_in_row(),
+                self.id,
+            );
+            let gather =
+                Spad::line_gather(s.cur.addr(), s.cur.stride()).max(1) as i64;
+            extra_cycles += if n == 0 { 0 } else { (n + gather - 1) / gather - 1 };
+            let addrs = s.cur.take(n);
+            for (a, v) in addrs.iter().zip(&active) {
+                self.spad.write(*a, *v);
+            }
+            self.counters.spad_words += n as u64;
+            budget -= n.max(1);
+        }
+        let s = &mut self.stores[k];
+        s.stall = extra_cycles.max(0) as u64;
+        if s.cur.done() {
+            self.stores.retain(|x| !x.cur.done());
+            self.out_ports[port].busy = false;
+        }
+    }
+
+    fn step_consts(&mut self, now: u64) {
+        let widths: Vec<usize> =
+            self.consts.iter().map(|c| self.in_width(c.port)).collect();
+        let mut finished = Vec::new();
+        for (k, c) in self.consts.iter_mut().enumerate() {
+            if !self.in_ports[c.port].has_space() {
+                continue;
+            }
+            let w = widths[k];
+            // Instances respect row boundaries so gate streams stay
+            // aligned with the masked data instances they predicate.
+            let chunk = (c.cur.remaining_in_row().max(0) as usize).min(w);
+            let mut vals = Vec::with_capacity(w);
+            for _ in 0..chunk.max(1) {
+                match c.cur.next() {
+                    Some(v) => vals.push(v),
+                    None => break,
+                }
+            }
+            if vals.is_empty() {
+                finished.push(k);
+                continue;
+            }
+            let n = vals.len();
+            let mut pred = vec![true; n];
+            if n < w {
+                vals.resize(w, 0.0);
+                pred.resize(w, false);
+            }
+            self.in_ports[c.port].push(VecVal::masked(vals, pred), now + 1);
+            if c.cur.done() {
+                finished.push(k);
+            }
+        }
+        for &k in finished.iter().rev() {
+            let port = self.consts[k].port;
+            self.in_ports[port].busy = false;
+            self.consts.remove(k);
+        }
+    }
+
+    /// Phase 3: dataflow firing. Every eligible dataflow fires (the data
+    /// firing logic tracks up to 4); the temporal region retires one
+    /// firing per cycle. Returns (dedicated, temporal) firing counts.
+    pub fn step_fire(&mut self, now: u64) -> (usize, usize) {
+        let Some(cfgd) = self.config.clone() else { return (0, 0) };
+        let mut ded = 0;
+        let mut temp = 0;
+        let mut temporal_budget = 1usize;
+        for (di, dfg) in cfgd.config.dfgs.iter().enumerate() {
+            let t = &cfgd.placement.timing[di];
+            if now < self.next_fire[di] {
+                continue;
+            }
+            if t.temporal && temporal_budget == 0 {
+                continue;
+            }
+            // All inputs visible? (borrow heads; consumption happens
+            // after execution via present()).
+            let mut heads: Vec<&VecVal> = Vec::with_capacity(dfg.in_ports.len());
+            let mut all = true;
+            for p in &dfg.in_ports {
+                match self.in_ports[p.gid].head(now) {
+                    Some(v) => heads.push(v),
+                    None => {
+                        all = false;
+                        break;
+                    }
+                }
+            }
+            if !all {
+                continue;
+            }
+            // All outputs have space?
+            if !dfg.outs.iter().all(|o| self.out_ports[o.gid].has_space()) {
+                continue;
+            }
+            // Active lanes this firing = AND of vector-width predicates.
+            let w = dfg.width();
+            let mut pred = vec![true; w];
+            for (h, p) in heads.iter().zip(&dfg.in_ports) {
+                if p.width > 1 || w == 1 {
+                    for l in 0..w.min(h.width()) {
+                        pred[l] &= h.pred[l];
+                    }
+                }
+            }
+            let active = pred.iter().filter(|&&b| b).count().max(1);
+            let outs = exec_dfg(dfg, &heads, &mut self.acc[di]);
+            if std::env::var_os("REVEL_TRACE").is_some() {
+                eprintln!(
+                    "[{now}] lane{} fire {}: in={:?} out={:?}",
+                    self.id,
+                    dfg.name,
+                    heads.iter().map(|h| &h.vals).collect::<Vec<_>>(),
+                    outs.iter()
+                        .map(|o| o.as_ref().map(|v| &v.vals))
+                        .collect::<Vec<_>>(),
+                );
+            }
+            // Consume inputs: scalar ports feeding a vector dataflow burn
+            // `active` element-consumptions (reuse in element units);
+            // full-width ports burn one presentation.
+            for p in &dfg.in_ports {
+                let units = if p.width == 1 && w > 1 { active } else { 1 };
+                self.in_ports[p.gid].present(units);
+            }
+            for (o, out) in dfg.outs.iter().zip(outs) {
+                if let Some(v) = out {
+                    debug_assert!(v.width() <= OUT_PORT_WIDTHS[o.gid].max(16));
+                    self.out_ports[o.gid].push(v, now + t.depth);
+                }
+            }
+            self.next_fire[di] = now + t.ii;
+            if t.temporal {
+                temp += 1;
+                temporal_budget -= 1;
+                self.counters.fires_temporal += 1;
+            } else {
+                ded += 1;
+                self.counters.fires_dedicated += 1;
+            }
+        }
+        (ded, temp)
+    }
+
+    /// Debug: describe active streams (deadlock snapshots).
+    pub fn stream_debug(&self) -> String {
+        let mut s = String::new();
+        for l in &self.loads {
+            s.push_str(&format!(
+                "      load port {} pos {:?} addr {} rmw {:?}\n",
+                l.port,
+                l.cur.pos(),
+                if l.cur.done() { -1 } else { l.cur.addr() },
+                l.rmw
+            ));
+        }
+        for st in &self.stores {
+            s.push_str(&format!(
+                "      store port {} pos {:?} addr {} rmw {}\n",
+                st.port,
+                st.cur.pos(),
+                if st.cur.done() { -1 } else { st.cur.addr() },
+                st.rmw
+            ));
+        }
+        for c in &self.consts {
+            s.push_str(&format!("      const port {} left {}\n", c.port, c.cur.total_remaining()));
+        }
+        s
+    }
+
+    /// Whether the lane has any pending local work (for bucket
+    /// classification: StreamDpd vs CtrlOvhd vs Done).
+    pub fn has_local_work(&self) -> bool {
+        !self.queue.is_empty()
+            || !self.loads.is_empty()
+            || !self.stores.is_empty()
+            || !self.consts.is_empty()
+            || self.config_pending.is_some()
+            || !self.fifos_empty()
+    }
+
+    fn install(&mut self, cfgd: Arc<Configured>) {
+        self.acc = cfgd.config.dfgs.iter().map(new_acc_state).collect();
+        self.next_fire = vec![0; cfgd.config.dfgs.len()];
+        for p in &mut self.in_ports {
+            p.clear();
+        }
+        for p in &mut self.out_ports {
+            p.clear();
+        }
+        self.config = Some(cfgd);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, Configured, FabricSpec};
+    use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op};
+    use crate::isa::ConstPattern;
+
+    fn scale_config() -> Arc<Configured> {
+        // One critical dataflow: out = in0 * in1 (vector * scalar).
+        let mut b = DfgBuilder::new("scale", Criticality::Critical);
+        let x = b.in_port(0, 4);
+        let s = b.in_port(1, 1);
+        let y = b.node(Op::Mul, &[x, s]);
+        b.out(0, y, 4);
+        let cfg = LaneConfig { name: "scale".into(), dfgs: vec![b.build()] };
+        Configured::new(cfg, &FabricSpec::default_revel(), &CompileOptions::default())
+            .unwrap()
+    }
+
+    fn run_lane_until_idle(lane: &mut Lane, max: u64) -> u64 {
+        let mut now = 0;
+        while !lane.local_idle() && now < max {
+            lane.step_issue(now, ExtBusy::default());
+            lane.step_streams(now);
+            lane.step_fire(now);
+            now += 1;
+        }
+        assert!(lane.local_idle(), "lane did not go idle in {max} cycles");
+        now
+    }
+
+    #[test]
+    fn load_scale_store_roundtrip() {
+        let mut lane = Lane::new(0, 256);
+        lane.spad.load_slice(0, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let cfg = scale_config();
+        lane.queue.push_back(Cmd::Configure(cfg));
+        lane.queue.push_back(Cmd::LocalLd {
+            pat: Pattern2D::lin(0, 8),
+            port: 0,
+            reuse: None,
+            masked: true, rmw: None,
+        });
+        lane.queue.push_back(Cmd::ConstSt {
+            pat: ConstPattern::scalar(10.0, 2),
+            port: 1,
+        });
+        lane.queue.push_back(Cmd::LocalSt { pat: Pattern2D::lin(32, 8), port: 0, rmw: false });
+        run_lane_until_idle(&mut lane, 500);
+        assert_eq!(
+            lane.spad.read_slice(32, 8),
+            vec![10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0, 80.0]
+        );
+        assert_eq!(lane.counters.fires_dedicated, 2);
+    }
+
+    #[test]
+    fn masked_partial_row_is_padded_and_predicated() {
+        let mut lane = Lane::new(0, 256);
+        lane.spad.load_slice(0, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let cfg = scale_config();
+        lane.queue.push_back(Cmd::Configure(cfg));
+        // Inductive rows of len 4, 2 (masked): two firings.
+        lane.queue.push_back(Cmd::LocalLd {
+            pat: Pattern2D::inductive(0, 1, 4.0, 4, 2, -2.0),
+            port: 0,
+            reuse: None,
+            masked: true, rmw: None,
+        });
+        lane.queue.push_back(Cmd::ConstSt {
+            pat: ConstPattern::scalar(2.0, 2),
+            port: 1,
+        });
+        lane.queue.push_back(Cmd::LocalSt {
+            pat: Pattern2D::inductive(32, 1, 4.0, 4, 2, -2.0),
+            port: 0,
+            rmw: false,
+        });
+        run_lane_until_idle(&mut lane, 500);
+        assert_eq!(lane.spad.read_slice(32, 4), vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(lane.spad.read_slice(36, 2), vec![10.0, 12.0]);
+    }
+
+    #[test]
+    fn unmasked_partial_rows_cost_more_cycles() {
+        let build = |masked: bool| {
+            let mut lane = Lane::new(0, 256);
+            let data: Vec<f64> = (0..32).map(|i| i as f64).collect();
+            lane.spad.load_slice(0, &data);
+            lane.queue.push_back(Cmd::Configure(scale_config()));
+            // Rows 3,3,3,3 on a width-4 port: every row is partial.
+            lane.queue.push_back(Cmd::LocalLd {
+                pat: Pattern2D::rect(0, 1, 3, 3, 4),
+                port: 0,
+                reuse: None,
+                masked, rmw: None,
+            });
+            lane.queue.push_back(Cmd::ConstSt {
+                pat: ConstPattern::scalar(1.0, 4),
+                port: 1,
+            });
+            lane.queue.push_back(Cmd::LocalSt {
+                pat: Pattern2D::rect(64, 1, 3, 3, 4),
+                port: 0,
+                rmw: false,
+            });
+            run_lane_until_idle(&mut lane, 1000)
+        };
+        let fast = build(true);
+        let slow = build(false);
+        assert!(slow > fast, "masking must save cycles: {slow} vs {fast}");
+    }
+
+    #[test]
+    fn barrier_orders_spad_streams() {
+        let mut lane = Lane::new(0, 256);
+        lane.spad.load_slice(0, &[1.0, 2.0, 3.0, 4.0]);
+        lane.queue.push_back(Cmd::Configure(scale_config()));
+        lane.queue.push_back(Cmd::LocalLd {
+            pat: Pattern2D::lin(0, 4),
+            port: 0,
+            reuse: None,
+            masked: true, rmw: None,
+        });
+        lane.queue.push_back(Cmd::ConstSt {
+            pat: ConstPattern::scalar(3.0, 1),
+            port: 1,
+        });
+        lane.queue.push_back(Cmd::LocalSt { pat: Pattern2D::lin(0, 4), port: 0, rmw: false });
+        lane.queue.push_back(Cmd::Barrier);
+        // After the barrier, re-read the (updated) values.
+        lane.queue.push_back(Cmd::LocalLd {
+            pat: Pattern2D::lin(0, 4),
+            port: 0,
+            reuse: None,
+            masked: true, rmw: None,
+        });
+        lane.queue.push_back(Cmd::ConstSt {
+            pat: ConstPattern::scalar(10.0, 1),
+            port: 1,
+        });
+        lane.queue.push_back(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false });
+        run_lane_until_idle(&mut lane, 1000);
+        assert_eq!(lane.spad.read_slice(8, 4), vec![30.0, 60.0, 90.0, 120.0]);
+    }
+
+    #[test]
+    fn scalar_reuse_feeds_many_vector_firings() {
+        let mut lane = Lane::new(0, 256);
+        let data: Vec<f64> = (0..8).map(|i| (i + 1) as f64).collect();
+        lane.spad.load_slice(0, &data);
+        lane.queue.push_back(Cmd::Configure(scale_config()));
+        lane.queue.push_back(Cmd::LocalLd {
+            pat: Pattern2D::lin(0, 8),
+            port: 0,
+            reuse: None,
+            masked: true, rmw: None,
+        });
+        // One scalar (5.0) reused for all 8 elements (2 firings of 4).
+        lane.queue.push_back(Cmd::LocalLd {
+            pat: Pattern2D::lin(16, 1),
+            port: 1,
+            reuse: Some(Reuse::uniform(8.0)),
+            masked: true, rmw: None,
+        });
+        lane.spad.write(16, 5.0);
+        lane.queue.push_back(Cmd::LocalSt { pat: Pattern2D::lin(32, 8), port: 0, rmw: false });
+        run_lane_until_idle(&mut lane, 500);
+        let got = lane.spad.read_slice(32, 8);
+        let want: Vec<f64> = (0..8).map(|i| (i + 1) as f64 * 5.0).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn reconfiguration_requires_drain_and_costs_cycles() {
+        let mut lane = Lane::new(0, 64);
+        let cfg = scale_config();
+        lane.queue.push_back(Cmd::Configure(cfg.clone()));
+        let t1 = run_lane_until_idle(&mut lane, 200);
+        assert!(t1 >= cfg.config_cycles(), "config applies over cycles");
+        // Second configure goes through drain path again.
+        lane.queue.push_back(Cmd::Configure(cfg));
+        run_lane_until_idle(&mut lane, 200);
+        assert!(lane.config().is_some());
+    }
+}

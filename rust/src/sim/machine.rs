@@ -1,0 +1,752 @@
+//! Whole-unit simulator: one Von Neumann control core driving up to 8
+//! lanes via vector-stream commands (paper Fig 14), plus the machine-
+//! arbitrated resources — the XFER unit's inter-lane 512-bit bus and the
+//! shared-scratchpad bus.
+
+use std::collections::VecDeque;
+
+use super::cursor::StreamCursor;
+use super::lane::{ExtBusy, Lane, LaneEvent};
+use super::spad::{Spad, LINE_WORDS};
+use super::stats::{Bucket, Stats};
+use crate::isa::{Cmd, LaneMask, Pattern2D, Program, Reuse, VsCommand, XferDst};
+
+/// Hardware parameters of one REVEL unit (paper Table 3 defaults).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub lanes: usize,
+    /// Local scratchpad words (8KB of 32-bit words).
+    pub lane_spad_words: usize,
+    /// Shared scratchpad words (128KB of 32-bit words).
+    pub shared_words: usize,
+    /// Watchdog: abort (deadlock diagnostics) after this many cycles.
+    pub max_cycles: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            lanes: 8,
+            lane_spad_words: 2048,
+            shared_words: 32768,
+            // Real workload runs finish in well under 1M cycles; the
+            // watchdog exists to turn program bugs into diagnostics.
+            max_cycles: std::env::var("REVEL_MAX_CYCLES")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(3_000_000),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub enum SimError {
+    /// The watchdog fired; carries a human-readable deadlock snapshot.
+    Deadlock(String),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Deadlock(s) => write!(f, "simulation deadlock/timeout: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// An active XFER stream (machine-level: may cross lanes).
+#[derive(Clone, Debug)]
+struct XferStream {
+    src_lane: usize,
+    src_port: usize,
+    /// Destination (lane, port) list; >1 entry = broadcast (serialized).
+    dsts: Vec<(usize, usize)>,
+    /// Next destination index for the current head instance.
+    dst_idx: usize,
+    /// Instances left to transfer.
+    remaining: i64,
+}
+
+/// An active shared-scratchpad stream.
+#[derive(Clone, Debug)]
+struct SharedStream {
+    lane: usize,
+    /// Pattern over the far side (shared for loads, local for stores).
+    cur: StreamCursor,
+    /// Packed destination base (local for loads, shared for stores).
+    dst_base: i64,
+    moved: i64,
+    is_load: bool,
+}
+
+/// Control-core state machine.
+enum CtrlState {
+    /// Computing parameters of the command at `pc`; done at `until`.
+    Computing { until: u64, cmd: VsCommand },
+    /// Parameters ready; broadcasting (may stall on full lane queues).
+    Broadcasting { cmd: VsCommand },
+    /// `Wait` issued: blocked until masked lanes are inactive.
+    Waiting { mask: LaneMask },
+    /// Between commands (fetch next at the following edge).
+    Fetch,
+}
+
+pub struct Machine {
+    pub cfg: SimConfig,
+    pub lanes: Vec<Lane>,
+    pub shared: Spad,
+    pub stats: Stats,
+    now: u64,
+    prog: VecDeque<VsCommand>,
+    ctrl: CtrlState,
+    xfers: Vec<XferStream>,
+    shareds: Vec<SharedStream>,
+}
+
+impl Machine {
+    pub fn new(cfg: SimConfig) -> Self {
+        let lanes =
+            (0..cfg.lanes).map(|i| Lane::new(i, cfg.lane_spad_words)).collect();
+        Self {
+            shared: Spad::new(cfg.shared_words),
+            lanes,
+            cfg,
+            stats: Stats::default(),
+            now: 0,
+            prog: VecDeque::new(),
+            ctrl: CtrlState::Fetch,
+            xfers: Vec::new(),
+            shareds: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Run a control program to completion; cycle counts accumulate into
+    /// `stats` (callers may run several programs back to back).
+    pub fn run(&mut self, prog: Program) -> Result<&Stats, SimError> {
+        self.prog = prog.into();
+        self.ctrl = CtrlState::Fetch;
+        let deadline = self.now + self.cfg.max_cycles;
+        while !self.finished() {
+            if self.now >= deadline {
+                return Err(SimError::Deadlock(self.snapshot()));
+            }
+            self.tick();
+        }
+        self.stats.cycles = self.now;
+        Ok(&self.stats)
+    }
+
+    fn finished(&self) -> bool {
+        self.prog.is_empty()
+            && matches!(self.ctrl, CtrlState::Fetch)
+            && self.xfers.is_empty()
+            && self.shareds.is_empty()
+            && self.lanes.iter().all(|l| l.local_idle())
+    }
+
+    fn ext_busy(&self, lane: usize) -> ExtBusy {
+        ExtBusy {
+            shared_active: self.shareds.iter().any(|s| s.lane == lane),
+            xfer_src_active: self.xfers.iter().any(|x| x.src_lane == lane),
+            xfer_dst_active: self
+                .xfers
+                .iter()
+                .any(|x| x.dsts.iter().any(|&(l, _)| l == lane)),
+        }
+    }
+
+    fn lane_inactive(&self, lane: usize) -> bool {
+        self.lanes[lane].local_idle() && !self.ext_busy(lane).any()
+    }
+
+    fn tick(&mut self) {
+        let now = self.now;
+        self.ctrl_step(now);
+        // Lane command issue (may start machine-level streams).
+        for l in 0..self.lanes.len() {
+            let ext = self.ext_busy(l);
+            if let Some(ev) = self.lanes[l].step_issue(now, ext) {
+                self.start_event(l, ev);
+            }
+        }
+        // Local SPAD/const streams.
+        for lane in &mut self.lanes {
+            lane.step_streams(now);
+        }
+        // Machine-arbitrated buses.
+        self.step_xfers(now);
+        self.step_shareds(now);
+        // Fabric firing + Fig-18 accounting.
+        let prog_live = !self.prog.is_empty() || !matches!(self.ctrl, CtrlState::Fetch);
+        for l in 0..self.lanes.len() {
+            let (ded, temp) = self.lanes[l].step_fire(now);
+            let bucket = self.classify(l, ded, temp, prog_live);
+            self.stats.add(bucket);
+        }
+        self.now += 1;
+        self.stats.cycles = self.now;
+    }
+
+    fn classify(&self, l: usize, ded: usize, temp: usize, prog_live: bool) -> Bucket {
+        let lane = &self.lanes[l];
+        if ded + temp >= 2 {
+            Bucket::MultiIssue
+        } else if ded == 1 {
+            Bucket::Issue
+        } else if temp == 1 {
+            Bucket::Temporal
+        } else if lane.flags.drain {
+            Bucket::Drain
+        } else if lane.flags.barrier {
+            Bucket::ScrBarrier
+        } else if lane.flags.spad_contention {
+            Bucket::ScrBw
+        } else if lane.has_local_work() || self.ext_busy(l).any() {
+            Bucket::StreamDpd
+        } else if prog_live {
+            Bucket::CtrlOvhd
+        } else {
+            Bucket::Done
+        }
+    }
+
+    // ---- Control core ---------------------------------------------------
+
+    fn ctrl_step(&mut self, now: u64) {
+        loop {
+            match &self.ctrl {
+                CtrlState::Fetch => {
+                    let Some(cmd) = self.prog.pop_front() else { return };
+                    let cost = cmd.ctrl_cost();
+                    self.stats.commands += 1;
+                    self.stats.ctrl_core_cycles += cost;
+                    self.ctrl = CtrlState::Computing { until: now + cost, cmd };
+                    return;
+                }
+                CtrlState::Computing { until, cmd } => {
+                    if now < *until {
+                        return;
+                    }
+                    self.ctrl = CtrlState::Broadcasting { cmd: cmd.clone() };
+                }
+                CtrlState::Broadcasting { cmd } => {
+                    let cmd = cmd.clone();
+                    if matches!(cmd.cmd, Cmd::Wait) {
+                        self.ctrl = CtrlState::Waiting { mask: cmd.lanes };
+                        return;
+                    }
+                    // All masked lanes need queue space (broadcast bus).
+                    let targets: Vec<usize> =
+                        cmd.lanes.lanes().filter(|&l| l < self.lanes.len()).collect();
+                    if !targets.iter().all(|&l| self.lanes[l].queue_has_space()) {
+                        return; // stall; retry next cycle
+                    }
+                    for &l in &targets {
+                        let c = instantiate(&cmd, l);
+                        self.lanes[l].queue.push_back(c);
+                    }
+                    self.ctrl = CtrlState::Fetch;
+                    return; // one broadcast per cycle
+                }
+                CtrlState::Waiting { mask } => {
+                    let mask = *mask;
+                    let done = mask
+                        .lanes()
+                        .filter(|&l| l < self.lanes.len())
+                        .all(|l| self.lane_inactive(l));
+                    if !done {
+                        return;
+                    }
+                    self.ctrl = CtrlState::Fetch;
+                }
+            }
+        }
+    }
+
+    // ---- Machine-level streams -------------------------------------------
+
+    fn start_event(&mut self, l: usize, ev: LaneEvent) {
+        match ev {
+            LaneEvent::StartXfer { src_port, dst_port, dst, n, reuse } => {
+                let dsts: Vec<(usize, usize)> = match dst {
+                    XferDst::Local => vec![(l, dst_port)],
+                    XferDst::Lane(off) => {
+                        let nl = self.lanes.len() as i64;
+                        let d = ((l as i64 + off as i64).rem_euclid(nl)) as usize;
+                        vec![(d, dst_port)]
+                    }
+                    XferDst::Bcast(mask) => mask
+                        .lanes()
+                        .filter(|&m| m < self.lanes.len())
+                        .map(|m| (m, dst_port))
+                        .collect(),
+                };
+                for &(dl, dp) in &dsts {
+                    self.lanes[dl].in_ports[dp].busy = true;
+                    self.lanes[dl].in_ports[dp].push_reuse(reuse, n);
+                }
+                self.xfers.push(XferStream {
+                    src_lane: l,
+                    src_port,
+                    dsts,
+                    dst_idx: 0,
+                    remaining: n,
+                });
+            }
+            LaneEvent::StartSharedLd { pat, shared_addr, local_addr } => {
+                let mut pat = pat;
+                pat.start += shared_addr;
+                self.shareds.push(SharedStream {
+                    lane: l,
+                    cur: StreamCursor::new(pat),
+                    dst_base: local_addr,
+                    moved: 0,
+                    is_load: true,
+                });
+            }
+            LaneEvent::StartSharedSt { pat, local_addr, shared_addr } => {
+                let mut pat = pat;
+                pat.start += local_addr;
+                self.shareds.push(SharedStream {
+                    lane: l,
+                    cur: StreamCursor::new(pat),
+                    dst_base: shared_addr,
+                    moved: 0,
+                    is_load: false,
+                });
+            }
+        }
+    }
+
+    /// XFER arbitration: each lane's local bus moves one instance per
+    /// cycle; the inter-lane 512-bit bus carries one transfer per cycle
+    /// machine-wide (paper Table 3).
+    fn step_xfers(&mut self, now: u64) {
+        let mut global_budget = 1usize;
+        let mut local_busy = vec![false; self.lanes.len()];
+        let mut done: Vec<usize> = Vec::new();
+        for (xi, x) in self.xfers.iter_mut().enumerate() {
+            if x.remaining == 0 {
+                done.push(xi);
+                continue;
+            }
+            let (dl, dp) = x.dsts[x.dst_idx];
+            let is_local = dl == x.src_lane;
+            if is_local {
+                if local_busy[x.src_lane] {
+                    continue;
+                }
+            } else if global_budget == 0 {
+                continue;
+            }
+            // Source head ready and destination space?
+            let Some(val) = self.lanes[x.src_lane].out_ports[x.src_port]
+                .head_ready(now)
+                .cloned()
+            else {
+                continue;
+            };
+            if !self.lanes[dl].in_ports[dp].has_space() {
+                continue;
+            }
+            self.lanes[dl].in_ports[dp].push(val, now + 1);
+            self.stats.xfer_elems += 1;
+            if is_local {
+                local_busy[x.src_lane] = true;
+            } else {
+                global_budget -= 1;
+            }
+            x.dst_idx += 1;
+            if x.dst_idx == x.dsts.len() {
+                x.dst_idx = 0;
+                self.lanes[x.src_lane].out_ports[x.src_port].pop();
+                x.remaining -= 1;
+                if x.remaining == 0 {
+                    done.push(xi);
+                }
+            }
+        }
+        for &xi in done.iter().rev() {
+            let x = self.xfers.remove(xi);
+            self.lanes[x.src_lane].out_ports[x.src_port].busy = false;
+            for &(dl, dp) in &x.dsts {
+                self.lanes[dl].in_ports[dp].busy = false;
+            }
+        }
+    }
+
+    /// Shared-scratchpad bus: one lane's stream served per cycle, up to
+    /// one 512-bit line (16 words).
+    fn step_shareds(&mut self, _now: u64) {
+        let Some(s) = self.shareds.first_mut() else { return };
+        let mut moved_now = 0usize;
+        while moved_now < LINE_WORDS && !s.cur.done() {
+            let k = s.cur.remaining_in_row().min((LINE_WORDS - moved_now) as i64);
+            let addrs = s.cur.take(k);
+            for a in addrs {
+                let dst = s.dst_base + s.moved;
+                if s.is_load {
+                    let v = self.shared.read(a);
+                    self.lanes[s.lane].spad.write(dst, v);
+                } else {
+                    let v = self.lanes[s.lane].spad.read(a);
+                    self.shared.write(dst, v);
+                }
+                s.moved += 1;
+                moved_now += 1;
+            }
+        }
+        self.stats.spad_words += moved_now as u64;
+        if s.cur.done() {
+            self.shareds.remove(0);
+        }
+    }
+
+    fn snapshot(&self) -> String {
+        let mut s = format!(
+            "cycle {}: prog left {}, xfers {}, shareds {}\n",
+            self.now,
+            self.prog.len(),
+            self.xfers.len(),
+            self.shareds.len()
+        );
+        for l in &self.lanes {
+            if !l.local_idle() {
+                s.push_str(&format!(
+                    "  lane {}: queue {} head {:?}\n",
+                    l.id,
+                    l.queue.len(),
+                    l.queue.front().map(cmd_name),
+                ));
+                s.push_str(&l.stream_debug());
+                for (qi, c) in l.queue.iter().enumerate().take(8) {
+                    s.push_str(&format!("      q[{qi}] {}\n", cmd_name(c)));
+                }
+                for (i, p) in l.in_ports.iter().enumerate() {
+                    if !p.is_empty() || p.busy {
+                        s.push_str(&format!(
+                            "    in[{i}]: len {} busy {}\n",
+                            p.len(),
+                            p.busy
+                        ));
+                    }
+                }
+                for (i, p) in l.out_ports.iter().enumerate() {
+                    if !p.is_empty() || p.busy {
+                        s.push_str(&format!(
+                            "    out[{i}]: len {} busy {}\n",
+                            p.len(),
+                            p.busy
+                        ));
+                    }
+                }
+            }
+        }
+        s
+    }
+}
+
+fn cmd_name(c: &Cmd) -> &'static str {
+    match c {
+        Cmd::Configure(_) => "Configure",
+        Cmd::LocalLd { .. } => "LocalLd",
+        Cmd::LocalSt { .. } => "LocalSt",
+        Cmd::ConstSt { .. } => "ConstSt",
+        Cmd::Xfer { .. } => "Xfer",
+        Cmd::SharedLd { .. } => "SharedLd",
+        Cmd::SharedSt { .. } => "SharedSt",
+        Cmd::Barrier => "Barrier",
+        Cmd::Wait => "Wait",
+    }
+}
+
+/// Apply the per-lane address stride (vector-stream control: one command,
+/// per-lane offsets) when delivering a broadcast command to lane `l`.
+fn instantiate(cmd: &VsCommand, l: usize) -> Cmd {
+    let off = cmd.lane_stride * l as i64;
+    let mut c = cmd.cmd.clone();
+    if off != 0 {
+        match &mut c {
+            Cmd::LocalLd { pat, .. } | Cmd::LocalSt { pat, .. } => pat.start += off,
+            Cmd::SharedLd { shared_addr, .. } => *shared_addr += off,
+            Cmd::SharedSt { shared_addr, .. } => *shared_addr += off,
+            _ => {}
+        }
+    }
+    c
+}
+
+/// Convenience: lane-masked command without stride.
+pub fn vs(cmd: Cmd, lanes: LaneMask) -> VsCommand {
+    VsCommand::new(cmd, lanes)
+}
+
+/// Convenience: a full-width local load with masking on.
+pub fn ld(pat: Pattern2D, port: usize) -> Cmd {
+    Cmd::LocalLd { pat, port, reuse: None, masked: true, rmw: None }
+}
+
+/// Convenience: local load with reuse.
+pub fn ld_reuse(pat: Pattern2D, port: usize, reuse: Reuse) -> Cmd {
+    Cmd::LocalLd { pat, port, reuse: Some(reuse), masked: true, rmw: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CompileOptions, Configured, FabricSpec};
+    use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op};
+    use crate::isa::ConstPattern;
+
+    fn scale_cfg() -> std::sync::Arc<Configured> {
+        let mut b = DfgBuilder::new("scale", Criticality::Critical);
+        let x = b.in_port(0, 4);
+        let s = b.in_port(1, 1);
+        let y = b.node(Op::Mul, &[x, s]);
+        b.out(0, y, 4);
+        Configured::new(
+            LaneConfig { name: "scale".into(), dfgs: vec![b.build()] },
+            &FabricSpec::default_revel(),
+            &CompileOptions::default(),
+        )
+        .unwrap()
+    }
+
+    /// sqrt dataflow for XFER tests: out = sqrt(in).
+    fn sqrt_cfg() -> std::sync::Arc<Configured> {
+        let mut b = DfgBuilder::new("sqrt", Criticality::NonCritical);
+        let x = b.in_port(2, 1);
+        let y = b.node(Op::Sqrt, &[x]);
+        b.out(2, y, 1);
+        let mut m = DfgBuilder::new("scale", Criticality::Critical);
+        let v = m.in_port(0, 4);
+        let s = m.in_port(1, 1);
+        let p = m.node(Op::Mul, &[v, s]);
+        m.out(0, p, 4);
+        Configured::new(
+            LaneConfig { name: "sq".into(), dfgs: vec![b.build(), m.build()] },
+            &FabricSpec::default_revel(),
+            &CompileOptions::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_lane_program_runs_to_completion() {
+        let mut m = Machine::new(SimConfig { lanes: 1, ..Default::default() });
+        m.lanes[0].spad.load_slice(0, &[1.0, 2.0, 3.0, 4.0]);
+        let one = LaneMask::one(0);
+        let prog: Program = vec![
+            vs(Cmd::Configure(scale_cfg()), one),
+            vs(ld(Pattern2D::lin(0, 4), 0), one),
+            vs(Cmd::ConstSt { pat: ConstPattern::scalar(2.0, 1), port: 1 }, one),
+            vs(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false }, one),
+            vs(Cmd::Wait, one),
+        ];
+        let stats = m.run(prog).unwrap();
+        assert!(stats.cycles > 0);
+        assert_eq!(m.lanes[0].spad.read_slice(8, 4), vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(m.stats.commands, 5);
+    }
+
+    #[test]
+    fn vector_stream_control_broadcasts_with_lane_stride() {
+        // 4 lanes each scale their own slice of a shared array by 3.
+        let mut m = Machine::new(SimConfig { lanes: 4, ..Default::default() });
+        for (l, lane) in m.lanes.iter_mut().enumerate() {
+            lane.spad.load_slice(0, &[(l + 1) as f64; 4]);
+        }
+        let all4 = LaneMask::first_n(4);
+        let prog: Program = vec![
+            vs(Cmd::Configure(scale_cfg()), all4),
+            vs(ld(Pattern2D::lin(0, 4), 0), all4),
+            vs(Cmd::ConstSt { pat: ConstPattern::scalar(3.0, 1), port: 1 }, all4),
+            vs(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false }, all4),
+            vs(Cmd::Wait, all4),
+        ];
+        m.run(prog).unwrap();
+        for l in 0..4 {
+            assert_eq!(m.lanes[l].spad.read_slice(8, 4), vec![3.0 * (l + 1) as f64; 4]);
+        }
+        // One command set, 4 lanes: control cycles amortized.
+        assert_eq!(m.stats.commands, 5);
+    }
+
+    #[test]
+    fn xfer_local_connects_dataflows() {
+        // sqrt dataflow output feeds the scale dataflow's scalar input.
+        let mut m = Machine::new(SimConfig { lanes: 1, ..Default::default() });
+        m.lanes[0].spad.load_slice(0, &[1.0, 2.0, 3.0, 4.0]);
+        m.lanes[0].spad.write(16, 9.0);
+        let one = LaneMask::one(0);
+        let prog: Program = vec![
+            vs(Cmd::Configure(sqrt_cfg()), one),
+            vs(ld(Pattern2D::lin(16, 1), 2), one), // 9.0 -> sqrt dfg
+            vs(
+                Cmd::Xfer {
+                    src_port: 2,
+                    dst_port: 1,
+                    dst: XferDst::Local,
+                    n: 1,
+                    reuse: Some(Reuse::uniform(4.0)),
+                },
+                one,
+            ),
+            vs(ld(Pattern2D::lin(0, 4), 0), one),
+            vs(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false }, one),
+            vs(Cmd::Wait, one),
+        ];
+        m.run(prog).unwrap();
+        assert_eq!(m.lanes[0].spad.read_slice(8, 4), vec![3.0, 6.0, 9.0, 12.0]);
+        assert!(m.stats.xfer_elems >= 1);
+    }
+
+    #[test]
+    fn xfer_remote_moves_data_between_lanes() {
+        // Lane 0 computes sqrt(16)=4, sends it to lane 1's scale input.
+        let mut m = Machine::new(SimConfig { lanes: 2, ..Default::default() });
+        m.lanes[0].spad.write(16, 16.0);
+        m.lanes[1].spad.load_slice(0, &[1.0, 2.0, 3.0, 4.0]);
+        let l0 = LaneMask::one(0);
+        let l1 = LaneMask::one(1);
+        let prog: Program = vec![
+            vs(Cmd::Configure(sqrt_cfg()), LaneMask::first_n(2)),
+            vs(ld(Pattern2D::lin(16, 1), 2), l0),
+            vs(
+                Cmd::Xfer {
+                    src_port: 2,
+                    dst_port: 1,
+                    dst: XferDst::Lane(1),
+                    n: 1,
+                    reuse: Some(Reuse::uniform(4.0)),
+                },
+                l0,
+            ),
+            vs(ld(Pattern2D::lin(0, 4), 0), l1),
+            vs(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false }, l1),
+            vs(Cmd::Wait, LaneMask::first_n(2)),
+        ];
+        m.run(prog).unwrap();
+        assert_eq!(m.lanes[1].spad.read_slice(8, 4), vec![4.0, 8.0, 12.0, 16.0]);
+    }
+
+    #[test]
+    fn xfer_broadcast_replicates_to_all_lanes() {
+        let lanes = 4;
+        let mut m = Machine::new(SimConfig { lanes, ..Default::default() });
+        m.lanes[0].spad.write(16, 25.0);
+        for l in 0..lanes {
+            m.lanes[l].spad.load_slice(0, &[l as f64 + 1.0; 4]);
+        }
+        let l0 = LaneMask::one(0);
+        let all = LaneMask::first_n(lanes);
+        let prog: Program = vec![
+            vs(Cmd::Configure(sqrt_cfg()), all),
+            vs(ld(Pattern2D::lin(16, 1), 2), l0),
+            vs(
+                Cmd::Xfer {
+                    src_port: 2,
+                    dst_port: 1,
+                    dst: XferDst::Bcast(all),
+                    n: 1,
+                    reuse: Some(Reuse::uniform(4.0)),
+                },
+                l0,
+            ),
+            vs(ld(Pattern2D::lin(0, 4), 0), all),
+            vs(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false }, all),
+            vs(Cmd::Wait, all),
+        ];
+        m.run(prog).unwrap();
+        for l in 0..lanes {
+            assert_eq!(
+                m.lanes[l].spad.read_slice(8, 4),
+                vec![5.0 * (l as f64 + 1.0); 4],
+                "lane {l}"
+            );
+        }
+    }
+
+    #[test]
+    fn shared_spad_roundtrip() {
+        let mut m = Machine::new(SimConfig { lanes: 2, ..Default::default() });
+        let data: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        m.shared.load_slice(100, &data);
+        let all = LaneMask::first_n(2);
+        // Each lane loads its half (stride 16), doubles it via scale,
+        // stores back to shared at 200.
+        let prog: Program = vec![
+            vs(Cmd::Configure(scale_cfg()), all),
+            VsCommand::with_stride(
+                Cmd::SharedLd {
+                    pat: Pattern2D::lin(0, 16),
+                    shared_addr: 100,
+                    local_addr: 0,
+                },
+                all,
+                16,
+            ),
+            vs(Cmd::Barrier, all),
+            vs(ld(Pattern2D::lin(0, 16), 0), all),
+            vs(Cmd::ConstSt { pat: ConstPattern::scalar(2.0, 4), port: 1 }, all),
+            vs(Cmd::LocalSt { pat: Pattern2D::lin(32, 16), port: 0, rmw: false }, all),
+            vs(Cmd::Barrier, all),
+            VsCommand::with_stride(
+                Cmd::SharedSt {
+                    pat: Pattern2D::lin(32, 16),
+                    local_addr: 0,
+                    shared_addr: 200,
+                },
+                all,
+                16,
+            ),
+            vs(Cmd::Wait, all),
+        ];
+        m.run(prog).unwrap();
+        for i in 0..32 {
+            assert_eq!(m.shared.read(200 + i), 2.0 * i as f64, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn deadlock_is_reported_not_hung() {
+        let mut m = Machine::new(SimConfig {
+            lanes: 1,
+            max_cycles: 10_000,
+            ..Default::default()
+        });
+        let one = LaneMask::one(0);
+        // Store from an out port that never receives data.
+        let prog: Program = vec![
+            vs(Cmd::Configure(scale_cfg()), one),
+            vs(Cmd::LocalSt { pat: Pattern2D::lin(0, 4), port: 0, rmw: false }, one),
+            vs(Cmd::Wait, one),
+        ];
+        let err = m.run(prog).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("deadlock"), "{msg}");
+    }
+
+    #[test]
+    fn fig18_buckets_cover_all_cycles() {
+        let mut m = Machine::new(SimConfig { lanes: 1, ..Default::default() });
+        m.lanes[0].spad.load_slice(0, &[4.0; 16]);
+        let one = LaneMask::one(0);
+        let prog: Program = vec![
+            vs(Cmd::Configure(scale_cfg()), one),
+            vs(ld(Pattern2D::lin(0, 16), 0), one),
+            vs(Cmd::ConstSt { pat: ConstPattern::scalar(0.5, 4), port: 1 }, one),
+            vs(Cmd::LocalSt { pat: Pattern2D::lin(16, 16), port: 0, rmw: false }, one),
+            vs(Cmd::Wait, one),
+        ];
+        m.run(prog).unwrap();
+        let total: u64 = m.stats.lane_cycles.iter().sum();
+        assert_eq!(total, m.stats.cycles * 1, "every lane-cycle bucketed");
+        assert!(m.stats.get(Bucket::Issue) > 0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Cycle-level, functional + timing simulator of a REVEL unit (paper §6).
+//!
+//! The simulator executes real values: every port carries `f64` vectors,
+//! dataflows compute them, and workload outputs are checked against the
+//! in-crate linear-algebra reference and the PJRT golden model. Timing
+//! follows the microarchitecture of Figure 14 with the Table 3 parameters:
+//!
+//! * a single-issue control core computes command parameters and
+//!   broadcasts them to the lanes selected by each command's bitmask;
+//! * each lane has an 8-entry command queue, an 8-entry stream table,
+//!   a single-bank scratchpad serving one load stream and one store
+//!   stream line per cycle, vector ports with configurable reuse and
+//!   predication FIFOs, an XFER unit, and the heterogeneous fabric;
+//! * dedicated dataflows fire fully pipelined (II limited by unpipelined
+//!   sqrt/div FUs); the temporal region retires one dataflow firing per
+//!   cycle across its tiles;
+//! * every lane-cycle lands in exactly one Fig-18 accounting bucket.
+
+pub mod cursor;
+pub mod lane;
+pub mod machine;
+pub mod port;
+pub mod spad;
+pub mod stats;
+
+pub use cursor::{ConstCursor, StreamCursor};
+pub use lane::{Lane, LaneEvent};
+pub use machine::{Machine, SimConfig, SimError};
+pub use spad::Spad;
+pub use stats::{Bucket, Stats, BUCKETS};

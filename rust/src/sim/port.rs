@@ -1,0 +1,238 @@
+//! Vector ports: FIFOs between streams and the compute fabric, with
+//! configurable data reuse and the predication FIFO for implicit vector
+//! masking (paper §6.1 "Input/Output Ports", §6.2).
+
+use std::collections::VecDeque;
+
+use crate::dataflow::VecVal;
+use crate::isa::Reuse;
+
+/// Physical input-port widths per lane, in 32-bit words.
+/// Paper Table 3 lists 2x512, 2x256, 1x128, 1x64-bit vector ports plus
+/// scalar ports; we provision 12 ports so the QR/SVD mappings (9-10
+/// live ports) fit — the area model keeps the Table 6 port budget.
+pub const IN_PORT_WIDTHS: [usize; 12] = [16, 16, 8, 8, 4, 2, 1, 1, 4, 4, 1, 1];
+/// Output ports mirror the input widths.
+pub const OUT_PORT_WIDTHS: [usize; 12] = [16, 16, 8, 8, 4, 2, 1, 1, 4, 4, 1, 1];
+
+/// FIFO depth per port (Table 3: 4-entry FIFO + configurable reuse).
+pub const PORT_FIFO_DEPTH: usize = 4;
+
+/// One FIFO entry: a vector instance plus the cycle it becomes visible
+/// (pipeline latency for out-ports; scalarization penalty for unmasked
+/// partial vectors on in-ports).
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub val: VecVal,
+    pub ready: u64,
+}
+
+/// Reuse bookkeeping: one config per *stream*, applied to that stream's
+/// entries in arrival order. Streams to the same port never interleave
+/// (the scoreboard serializes them), but a later stream's config must
+/// not clobber the budgets of earlier entries still in the FIFO — hence
+/// a queue of (config, elements remaining under that config).
+#[derive(Clone, Debug, Default)]
+struct ReuseState {
+    /// (cfg, entries governed). Front = config of the current head.
+    queue: VecDeque<(Option<Reuse>, i64)>,
+    /// Index of the current head element within its stream (t).
+    elem_idx: i64,
+    /// Data elements' worth consumed from the head so far.
+    consumed: i64,
+}
+
+impl ReuseState {
+    fn head_cfg(&self) -> Option<Reuse> {
+        self.queue.front().and_then(|(c, _)| *c)
+    }
+
+    /// Advance past one popped entry.
+    fn advance(&mut self) {
+        self.elem_idx += 1;
+        self.consumed = 0;
+        if let Some((_, left)) = self.queue.front_mut() {
+            *left -= 1;
+            if *left == 0 {
+                self.queue.pop_front();
+                self.elem_idx = 0;
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct InPort {
+    pub fifo: VecDeque<Entry>,
+    reuse: ReuseState,
+    /// Scoreboard: an active stream owns this port (commands wait).
+    pub busy: bool,
+}
+
+impl InPort {
+    /// Register the reuse config for a stream about to deliver `elems`
+    /// entries to this port.
+    pub fn push_reuse(&mut self, cfg: Option<Reuse>, elems: i64) {
+        if elems > 0 {
+            self.reuse.queue.push_back((cfg, elems));
+        }
+    }
+
+    /// Back-compat helper: replace all reuse state (used when the port
+    /// is known to be drained).
+    pub fn set_reuse(&mut self, cfg: Option<Reuse>) {
+        self.reuse = ReuseState::default();
+        self.reuse.queue.push_back((cfg, i64::MAX));
+    }
+
+    pub fn has_space(&self) -> bool {
+        self.fifo.len() < PORT_FIFO_DEPTH
+    }
+
+    pub fn push(&mut self, val: VecVal, ready: u64) {
+        assert!(self.has_space(), "in-port overflow");
+        self.fifo.push_back(Entry { val, ready });
+    }
+
+    /// Head instance if visible at `now`.
+    pub fn head(&self, now: u64) -> Option<&VecVal> {
+        self.fifo.front().filter(|e| e.ready <= now).map(|e| &e.val)
+    }
+
+    /// Record one firing that presented the head to the fabric, consuming
+    /// `active` data elements' worth. Pops the head when its reuse budget
+    /// is exhausted (no-reuse ports pop immediately).
+    pub fn present(&mut self, active: usize) {
+        let Some(cfg) = self.reuse.head_cfg() else {
+            self.fifo.pop_front();
+            self.reuse.advance();
+            return;
+        };
+        self.reuse.consumed += active as i64;
+        let budget = cfg.count_at(self.reuse.elem_idx);
+        if self.reuse.consumed >= budget {
+            self.fifo.pop_front();
+            self.reuse.advance();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fifo.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.fifo.clear();
+        self.reuse = ReuseState::default();
+        self.busy = false;
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct OutPort {
+    pub fifo: VecDeque<Entry>,
+    pub busy: bool,
+}
+
+/// Out-port FIFO depth: covers pipeline in-flight instances.
+pub const OUT_FIFO_DEPTH: usize = 16;
+
+impl OutPort {
+    pub fn has_space(&self) -> bool {
+        self.fifo.len() < OUT_FIFO_DEPTH
+    }
+
+    pub fn push(&mut self, val: VecVal, ready: u64) {
+        assert!(self.has_space(), "out-port overflow");
+        // Pipeline ordering: entries become ready in push order because
+        // a DFG's depth is constant (the compiler equalizes delays).
+        self.fifo.push_back(Entry { val, ready });
+    }
+
+    pub fn head_ready(&self, now: u64) -> Option<&VecVal> {
+        self.fifo.front().filter(|e| e.ready <= now).map(|e| &e.val)
+    }
+
+    pub fn pop(&mut self) -> VecVal {
+        self.fifo.pop_front().expect("out-port underflow").val
+    }
+
+    /// Instances still in flight inside the pipeline (not yet visible).
+    pub fn in_flight(&self, now: u64) -> usize {
+        self.fifo.iter().filter(|e| e.ready > now).count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fifo.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.fifo.clear();
+        self.busy = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_reuse_pops_every_present() {
+        let mut p = InPort::default();
+        p.set_reuse(None);
+        p.push(VecVal::scalar(1.0), 0);
+        p.push(VecVal::scalar(2.0), 0);
+        assert_eq!(p.head(0).unwrap().vals[0], 1.0);
+        p.present(1);
+        assert_eq!(p.head(0).unwrap().vals[0], 2.0);
+    }
+
+    #[test]
+    fn reuse_counts_elements_with_stretch() {
+        // Solver x_j: element t reused (3 - t) times: 3, 2, 1.
+        let mut p = InPort::default();
+        p.set_reuse(Some(Reuse { n_r: 3.0, s_r: -1.0 }));
+        for v in [10.0, 20.0, 30.0] {
+            p.push(VecVal::scalar(v), 0);
+        }
+        // Element 0: three scalar presentations.
+        p.present(1);
+        p.present(1);
+        assert_eq!(p.head(0).unwrap().vals[0], 10.0);
+        p.present(1);
+        assert_eq!(p.head(0).unwrap().vals[0], 20.0);
+        // Element 1: one vector firing consuming 2 actives pops it.
+        p.present(2);
+        assert_eq!(p.head(0).unwrap().vals[0], 30.0);
+        p.present(1);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn ready_cycle_hides_entries() {
+        let mut p = InPort::default();
+        p.set_reuse(None);
+        p.push(VecVal::scalar(1.0), 5);
+        assert!(p.head(4).is_none());
+        assert!(p.head(5).is_some());
+    }
+
+    #[test]
+    fn out_port_pipeline_visibility() {
+        let mut o = OutPort::default();
+        o.push(VecVal::scalar(1.0), 10);
+        o.push(VecVal::scalar(2.0), 12);
+        assert!(o.head_ready(9).is_none());
+        assert_eq!(o.in_flight(9), 2);
+        assert_eq!(o.head_ready(10).unwrap().vals[0], 1.0);
+        assert_eq!(o.pop().vals[0], 1.0);
+        assert_eq!(o.in_flight(11), 1);
+    }
+}

@@ -1,0 +1,87 @@
+//! Scratchpad model: single-bank, 512-bit line, 1R/1W per cycle
+//! (paper Table 3). Words are 32-bit elements carried as f64 for
+//! numerical fidelity; a line holds LINE_WORDS of them.
+
+/// Words per 512-bit scratchpad line (32-bit elements).
+pub const LINE_WORDS: usize = 16;
+
+#[derive(Clone, Debug)]
+pub struct Spad {
+    pub words: Vec<f64>,
+}
+
+impl Spad {
+    pub fn new(words: usize) -> Self {
+        Self { words: vec![0.0; words] }
+    }
+
+    pub fn read(&self, addr: i64) -> f64 {
+        let a = addr as usize;
+        assert!(a < self.words.len(), "spad read OOB: {addr}");
+        self.words[a]
+    }
+
+    pub fn write(&mut self, addr: i64, v: f64) {
+        let a = addr as usize;
+        assert!(a < self.words.len(), "spad write OOB: {addr}");
+        self.words[a] = v;
+    }
+
+    pub fn load_slice(&mut self, addr: i64, data: &[f64]) {
+        for (k, &v) in data.iter().enumerate() {
+            self.write(addr + k as i64, v);
+        }
+    }
+
+    pub fn read_slice(&self, addr: i64, len: usize) -> Vec<f64> {
+        (0..len).map(|k| self.read(addr + k as i64)).collect()
+    }
+
+    /// How many pattern elements starting at `addr` with stride `c_i` fit
+    /// in one line access (the per-cycle gather width limit).
+    pub fn line_gather(addr: i64, c_i: i64) -> usize {
+        if c_i == 0 {
+            return LINE_WORDS; // broadcast of one word
+        }
+        let stride = c_i.unsigned_abs() as usize;
+        if stride >= LINE_WORDS {
+            1
+        } else {
+            // Elements per 16-word window at this stride, starting from
+            // the line containing addr.
+            let off = (addr.rem_euclid(LINE_WORDS as i64)) as usize;
+            let span = if c_i > 0 { LINE_WORDS - off } else { off + 1 };
+            (span + stride - 1) / stride
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut s = Spad::new(64);
+        s.write(3, 7.5);
+        assert_eq!(s.read(3), 7.5);
+        s.load_slice(10, &[1.0, 2.0, 3.0]);
+        assert_eq!(s.read_slice(10, 3), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn line_gather_respects_stride_and_alignment() {
+        assert_eq!(Spad::line_gather(0, 1), 16);
+        assert_eq!(Spad::line_gather(8, 1), 8); // mid-line start
+        assert_eq!(Spad::line_gather(0, 2), 8);
+        assert_eq!(Spad::line_gather(0, 16), 1);
+        assert_eq!(Spad::line_gather(0, 33), 1);
+        assert_eq!(Spad::line_gather(5, 0), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "OOB")]
+    fn oob_read_panics() {
+        Spad::new(4).read(4);
+    }
+}

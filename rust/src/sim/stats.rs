@@ -1,0 +1,129 @@
+//! Cycle accounting for the lane simulator — the categories of paper
+//! Fig 18. Every lane-cycle lands in exactly one bucket.
+
+/// Where a lane-cycle went (paper Fig 18 legend).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Bucket {
+    /// >= 2 dataflows fired this cycle.
+    MultiIssue,
+    /// Exactly one dedicated dataflow fired.
+    Issue,
+    /// Only a temporal dataflow fired.
+    Temporal,
+    /// Fabric pipeline draining / reconfiguration.
+    Drain,
+    /// Stream stalled on scratchpad bandwidth arbitration.
+    ScrBw,
+    /// Blocked on a scratchpad barrier.
+    ScrBarrier,
+    /// Waiting on a fine-grain dependence (upstream dataflow/stream).
+    StreamDpd,
+    /// Waiting on the control core (empty command queue).
+    CtrlOvhd,
+    /// Lane idle after completing all work (not plotted by the paper;
+    /// kept separate so the categories above sum to busy time).
+    Done,
+}
+
+pub const BUCKETS: [Bucket; 9] = [
+    Bucket::MultiIssue,
+    Bucket::Issue,
+    Bucket::Temporal,
+    Bucket::Drain,
+    Bucket::ScrBw,
+    Bucket::ScrBarrier,
+    Bucket::StreamDpd,
+    Bucket::CtrlOvhd,
+    Bucket::Done,
+];
+
+impl Bucket {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bucket::MultiIssue => "multi-issue",
+            Bucket::Issue => "issue",
+            Bucket::Temporal => "temporal",
+            Bucket::Drain => "drain",
+            Bucket::ScrBw => "scr-b/w",
+            Bucket::ScrBarrier => "scr-barrier",
+            Bucket::StreamDpd => "stream-dpd",
+            Bucket::CtrlOvhd => "ctrl-ovhd",
+            Bucket::Done => "done",
+        }
+    }
+}
+
+/// Aggregated run statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    /// Lane-cycle counts per bucket, indexed as BUCKETS.
+    pub lane_cycles: [u64; 9],
+    /// Total cycles the unit ran.
+    pub cycles: u64,
+    /// Dataflow firings (dedicated, temporal).
+    pub fires_dedicated: u64,
+    pub fires_temporal: u64,
+    /// Stream elements moved to/from scratchpads.
+    pub spad_words: u64,
+    /// Elements forwarded through XFER (fine-grain dependences).
+    pub xfer_elems: u64,
+    /// Commands issued by the control core.
+    pub commands: u64,
+    /// Cycles the control core spent computing command parameters.
+    pub ctrl_core_cycles: u64,
+}
+
+impl Stats {
+    pub fn add(&mut self, b: Bucket) {
+        self.lane_cycles[BUCKETS.iter().position(|&x| x == b).unwrap()] += 1;
+    }
+
+    pub fn get(&self, b: Bucket) -> u64 {
+        self.lane_cycles[BUCKETS.iter().position(|&x| x == b).unwrap()]
+    }
+
+    /// Fraction of active (non-Done) lane-cycles per bucket.
+    pub fn fractions(&self) -> Vec<(Bucket, f64)> {
+        let active: u64 = BUCKETS
+            .iter()
+            .filter(|&&b| b != Bucket::Done)
+            .map(|&b| self.get(b))
+            .sum();
+        BUCKETS
+            .iter()
+            .filter(|&&b| b != Bucket::Done)
+            .map(|&b| (b, self.get(b) as f64 / active.max(1) as f64))
+            .collect()
+    }
+
+    /// Busy fraction = cycles doing useful dataflow work.
+    pub fn utilization(&self) -> f64 {
+        let useful = self.get(Bucket::Issue)
+            + self.get(Bucket::MultiIssue)
+            + self.get(Bucket::Temporal);
+        let active: u64 = BUCKETS
+            .iter()
+            .filter(|&&b| b != Bucket::Done)
+            .map(|&b| self.get(b))
+            .sum();
+        useful as f64 / active.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_roundtrip_and_fractions_sum_to_one() {
+        let mut s = Stats::default();
+        s.add(Bucket::Issue);
+        s.add(Bucket::Issue);
+        s.add(Bucket::Drain);
+        s.add(Bucket::Done); // excluded from fractions
+        assert_eq!(s.get(Bucket::Issue), 2);
+        let total: f64 = s.fractions().iter().map(|(_, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!((s.utilization() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

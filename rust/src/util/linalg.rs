@@ -1,0 +1,340 @@
+//! Dense reference linear algebra (f64) used as the in-process oracle for
+//! the simulator's functional outputs. The AOT/PJRT golden path
+//! (runtime::Engine) is the cross-language oracle; this module is the fast
+//! in-crate one used inside unit/property tests.
+
+/// Row-major square/rectangular matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Deterministic well-conditioned SPD matrix; matches
+    /// python ref.make_spd structurally (not bit-identical — tests use it
+    /// only as an SPD generator, cross-checks pass explicit data).
+    pub fn spd(n: usize, seed: f64) -> Self {
+        let g = Self::from_fn(n, n, |i, j| {
+            (((i + 1) as f64) * ((j + 2) as f64) * 0.05 + seed).sin() * 0.9
+        });
+        let mut m = g.matmul(&g.transpose());
+        for i in 0..n {
+            m[(i, i)] += n as f64;
+        }
+        m
+    }
+
+    pub fn transpose(&self) -> Self {
+        Self::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    pub fn matmul(&self, other: &Self) -> Self {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Self::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Cholesky factor L (lower) of SPD `a`. Panics on non-SPD input.
+pub fn cholesky(a: &Mat) -> Mat {
+    let n = a.rows;
+    let mut l = a.clone();
+    for k in 0..n {
+        let d = l[(k, k)].sqrt();
+        assert!(d.is_finite() && d > 0.0, "matrix not SPD at pivot {k}");
+        l[(k, k)] = d;
+        for i in k + 1..n {
+            l[(i, k)] /= d;
+        }
+        for j in k + 1..n {
+            let ljk = l[(j, k)];
+            for i in j..n {
+                let v = l[(i, k)] * ljk;
+                l[(i, j)] -= v;
+            }
+        }
+    }
+    for i in 0..n {
+        for j in i + 1..n {
+            l[(i, j)] = 0.0;
+        }
+    }
+    l
+}
+
+/// Forward substitution: solve L x = b for lower-triangular L.
+pub fn fwd_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for j in 0..n {
+        let mut s = b[j];
+        for k in 0..j {
+            s -= l[(j, k)] * x[k];
+        }
+        x[j] = s / l[(j, j)];
+    }
+    x
+}
+
+/// Householder QR: returns (q, r).
+pub fn qr(a: &Mat) -> (Mat, Mat) {
+    let n = a.rows;
+    let mut r = a.clone();
+    let mut q = Mat::eye(n);
+    for k in 0..n {
+        let mut v = vec![0.0; n];
+        let mut norm2 = 0.0;
+        for i in k..n {
+            v[i] = r[(i, k)];
+            norm2 += v[i] * v[i];
+        }
+        let norm = norm2.sqrt();
+        if norm < 1e-300 {
+            continue;
+        }
+        let sign = if v[k] >= 0.0 { 1.0 } else { -1.0 };
+        v[k] += sign * norm;
+        let vn2: f64 = v.iter().map(|x| x * x).sum();
+        if vn2 < 1e-300 {
+            continue;
+        }
+        let inv = 2.0 / vn2;
+        // r -= inv * v (v^T r); q -= inv * (q v) v^T
+        for j in 0..n {
+            let dot: f64 = (k..n).map(|i| v[i] * r[(i, j)]).sum();
+            for i in k..n {
+                r[(i, j)] -= inv * v[i] * dot;
+            }
+        }
+        for i in 0..n {
+            let dot: f64 = (k..n).map(|j| q[(i, j)] * v[j]).sum();
+            for j in k..n {
+                q[(i, j)] -= inv * dot * v[j];
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Singular values via one-sided Jacobi (descending).
+pub fn svd_values(a: &Mat, sweeps: usize) -> Vec<f64> {
+    let n = a.rows;
+    let mut m = a.clone();
+    for _ in 0..sweeps {
+        for p in 0..n - 1 {
+            for q in p + 1..n {
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..n {
+                    app += m[(i, p)] * m[(i, p)];
+                    aqq += m[(i, q)] * m[(i, q)];
+                    apq += m[(i, p)] * m[(i, q)];
+                }
+                if apq.abs() <= 1e-14 * (app * aqq).sqrt() + 1e-300 {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..n {
+                    let vp = m[(i, p)];
+                    let vq = m[(i, q)];
+                    m[(i, p)] = c * vp - s * vq;
+                    m[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+    }
+    let mut vals: Vec<f64> = (0..n)
+        .map(|j| (0..n).map(|i| m[(i, j)] * m[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    vals
+}
+
+/// Correlation-form FIR: y[i] = sum_j h[j] x[i+j].
+pub fn fir(x: &[f64], h: &[f64]) -> Vec<f64> {
+    let n_out = x.len() + 1 - h.len();
+    (0..n_out)
+        .map(|i| h.iter().enumerate().map(|(j, &hj)| hj * x[i + j]).sum())
+        .collect()
+}
+
+/// Radix-2 DIT FFT, in-place on (re, im). len must be a power of two.
+pub fn fft(re: &mut [f64], im: &mut [f64]) {
+    let n = re.len();
+    assert!(n.is_power_of_two());
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * std::f64::consts::PI / len as f64;
+        for start in (0..n).step_by(len) {
+            for k in 0..len / 2 {
+                let (wr, wi) = ((ang * k as f64).cos(), (ang * k as f64).sin());
+                let (ur, ui) = (re[start + k], im[start + k]);
+                let (vr0, vi0) = (re[start + k + len / 2], im[start + k + len / 2]);
+                let vr = vr0 * wr - vi0 * wi;
+                let vi = vr0 * wi + vi0 * wr;
+                re[start + k] = ur + vr;
+                im[start + k] = ui + vi;
+                re[start + k + len / 2] = ur - vr;
+                im[start + k + len / 2] = ui - vi;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        for n in [4, 12, 16, 32] {
+            let a = Mat::spd(n, 0.0);
+            let l = cholesky(&a);
+            let llt = l.matmul(&l.transpose());
+            assert!(llt.max_abs_diff(&a) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solver_solves() {
+        let a = Mat::spd(8, 1.0);
+        let l = cholesky(&a);
+        let b: Vec<f64> = (0..8).map(|i| (i as f64 * 0.3).sin()).collect();
+        let x = fwd_solve(&l, &b);
+        for j in 0..8 {
+            let got: f64 = (0..8).map(|k| l[(j, k)] * x[k]).sum();
+            assert!((got - b[j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn qr_orthogonal_and_reconstructs() {
+        let a = Mat::spd(12, 2.0);
+        let (q, r) = qr(&a);
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-9);
+        assert!(q.transpose().matmul(&q).max_abs_diff(&Mat::eye(12)) < 1e-9);
+        for i in 0..12 {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_matches_eigen_of_gram() {
+        // For SPD a, singular values == eigenvalues; check via trace/frobenius.
+        let a = Mat::spd(8, 0.5);
+        let vals = svd_values(&a, 20);
+        let trace: f64 = (0..8).map(|i| a[(i, i)]).sum();
+        let fro2: f64 = a.data.iter().map(|x| x * x).sum();
+        let s1: f64 = vals.iter().sum();
+        let s2: f64 = vals.iter().map(|v| v * v).sum();
+        assert!((s1 - trace).abs() < 1e-6 * trace);
+        assert!((s2 - fro2).abs() < 1e-6 * fro2);
+        assert!(vals.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+    }
+
+    #[test]
+    fn fft_impulse_and_parseval() {
+        let n = 64;
+        let mut re = vec![0.0; n];
+        let mut im = vec![0.0; n];
+        re[0] = 1.0;
+        fft(&mut re, &mut im);
+        for i in 0..n {
+            assert!((re[i] - 1.0).abs() < 1e-12 && im[i].abs() < 1e-12);
+        }
+        // Parseval on a random-ish signal.
+        let mut re: Vec<f64> = (0..n).map(|i| ((i * 7) as f64 * 0.13).sin()).collect();
+        let mut im = vec![0.0; n];
+        let t2: f64 = re.iter().map(|x| x * x).sum();
+        fft(&mut re, &mut im);
+        let f2: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum();
+        assert!((f2 / n as f64 - t2).abs() < 1e-9 * t2.max(1.0));
+    }
+
+    #[test]
+    fn fir_matches_manual() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let h = vec![0.5, 0.25];
+        let y = fir(&x, &h);
+        assert_eq!(y.len(), 4);
+        assert!((y[0] - (0.5 + 0.5)).abs() < 1e-12);
+        assert!((y[3] - (2.0 + 1.25)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,42 @@
+//! Small shared utilities: deterministic RNG, statistics, linear algebra
+//! references used to validate the simulator's functional outputs.
+
+pub mod linalg;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+
+/// Geometric mean of positive values (paper reports geomeans throughout).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Ceiling division for unsigned sizes.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[4.0, 16.0]) - 8.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+        assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 4), 3);
+        assert_eq!(ceil_div(8, 4), 2);
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+}

@@ -1,0 +1,419 @@
+//! Cholesky decomposition (paper Fig 5 / Fig 13 — the running example).
+//! In-place right-looking factorization, three dataflow regions:
+//!
+//! * `point` (non-critical): inva = 1/sqrt(a_kk);
+//! * `vector` (critical): l_ik = a_ik * inva, i in [k..n);
+//! * `matrix` (critical): a_ij -= l_ik * l_jk over the trailing triangle.
+//!
+//! Fine-grain ordered dependences (all XFER, no memory round-trip):
+//! point -> vector (inva, reused n-k times), and the loop-carried path
+//! matrix -> {point, vector}: the *first column* of iteration k's
+//! trailing update is exactly iteration k+1's input column, so the
+//! matrix dataflow forwards it through two gated outputs (whole column
+//! at vector width; first element as the next a_kk). This is the
+//! Fig 2(c) region overlap: point/vector of k+1 execute while matrix k
+//! is still streaming.
+
+use std::sync::Arc;
+
+use super::{machine, push_ld, push_st, Features, Goal, Prepared, WlError};
+use crate::compiler::Configured;
+use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op};
+use crate::isa::{
+    Cmd, ConstPattern, LaneMask, Pattern2D, Program, Reuse, VsCommand, XferDst,
+};
+use crate::sim::Machine;
+use crate::util::ceil_div;
+use crate::util::linalg::{cholesky as chol_ref, Mat};
+
+/// Vector width of the critical dataflows.
+const W: usize = 8;
+
+/// In-place array A (column-major, becomes L in the lower triangle).
+const A_BASE: i64 = 0;
+/// Scratch for the non-fine-grain inva round-trip.
+const TMP_BASE: i64 = 1500;
+
+// Ports. In: 0=acol(W), 1=inva(1), 2=a(W), 3=ci(1), 4=akk(1), 5=cj(W),
+// 6=gate_col(W), 7=gate_akk(W).
+// Out: 0=lcol, 2=inva, 3=a_upd, 4=col_fwd (gated), 5=akk_fwd (gated).
+fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
+    let mut pt = DfgBuilder::new("point", Criticality::NonCritical);
+    let akk = pt.in_port(4, 1);
+    let inva = pt.node(Op::Rsqrt, &[akk]);
+    pt.out(2, inva, 1);
+
+    let mut v = DfgBuilder::new("vector", Criticality::Critical);
+    let acol = v.in_port(0, W);
+    let iv = v.in_port(1, 1);
+    let l = v.node(Op::Mul, &[acol, iv]);
+    v.out(0, l, W);
+
+    let mut m = DfgBuilder::new("matrix", Criticality::Critical);
+    let a = m.in_port(2, W);
+    let ci = m.in_port(3, 1);
+    let cj = m.in_port(5, W);
+    let prod = m.node(Op::Mul, &[cj, ci]);
+    let upd = m.node(Op::Sub, &[a, prod]);
+    m.out(3, upd, W);
+    if feats.fine_grain {
+        let gcol = m.in_port(6, W);
+        let gakk = m.in_port(7, W);
+        m.out_gated(4, upd, W, Some(gcol));
+        m.out_gated(5, upd, 1, Some(gakk));
+    }
+
+    let cfg = LaneConfig {
+        name: "cholesky".into(),
+        dfgs: vec![pt.build(), v.build(), m.build()],
+    };
+    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+}
+
+/// Column-major address of A[i][j].
+fn at(n: i64, i: i64, j: i64) -> i64 {
+    A_BASE + j * n + i
+}
+
+/// The trailing-triangle 2D pattern at iteration k: columns j=k+1..n,
+/// each covering rows i=j..n (start advances by n+1 per column, length
+/// shrinks by one — the RI stream of Fig 10b).
+fn trailing(n: i64, k: i64) -> Pattern2D {
+    Pattern2D::inductive(
+        at(n, k + 1, k + 1),
+        1,
+        (n - k - 1) as f64,
+        n + 1,
+        n - k - 1,
+        -1.0,
+    )
+}
+
+/// The cj pattern at iteration k: for each trailing column j, the
+/// column-k suffix l_ik, i=j..n (same shape as `trailing`, shifted into
+/// column k).
+fn cj_pat(n: i64, k: i64) -> Pattern2D {
+    Pattern2D::inductive(at(n, k + 1, k), 1, (n - k - 1) as f64, 1, n - k - 1, -1.0)
+}
+
+/// Matrix-region gate streams for iteration k (row-aligned with the
+/// trailing data): gate_col = ones over the whole first column, zeros
+/// after; gate_akk = a single one, zeros after.
+fn push_gates(p: &mut Program, mask: LaneMask, n: i64, k: i64) {
+    let first = n - k - 1; // first trailing column length
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    p.push(vs(Cmd::ConstSt {
+        pat: ConstPattern {
+            val1: 1.0,
+            n1: first as f64,
+            s1: 0.0,
+            val2: 0.0,
+            n2: 0.0,
+            s2: 0.0,
+            n_j: 1,
+        },
+        port: 6,
+    }));
+    p.push(vs(Cmd::ConstSt {
+        pat: ConstPattern::first_of_row(1.0, 0.0, first as f64, 1, 0.0),
+        port: 7,
+    }));
+    if first > 1 {
+        // Zeros over the remaining columns (lengths first-1, first-2, ...).
+        let zeros = ConstPattern {
+            val1: 0.0,
+            n1: (first - 1) as f64,
+            s1: -1.0,
+            val2: 0.0,
+            n2: 0.0,
+            s2: 0.0,
+            n_j: first - 1,
+        };
+        p.push(vs(Cmd::ConstSt { pat: zeros.clone(), port: 6 }));
+        p.push(vs(Cmd::ConstSt { pat: zeros, port: 7 }));
+    }
+}
+
+pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlError> {
+    let cfg = config(feats)?;
+    let n_i = n as i64;
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
+
+    if feats.fine_grain {
+        // Bootstrap: iteration 0's inputs from memory.
+        push_ld(&mut p, mask, Pattern2D::lin(at(n_i, 0, 0), 1), 4, None, feats, None);
+        push_ld(&mut p, mask, Pattern2D::lin(at(n_i, 0, 0), n_i), 0, None, feats, None);
+    }
+
+    for k in 0..n_i {
+        let len = n_i - k; // column k live length (diagonal included)
+        if feats.fine_grain {
+            // point -> vector: inva reused for the whole column.
+            p.push(vs(Cmd::Xfer {
+                src_port: 2,
+                dst_port: 1,
+                dst: XferDst::Local,
+                n: 1,
+                reuse: Some(Reuse::uniform(len as f64)),
+            }));
+        } else {
+            // Memory round-trip for every region transition.
+            p.push(vs(Cmd::Barrier));
+            push_ld(&mut p, mask, Pattern2D::lin(at(n_i, k, k), 1), 4, None, feats, None);
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(TMP_BASE + k, 1),
+                port: 2,
+                rmw: false,
+            }));
+            p.push(vs(Cmd::Barrier));
+            push_ld(
+                &mut p,
+                mask,
+                Pattern2D::lin(TMP_BASE + k, 1),
+                1,
+                Some(Reuse::uniform(len as f64)),
+                feats,
+                None,
+            );
+            push_ld(&mut p, mask, Pattern2D::lin(at(n_i, k, k), len), 0, None, feats, None);
+        }
+        // L column k lands over A's column k.
+        push_st(&mut p, mask, Pattern2D::lin(at(n_i, k, k), len), 0, false, feats);
+
+        if k < n_i - 1 {
+            // ---- matrix region ------------------------------------------
+            p.push(vs(Cmd::Barrier));
+            if feats.inductive {
+                // In-place trailing update: rmw store + lag-0 rmw load
+                // (the pair touches disjoint columns row-by-row).
+                push_st(&mut p, mask, trailing(n_i, k), 3, true, feats);
+                push_ld(&mut p, mask, trailing(n_i, k), 2, None, feats, Some(0));
+                // ci: l_jk scalars, element t reused (n-k-1-t) times.
+                push_ld(
+                    &mut p,
+                    mask,
+                    Pattern2D::lin(at(n_i, k + 1, k), n_i - k - 1),
+                    3,
+                    Some(Reuse { n_r: (n_i - k - 1) as f64, s_r: -1.0 }),
+                    feats,
+                    None,
+                );
+                // cj: column-k suffixes per trailing column.
+                push_ld(&mut p, mask, cj_pat(n_i, k), 5, None, feats, None);
+            } else {
+                // Rectangular-only ISA: one command set per trailing
+                // column, interleaved so each column's store follows its
+                // load (Fig 11's O(n) decomposition).
+                for r in 0..n_i - k - 1 {
+                    let col = k + 1 + r;
+                    let len = n_i - col;
+                    push_ld(
+                        &mut p,
+                        mask,
+                        Pattern2D::lin(at(n_i, col, k), 1),
+                        3,
+                        Some(Reuse::uniform(len as f64)),
+                        feats,
+                        None,
+                    );
+                    push_ld(
+                        &mut p,
+                        mask,
+                        Pattern2D::lin(at(n_i, col, col), len),
+                        2,
+                        None,
+                        feats,
+                        None,
+                    );
+                    push_ld(
+                        &mut p,
+                        mask,
+                        Pattern2D::lin(at(n_i, col, k), len),
+                        5,
+                        None,
+                        feats,
+                        None,
+                    );
+                    push_st(
+                        &mut p,
+                        mask,
+                        Pattern2D::lin(at(n_i, col, col), len),
+                        3,
+                        true,
+                        feats,
+                    );
+                    if feats.fine_grain {
+                        let g = if r == 0 { 1.0 } else { 0.0 };
+                        p.push(vs(Cmd::ConstSt {
+                            pat: ConstPattern {
+                                val1: g,
+                                n1: len as f64,
+                                s1: 0.0,
+                                val2: 0.0,
+                                n2: 0.0,
+                                s2: 0.0,
+                                n_j: 1,
+                            },
+                            port: 6,
+                        }));
+                        p.push(vs(Cmd::ConstSt {
+                            pat: ConstPattern::first_of_row(g, 0.0, len as f64, 1, 0.0),
+                            port: 7,
+                        }));
+                    }
+                }
+            }
+            if feats.fine_grain {
+                if feats.inductive {
+                    push_gates(&mut p, mask, n_i, k);
+                }
+                // Forward the first trailing column to iteration k+1.
+                p.push(vs(Cmd::Xfer {
+                    src_port: 4,
+                    dst_port: 0,
+                    dst: XferDst::Local,
+                    n: ceil_div((n_i - k - 1) as usize, W) as i64,
+                    reuse: None,
+                }));
+                p.push(vs(Cmd::Xfer {
+                    src_port: 5,
+                    dst_port: 4,
+                    dst: XferDst::Local,
+                    n: 1,
+                    reuse: None,
+                }));
+            }
+        }
+    }
+    p.push(vs(Cmd::Wait));
+    Ok(p)
+}
+
+/// Problem data for one lane.
+pub struct Instance {
+    pub a: Mat,
+    pub l_ref: Mat,
+}
+
+pub fn instance(n: usize, seed: usize) -> Instance {
+    let a = Mat::spd(n, seed as f64 * 1.3);
+    let l_ref = chol_ref(&a);
+    Instance { a, l_ref }
+}
+
+pub fn load_lane(lane: &mut crate::sim::Lane, inst: &Instance) {
+    let n = inst.a.rows;
+    for j in 0..n {
+        for i in 0..n {
+            lane.spad.write(at(n as i64, i as i64, j as i64), inst.a[(i, j)]);
+        }
+    }
+}
+
+pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlError> {
+    let lanes = match goal {
+        Goal::Latency => 1,
+        Goal::Throughput => 8,
+    };
+    let mask = LaneMask::first_n(lanes);
+    let prog = program(n, feats, mask)?;
+    let mut m = machine(lanes);
+    let insts: Vec<Instance> = (0..lanes).map(|l| instance(n, l)).collect();
+    for (l, inst) in insts.iter().enumerate() {
+        load_lane(&mut m.lanes[l], inst);
+    }
+    let verify = Box::new(move |m: &Machine| {
+        let mut max_err = 0.0f64;
+        for (l, inst) in insts.iter().enumerate() {
+            let nn = inst.a.rows;
+            for j in 0..nn {
+                for i in j..nn {
+                    let got =
+                        m.lanes[l].spad.read(at(nn as i64, i as i64, j as i64));
+                    let want = inst.l_ref[(i, j)];
+                    let err = (got - want).abs();
+                    if err > 1e-9 {
+                        return Err(format!(
+                            "lane {l} L[{i}][{j}]: got {got}, want {want}"
+                        ));
+                    }
+                    max_err = max_err.max(err);
+                }
+            }
+        }
+        Ok(max_err)
+    });
+    let flops = lanes as f64 * (n * n * n) as f64 / 3.0;
+    Ok(Prepared { machine: m, prog, verify, flops, problems: lanes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::program_stats;
+
+    #[test]
+    fn fgop_cholesky_is_correct_all_sizes() {
+        for n in [8, 12, 16, 24, 32] {
+            prepare(n, Features::ALL, Goal::Latency)
+                .unwrap()
+                .execute()
+                .unwrap_or_else(|e| panic!("n={n}: {e}"));
+        }
+    }
+
+    #[test]
+    fn all_feature_ladder_versions_are_correct() {
+        for (name, feats) in Features::ladder() {
+            prepare(12, feats, Goal::Latency)
+                .unwrap()
+                .execute()
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn fgop_beats_base_substantially() {
+        let base = prepare(24, Features::NONE, Goal::Latency)
+            .unwrap()
+            .execute()
+            .unwrap();
+        let full = prepare(24, Features::ALL, Goal::Latency)
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert!(
+            full.cycles * 2 <= base.cycles,
+            "FGOP {} vs base {}",
+            full.cycles,
+            base.cycles
+        );
+    }
+
+    #[test]
+    fn inductive_streams_cut_commands() {
+        let ind = program(16, Features::ALL, LaneMask::one(0)).unwrap();
+        let no = program(
+            16,
+            Features { inductive: false, ..Features::ALL },
+            LaneMask::one(0),
+        )
+        .unwrap();
+        assert!(
+            program_stats(&ind).commands * 5 < program_stats(&no).commands * 2,
+            "{} vs {}",
+            ind.len(),
+            no.len()
+        );
+    }
+
+    #[test]
+    fn throughput_runs_eight_lanes() {
+        let r = prepare(12, Features::ALL, Goal::Throughput)
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert_eq!(r.problems, 8);
+    }
+}

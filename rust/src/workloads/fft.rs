@@ -1,0 +1,264 @@
+//! Radix-2 DIT FFT (paper Table 5: RR access, stream-reuse for the
+//! twiddle table, no fine-grain deps). In-place butterflies over
+//! bit-reversed input; log2(n) stages, each a new set of strided
+//! streams. The per-stage store->load ordering between stages is
+//! enforced by the lane's memory interlock — the stage-serialization
+//! plus the deep pipeline is exactly why the paper finds small FFTs the
+//! one place the DSP stays competitive (Q5: reconfiguration/drain on
+//! short phases).
+//!
+//! Early stages (half < vector width) run with masked partial vectors;
+//! the twiddle streams use a rewinding 2D pattern (c_j = 0) — the
+//! "streaming-reuse to reduce scratchpad bandwidth" of Q1.
+
+use std::sync::Arc;
+
+use super::{Features, Goal, Prepared, WlError};
+use crate::compiler::Configured;
+use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op};
+use crate::isa::{Cmd, LaneMask, Pattern2D, Program, VsCommand};
+use crate::sim::{Machine, SimConfig};
+use crate::util::linalg::fft as fft_ref;
+
+/// Vector width of the butterfly dataflow.
+const W: usize = 4;
+
+// Scratchpad layout: ping-pong complex buffers (stages alternate
+// between them so no stage is an in-place RMW — the stores of stage s
+// and the loads of stage s+1 still order through the memory interlock,
+// but within a stage everything streams freely) plus the twiddle table.
+// n=1024 needs 5n words; the paper's 8KB SPAD would stream the second
+// buffer + twiddles from the shared scratchpad — we model that residency
+// with a larger local SPAD (see DESIGN.md SSDeviations).
+fn layout(n: usize) -> (i64, i64, i64, i64) {
+    // (buf0 re, buf0 im, twiddle re, twiddle im); buf1 = buf0 + 4n.
+    let re = 0i64;
+    let im = n as i64;
+    let twr = 4 * n as i64;
+    let twi = twr + (n / 2) as i64;
+    (re, im, twr, twi)
+}
+
+/// Base of the ping-pong buffer used as *input* of stage `s`.
+fn buf(n: usize, s: usize) -> (i64, i64) {
+    if s % 2 == 0 {
+        (0, n as i64)
+    } else {
+        (2 * n as i64, 3 * n as i64)
+    }
+}
+
+// Ports. In: 0=ar(W), 1=ai(W), 2=br(W), 3=bi(W), 4=wr(W), 5=wi(W).
+// Out: 0=ar', 1=ai', 2=br', 3=bi'.
+fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
+    let mut f = DfgBuilder::new("butterfly", Criticality::Critical);
+    let ar = f.in_port(0, W);
+    let ai = f.in_port(1, W);
+    let br = f.in_port(2, W);
+    let bi = f.in_port(3, W);
+    let wr = f.in_port(4, W);
+    let wi = f.in_port(5, W);
+    let m1 = f.node(Op::Mul, &[br, wr]);
+    let m2 = f.node(Op::Mul, &[bi, wi]);
+    let tr = f.node(Op::Sub, &[m1, m2]);
+    let m3 = f.node(Op::Mul, &[br, wi]);
+    let m4 = f.node(Op::Mul, &[bi, wr]);
+    let ti = f.node(Op::Add, &[m3, m4]);
+    let or0 = f.node(Op::Add, &[ar, tr]);
+    let oi0 = f.node(Op::Add, &[ai, ti]);
+    let or1 = f.node(Op::Sub, &[ar, tr]);
+    let oi1 = f.node(Op::Sub, &[ai, ti]);
+    f.out(0, or0, W);
+    f.out(1, oi0, W);
+    f.out(2, or1, W);
+    f.out(3, oi1, W);
+    let cfg = LaneConfig { name: "fft".into(), dfgs: vec![f.build()] };
+    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+}
+
+pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlError> {
+    assert!(n.is_power_of_two());
+    let cfg = config(feats)?;
+    let (_, _, twr, twi) = layout(n);
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
+    let mut len = 2usize;
+    let mut stage = 0usize;
+    while len <= n {
+        let (sre, sim_) = buf(n, stage);
+        let (dre, dim_) = buf(n, stage + 1);
+        let half = (len / 2) as i64;
+        let groups = (n / len) as i64;
+        // Top/bottom halves of each butterfly group (RR streams).
+        let shape = |base: i64, off: i64| {
+            Pattern2D::rect(base + off, 1, half, len as i64, groups)
+        };
+        // Twiddles: the same half-row re-read per group (c_j = 0): the
+        // stream-reuse that cuts scratchpad bandwidth.
+        let tw_stride = (n / len) as i64;
+        let wr = Pattern2D::rect(twr, tw_stride, half, 0, groups);
+        let wi = Pattern2D::rect(twi, tw_stride, half, 0, groups);
+        // Ping-pong: read stage input from one buffer, write outputs to
+        // the other. The memory interlock orders stage s+1's loads
+        // after stage s's stores automatically (range overlap). The
+        // four output streams interleave within the destination buffer
+        // (coarse bounds overlap, addresses disjoint) — mark them rmw
+        // so they don't falsely WAW-serialize against each other; the
+        // next stage's (non-rmw) loads still wait for them.
+        for (src, dst, port) in [
+            (shape(sre, 0), shape(dre, 0), 0usize),
+            (shape(sim_, 0), shape(dim_, 0), 1),
+            (shape(sre, half), shape(dre, half), 2),
+            (shape(sim_, half), shape(dim_, half), 3),
+        ] {
+            p.push(vs(Cmd::LocalSt { pat: dst, port, rmw: true }));
+            p.push(vs(Cmd::LocalLd {
+                pat: src,
+                port,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            }));
+        }
+        p.push(vs(Cmd::LocalLd {
+            pat: wr,
+            port: 4,
+            reuse: None,
+            masked: feats.masking,
+            rmw: None,
+        }));
+        p.push(vs(Cmd::LocalLd {
+            pat: wi,
+            port: 5,
+            reuse: None,
+            masked: feats.masking,
+            rmw: None,
+        }));
+        len <<= 1;
+        stage += 1;
+    }
+    p.push(vs(Cmd::Wait));
+    Ok(p)
+}
+
+/// Number of butterfly stages (which ping-pong buffer holds the result).
+pub fn stages(n: usize) -> usize {
+    n.trailing_zeros() as usize
+}
+
+pub struct Instance {
+    /// Bit-reversed input (marshalled at load time).
+    pub re_in: Vec<f64>,
+    pub im_in: Vec<f64>,
+    pub re_ref: Vec<f64>,
+    pub im_ref: Vec<f64>,
+}
+
+fn bit_reverse(n: usize, x: &[f64]) -> Vec<f64> {
+    let bits = n.trailing_zeros();
+    let mut out = vec![0.0; n];
+    for (i, &v) in x.iter().enumerate() {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        out[j as usize] = v;
+    }
+    out
+}
+
+pub fn instance(n: usize, seed: usize) -> Instance {
+    let re: Vec<f64> = (0..n).map(|i| ((i * 3 + seed) as f64 * 0.17).sin()).collect();
+    let im: Vec<f64> = (0..n).map(|i| ((i * 5 + seed) as f64 * 0.11).cos()).collect();
+    let mut re_ref = re.clone();
+    let mut im_ref = im.clone();
+    fft_ref(&mut re_ref, &mut im_ref);
+    Instance {
+        re_in: bit_reverse(n, &re),
+        im_in: bit_reverse(n, &im),
+        re_ref,
+        im_ref,
+    }
+}
+
+pub fn load_lane(lane: &mut crate::sim::Lane, n: usize, inst: &Instance) {
+    let (re, im, twr, twi) = layout(n);
+    lane.spad.load_slice(re, &inst.re_in);
+    lane.spad.load_slice(im, &inst.im_in);
+    for k in 0..n / 2 {
+        let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        lane.spad.write(twr + k as i64, ang.cos());
+        lane.spad.write(twi + k as i64, ang.sin());
+    }
+}
+
+pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlError> {
+    // Table 5: FFT uses 1 lane; throughput replicates across 8.
+    let lanes = match goal {
+        Goal::Latency => 1,
+        Goal::Throughput => 8,
+    };
+    let mask = LaneMask::first_n(lanes);
+    let prog = program(n, feats, mask)?;
+    let spad = (5 * n).max(2048).next_power_of_two();
+    let mut m = Machine::new(SimConfig {
+        lanes,
+        lane_spad_words: spad,
+        ..Default::default()
+    });
+    let insts: Vec<Instance> = (0..lanes).map(|l| instance(n, l)).collect();
+    for (l, inst) in insts.iter().enumerate() {
+        load_lane(&mut m.lanes[l], n, inst);
+    }
+    let verify = Box::new(move |m: &Machine| {
+        let (re, im) = buf(n, stages(n));
+        let mut max_err = 0.0f64;
+        for (l, inst) in insts.iter().enumerate() {
+            for i in 0..n {
+                let gr = m.lanes[l].spad.read(re + i as i64);
+                let gi = m.lanes[l].spad.read(im + i as i64);
+                let er = (gr - inst.re_ref[i]).abs();
+                let ei = (gi - inst.im_ref[i]).abs();
+                if er > 1e-6 || ei > 1e-6 {
+                    return Err(format!(
+                        "lane {l} X[{i}]: got ({gr},{gi}), want ({},{})",
+                        inst.re_ref[i], inst.im_ref[i]
+                    ));
+                }
+                max_err = max_err.max(er.max(ei));
+            }
+        }
+        Ok(max_err)
+    });
+    let flops = lanes as f64 * 5.0 * n as f64 * (n as f64).log2();
+    Ok(Prepared { machine: m, prog, verify, flops, problems: lanes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_correct_small_sizes() {
+        for n in [16, 64, 128] {
+            prepare(n, Features::ALL, Goal::Latency)
+                .unwrap()
+                .execute()
+                .unwrap_or_else(|e| panic!("n={n}: {e}"));
+        }
+    }
+
+    #[test]
+    fn fft_1024_runs() {
+        prepare(1024, Features::ALL, Goal::Latency)
+            .unwrap()
+            .execute()
+            .unwrap();
+    }
+
+    #[test]
+    fn fft_throughput_eight_lanes() {
+        let r = prepare(64, Features::ALL, Goal::Throughput)
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert_eq!(r.problems, 8);
+    }
+}

@@ -1,0 +1,207 @@
+//! Centro-symmetric FIR filter (paper "Centro-FIR", Table 5): taps are
+//! symmetric (h[j] = h[m-1-j]), so the kernel folds the window:
+//!
+//!   y[i] = sum_{j < m/2} h[j] * (x[i+j] + x[i+m-1-j])
+//!
+//! halving the multiplies. One accumulating dataflow over output chunks:
+//! the two window streams walk toward each other (the second with a
+//! negative outer stride), the tap scalar broadcasts across lanes, and
+//! the accumulator emits after m/2 steps.
+
+use std::sync::Arc;
+
+use super::{machine, Features, Goal, Prepared, WlError};
+use crate::compiler::Configured;
+use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op};
+use crate::isa::{Cmd, ConstPattern, LaneMask, Pattern2D, Program, VsCommand};
+use crate::sim::Machine;
+use crate::util::linalg::fir as fir_ref;
+
+/// Vector width (one output chunk per accumulation group).
+const W: usize = 8;
+/// Output samples (matches the AOT artifacts: input = 64 + m - 1).
+pub const N_OUT: usize = 64;
+
+const X_BASE: i64 = 0;
+const H_BASE: i64 = 256;
+const Y_BASE: i64 = 320;
+
+// Ports. In: 0=xa(W), 1=xb(W), 2=h(1), 3=emit gate(1). Out: 0=y(W).
+fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
+    let mut f = DfgBuilder::new("fir", Criticality::Critical);
+    let xa = f.in_port(0, W);
+    let xb = f.in_port(1, W);
+    let h = f.in_port(2, 1);
+    let gate = f.in_port(3, 1);
+    let s = f.node(Op::Add, &[xa, xb]);
+    let prod = f.node(Op::Mul, &[s, h]);
+    let acc = f.node(Op::Acc, &[prod, gate]);
+    f.out_gated(0, acc, W, Some(gate));
+    let cfg = LaneConfig { name: "fir".into(), dfgs: vec![f.build()] };
+    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+}
+
+/// Program computing `chunks` output chunks per lane, tap count m (even).
+pub fn program(
+    m: usize,
+    chunks: usize,
+    feats: Features,
+    mask: LaneMask,
+    lane_stride: i64,
+) -> Result<Program, WlError> {
+    assert!(m % 2 == 0, "centro-symmetric fold needs even tap count");
+    let cfg = config(feats)?;
+    let half = (m / 2) as i64;
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
+    // Hoisted emit gate (one emission per chunk) and output stream,
+    // issued first so they serve the whole run.
+    p.push(vs(Cmd::ConstSt {
+        pat: ConstPattern::last_of_row(1.0, 0.0, half as f64, chunks as i64, 0.0),
+        port: 3,
+    }));
+    p.push(VsCommand::with_stride(
+        Cmd::LocalSt {
+            pat: Pattern2D::lin(Y_BASE, (chunks * W) as i64),
+            port: 0,
+            rmw: false,
+        },
+        mask,
+        lane_stride,
+    ));
+    for ic in 0..chunks as i64 {
+        let x0 = X_BASE + ic * W as i64;
+        // Forward half-window walk: row j covers x[i + j].
+        p.push(VsCommand::with_stride(
+            Cmd::LocalLd {
+                pat: Pattern2D::rect(x0, 1, W as i64, 1, half),
+                port: 0,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            },
+            mask,
+            lane_stride,
+        ));
+        // Backward half-window walk: row j covers x[i + m-1-j].
+        p.push(VsCommand::with_stride(
+            Cmd::LocalLd {
+                pat: Pattern2D::rect(x0 + m as i64 - 1, 1, W as i64, -1, half),
+                port: 1,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            },
+            mask,
+            lane_stride,
+        ));
+        // Taps, one scalar per accumulation step.
+        p.push(vs(Cmd::LocalLd {
+            pat: Pattern2D::lin(H_BASE, half),
+            port: 2,
+            reuse: None,
+            masked: feats.masking,
+            rmw: None,
+        }));
+    }
+    p.push(vs(Cmd::Wait));
+    Ok(p)
+}
+
+pub struct Instance {
+    pub x: Vec<f64>,
+    pub h: Vec<f64>,
+    pub y_ref: Vec<f64>,
+}
+
+pub fn instance(m: usize, seed: usize) -> Instance {
+    let x: Vec<f64> =
+        (0..N_OUT + m - 1).map(|i| ((i + seed * 3) as f64 * 0.21).sin()).collect();
+    // Centro-symmetric taps.
+    let mut h = vec![0.0; m];
+    for j in 0..m / 2 {
+        let v = ((j + 1 + seed) as f64 * 0.4).cos() * 0.3;
+        h[j] = v;
+        h[m - 1 - j] = v;
+    }
+    let y_ref = fir_ref(&x, &h);
+    Instance { x, h, y_ref }
+}
+
+pub fn prepare(m: usize, feats: Features, goal: Goal) -> Result<Prepared, WlError> {
+    let lanes = 8;
+    let mask = LaneMask::first_n(lanes);
+    let chunks_total = N_OUT / W;
+    let (chunks, stride, problems) = match goal {
+        // Latency: one filter, output chunks split across lanes.
+        Goal::Latency => (chunks_total / lanes, (chunks_total / lanes * W) as i64, 1),
+        // Throughput: a full filter per lane.
+        Goal::Throughput => (chunks_total, 0, lanes),
+    };
+    let prog = program(m, chunks, feats, mask, stride)?;
+    let mut mach = machine(lanes);
+    let insts: Vec<Instance> = match goal {
+        Goal::Latency => vec![instance(m, 0)],
+        Goal::Throughput => (0..lanes).map(|l| instance(m, l)).collect(),
+    };
+    for l in 0..lanes {
+        let inst = &insts[if problems == 1 { 0 } else { l }];
+        mach.lanes[l].spad.load_slice(X_BASE, &inst.x);
+        mach.lanes[l].spad.load_slice(H_BASE, &inst.h);
+    }
+    let verify = Box::new(move |mach: &Machine| {
+        let mut max_err = 0.0f64;
+        for l in 0..lanes {
+            let inst = &insts[if problems == 1 { 0 } else { l }];
+            for c in 0..chunks * W {
+                let (y_idx, addr) = if problems == 1 {
+                    (l * chunks * W + c, Y_BASE + (l * chunks * W + c) as i64)
+                } else {
+                    (c, Y_BASE + c as i64)
+                };
+                let got = mach.lanes[l].spad.read(addr);
+                let want = inst.y_ref[y_idx];
+                let err = (got - want).abs();
+                if err > 1e-9 {
+                    return Err(format!("lane {l} y[{y_idx}]: got {got}, want {want}"));
+                }
+                max_err = max_err.max(err);
+            }
+        }
+        Ok(max_err)
+    });
+    let flops = (3 * N_OUT * m / 2 * problems.max(1)) as f64;
+    Ok(Prepared { machine: mach, prog, verify, flops, problems })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fir_correct_all_sizes() {
+        for m in [12, 16, 24, 32] {
+            for goal in [Goal::Latency, Goal::Throughput] {
+                prepare(m, Features::ALL, goal)
+                    .unwrap()
+                    .execute()
+                    .unwrap_or_else(|e| panic!("m={m} {goal:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn latency_split_beats_single_lane_throughput_time() {
+        // 8 lanes sharing one filter finish faster than one lane doing
+        // the full filter.
+        let lat = prepare(32, Features::ALL, Goal::Latency)
+            .unwrap()
+            .execute()
+            .unwrap();
+        let thr = prepare(32, Features::ALL, Goal::Throughput)
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert!(lat.cycles < thr.cycles, "{} vs {}", lat.cycles, thr.cycles);
+    }
+}

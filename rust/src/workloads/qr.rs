@@ -1,0 +1,449 @@
+//! Householder QR decomposition (paper Fig 6 left). Per iteration k:
+//!
+//! * `dot` (critical, vectorized reduce): sigma = a_k . a_k, then
+//!   w_j = inv * (v . a_j) for every trailing column — the AccReduce
+//!   dataflow emits once per column (gated);
+//! * `house` (non-critical, the paper's "complex sub-critical region"
+//!   that needs the temporal fabric): norm/sign/v0/r_kk/inv chain with
+//!   sqrt and divides;
+//! * `update` (critical): a_j -= w_j * v.
+//!
+//! Fine-grain ordered deps: dot -> house (sigma), house -> dot (inv,
+//! reused across all trailing dots), dot -> update (w_j, reused n-k
+//! times — the `tau`/`w[j]` edges of Fig 6). The Householder vector v
+//! lives in-place in column k (v0 overwrites a_kk; R's diagonal is
+//! stored aside), and the v streams re-read it per column with a
+//! rewinding (c_j = 0) pattern — stream-reuse cutting SPAD bandwidth.
+
+use std::sync::Arc;
+
+use super::{machine, push_ld, push_st, Features, Goal, Prepared, WlError};
+use crate::compiler::Configured;
+use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op, Operand};
+use crate::isa::{
+    Cmd, ConstPattern, LaneMask, Pattern2D, Program, Reuse, VsCommand, XferDst,
+};
+use crate::sim::Machine;
+use crate::util::linalg::Mat;
+
+const W: usize = 4;
+
+/// A (column-major, n<=32 => 1024 words), R diagonal, constants/scratch.
+const A_BASE: i64 = 0;
+const RDIAG_BASE: i64 = 1060;
+const ONE_ADDR: i64 = 1100;
+const TMP_BASE: i64 = 1200;
+
+// Ports. In: 0=dot.a(W), 1=dot.v(W), 2=dot gate(1), 3=dot.inv(1),
+// 4=house.sigma(1), 5=house.akk(1), 6=upd.a(W), 7=upd.v(W), 8=upd.w(1).
+// Out: 0=w' (dot), 1=v0, 2=rkk, 3=inv, 4=a_upd.
+fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
+    let mut d = DfgBuilder::new("dot", Criticality::Critical);
+    let a = d.in_port(0, W);
+    let v = d.in_port(1, W);
+    let gate = d.in_port(2, 1);
+    let inv = d.in_port(3, 1);
+    let prod = d.node(Op::Mul, &[a, v]);
+    let s = d.node(Op::AccReduce, &[prod, gate]);
+    let w = d.node(Op::Mul, &[s, inv]);
+    d.out_gated(0, w, 1, Some(gate));
+
+    let mut h = DfgBuilder::new("house", Criticality::NonCritical);
+    let sigma = h.in_port(4, 1);
+    let akk = h.in_port(5, 1);
+    let nrm = h.node(Op::Sqrt, &[sigma]);
+    let ge = h.node(Op::CmpGe, &[akk, Operand::Const(0.0)]);
+    let sg = h.node(Op::Select, &[ge, Operand::Const(1.0), Operand::Const(-1.0)]);
+    let sn = h.node(Op::Mul, &[sg, nrm]);
+    let v0 = h.node(Op::Add, &[akk, sn]);
+    let rkk = h.node(Op::Neg, &[sn]);
+    let akk2 = h.node(Op::Mul, &[akk, akk]);
+    let v02 = h.node(Op::Mul, &[v0, v0]);
+    let t1 = h.node(Op::Sub, &[sigma, akk2]);
+    let vn2 = h.node(Op::Add, &[t1, v02]);
+    let invv = h.node(Op::Div, &[Operand::Const(2.0), vn2]);
+    h.out(1, v0, 1);
+    h.out(2, rkk, 1);
+    h.out(3, invv, 1);
+
+    let mut u = DfgBuilder::new("update", Criticality::Critical);
+    let a2 = u.in_port(6, W);
+    let v2 = u.in_port(7, W);
+    let w2 = u.in_port(8, 1);
+    let p2 = u.node(Op::Mul, &[v2, w2]);
+    let upd = u.node(Op::Sub, &[a2, p2]);
+    u.out(4, upd, W);
+
+    let cfg = LaneConfig {
+        name: "qr".into(),
+        dfgs: vec![d.build(), h.build(), u.build()],
+    };
+    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+}
+
+fn at(n: i64, i: i64, j: i64) -> i64 {
+    A_BASE + j * n + i
+}
+
+pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlError> {
+    let cfg = config(feats)?;
+    let n_i = n as i64;
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
+
+    for k in 0..n_i {
+        let len = n_i - k; // live column height (rows k..n)
+        let cols = n_i - k - 1; // trailing columns
+        p.push(vs(Cmd::Barrier));
+        // a_kk (original) for the house region.
+        push_ld(&mut p, mask, Pattern2D::lin(at(n_i, k, k), 1), 5, None, feats, None);
+        // sigma dot: column k against itself, multiplier 1.0.
+        push_ld(&mut p, mask, Pattern2D::lin(at(n_i, k, k), len), 0, None, feats, None);
+        push_ld(&mut p, mask, Pattern2D::lin(at(n_i, k, k), len), 1, None, feats, None);
+        push_ld(
+            &mut p,
+            mask,
+            Pattern2D::lin(ONE_ADDR, 1),
+            3,
+            Some(Reuse::uniform(len as f64)),
+            feats,
+            None,
+        );
+        // Emit gate for all (1 + cols) dots of this iteration. Scalar
+        // gate streams pace *firings*: ceil(len/W) per column.
+        let firings = (len + W as i64 - 1) / W as i64;
+        p.push(vs(Cmd::ConstSt {
+            pat: ConstPattern::last_of_row(1.0, 0.0, firings as f64, cols + 1, 0.0),
+            port: 2,
+        }));
+        if feats.fine_grain {
+            // dot -> house (sigma), house -> memory (v0, rkk),
+            // house -> dot (inv).
+            p.push(vs(Cmd::Xfer {
+                src_port: 0,
+                dst_port: 4,
+                dst: XferDst::Local,
+                n: 1,
+                reuse: None,
+            }));
+        } else {
+            // sigma round-trips through the scratchpad.
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(TMP_BASE, 1),
+                port: 0,
+                rmw: false,
+            }));
+            p.push(vs(Cmd::Barrier));
+            push_ld(&mut p, mask, Pattern2D::lin(TMP_BASE, 1), 4, None, feats, None);
+        }
+        // v0 overwrites a_kk; r_kk parked in the diagonal store.
+        p.push(vs(Cmd::LocalSt {
+            pat: Pattern2D::lin(at(n_i, k, k), 1),
+            port: 1,
+            rmw: false,
+        }));
+        p.push(vs(Cmd::LocalSt {
+            pat: Pattern2D::lin(RDIAG_BASE + k, 1),
+            port: 2,
+            rmw: false,
+        }));
+        if cols == 0 {
+            // Last iteration: drain the unused inv output.
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(TMP_BASE + 1, 1),
+                port: 3,
+                rmw: false,
+            }));
+            continue;
+        }
+        let inv_uses = (len * cols) as f64;
+        if feats.fine_grain {
+            p.push(vs(Cmd::Xfer {
+                src_port: 3,
+                dst_port: 3,
+                dst: XferDst::Local,
+                n: 1,
+                reuse: Some(Reuse::uniform(inv_uses)),
+            }));
+        } else {
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(TMP_BASE + 1, 1),
+                port: 3,
+                rmw: false,
+            }));
+            p.push(vs(Cmd::Barrier));
+            push_ld(
+                &mut p,
+                mask,
+                Pattern2D::lin(TMP_BASE + 1, 1),
+                3,
+                Some(Reuse::uniform(inv_uses)),
+                feats,
+                None,
+            );
+        }
+        // Trailing block patterns (rectangular within one iteration).
+        let block = Pattern2D::rect(at(n_i, k, k + 1), 1, len, n_i, cols);
+        let vpat = Pattern2D::rect(at(n_i, k, k), 1, len, 0, cols);
+        // w dots over the trailing columns. The rectangular-only
+        // decomposition must interleave the two streams per column —
+        // back-to-back per-row commands head-of-line block the queue.
+        if feats.inductive {
+            push_ld(&mut p, mask, block.clone(), 0, None, feats, Some(0));
+            push_ld(&mut p, mask, vpat.clone(), 1, None, feats, None);
+        } else {
+            for j in 0..cols {
+                push_ld(
+                    &mut p,
+                    mask,
+                    Pattern2D::lin(at(n_i, k, k + 1 + j), len),
+                    0,
+                    None,
+                    feats,
+                    Some(0),
+                );
+                push_ld(
+                    &mut p,
+                    mask,
+                    Pattern2D::lin(at(n_i, k, k), len),
+                    1,
+                    None,
+                    feats,
+                    None,
+                );
+                if !feats.fine_grain {
+                    // Drain each w_j to memory as it is produced — the
+                    // 16-deep output FIFO cannot hold a whole trailing
+                    // block's worth of emissions at n=32.
+                    p.push(vs(Cmd::LocalSt {
+                        pat: Pattern2D::lin(TMP_BASE + 2 + j, 1),
+                        port: 0,
+                        rmw: false,
+                    }));
+                }
+            }
+        }
+        if feats.fine_grain {
+            // w_j stream: one scalar per column, each reused len times.
+            p.push(vs(Cmd::Xfer {
+                src_port: 0,
+                dst_port: 8,
+                dst: XferDst::Local,
+                n: cols,
+                reuse: Some(Reuse::uniform(len as f64)),
+            }));
+            // In-place update of the trailing block.
+            push_st(&mut p, mask, block.clone(), 4, true, feats);
+            push_ld(&mut p, mask, block, 6, None, feats, Some(0));
+            push_ld(&mut p, mask, vpat, 7, None, feats, None);
+        } else {
+            // w_j through memory. (The rectangular-only decomposition
+            // already interleaved these stores with the loads above —
+            // decomposed streams head-of-line block the command queue
+            // and overflow the output FIFO otherwise.)
+            if feats.inductive {
+                for j in 0..cols {
+                    p.push(vs(Cmd::LocalSt {
+                        pat: Pattern2D::lin(TMP_BASE + 2 + j, 1),
+                        port: 0,
+                        rmw: false,
+                    }));
+                }
+            }
+            p.push(vs(Cmd::Barrier));
+            for j in 0..cols {
+                push_ld(
+                    &mut p,
+                    mask,
+                    Pattern2D::lin(TMP_BASE + 2 + j, 1),
+                    8,
+                    Some(Reuse::uniform(len as f64)),
+                    feats,
+                    None,
+                );
+                let colp = Pattern2D::lin(at(n_i, k, k + 1 + j), len);
+                push_st(&mut p, mask, colp.clone(), 4, true, feats);
+                push_ld(&mut p, mask, colp, 6, None, feats, Some(0));
+                push_ld(
+                    &mut p,
+                    mask,
+                    Pattern2D::lin(at(n_i, k, k), len),
+                    7,
+                    None,
+                    feats,
+                    None,
+                );
+            }
+        }
+    }
+    p.push(vs(Cmd::Wait));
+    Ok(p)
+}
+
+/// Scalar mirror of the exact simulated algorithm (same formulas and
+/// reduction grouping are within f64 tolerance of the lane's order).
+pub fn qr_mirror(a: &mut Mat, rdiag: &mut [f64]) {
+    let n = a.rows;
+    for k in 0..n {
+        let sigma: f64 = (k..n).map(|i| a[(i, k)] * a[(i, k)]).sum();
+        let akk = a[(k, k)];
+        let nrm = sigma.sqrt();
+        let sg = if akk >= 0.0 { 1.0 } else { -1.0 };
+        let v0 = akk + sg * nrm;
+        rdiag[k] = -sg * nrm;
+        let vn2 = sigma - akk * akk + v0 * v0;
+        let inv = 2.0 / vn2;
+        a[(k, k)] = v0;
+        for j in k + 1..n {
+            let w: f64 = (k..n).map(|i| a[(i, k)] * a[(i, j)]).sum::<f64>() * inv;
+            for i in k..n {
+                let vi = a[(i, k)];
+                a[(i, j)] -= w * vi;
+            }
+        }
+    }
+}
+
+pub struct Instance {
+    pub a: Mat,
+    pub a_ref: Mat,
+    pub rdiag_ref: Vec<f64>,
+}
+
+pub fn instance(n: usize, seed: usize) -> Instance {
+    let a = Mat::from_fn(n, n, |i, j| {
+        (((i * 3 + j * 7 + seed) as f64) * 0.23).sin() + if i == j { 2.0 } else { 0.0 }
+    });
+    let mut a_ref = a.clone();
+    let mut rdiag_ref = vec![0.0; n];
+    qr_mirror(&mut a_ref, &mut rdiag_ref);
+    Instance { a, a_ref, rdiag_ref }
+}
+
+pub fn load_lane(lane: &mut crate::sim::Lane, inst: &Instance) {
+    let n = inst.a.rows;
+    for j in 0..n {
+        for i in 0..n {
+            lane.spad.write(at(n as i64, i as i64, j as i64), inst.a[(i, j)]);
+        }
+    }
+    lane.spad.write(ONE_ADDR, 1.0);
+}
+
+pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlError> {
+    let lanes = match goal {
+        Goal::Latency => 1,
+        Goal::Throughput => 8,
+    };
+    let mask = LaneMask::first_n(lanes);
+    let prog = program(n, feats, mask)?;
+    let mut m = machine(lanes);
+    let insts: Vec<Instance> = (0..lanes).map(|l| instance(n, l)).collect();
+    for (l, inst) in insts.iter().enumerate() {
+        load_lane(&mut m.lanes[l], inst);
+    }
+    let verify = Box::new(move |m: &Machine| {
+        let mut max_err = 0.0f64;
+        for (l, inst) in insts.iter().enumerate() {
+            let nn = inst.a.rows as i64;
+            // R's upper triangle (rows above diag) + diagonal + the
+            // in-place Householder vectors below the diagonal.
+            for j in 0..nn {
+                for i in 0..nn {
+                    let got = m.lanes[l].spad.read(at(nn, i, j));
+                    let want = inst.a_ref[(i as usize, j as usize)];
+                    let err = (got - want).abs();
+                    if err > 1e-8 {
+                        return Err(format!(
+                            "lane {l} A[{i}][{j}]: got {got}, want {want}"
+                        ));
+                    }
+                    max_err = max_err.max(err);
+                }
+            }
+            for k in 0..nn {
+                let got = m.lanes[l].spad.read(RDIAG_BASE + k);
+                let err = (got - inst.rdiag_ref[k as usize]).abs();
+                if err > 1e-8 {
+                    return Err(format!("lane {l} rdiag[{k}]"));
+                }
+                max_err = max_err.max(err);
+            }
+        }
+        Ok(max_err)
+    });
+    let flops = lanes as f64 * 4.0 / 3.0 * (n * n * n) as f64;
+    Ok(Prepared { machine: m, prog, verify, flops, problems: lanes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::qr as qr_ref;
+
+    #[test]
+    fn mirror_matches_householder_reference() {
+        // The mirror's R must equal the library QR's R up to signs.
+        let n = 8;
+        let inst = instance(n, 0);
+        let (_, r) = qr_ref(&inst.a);
+        for i in 0..n {
+            let scale = inst.rdiag_ref[i] / r[(i, i)];
+            assert!((scale.abs() - 1.0).abs() < 1e-9, "row {i} scale {scale}");
+            for j in i + 1..n {
+                assert!(
+                    (inst.a_ref[(i, j)] - scale * r[(i, j)]).abs() < 1e-8,
+                    "({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fgop_qr_is_correct_all_sizes() {
+        for n in [8, 12, 16, 24, 32] {
+            prepare(n, Features::ALL, Goal::Latency)
+                .unwrap()
+                .execute()
+                .unwrap_or_else(|e| panic!("n={n}: {e}"));
+        }
+    }
+
+    #[test]
+    fn all_feature_ladder_versions_are_correct() {
+        for (name, feats) in Features::ladder() {
+            prepare(12, feats, Goal::Latency)
+                .unwrap()
+                .execute()
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn heterogeneous_fabric_helps_qr() {
+        // QR's sub-critical house region is long: Fig 19 shows the big
+        // jump only lands once the temporal fabric exists.
+        let no_het = prepare(
+            24,
+            Features { heterogeneous: false, ..Features::ALL },
+            Goal::Latency,
+        )
+        .unwrap()
+        .execute()
+        .unwrap();
+        let het = prepare(24, Features::ALL, Goal::Latency)
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert!(het.cycles < no_het.cycles, "{} vs {}", het.cycles, no_het.cycles);
+    }
+
+    #[test]
+    fn throughput_runs_eight_lanes() {
+        let r = prepare(12, Features::ALL, Goal::Throughput)
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert_eq!(r.problems, 8);
+    }
+}

@@ -1,0 +1,162 @@
+//! Property-based tests over the ISA/simulator invariants (in-repo
+//! `prop` helper; proptest is unavailable offline).
+
+use revel::isa::{Capability, LaneMask, Pattern2D, Reuse};
+use revel::prop::check;
+use revel::sim::{Machine, SimConfig, StreamCursor};
+use revel::workloads::{self, Features, Goal};
+
+/// Cursor chunked traversal == pattern iterator, for arbitrary patterns.
+#[test]
+fn cursor_equals_iterator_on_random_patterns() {
+    check("cursor == iter", 200, |rng| {
+        let pat = Pattern2D::inductive(
+            rng.int(0, 50),
+            rng.int(1, 4),
+            rng.int(0, 12) as f64,
+            rng.int(-8, 24),
+            rng.int(1, 10),
+            rng.int(-3, 3) as f64,
+        );
+        let want: Vec<i64> = pat.iter().map(|(a, _)| a).collect();
+        let mut cur = StreamCursor::new(pat);
+        let mut got = Vec::new();
+        while !cur.done() {
+            let k = cur.remaining_in_row().min(rng.int(1, 5));
+            got.extend(cur.take(k));
+        }
+        assert_eq!(got, want);
+    });
+}
+
+/// total_len == iterator length == instances * widths accounting.
+#[test]
+fn pattern_accounting_consistent() {
+    check("pattern accounting", 200, |rng| {
+        let pat = Pattern2D::inductive(
+            rng.int(0, 10),
+            1,
+            rng.int(0, 16) as f64,
+            rng.int(0, 20),
+            rng.int(1, 12),
+            rng.int(-2, 2) as f64,
+        );
+        let n_iter = pat.iter().count() as i64;
+        assert_eq!(pat.total_len(), n_iter);
+        let w = rng.int(1, 8) as usize;
+        // Instances cover all elements: w * instances >= elements.
+        assert!(pat.instances(w) * w as i64 >= n_iter);
+        // Bounds contain every address.
+        if let Some((lo, hi)) = pat.bounds() {
+            for (a, _) in pat.iter() {
+                assert!((lo..=hi).contains(&a));
+            }
+        } else {
+            assert_eq!(n_iter, 0);
+        }
+    });
+}
+
+/// Reuse budgets are always >= 1 while a stream is live.
+#[test]
+fn reuse_counts_positive() {
+    check("reuse positive", 100, |rng| {
+        let r = Reuse {
+            n_r: rng.int(1, 30) as f64,
+            s_r: rng.int(-3, 3) as f64 / 2.0,
+        };
+        for t in 0..64 {
+            assert!(r.count_at(t) >= 1);
+        }
+    });
+}
+
+/// Capability command-count ordering: more capable never needs more
+/// commands.
+#[test]
+fn capability_ladder_monotone() {
+    check("capability monotone", 200, |rng| {
+        let pat = Pattern2D::inductive(
+            0,
+            1,
+            rng.int(1, 16) as f64,
+            rng.int(1, 20),
+            rng.int(1, 12),
+            rng.int(-2, 0) as f64,
+        );
+        let ri = pat.commands_needed(Capability::RI);
+        let rr = pat.commands_needed(Capability::RR);
+        let r = pat.commands_needed(Capability::R);
+        assert!(ri <= rr, "RI {ri} > RR {rr}");
+        assert!(rr <= r, "RR {rr} > R {r}");
+    });
+}
+
+/// The simulator is deterministic: same program, same data, same cycles.
+#[test]
+fn simulator_deterministic() {
+    check("deterministic sim", 6, |rng| {
+        let n = [8usize, 12, 16][rng.below(3)];
+        let run = |_| {
+            let p = workloads::prepare("solver", n, Features::ALL, Goal::Latency)
+                .unwrap();
+            let mut m = p.machine;
+            m.run(p.prog).unwrap().cycles
+        };
+        assert_eq!(run(0), run(1));
+    });
+}
+
+/// Lane masks behave like bitsets.
+#[test]
+fn lane_mask_properties() {
+    check("lane masks", 100, |rng| {
+        let bits = rng.int(0, 255) as u8;
+        let m = LaneMask(bits);
+        assert_eq!(m.count(), bits.count_ones() as usize);
+        let listed: Vec<usize> = m.lanes().collect();
+        assert_eq!(listed.len(), m.count());
+        for l in listed {
+            assert!(m.contains(l));
+        }
+    });
+}
+
+/// Every feature combination of the solver is numerically correct (not
+/// just the ladder): 2^4 combinations.
+#[test]
+fn solver_correct_under_all_feature_combinations() {
+    for bits in 0..16u32 {
+        let feats = Features {
+            inductive: bits & 1 != 0,
+            fine_grain: bits & 2 != 0,
+            heterogeneous: bits & 4 != 0,
+            masking: bits & 8 != 0,
+        };
+        workloads::prepare("solver", 12, feats, Goal::Latency)
+            .unwrap()
+            .execute()
+            .unwrap_or_else(|e| panic!("{feats:?}: {e}"));
+    }
+}
+
+/// Machine watchdog fires instead of hanging on a bad program.
+#[test]
+fn watchdog_terminates_bad_programs() {
+    use revel::isa::{Cmd, VsCommand};
+    let mut m = Machine::new(SimConfig {
+        lanes: 1,
+        max_cycles: 5_000,
+        ..Default::default()
+    });
+    // Wait on a lane that never becomes idle (store with no producer
+    // needs a config; give it a raw store command with no data).
+    let prog = vec![
+        VsCommand::new(
+            Cmd::LocalSt { pat: Pattern2D::lin(0, 4), port: 0, rmw: false },
+            LaneMask::one(0),
+        ),
+        VsCommand::new(Cmd::Wait, LaneMask::one(0)),
+    ];
+    assert!(m.run(prog).is_err());
+}
