@@ -1,0 +1,42 @@
+# REVEL reproduction — top-level developer workflow.
+#
+#   make artifacts    AOT-lower the JAX kernels to artifacts/*.hlo.txt
+#                     (needs python + jax; enables the PJRT golden tests)
+#   make build        release build of the library, CLI, and benches
+#   make test         tier-1 gate: cargo build --release && cargo test -q
+#   make sweep        full parallel evaluation sweep -> BENCH_sweep.json
+#   make bench-smoke  1-rep perf_hotpath (what CI archives)
+#   make ci           everything CI runs, in order
+
+CARGO ?= cargo
+PYTHON ?= python
+
+.PHONY: artifacts build test sweep bench-smoke fmt clippy ci clean
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --outdir ../artifacts
+
+build:
+	$(CARGO) build --release --workspace
+
+test: build
+	$(CARGO) test -q
+
+sweep: build
+	$(CARGO) run --release --bin revel -- sweep --out BENCH_sweep.json
+
+bench-smoke:
+	REVEL_BENCH_REPS=1 $(CARGO) bench --bench perf_hotpath
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --workspace --all-targets -- -D warnings
+
+ci: build test fmt clippy bench-smoke
+	cd python && $(PYTHON) -m pytest tests -q
+
+clean:
+	$(CARGO) clean
+	rm -f BENCH_sweep.json

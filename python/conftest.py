@@ -1,0 +1,11 @@
+"""Pytest bootstrap for the compile package.
+
+Makes `python -m pytest python/tests -q` work from the repository root
+(and from anywhere else) by putting this directory — the parent of the
+`compile` package — on sys.path before test collection.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,9 +1,12 @@
 """L2 correctness: model graphs vs numpy oracles + AOT lowering sanity."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Auto-skip (not error) when the JAX/PJRT toolchain is absent — offline
+# CI runners only have the rust toolchain.
+jax = pytest.importorskip("jax", reason="JAX toolchain not installed")
+import jax.numpy as jnp
 
 from compile import model, aot
 from compile.kernels import ref

@@ -2,9 +2,14 @@
 plus lowering sanity for the pipeline artifact (the graph the rust
 coordinator's golden checks exercise)."""
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Auto-skip (not error) when the JAX toolchain or hypothesis is absent —
+# offline CI runners only have the rust toolchain.
+pytest.importorskip("jax", reason="JAX toolchain not installed")
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile import aot, model

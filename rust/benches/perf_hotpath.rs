@@ -1,37 +1,71 @@
 //! Performance bench for the simulator's hot path: simulated lane-cycles
 //! per wall-clock second over a representative workload mix (the §Perf
 //! target in EXPERIMENTS.md). Run before/after optimizations.
-use revel::workloads::{prepare, Features, Goal};
+//!
+//! The mix dispatches through the parallel sweep harness (memoization
+//! disabled — this measures simulation, not cache lookups) and emits
+//! the per-point results as `BENCH_sweep.json` so CI can archive the
+//! perf trajectory. Knobs:
+//!   REVEL_BENCH_REPS   repetitions of the mix (default 5; CI smoke: 1)
+//!   REVEL_WORKERS      worker threads (default: available parallelism)
+//!   REVEL_BENCH_OUT    artifact path (default BENCH_sweep.json)
+
+use revel::harness::{self, Options, SweepPoint};
+use revel::workloads::{Features, Goal};
+
+fn mix() -> Vec<SweepPoint> {
+    [
+        ("cholesky", 32, Goal::Latency),
+        ("solver", 32, Goal::Latency),
+        ("qr", 24, Goal::Latency),
+        ("fft", 1024, Goal::Latency),
+        ("gemm", 48, Goal::Throughput),
+        ("svd", 12, Goal::Latency),
+    ]
+    .into_iter()
+    .map(|(k, n, goal)| SweepPoint::new(k, n, Features::ALL, goal))
+    .collect()
+}
 
 fn main() {
+    let reps: usize = std::env::var("REVEL_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&r| r > 0)
+        .unwrap_or(5);
+    let out_path = std::env::var("REVEL_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_sweep.json".to_string());
+    let workers = harness::pool::default_workers();
+    let opts = Options { workers: Some(workers), use_cache: false };
+
     let mut total_cycles = 0u64;
     let mut total_lane_cycles = 0u64;
+    let mut last = Vec::new();
+    let mut last_rep_s = 0.0;
     let t = std::time::Instant::now();
-    let reps = 5;
     for _ in 0..reps {
-        for (k, n, goal) in [
-            ("cholesky", 32, Goal::Latency),
-            ("solver", 32, Goal::Latency),
-            ("qr", 24, Goal::Latency),
-            ("fft", 1024, Goal::Latency),
-            ("gemm", 48, Goal::Throughput),
-            ("svd", 12, Goal::Latency),
-        ] {
-            let r = prepare(k, n, Features::ALL, goal)
-                .unwrap()
-                .execute()
-                .unwrap();
-            total_cycles += r.cycles;
-            total_lane_cycles += r.stats.lane_cycles.iter().sum::<u64>();
+        let t_rep = std::time::Instant::now();
+        let outcomes = harness::run_all_opts(&mix(), &opts).expect("mix verifies");
+        last_rep_s = t_rep.elapsed().as_secs_f64();
+        for o in &outcomes {
+            total_cycles += o.cycles;
+            total_lane_cycles += o.stats.lane_cycles.iter().sum::<u64>();
         }
+        last = outcomes;
     }
     let dt = t.elapsed().as_secs_f64();
     println!(
-        "perf_hotpath: {total_cycles} machine-cycles, {total_lane_cycles} lane-cycles in {dt:.2}s"
+        "perf_hotpath: {total_cycles} machine-cycles, {total_lane_cycles} lane-cycles in {dt:.2}s \
+         ({reps} reps, {workers} workers)"
     );
     println!(
         "  {:.2}M machine-cycles/s | {:.2}M lane-cycles/s",
         total_cycles as f64 / dt / 1e6,
         total_lane_cycles as f64 / dt / 1e6
     );
+    // The artifact pairs one rep's results with that rep's wall time
+    // (the totals above span all reps and would skew throughput math).
+    harness::write_artifact(&out_path, &last, last_rep_s, workers)
+        .expect("write BENCH_sweep.json");
+    println!("  wrote {out_path}");
 }

@@ -166,10 +166,18 @@ pub fn serve(n_jobs: usize, workers: usize, lambda: f64, seed: u64) -> Summary {
 }
 
 /// Cross-check the pipeline stages against the AOT JAX artifacts via
-/// PJRT (the L2/L1 golden model). Returns Err if artifacts are missing.
-pub fn golden_check() -> anyhow::Result<()> {
-    use crate::runtime::Engine;
+/// PJRT (the L2/L1 golden model). Returns Err if the artifacts are
+/// missing or the binary was built without the `pjrt` feature.
+pub fn golden_check() -> crate::runtime::Result<()> {
+    use crate::runtime::{Engine, RtError};
     use crate::util::linalg::Mat;
+    let ensure = |cond: bool, msg: String| -> crate::runtime::Result<()> {
+        if cond {
+            Ok(())
+        } else {
+            Err(RtError(msg))
+        }
+    };
     let eng = Engine::discover()?;
 
     // Cholesky 16: simulate and compare against the lowered JAX kernel.
@@ -186,7 +194,7 @@ pub fn golden_check() -> anyhow::Result<()> {
             max_err = max_err.max((out[0][i * 16 + j] - want).abs());
         }
     }
-    anyhow::ensure!(max_err < 1e-3, "cholesky golden mismatch: {max_err}");
+    ensure(max_err < 1e-3, format!("cholesky golden mismatch: {max_err}"))?;
 
     // Solver 16.
     let sinst = workloads::solver::instance(16, 0);
@@ -197,10 +205,10 @@ pub fn golden_check() -> anyhow::Result<()> {
     let b32: Vec<f32> = sinst.b.iter().map(|&x| x as f32).collect();
     let out = exe.run_f32(&[l32, b32])?;
     for (j, want) in sinst.x_ref.iter().enumerate() {
-        anyhow::ensure!(
+        ensure(
             (out[0][j] - *want as f32).abs() < 1e-3,
-            "solver golden mismatch at {j}"
-        );
+            format!("solver golden mismatch at {j}"),
+        )?;
     }
 
     // GEMM 12.
@@ -209,10 +217,10 @@ pub fn golden_check() -> anyhow::Result<()> {
     let flat = |m: &Mat| -> Vec<f32> { m.data.iter().map(|&x| x as f32).collect() };
     let out = exe.run_f32(&[flat(&ginst.a), flat(&ginst.b)])?;
     for (i, want) in ginst.c_ref.data.iter().enumerate() {
-        anyhow::ensure!(
+        ensure(
             (out[0][i] - *want as f32).abs() < 1e-3,
-            "gemm golden mismatch at {i}"
-        );
+            format!("gemm golden mismatch at {i}"),
+        )?;
     }
     Ok(())
 }

@@ -37,7 +37,6 @@ impl VecVal {
     pub fn width(&self) -> usize {
         self.vals.len()
     }
-
 }
 
 /// Cross-firing accumulator state: one f64 per node per lane.
@@ -187,9 +186,7 @@ mod tests {
         b.out(1, inva, 1);
         let dfg = b.build();
         let mut acc = new_acc_state(&dfg);
-        let outs = exec_dfg(
-            &dfg,
-            &[VecVal::scalar(16.0)], &mut acc);
+        let outs = exec_dfg(&dfg, &[VecVal::scalar(16.0)], &mut acc);
         assert_eq!(outs[0].as_ref().unwrap().vals[0], 4.0);
         assert_eq!(outs[1].as_ref().unwrap().vals[0], 0.25);
     }
@@ -294,9 +291,7 @@ mod tests {
         b.out_gated(0, a, 2, Some(g));
         let dfg = b.build();
         let mut st = new_acc_state(&dfg);
-        exec_dfg(
-            &dfg,
-            &[VecVal::full(vec![1.0, 10.0]), VecVal::scalar(0.0)], &mut st);
+        exec_dfg(&dfg, &[VecVal::full(vec![1.0, 10.0]), VecVal::scalar(0.0)], &mut st);
         let out = exec_dfg(
             &dfg,
             &[VecVal::full(vec![2.0, 20.0]), VecVal::scalar(1.0)],

@@ -1,0 +1,105 @@
+//! Memoized sweep-result cache. Workload execution is deterministic in
+//! the sweep point (kernel, n, features, goal, fabric), so every report
+//! and bench shares one process-wide cache: `report all` renders eleven
+//! figures from a single pass over the distinct points. Tests use
+//! private [`SweepCache`] instances to stay isolated.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::{SweepOutcome, SweepPoint};
+
+/// Cache key: the sweep point in hashable form.
+pub type Key = (String, usize, u8, u8, Option<(usize, usize)>);
+
+pub fn key(p: &SweepPoint) -> Key {
+    (
+        p.kernel.clone(),
+        p.n,
+        p.feature_bits(),
+        match p.goal {
+            crate::workloads::Goal::Latency => 0,
+            crate::workloads::Goal::Throughput => 1,
+        },
+        p.fabric,
+    )
+}
+
+/// A memo table keyed on sweep points, with hit/miss accounting.
+#[derive(Default)]
+pub struct SweepCache {
+    map: Mutex<HashMap<Key, Arc<SweepOutcome>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SweepCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up a point, counting a hit or miss.
+    pub fn get(&self, k: &Key) -> Option<Arc<SweepOutcome>> {
+        let hit = self.map.lock().unwrap().get(k).cloned();
+        match &hit {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    /// Look up without touching the counters.
+    pub fn peek(&self, k: &Key) -> Option<Arc<SweepOutcome>> {
+        self.map.lock().unwrap().get(k).cloned()
+    }
+
+    pub fn insert(&self, k: Key, v: Arc<SweepOutcome>) {
+        self.map.lock().unwrap().insert(k, v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+
+    /// (hits, misses) recorded by [`get`](Self::get).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+/// The process-wide cache shared by reports, the CLI, and benches.
+pub fn global() -> &'static SweepCache {
+    static GLOBAL: OnceLock<SweepCache> = OnceLock::new();
+    GLOBAL.get_or_init(SweepCache::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{Features, Goal};
+
+    #[test]
+    fn keys_distinguish_every_point_dimension() {
+        let base = SweepPoint::new("solver", 12, Features::ALL, Goal::Latency);
+        let mut others = vec![
+            SweepPoint::new("qr", 12, Features::ALL, Goal::Latency),
+            SweepPoint::new("solver", 16, Features::ALL, Goal::Latency),
+            SweepPoint::new("solver", 12, Features::NONE, Goal::Latency),
+            SweepPoint::new("solver", 12, Features::ALL, Goal::Throughput),
+        ];
+        others.push(base.clone().with_fabric(2, 2));
+        for o in &others {
+            assert_ne!(key(&base), key(o), "{o:?}");
+        }
+        assert_eq!(key(&base), key(&base.clone()));
+    }
+}

@@ -1,0 +1,525 @@
+//! Parallel sweep harness: the evaluation engine behind `revel report`,
+//! `revel sweep`, and the benches.
+//!
+//! A report/bench declares its workload runs as [`SweepPoint`]s
+//! (kernel, size, feature set, goal, optional fabric override); the
+//! harness dispatches the distinct points over a [`pool`] of worker
+//! threads (each point simulates one REVEL unit — embarrassingly
+//! parallel, like independent kernel instances across cores in the
+//! 5G-PUSCH parallelization or independent tiles in tiled linear
+//! algebra), memoizes results in a process-wide [`cache`], and can emit
+//! the results as a `BENCH_sweep.json` artifact via [`json`].
+//!
+//! Determinism: a point's outcome depends only on the point (instance
+//! seeds are fixed per lane, the spatial compiler anneals from a fixed
+//! seed), so results are identical for any worker count — `report all`
+//! renders byte-identical text to the serial path.
+
+pub mod cache;
+pub mod json;
+pub mod pool;
+
+use std::sync::Arc;
+
+use crate::compiler::FabricSpec;
+use crate::model;
+use crate::sim::{Stats, BUCKETS};
+use crate::workloads::{self, Features, Goal, WlError};
+use self::json::Json;
+
+/// One workload run of a sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepPoint {
+    pub kernel: String,
+    pub n: usize,
+    pub feats: Features,
+    pub goal: Goal,
+    /// Temporal-region override (w, h) compiled via
+    /// [`FabricSpec::revel`]; None = the Table 3 default fabric.
+    pub fabric: Option<(usize, usize)>,
+}
+
+impl SweepPoint {
+    pub fn new(kernel: &str, n: usize, feats: Features, goal: Goal) -> Self {
+        Self { kernel: kernel.to_string(), n, feats, goal, fabric: None }
+    }
+
+    pub fn with_fabric(mut self, w: usize, h: usize) -> Self {
+        self.fabric = Some((w, h));
+        self
+    }
+
+    /// Feature switches packed into 4 bits (cache/JSON identity).
+    pub fn feature_bits(&self) -> u8 {
+        (self.feats.inductive as u8)
+            | (self.feats.fine_grain as u8) << 1
+            | (self.feats.heterogeneous as u8) << 2
+            | (self.feats.masking as u8) << 3
+    }
+
+    /// Human-readable feature-set name (the Fig 19 ladder names, else a
+    /// bit string).
+    pub fn feature_name(&self) -> String {
+        for (name, f) in Features::ladder() {
+            if f == self.feats {
+                return if f == Features::ALL { "all".into() } else { name.into() };
+            }
+        }
+        format!("bits{:04b}", self.feature_bits())
+    }
+}
+
+/// Result of executing one sweep point (the JSON-able subset of
+/// [`crate::workloads::RunOutcome`] plus its point).
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub point: SweepPoint,
+    pub cycles: u64,
+    pub max_err: f64,
+    pub flops: f64,
+    pub problems: usize,
+    pub stats: Stats,
+}
+
+impl SweepOutcome {
+    /// Simulated time in microseconds at the REVEL clock.
+    pub fn us(&self) -> f64 {
+        model::cycles_to_us(self.cycles)
+    }
+
+    pub fn flops_per_cycle(&self) -> f64 {
+        self.flops / self.cycles.max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let p = &self.point;
+        Json::obj(vec![
+            ("kernel", Json::Str(p.kernel.clone())),
+            ("n", Json::Num(p.n as f64)),
+            (
+                "features",
+                Json::obj(vec![
+                    ("inductive", Json::Bool(p.feats.inductive)),
+                    ("fine_grain", Json::Bool(p.feats.fine_grain)),
+                    ("heterogeneous", Json::Bool(p.feats.heterogeneous)),
+                    ("masking", Json::Bool(p.feats.masking)),
+                ]),
+            ),
+            ("feature_set", Json::Str(p.feature_name())),
+            (
+                "goal",
+                Json::Str(
+                    match p.goal {
+                        Goal::Latency => "latency",
+                        Goal::Throughput => "throughput",
+                    }
+                    .into(),
+                ),
+            ),
+            (
+                "fabric",
+                match p.fabric {
+                    None => Json::Null,
+                    Some((w, h)) => {
+                        Json::Arr(vec![Json::Num(w as f64), Json::Num(h as f64)])
+                    }
+                },
+            ),
+            ("cycles", Json::Num(self.cycles as f64)),
+            ("us", Json::Num(self.us())),
+            ("problems", Json::Num(self.problems as f64)),
+            ("max_err", Json::Num(self.max_err)),
+            ("flops", Json::Num(self.flops)),
+            ("flops_per_cycle", Json::Num(self.flops_per_cycle())),
+            (
+                "lane_cycles",
+                Json::Arr(
+                    self.stats
+                        .lane_cycles
+                        .iter()
+                        .map(|&c| Json::Num(c as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "buckets",
+                Json::Obj(
+                    self.stats
+                        .fractions()
+                        .into_iter()
+                        .map(|(b, f)| (b.name().to_string(), Json::Num(f)))
+                        .collect(),
+                ),
+            ),
+            ("commands", Json::Num(self.stats.commands as f64)),
+            ("ctrl_core_cycles", Json::Num(self.stats.ctrl_core_cycles as f64)),
+            ("spad_words", Json::Num(self.stats.spad_words as f64)),
+            ("xfer_elems", Json::Num(self.stats.xfer_elems as f64)),
+        ])
+    }
+
+    /// Inverse of [`to_json`] (schema round-trip; `buckets`/`us` are
+    /// derived fields and recomputed).
+    pub fn from_json(v: &Json) -> Result<SweepOutcome, String> {
+        let err = |f: &str| format!("BENCH_sweep result missing/invalid {f:?}");
+        let feats = v.get("features").ok_or_else(|| err("features"))?;
+        let fb = |k: &str| {
+            feats.get(k).and_then(Json::as_bool).ok_or_else(|| err(k))
+        };
+        let point = SweepPoint {
+            kernel: v
+                .get("kernel")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err("kernel"))?
+                .to_string(),
+            n: v.get("n").and_then(Json::as_usize).ok_or_else(|| err("n"))?,
+            feats: Features {
+                inductive: fb("inductive")?,
+                fine_grain: fb("fine_grain")?,
+                heterogeneous: fb("heterogeneous")?,
+                masking: fb("masking")?,
+            },
+            goal: match v.get("goal").and_then(Json::as_str) {
+                Some("latency") => Goal::Latency,
+                Some("throughput") => Goal::Throughput,
+                _ => return Err(err("goal")),
+            },
+            fabric: match v.get("fabric") {
+                None | Some(Json::Null) => None,
+                Some(Json::Arr(a)) if a.len() == 2 => Some((
+                    a[0].as_usize().ok_or_else(|| err("fabric"))?,
+                    a[1].as_usize().ok_or_else(|| err("fabric"))?,
+                )),
+                _ => return Err(err("fabric")),
+            },
+        };
+        let mut stats = Stats {
+            cycles: v
+                .get("cycles")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| err("cycles"))?,
+            ..Stats::default()
+        };
+        if let Some(arr) = v.get("lane_cycles").and_then(Json::as_arr) {
+            if arr.len() != BUCKETS.len() {
+                return Err(err("lane_cycles"));
+            }
+            for (slot, e) in stats.lane_cycles.iter_mut().zip(arr) {
+                *slot = e.as_u64().ok_or_else(|| err("lane_cycles"))?;
+            }
+        }
+        for (field, slot) in [
+            ("commands", &mut stats.commands),
+            ("ctrl_core_cycles", &mut stats.ctrl_core_cycles),
+            ("spad_words", &mut stats.spad_words),
+            ("xfer_elems", &mut stats.xfer_elems),
+        ] {
+            if let Some(x) = v.get(field).and_then(Json::as_u64) {
+                *slot = x;
+            }
+        }
+        Ok(SweepOutcome {
+            cycles: stats.cycles,
+            max_err: v
+                .get("max_err")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| err("max_err"))?,
+            flops: v
+                .get("flops")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| err("flops"))?,
+            problems: v
+                .get("problems")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| err("problems"))?,
+            point,
+            stats,
+        })
+    }
+}
+
+/// Harness run options.
+#[derive(Clone, Debug)]
+pub struct Options {
+    /// Worker threads; None = `REVEL_WORKERS` / available parallelism.
+    pub workers: Option<usize>,
+    /// Consult + fill the process-wide memo cache.
+    pub use_cache: bool,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self { workers: None, use_cache: true }
+    }
+}
+
+/// Reports legitimately run very long programs (e.g. the no-FGOP SVD at
+/// n=32 exceeds the default sim watchdog); raise the budget once,
+/// before any worker threads exist.
+pub fn ensure_budget() {
+    if std::env::var_os("REVEL_MAX_CYCLES").is_none() {
+        std::env::set_var("REVEL_MAX_CYCLES", "80000000");
+    }
+}
+
+/// Execute one sweep point on the current thread (fabric override is
+/// installed thread-locally for the duration of the run).
+pub fn execute_point(p: &SweepPoint) -> Result<SweepOutcome, WlError> {
+    if let Some((w, h)) = p.fabric {
+        workloads::set_fabric(Some(FabricSpec::revel(w, h)));
+    }
+    let r = workloads::prepare(&p.kernel, p.n, p.feats, p.goal)
+        .and_then(|prep| prep.execute());
+    if p.fabric.is_some() {
+        workloads::set_fabric(None);
+    }
+    let r = r?;
+    Ok(SweepOutcome {
+        point: p.clone(),
+        cycles: r.cycles,
+        max_err: r.max_err,
+        flops: r.flops,
+        problems: r.problems,
+        stats: r.stats,
+    })
+}
+
+/// Run every point (deduplicated, memoized in the process-wide cache,
+/// parallel) and return the outcomes aligned with `points`. The first
+/// workload error aborts the sweep.
+pub fn run_all(points: &[SweepPoint]) -> Result<Vec<Arc<SweepOutcome>>, WlError> {
+    run_all_opts(points, &Options::default())
+}
+
+pub fn run_all_opts(
+    points: &[SweepPoint],
+    opts: &Options,
+) -> Result<Vec<Arc<SweepOutcome>>, WlError> {
+    run_all_in(points, opts, opts.use_cache.then(cache::global))
+}
+
+/// Like [`run_all_opts`] but against an explicit cache (tests use
+/// private instances; `None` disables memoization).
+pub fn run_all_in(
+    points: &[SweepPoint],
+    opts: &Options,
+    memo: Option<&cache::SweepCache>,
+) -> Result<Vec<Arc<SweepOutcome>>, WlError> {
+    ensure_budget();
+    // Partition into distinct points that still need execution. Cache
+    // consultation happens once per distinct point (hit/miss counted).
+    let mut local: std::collections::HashMap<cache::Key, Arc<SweepOutcome>> =
+        std::collections::HashMap::new();
+    let mut todo: Vec<SweepPoint> = Vec::new();
+    let mut todo_keys: Vec<cache::Key> = Vec::new();
+    for p in points {
+        let k = cache::key(p);
+        if todo_keys.contains(&k) || local.contains_key(&k) {
+            continue;
+        }
+        if let Some(hit) = memo.and_then(|c| c.get(&k)) {
+            local.insert(k, hit);
+            continue;
+        }
+        todo.push(p.clone());
+        todo_keys.push(k);
+    }
+    let workers = opts.workers.unwrap_or_else(pool::default_workers);
+    let fresh: Vec<Result<SweepOutcome, WlError>> =
+        pool::run_parallel(&todo, workers, execute_point);
+    for (k, r) in todo_keys.into_iter().zip(fresh) {
+        let out = Arc::new(r?);
+        if let Some(c) = memo {
+            c.insert(k.clone(), out.clone());
+        }
+        local.insert(k, out);
+    }
+    Ok(points
+        .iter()
+        .map(|p| local[&cache::key(p)].clone())
+        .collect())
+}
+
+/// Convenience: cached cycles of a single point.
+pub fn cycles(
+    kernel: &str,
+    n: usize,
+    feats: Features,
+    goal: Goal,
+) -> Result<u64, WlError> {
+    let out = run_all(&[SweepPoint::new(kernel, n, feats, goal)])?;
+    Ok(out[0].cycles)
+}
+
+/// The default full sweep: every kernel at every paper size, both
+/// goals, all FGOP features.
+pub fn full_sweep_points(kernels: &[&str]) -> Vec<SweepPoint> {
+    let mut v = Vec::new();
+    for &k in kernels {
+        for &n in workloads::sizes(k).iter() {
+            for goal in [Goal::Latency, Goal::Throughput] {
+                v.push(SweepPoint::new(k, n, Features::ALL, goal));
+            }
+        }
+    }
+    v
+}
+
+/// Build the `BENCH_sweep.json` document.
+pub fn artifact_json(
+    outcomes: &[Arc<SweepOutcome>],
+    wall_s: f64,
+    workers: usize,
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("revel-bench-sweep".into())),
+        ("version", Json::Num(1.0)),
+        ("workers", Json::Num(workers as f64)),
+        ("wall_s", Json::Num(wall_s)),
+        ("freq_ghz", Json::Num(model::FREQ_GHZ)),
+        (
+            "results",
+            Json::Arr(outcomes.iter().map(|o| o.to_json()).collect()),
+        ),
+    ])
+}
+
+/// Write the sweep artifact to `path`.
+pub fn write_artifact(
+    path: &str,
+    outcomes: &[Arc<SweepOutcome>],
+    wall_s: f64,
+    workers: usize,
+) -> std::io::Result<()> {
+    std::fs::write(path, artifact_json(outcomes, wall_s, workers).pretty())
+}
+
+/// Parse a sweep artifact back into outcomes (schema round-trip).
+pub fn read_artifact(text: &str) -> Result<Vec<SweepOutcome>, String> {
+    let doc = json::parse(text)?;
+    if doc.get("schema").and_then(Json::as_str) != Some("revel-bench-sweep") {
+        return Err("not a revel-bench-sweep document".into());
+    }
+    doc.get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing results array".to_string())?
+        .iter()
+        .map(SweepOutcome::from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cheap_points() -> Vec<SweepPoint> {
+        vec![
+            SweepPoint::new("solver", 8, Features::ALL, Goal::Latency),
+            SweepPoint::new("solver", 12, Features::ALL, Goal::Latency),
+            SweepPoint::new("fir", 12, Features::ALL, Goal::Throughput),
+            SweepPoint::new("gemm", 12, Features::ALL, Goal::Latency),
+        ]
+    }
+
+    #[test]
+    fn cache_misses_then_hits() {
+        let memo = cache::SweepCache::new();
+        let pts = cheap_points();
+        let opts = Options { workers: Some(2), use_cache: true };
+        let a = run_all_in(&pts, &opts, Some(&memo)).unwrap();
+        assert_eq!(memo.stats(), (0, pts.len() as u64), "first run all misses");
+        assert_eq!(memo.len(), pts.len());
+        let b = run_all_in(&pts, &opts, Some(&memo)).unwrap();
+        assert_eq!(
+            memo.stats(),
+            (pts.len() as u64, pts.len() as u64),
+            "second run all hits"
+        );
+        for (x, y) in a.iter().zip(&b) {
+            assert!(Arc::ptr_eq(x, y), "second run returns the cached Arc");
+        }
+    }
+
+    #[test]
+    fn results_independent_of_worker_count() {
+        let pts = cheap_points();
+        let opts1 = Options { workers: Some(1), use_cache: false };
+        let opts4 = Options { workers: Some(4), use_cache: false };
+        let a = run_all_opts(&pts, &opts1).unwrap();
+        let b = run_all_opts(&pts, &opts4).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cycles, y.cycles, "{:?}", x.point);
+            assert_eq!(x.stats.lane_cycles, y.stats.lane_cycles);
+            assert_eq!(x.max_err, y.max_err);
+        }
+    }
+
+    #[test]
+    fn duplicate_points_execute_once_and_align() {
+        let memo = cache::SweepCache::new();
+        let p = SweepPoint::new("solver", 8, Features::ALL, Goal::Latency);
+        let pts = vec![p.clone(), p.clone(), p];
+        let opts = Options { workers: Some(2), use_cache: true };
+        let out = run_all_in(&pts, &opts, Some(&memo)).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(Arc::ptr_eq(&out[0], &out[1]) && Arc::ptr_eq(&out[1], &out[2]));
+        assert_eq!(memo.len(), 1, "one execution for three occurrences");
+        assert_eq!(memo.stats().1, 1, "one miss, duplicates dedup before lookup");
+    }
+
+    #[test]
+    fn fabric_override_points_change_results_and_restore_default() {
+        let base = SweepPoint::new("solver", 12, Features::ALL, Goal::Latency);
+        let small = base.clone().with_fabric(1, 1);
+        let opts = Options { workers: Some(2), use_cache: false };
+        let out = run_all_opts(&[base.clone(), small], &opts).unwrap();
+        assert!(out[0].cycles > 0 && out[1].cycles > 0);
+        // After the sweep the ambient fabric is the Table 3 default.
+        assert_eq!(crate::workloads::fabric().temporal_tiles(), 2);
+        // And a default-fabric rerun reproduces the base result.
+        let again = run_all_opts(&[base], &opts).unwrap();
+        assert_eq!(again[0].cycles, out[0].cycles);
+    }
+
+    #[test]
+    fn json_schema_roundtrip() {
+        let pts = vec![
+            SweepPoint::new("solver", 8, Features::NONE, Goal::Latency),
+            SweepPoint::new("fir", 12, Features::ALL, Goal::Throughput)
+                .with_fabric(2, 2),
+        ];
+        let opts = Options { workers: Some(2), use_cache: false };
+        let out = run_all_opts(&pts, &opts).unwrap();
+        let doc = artifact_json(&out, 1.25, 4).pretty();
+        let back = read_artifact(&doc).unwrap();
+        assert_eq!(back.len(), out.len());
+        for (orig, rt) in out.iter().zip(&back) {
+            assert_eq!(rt.point, orig.point);
+            assert_eq!(rt.cycles, orig.cycles);
+            assert_eq!(rt.problems, orig.problems);
+            assert_eq!(rt.flops, orig.flops);
+            assert_eq!(rt.max_err, orig.max_err);
+            assert_eq!(rt.stats.lane_cycles, orig.stats.lane_cycles);
+            assert_eq!(rt.stats.commands, orig.stats.commands);
+        }
+        // Round-trip is a fixed point: re-serializing parses identically.
+        let doc2 = artifact_json(
+            &back.into_iter().map(Arc::new).collect::<Vec<_>>(),
+            1.25,
+            4,
+        )
+        .pretty();
+        assert_eq!(json::parse(&doc).unwrap(), json::parse(&doc2).unwrap());
+    }
+
+    #[test]
+    fn full_sweep_covers_every_kernel_and_goal() {
+        let pts = full_sweep_points(&workloads::NAMES);
+        let sizes: usize = workloads::NAMES.iter().map(|k| workloads::sizes(k).len()).sum();
+        assert_eq!(pts.len(), 2 * sizes);
+        for k in workloads::NAMES {
+            assert!(pts.iter().any(|p| p.kernel == k && p.goal == Goal::Latency));
+            assert!(pts.iter().any(|p| p.kernel == k && p.goal == Goal::Throughput));
+        }
+    }
+}

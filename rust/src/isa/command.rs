@@ -211,7 +211,8 @@ mod tests {
                 pat: Pattern2D::inductive(0, 1, n as f64, n + 1, n, -1.0),
                 port: 0,
                 reuse: None,
-                masked: true, rmw: None,
+                masked: true,
+                rmw: None,
             },
             LaneMask::one(0),
         );
@@ -222,7 +223,8 @@ mod tests {
                         pat: Pattern2D::lin(j * (n + 1), n - j),
                         port: 0,
                         reuse: None,
-                        masked: true, rmw: None,
+                        masked: true,
+                        rmw: None,
                     },
                     LaneMask::one(0),
                 )
@@ -240,7 +242,8 @@ mod tests {
                     pat: Pattern2D::lin(0, 10),
                     port: 0,
                     reuse: None,
-                    masked: true, rmw: None,
+                    masked: true,
+                    rmw: None,
                 },
                 LaneMask::first_n(2),
             ),

@@ -4,9 +4,12 @@
 //!   revel report <fig1|fig7|fig8|fig16|fig17|fig18|fig19|fig20|fig21|fig22|table6|headline|all>
 //!   revel run <kernel> <n> [--throughput] [--features base|+inductive|+fine-grain|+hetero|all]
 //!   revel trace <kernel> <n>
+//!   revel sweep [--out FILE] [--workers N] [kernel ...]
+//!   revel pipeline [jobs] [workers]
 //!   revel list
 
 use revel::analysis::kernels;
+use revel::harness;
 use revel::model;
 use revel::report;
 use revel::workloads::{self, Features, Goal};
@@ -93,6 +96,79 @@ fn main() {
                 s.regions
             );
         }
+        Some("sweep") => {
+            let out_path = args
+                .iter()
+                .position(|a| a == "--out")
+                .and_then(|i| args.get(i + 1))
+                .cloned()
+                .unwrap_or_else(|| "BENCH_sweep.json".to_string());
+            let workers = args
+                .iter()
+                .position(|a| a == "--workers")
+                .and_then(|i| args.get(i + 1))
+                .and_then(|s| s.parse::<usize>().ok());
+            // Positional args (excluding flag values) select kernels.
+            let mut skip = std::collections::HashSet::new();
+            for flag in ["--out", "--workers"] {
+                if let Some(i) = args.iter().position(|a| a == flag) {
+                    skip.insert(i);
+                    skip.insert(i + 1);
+                }
+            }
+            let kernels: Vec<&str> = args
+                .iter()
+                .enumerate()
+                .skip(1)
+                .filter(|(i, a)| !skip.contains(i) && !a.starts_with("--"))
+                .map(|(_, a)| a.as_str())
+                .collect();
+            let kernels: Vec<&str> = if kernels.is_empty() {
+                workloads::NAMES.to_vec()
+            } else {
+                for k in &kernels {
+                    assert!(
+                        workloads::NAMES.contains(k),
+                        "unknown kernel {k}; see `revel list`"
+                    );
+                }
+                kernels
+            };
+            let points = harness::full_sweep_points(&kernels);
+            let n_workers = workers.unwrap_or_else(harness::pool::default_workers);
+            eprintln!(
+                "sweeping {} points over {} workers...",
+                points.len(),
+                n_workers
+            );
+            let t0 = std::time::Instant::now();
+            let opts = harness::Options { workers, use_cache: true };
+            let outcomes =
+                harness::run_all_opts(&points, &opts).expect("sweep must verify");
+            let wall_s = t0.elapsed().as_secs_f64();
+            let mut t = revel::util::stats::Table::new(&[
+                "kernel", "n", "goal", "cycles", "us", "flops/cyc",
+            ]);
+            for o in &outcomes {
+                t.row(vec![
+                    o.point.kernel.clone(),
+                    o.point.n.to_string(),
+                    format!("{:?}", o.point.goal),
+                    o.cycles.to_string(),
+                    format!("{:.2}", o.us()),
+                    format!("{:.2}", o.flops_per_cycle()),
+                ]);
+            }
+            println!("{}", t.render());
+            println!(
+                "{} points in {wall_s:.2}s wall ({:.1} points/s) over {n_workers} workers",
+                outcomes.len(),
+                outcomes.len() as f64 / wall_s.max(1e-9),
+            );
+            harness::write_artifact(&out_path, &outcomes, wall_s, n_workers)
+                .expect("write sweep artifact");
+            println!("wrote {out_path}");
+        }
         Some("pipeline") => {
             let jobs: usize =
                 args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
@@ -120,10 +196,11 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: revel <report|run|trace|pipeline|list> ...\n\
+                "usage: revel <report|run|trace|sweep|pipeline|list> ...\n\
                    revel report all\n\
                    revel run cholesky 16 [--throughput] [--features base]\n\
-                   revel trace qr 32"
+                   revel trace qr 32\n\
+                   revel sweep --out BENCH_sweep.json [--workers 8] [cholesky solver ...]"
             );
             std::process::exit(2);
         }

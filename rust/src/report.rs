@@ -1,33 +1,48 @@
 //! Paper-reproduction reports: one function per figure/table of the
 //! evaluation (§10). Each returns rendered text; the `revel` CLI and
 //! the bench harnesses are thin wrappers around these.
+//!
+//! Every figure *declares* its workload runs as [`harness::SweepPoint`]s
+//! and renders from the harness's results: the points dispatch across
+//! the worker pool and memoize in the process-wide cache, so `report
+//! all` simulates each distinct (kernel, n, features, goal, fabric)
+//! combination exactly once — in parallel — and the rendered text is
+//! identical to the old serial path (outcomes are deterministic).
+
+use std::sync::Arc;
 
 use crate::analysis::{kernels, streams};
 use crate::baselines::{self, cpu, taskpar, CpuKind};
 use crate::compiler::FabricSpec;
+use crate::harness::{self, SweepOutcome, SweepPoint};
 use crate::isa::Capability;
 use crate::model;
 use crate::sim::Bucket;
-use crate::util::stats::{cdf, cdf_at, fx, Table};
 use crate::util::geomean;
+use crate::util::stats::{cdf, cdf_at, fx, Table};
 use crate::workloads::{self, Features, Goal};
 
-/// Reports legitimately run very long programs (e.g. the no-FGOP SVD at
-/// n=32 exceeds the default test watchdog); raise the budget once.
-fn ensure_budget() {
-    if std::env::var_os("REVEL_MAX_CYCLES").is_none() {
-        std::env::set_var("REVEL_MAX_CYCLES", "80000000");
-    }
+/// Run a figure's declared points (parallel + cached); reports keep the
+/// old panic-on-failure contract.
+fn sweep(points: &[SweepPoint]) -> Vec<Arc<SweepOutcome>> {
+    harness::run_all(points).expect("workload must verify")
 }
 
-/// Simulated REVEL time in microseconds for one run.
-fn revel_us(name: &str, n: usize, feats: Features, goal: Goal) -> f64 {
-    ensure_budget();
-    let r = workloads::prepare(name, n, feats, goal)
-        .expect("prepare")
-        .execute()
-        .expect("workload must verify");
-    model::cycles_to_us(r.cycles)
+fn pt(kernel: &str, n: usize, feats: Features, goal: Goal) -> SweepPoint {
+    SweepPoint::new(kernel, n, feats, goal)
+}
+
+/// The (kernel, size) rows of Fig 16/17 and the headline: each kernel
+/// at its smallest and largest paper size.
+fn small_large_rows() -> Vec<(&'static str, usize, usize)> {
+    let mut rows = Vec::new();
+    for k in workloads::NAMES {
+        let sizes = workloads::sizes(k);
+        for (si, &n) in [sizes[0], *sizes.last().unwrap()].iter().enumerate() {
+            rows.push((k, n, si));
+        }
+    }
+    rows
 }
 
 /// Fig 1: percent of peak performance of CPU and DSP per kernel.
@@ -93,35 +108,42 @@ pub fn fig8() -> String {
     )
 }
 
+fn fig16_points() -> Vec<SweepPoint> {
+    let mut v = Vec::new();
+    for (k, n, _) in small_large_rows() {
+        v.push(pt(k, n, Features::ALL, Goal::Latency));
+        v.push(pt(k, n, Features::NONE, Goal::Latency));
+    }
+    v
+}
+
 /// Fig 16: latency-optimized speedups over the DSP (small and large).
 pub fn fig16() -> String {
+    let rs = sweep(&fig16_points());
     let mut t = Table::new(&[
         "kernel", "n", "DSP us", "REVEL us", "no-FGOP us", "speedup", "FGOP gain",
     ]);
     let mut small = Vec::new();
     let mut large = Vec::new();
-    for k in workloads::NAMES {
-        let sizes = workloads::sizes(k);
-        for (si, &n) in [sizes[0], *sizes.last().unwrap()].iter().enumerate() {
-            let dsp = cpu::dsp_time_us(k, n);
-            let rv = revel_us(k, n, Features::ALL, Goal::Latency);
-            let nf = revel_us(k, n, Features::NONE, Goal::Latency);
-            let sp = dsp / rv;
-            if si == 0 {
-                small.push(sp);
-            } else {
-                large.push(sp);
-            }
-            t.row(vec![
-                k.into(),
-                n.to_string(),
-                format!("{dsp:.2}"),
-                format!("{rv:.2}"),
-                format!("{nf:.2}"),
-                fx(sp),
-                fx(nf / rv),
-            ]);
+    for (i, (k, n, si)) in small_large_rows().into_iter().enumerate() {
+        let dsp = cpu::dsp_time_us(k, n);
+        let rv = rs[2 * i].us();
+        let nf = rs[2 * i + 1].us();
+        let sp = dsp / rv;
+        if si == 0 {
+            small.push(sp);
+        } else {
+            large.push(sp);
         }
+        t.row(vec![
+            k.into(),
+            n.to_string(),
+            format!("{dsp:.2}"),
+            format!("{rv:.2}"),
+            format!("{nf:.2}"),
+            fx(sp),
+            fx(nf / rv),
+        ]);
     }
     format!(
         "Fig 16: latency-optimized speedup vs DSP\n{}\ngeomean: small {} large {}\n",
@@ -131,25 +153,30 @@ pub fn fig16() -> String {
     )
 }
 
+fn fig17_points() -> Vec<SweepPoint> {
+    small_large_rows()
+        .into_iter()
+        .map(|(k, n, _)| pt(k, n, Features::ALL, Goal::Throughput))
+        .collect()
+}
+
 /// Fig 17: throughput-optimized speedups (8 problems / makespan).
 pub fn fig17() -> String {
+    let rs = sweep(&fig17_points());
     let mut t = Table::new(&["kernel", "n", "DSP us", "REVEL us", "speedup"]);
     let mut sp_all = Vec::new();
-    for k in workloads::NAMES {
-        let sizes = workloads::sizes(k);
-        for &n in [sizes[0], *sizes.last().unwrap()].iter() {
-            let dsp = cpu::throughput_time_us(CpuKind::Dsp, k, n);
-            let rv = revel_us(k, n, Features::ALL, Goal::Throughput);
-            let sp = dsp / rv;
-            sp_all.push(sp);
-            t.row(vec![
-                k.into(),
-                n.to_string(),
-                format!("{dsp:.2}"),
-                format!("{rv:.2}"),
-                fx(sp),
-            ]);
-        }
+    for (i, (k, n, _)) in small_large_rows().into_iter().enumerate() {
+        let dsp = cpu::throughput_time_us(CpuKind::Dsp, k, n);
+        let rv = rs[i].us();
+        let sp = dsp / rv;
+        sp_all.push(sp);
+        t.row(vec![
+            k.into(),
+            n.to_string(),
+            format!("{dsp:.2}"),
+            format!("{rv:.2}"),
+            fx(sp),
+        ]);
     }
     format!(
         "Fig 17: throughput-optimized speedup vs DSP (8 problems)\n{}\ngeomean {}\n",
@@ -158,9 +185,29 @@ pub fn fig17() -> String {
     )
 }
 
+/// Fig 18/19 rows: every kernel at its middle size, throughput then
+/// latency goal (tagged as the paper does).
+fn mid_rows(tags: [&'static str; 2]) -> Vec<(&'static str, usize, &'static str, Goal)> {
+    let mut rows = Vec::new();
+    for k in workloads::NAMES {
+        let n = workloads::sizes(k)[1];
+        for (tag, goal) in [(tags[0], Goal::Throughput), (tags[1], Goal::Latency)] {
+            rows.push((k, n, tag, goal));
+        }
+    }
+    rows
+}
+
+fn fig18_points() -> Vec<SweepPoint> {
+    mid_rows(["thr", "multi"])
+        .into_iter()
+        .map(|(k, n, _, goal)| pt(k, n, Features::ALL, goal))
+        .collect()
+}
+
 /// Fig 18: cycle-level breakdown per workload.
 pub fn fig18() -> String {
-    ensure_budget();
+    let rs = sweep(&fig18_points());
     let hdr: Vec<String> = std::iter::once("kernel/goal".to_string())
         .chain(
             crate::sim::BUCKETS
@@ -170,83 +217,79 @@ pub fn fig18() -> String {
         )
         .collect();
     let mut t = Table::new(&hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>());
-    for k in workloads::NAMES {
-        let n = workloads::sizes(k)[1];
-        for (tag, goal) in [("thr", Goal::Throughput), ("multi", Goal::Latency)] {
-            let r = workloads::prepare(k, n, Features::ALL, goal)
-                .unwrap()
-                .execute()
-                .unwrap();
-            let mut row = vec![format!("{k}-{tag}")];
-            for (_, f) in r.stats.fractions() {
-                row.push(format!("{:.0}%", 100.0 * f));
-            }
-            t.row(row);
+    for (i, (k, _, tag, _)) in mid_rows(["thr", "multi"]).into_iter().enumerate() {
+        let mut row = vec![format!("{k}-{tag}")];
+        for (_, f) in rs[i].stats.fractions() {
+            row.push(format!("{:.0}%", 100.0 * f));
         }
+        t.row(row);
     }
     format!("Fig 18: cycle-level breakdown (fractions of active lane-cycles)\n{}", t.render())
 }
 
+fn fig19_points() -> Vec<SweepPoint> {
+    let mut v = Vec::new();
+    for (k, n, _, goal) in mid_rows(["", "-lat"]) {
+        v.push(pt(k, n, Features::NONE, goal));
+        for (_, f) in Features::ladder() {
+            v.push(pt(k, n, f, goal));
+        }
+    }
+    v
+}
+
 /// Fig 19: incremental speedup of the five mechanism versions.
 pub fn fig19() -> String {
-    ensure_budget();
+    let rs = sweep(&fig19_points());
     let names: Vec<&str> = Features::ladder().iter().map(|(n, _)| *n).collect();
     let hdr: Vec<&str> =
         std::iter::once("kernel").chain(names.iter().copied()).collect();
     let mut t = Table::new(&hdr);
-    for k in workloads::NAMES {
-        let n = workloads::sizes(k)[1];
-        for (tag, goal) in [("", Goal::Throughput), ("-lat", Goal::Latency)] {
-            let mut row = vec![format!("{k}{tag}")];
-            let base = workloads::prepare(k, n, Features::NONE, goal)
-                .unwrap()
-                .execute()
-                .unwrap()
-                .cycles;
-            for (_, f) in Features::ladder() {
-                let c = workloads::prepare(k, n, f, goal)
-                    .unwrap()
-                    .execute()
-                    .unwrap()
-                    .cycles;
-                row.push(fx(base as f64 / c as f64));
-            }
-            t.row(row);
+    let per_row = 1 + Features::ladder().len();
+    for (i, (k, _, tag, _)) in mid_rows(["", "-lat"]).into_iter().enumerate() {
+        let mut row = vec![format!("{k}{tag}")];
+        let base = rs[per_row * i].cycles;
+        for j in 0..Features::ladder().len() {
+            let c = rs[per_row * i + 1 + j].cycles;
+            row.push(fx(base as f64 / c as f64));
         }
+        t.row(row);
     }
     format!("Fig 19: cumulative speedup per mechanism (vs base version)\n{}", t.render())
 }
 
+/// Fig 20 configuration: the kernels and temporal-region sizes swept.
+const FIG20_KERNELS: [&str; 4] = ["svd", "qr", "cholesky", "solver"];
+const FIG20_SIZES: [(usize, usize); 4] = [(1, 1), (2, 1), (2, 2), (4, 2)];
+
+fn fig20_points() -> Vec<SweepPoint> {
+    let mut v = Vec::new();
+    for k in FIG20_KERNELS {
+        v.push(pt(k, 12, Features::ALL, Goal::Latency)); // default-fabric base
+    }
+    for (w, h) in FIG20_SIZES {
+        for k in FIG20_KERNELS {
+            v.push(pt(k, 12, Features::ALL, Goal::Latency).with_fabric(w, h));
+        }
+    }
+    v
+}
+
 /// Fig 20: temporal-region size sensitivity (performance + area).
 pub fn fig20() -> String {
-    ensure_budget();
-    let sizes = [(1usize, 1usize), (2, 1), (2, 2), (4, 2)];
+    let rs = sweep(&fig20_points());
     let mut t = Table::new(&["region", "fabric mm^2", "svd", "qr", "cholesky", "solver"]);
-    let base: Vec<u64> = ["svd", "qr", "cholesky", "solver"]
-        .iter()
-        .map(|k| {
-            workloads::prepare(k, 12, Features::ALL, Goal::Latency)
-                .unwrap()
-                .execute()
-                .unwrap()
-                .cycles
-        })
-        .collect();
-    for (w, h) in sizes {
-        workloads::set_fabric(Some(FabricSpec::revel(w, h)));
+    let base: Vec<u64> =
+        (0..FIG20_KERNELS.len()).map(|i| rs[i].cycles).collect();
+    for (si, (w, h)) in FIG20_SIZES.into_iter().enumerate() {
         let mut row = vec![
             format!("{w}x{h}"),
             format!("{:.3}", model::fabric_area_mm2(&FabricSpec::revel(w, h))),
         ];
-        for (i, k) in ["svd", "qr", "cholesky", "solver"].iter().enumerate() {
-            let c = workloads::prepare(k, 12, Features::ALL, Goal::Latency)
-                .unwrap()
-                .execute()
-                .unwrap()
-                .cycles;
+        for i in 0..FIG20_KERNELS.len() {
+            let c = rs[FIG20_KERNELS.len() * (1 + si) + i].cycles;
             row.push(format!("{:.2}", base[i] as f64 / c as f64));
         }
-        workloads::set_fabric(None);
         t.row(row);
     }
     format!(
@@ -291,9 +334,16 @@ pub fn fig21_22() -> String {
     )
 }
 
+fn table6_points() -> Vec<SweepPoint> {
+    workloads::NAMES
+        .iter()
+        .map(|&k| pt(k, workloads::sizes(k)[1], Features::ALL, Goal::Latency))
+        .collect()
+}
+
 /// Table 6 (top): area/power breakdown; (bottom): ASIC overheads.
 pub fn table6() -> String {
-    ensure_budget();
+    let rs = sweep(&table6_points());
     let mut t = Table::new(&["block", "area mm^2", "power mW"]);
     for b in model::LANE_BLOCKS {
         t.row(vec![
@@ -318,17 +368,13 @@ pub fn table6() -> String {
         format!("{:.1}", model::revel_power_mw()),
     ]);
     let mut b = Table::new(&["kernel", "power ovhd", "ASIC cycles", "REVEL cycles"]);
-    for k in workloads::NAMES {
+    for (i, k) in workloads::NAMES.iter().enumerate() {
         let n = workloads::sizes(k)[1];
-        let r = workloads::prepare(k, n, Features::ALL, Goal::Latency)
-            .unwrap()
-            .execute()
-            .unwrap();
         b.row(vec![
-            k.into(),
+            (*k).into(),
             format!("{:.1}x", model::power_overhead(k)),
             baselines::asic_cycles(k, n).to_string(),
-            r.cycles.to_string(),
+            rs[i].cycles.to_string(),
         ]);
     }
     let mean_p: f64 = workloads::NAMES
@@ -347,25 +393,30 @@ pub fn table6() -> String {
     )
 }
 
+fn headline_points() -> Vec<SweepPoint> {
+    small_large_rows()
+        .into_iter()
+        .map(|(k, n, _)| pt(k, n, Features::ALL, Goal::Latency))
+        .collect()
+}
+
 /// Headline numbers (abstract / Q2 / Q7).
 pub fn headline() -> String {
+    let rs = sweep(&headline_points());
     let mut lat_small = Vec::new();
     let mut lat_large = Vec::new();
     let mut vs_ooo = Vec::new();
     let mut max_sp: f64 = 0.0;
-    for k in workloads::NAMES {
-        let sizes = workloads::sizes(k);
-        for (si, &n) in [sizes[0], *sizes.last().unwrap()].iter().enumerate() {
-            let rv = revel_us(k, n, Features::ALL, Goal::Latency);
-            let sp = cpu::dsp_time_us(k, n) / rv;
-            max_sp = max_sp.max(sp);
-            if si == 0 {
-                lat_small.push(sp);
-            } else {
-                lat_large.push(sp);
-            }
-            vs_ooo.push(cpu::ooo_time_us(k, n) / rv);
+    for (i, (k, n, si)) in small_large_rows().into_iter().enumerate() {
+        let rv = rs[i].us();
+        let sp = cpu::dsp_time_us(k, n) / rv;
+        max_sp = max_sp.max(sp);
+        if si == 0 {
+            lat_small.push(sp);
+        } else {
+            lat_large.push(sp);
         }
+        vs_ooo.push(cpu::ooo_time_us(k, n) / rv);
     }
     let gm_small = geomean(&lat_small);
     let gm_large = geomean(&lat_large);
@@ -390,8 +441,23 @@ pub fn headline() -> String {
     )
 }
 
+/// Every sweep point any report needs — `all()` prewarms the cache with
+/// one maximally parallel pass before rendering.
+pub fn all_points() -> Vec<SweepPoint> {
+    let mut v = Vec::new();
+    v.extend(fig16_points());
+    v.extend(fig17_points());
+    v.extend(fig18_points());
+    v.extend(fig19_points());
+    v.extend(fig20_points());
+    v.extend(table6_points());
+    v.extend(headline_points());
+    v
+}
+
 /// Every report, in paper order.
 pub fn all() -> String {
+    sweep(&all_points()); // one parallel pass over every distinct point
     [
         fig1(),
         fig7(),
@@ -425,5 +491,21 @@ mod tests {
         // kernel, most at the large sizes.
         let out = fig16();
         assert!(out.contains("geomean"));
+    }
+
+    #[test]
+    fn declared_points_cover_every_figure_row() {
+        // 2 points per (kernel, small/large) row in fig16; one each in
+        // fig17/headline; fig19 = base + 5 ladder steps per row.
+        let rows = small_large_rows().len();
+        assert_eq!(fig16_points().len(), 2 * rows);
+        assert_eq!(fig17_points().len(), rows);
+        assert_eq!(headline_points().len(), rows);
+        assert_eq!(fig19_points().len(), 6 * 2 * workloads::NAMES.len());
+        assert_eq!(
+            fig20_points().len(),
+            FIG20_KERNELS.len() * (1 + FIG20_SIZES.len())
+        );
+        assert!(!all_points().is_empty());
     }
 }

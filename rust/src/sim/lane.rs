@@ -738,7 +738,8 @@ mod tests {
             pat: Pattern2D::lin(0, 8),
             port: 0,
             reuse: None,
-            masked: true, rmw: None,
+            masked: true,
+            rmw: None,
         });
         lane.queue.push_back(Cmd::ConstSt {
             pat: ConstPattern::scalar(10.0, 2),
@@ -764,7 +765,8 @@ mod tests {
             pat: Pattern2D::inductive(0, 1, 4.0, 4, 2, -2.0),
             port: 0,
             reuse: None,
-            masked: true, rmw: None,
+            masked: true,
+            rmw: None,
         });
         lane.queue.push_back(Cmd::ConstSt {
             pat: ConstPattern::scalar(2.0, 2),
@@ -819,7 +821,8 @@ mod tests {
             pat: Pattern2D::lin(0, 4),
             port: 0,
             reuse: None,
-            masked: true, rmw: None,
+            masked: true,
+            rmw: None,
         });
         lane.queue.push_back(Cmd::ConstSt {
             pat: ConstPattern::scalar(3.0, 1),
@@ -832,7 +835,8 @@ mod tests {
             pat: Pattern2D::lin(0, 4),
             port: 0,
             reuse: None,
-            masked: true, rmw: None,
+            masked: true,
+            rmw: None,
         });
         lane.queue.push_back(Cmd::ConstSt {
             pat: ConstPattern::scalar(10.0, 1),
@@ -853,14 +857,16 @@ mod tests {
             pat: Pattern2D::lin(0, 8),
             port: 0,
             reuse: None,
-            masked: true, rmw: None,
+            masked: true,
+            rmw: None,
         });
         // One scalar (5.0) reused for all 8 elements (2 firings of 4).
         lane.queue.push_back(Cmd::LocalLd {
             pat: Pattern2D::lin(16, 1),
             port: 1,
             reuse: Some(Reuse::uniform(8.0)),
-            masked: true, rmw: None,
+            masked: true,
+            rmw: None,
         });
         lane.spad.write(16, 5.0);
         lane.queue.push_back(Cmd::LocalSt { pat: Pattern2D::lin(32, 8), port: 0, rmw: false });

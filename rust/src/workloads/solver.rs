@@ -92,7 +92,8 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
             pat: Pattern2D::lin(B_BASE, 1),
             port: 4,
             reuse: None,
-            masked: feats.masking, rmw: None,
+            masked: feats.masking,
+            rmw: None,
         }));
         // div emit gate: forward x for the first n-1 iterations only.
         p.push(vs(Cmd::ConstSt {
@@ -128,7 +129,8 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
                 pat: tri(L_BASE + 1, n_i + 1),
                 port: 1,
                 reuse: None,
-                masked: feats.masking, rmw: None,
+                masked: feats.masking,
+                rmw: None,
             }));
             p.push(vs(Cmd::ConstSt {
                 pat: ConstPattern::first_of_row(1.0, 0.0, (n - 1) as f64, n_i - 1, -1.0),
@@ -158,13 +160,15 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
                     pat: Pattern2D::lin(B_BASE + 1 + j, len),
                     port: 0,
                     reuse: None,
-                    masked: feats.masking, rmw: None,
+                    masked: feats.masking,
+                    rmw: None,
                 }));
                 p.push(vs(Cmd::LocalLd {
                     pat: Pattern2D::lin(L_BASE + j * (n_i + 1) + 1, len),
                     port: 1,
                     reuse: None,
-                    masked: feats.masking, rmw: None,
+                    masked: feats.masking,
+                    rmw: None,
                 }));
                 p.push(vs(Cmd::ConstSt {
                     pat: ConstPattern::first_of_row(1.0, 0.0, len as f64, 1, 0.0),
@@ -205,14 +209,16 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
                 pat: Pattern2D::lin(B_BASE + j, 1),
                 port: 4,
                 reuse: None,
-                masked: feats.masking, rmw: None,
+                masked: feats.masking,
+                rmw: None,
             }));
             // l_jj per iteration (nothing is hoisted without FGOP).
             p.push(vs(Cmd::LocalLd {
                 pat: Pattern2D::lin(L_BASE + j * (n_i + 1), 1),
                 port: 5,
                 reuse: None,
-                masked: feats.masking, rmw: None,
+                masked: feats.masking,
+                rmw: None,
             }));
             // x[j] lands in memory: result copy + update-region copy.
             p.push(vs(Cmd::LocalSt {
@@ -234,19 +240,22 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
                 pat: Pattern2D::lin(XT_BASE + j, 1),
                 port: 2,
                 reuse: Some(Reuse::uniform(len as f64)),
-                masked: feats.masking, rmw: None,
+                masked: feats.masking,
+                rmw: None,
             }));
             p.push(vs(Cmd::LocalLd {
                 pat: Pattern2D::lin(B_BASE + 1 + j, len),
                 port: 0,
                 reuse: None,
-                masked: feats.masking, rmw: None,
+                masked: feats.masking,
+                rmw: None,
             }));
             p.push(vs(Cmd::LocalLd {
                 pat: Pattern2D::lin(L_BASE + j * (n_i + 1) + 1, len),
                 port: 1,
                 reuse: None,
-                masked: feats.masking, rmw: None,
+                masked: feats.masking,
+                rmw: None,
             }));
             p.push(vs(Cmd::LocalSt {
                 pat: Pattern2D::lin(B_BASE + 1 + j, len),
