@@ -1,19 +1,53 @@
-//! End-to-end driver: a 5G-baseband receiver pipeline served by a pool
-//! of simulated REVEL units (paper Fig 4), with real data flowing
-//! through FFT -> Cholesky -> Solver -> GEMM, verified at every stage,
-//! and (when `make artifacts` has run) cross-checked against the
-//! AOT-compiled JAX/Pallas golden models through PJRT.
+//! End-to-end driver: the 5G receiver pipeline (paper Fig 4) served by
+//! a cluster of simulated REVEL units. Three traffic patterns run over
+//! the same class mix — an open-loop flood (peak capacity), Poisson
+//! arrivals paced at 80% of that capacity (steady state), and a closed
+//! loop (latency under self-limiting load) — each reporting
+//! p50/p95/p99 latency, throughput in subframes per virtual second,
+//! per-unit balance, and how far the batched stage simulations were
+//! amortized. When `make artifacts` has run, the stage results are also
+//! cross-checked against the AOT-compiled JAX golden models via PJRT.
 //!
-//!     cargo run --release --example pipeline_5g [jobs] [workers]
+//!     cargo run --release --example pipeline_5g [jobs] [units]
 
-use revel::coordinator;
+use revel::coordinator::{
+    self, ArrivalMode, ClusterConfig, ServeConfig, ServeReport,
+};
+
+fn show(tag: &str, r: &ServeReport) {
+    println!("\n{tag}:");
+    println!(
+        "  completed/dropped/failed   {} / {} / {}",
+        r.completed, r.dropped, r.failed
+    );
+    println!("  virtual makespan           {:.3} ms", r.makespan_s * 1e3);
+    println!("  throughput                 {:.0} subframes/s", r.throughput_per_s);
+    println!(
+        "  latency p50/p95/p99        {:.1} / {:.1} / {:.1} us",
+        r.slo.latency_us.p50, r.slo.latency_us.p95, r.slo.latency_us.p99
+    );
+    println!("  queue delay p99            {:.1} us", r.slo.queue_us.p99);
+    let jobs: Vec<usize> = r.per_unit.iter().map(|u| u.jobs).collect();
+    let stolen: usize = r.per_unit.iter().map(|u| u.stolen).sum();
+    println!("  jobs per unit              {jobs:?} ({stolen} stolen)");
+    println!(
+        "  batching                   {} stage sims for {} stage executions",
+        r.batching.distinct_points, r.batching.stage_runs
+    );
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let jobs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(16);
-    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let jobs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let units: usize =
+        args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
 
-    println!("5G receiver pipeline: stages {:?}", coordinator::STAGES);
+    println!("5G receiver pipeline: {} units, {} subframes", units, jobs);
+    for c in &coordinator::CLASSES {
+        let stages: Vec<String> =
+            c.stages.iter().map(|s| format!("{} {}", s.kernel, s.n)).collect();
+        println!("  class {:<10} weight {:.2}: {}", c.name, c.weight, stages.join(" -> "));
+    }
 
     // L2/L1 golden cross-check through PJRT (skipped without artifacts).
     match coordinator::golden_check() {
@@ -21,19 +55,30 @@ fn main() {
         Err(e) => println!("PJRT golden check skipped/failed: {e}"),
     }
 
-    // Open-loop burst: measures raw serving capacity.
-    let s = coordinator::serve(jobs, workers, 0.0, 42);
-    println!("\nburst of {} jobs over {} workers:", s.jobs, workers);
-    println!("  wall time        {:.2} s ({:.2} jobs/s)", s.wall_s, s.jobs_per_s);
-    println!("  sim latency p50  {:.1} us", s.sim_latency_p50_us);
-    println!("  sim latency p99  {:.1} us", s.sim_latency_p99_us);
-    println!("  queue delay p99  {:.3} s", s.queue_delay_p99_s);
-    println!("  jobs per worker  {:?}", s.per_worker);
+    let base = ServeConfig {
+        jobs,
+        seed: 7,
+        mode: ArrivalMode::Open { lambda: 0.0 },
+        cluster: ClusterConfig { units, ..ClusterConfig::default() },
+        workers: None,
+        classes: coordinator::CLASSES.to_vec(),
+    };
 
-    // Paced Poisson arrivals: checks the queue drains under load.
-    let rate = (s.jobs_per_s * 0.8).max(1.0);
-    let p = coordinator::serve(jobs, workers, rate, 7);
-    println!("\npoisson arrivals at {rate:.1} jobs/s:");
-    println!("  wall time        {:.2} s", p.wall_s);
-    println!("  queue delay p99  {:.3} s", p.queue_delay_p99_s);
+    // Open-loop flood: every subframe at t=0 measures raw capacity.
+    let flood = coordinator::serve(&base).expect("flood run");
+    show("flood (open loop, all subframes at t=0)", &flood);
+
+    // Poisson arrivals at 80% of the measured capacity: queues form
+    // and drain; latency shows the queueing tail, not just service.
+    let lambda = (flood.throughput_per_s * 0.8).max(1.0);
+    let mut paced = base.clone();
+    paced.mode = ArrivalMode::Open { lambda };
+    let p = coordinator::serve(&paced).expect("paced run");
+    show(&format!("poisson arrivals at {lambda:.0} subframes/s (80% load)"), &p);
+
+    // Closed loop: 2 clients per unit, zero think time.
+    let mut closed = base.clone();
+    closed.mode = ArrivalMode::Closed { clients: 2 * units };
+    let c = coordinator::serve(&closed).expect("closed run");
+    show(&format!("closed loop ({} clients)", 2 * units), &c);
 }

@@ -1,0 +1,521 @@
+//! The serving cluster: N simulated REVEL units with per-unit bounded
+//! run queues, a least-loaded dispatcher with idle-time work stealing,
+//! and cluster-wide admission control with load shedding.
+//!
+//! The engine is a single-threaded discrete-event simulation over
+//! *virtual* time. Per-job service times are the simulated stage cycle
+//! counts at the REVEL clock (supplied by the caller, who obtains them
+//! from one batched [`crate::harness`] pass), so a run is bit-exactly
+//! deterministic for a fixed trace: every tie — same event timestamp,
+//! equal unit load — breaks on insertion order or the lowest unit
+//! index. Host parallelism lives entirely in the harness worker pool
+//! that pre-simulates the distinct stage kernels; the dispatcher itself
+//! never races.
+//!
+//! Dispatch policy, in order:
+//! 1. an idle unit runs an arriving job immediately (idle units always
+//!    have empty queues — they drain or steal before idling);
+//! 2. otherwise the job queues at the eligible unit with the least
+//!    backlog (in-service remainder + queued service seconds), bounded
+//!    by [`ClusterConfig::queue_cap`];
+//! 3. with every run queue full, the job waits in the cluster-wide
+//!    admission queue, bounded by [`ClusterConfig::admit_cap`];
+//! 4. beyond that, open-loop arrivals are shed (`dropped`) —
+//!    backpressure instead of unbounded memory growth.
+//!
+//! A unit that finishes its run queue steals the newest job from the
+//! most-backlogged peer before going idle.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Cluster sizing and admission policy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Simulated REVEL units serving in parallel.
+    pub units: usize,
+    /// Per-unit run-queue bound (jobs waiting at one unit, excluding
+    /// the one in service).
+    pub queue_cap: usize,
+    /// Cluster-wide admission queue bound; open-loop arrivals beyond
+    /// it are shed.
+    pub admit_cap: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { units: 4, queue_cap: 8, admit_cap: 1024 }
+    }
+}
+
+/// One subframe arrival offered to the dispatcher.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    pub id: u64,
+    /// Index into the caller's class/service tables.
+    pub class: usize,
+    /// Arrival time (virtual seconds since trace start).
+    pub t_s: f64,
+}
+
+/// A served job, fully timed (virtual seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Completion {
+    pub id: u64,
+    pub class: usize,
+    pub unit: usize,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+    /// Taken from another unit's run queue by an idle unit.
+    pub stolen: bool,
+}
+
+/// Per-unit serving counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct UnitStats {
+    pub jobs: usize,
+    pub busy_s: f64,
+    /// Jobs this unit stole from a peer's queue.
+    pub stolen: usize,
+}
+
+/// Outcome of one cluster run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterRun {
+    /// Served jobs, in service-start order.
+    pub completions: Vec<Completion>,
+    /// Arrivals shed by admission control (every queue full).
+    pub dropped: usize,
+    /// Arrivals whose class has no service profile (a degraded stage);
+    /// the job fails, the cluster keeps serving.
+    pub failed: usize,
+    pub units: Vec<UnitStats>,
+    /// Virtual seconds from the first arrival to the last pipeline
+    /// exit (0 when nothing completes).
+    pub makespan_s: f64,
+    /// High-water mark of the admission queue.
+    pub peak_admit_queue: usize,
+}
+
+/// How jobs are offered to the cluster.
+pub enum Workload<'a> {
+    /// Open loop: a pre-generated arrival trace. The trace — and hence
+    /// per-job service demand — is independent of the unit count, so
+    /// unit-scaling comparisons run "the same traffic".
+    Open(&'a [Arrival]),
+    /// Closed loop: `clients` concurrent submitters; each submits its
+    /// next subframe the instant the previous one leaves the pipeline,
+    /// `jobs` in total. Self-limiting, so nothing is ever shed as long
+    /// as `clients` fits the queues.
+    Closed { clients: usize, jobs: usize },
+}
+
+#[derive(Clone, Copy, Debug)]
+enum EvKind {
+    Arrive(Arrival),
+    /// Unit `usize` finishes its in-service job.
+    Free(usize),
+}
+
+/// Heap entry ordered by (time, insertion sequence) so the binary heap
+/// pops events in deterministic virtual-time order.
+struct Ev {
+    t_s: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, o: &Self) -> bool {
+        self.t_s.to_bits() == o.t_s.to_bits() && self.seq == o.seq
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl Ord for Ev {
+    // Reversed: BinaryHeap is a max-heap, we want the earliest event.
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        o.t_s.total_cmp(&self.t_s).then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+
+struct Unit {
+    busy: bool,
+    /// When the in-service job finishes (valid while `busy`).
+    free_at: f64,
+    queue: VecDeque<Arrival>,
+    /// Total service seconds sitting in `queue`.
+    queued_s: f64,
+    stats: UnitStats,
+}
+
+impl Unit {
+    fn new() -> Self {
+        Self {
+            busy: false,
+            free_at: 0.0,
+            queue: VecDeque::new(),
+            queued_s: 0.0,
+            stats: UnitStats::default(),
+        }
+    }
+}
+
+struct Engine<'a> {
+    cfg: ClusterConfig,
+    /// Per-class stage service seconds; `None` marks a degraded class.
+    service: &'a [Option<[f64; 4]>],
+    units: Vec<Unit>,
+    heap: BinaryHeap<Ev>,
+    seq: u64,
+    admission: VecDeque<Arrival>,
+    out: ClusterRun,
+}
+
+impl Engine<'_> {
+    fn total(&self, class: usize) -> f64 {
+        self.service
+            .get(class)
+            .copied()
+            .flatten()
+            .map(|s| s.iter().sum())
+            .unwrap_or(0.0)
+    }
+
+    fn push(&mut self, t_s: f64, kind: EvKind) {
+        self.heap.push(Ev { t_s, seq: self.seq, kind });
+        self.seq += 1;
+    }
+
+    /// Backlog a new job would wait behind at unit `u`.
+    fn load(&self, u: usize, now: f64) -> f64 {
+        let unit = &self.units[u];
+        let in_service = if unit.busy { (unit.free_at - now).max(0.0) } else { 0.0 };
+        in_service + unit.queued_s
+    }
+
+    /// Begin service of `a` on unit `u` at `now` (the unit is idle).
+    fn start(&mut self, u: usize, a: Arrival, stolen: bool, now: f64) {
+        let svc = self.total(a.class);
+        let finish = now + svc;
+        {
+            let unit = &mut self.units[u];
+            unit.busy = true;
+            unit.free_at = finish;
+            unit.stats.jobs += 1;
+            unit.stats.busy_s += svc;
+            if stolen {
+                unit.stats.stolen += 1;
+            }
+        }
+        self.out.completions.push(Completion {
+            id: a.id,
+            class: a.class,
+            unit: u,
+            arrival_s: a.t_s,
+            start_s: now,
+            finish_s: finish,
+            stolen,
+        });
+        if finish > self.out.makespan_s {
+            self.out.makespan_s = finish;
+        }
+        self.push(finish, EvKind::Free(u));
+    }
+
+    /// Least-loaded dispatch; `false` means every eligible queue is
+    /// full (the job backs up into the admission queue).
+    fn try_assign(&mut self, a: Arrival, now: f64) -> bool {
+        let mut best: Option<(f64, usize)> = None;
+        for u in 0..self.units.len() {
+            let unit = &self.units[u];
+            let eligible = !unit.busy || unit.queue.len() < self.cfg.queue_cap;
+            if !eligible {
+                continue;
+            }
+            let load = self.load(u, now);
+            match best {
+                Some((b, _)) if load >= b => {}
+                _ => best = Some((load, u)),
+            }
+        }
+        let Some((_, u)) = best else { return false };
+        if !self.units[u].busy {
+            // Idle units always have empty queues (they drain or steal
+            // before idling), so this job runs immediately.
+            self.start(u, a, false, now);
+        } else {
+            let svc = self.total(a.class);
+            self.units[u].queued_s += svc;
+            self.units[u].queue.push_back(a);
+        }
+        true
+    }
+
+    /// An idle unit with an empty queue takes the *newest* job from
+    /// the most-backlogged peer (steal-from-tail keeps the victim's
+    /// FIFO head intact).
+    fn steal_for(&mut self, u: usize) -> Option<Arrival> {
+        let mut best: Option<(f64, usize)> = None;
+        for v in 0..self.units.len() {
+            if v == u || self.units[v].queue.is_empty() {
+                continue;
+            }
+            let backlog = self.units[v].queued_s;
+            match best {
+                Some((b, _)) if backlog <= b => {}
+                _ => best = Some((backlog, v)),
+            }
+        }
+        let (_, v) = best?;
+        let a = self.units[v].queue.pop_back()?;
+        let svc = self.total(a.class);
+        self.units[v].queued_s -= svc;
+        Some(a)
+    }
+
+    /// Move admission-queue jobs into freed run-queue slots, in FIFO
+    /// order, until assignment backpressures again.
+    fn drain_admission(&mut self, now: f64) {
+        while let Some(&a) = self.admission.front() {
+            if self.try_assign(a, now) {
+                self.admission.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn on_arrive(&mut self, a: Arrival, now: f64) {
+        if self.service.get(a.class).copied().flatten().is_none() {
+            self.out.failed += 1;
+            return;
+        }
+        if self.try_assign(a, now) {
+            return;
+        }
+        if self.admission.len() < self.cfg.admit_cap {
+            self.admission.push_back(a);
+            self.out.peak_admit_queue = self.out.peak_admit_queue.max(self.admission.len());
+        } else {
+            self.out.dropped += 1;
+        }
+    }
+
+    fn on_free(&mut self, u: usize, now: f64) {
+        self.units[u].busy = false;
+        let next = if let Some(a) = self.units[u].queue.pop_front() {
+            let svc = self.total(a.class);
+            self.units[u].queued_s -= svc;
+            Some((a, false))
+        } else {
+            self.steal_for(u).map(|a| (a, true))
+        };
+        if let Some((a, stolen)) = next {
+            self.start(u, a, stolen, now);
+        }
+        self.drain_admission(now);
+    }
+}
+
+/// Run a workload through the cluster.
+///
+/// `class_service` gives each job class's per-stage service seconds;
+/// `None` marks a class degraded by a failed stage — its jobs count as
+/// `failed` while the rest of the cluster keeps serving. `pick_class`
+/// samples a class index per closed-loop submission (ignored for open
+/// traces). Deterministic: identical inputs give a bit-identical
+/// [`ClusterRun`].
+pub fn run(
+    cfg: &ClusterConfig,
+    class_service: &[Option<[f64; 4]>],
+    workload: Workload<'_>,
+    mut pick_class: impl FnMut() -> usize,
+) -> ClusterRun {
+    let cfg = ClusterConfig {
+        units: cfg.units.max(1),
+        queue_cap: cfg.queue_cap.max(1),
+        admit_cap: cfg.admit_cap,
+    };
+    let mut eng = Engine {
+        units: (0..cfg.units).map(|_| Unit::new()).collect(),
+        cfg,
+        service: class_service,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        admission: VecDeque::new(),
+        out: ClusterRun::default(),
+    };
+    let (mut remaining, mut next_id, closed) = match workload {
+        Workload::Open(trace) => {
+            for a in trace {
+                eng.push(a.t_s, EvKind::Arrive(*a));
+            }
+            (0usize, 0u64, false)
+        }
+        Workload::Closed { clients, jobs } => {
+            let c = clients.max(1).min(jobs);
+            for id in 0..c {
+                let class = pick_class();
+                eng.push(0.0, EvKind::Arrive(Arrival { id: id as u64, class, t_s: 0.0 }));
+            }
+            (jobs - c, c as u64, true)
+        }
+    };
+    // Events pop in time order, so the first Arrive seen is the trace
+    // start; makespan is measured from it, not from virtual t=0 (a
+    // paced trace's first Poisson gap is not serving time).
+    let mut first_arrival: Option<f64> = None;
+    while let Some(ev) = eng.heap.pop() {
+        let now = ev.t_s;
+        let resubmit = match ev.kind {
+            EvKind::Arrive(a) => {
+                first_arrival.get_or_insert(now);
+                // A degraded-class job fails instantly; its closed-loop
+                // client resubmits rather than silently dying.
+                let dead = eng.service.get(a.class).copied().flatten().is_none();
+                eng.on_arrive(a, now);
+                closed && dead
+            }
+            EvKind::Free(u) => {
+                eng.on_free(u, now);
+                closed
+            }
+        };
+        if resubmit && remaining > 0 {
+            let class = pick_class();
+            eng.push(now, EvKind::Arrive(Arrival { id: next_id, class, t_s: now }));
+            next_id += 1;
+            remaining -= 1;
+        }
+    }
+    let mut out = eng.out;
+    if let Some(t0) = first_arrival {
+        out.makespan_s = (out.makespan_s - t0).max(0.0);
+    }
+    out.units = eng.units.iter().map(|u| u.stats.clone()).collect();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Service profiles: class i takes `totals[i]` seconds, split
+    /// evenly over the four stages.
+    fn svc(totals: &[f64]) -> Vec<Option<[f64; 4]>> {
+        totals.iter().map(|&t| Some([t / 4.0; 4])).collect()
+    }
+
+    fn flood(n: usize, class: usize) -> Vec<Arrival> {
+        (0..n).map(|i| Arrival { id: i as u64, class, t_s: 0.0 }).collect()
+    }
+
+    #[test]
+    fn least_loaded_unit_wins() {
+        // class 0 takes 4 s, class 1 takes 1 s.
+        let service = svc(&[4.0, 1.0]);
+        let cfg = ClusterConfig { units: 2, queue_cap: 4, admit_cap: 16 };
+        let tr = vec![
+            Arrival { id: 0, class: 0, t_s: 0.0 }, // idle unit 0
+            Arrival { id: 1, class: 1, t_s: 0.0 }, // idle unit 1
+            Arrival { id: 2, class: 1, t_s: 0.0 }, // both busy; unit 1 backlog is smaller
+        ];
+        let r = run(&cfg, &service, Workload::Open(&tr), || 0);
+        assert_eq!(r.completions.iter().find(|c| c.id == 2).unwrap().unit, 1);
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.completions.len(), 3);
+    }
+
+    #[test]
+    fn backpressure_bounds_accepted_jobs() {
+        let service = svc(&[1.0]);
+        let cfg = ClusterConfig { units: 1, queue_cap: 1, admit_cap: 2 };
+        let r = run(&cfg, &service, Workload::Open(&flood(10, 0)), || 0);
+        // 1 in service + 1 queued + 2 admitted; the other 6 shed.
+        assert_eq!(r.completions.len(), 4);
+        assert_eq!(r.dropped, 6);
+        assert_eq!(r.peak_admit_queue, 2);
+        assert!((r.makespan_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_units_steal_queued_work() {
+        // class 0: 8 s (pins unit 0); class 1: 1 s.
+        let service = svc(&[8.0, 1.0]);
+        let cfg = ClusterConfig { units: 2, queue_cap: 2, admit_cap: 8 };
+        let tr = vec![
+            Arrival { id: 0, class: 0, t_s: 0.0 }, // unit 0, busy to t=8
+            Arrival { id: 1, class: 1, t_s: 0.0 }, // unit 1, busy to t=1
+            Arrival { id: 2, class: 1, t_s: 0.0 }, // queues at unit 1 (lighter)
+            Arrival { id: 3, class: 1, t_s: 0.0 }, // queues at unit 1 (cap reached)
+            Arrival { id: 4, class: 1, t_s: 0.0 }, // unit 1 full -> queues at unit 0
+        ];
+        let r = run(&cfg, &service, Workload::Open(&tr), || 0);
+        let c4 = r.completions.iter().find(|c| c.id == 4).unwrap();
+        assert!(c4.stolen, "unit 1 drains and steals job 4 from unit 0's queue");
+        assert_eq!(c4.unit, 1);
+        assert_eq!(r.units[1].stolen, 1);
+        assert!(r.makespan_s < 8.5, "stealing keeps the light jobs off the pinned unit");
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let service = svc(&[3.0, 1.0, 0.5]);
+        let cfg = ClusterConfig { units: 3, queue_cap: 2, admit_cap: 4 };
+        let tr: Vec<Arrival> = (0..40)
+            .map(|i| Arrival {
+                id: i as u64,
+                class: (i * 7 % 3) as usize,
+                t_s: (i % 11) as f64 * 0.3,
+            })
+            .collect();
+        let a = run(&cfg, &service, Workload::Open(&tr), || 0);
+        let b = run(&cfg, &service, Workload::Open(&tr), || 0);
+        assert_eq!(a, b, "bit-identical replay for an identical trace");
+        assert!(a.completions.len() + a.dropped == 40);
+    }
+
+    #[test]
+    fn degraded_class_fails_jobs_without_poisoning() {
+        let service = vec![Some([0.25; 4]), None];
+        let cfg = ClusterConfig::default();
+        let tr: Vec<Arrival> = (0..10)
+            .map(|i| Arrival { id: i as u64, class: (i % 2) as usize, t_s: 0.0 })
+            .collect();
+        let r = run(&cfg, &service, Workload::Open(&tr), || 0);
+        assert_eq!(r.failed, 5);
+        assert_eq!(r.completions.len(), 5);
+        assert!(r.completions.iter().all(|c| c.class == 0));
+    }
+
+    #[test]
+    fn makespan_measured_from_first_arrival() {
+        let service = svc(&[1.0]);
+        let cfg = ClusterConfig { units: 1, queue_cap: 2, admit_cap: 4 };
+        let tr = vec![
+            Arrival { id: 0, class: 0, t_s: 5.0 },
+            Arrival { id: 1, class: 0, t_s: 5.5 },
+        ];
+        let r = run(&cfg, &service, Workload::Open(&tr), || 0);
+        // Finishes at t=6 and t=7; the 5 s lead-in is not serving time.
+        assert!((r.makespan_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_loop_serves_all_jobs() {
+        let service = svc(&[1.0]);
+        let cfg = ClusterConfig { units: 2, queue_cap: 2, admit_cap: 4 };
+        let r = run(&cfg, &service, Workload::Closed { clients: 2, jobs: 6 }, || 0);
+        assert_eq!(r.completions.len(), 6);
+        assert_eq!(r.dropped, 0);
+        assert!((r.makespan_s - 3.0).abs() < 1e-12, "2 clients, 1 s each, 6 jobs");
+    }
+}

@@ -1,0 +1,709 @@
+//! `revel serve`: synthesize a deterministic 5G subframe arrival trace,
+//! push it through the [`super::cluster`] dispatcher, and account
+//! latency/SLO results into a `BENCH_serve.json` artifact (same
+//! hand-rolled JSON dialect as `BENCH_sweep.json`).
+//!
+//! Host-side batching: each distinct stage kernel `(kernel, n,
+//! features, goal)` across all job classes is simulated exactly once,
+//! in one parallel [`crate::harness`] pass through the process-wide
+//! memo cache — thousands of subframes amortize a handful of cycle-
+//! accurate simulations. The cluster then replays those service times
+//! in virtual time, so for a fixed [`ServeConfig`] the whole report is
+//! bit-deterministic; only the `host` block of the artifact (wall
+//! clock, worker count) varies between runs.
+
+use std::sync::Arc;
+
+use crate::harness::{self, json, json::Json, SweepOutcome, SweepPoint};
+use crate::model;
+use crate::runtime::{Result, RtError};
+use crate::util::Rng;
+use crate::workloads::{Features, Goal};
+
+use super::cluster::{self, Arrival, ClusterConfig, Completion, Workload};
+use super::slo::{Pctls, SloAccountant, SloDigest};
+use super::{JobClass, CLASSES, STAGE_NAMES};
+
+/// Per-job records are embedded in the artifact only up to this many
+/// jobs (they exist to make determinism diffable, not to bloat disk).
+pub const DETAIL_CAP: usize = 1024;
+
+/// How the synthetic trace offers subframes to the cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalMode {
+    /// Open loop: Poisson arrivals at `lambda` subframes per virtual
+    /// second; `lambda <= 0` floods every job at t = 0 (peak load).
+    Open { lambda: f64 },
+    /// Closed loop: `clients` concurrent submitters with zero think
+    /// time — each submits its next subframe when the previous one
+    /// finishes.
+    Closed { clients: usize },
+}
+
+/// Full configuration of one serve run.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Total subframes in the trace.
+    pub jobs: usize,
+    /// Seed for the arrival trace and class mix ([`Rng`] — xoshiro).
+    pub seed: u64,
+    pub mode: ArrivalMode,
+    pub cluster: ClusterConfig,
+    /// Host worker threads for the batched stage pre-simulation
+    /// (`None` = harness default / `REVEL_WORKERS`).
+    pub workers: Option<usize>,
+    /// Subframe classes in the traffic mix (defaults to [`CLASSES`]).
+    pub classes: Vec<JobClass>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            jobs: 200,
+            seed: 7,
+            mode: ArrivalMode::Open { lambda: 0.0 },
+            cluster: ClusterConfig::default(),
+            workers: None,
+            classes: CLASSES.to_vec(),
+        }
+    }
+}
+
+/// Per-unit slice of the report.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UnitReport {
+    pub jobs: usize,
+    pub busy_s: f64,
+    /// busy_s / makespan — fraction of the run this unit served.
+    pub utilization: f64,
+    pub stolen: usize,
+}
+
+/// Per-class slice of the report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassReport {
+    pub name: String,
+    pub weight: f64,
+    pub completed: usize,
+    /// Simulated cycles per stage; `None` when a stage failed and the
+    /// class was degraded.
+    pub stage_cycles: Option<[u64; 4]>,
+}
+
+/// Host-side batching accounting: how many cycle-accurate simulations
+/// actually ran vs. how many stage executions the trace represents.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Batching {
+    pub distinct_points: usize,
+    pub stage_runs: usize,
+}
+
+/// Everything one serve run reports. All fields are deterministic in
+/// the [`ServeConfig`]; host wall-clock data is added only at
+/// serialization time ([`ServeReport::to_json`]) so two runs with the
+/// same config compare equal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeReport {
+    pub units: usize,
+    pub jobs: usize,
+    pub seed: u64,
+    pub mode: ArrivalMode,
+    pub queue_cap: usize,
+    pub admit_cap: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub failed: usize,
+    pub peak_admit_queue: usize,
+    /// Virtual seconds from first arrival to last pipeline exit.
+    pub makespan_s: f64,
+    /// Subframes per virtual second at the REVEL clock.
+    pub throughput_per_s: f64,
+    pub slo: SloDigest,
+    pub per_unit: Vec<UnitReport>,
+    pub classes: Vec<ClassReport>,
+    pub batching: Batching,
+    /// Human-readable reasons for degraded classes (empty when
+    /// everything simulated cleanly).
+    pub stage_errors: Vec<String>,
+    /// Per-job timing (present when `jobs <= DETAIL_CAP`).
+    pub jobs_detail: Vec<Completion>,
+}
+
+struct StageTable {
+    per_class: Vec<Option<[u64; 4]>>,
+    distinct_points: usize,
+    errors: Vec<String>,
+}
+
+/// One batched harness pass over the distinct stage kernels of all
+/// classes. A failing stage degrades only the classes that use it (the
+/// error is recorded); it does not abort the serve run.
+fn stage_table(classes: &[JobClass], workers: Option<usize>) -> StageTable {
+    let mut points: Vec<SweepPoint> = Vec::new();
+    for c in classes {
+        for s in &c.stages {
+            let p = SweepPoint::new(s.kernel, s.n, Features::ALL, Goal::Latency);
+            if !points.contains(&p) {
+                points.push(p);
+            }
+        }
+    }
+    let opts = harness::Options { workers, use_cache: true };
+    let mut errors = Vec::new();
+    let outcomes: Vec<Option<Arc<SweepOutcome>>> =
+        match harness::run_all_opts(&points, &opts) {
+            Ok(os) => os.into_iter().map(Some).collect(),
+            // Some point failed: fall back to per-point execution (the
+            // memo cache keeps the successful ones free) so only the
+            // broken stages degrade.
+            Err(_) => points
+                .iter()
+                .map(|p| {
+                    match harness::run_all_opts(std::slice::from_ref(p), &opts) {
+                        Ok(mut os) => Some(os.remove(0)),
+                        Err(e) => {
+                            errors.push(format!("{} n={}: {e}", p.kernel, p.n));
+                            None
+                        }
+                    }
+                })
+                .collect(),
+        };
+    let cycles_of = |kernel: &str, n: usize| -> Option<u64> {
+        points
+            .iter()
+            .zip(&outcomes)
+            .find(|(p, _)| p.kernel == kernel && p.n == n)
+            .and_then(|(_, o)| o.as_ref())
+            .map(|o| o.cycles)
+    };
+    let per_class = classes
+        .iter()
+        .map(|c| {
+            let mut cy = [0u64; 4];
+            for (slot, s) in cy.iter_mut().zip(c.stages.iter()) {
+                match cycles_of(s.kernel, s.n) {
+                    Some(x) => *slot = x,
+                    None => return None,
+                }
+            }
+            Some(cy)
+        })
+        .collect();
+    StageTable { per_class, distinct_points: points.len(), errors }
+}
+
+/// Sample a class index from cumulative weights.
+fn pick_weighted(rng: &mut Rng, cum: &[f64]) -> usize {
+    let total = cum.last().copied().unwrap_or(1.0);
+    let r = rng.f64() * total;
+    cum.iter().position(|&c| r < c).unwrap_or(cum.len().saturating_sub(1))
+}
+
+/// Serve a synthetic subframe trace on a simulated REVEL cluster.
+///
+/// Stage failures degrade the affected class (recorded in
+/// `stage_errors` / `failed`) instead of panicking a worker; a
+/// [`RtError`] is returned only for unusable configurations.
+pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
+    if cfg.classes.is_empty() {
+        return Err(RtError("serve: no job classes configured".into()));
+    }
+    harness::ensure_budget();
+    let st = stage_table(&cfg.classes, cfg.workers);
+    let class_service: Vec<Option<[f64; 4]>> = st
+        .per_class
+        .iter()
+        .map(|o| o.map(|cy| cy.map(|c| model::cycles_to_us(c) * 1e-6)))
+        .collect();
+    let cum: Vec<f64> = cfg
+        .classes
+        .iter()
+        .scan(0.0, |acc, c| {
+            *acc += c.weight.max(0.0);
+            Some(*acc)
+        })
+        .collect();
+    // Normalize exactly as cluster::run will, so the artifact's config
+    // block echoes the policy that actually ran.
+    let cluster_cfg = ClusterConfig {
+        units: cfg.cluster.units.max(1),
+        queue_cap: cfg.cluster.queue_cap.max(1),
+        admit_cap: cfg.cluster.admit_cap,
+    };
+    let mut rng = Rng::new(cfg.seed);
+    let run = match cfg.mode {
+        ArrivalMode::Open { lambda } => {
+            let mut t = 0.0;
+            let arrivals: Vec<Arrival> = (0..cfg.jobs)
+                .map(|id| {
+                    if lambda > 0.0 {
+                        t += rng.exp(lambda);
+                    }
+                    let class = pick_weighted(&mut rng, &cum);
+                    Arrival { id: id as u64, class, t_s: t }
+                })
+                .collect();
+            cluster::run(&cluster_cfg, &class_service, Workload::Open(&arrivals), || 0)
+        }
+        ArrivalMode::Closed { clients } => cluster::run(
+            &cluster_cfg,
+            &class_service,
+            Workload::Closed { clients, jobs: cfg.jobs },
+            || pick_weighted(&mut rng, &cum),
+        ),
+    };
+    let mut acc = SloAccountant::new();
+    let mut per_class_done = vec![0usize; cfg.classes.len()];
+    for c in &run.completions {
+        per_class_done[c.class] += 1;
+        let s = class_service[c.class].unwrap_or([0.0; 4]);
+        let service: f64 = s.iter().sum();
+        acc.record(
+            (c.finish_s - c.arrival_s) * 1e6,
+            (c.start_s - c.arrival_s) * 1e6,
+            service * 1e6,
+            [s[0] * 1e6, s[1] * 1e6, s[2] * 1e6, s[3] * 1e6],
+        );
+    }
+    let completed = run.completions.len();
+    let throughput =
+        if run.makespan_s > 0.0 { completed as f64 / run.makespan_s } else { 0.0 };
+    let per_unit = run
+        .units
+        .iter()
+        .map(|u| UnitReport {
+            jobs: u.jobs,
+            busy_s: u.busy_s,
+            utilization: if run.makespan_s > 0.0 { u.busy_s / run.makespan_s } else { 0.0 },
+            stolen: u.stolen,
+        })
+        .collect();
+    let classes = cfg
+        .classes
+        .iter()
+        .enumerate()
+        .map(|(i, c)| ClassReport {
+            name: c.name.to_string(),
+            weight: c.weight,
+            completed: per_class_done[i],
+            stage_cycles: st.per_class[i],
+        })
+        .collect();
+    Ok(ServeReport {
+        units: cluster_cfg.units,
+        jobs: cfg.jobs,
+        seed: cfg.seed,
+        mode: cfg.mode,
+        queue_cap: cluster_cfg.queue_cap,
+        admit_cap: cluster_cfg.admit_cap,
+        completed,
+        dropped: run.dropped,
+        failed: run.failed,
+        peak_admit_queue: run.peak_admit_queue,
+        makespan_s: run.makespan_s,
+        throughput_per_s: throughput,
+        slo: acc.digest(),
+        per_unit,
+        classes,
+        batching: Batching { distinct_points: st.distinct_points, stage_runs: 4 * completed },
+        stage_errors: st.errors,
+        jobs_detail: if cfg.jobs <= DETAIL_CAP { run.completions.clone() } else { Vec::new() },
+    })
+}
+
+fn completion_to_json(c: &Completion) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(c.id as f64)),
+        ("class", Json::Num(c.class as f64)),
+        ("unit", Json::Num(c.unit as f64)),
+        ("arrival_s", Json::Num(c.arrival_s)),
+        ("start_s", Json::Num(c.start_s)),
+        ("finish_s", Json::Num(c.finish_s)),
+        ("stolen", Json::Bool(c.stolen)),
+    ])
+}
+
+fn completion_from_json(v: &Json) -> std::result::Result<Completion, String> {
+    let err = |f: &str| format!("jobs_detail entry missing/invalid {f:?}");
+    let num = |k: &str| v.get(k).and_then(Json::as_f64).ok_or_else(|| err(k));
+    Ok(Completion {
+        id: v.get("id").and_then(Json::as_u64).ok_or_else(|| err("id"))?,
+        class: v.get("class").and_then(Json::as_usize).ok_or_else(|| err("class"))?,
+        unit: v.get("unit").and_then(Json::as_usize).ok_or_else(|| err("unit"))?,
+        arrival_s: num("arrival_s")?,
+        start_s: num("start_s")?,
+        finish_s: num("finish_s")?,
+        stolen: v.get("stolen").and_then(Json::as_bool).ok_or_else(|| err("stolen"))?,
+    })
+}
+
+impl ServeReport {
+    /// Build the `BENCH_serve.json` document. Everything except the
+    /// `host` block is deterministic in the serve config.
+    pub fn to_json(&self, host_wall_s: f64, host_workers: usize) -> Json {
+        let (mode, lambda, clients) = match self.mode {
+            ArrivalMode::Open { lambda } => ("open", lambda, 0usize),
+            ArrivalMode::Closed { clients } => ("closed", 0.0, clients),
+        };
+        Json::obj(vec![
+            ("schema", Json::Str("revel-bench-serve".into())),
+            ("version", Json::Num(1.0)),
+            ("freq_ghz", Json::Num(model::FREQ_GHZ)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("units", Json::Num(self.units as f64)),
+                    ("jobs", Json::Num(self.jobs as f64)),
+                    ("seed", Json::Num(self.seed as f64)),
+                    ("mode", Json::Str(mode.into())),
+                    ("lambda", Json::Num(lambda)),
+                    ("clients", Json::Num(clients as f64)),
+                    ("queue_cap", Json::Num(self.queue_cap as f64)),
+                    ("admit_cap", Json::Num(self.admit_cap as f64)),
+                ]),
+            ),
+            (
+                "host",
+                Json::obj(vec![
+                    ("wall_s", Json::Num(host_wall_s)),
+                    ("workers", Json::Num(host_workers as f64)),
+                ]),
+            ),
+            (
+                "summary",
+                Json::obj(vec![
+                    ("completed", Json::Num(self.completed as f64)),
+                    ("dropped", Json::Num(self.dropped as f64)),
+                    ("failed", Json::Num(self.failed as f64)),
+                    ("peak_admit_queue", Json::Num(self.peak_admit_queue as f64)),
+                    ("makespan_s", Json::Num(self.makespan_s)),
+                    ("throughput_per_s", Json::Num(self.throughput_per_s)),
+                    ("latency_us", self.slo.latency_us.to_json()),
+                    ("queue_us", self.slo.queue_us.to_json()),
+                    ("service_us", self.slo.service_us.to_json()),
+                ]),
+            ),
+            (
+                "stage_us",
+                Json::Obj(
+                    STAGE_NAMES
+                        .iter()
+                        .zip(self.slo.stage_us.iter())
+                        .map(|(n, p)| (n.to_string(), p.to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "per_unit",
+                Json::Arr(
+                    self.per_unit
+                        .iter()
+                        .map(|u| {
+                            Json::obj(vec![
+                                ("jobs", Json::Num(u.jobs as f64)),
+                                ("busy_s", Json::Num(u.busy_s)),
+                                ("utilization", Json::Num(u.utilization)),
+                                ("stolen", Json::Num(u.stolen as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "classes",
+                Json::Arr(
+                    self.classes
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("name", Json::Str(c.name.clone())),
+                                ("weight", Json::Num(c.weight)),
+                                ("completed", Json::Num(c.completed as f64)),
+                                (
+                                    "stage_cycles",
+                                    match c.stage_cycles {
+                                        None => Json::Null,
+                                        Some(cy) => Json::Arr(
+                                            cy.iter().map(|&x| Json::Num(x as f64)).collect(),
+                                        ),
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "batching",
+                Json::obj(vec![
+                    ("distinct_points", Json::Num(self.batching.distinct_points as f64)),
+                    ("stage_runs", Json::Num(self.batching.stage_runs as f64)),
+                ]),
+            ),
+            (
+                "stage_errors",
+                Json::Arr(self.stage_errors.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            (
+                "jobs_detail",
+                Json::Arr(self.jobs_detail.iter().map(completion_to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Inverse of [`to_json`] (the `host` block is intentionally
+    /// dropped — it is the only nondeterministic part of the artifact).
+    pub fn from_json(v: &Json) -> std::result::Result<ServeReport, String> {
+        let err = |f: &str| format!("BENCH_serve document missing/invalid {f:?}");
+        let cfg = v.get("config").ok_or_else(|| err("config"))?;
+        let summary = v.get("summary").ok_or_else(|| err("summary"))?;
+        let cnum = |k: &str| cfg.get(k).and_then(Json::as_usize).ok_or_else(|| err(k));
+        let snum = |k: &str| summary.get(k).and_then(Json::as_usize).ok_or_else(|| err(k));
+        let mode = match cfg.get("mode").and_then(Json::as_str) {
+            Some("open") => ArrivalMode::Open {
+                lambda: cfg.get("lambda").and_then(Json::as_f64).ok_or_else(|| err("lambda"))?,
+            },
+            Some("closed") => ArrivalMode::Closed { clients: cnum("clients")? },
+            _ => return Err(err("mode")),
+        };
+        let digest = |k: &str| -> std::result::Result<Pctls, String> {
+            Pctls::from_json(summary.get(k).ok_or_else(|| err(k))?)
+        };
+        let stage_obj = v.get("stage_us").ok_or_else(|| err("stage_us"))?;
+        let mut stage_us = [Pctls::default(); 4];
+        for (slot, name) in stage_us.iter_mut().zip(STAGE_NAMES) {
+            *slot = Pctls::from_json(stage_obj.get(name).ok_or_else(|| err(name))?)?;
+        }
+        let per_unit = v
+            .get("per_unit")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("per_unit"))?
+            .iter()
+            .map(|u| {
+                Ok(UnitReport {
+                    jobs: u.get("jobs").and_then(Json::as_usize).ok_or_else(|| err("jobs"))?,
+                    busy_s: u
+                        .get("busy_s")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| err("busy_s"))?,
+                    utilization: u
+                        .get("utilization")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| err("utilization"))?,
+                    stolen: u
+                        .get("stolen")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| err("stolen"))?,
+                })
+            })
+            .collect::<std::result::Result<Vec<_>, String>>()?;
+        let classes = v
+            .get("classes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("classes"))?
+            .iter()
+            .map(|c| {
+                let stage_cycles = match c.get("stage_cycles") {
+                    None | Some(Json::Null) => None,
+                    Some(Json::Arr(a)) if a.len() == 4 => {
+                        let mut cy = [0u64; 4];
+                        for (slot, e) in cy.iter_mut().zip(a) {
+                            *slot = e.as_u64().ok_or_else(|| err("stage_cycles"))?;
+                        }
+                        Some(cy)
+                    }
+                    _ => return Err(err("stage_cycles")),
+                };
+                Ok(ClassReport {
+                    name: c
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| err("name"))?
+                        .to_string(),
+                    weight: c
+                        .get("weight")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| err("weight"))?,
+                    completed: c
+                        .get("completed")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| err("completed"))?,
+                    stage_cycles,
+                })
+            })
+            .collect::<std::result::Result<Vec<_>, String>>()?;
+        let batching = v.get("batching").ok_or_else(|| err("batching"))?;
+        let stage_errors = v
+            .get("stage_errors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("stage_errors"))?
+            .iter()
+            .map(|e| e.as_str().map(str::to_string).ok_or_else(|| err("stage_errors")))
+            .collect::<std::result::Result<Vec<_>, String>>()?;
+        let jobs_detail = v
+            .get("jobs_detail")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("jobs_detail"))?
+            .iter()
+            .map(completion_from_json)
+            .collect::<std::result::Result<Vec<_>, String>>()?;
+        Ok(ServeReport {
+            units: cnum("units")?,
+            jobs: cnum("jobs")?,
+            seed: cfg.get("seed").and_then(Json::as_u64).ok_or_else(|| err("seed"))?,
+            mode,
+            queue_cap: cnum("queue_cap")?,
+            admit_cap: cnum("admit_cap")?,
+            completed: snum("completed")?,
+            dropped: snum("dropped")?,
+            failed: snum("failed")?,
+            peak_admit_queue: snum("peak_admit_queue")?,
+            makespan_s: summary
+                .get("makespan_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| err("makespan_s"))?,
+            throughput_per_s: summary
+                .get("throughput_per_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| err("throughput_per_s"))?,
+            slo: SloDigest {
+                latency_us: digest("latency_us")?,
+                queue_us: digest("queue_us")?,
+                service_us: digest("service_us")?,
+                stage_us,
+            },
+            per_unit,
+            classes,
+            batching: Batching {
+                distinct_points: batching
+                    .get("distinct_points")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| err("distinct_points"))?,
+                stage_runs: batching
+                    .get("stage_runs")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| err("stage_runs"))?,
+            },
+            stage_errors,
+            jobs_detail,
+        })
+    }
+}
+
+/// Write the `BENCH_serve.json` artifact to `path`.
+pub fn write_artifact(
+    path: &str,
+    report: &ServeReport,
+    host_wall_s: f64,
+    host_workers: usize,
+) -> std::io::Result<()> {
+    std::fs::write(path, report.to_json(host_wall_s, host_workers).pretty())
+}
+
+/// Parse a serve artifact back (schema round-trip).
+pub fn read_artifact(text: &str) -> std::result::Result<ServeReport, String> {
+    let doc = json::parse(text)?;
+    if doc.get("schema").and_then(Json::as_str) != Some("revel-bench-serve") {
+        return Err("not a revel-bench-serve document".into());
+    }
+    ServeReport::from_json(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::StageSpec;
+
+    /// Cheap stage mixes (small solver/gemm/fir points shared with the
+    /// harness tests) so serving tests stay fast.
+    fn cheap_classes() -> Vec<JobClass> {
+        vec![
+            JobClass {
+                name: "lite",
+                stages: [
+                    StageSpec { kernel: "solver", n: 8 },
+                    StageSpec { kernel: "solver", n: 12 },
+                    StageSpec { kernel: "gemm", n: 12 },
+                    StageSpec { kernel: "fir", n: 12 },
+                ],
+                weight: 0.7,
+            },
+            JobClass {
+                name: "heavy",
+                stages: [
+                    StageSpec { kernel: "solver", n: 16 },
+                    StageSpec { kernel: "solver", n: 12 },
+                    StageSpec { kernel: "gemm", n: 12 },
+                    StageSpec { kernel: "fir", n: 12 },
+                ],
+                weight: 0.3,
+            },
+        ]
+    }
+
+    fn cfg(units: usize) -> ServeConfig {
+        ServeConfig {
+            jobs: 24,
+            seed: 7,
+            mode: ArrivalMode::Open { lambda: 0.0 },
+            cluster: ClusterConfig { units, ..ClusterConfig::default() },
+            workers: Some(2),
+            classes: cheap_classes(),
+        }
+    }
+
+    #[test]
+    fn deterministic_and_scales_with_units() {
+        let a = serve(&cfg(1)).unwrap();
+        let b = serve(&cfg(1)).unwrap();
+        assert_eq!(a, b, "same config, same seed => identical report");
+        assert_eq!(a.completed, 24);
+        assert!(a.slo.latency_us.p99 > 0.0);
+        let c = serve(&cfg(4)).unwrap();
+        assert_eq!(c.completed, 24, "same trace, more units");
+        assert!(
+            c.throughput_per_s > a.throughput_per_s,
+            "4 units beat 1 on the same flood trace ({} vs {})",
+            c.throughput_per_s,
+            a.throughput_per_s
+        );
+        assert!(c.makespan_s < a.makespan_s);
+    }
+
+    #[test]
+    fn artifact_roundtrip_through_json() {
+        let r = serve(&cfg(2)).unwrap();
+        let text = r.to_json(1.5, 8).pretty();
+        let back = read_artifact(&text).unwrap();
+        assert_eq!(back, r, "host block drops; everything else round-trips");
+        assert!(read_artifact("{\"schema\": \"other\"}").is_err());
+    }
+
+    #[test]
+    fn closed_loop_and_paced_open_complete_everything() {
+        let mut closed = cfg(2);
+        closed.mode = ArrivalMode::Closed { clients: 3 };
+        let r = serve(&closed).unwrap();
+        assert_eq!(r.completed, 24);
+        assert_eq!(r.dropped, 0, "closed loop self-limits");
+
+        let mut paced = cfg(2);
+        // Pace arrivals near half the flood capacity: queues stay short.
+        let flood = serve(&cfg(2)).unwrap();
+        paced.mode = ArrivalMode::Open { lambda: flood.throughput_per_s * 0.5 };
+        let p = serve(&paced).unwrap();
+        assert_eq!(p.completed, 24);
+        assert!(p.slo.queue_us.p99 <= flood.slo.queue_us.p99);
+    }
+
+    #[test]
+    fn batching_amortizes_stage_sims() {
+        let r = serve(&cfg(2)).unwrap();
+        // 2 classes share gemm/fir/solver-12 points: 5 distinct sims
+        // behind 24 * 4 stage executions.
+        assert_eq!(r.batching.distinct_points, 5);
+        assert_eq!(r.batching.stage_runs, 96);
+        assert!(r.stage_errors.is_empty());
+    }
+}

@@ -1,0 +1,155 @@
+//! Online latency/SLO accounting for the serving cluster: per-job
+//! latency, queueing, and service samples are folded into percentile
+//! digests (p50/p95/p99/mean/max) overall and per pipeline stage.
+//!
+//! All figures are in *virtual* microseconds — simulated cycles at the
+//! REVEL clock ([`crate::model::FREQ_GHZ`]) — so the digests are
+//! bit-deterministic for a fixed trace and independent of host load.
+
+use crate::harness::json::Json;
+use crate::util::stats::{mean, percentile};
+
+/// A percentile digest over one latency population (microseconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Pctls {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Pctls {
+    /// Digest a sample; an empty sample digests to all zeros (never
+    /// NaN, which JSON cannot represent).
+    pub fn of(xs: &[f64]) -> Pctls {
+        if xs.is_empty() {
+            return Pctls::default();
+        }
+        Pctls {
+            p50: percentile(xs, 50.0),
+            p95: percentile(xs, 95.0),
+            p99: percentile(xs, 99.0),
+            mean: mean(xs),
+            max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("p50", Json::Num(self.p50)),
+            ("p95", Json::Num(self.p95)),
+            ("p99", Json::Num(self.p99)),
+            ("mean", Json::Num(self.mean)),
+            ("max", Json::Num(self.max)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Pctls, String> {
+        let f = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("percentile digest missing {k:?}"))
+        };
+        Ok(Pctls {
+            p50: f("p50")?,
+            p95: f("p95")?,
+            p99: f("p99")?,
+            mean: f("mean")?,
+            max: f("max")?,
+        })
+    }
+}
+
+/// The digests a serve run reports (all in virtual microseconds).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloDigest {
+    /// End-to-end subframe latency (arrival to pipeline exit).
+    pub latency_us: Pctls,
+    /// Time spent waiting for a unit (arrival to service start).
+    pub queue_us: Pctls,
+    /// Pure service time (all four stages back to back).
+    pub service_us: Pctls,
+    /// Per-pipeline-stage service time, in
+    /// [`super::STAGE_NAMES`] order.
+    pub stage_us: [Pctls; 4],
+}
+
+/// Accumulates per-job samples and digests them on demand.
+#[derive(Clone, Debug, Default)]
+pub struct SloAccountant {
+    latency_us: Vec<f64>,
+    queue_us: Vec<f64>,
+    service_us: Vec<f64>,
+    stage_us: [Vec<f64>; 4],
+}
+
+impl SloAccountant {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed job (all samples in microseconds; `stages`
+    /// in pipeline order).
+    pub fn record(&mut self, latency: f64, queue: f64, service: f64, stages: [f64; 4]) {
+        self.latency_us.push(latency);
+        self.queue_us.push(queue);
+        self.service_us.push(service);
+        for (acc, s) in self.stage_us.iter_mut().zip(stages) {
+            acc.push(s);
+        }
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.latency_us.len()
+    }
+
+    pub fn digest(&self) -> SloDigest {
+        SloDigest {
+            latency_us: Pctls::of(&self.latency_us),
+            queue_us: Pctls::of(&self.queue_us),
+            service_us: Pctls::of(&self.service_us),
+            stage_us: [
+                Pctls::of(&self.stage_us[0]),
+                Pctls::of(&self.stage_us[1]),
+                Pctls::of(&self.stage_us[2]),
+                Pctls::of(&self.stage_us[3]),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::json;
+
+    #[test]
+    fn digest_orders_percentiles() {
+        let mut acc = SloAccountant::new();
+        for i in 0..100 {
+            let x = (i + 1) as f64;
+            acc.record(x, x / 2.0, x / 2.0, [x / 8.0; 4]);
+        }
+        let d = acc.digest();
+        assert!(d.latency_us.p50 <= d.latency_us.p95);
+        assert!(d.latency_us.p95 <= d.latency_us.p99);
+        assert!(d.latency_us.p99 <= d.latency_us.max);
+        assert_eq!(d.latency_us.max, 100.0);
+        assert_eq!(acc.jobs(), 100);
+    }
+
+    #[test]
+    fn empty_digest_is_zero_not_nan() {
+        let d = SloAccountant::new().digest();
+        assert_eq!(d.latency_us, Pctls::default());
+        assert!(!d.latency_us.p99.is_nan());
+    }
+
+    #[test]
+    fn pctls_json_roundtrip() {
+        let p = Pctls { p50: 1.5, p95: 2.25, p99: 3.125, mean: 1.75, max: 4.0 };
+        let back = Pctls::from_json(&json::parse(&p.to_json().pretty()).unwrap());
+        assert_eq!(back.unwrap(), p);
+    }
+}

@@ -1,12 +1,14 @@
 //! REVEL reproduction library root.
 //!
-//! Layering: `isa`/`dataflow` define the architecture's IR, `compiler`
-//! places it on the fabric, `sim` executes it cycle-accurately,
-//! `workloads` express the paper's seven kernels, `baselines`/`model`
-//! hold the comparison and area/power models, `analysis` the FGOP
-//! characterization, `harness` the parallel sweep engine behind
-//! `report`, and `runtime`/`coordinator` the PJRT golden path and the
-//! 5G serving example.
+//! Layering (see `docs/ARCHITECTURE.md` for the full map): `isa`/
+//! `dataflow` define the architecture's IR, `compiler` places it on the
+//! fabric, `sim` executes it cycle-accurately, `workloads` express the
+//! paper's seven kernels, `baselines`/`model` hold the comparison and
+//! area/power models, `analysis` the FGOP characterization, `harness`
+//! the parallel sweep engine behind `report`, `runtime` the PJRT golden
+//! path, and `coordinator` the 5G serving cluster (`revel serve`).
+//! `docs/PAPER_MAP.md` maps every paper figure/table to the module and
+//! `revel report` subcommand that reproduces it.
 
 // The simulator favors explicit index arithmetic that mirrors the
 // hardware's address/length registers; keep clippy focused on real

@@ -1,18 +1,57 @@
 //! `revel` — command-line driver for the REVEL reproduction.
 //!
-//! Usage:
-//!   revel report <fig1|fig7|fig8|fig16|fig17|fig18|fig19|fig20|fig21|fig22|table6|headline|all>
-//!   revel run <kernel> <n> [--throughput] [--features base|+inductive|+fine-grain|+hetero|all]
-//!   revel trace <kernel> <n>
-//!   revel sweep [--out FILE] [--workers N] [kernel ...]
-//!   revel pipeline [jobs] [workers]
-//!   revel list
+//! ```text
+//! revel report <fig1|pipeline|fig7|fig8|fig16|...|table6|headline|all>
+//! revel run <kernel> <n> [--throughput] [--features base|+inductive|...|all]
+//! revel trace <kernel> <n>
+//! revel sweep [--out FILE] [--workers N] [kernel ...]
+//! revel serve [--units N] [--jobs M] [--seed S] [--mode open|closed]
+//!             [--lambda R] [--clients C] [--queue-cap Q] [--admit-cap A]
+//!             [--workers W] [--out FILE]
+//! revel pipeline [jobs] [units]
+//! revel list
+//! ```
 
 use revel::analysis::kernels;
+use revel::coordinator::{ArrivalMode, ClusterConfig, ServeConfig, ServeReport};
 use revel::harness;
 use revel::model;
 use revel::report;
 use revel::workloads::{self, Features, Goal};
+
+/// Render one serve report to stdout (shared by `serve` and the
+/// `pipeline` alias).
+fn print_serve(report: &ServeReport, wall_s: f64) {
+    println!(
+        "serve: {} units, {} jobs (seed {}): {} completed, {} dropped, {} failed",
+        report.units, report.jobs, report.seed, report.completed, report.dropped,
+        report.failed
+    );
+    println!(
+        "  virtual makespan {:.3} ms -> {:.0} subframes/s @ {} GHz",
+        report.makespan_s * 1e3,
+        report.throughput_per_s,
+        model::FREQ_GHZ
+    );
+    println!(
+        "  latency p50/p95/p99 {:.1}/{:.1}/{:.1} us (queue p99 {:.1} us)",
+        report.slo.latency_us.p50,
+        report.slo.latency_us.p95,
+        report.slo.latency_us.p99,
+        report.slo.queue_us.p99
+    );
+    let jobs: Vec<usize> = report.per_unit.iter().map(|u| u.jobs).collect();
+    let stolen: usize = report.per_unit.iter().map(|u| u.stolen).sum();
+    println!("  per-unit jobs {jobs:?}, {stolen} stolen");
+    println!(
+        "  batching: {} distinct stage sims amortized over {} stage executions",
+        report.batching.distinct_points, report.batching.stage_runs
+    );
+    if !report.stage_errors.is_empty() {
+        println!("  degraded stages: {:?}", report.stage_errors);
+    }
+    println!("  host wall {wall_s:.2} s");
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -29,6 +68,7 @@ fn main() {
                 "fig19" => report::fig19(),
                 "fig20" => report::fig20(),
                 "fig21" | "fig22" | "fig21_22" => report::fig21_22(),
+                "pipeline" | "fig4" => report::pipeline(),
                 "table6" => report::table6(),
                 "headline" => report::headline(),
                 "all" => report::all(),
@@ -169,25 +209,80 @@ fn main() {
                 .expect("write sweep artifact");
             println!("wrote {out_path}");
         }
+        Some("serve") => {
+            let flag = |name: &str| {
+                args.iter().position(|a| a == name).and_then(|i| args.get(i + 1))
+            };
+            let units: usize =
+                flag("--units").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+            let jobs: usize = flag("--jobs").and_then(|s| s.parse().ok()).unwrap_or(200);
+            let seed: u64 = flag("--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+            let lambda: f64 =
+                flag("--lambda").and_then(|s| s.parse().ok()).unwrap_or(0.0);
+            let clients: usize =
+                flag("--clients").and_then(|s| s.parse().ok()).unwrap_or(2 * units);
+            let mode = match flag("--mode").map(|s| s.as_str()) {
+                None | Some("open") => ArrivalMode::Open { lambda },
+                Some("closed") => ArrivalMode::Closed { clients },
+                Some(other) => {
+                    eprintln!("unknown arrival mode {other} (expected open|closed)");
+                    std::process::exit(2);
+                }
+            };
+            let cfg = ServeConfig {
+                jobs,
+                seed,
+                mode,
+                cluster: ClusterConfig {
+                    units,
+                    queue_cap: flag("--queue-cap")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(8),
+                    admit_cap: flag("--admit-cap")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(1024),
+                },
+                workers: flag("--workers").and_then(|s| s.parse::<usize>().ok()),
+                classes: revel::coordinator::CLASSES.to_vec(),
+            };
+            let out_path = flag("--out")
+                .cloned()
+                .unwrap_or_else(|| "BENCH_serve.json".to_string());
+            let t0 = std::time::Instant::now();
+            let report = revel::coordinator::serve(&cfg).unwrap_or_else(|e| {
+                eprintln!("serve failed: {e}");
+                std::process::exit(1);
+            });
+            let wall_s = t0.elapsed().as_secs_f64();
+            print_serve(&report, wall_s);
+            let host_workers =
+                cfg.workers.unwrap_or_else(harness::pool::default_workers);
+            revel::coordinator::write_artifact(&out_path, &report, wall_s, host_workers)
+                .expect("write serve artifact");
+            println!("wrote {out_path}");
+        }
         Some("pipeline") => {
+            // Back-compat alias: a default open-loop serve run plus the
+            // PJRT golden cross-check, no artifact.
             let jobs: usize =
-                args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
-            let workers: usize =
-                args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+                args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+            let units: usize =
+                args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
             match revel::coordinator::golden_check() {
                 Ok(()) => println!("PJRT golden check: ok"),
                 Err(e) => println!("PJRT golden check skipped: {e}"),
             }
-            let s = revel::coordinator::serve(jobs, workers, 0.0, 42);
-            println!(
-                "{} jobs / {} workers: {:.2} s wall ({:.1} jobs/s), sim latency p50 {:.1} us p99 {:.1} us",
-                s.jobs,
-                workers,
-                s.wall_s,
-                s.jobs_per_s,
-                s.sim_latency_p50_us,
-                s.sim_latency_p99_us
-            );
+            let cfg = ServeConfig {
+                jobs,
+                cluster: ClusterConfig { units, ..ClusterConfig::default() },
+                ..ServeConfig::default()
+            };
+            let t0 = std::time::Instant::now();
+            let report = revel::coordinator::serve(&cfg).unwrap_or_else(|e| {
+                eprintln!("pipeline failed: {e}");
+                std::process::exit(1);
+            });
+            print_serve(&report, t0.elapsed().as_secs_f64());
         }
         Some("list") => {
             for k in workloads::NAMES {
@@ -196,11 +291,15 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: revel <report|run|trace|sweep|pipeline|list> ...\n\
+                "usage: revel <report|run|trace|sweep|serve|pipeline|list> ...\n\
                    revel report all\n\
                    revel run cholesky 16 [--throughput] [--features base]\n\
                    revel trace qr 32\n\
-                   revel sweep --out BENCH_sweep.json [--workers 8] [cholesky solver ...]"
+                   revel sweep --out BENCH_sweep.json [--workers 8] [cholesky solver ...]\n\
+                   revel serve --units 4 --jobs 200 --seed 7 [--mode open|closed]\n\
+                              [--lambda R] [--clients C] [--queue-cap 8] [--admit-cap 1024]\n\
+                              [--workers W] [--out BENCH_serve.json]\n\
+                   revel pipeline [jobs] [units]   (golden check + default serve run)"
             );
             std::process::exit(2);
         }

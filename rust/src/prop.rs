@@ -1,9 +1,9 @@
 //! Minimal property-based testing helper (proptest is unavailable offline).
 //!
-//! `check(name, cases, |rng| ...)` runs a closure over `cases` random seeds;
-//! on failure it re-runs a bisection-style shrink over the seed space is not
-//! meaningful, so instead it reports the failing seed so the case is exactly
-//! reproducible with `check_one`.
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` deterministic
+//! seeds. Seeds are opaque, so bisection-style shrinking over the seed space
+//! would not be meaningful; on failure the helper instead reports the failing
+//! seed, making the case exactly reproducible with [`check_one`].
 
 use crate::util::Rng;
 

@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use crate::analysis::{kernels, streams};
 use crate::baselines::{self, cpu, taskpar, CpuKind};
+use crate::coordinator;
 use crate::compiler::FabricSpec;
 use crate::harness::{self, SweepOutcome, SweepPoint};
 use crate::isa::Capability;
@@ -57,6 +58,73 @@ pub fn fig1() -> String {
         ]);
     }
     format!("Fig 1: percent peak performance (calibrated model)\n{}", t.render())
+}
+
+/// The serving cluster's stage points (shared with the sweep cache so
+/// `report all` prewarms them alongside the other figures).
+fn pipeline_points() -> Vec<SweepPoint> {
+    let mut v = Vec::new();
+    for c in &coordinator::CLASSES {
+        for s in &c.stages {
+            v.push(pt(s.kernel, s.n, Features::ALL, Goal::Latency));
+        }
+    }
+    v
+}
+
+/// Fig 4: the 5G receiver pipeline as a served workload — per-class
+/// stage latencies, and throughput scaling of the serving cluster on
+/// one deterministic flood trace.
+pub fn pipeline() -> String {
+    use crate::coordinator::{ArrivalMode, ClusterConfig, ServeConfig};
+    let rs = sweep(&pipeline_points());
+    let mut t = Table::new(&["class", "stage", "kernel", "n", "cycles", "us"]);
+    let mut i = 0;
+    for c in &coordinator::CLASSES {
+        for (si, s) in c.stages.iter().enumerate() {
+            t.row(vec![
+                if si == 0 { c.name.into() } else { String::new() },
+                coordinator::STAGE_ROLES[si].into(),
+                s.kernel.into(),
+                s.n.to_string(),
+                rs[i].cycles.to_string(),
+                format!("{:.2}", rs[i].us()),
+            ]);
+            i += 1;
+        }
+    }
+    let mut sc = Table::new(&[
+        "units", "subframes/s", "p50 us", "p99 us", "util", "stolen", "dropped",
+    ]);
+    for units in [1usize, 2, 4, 8] {
+        let cfg = ServeConfig {
+            jobs: 64,
+            seed: 7,
+            mode: ArrivalMode::Open { lambda: 0.0 },
+            cluster: ClusterConfig { units, ..ClusterConfig::default() },
+            workers: None,
+            classes: coordinator::CLASSES.to_vec(),
+        };
+        let r = coordinator::serve(&cfg).expect("serve must run");
+        let util = r.per_unit.iter().map(|u| u.utilization).sum::<f64>()
+            / r.per_unit.len().max(1) as f64;
+        let stolen: usize = r.per_unit.iter().map(|u| u.stolen).sum();
+        sc.row(vec![
+            units.to_string(),
+            format!("{:.0}", r.throughput_per_s),
+            format!("{:.1}", r.slo.latency_us.p50),
+            format!("{:.1}", r.slo.latency_us.p99),
+            format!("{:.0}%", 100.0 * util),
+            stolen.to_string(),
+            r.dropped.to_string(),
+        ]);
+    }
+    format!(
+        "Fig 4: 5G receiver pipeline on a REVEL serving cluster\n{}\n\
+         cluster scaling, same 64-subframe flood trace (seed 7):\n{}",
+        t.render(),
+        sc.render()
+    )
 }
 
 /// Fig 7: FGOP prevalence — one row per kernel and size.
@@ -445,6 +513,7 @@ pub fn headline() -> String {
 /// one maximally parallel pass before rendering.
 pub fn all_points() -> Vec<SweepPoint> {
     let mut v = Vec::new();
+    v.extend(pipeline_points());
     v.extend(fig16_points());
     v.extend(fig17_points());
     v.extend(fig18_points());
@@ -460,6 +529,7 @@ pub fn all() -> String {
     sweep(&all_points()); // one parallel pass over every distinct point
     [
         fig1(),
+        pipeline(),
         fig7(),
         fig8(),
         fig16(),
@@ -506,6 +576,7 @@ mod tests {
             fig20_points().len(),
             FIG20_KERNELS.len() * (1 + FIG20_SIZES.len())
         );
+        assert_eq!(pipeline_points().len(), 4 * coordinator::CLASSES.len());
         assert!(!all_points().is_empty());
     }
 }

@@ -210,7 +210,7 @@ pub fn svd_values(a: &Mat, sweeps: usize) -> Vec<f64> {
     vals
 }
 
-/// Correlation-form FIR: y[i] = sum_j h[j] x[i+j].
+/// Correlation-form FIR: `y[i] = sum_j h[j] x[i+j]`.
 pub fn fir(x: &[f64], h: &[f64]) -> Vec<f64> {
     let n_out = x.len() + 1 - h.len();
     (0..n_out)

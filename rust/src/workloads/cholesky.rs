@@ -70,7 +70,7 @@ fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
     super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
 }
 
-/// Column-major address of A[i][j].
+/// Column-major address of `A[i][j]`.
 fn at(n: i64, i: i64, j: i64) -> i64 {
     A_BASE + j * n + i
 }

@@ -1,7 +1,7 @@
 //! Centro-symmetric FIR filter (paper "Centro-FIR", Table 5): taps are
-//! symmetric (h[j] = h[m-1-j]), so the kernel folds the window:
+//! symmetric (`h[j] = h[m-1-j]`), so the kernel folds the window:
 //!
-//!   y[i] = sum_{j < m/2} h[j] * (x[i+j] + x[i+m-1-j])
+//!   `y[i] = sum_{j < m/2} h[j] * (x[i+j] + x[i+m-1-j])`
 //!
 //! halving the multiplies. One accumulating dataflow over output chunks:
 //! the two window streams walk toward each other (the second with a

@@ -3,7 +3,7 @@
 //! no heterogeneous fabric, no masking required: all dims are
 //! width-divisible). One accumulating dataflow:
 //!
-//!   acc[lane] += a_ik * b_kj,   emitted (and reset) after k = 16.
+//!   `acc[lane] += a_ik * b_kj`,   emitted (and reset) after k = 16.
 //!
 //! Streams per (row i, column-chunk jc): the B tile rows (2D rectangular
 //! stream, k-major) and the A row scalars (broadcast: one scratchpad
