@@ -16,6 +16,7 @@ use revel::workloads::{Features, Goal};
 fn mix() -> Vec<SweepPoint> {
     [
         ("cholesky", 32, Goal::Latency),
+        ("lu", 24, Goal::Latency),
         ("solver", 32, Goal::Latency),
         ("qr", 24, Goal::Latency),
         ("fft", 1024, Goal::Latency),

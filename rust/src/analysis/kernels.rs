@@ -5,8 +5,9 @@
 
 use super::trace::{FgopStats, Tracer};
 
-/// DSP kernel names (paper Fig 7 left).
-pub const DSP: [&str; 7] = ["cholesky", "qr", "svd", "solver", "fft", "gemm", "fir"];
+/// DSP kernel names (paper Fig 7 left, plus Table 4's LU).
+pub const DSP: [&str; 8] =
+    ["cholesky", "lu", "qr", "svd", "solver", "fft", "gemm", "fir"];
 
 /// PolyBench subset (paper Fig 7 right).
 pub const POLYBENCH: [&str; 8] =
@@ -17,6 +18,7 @@ pub fn trace(name: &str, n: usize) -> FgopStats {
     let mut t = Tracer::new();
     match name {
         "cholesky" => cholesky(&mut t, n),
+        "lu" => lu(&mut t, n),
         "qr" => qr(&mut t, n),
         "svd" => svd(&mut t, n),
         "solver" => solver(&mut t, n),
@@ -68,6 +70,32 @@ fn cholesky(t: &mut Tracer, n: usize) {
                 t.load(6, row, i - j, idx(A, n, i, j));
                 t.arith(2);
                 t.store(7, row, i - j, idx(A, n, i, j));
+            }
+        }
+    }
+}
+
+fn lu(t: &mut Tracer, n: usize) {
+    let n_i = n as i64;
+    for k in 0..n_i {
+        t.region(0); // point: reciprocal of the pivot
+        t.load(0, k, 0, idx(A, n, k, k));
+        t.arith(1);
+        t.region(1); // vector: scale column k
+        for i in k + 1..n_i {
+            t.load(1, k, i - k - 1, idx(A, n, i, k));
+            t.arith(1);
+            t.store(2, k, i - k - 1, idx(A, n, i, k));
+        }
+        t.region(2); // matrix: square trailing update
+        for j in k + 1..n_i {
+            let row = k * n_i + j; // globally unique row key
+            for i in k + 1..n_i {
+                t.load(3, row, i - k - 1, idx(A, n, i, k));
+                t.load(4, row, i - k - 1, idx(A, n, k, j));
+                t.load(5, row, i - k - 1, idx(A, n, i, j));
+                t.arith(2);
+                t.store(6, row, i - k - 1, idx(A, n, i, j));
             }
         }
     }

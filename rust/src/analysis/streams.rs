@@ -117,6 +117,12 @@ pub fn kernel_streams(name: &str, n: usize) -> KernelStreams {
             Nest { t0: n_i, b1: n_i - 1, s10: -1, b2: n_i - 1, s20: -1, s21: -1, reuse_runs: n_i * (n_i - 1) / 2 },
             Nest { t0: n_i, b1: n_i - 1, s10: -1, b2: n_i - 1, s20: -1, s21: -1, reuse_runs: 0 },
         ],
+        // Square trailing block shrinking across k; the L column is
+        // re-read (rewound) per trailing column.
+        "lu" => vec![
+            Nest { t0: n_i, b1: n_i - 1, s10: -1, b2: n_i - 1, s20: -1, s21: 0, reuse_runs: n_i * (n_i - 1) / 2 },
+            Nest { t0: n_i, b1: n_i - 1, s10: -1, b2: n_i - 1, s20: -1, s21: 0, reuse_runs: 0 },
+        ],
         // Per-k rectangular trailing block, shrinking across k.
         "qr" => vec![
             Nest { t0: n_i, b1: n_i - 1, s10: -1, b2: n_i, s20: -1, s21: 0, reuse_runs: n_i },

@@ -34,6 +34,13 @@ pub fn cholesky_cycles(n: u64) -> u64 {
     (1..n).map(|i| (i * i).div_ceil(4).max(24)).sum()
 }
 
+/// LU cycles (Table 4 family): the square trailing block doubles the
+/// per-iteration multiply work of Cholesky's triangle; the serial
+/// reciprocal floor is one divide (lat 14) + the column scale.
+pub fn lu_cycles(n: u64) -> u64 {
+    (1..n).map(|i| (2 * i * i).div_ceil(4).max(26)).sum()
+}
+
 /// Centro-FIR cycles (Table 4): ceil((n - m + 1) / 4); n = input
 /// samples, m = taps.
 pub fn fir_cycles(n: u64, m: u64) -> u64 {
@@ -45,6 +52,7 @@ pub fn asic_cycles(kernel: &str, n: usize) -> u64 {
     let n = n as u64;
     match kernel {
         "cholesky" => cholesky_cycles(n),
+        "lu" => lu_cycles(n),
         "qr" => qr_cycles(n),
         "svd" => svd_cycles(n, crate::workloads::svd::SWEEPS as u64),
         "solver" => solver_cycles(n),

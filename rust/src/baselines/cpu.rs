@@ -30,6 +30,7 @@ pub fn utilization(kind: CpuKind, kernel: &str, n: usize) -> f64 {
         (CpuKind::Dsp, "fir") => 0.70,
         (CpuKind::Dsp, "fft") => 0.45,
         (CpuKind::Dsp, "cholesky") => 0.10,
+        (CpuKind::Dsp, "lu") => 0.11,
         (CpuKind::Dsp, "qr") => 0.08,
         (CpuKind::Dsp, "svd") => 0.05,
         (CpuKind::Dsp, "solver") => 0.07,
@@ -37,6 +38,7 @@ pub fn utilization(kind: CpuKind, kernel: &str, n: usize) -> f64 {
         (CpuKind::Ooo, "fir") => 0.55,
         (CpuKind::Ooo, "fft") => 0.50,
         (CpuKind::Ooo, "cholesky") => 0.12,
+        (CpuKind::Ooo, "lu") => 0.13,
         (CpuKind::Ooo, "qr") => 0.10,
         (CpuKind::Ooo, "svd") => 0.06,
         (CpuKind::Ooo, "solver") => 0.08,
@@ -106,7 +108,7 @@ mod tests {
                 let u = utilization(kind, k, 24);
                 assert!((0.25..=0.85).contains(&u), "{kind:?} {k}: {u}");
             }
-            for k in ["cholesky", "qr", "svd", "solver"] {
+            for k in ["cholesky", "lu", "qr", "svd", "solver"] {
                 let u = utilization(kind, k, 24);
                 assert!((0.02..=0.20).contains(&u), "{kind:?} {k}: {u}");
             }

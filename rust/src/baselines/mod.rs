@@ -16,6 +16,7 @@ pub fn kernel_flops(name: &str, n: usize) -> f64 {
     let nf = n as f64;
     match name {
         "cholesky" => nf * nf * nf / 3.0,
+        "lu" => 2.0 / 3.0 * nf * nf * nf,
         "qr" => 4.0 / 3.0 * nf * nf * nf,
         // One-sided Jacobi, fixed sweeps (matches the workload).
         "svd" => {

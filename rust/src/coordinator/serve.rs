@@ -385,6 +385,9 @@ impl ServeReport {
                 ]),
             ),
             (
+                // Keyed by pipeline *position* (STAGE_NAMES slot labels):
+                // the "cholesky" slot aggregates every channel estimator
+                // in the mix, including the LU classes.
                 "stage_us",
                 Json::Obj(
                     STAGE_NAMES

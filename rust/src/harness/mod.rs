@@ -254,12 +254,11 @@ impl Default for Options {
 }
 
 /// Reports legitimately run very long programs (e.g. the no-FGOP SVD at
-/// n=32 exceeds the default sim watchdog); raise the budget once,
-/// before any worker threads exist.
+/// n=32 exceeds the default sim watchdog); raise the process-wide
+/// budget once, before any worker threads exist. An explicit budget —
+/// set programmatically or by the CLI from `REVEL_MAX_CYCLES` — wins.
 pub fn ensure_budget() {
-    if std::env::var_os("REVEL_MAX_CYCLES").is_none() {
-        std::env::set_var("REVEL_MAX_CYCLES", "80000000");
-    }
+    crate::sim::set_max_cycles_budget_if_unset(80_000_000);
 }
 
 /// Execute one sweep point on the current thread (fabric override is
@@ -363,6 +362,82 @@ pub fn full_sweep_points(kernels: &[&str]) -> Vec<SweepPoint> {
         }
     }
     v
+}
+
+/// One point's cycle comparison in a sweep diff.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    /// Point identity (kernel/n/features/goal/fabric).
+    pub key: String,
+    /// Baseline cycles.
+    pub base: u64,
+    /// Current cycles.
+    pub cur: u64,
+}
+
+/// Result of [`diff_outcomes`]: the perf-neutrality gate CI applies to
+/// archived `BENCH_sweep.json` artifacts across commits.
+#[derive(Clone, Debug, Default)]
+pub struct SweepDiff {
+    /// Points whose cycle count grew beyond the tolerance.
+    pub regressions: Vec<DiffRow>,
+    /// Points that got faster.
+    pub improvements: Vec<DiffRow>,
+    /// Points with identical (within tolerance) cycles.
+    pub unchanged: usize,
+    /// Baseline points absent from the current run (coverage loss).
+    pub missing: Vec<String>,
+    /// Current points absent from the baseline (new coverage).
+    pub added: Vec<String>,
+}
+
+fn point_key(p: &SweepPoint) -> String {
+    format!(
+        "{}/n{}/{}/{:?}/{:?}",
+        p.kernel,
+        p.n,
+        p.feature_name(),
+        p.goal,
+        p.fabric
+    )
+}
+
+/// Compare two sweeps point by point. A regression is a matched point
+/// whose current cycles exceed baseline cycles by more than
+/// `tol_pct` percent.
+pub fn diff_outcomes(
+    base: &[SweepOutcome],
+    cur: &[SweepOutcome],
+    tol_pct: f64,
+) -> SweepDiff {
+    let cur_by_key: std::collections::HashMap<String, &SweepOutcome> =
+        cur.iter().map(|o| (point_key(&o.point), o)).collect();
+    let base_keys: std::collections::HashSet<String> =
+        base.iter().map(|o| point_key(&o.point)).collect();
+    let mut d = SweepDiff::default();
+    for b in base {
+        let key = point_key(&b.point);
+        let Some(c) = cur_by_key.get(&key) else {
+            d.missing.push(key);
+            continue;
+        };
+        let limit = b.cycles as f64 * (1.0 + tol_pct / 100.0);
+        let row = DiffRow { key, base: b.cycles, cur: c.cycles };
+        if (c.cycles as f64) > limit {
+            d.regressions.push(row);
+        } else if c.cycles < b.cycles {
+            d.improvements.push(row);
+        } else {
+            d.unchanged += 1;
+        }
+    }
+    for c in cur {
+        let key = point_key(&c.point);
+        if !base_keys.contains(&key) {
+            d.added.push(key);
+        }
+    }
+    d
 }
 
 /// Build the `BENCH_sweep.json` document.
@@ -510,6 +585,39 @@ mod tests {
         )
         .pretty();
         assert_eq!(json::parse(&doc).unwrap(), json::parse(&doc2).unwrap());
+    }
+
+    #[test]
+    fn sweep_diff_classifies_regressions_and_coverage() {
+        let memo = cache::SweepCache::new();
+        let pts = vec![
+            SweepPoint::new("solver", 8, Features::ALL, Goal::Latency),
+            SweepPoint::new("solver", 12, Features::ALL, Goal::Latency),
+        ];
+        let opts = Options { workers: Some(2), use_cache: true };
+        let out = run_all_in(&pts, &opts, Some(&memo)).unwrap();
+        let base: Vec<SweepOutcome> =
+            out.iter().map(|o| o.as_ref().clone()).collect();
+        // Identical runs: no regressions, everything unchanged.
+        let d = diff_outcomes(&base, &base, 0.0);
+        assert!(d.regressions.is_empty() && d.improvements.is_empty());
+        assert_eq!(d.unchanged, 2);
+        // Inflate one current point: regression at 0%, absorbed by 200%.
+        let mut slow = base.clone();
+        slow[0].cycles = base[0].cycles * 2;
+        let d = diff_outcomes(&base, &slow, 0.0);
+        assert_eq!(d.regressions.len(), 1);
+        assert!(d.regressions[0].key.contains("solver/n8"), "{:?}", d.regressions);
+        assert!(diff_outcomes(&base, &slow, 200.0).regressions.is_empty());
+        // Improvements and coverage changes classify.
+        let mut fast = base.clone();
+        fast[1].cycles -= 1;
+        let d = diff_outcomes(&base, &fast, 0.0);
+        assert_eq!(d.improvements.len(), 1);
+        let d = diff_outcomes(&base, &base[..1], 0.0);
+        assert_eq!(d.missing.len(), 1);
+        let d = diff_outcomes(&base[..1], &base, 0.0);
+        assert_eq!(d.added.len(), 1);
     }
 
     #[test]

@@ -8,4 +8,6 @@ pub use command::{
     program_stats, Cmd, LaneMask, Program, ProgramStats, VsCommand, XferDst,
     NUM_LANES,
 };
-pub use pattern::{Capability, ConstPattern, ElemFlags, Pattern2D, Reuse};
+pub use pattern::{
+    decompose_rows, Capability, ConstPattern, ElemFlags, Pattern2D, Reuse,
+};

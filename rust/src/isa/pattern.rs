@@ -128,6 +128,18 @@ impl Pattern2D {
     }
 }
 
+/// Decompose a 2D (possibly inductive) pattern into per-row 1D patterns
+/// — what a rectangular-only (RR-capable or weaker) ISA must issue
+/// (paper Fig 11). Used by the `inductive: false` ablation lowering.
+pub fn decompose_rows(pat: &Pattern2D) -> Vec<Pattern2D> {
+    (0..pat.n_j)
+        .filter_map(|j| {
+            let len = pat.len_at(j);
+            (len > 0).then(|| Pattern2D::strided(pat.addr(j, 0), pat.c_i, len))
+        })
+        .collect()
+}
+
 /// Element position flags the stream control unit tracks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ElemFlags {

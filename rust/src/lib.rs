@@ -1,9 +1,11 @@
 //! REVEL reproduction library root.
 //!
 //! Layering (see `docs/ARCHITECTURE.md` for the full map): `isa`/
-//! `dataflow` define the architecture's IR, `compiler` places it on the
-//! fabric, `sim` executes it cycle-accurately, `workloads` express the
-//! paper's seven kernels, `baselines`/`model` hold the comparison and
+//! `dataflow` define the architecture's IR, `vsc` is the typed
+//! kernel-builder API workloads program it through, `compiler` places
+//! it on the fabric, `sim` executes it cycle-accurately, `workloads`
+//! express the paper's kernel suite (plus LU), `baselines`/`model`
+//! hold the comparison and
 //! area/power models, `analysis` the FGOP characterization, `harness`
 //! the parallel sweep engine behind `report`, `runtime` the PJRT golden
 //! path, and `coordinator` the 5G serving cluster (`revel serve`).
@@ -35,4 +37,5 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+pub mod vsc;
 pub mod workloads;

@@ -5,6 +5,7 @@
 //! revel run <kernel> <n> [--throughput] [--features base|+inductive|...|all]
 //! revel trace <kernel> <n>
 //! revel sweep [--out FILE] [--workers N] [kernel ...]
+//! revel sweep-diff <BASELINE.json> <CURRENT.json> [--tolerance PCT]
 //! revel serve [--units N] [--jobs M] [--seed S] [--mode open|closed]
 //!             [--lambda R] [--clients C] [--queue-cap Q] [--admit-cap A]
 //!             [--workers W] [--out FILE]
@@ -54,6 +55,11 @@ fn print_serve(report: &ServeReport, wall_s: f64) {
 }
 
 fn main() {
+    // Environment handling is CLI-only: the library's SimConfig::default
+    // is deterministic, and the CLI opts back into REVEL_MAX_CYCLES here.
+    if std::env::var_os("REVEL_MAX_CYCLES").is_some() {
+        revel::sim::set_max_cycles_budget(revel::sim::SimConfig::from_env().max_cycles);
+    }
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
         Some("report") => {
@@ -209,6 +215,71 @@ fn main() {
                 .expect("write sweep artifact");
             println!("wrote {out_path}");
         }
+        Some("sweep-diff") => {
+            // Perf-neutrality gate: compare an archived BENCH_sweep.json
+            // against the current run; any matched point slower than
+            // baseline (beyond --tolerance percent) fails the command.
+            let base_path = args.get(1).expect("baseline BENCH_sweep.json path");
+            let cur_path = args.get(2).expect("current BENCH_sweep.json path");
+            let tol: f64 = args
+                .iter()
+                .position(|a| a == "--tolerance")
+                .and_then(|i| args.get(i + 1))
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0.0);
+            let read = |path: &str| -> Vec<harness::SweepOutcome> {
+                let text = std::fs::read_to_string(path)
+                    .unwrap_or_else(|e| panic!("read {path}: {e}"));
+                harness::read_artifact(&text)
+                    .unwrap_or_else(|e| panic!("parse {path}: {e}"))
+            };
+            let base = read(base_path);
+            let cur = read(cur_path);
+            let d = harness::diff_outcomes(&base, &cur, tol);
+            let mut t = revel::util::stats::Table::new(&[
+                "point", "baseline", "current", "delta",
+            ]);
+            for row in d.regressions.iter().chain(d.improvements.iter()) {
+                t.row(vec![
+                    row.key.clone(),
+                    row.base.to_string(),
+                    row.cur.to_string(),
+                    format!(
+                        "{:+.2}%",
+                        100.0 * (row.cur as f64 - row.base as f64)
+                            / row.base as f64
+                    ),
+                ]);
+            }
+            println!("{}", t.render());
+            println!(
+                "{} unchanged, {} improved, {} regressed, {} added, {} missing \
+                 (tolerance {tol}%)",
+                d.unchanged,
+                d.improvements.len(),
+                d.regressions.len(),
+                d.added.len(),
+                d.missing.len()
+            );
+            // Lost coverage fails too: if baseline points stop matching
+            // (kernel removed, point identity changed), the gate would
+            // otherwise "pass" while comparing nothing.
+            if !d.missing.is_empty() {
+                eprintln!(
+                    "FAIL: {} baseline point(s) missing from the current run: {:?}",
+                    d.missing.len(),
+                    d.missing
+                );
+                std::process::exit(1);
+            }
+            if !d.regressions.is_empty() {
+                eprintln!(
+                    "FAIL: {} point(s) regressed beyond {tol}%",
+                    d.regressions.len()
+                );
+                std::process::exit(1);
+            }
+        }
         Some("serve") => {
             let flag = |name: &str| {
                 args.iter().position(|a| a == name).and_then(|i| args.get(i + 1))
@@ -291,11 +362,12 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: revel <report|run|trace|sweep|serve|pipeline|list> ...\n\
+                "usage: revel <report|run|trace|sweep|sweep-diff|serve|pipeline|list> ...\n\
                    revel report all\n\
                    revel run cholesky 16 [--throughput] [--features base]\n\
                    revel trace qr 32\n\
                    revel sweep --out BENCH_sweep.json [--workers 8] [cholesky solver ...]\n\
+                   revel sweep-diff baseline.json BENCH_sweep.json [--tolerance 0]\n\
                    revel serve --units 4 --jobs 200 --seed 7 [--mode open|closed]\n\
                               [--lambda R] [--clients C] [--queue-cap 8] [--admit-cap 1024]\n\
                               [--workers W] [--out BENCH_serve.json]\n\

@@ -123,6 +123,7 @@ pub fn power_overhead(kernel: &str) -> f64 {
         "svd" => 3.5,
         "qr" => 2.1,
         "cholesky" => 2.2,
+        "lu" => 2.1,
         "solver" => 2.0,
         "fir" => 2.0,
         "gemm" => 1.9,

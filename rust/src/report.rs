@@ -449,7 +449,7 @@ pub fn table6() -> String {
         .iter()
         .map(|k| model::power_overhead(k))
         .sum::<f64>()
-        / 7.0;
+        / workloads::NAMES.len() as f64;
     format!(
         "Table 6: area and power breakdown (28nm)\n{}\n\
          Table 6 (bottom): overheads vs ideal iso-perf ASIC\n{}\n\
@@ -457,7 +457,7 @@ pub fn table6() -> String {
         t.render(),
         b.render(),
         mean_p,
-        model::revel_area_mm2() / model::asic_area_mm2(7),
+        model::revel_area_mm2() / model::asic_area_mm2(workloads::NAMES.len()),
     )
 }
 

@@ -23,19 +23,70 @@ pub struct SimConfig {
     pub max_cycles: u64,
 }
 
+/// Default watchdog budget. Real workload runs finish in well under 1M
+/// cycles; the watchdog exists to turn program bugs into diagnostics.
+pub const DEFAULT_MAX_CYCLES: u64 = 3_000_000;
+
+/// Process-wide watchdog override (0 = unset). Raised explicitly by the
+/// harness ([`crate::harness::ensure_budget`]) for the legitimately
+/// long ablation runs, or from `REVEL_MAX_CYCLES` by the CLI — never
+/// read implicitly, so library users and tests get deterministic
+/// defaults.
+static MAX_CYCLES_BUDGET: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0);
+
+/// Set the process-wide watchdog budget (first explicit setting wins
+/// over later [`set_max_cycles_budget_if_unset`] calls).
+pub fn set_max_cycles_budget(cycles: u64) {
+    MAX_CYCLES_BUDGET.store(cycles.max(1), std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Raise the budget only if nothing set it yet. Returns the now-active
+/// budget.
+pub fn set_max_cycles_budget_if_unset(cycles: u64) -> u64 {
+    let _ = MAX_CYCLES_BUDGET.compare_exchange(
+        0,
+        cycles.max(1),
+        std::sync::atomic::Ordering::Relaxed,
+        std::sync::atomic::Ordering::Relaxed,
+    );
+    max_cycles_budget()
+}
+
+/// The effective watchdog budget for machines built through
+/// [`crate::workloads::machine`]: the override if set, else
+/// [`DEFAULT_MAX_CYCLES`].
+pub fn max_cycles_budget() -> u64 {
+    match MAX_CYCLES_BUDGET.load(std::sync::atomic::Ordering::Relaxed) {
+        0 => DEFAULT_MAX_CYCLES,
+        v => v,
+    }
+}
+
 impl Default for SimConfig {
     fn default() -> Self {
         Self {
             lanes: 8,
             lane_spad_words: 2048,
             shared_words: 32768,
-            // Real workload runs finish in well under 1M cycles; the
-            // watchdog exists to turn program bugs into diagnostics.
-            max_cycles: std::env::var("REVEL_MAX_CYCLES")
-                .ok()
-                .and_then(|v| v.parse().ok())
-                .unwrap_or(3_000_000),
+            max_cycles: DEFAULT_MAX_CYCLES,
         }
+    }
+}
+
+impl SimConfig {
+    /// The default configuration with the `REVEL_MAX_CYCLES` environment
+    /// override applied. Environment handling lives here — and is
+    /// invoked only from the CLI entry point — so `Default` stays
+    /// deterministic for library users and tests.
+    pub fn from_env() -> Self {
+        let mut cfg = Self::default();
+        if let Some(v) =
+            std::env::var("REVEL_MAX_CYCLES").ok().and_then(|v| v.parse().ok())
+        {
+            cfg.max_cycles = v;
+        }
+        cfg
     }
 }
 

@@ -25,6 +25,9 @@ pub mod stats;
 
 pub use cursor::{ConstCursor, StreamCursor};
 pub use lane::{Lane, LaneEvent};
-pub use machine::{Machine, SimConfig, SimError};
-pub use spad::Spad;
+pub use machine::{
+    max_cycles_budget, set_max_cycles_budget, set_max_cycles_budget_if_unset,
+    Machine, SimConfig, SimError, DEFAULT_MAX_CYCLES,
+};
+pub use spad::{Spad, LINE_WORDS};
 pub use stats::{Bucket, Stats, BUCKETS};

@@ -120,6 +120,30 @@ pub fn cholesky(a: &Mat) -> Mat {
     l
 }
 
+/// Doolittle LU without pivoting: returns the combined L\U factor
+/// (U in the upper triangle + diagonal, unit-diagonal L strictly
+/// below). Panics on a zero pivot — callers factor diagonally dominant
+/// matrices.
+pub fn lu(a: &Mat) -> Mat {
+    let n = a.rows;
+    let mut m = a.clone();
+    for k in 0..n {
+        let piv = m[(k, k)];
+        assert!(piv.abs() > 1e-300, "zero pivot at {k}");
+        for i in k + 1..n {
+            m[(i, k)] /= piv;
+        }
+        for j in k + 1..n {
+            let akj = m[(k, j)];
+            for i in k + 1..n {
+                let l = m[(i, k)];
+                m[(i, j)] -= l * akj;
+            }
+        }
+    }
+    m
+}
+
 /// Forward substitution: solve L x = b for lower-triangular L.
 pub fn fwd_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
     let n = l.rows;
@@ -267,6 +291,27 @@ mod tests {
             let l = cholesky(&a);
             let llt = l.matmul(&l.transpose());
             assert!(llt.max_abs_diff(&a) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn lu_reconstructs() {
+        for n in [4, 8, 16] {
+            let a = Mat::spd(n, 0.4);
+            let f = lu(&a);
+            // Rebuild A = L * U from the combined factor.
+            let mut l = Mat::eye(n);
+            let mut u = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    if i > j {
+                        l[(i, j)] = f[(i, j)];
+                    } else {
+                        u[(i, j)] = f[(i, j)];
+                    }
+                }
+            }
+            assert!(l.matmul(&u).max_abs_diff(&a) < 1e-9, "n={n}");
         }
     }
 

@@ -1,0 +1,278 @@
+//! Scratchpad **region allocator**: named, non-overlapping address
+//! ranges checked against the machine's capacity ([`SimConfig`]).
+//!
+//! Workloads used to hard-code base addresses (`A_BASE = 0`,
+//! `TMP_BASE = 1500`, ...) and every new kernel had to re-derive another
+//! module's magic numbers to avoid clobbering them. The allocator packs
+//! regions sequentially, aligns each base to a scratchpad line
+//! ([`LINE_WORDS`] words — base alignment affects the per-cycle gather
+//! width, so line-aligned regions never pay avoidable line-crossing
+//! stalls), and rejects over-capacity layouts at build time with a
+//! readable diagnostic instead of a simulator out-of-bounds panic.
+//!
+//! [`Region`] doubles as a checked [`Pattern2D`] factory: patterns built
+//! through a region assert containment, so a stream can never silently
+//! walk into a neighbouring array.
+
+use crate::isa::Pattern2D;
+use crate::sim::{SimConfig, LINE_WORDS};
+
+/// A named, allocated address range in a scratchpad.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    name: &'static str,
+    base: i64,
+    words: i64,
+}
+
+impl Region {
+    /// First word address of the region.
+    pub fn base(&self) -> i64 {
+        self.base
+    }
+
+    /// Capacity in 32-bit words.
+    pub fn words(&self) -> i64 {
+        self.words
+    }
+
+    /// One past the last word address.
+    pub fn end(&self) -> i64 {
+        self.base + self.words
+    }
+
+    /// Region name (diagnostics).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Absolute address of `off` within the region (bounds-checked).
+    pub fn addr(&self, off: i64) -> i64 {
+        assert!(
+            (0..self.words).contains(&off),
+            "region {:?}: offset {off} outside 0..{}",
+            self.name,
+            self.words
+        );
+        self.base + off
+    }
+
+    /// Assert a pattern stays inside the region and return it.
+    fn checked(&self, pat: Pattern2D) -> Pattern2D {
+        if let Some((lo, hi)) = pat.bounds() {
+            assert!(
+                lo >= self.base && hi < self.end(),
+                "region {:?} [{}, {}): pattern spans [{lo}, {hi}]",
+                self.name,
+                self.base,
+                self.end()
+            );
+        }
+        pat
+    }
+
+    /// Contiguous pattern of `n` words starting at `off`.
+    pub fn lin(&self, off: i64, n: i64) -> Pattern2D {
+        self.checked(Pattern2D::lin(self.base + off, n))
+    }
+
+    /// 1D strided pattern starting at `off`.
+    pub fn strided(&self, off: i64, c_i: i64, n: i64) -> Pattern2D {
+        self.checked(Pattern2D::strided(self.base + off, c_i, n))
+    }
+
+    /// 2D rectangular pattern starting at `off`.
+    pub fn rect(&self, off: i64, c_i: i64, n_i: i64, c_j: i64, n_j: i64) -> Pattern2D {
+        self.checked(Pattern2D::rect(self.base + off, c_i, n_i, c_j, n_j))
+    }
+
+    /// 2D inductive (stretched) pattern starting at `off` — the RI
+    /// stream of paper Fig 10b, bounds-checked against the region.
+    pub fn inductive(
+        &self,
+        off: i64,
+        c_i: i64,
+        n_i: f64,
+        c_j: i64,
+        n_j: i64,
+        s_ji: f64,
+    ) -> Pattern2D {
+        self.checked(Pattern2D::inductive(self.base + off, c_i, n_i, c_j, n_j, s_ji))
+    }
+}
+
+/// Allocation failure (rendered with the full layout so far).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AllocError {
+    /// The request does not fit in the remaining capacity.
+    Capacity {
+        /// Region that failed to allocate.
+        name: &'static str,
+        /// Requested size in words.
+        words: i64,
+        /// Words already allocated (aligned).
+        used: i64,
+        /// Total scratchpad capacity in words.
+        cap: i64,
+    },
+    /// A region with this name already exists in the allocator.
+    Duplicate(&'static str),
+    /// Zero- or negative-sized request.
+    Empty(&'static str),
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::Capacity { name, words, used, cap } => write!(
+                f,
+                "spad region {name:?}: {words} words do not fit \
+                 ({used}/{cap} words already allocated)"
+            ),
+            AllocError::Duplicate(name) => {
+                write!(f, "spad region {name:?} allocated twice")
+            }
+            AllocError::Empty(name) => {
+                write!(f, "spad region {name:?} requested with no words")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+/// Sequential, line-aligned scratchpad region allocator.
+#[derive(Clone, Debug)]
+pub struct SpadAlloc {
+    cap: i64,
+    cursor: i64,
+    regions: Vec<Region>,
+}
+
+impl SpadAlloc {
+    /// Allocator over an explicit capacity in words.
+    pub fn with_capacity(words: usize) -> Self {
+        Self { cap: words as i64, cursor: 0, regions: Vec::new() }
+    }
+
+    /// Allocator over a lane's local scratchpad.
+    pub fn lane(cfg: &SimConfig) -> Self {
+        Self::with_capacity(cfg.lane_spad_words)
+    }
+
+    /// Allocator over the shared scratchpad.
+    pub fn shared(cfg: &SimConfig) -> Self {
+        Self::with_capacity(cfg.shared_words)
+    }
+
+    /// Allocate `words` words as a new named region. Bases are aligned
+    /// to a scratchpad line; regions never overlap by construction.
+    pub fn region(&mut self, name: &'static str, words: i64) -> Result<Region, AllocError> {
+        if words <= 0 {
+            return Err(AllocError::Empty(name));
+        }
+        if self.regions.iter().any(|r| r.name == name) {
+            return Err(AllocError::Duplicate(name));
+        }
+        let line = LINE_WORDS as i64;
+        let base = (self.cursor + line - 1) / line * line;
+        if base + words > self.cap {
+            return Err(AllocError::Capacity { name, words, used: base, cap: self.cap });
+        }
+        let r = Region { name, base, words };
+        self.cursor = base + words;
+        self.regions.push(r);
+        Ok(r)
+    }
+
+    /// Words still available (from the aligned cursor).
+    pub fn remaining(&self) -> i64 {
+        let line = LINE_WORDS as i64;
+        self.cap - (self.cursor + line - 1) / line * line
+    }
+
+    /// Allocated regions, in allocation order.
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+
+    /// Render the layout (diagnostics / docs).
+    pub fn describe(&self) -> String {
+        let mut s = format!("spad layout ({} words):\n", self.cap);
+        for r in &self.regions {
+            s.push_str(&format!(
+                "  [{:>6}, {:>6})  {:>6} words  {}\n",
+                r.base,
+                r.end(),
+                r.words,
+                r.name
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_pack_line_aligned_and_disjoint() {
+        let mut al = SpadAlloc::with_capacity(256);
+        let a = al.region("a", 20).unwrap();
+        let b = al.region("b", 7).unwrap();
+        let c = al.region("c", 16).unwrap();
+        assert_eq!(a.base(), 0);
+        assert_eq!(b.base(), 32, "20 rounds up to the next line");
+        assert_eq!(c.base(), 48);
+        for (x, y) in [(a, b), (b, c), (a, c)] {
+            assert!(x.end() <= y.base(), "{x:?} overlaps {y:?}");
+        }
+        assert!(al.remaining() >= 256 - 64 - 16);
+    }
+
+    #[test]
+    fn capacity_overflow_is_a_readable_error() {
+        let mut al = SpadAlloc::with_capacity(64);
+        al.region("a", 40).unwrap();
+        let err = al.region("b", 32).unwrap_err();
+        assert!(matches!(err, AllocError::Capacity { name: "b", .. }));
+        let msg = err.to_string();
+        assert!(msg.contains("\"b\"") && msg.contains("64"), "{msg}");
+    }
+
+    #[test]
+    fn duplicate_and_empty_requests_rejected() {
+        let mut al = SpadAlloc::with_capacity(64);
+        al.region("a", 8).unwrap();
+        assert_eq!(al.region("a", 8).unwrap_err(), AllocError::Duplicate("a"));
+        assert_eq!(al.region("z", 0).unwrap_err(), AllocError::Empty("z"));
+    }
+
+    #[test]
+    fn region_patterns_are_containment_checked() {
+        let mut al = SpadAlloc::with_capacity(128);
+        let a = al.region("a", 32).unwrap();
+        assert_eq!(a.lin(4, 8).start, 4);
+        assert_eq!(a.addr(31), 31);
+        let tri = a.inductive(0, 1, 4.0, 5, 4, -1.0);
+        assert_eq!(tri.total_len(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "pattern spans")]
+    fn out_of_region_pattern_panics_at_build_time() {
+        let mut al = SpadAlloc::with_capacity(128);
+        let a = al.region("a", 32).unwrap();
+        let _ = a.lin(16, 32); // runs to word 47 > region end 32
+    }
+
+    #[test]
+    fn describe_lists_every_region() {
+        let mut al = SpadAlloc::with_capacity(128);
+        al.region("mat", 64).unwrap();
+        al.region("tmp", 8).unwrap();
+        let d = al.describe();
+        assert!(d.contains("mat") && d.contains("tmp"), "{d}");
+    }
+}

@@ -1,0 +1,605 @@
+//! Typed vector-stream kernel builders.
+//!
+//! [`Kernel`] assembles a lane configuration out of named dataflow
+//! scopes; every input/output port is created by the builder and handed
+//! back as a typed handle ([`In`] / [`Out`]) that carries its global
+//! port id, width, and the identity of the kernel that created it. The
+//! [`ProgBuilder`] then consumes those handles to emit the control
+//! program — so a port number can never be fabricated, double-bound, or
+//! borrowed from another kernel: misuse panics at build time with a
+//! named diagnostic instead of surfacing as a watchdog deadlock deep in
+//! simulation.
+//!
+//! The lowering is exactly the raw-[`Cmd`] lowering the workloads used
+//! to hand-roll (including the per-row decomposition of 2D patterns
+//! when the inductive feature is ablated — paper Fig 11), which is what
+//! the old-vs-new equivalence property tests in `tests/property.rs`
+//! assert command by command.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::compiler::Configured;
+use crate::dataflow::{Criticality, Dfg, DfgBuilder, LaneConfig, Op, Operand};
+use crate::isa::{
+    decompose_rows, Cmd, ConstPattern, LaneMask, Pattern2D, Program, Reuse,
+    VsCommand, XferDst,
+};
+use crate::sim::lane::NUM_PORTS;
+use crate::workloads::Features;
+
+static NEXT_KERNEL_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Typed handle to a lane **input** port (scratchpad/const/XFER streams
+/// deliver into it; a dataflow consumes it). Created only by
+/// [`DfgScope::input`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct In {
+    kid: u64,
+    dfg: usize,
+    local: usize,
+    gid: usize,
+    width: usize,
+}
+
+impl In {
+    /// Global lane port id this handle names.
+    pub fn id(&self) -> usize {
+        self.gid
+    }
+
+    /// Vector width (words) the owning dataflow declared.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The port as a dataflow operand (valid inside its own scope).
+    pub fn wire(&self) -> Operand {
+        Operand::Port(self.local)
+    }
+}
+
+impl From<In> for Operand {
+    fn from(p: In) -> Operand {
+        p.wire()
+    }
+}
+
+/// Typed handle to a lane **output** port (a dataflow produces into it;
+/// stores/XFERs drain it). Created only by [`DfgScope::output`] /
+/// [`DfgScope::output_gated`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Out {
+    kid: u64,
+    gid: usize,
+    width: usize,
+}
+
+impl Out {
+    /// Global lane port id this handle names.
+    pub fn id(&self) -> usize {
+        self.gid
+    }
+
+    /// Vector width (words) of the produced instances.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+}
+
+/// Multi-dataflow kernel under construction.
+pub struct Kernel {
+    name: String,
+    kid: u64,
+    dfgs: Vec<Dfg>,
+    next_in: usize,
+    next_out: usize,
+    open_scopes: usize,
+}
+
+impl Kernel {
+    /// Start a new kernel. Port ids are assigned sequentially per
+    /// direction as the dataflow scopes declare them.
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            kid: NEXT_KERNEL_ID.fetch_add(1, Ordering::Relaxed),
+            dfgs: Vec::new(),
+            next_in: 0,
+            next_out: 0,
+            open_scopes: 0,
+        }
+    }
+
+    /// Open a dataflow scope. Call [`DfgScope::done`] to commit it.
+    pub fn dfg(&mut self, name: &str, criticality: Criticality) -> DfgScope<'_> {
+        self.open_scopes += 1;
+        let dfg_idx = self.dfgs.len();
+        DfgScope { b: DfgBuilder::new(name, criticality), k: self, dfg_idx }
+    }
+
+    /// Validate and freeze the kernel.
+    pub fn build(self) -> Result<BuiltKernel, String> {
+        if self.open_scopes != 0 {
+            return Err(format!(
+                "kernel {:?}: {} dataflow scope(s) never committed (call done())",
+                self.name, self.open_scopes
+            ));
+        }
+        if self.next_in > NUM_PORTS || self.next_out > NUM_PORTS {
+            return Err(format!(
+                "kernel {:?}: {} in / {} out ports exceed the lane's {NUM_PORTS}",
+                self.name, self.next_in, self.next_out
+            ));
+        }
+        let config = LaneConfig { name: self.name.clone(), dfgs: self.dfgs };
+        config.validate()?;
+        Ok(BuiltKernel { name: self.name, kid: self.kid, config })
+    }
+}
+
+/// One dataflow graph under construction inside a [`Kernel`].
+pub struct DfgScope<'k> {
+    k: &'k mut Kernel,
+    b: DfgBuilder,
+    dfg_idx: usize,
+}
+
+impl DfgScope<'_> {
+    /// Declare an input port of the given vector width; returns its
+    /// typed handle (use [`In::wire`] to feed nodes).
+    pub fn input(&mut self, width: usize) -> In {
+        let gid = self.k.next_in;
+        self.k.next_in += 1;
+        let local = match self.b.in_port(gid, width) {
+            Operand::Port(i) => i,
+            _ => unreachable!("DfgBuilder::in_port returns a port operand"),
+        };
+        In { kid: self.k.kid, dfg: self.dfg_idx, local, gid, width }
+    }
+
+    /// Add a compute node (same contract as
+    /// [`crate::dataflow::DfgBuilder::node`]).
+    pub fn node(&mut self, op: Op, operands: &[Operand]) -> Operand {
+        self.b.node(op, operands)
+    }
+
+    /// Bind `node` to a fresh output port of the given width.
+    pub fn output(&mut self, node: Operand, width: usize) -> Out {
+        let gid = self.k.next_out;
+        self.k.next_out += 1;
+        self.b.out(gid, node, width);
+        Out { kid: self.k.kid, gid, width }
+    }
+
+    /// Bind `node` to a fresh *gated* output port: instances are pushed
+    /// only on firings where `gate` (an input of this same dataflow)
+    /// carries a 1 — the inductive production-rate mechanism behind the
+    /// loop-carried forwards (paper Feature 3).
+    pub fn output_gated(&mut self, node: Operand, width: usize, gate: In) -> Out {
+        assert!(
+            gate.kid == self.k.kid && gate.dfg == self.dfg_idx,
+            "kernel {:?} dfg #{}: gate port belongs to another dataflow",
+            self.k.name,
+            self.dfg_idx
+        );
+        let gid = self.k.next_out;
+        self.k.next_out += 1;
+        self.b.out_gated(gid, node, width, Some(Operand::Port(gate.local)));
+        Out { kid: self.k.kid, gid, width }
+    }
+
+    /// Commit this dataflow into the kernel.
+    pub fn done(self) {
+        self.k.dfgs.push(self.b.build());
+        self.k.open_scopes -= 1;
+    }
+}
+
+/// A frozen kernel: the lane configuration plus the identity that makes
+/// its port handles unforgeable.
+pub struct BuiltKernel {
+    name: String,
+    kid: u64,
+    /// The lane configuration to compile (e.g. via
+    /// `workloads::cached_config`).
+    pub config: LaneConfig,
+}
+
+impl BuiltKernel {
+    /// Kernel name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Start the control program for this kernel: pushes the
+    /// `Configure` broadcast and returns the typed command builder.
+    pub fn program(
+        &self,
+        cfg: Arc<Configured>,
+        feats: Features,
+        mask: LaneMask,
+    ) -> ProgBuilder {
+        assert_eq!(
+            cfg.config.name, self.name,
+            "vsc: configuring kernel {:?} with {:?}'s compiled config",
+            self.name, cfg.config.name
+        );
+        ProgBuilder {
+            kernel: self.name.clone(),
+            kid: self.kid,
+            prog: vec![VsCommand::new(Cmd::Configure(cfg), mask)],
+            mask,
+            feats,
+        }
+    }
+}
+
+/// Typed control-program builder. Lowers to the exact [`Cmd`] stream the
+/// workloads used to hand-write: loads/stores decompose into per-row 1D
+/// commands when the inductive feature is off, masking follows the
+/// feature switch, and every command carries the builder's lane mask.
+pub struct ProgBuilder {
+    kernel: String,
+    kid: u64,
+    prog: Program,
+    mask: LaneMask,
+    feats: Features,
+}
+
+impl ProgBuilder {
+    fn ck_in(&self, p: In) {
+        assert!(
+            p.kid == self.kid,
+            "vsc: input port #{} belongs to another kernel (program of {:?})",
+            p.gid,
+            self.kernel
+        );
+    }
+
+    fn ck_out(&self, p: Out) {
+        assert!(
+            p.kid == self.kid,
+            "vsc: output port #{} belongs to another kernel (program of {:?})",
+            p.gid,
+            self.kernel
+        );
+    }
+
+    fn push(&mut self, cmd: Cmd) {
+        self.prog.push(VsCommand::new(cmd, self.mask));
+    }
+
+    /// Feature switches this program is built under.
+    pub fn feats(&self) -> Features {
+        self.feats
+    }
+
+    /// Lane mask every command is broadcast to.
+    pub fn mask(&self) -> LaneMask {
+        self.mask
+    }
+
+    /// Scratchpad load stream into `p` (no reuse, no RMW pairing).
+    pub fn ld(&mut self, pat: Pattern2D, p: In) {
+        self.ld_opts(pat, p, None, None);
+    }
+
+    /// Load with a port-side reuse config (paper Feature 2).
+    pub fn ld_reuse(&mut self, pat: Pattern2D, p: In, reuse: Reuse) {
+        self.ld_opts(pat, p, Some(reuse), None);
+    }
+
+    /// Load that is the RMW partner of an in-place store over the same
+    /// range (issue the store first; see [`Cmd::LocalLd`]).
+    pub fn ld_rmw(&mut self, pat: Pattern2D, p: In, lag: u8) {
+        self.ld_opts(pat, p, None, Some(lag));
+    }
+
+    /// General load: reuse and RMW pairing both optional. 2D patterns
+    /// decompose into per-row commands when the inductive feature is
+    /// off (Fig 11's O(n) expansion).
+    pub fn ld_opts(
+        &mut self,
+        pat: Pattern2D,
+        p: In,
+        reuse: Option<Reuse>,
+        rmw: Option<u8>,
+    ) {
+        self.ck_in(p);
+        let masked = self.feats.masking;
+        if self.feats.inductive || pat.n_j <= 1 {
+            self.push(Cmd::LocalLd { pat, port: p.gid, reuse, masked, rmw });
+        } else {
+            for row in decompose_rows(&pat) {
+                self.push(Cmd::LocalLd { pat: row, port: p.gid, reuse, masked, rmw });
+            }
+        }
+    }
+
+    /// Rectangular-native load: issued as a single command even when
+    /// the inductive feature is ablated. Rectangular 2D streams are
+    /// native to every capability >= RR (paper Fig 21), so the non-FGOP
+    /// kernels (FFT, GEMM) do not decompose under the ablation.
+    pub fn ld_rect(&mut self, pat: Pattern2D, p: In, rmw: Option<u8>) {
+        self.ck_in(p);
+        let masked = self.feats.masking;
+        self.push(Cmd::LocalLd { pat, port: p.gid, reuse: None, masked, rmw });
+    }
+
+    /// Store-side counterpart of [`ProgBuilder::ld_rect`].
+    pub fn st_rect(&mut self, pat: Pattern2D, p: Out, rmw: bool) {
+        self.ck_out(p);
+        self.push(Cmd::LocalSt { pat, port: p.gid, rmw });
+    }
+
+    /// Load with a per-lane address stride (vector-stream control:
+    /// one command, per-lane offsets). Never decomposed.
+    pub fn ld_strided_lanes(&mut self, pat: Pattern2D, p: In, lane_stride: i64) {
+        self.ck_in(p);
+        let masked = self.feats.masking;
+        self.prog.push(VsCommand::with_stride(
+            Cmd::LocalLd { pat, port: p.gid, reuse: None, masked, rmw: None },
+            self.mask,
+            lane_stride,
+        ));
+    }
+
+    /// Output-port store stream to the scratchpad.
+    pub fn st(&mut self, pat: Pattern2D, p: Out) {
+        self.st_opts(pat, p, false);
+    }
+
+    /// In-place RMW store: element-ordered against its paired load
+    /// instead of issue-blocked (see [`Cmd::LocalSt`]).
+    pub fn st_rmw(&mut self, pat: Pattern2D, p: Out) {
+        self.st_opts(pat, p, true);
+    }
+
+    /// General store; decomposes like [`ProgBuilder::ld_opts`].
+    pub fn st_opts(&mut self, pat: Pattern2D, p: Out, rmw: bool) {
+        self.ck_out(p);
+        if self.feats.inductive || pat.n_j <= 1 {
+            self.push(Cmd::LocalSt { pat, port: p.gid, rmw });
+        } else {
+            for row in decompose_rows(&pat) {
+                self.push(Cmd::LocalSt { pat: row, port: p.gid, rmw });
+            }
+        }
+    }
+
+    /// Store with a per-lane address stride. Never decomposed.
+    pub fn st_strided_lanes(&mut self, pat: Pattern2D, p: Out, lane_stride: i64) {
+        self.ck_out(p);
+        self.prog.push(VsCommand::with_stride(
+            Cmd::LocalSt { pat, port: p.gid, rmw: false },
+            self.mask,
+            lane_stride,
+        ));
+    }
+
+    /// Constant-pattern stream into `p` (inductive control flow).
+    pub fn const_st(&mut self, pat: ConstPattern, p: In) {
+        self.ck_in(p);
+        self.push(Cmd::ConstSt { pat, port: p.gid });
+    }
+
+    /// Gate idiom: a run of `n` copies of `val` (e.g. all-ones over a
+    /// forwarded column, all-zeros after).
+    pub fn gate_run(&mut self, p: In, val: f64, n: i64) {
+        self.const_st(ConstPattern::scalar(val, n), p);
+    }
+
+    /// Gate idiom: per row j one `val1` then `len(j)-1` `val2`s —
+    /// "first element of each row" (loop-carried scalar taps).
+    pub fn gate_first_of_row(
+        &mut self,
+        p: In,
+        val1: f64,
+        val2: f64,
+        n_i: f64,
+        n_j: i64,
+        s: f64,
+    ) {
+        self.const_st(ConstPattern::first_of_row(val1, val2, n_i, n_j, s), p);
+    }
+
+    /// Gate idiom: `len(j)-1` `val2`s then one `val1` — "last element of
+    /// each row" (accumulator emit pacing).
+    pub fn gate_last_of_row(
+        &mut self,
+        p: In,
+        val1: f64,
+        val2: f64,
+        n_i: f64,
+        n_j: i64,
+        s: f64,
+    ) {
+        self.const_st(ConstPattern::last_of_row(val1, val2, n_i, n_j, s), p);
+    }
+
+    /// Same-lane fine-grain ordered dependence: `n` instances from
+    /// `src` to `dst` (no reuse).
+    pub fn xfer(&mut self, src: Out, dst: In, n: i64) {
+        self.xfer_opts(src, dst, XferDst::Local, n, None);
+    }
+
+    /// Same-lane XFER with destination-side reuse (the `inva`/`w_j`
+    /// scalar-tap idiom).
+    pub fn xfer_reuse(&mut self, src: Out, dst: In, n: i64, reuse: Reuse) {
+        self.xfer_opts(src, dst, XferDst::Local, n, Some(reuse));
+    }
+
+    /// Neighbor-lane XFER at `+off` (mod lanes).
+    pub fn xfer_lane(&mut self, src: Out, dst: In, off: i8, n: i64, reuse: Option<Reuse>) {
+        self.xfer_opts(src, dst, XferDst::Lane(off), n, reuse);
+    }
+
+    /// Pivot broadcast: replicate each instance to `lanes`' input ports
+    /// (bus-serialized — the latency-optimized factorization idiom).
+    pub fn bcast(&mut self, src: Out, dst: In, lanes: LaneMask, n: i64, reuse: Option<Reuse>) {
+        self.xfer_opts(src, dst, XferDst::Bcast(lanes), n, reuse);
+    }
+
+    /// General XFER.
+    pub fn xfer_opts(
+        &mut self,
+        src: Out,
+        dst: In,
+        to: XferDst,
+        n: i64,
+        reuse: Option<Reuse>,
+    ) {
+        self.ck_out(src);
+        self.ck_in(dst);
+        self.push(Cmd::Xfer { src_port: src.gid, dst_port: dst.gid, dst: to, n, reuse });
+    }
+
+    /// Shared-scratchpad load (shared -> local), with per-lane stride
+    /// applied to the shared address.
+    pub fn shared_ld(
+        &mut self,
+        pat: Pattern2D,
+        shared_addr: i64,
+        local_addr: i64,
+        lane_stride: i64,
+    ) {
+        self.prog.push(VsCommand::with_stride(
+            Cmd::SharedLd { pat, shared_addr, local_addr },
+            self.mask,
+            lane_stride,
+        ));
+    }
+
+    /// Shared-scratchpad store (local -> shared).
+    pub fn shared_st(
+        &mut self,
+        pat: Pattern2D,
+        local_addr: i64,
+        shared_addr: i64,
+        lane_stride: i64,
+    ) {
+        self.prog.push(VsCommand::with_stride(
+            Cmd::SharedSt { pat, local_addr, shared_addr },
+            self.mask,
+            lane_stride,
+        ));
+    }
+
+    /// Scratchpad barrier (local + shared streams drain; XFER streams
+    /// are unaffected, which is what lets fine-grain dependences overlap
+    /// across it).
+    pub fn barrier(&mut self) {
+        self.push(Cmd::Barrier);
+    }
+
+    /// Append `Wait` (control core blocks until the masked lanes go
+    /// idle) and return the finished program.
+    pub fn finish(mut self) -> Program {
+        self.push(Cmd::Wait);
+        self.prog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_kernel() -> (BuiltKernel, In, In, Out) {
+        let mut k = Kernel::new("tiny");
+        let mut d = k.dfg("scale", Criticality::Critical);
+        let x = d.input(4);
+        let s = d.input(1);
+        let y = d.node(Op::Mul, &[x.wire(), s.wire()]);
+        let out = d.output(y, 4);
+        d.done();
+        (k.build().unwrap(), x, s, out)
+    }
+
+    fn compiled(b: &BuiltKernel) -> Arc<Configured> {
+        Configured::new(
+            b.config.clone(),
+            &crate::compiler::FabricSpec::default_revel(),
+            &crate::compiler::CompileOptions::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ports_are_assigned_sequentially_and_typed() {
+        let (built, x, s, out) = tiny_kernel();
+        assert_eq!((x.id(), s.id(), out.id()), (0, 1, 0));
+        assert_eq!((x.width(), s.width(), out.width()), (4, 1, 4));
+        assert_eq!(built.config.dfgs.len(), 1);
+        assert_eq!(built.config.find_in_port(1), Some((0, 1)));
+    }
+
+    #[test]
+    fn program_lowers_to_raw_commands() {
+        let (built, x, s, out) = tiny_kernel();
+        let cfg = compiled(&built);
+        let mask = LaneMask::one(0);
+        let mut p = built.program(cfg, Features::ALL, mask);
+        p.ld(Pattern2D::lin(0, 8), x);
+        p.gate_run(s, 2.0, 2);
+        p.st(Pattern2D::lin(16, 8), out);
+        let prog = p.finish();
+        assert_eq!(prog.len(), 5, "configure + 3 streams + wait");
+        assert!(matches!(prog[0].cmd, Cmd::Configure(_)));
+        assert!(
+            matches!(prog[1].cmd, Cmd::LocalLd { port: 0, masked: true, .. })
+        );
+        assert!(matches!(prog[4].cmd, Cmd::Wait));
+    }
+
+    #[test]
+    fn non_inductive_programs_decompose_2d_patterns() {
+        let (built, x, _, out) = tiny_kernel();
+        let cfg = compiled(&built);
+        let no_ind = Features { inductive: false, ..Features::ALL };
+        let mut p = built.program(cfg, no_ind, LaneMask::one(0));
+        let pat = Pattern2D::inductive(0, 1, 4.0, 5, 4, -1.0);
+        p.ld(pat.clone(), x);
+        p.st(Pattern2D::lin(32, 4), out);
+        let prog = p.finish();
+        // Configure + 4 decomposed rows + store + wait.
+        assert_eq!(prog.len(), 1 + decompose_rows(&pat).len() + 1 + 1);
+        assert!(prog[1..5]
+            .iter()
+            .all(|c| matches!(c.cmd, Cmd::LocalLd { port: 0, .. })));
+    }
+
+    #[test]
+    #[should_panic(expected = "belongs to another kernel")]
+    fn foreign_port_is_rejected_at_build_time() {
+        let (built_a, _, _, _) = tiny_kernel();
+        let (_, x_b, _, _) = tiny_kernel();
+        let cfg = compiled(&built_a);
+        let mut p = built_a.program(cfg, Features::ALL, LaneMask::one(0));
+        p.ld(Pattern2D::lin(0, 4), x_b); // port from the other kernel
+    }
+
+    #[test]
+    fn uncommitted_scope_is_a_build_error() {
+        let mut k = Kernel::new("leaky");
+        let mut d = k.dfg("d", Criticality::Critical);
+        let x = d.input(1);
+        let y = d.node(Op::Copy, &[x.wire()]);
+        let _ = d.output(y, 1);
+        std::mem::drop(d); // forgot done()
+        let err = k.build().unwrap_err();
+        assert!(err.contains("never committed"), "{err}");
+    }
+
+    #[test]
+    fn gated_output_requires_same_dfg_gate() {
+        let mut k = Kernel::new("g");
+        let mut a = k.dfg("a", Criticality::Critical);
+        let ax = a.input(4);
+        let g = a.input(4);
+        let n = a.node(Op::Copy, &[ax.wire()]);
+        let _ = a.output_gated(n, 4, g);
+        a.done();
+        assert!(k.build().is_ok());
+    }
+}

@@ -1,0 +1,593 @@
+//! Whole-program validation pass: checks a finished [`Program`] against
+//! a machine configuration and renders readable diagnostics for the
+//! classes of bug that otherwise only surface as watchdog deadlocks —
+//! streams into ports no dataflow consumes, produced outputs nothing
+//! drains, patterns that walk out of the scratchpad, and unbalanced
+//! instance counts between the input ports of one dataflow.
+//!
+//! Also home to [`programs_equal`], the structural command-stream
+//! comparator the old-vs-new port-equivalence property tests use.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::compiler::Configured;
+use crate::isa::{Cmd, Program, VsCommand};
+use crate::sim::lane::NUM_PORTS;
+use crate::sim::SimConfig;
+
+/// Diagnostic severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// The program will deadlock, fault, or read/write out of bounds.
+    Error,
+    /// Suspicious but possibly intentional.
+    Warning,
+}
+
+/// One diagnostic: severity, the command index it anchors to (if any),
+/// and a rendered message.
+#[derive(Clone, Debug)]
+pub struct Diag {
+    /// Error or warning.
+    pub severity: Severity,
+    /// Index of the offending command in the program, if localized.
+    pub at: Option<usize>,
+    /// Human-readable description.
+    pub msg: String,
+}
+
+/// Result of [`check_program`].
+#[derive(Clone, Debug, Default)]
+pub struct CheckReport {
+    /// All diagnostics, in discovery order.
+    pub diags: Vec<Diag>,
+}
+
+impl CheckReport {
+    /// True when no diagnostics at all were produced.
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// Error-severity diagnostics.
+    pub fn errors(&self) -> Vec<&Diag> {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).collect()
+    }
+
+    /// Warning-severity diagnostics.
+    pub fn warnings(&self) -> Vec<&Diag> {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).collect()
+    }
+
+    fn error(&mut self, at: Option<usize>, msg: String) {
+        self.diags.push(Diag { severity: Severity::Error, at, msg });
+    }
+
+    fn warn(&mut self, at: Option<usize>, msg: String) {
+        self.diags.push(Diag { severity: Severity::Warning, at, msg });
+    }
+}
+
+impl std::fmt::Display for CheckReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_clean() {
+            return write!(f, "program check: clean");
+        }
+        for d in &self.diags {
+            let sev = match d.severity {
+                Severity::Error => "error",
+                Severity::Warning => "warning",
+            };
+            match d.at {
+                Some(i) => writeln!(f, "{sev} at command {i}: {}", d.msg)?,
+                None => writeln!(f, "{sev}: {}", d.msg)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-configuration stream accounting.
+#[derive(Default)]
+struct Usage {
+    /// Instances delivered per input gid, plus whether reuse was ever
+    /// attached (reuse stretches consumption, so totals stop being
+    /// comparable across ports).
+    fed: HashMap<usize, (i64, bool)>,
+    /// Output gids drained by at least one store/XFER.
+    drained: HashMap<usize, bool>,
+}
+
+impl Usage {
+    fn feed(&mut self, gid: usize, instances: i64, reused: bool) {
+        let e = self.fed.entry(gid).or_insert((0, false));
+        e.0 += instances;
+        e.1 |= reused;
+    }
+}
+
+/// Validate `prog` against a machine configuration. Returns every
+/// problem found; [`CheckReport::errors`] empty means the program is
+/// structurally sound (warnings flag suspicious-but-legal patterns).
+pub fn check_program(prog: &Program, sim: &SimConfig) -> CheckReport {
+    let mut rep = CheckReport::default();
+    let mut cfg: Option<Arc<Configured>> = None;
+    let mut usage = Usage::default();
+
+    for (i, c) in prog.iter().enumerate() {
+        if let Some(hi) = c.lanes.lanes().max() {
+            if hi >= sim.lanes {
+                rep.warn(
+                    Some(i),
+                    format!("lane mask selects lane {hi}, machine has {}", sim.lanes),
+                );
+            }
+        }
+        let max_lane =
+            c.lanes.lanes().filter(|&l| l < sim.lanes).max().unwrap_or(0) as i64;
+        let lane_offs = [0, c.lane_stride * max_lane];
+        let off_lo = *lane_offs.iter().min().unwrap();
+        let off_hi = *lane_offs.iter().max().unwrap();
+        let local_in_bounds = |b: Option<(i64, i64)>| -> Option<String> {
+            let (lo, hi) = b?;
+            let (lo, hi) = (lo + off_lo, hi + off_hi);
+            (lo < 0 || hi >= sim.lane_spad_words as i64)
+                .then(|| format!("[{lo}, {hi}] outside 0..{}", sim.lane_spad_words))
+        };
+
+        match &c.cmd {
+            Cmd::Configure(conf) => {
+                flush_coverage(&mut rep, cfg.as_deref(), &usage);
+                usage = Usage::default();
+                cfg = Some(conf.clone());
+            }
+            Cmd::Barrier | Cmd::Wait => {}
+            _ if cfg.is_none() => {
+                rep.error(Some(i), "stream command before any Configure".into());
+            }
+            Cmd::LocalLd { pat, port, reuse, .. } => {
+                if let Some(msg) = local_in_bounds(pat.bounds()) {
+                    rep.error(Some(i), format!("load pattern {msg}"));
+                }
+                match in_width(cfg.as_deref(), *port) {
+                    Some(w) => {
+                        usage.feed(*port, pat.instances(w), reuse.is_some())
+                    }
+                    None => rep.error(
+                        Some(i),
+                        format!("load into port {port}, which no dataflow consumes"),
+                    ),
+                }
+            }
+            Cmd::ConstSt { pat, port } => match in_width(cfg.as_deref(), *port) {
+                Some(w) => usage.feed(*port, pat.instances(w), false),
+                None => rep.error(
+                    Some(i),
+                    format!("const stream into port {port}, which no dataflow consumes"),
+                ),
+            },
+            Cmd::LocalSt { pat, port, .. } => {
+                if let Some(msg) = local_in_bounds(pat.bounds()) {
+                    rep.error(Some(i), format!("store pattern {msg}"));
+                }
+                match out_width(cfg.as_deref(), *port) {
+                    Some(_) => {
+                        usage.drained.insert(*port, true);
+                    }
+                    None => rep.error(
+                        Some(i),
+                        format!("store from port {port}, which no dataflow produces"),
+                    ),
+                }
+            }
+            Cmd::Xfer { src_port, dst_port, n, reuse, .. } => {
+                let sw = out_width(cfg.as_deref(), *src_port);
+                let dw = in_width(cfg.as_deref(), *dst_port);
+                match sw {
+                    Some(_) => {
+                        usage.drained.insert(*src_port, true);
+                    }
+                    None => rep.error(
+                        Some(i),
+                        format!("XFER from port {src_port}, which no dataflow produces"),
+                    ),
+                }
+                match dw {
+                    Some(_) => usage.feed(*dst_port, *n, reuse.is_some()),
+                    None => rep.error(
+                        Some(i),
+                        format!("XFER into port {dst_port}, which no dataflow consumes"),
+                    ),
+                }
+                if let (Some(s), Some(d)) = (sw, dw) {
+                    if s != d {
+                        rep.warn(
+                            Some(i),
+                            format!(
+                                "XFER width mismatch: out port {src_port} is {s} wide, \
+                                 in port {dst_port} is {d} wide"
+                            ),
+                        );
+                    }
+                }
+            }
+            Cmd::SharedLd { pat, shared_addr, local_addr } => {
+                if let Some((lo, hi)) = pat.bounds() {
+                    let (lo, hi) = (lo + shared_addr + off_lo, hi + shared_addr + off_hi);
+                    if lo < 0 || hi >= sim.shared_words as i64 {
+                        rep.error(
+                            Some(i),
+                            format!(
+                                "shared load [{lo}, {hi}] outside 0..{}",
+                                sim.shared_words
+                            ),
+                        );
+                    }
+                }
+                let end = local_addr + pat.total_len();
+                if *local_addr < 0 || end > sim.lane_spad_words as i64 {
+                    rep.error(
+                        Some(i),
+                        format!(
+                            "shared load lands at [{local_addr}, {end}) outside the \
+                             {}-word lane scratchpad",
+                            sim.lane_spad_words
+                        ),
+                    );
+                }
+            }
+            Cmd::SharedSt { pat, local_addr, shared_addr } => {
+                if let Some((lo, hi)) = pat.bounds() {
+                    let (lo, hi) = (lo + local_addr, hi + local_addr);
+                    if lo < 0 || hi >= sim.lane_spad_words as i64 {
+                        rep.error(
+                            Some(i),
+                            format!(
+                                "shared store source [{lo}, {hi}] outside 0..{}",
+                                sim.lane_spad_words
+                            ),
+                        );
+                    }
+                }
+                let end = shared_addr + pat.total_len();
+                if *shared_addr + off_lo < 0 || end + off_hi > sim.shared_words as i64 {
+                    rep.error(
+                        Some(i),
+                        format!(
+                            "shared store lands at [{shared_addr}, {end}) outside the \
+                             {}-word shared scratchpad",
+                            sim.shared_words
+                        ),
+                    );
+                }
+            }
+        }
+        for port in [port_of(&c.cmd)].into_iter().flatten() {
+            if port >= NUM_PORTS {
+                rep.error(Some(i), format!("port {port} >= the lane's {NUM_PORTS} ports"));
+            }
+        }
+    }
+    flush_coverage(&mut rep, cfg.as_deref(), &usage);
+    rep
+}
+
+/// The (first) port index a command names, for the range check.
+fn port_of(c: &Cmd) -> Option<usize> {
+    match c {
+        Cmd::LocalLd { port, .. }
+        | Cmd::LocalSt { port, .. }
+        | Cmd::ConstSt { port, .. } => Some(*port),
+        Cmd::Xfer { src_port, dst_port, .. } => Some((*src_port).max(*dst_port)),
+        _ => None,
+    }
+}
+
+fn in_width(cfg: Option<&Configured>, gid: usize) -> Option<usize> {
+    let c = cfg?;
+    let (di, pi) = c.config.find_in_port(gid)?;
+    Some(c.config.dfgs[di].in_ports[pi].width)
+}
+
+fn out_width(cfg: Option<&Configured>, gid: usize) -> Option<usize> {
+    let c = cfg?;
+    let (di, oi) = c.config.find_out_port(gid)?;
+    Some(c.config.dfgs[di].outs[oi].width)
+}
+
+/// Coverage + balance evaluation for one configuration's era.
+fn flush_coverage(rep: &mut CheckReport, cfg: Option<&Configured>, usage: &Usage) {
+    let Some(c) = cfg else { return };
+    for d in &c.config.dfgs {
+        let fed: Vec<bool> =
+            d.in_ports.iter().map(|p| usage.fed.contains_key(&p.gid)).collect();
+        if !fed.iter().any(|&b| b) {
+            continue; // dataflow unused in this program: legal
+        }
+        for (p, was_fed) in d.in_ports.iter().zip(&fed) {
+            if !was_fed {
+                rep.error(
+                    None,
+                    format!(
+                        "dataflow {:?} can never fire: input port {} never \
+                         receives a stream",
+                        d.name, p.gid
+                    ),
+                );
+            }
+        }
+        for o in &d.outs {
+            if usage.drained.get(&o.gid).copied().unwrap_or(false) {
+                continue;
+            }
+            if o.gate.is_some() {
+                rep.warn(
+                    None,
+                    format!(
+                        "dataflow {:?}: gated output port {} is never consumed",
+                        d.name, o.gid
+                    ),
+                );
+            } else {
+                rep.error(
+                    None,
+                    format!(
+                        "dataflow {:?}: output port {} is produced every firing \
+                         but never consumed (its FIFO will fill and deadlock)",
+                        d.name, o.gid
+                    ),
+                );
+            }
+        }
+        // Instance balance: full-width, never-reused inputs of one
+        // dataflow must receive the same number of instances (each
+        // firing consumes one from every port).
+        let w = d.width();
+        let totals: Vec<(usize, i64)> = d
+            .in_ports
+            .iter()
+            .filter(|p| p.width == w && p.width > 1)
+            .filter_map(|p| {
+                let &(n, reused) = usage.fed.get(&p.gid)?;
+                (!reused).then_some((p.gid, n))
+            })
+            .collect();
+        if let Some(&(_, first)) = totals.first() {
+            if totals.iter().any(|&(_, n)| n != first) {
+                rep.warn(
+                    None,
+                    format!(
+                        "dataflow {:?}: unbalanced instance totals across its \
+                         input ports: {totals:?}",
+                        d.name
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Structural equality of two control programs (the Configure command
+/// compares by placement identity — same `Arc` — or by kernel name).
+/// Returns the first difference, rendered.
+pub fn programs_equal(a: &Program, b: &Program) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("program lengths differ: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        cmd_equal(x, y).map_err(|e| format!("command {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+fn cmd_equal(a: &VsCommand, b: &VsCommand) -> Result<(), String> {
+    if a.lanes != b.lanes {
+        return Err(format!("lane masks differ: {:?} vs {:?}", a.lanes, b.lanes));
+    }
+    if a.lane_stride != b.lane_stride {
+        return Err(format!(
+            "lane strides differ: {} vs {}",
+            a.lane_stride, b.lane_stride
+        ));
+    }
+    match (&a.cmd, &b.cmd) {
+        (Cmd::Configure(x), Cmd::Configure(y)) => {
+            if Arc::ptr_eq(x, y) || x.config.name == y.config.name {
+                Ok(())
+            } else {
+                Err(format!(
+                    "configs differ: {:?} vs {:?}",
+                    x.config.name, y.config.name
+                ))
+            }
+        }
+        (
+            Cmd::LocalLd { pat: p1, port: o1, reuse: r1, masked: m1, rmw: w1 },
+            Cmd::LocalLd { pat: p2, port: o2, reuse: r2, masked: m2, rmw: w2 },
+        ) if p1 == p2 && o1 == o2 && r1 == r2 && m1 == m2 && w1 == w2 => Ok(()),
+        (
+            Cmd::LocalSt { pat: p1, port: o1, rmw: r1 },
+            Cmd::LocalSt { pat: p2, port: o2, rmw: r2 },
+        ) if p1 == p2 && o1 == o2 && r1 == r2 => Ok(()),
+        (
+            Cmd::ConstSt { pat: p1, port: o1 },
+            Cmd::ConstSt { pat: p2, port: o2 },
+        ) if p1 == p2 && o1 == o2 => Ok(()),
+        (
+            Cmd::Xfer { src_port: s1, dst_port: d1, dst: x1, n: n1, reuse: r1 },
+            Cmd::Xfer { src_port: s2, dst_port: d2, dst: x2, n: n2, reuse: r2 },
+        ) if s1 == s2 && d1 == d2 && x1 == x2 && n1 == n2 && r1 == r2 => Ok(()),
+        (
+            Cmd::SharedLd { pat: p1, shared_addr: s1, local_addr: l1 },
+            Cmd::SharedLd { pat: p2, shared_addr: s2, local_addr: l2 },
+        ) if p1 == p2 && s1 == s2 && l1 == l2 => Ok(()),
+        (
+            Cmd::SharedSt { pat: p1, local_addr: l1, shared_addr: s1 },
+            Cmd::SharedSt { pat: p2, local_addr: l2, shared_addr: s2 },
+        ) if p1 == p2 && s1 == s2 && l1 == l2 => Ok(()),
+        (Cmd::Barrier, Cmd::Barrier) | (Cmd::Wait, Cmd::Wait) => Ok(()),
+        (x, y) => Err(format!("commands differ: {x:?} vs {y:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{Criticality, Op};
+    use crate::isa::{LaneMask, Pattern2D};
+    use crate::vsc::builder::Kernel;
+    use crate::workloads::Features;
+
+    use crate::vsc::builder::{BuiltKernel, In, Out};
+
+    fn built() -> (BuiltKernel, (In, In, Out)) {
+        let mut k = Kernel::new("chk");
+        let mut d = k.dfg("scale", Criticality::Critical);
+        let x = d.input(4);
+        let s = d.input(1);
+        let y = d.node(Op::Mul, &[x.wire(), s.wire()]);
+        let o = d.output(y, 4);
+        d.done();
+        (k.build().unwrap(), (x, s, o))
+    }
+
+    fn cfg_of(b: &BuiltKernel) -> std::sync::Arc<Configured> {
+        Configured::new(
+            b.config.clone(),
+            &crate::compiler::FabricSpec::default_revel(),
+            &crate::compiler::CompileOptions::default(),
+        )
+        .unwrap()
+    }
+
+    fn sim() -> SimConfig {
+        SimConfig { lanes: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn clean_program_checks_clean() {
+        let (b, (x, s, o)) = built();
+        let cfg = cfg_of(&b);
+        let mut p = b.program(cfg, Features::ALL, LaneMask::one(0));
+        p.ld(Pattern2D::lin(0, 8), x);
+        p.gate_run(s, 2.0, 2);
+        p.st(Pattern2D::lin(16, 8), o);
+        let prog = p.finish();
+        let rep = check_program(&prog, &sim());
+        assert!(rep.errors().is_empty(), "{rep}");
+    }
+
+    #[test]
+    fn unfed_port_and_undrained_output_are_errors() {
+        let (b, (x, _, _)) = built();
+        let cfg = cfg_of(&b);
+        let one = LaneMask::one(0);
+        // Feed only the vector port; never drain the output.
+        let prog: Program = vec![
+            VsCommand::new(Cmd::Configure(cfg), one),
+            VsCommand::new(
+                Cmd::LocalLd {
+                    pat: Pattern2D::lin(0, 8),
+                    port: x.id(),
+                    reuse: None,
+                    masked: true,
+                    rmw: None,
+                },
+                one,
+            ),
+            VsCommand::new(Cmd::Wait, one),
+        ];
+        let rep = check_program(&prog, &sim());
+        let msgs: Vec<String> = rep.errors().iter().map(|d| d.msg.clone()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("never receives a stream")),
+            "{msgs:?}"
+        );
+        assert!(msgs.iter().any(|m| m.contains("never consumed")), "{msgs:?}");
+    }
+
+    #[test]
+    fn unbound_port_and_oob_pattern_are_errors() {
+        let (b, _) = built();
+        let cfg = cfg_of(&b);
+        let one = LaneMask::one(0);
+        let prog: Program = vec![
+            VsCommand::new(Cmd::Configure(cfg), one),
+            VsCommand::new(
+                Cmd::LocalLd {
+                    pat: Pattern2D::lin(5000, 8), // outside the 2048-word spad
+                    port: 9,                      // bound to nothing
+                    reuse: None,
+                    masked: true,
+                    rmw: None,
+                },
+                one,
+            ),
+            VsCommand::new(Cmd::Wait, one),
+        ];
+        let rep = check_program(&prog, &sim());
+        let msgs: Vec<String> = rep.errors().iter().map(|d| d.msg.clone()).collect();
+        assert!(msgs.iter().any(|m| m.contains("no dataflow consumes")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("outside 0..")), "{msgs:?}");
+    }
+
+    #[test]
+    fn stream_before_configure_is_an_error() {
+        let one = LaneMask::one(0);
+        let prog: Program = vec![VsCommand::new(
+            Cmd::LocalSt { pat: Pattern2D::lin(0, 4), port: 0, rmw: false },
+            one,
+        )];
+        let rep = check_program(&prog, &sim());
+        assert!(!rep.errors().is_empty());
+    }
+
+    #[test]
+    fn unbalanced_instances_warn() {
+        let mut k = Kernel::new("bal");
+        let mut d = k.dfg("add", Criticality::Critical);
+        let x = d.input(4);
+        let y = d.input(4);
+        let z = d.node(Op::Add, &[x.wire(), y.wire()]);
+        let o = d.output(z, 4);
+        d.done();
+        let b = k.build().unwrap();
+        let cfg = cfg_of(&b);
+        let mut p = b.program(cfg, Features::ALL, LaneMask::one(0));
+        p.ld(Pattern2D::lin(0, 8), x); // 2 instances
+        p.ld(Pattern2D::lin(8, 4), y); // 1 instance
+        p.st(Pattern2D::lin(32, 4), o);
+        let prog = p.finish();
+        let rep = check_program(&prog, &sim());
+        assert!(
+            rep.warnings().iter().any(|d| d.msg.contains("unbalanced")),
+            "{rep}"
+        );
+    }
+
+    #[test]
+    fn programs_equal_reports_first_difference() {
+        let (b, (x, _, _)) = built();
+        let cfg = cfg_of(&b);
+        let one = LaneMask::one(0);
+        let mk = |n: i64| -> Program {
+            vec![
+                VsCommand::new(Cmd::Configure(cfg.clone()), one),
+                VsCommand::new(
+                    Cmd::LocalLd {
+                        pat: Pattern2D::lin(0, n),
+                        port: x.id(),
+                        reuse: None,
+                        masked: true,
+                        rmw: None,
+                    },
+                    one,
+                ),
+            ]
+        };
+        assert!(programs_equal(&mk(8), &mk(8)).is_ok());
+        let err = programs_equal(&mk(8), &mk(4)).unwrap_err();
+        assert!(err.contains("command 1"), "{err}");
+    }
+}

@@ -1,0 +1,38 @@
+//! `vsc` — the typed **vector-stream control** kernel-builder API
+//! (paper §5, Table 1), the programming layer every workload is
+//! authored against.
+//!
+//! The raw [`crate::isa`] layer is deliberately machine-shaped: port
+//! numbers are bare `usize`s, scratchpad addresses are bare `i64`s, and
+//! nothing stops a program from streaming into a port no dataflow
+//! consumes — bugs that surface as watchdog deadlocks hundreds of
+//! thousands of cycles into a simulation. This module closes that gap
+//! with three pieces:
+//!
+//! * [`builder`] — [`Kernel`]/[`DfgScope`] assemble the lane's dataflow
+//!   graphs and hand back typed, unforgeable port handles ([`In`],
+//!   [`Out`]); [`ProgBuilder`] consumes the handles to emit the control
+//!   program, including the ablation-aware lowering (per-row
+//!   decomposition when inductive streams are off, implicit-mask
+//!   flags) and constructors for the recurring idioms: gated forwards,
+//!   pivot broadcasts over [`crate::isa::XferDst::Bcast`], inductive
+//!   gate streams.
+//! * [`alloc`] — [`SpadAlloc`]/[`Region`]: a named scratchpad region
+//!   allocator with line-aligned bases, capacity checking against
+//!   [`crate::sim::SimConfig`], and containment-checked pattern
+//!   construction. No workload hard-codes a base address anymore.
+//! * [`check`] — [`check_program`] validates a finished program
+//!   (every fed dataflow can fire, every produced output is drained,
+//!   patterns stay in bounds, instance totals balance) and renders
+//!   readable diagnostics; [`programs_equal`] is the structural
+//!   comparator behind the old-vs-new port equivalence tests.
+
+#![deny(missing_docs)]
+
+pub mod alloc;
+pub mod builder;
+pub mod check;
+
+pub use alloc::{AllocError, Region, SpadAlloc};
+pub use builder::{BuiltKernel, DfgScope, In, Kernel, Out, ProgBuilder};
+pub use check::{check_program, programs_equal, CheckReport, Diag, Severity};

@@ -13,111 +13,176 @@
 //! at vector width; first element as the next a_kk). This is the
 //! Fig 2(c) region overlap: point/vector of k+1 execute while matrix k
 //! is still streaming.
+//!
+//! Authored against the typed [`crate::vsc`] builder: ports come from
+//! [`Ports`] (handles minted by the kernel builder), scratchpad bases
+//! from [`Layout`] (the region allocator) — this module contains no
+//! hand-written port numbers or base addresses. It doubles as the
+//! `docs/VSC_API.md` walkthrough example.
 
 use std::sync::Arc;
 
-use super::{machine, push_ld, push_st, Features, Goal, Prepared, WlError};
+use super::{machine, Features, Goal, Prepared, WlError};
 use crate::compiler::Configured;
-use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op};
-use crate::isa::{
-    Cmd, ConstPattern, LaneMask, Pattern2D, Program, Reuse, VsCommand, XferDst,
-};
-use crate::sim::Machine;
+use crate::dataflow::{Criticality, Op};
+use crate::isa::{ConstPattern, LaneMask, Pattern2D, Program, Reuse};
+use crate::sim::{Machine, SimConfig};
 use crate::util::ceil_div;
 use crate::util::linalg::{cholesky as chol_ref, Mat};
+use crate::vsc::{BuiltKernel, In, Kernel, Out, ProgBuilder, Region, SpadAlloc};
 
 /// Vector width of the critical dataflows.
 const W: usize = 8;
 
-/// In-place array A (column-major, becomes L in the lower triangle).
-const A_BASE: i64 = 0;
-/// Scratch for the non-fine-grain inva round-trip.
-const TMP_BASE: i64 = 1500;
-
-// Ports. In: 0=acol(W), 1=inva(1), 2=a(W), 3=ci(1), 4=akk(1), 5=cj(W),
-// 6=gate_col(W), 7=gate_akk(W).
-// Out: 0=lcol, 2=inva, 3=a_upd, 4=col_fwd (gated), 5=akk_fwd (gated).
-fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
-    let mut pt = DfgBuilder::new("point", Criticality::NonCritical);
-    let akk = pt.in_port(4, 1);
-    let inva = pt.node(Op::Rsqrt, &[akk]);
-    pt.out(2, inva, 1);
-
-    let mut v = DfgBuilder::new("vector", Criticality::Critical);
-    let acol = v.in_port(0, W);
-    let iv = v.in_port(1, 1);
-    let l = v.node(Op::Mul, &[acol, iv]);
-    v.out(0, l, W);
-
-    let mut m = DfgBuilder::new("matrix", Criticality::Critical);
-    let a = m.in_port(2, W);
-    let ci = m.in_port(3, 1);
-    let cj = m.in_port(5, W);
-    let prod = m.node(Op::Mul, &[cj, ci]);
-    let upd = m.node(Op::Sub, &[a, prod]);
-    m.out(3, upd, W);
-    if feats.fine_grain {
-        let gcol = m.in_port(6, W);
-        let gakk = m.in_port(7, W);
-        m.out_gated(4, upd, W, Some(gcol));
-        m.out_gated(5, upd, 1, Some(gakk));
-    }
-
-    let cfg = LaneConfig {
-        name: "cholesky".into(),
-        dfgs: vec![pt.build(), v.build(), m.build()],
-    };
-    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+/// Typed port handles of the three dataflows. The gated forwards exist
+/// only when the fine-grain feature is on.
+pub struct Ports {
+    /// vector: column of A (width W).
+    pub acol: In,
+    /// vector: 1/sqrt(a_kk) scalar.
+    pub inva: In,
+    /// matrix: trailing-block element stream (width W).
+    pub a: In,
+    /// matrix: l_jk scalar per trailing column.
+    pub ci: In,
+    /// point: pivot a_kk.
+    pub akk: In,
+    /// matrix: column-k suffix per trailing column (width W).
+    pub cj: In,
+    /// matrix: gate for the forwarded first trailing column.
+    pub gate_col: Option<In>,
+    /// matrix: gate for the forwarded next pivot.
+    pub gate_akk: Option<In>,
+    /// vector out: the L column.
+    pub lcol: Out,
+    /// point out: inva.
+    pub inva_out: Out,
+    /// matrix out: updated trailing elements.
+    pub a_upd: Out,
+    /// matrix out (gated): first trailing column -> next `acol`.
+    pub col_fwd: Option<Out>,
+    /// matrix out (gated): first trailing element -> next `akk`.
+    pub akk_fwd: Option<Out>,
 }
 
-/// Column-major address of `A[i][j]`.
+/// Scratchpad regions: the in-place array A (column-major; becomes L in
+/// the lower triangle) and the non-fine-grain inva round-trip scratch.
+pub struct Layout {
+    /// A / L, `n*n` words, column-major.
+    pub a: Region,
+    /// Per-iteration inva scratch (non-fine-grain ablation only).
+    pub tmp: Region,
+}
+
+/// A planned kernel instance: frozen builder + compiled config + typed
+/// ports + allocated layout.
+pub struct Plan {
+    built: BuiltKernel,
+    /// Compiled (placed + routed) lane configuration.
+    pub cfg: Arc<Configured>,
+    /// Typed port handles.
+    pub ports: Ports,
+    /// Allocated scratchpad layout.
+    pub lay: Layout,
+}
+
+fn kernel(feats: Features) -> Result<(BuiltKernel, Ports), WlError> {
+    let mut k = Kernel::new("cholesky");
+
+    let mut pt = k.dfg("point", Criticality::NonCritical);
+    let akk = pt.input(1);
+    let inva = pt.node(Op::Rsqrt, &[akk.wire()]);
+    let inva_out = pt.output(inva, 1);
+    pt.done();
+
+    let mut v = k.dfg("vector", Criticality::Critical);
+    let acol = v.input(W);
+    let iv = v.input(1);
+    let l = v.node(Op::Mul, &[acol.wire(), iv.wire()]);
+    let lcol = v.output(l, W);
+    v.done();
+
+    let mut m = k.dfg("matrix", Criticality::Critical);
+    let a = m.input(W);
+    let ci = m.input(1);
+    let cj = m.input(W);
+    let prod = m.node(Op::Mul, &[cj.wire(), ci.wire()]);
+    let upd = m.node(Op::Sub, &[a.wire(), prod]);
+    let a_upd = m.output(upd, W);
+    let (gate_col, gate_akk, col_fwd, akk_fwd) = if feats.fine_grain {
+        let gcol = m.input(W);
+        let gakk = m.input(W);
+        let cf = m.output_gated(upd, W, gcol);
+        let af = m.output_gated(upd, 1, gakk);
+        (Some(gcol), Some(gakk), Some(cf), Some(af))
+    } else {
+        (None, None, None, None)
+    };
+    m.done();
+
+    let built = k.build()?;
+    let ports = Ports {
+        acol,
+        inva: iv,
+        a,
+        ci,
+        akk,
+        cj,
+        gate_col,
+        gate_akk,
+        lcol,
+        inva_out,
+        a_upd,
+        col_fwd,
+        akk_fwd,
+    };
+    Ok((built, ports))
+}
+
+/// Allocate the scratchpad layout for problem size `n`.
+pub fn layout(n: usize) -> Result<Layout, WlError> {
+    let mut al = SpadAlloc::lane(&SimConfig::default());
+    let a = al.region("cholesky.A", (n * n) as i64)?;
+    let tmp = al.region("cholesky.inva_tmp", n as i64)?;
+    Ok(Layout { a, tmp })
+}
+
+/// Build the plan: kernel (cached compile) + ports + layout.
+pub fn plan(n: usize, feats: Features) -> Result<Plan, WlError> {
+    let (built, ports) = kernel(feats)?;
+    let lc = built.config.clone();
+    let cfg = super::cached_config(built.name(), feats, move || Ok(lc))?;
+    let lay = layout(n)?;
+    Ok(Plan { built, cfg, ports, lay })
+}
+
+/// Column-major offset of `A[i][j]` inside the A region.
 fn at(n: i64, i: i64, j: i64) -> i64 {
-    A_BASE + j * n + i
+    j * n + i
 }
 
 /// The trailing-triangle 2D pattern at iteration k: columns j=k+1..n,
 /// each covering rows i=j..n (start advances by n+1 per column, length
 /// shrinks by one — the RI stream of Fig 10b).
-fn trailing(n: i64, k: i64) -> Pattern2D {
-    Pattern2D::inductive(
-        at(n, k + 1, k + 1),
-        1,
-        (n - k - 1) as f64,
-        n + 1,
-        n - k - 1,
-        -1.0,
-    )
+fn trailing(a: &Region, n: i64, k: i64) -> Pattern2D {
+    a.inductive(at(n, k + 1, k + 1), 1, (n - k - 1) as f64, n + 1, n - k - 1, -1.0)
 }
 
 /// The cj pattern at iteration k: for each trailing column j, the
 /// column-k suffix l_ik, i=j..n (same shape as `trailing`, shifted into
 /// column k).
-fn cj_pat(n: i64, k: i64) -> Pattern2D {
-    Pattern2D::inductive(at(n, k + 1, k), 1, (n - k - 1) as f64, 1, n - k - 1, -1.0)
+fn cj_pat(a: &Region, n: i64, k: i64) -> Pattern2D {
+    a.inductive(at(n, k + 1, k), 1, (n - k - 1) as f64, 1, n - k - 1, -1.0)
 }
 
 /// Matrix-region gate streams for iteration k (row-aligned with the
 /// trailing data): gate_col = ones over the whole first column, zeros
 /// after; gate_akk = a single one, zeros after.
-fn push_gates(p: &mut Program, mask: LaneMask, n: i64, k: i64) {
+fn push_gates(b: &mut ProgBuilder, ports: &Ports, n: i64, k: i64) {
     let first = n - k - 1; // first trailing column length
-    let vs = |c: Cmd| VsCommand::new(c, mask);
-    p.push(vs(Cmd::ConstSt {
-        pat: ConstPattern {
-            val1: 1.0,
-            n1: first as f64,
-            s1: 0.0,
-            val2: 0.0,
-            n2: 0.0,
-            s2: 0.0,
-            n_j: 1,
-        },
-        port: 6,
-    }));
-    p.push(vs(Cmd::ConstSt {
-        pat: ConstPattern::first_of_row(1.0, 0.0, first as f64, 1, 0.0),
-        port: 7,
-    }));
+    let (gcol, gakk) = (ports.gate_col.unwrap(), ports.gate_akk.unwrap());
+    b.gate_run(gcol, 1.0, first);
+    b.gate_first_of_row(gakk, 1.0, 0.0, first as f64, 1, 0.0);
     if first > 1 {
         // Zeros over the remaining columns (lengths first-1, first-2, ...).
         let zeros = ConstPattern {
@@ -129,78 +194,57 @@ fn push_gates(p: &mut Program, mask: LaneMask, n: i64, k: i64) {
             s2: 0.0,
             n_j: first - 1,
         };
-        p.push(vs(Cmd::ConstSt { pat: zeros.clone(), port: 6 }));
-        p.push(vs(Cmd::ConstSt { pat: zeros, port: 7 }));
+        b.const_st(zeros.clone(), gcol);
+        b.const_st(zeros, gakk);
     }
 }
 
 pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlError> {
-    let cfg = config(feats)?;
+    let plan = plan(n, feats)?;
     let n_i = n as i64;
-    let vs = |c: Cmd| VsCommand::new(c, mask);
-    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
+    let p = &plan.ports;
+    let a = &plan.lay.a;
+    let mut b = plan.built.program(plan.cfg.clone(), feats, mask);
 
     if feats.fine_grain {
         // Bootstrap: iteration 0's inputs from memory.
-        push_ld(&mut p, mask, Pattern2D::lin(at(n_i, 0, 0), 1), 4, None, feats, None);
-        push_ld(&mut p, mask, Pattern2D::lin(at(n_i, 0, 0), n_i), 0, None, feats, None);
+        b.ld(a.lin(at(n_i, 0, 0), 1), p.akk);
+        b.ld(a.lin(at(n_i, 0, 0), n_i), p.acol);
     }
 
     for k in 0..n_i {
         let len = n_i - k; // column k live length (diagonal included)
         if feats.fine_grain {
             // point -> vector: inva reused for the whole column.
-            p.push(vs(Cmd::Xfer {
-                src_port: 2,
-                dst_port: 1,
-                dst: XferDst::Local,
-                n: 1,
-                reuse: Some(Reuse::uniform(len as f64)),
-            }));
+            b.xfer_reuse(p.inva_out, p.inva, 1, Reuse::uniform(len as f64));
         } else {
             // Memory round-trip for every region transition.
-            p.push(vs(Cmd::Barrier));
-            push_ld(&mut p, mask, Pattern2D::lin(at(n_i, k, k), 1), 4, None, feats, None);
-            p.push(vs(Cmd::LocalSt {
-                pat: Pattern2D::lin(TMP_BASE + k, 1),
-                port: 2,
-                rmw: false,
-            }));
-            p.push(vs(Cmd::Barrier));
-            push_ld(
-                &mut p,
-                mask,
-                Pattern2D::lin(TMP_BASE + k, 1),
-                1,
-                Some(Reuse::uniform(len as f64)),
-                feats,
-                None,
-            );
-            push_ld(&mut p, mask, Pattern2D::lin(at(n_i, k, k), len), 0, None, feats, None);
+            b.barrier();
+            b.ld(a.lin(at(n_i, k, k), 1), p.akk);
+            b.st(plan.lay.tmp.lin(k, 1), p.inva_out);
+            b.barrier();
+            b.ld_reuse(plan.lay.tmp.lin(k, 1), p.inva, Reuse::uniform(len as f64));
+            b.ld(a.lin(at(n_i, k, k), len), p.acol);
         }
         // L column k lands over A's column k.
-        push_st(&mut p, mask, Pattern2D::lin(at(n_i, k, k), len), 0, false, feats);
+        b.st(a.lin(at(n_i, k, k), len), p.lcol);
 
         if k < n_i - 1 {
             // ---- matrix region ------------------------------------------
-            p.push(vs(Cmd::Barrier));
+            b.barrier();
             if feats.inductive {
                 // In-place trailing update: rmw store + lag-0 rmw load
                 // (the pair touches disjoint columns row-by-row).
-                push_st(&mut p, mask, trailing(n_i, k), 3, true, feats);
-                push_ld(&mut p, mask, trailing(n_i, k), 2, None, feats, Some(0));
+                b.st_rmw(trailing(a, n_i, k), p.a_upd);
+                b.ld_rmw(trailing(a, n_i, k), p.a, 0);
                 // ci: l_jk scalars, element t reused (n-k-1-t) times.
-                push_ld(
-                    &mut p,
-                    mask,
-                    Pattern2D::lin(at(n_i, k + 1, k), n_i - k - 1),
-                    3,
-                    Some(Reuse { n_r: (n_i - k - 1) as f64, s_r: -1.0 }),
-                    feats,
-                    None,
+                b.ld_reuse(
+                    a.lin(at(n_i, k + 1, k), n_i - k - 1),
+                    p.ci,
+                    Reuse { n_r: (n_i - k - 1) as f64, s_r: -1.0 },
                 );
                 // cj: column-k suffixes per trailing column.
-                push_ld(&mut p, mask, cj_pat(n_i, k), 5, None, feats, None);
+                b.ld(cj_pat(a, n_i, k), p.cj);
             } else {
                 // Rectangular-only ISA: one command set per trailing
                 // column, interleaved so each column's store follows its
@@ -208,86 +252,43 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
                 for r in 0..n_i - k - 1 {
                     let col = k + 1 + r;
                     let len = n_i - col;
-                    push_ld(
-                        &mut p,
-                        mask,
-                        Pattern2D::lin(at(n_i, col, k), 1),
-                        3,
-                        Some(Reuse::uniform(len as f64)),
-                        feats,
-                        None,
+                    b.ld_reuse(
+                        a.lin(at(n_i, col, k), 1),
+                        p.ci,
+                        Reuse::uniform(len as f64),
                     );
-                    push_ld(
-                        &mut p,
-                        mask,
-                        Pattern2D::lin(at(n_i, col, col), len),
-                        2,
-                        None,
-                        feats,
-                        None,
-                    );
-                    push_ld(
-                        &mut p,
-                        mask,
-                        Pattern2D::lin(at(n_i, col, k), len),
-                        5,
-                        None,
-                        feats,
-                        None,
-                    );
-                    push_st(
-                        &mut p,
-                        mask,
-                        Pattern2D::lin(at(n_i, col, col), len),
-                        3,
-                        true,
-                        feats,
-                    );
+                    b.ld(a.lin(at(n_i, col, col), len), p.a);
+                    b.ld(a.lin(at(n_i, col, k), len), p.cj);
+                    b.st_rmw(a.lin(at(n_i, col, col), len), p.a_upd);
                     if feats.fine_grain {
                         let g = if r == 0 { 1.0 } else { 0.0 };
-                        p.push(vs(Cmd::ConstSt {
-                            pat: ConstPattern {
-                                val1: g,
-                                n1: len as f64,
-                                s1: 0.0,
-                                val2: 0.0,
-                                n2: 0.0,
-                                s2: 0.0,
-                                n_j: 1,
-                            },
-                            port: 6,
-                        }));
-                        p.push(vs(Cmd::ConstSt {
-                            pat: ConstPattern::first_of_row(g, 0.0, len as f64, 1, 0.0),
-                            port: 7,
-                        }));
+                        b.gate_run(p.gate_col.unwrap(), g, len);
+                        b.gate_first_of_row(
+                            p.gate_akk.unwrap(),
+                            g,
+                            0.0,
+                            len as f64,
+                            1,
+                            0.0,
+                        );
                     }
                 }
             }
             if feats.fine_grain {
                 if feats.inductive {
-                    push_gates(&mut p, mask, n_i, k);
+                    push_gates(&mut b, p, n_i, k);
                 }
                 // Forward the first trailing column to iteration k+1.
-                p.push(vs(Cmd::Xfer {
-                    src_port: 4,
-                    dst_port: 0,
-                    dst: XferDst::Local,
-                    n: ceil_div((n_i - k - 1) as usize, W) as i64,
-                    reuse: None,
-                }));
-                p.push(vs(Cmd::Xfer {
-                    src_port: 5,
-                    dst_port: 4,
-                    dst: XferDst::Local,
-                    n: 1,
-                    reuse: None,
-                }));
+                b.xfer(
+                    p.col_fwd.unwrap(),
+                    p.acol,
+                    ceil_div((n_i - k - 1) as usize, W) as i64,
+                );
+                b.xfer(p.akk_fwd.unwrap(), p.akk, 1);
             }
         }
     }
-    p.push(vs(Cmd::Wait));
-    Ok(p)
+    Ok(b.finish())
 }
 
 /// Problem data for one lane.
@@ -304,9 +305,11 @@ pub fn instance(n: usize, seed: usize) -> Instance {
 
 pub fn load_lane(lane: &mut crate::sim::Lane, inst: &Instance) {
     let n = inst.a.rows;
+    let lay = layout(n).expect("cholesky layout fits the lane scratchpad");
     for j in 0..n {
         for i in 0..n {
-            lane.spad.write(at(n as i64, i as i64, j as i64), inst.a[(i, j)]);
+            lane.spad
+                .write(lay.a.addr(at(n as i64, i as i64, j as i64)), inst.a[(i, j)]);
         }
     }
 }
@@ -318,19 +321,22 @@ pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
     };
     let mask = LaneMask::first_n(lanes);
     let prog = program(n, feats, mask)?;
+    let lay = layout(n)?;
     let mut m = machine(lanes);
     let insts: Vec<Instance> = (0..lanes).map(|l| instance(n, l)).collect();
     for (l, inst) in insts.iter().enumerate() {
         load_lane(&mut m.lanes[l], inst);
     }
+    let a_region = lay.a;
     let verify = Box::new(move |m: &Machine| {
         let mut max_err = 0.0f64;
         for (l, inst) in insts.iter().enumerate() {
             let nn = inst.a.rows;
             for j in 0..nn {
                 for i in j..nn {
-                    let got =
-                        m.lanes[l].spad.read(at(nn as i64, i as i64, j as i64));
+                    let got = m.lanes[l]
+                        .spad
+                        .read(a_region.addr(at(nn as i64, i as i64, j as i64)));
                     let want = inst.l_ref[(i, j)];
                     let err = (got - want).abs();
                     if err > 1e-9 {
@@ -415,5 +421,14 @@ mod tests {
             .execute()
             .unwrap();
         assert_eq!(r.problems, 8);
+    }
+
+    #[test]
+    fn program_passes_the_vsc_check() {
+        for feats in [Features::ALL, Features::NONE] {
+            let prog = program(12, feats, LaneMask::one(0)).unwrap();
+            let rep = crate::vsc::check_program(&prog, &SimConfig::default());
+            assert!(rep.errors().is_empty(), "{feats:?}:\n{rep}");
+        }
     }
 }

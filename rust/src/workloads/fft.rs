@@ -9,136 +9,187 @@
 //!
 //! Early stages (half < vector width) run with masked partial vectors;
 //! the twiddle streams use a rewinding 2D pattern (c_j = 0) — the
-//! "streaming-reuse to reduce scratchpad bandwidth" of Q1.
+//! "streaming-reuse to reduce scratchpad bandwidth" of Q1. Built on the
+//! typed [`crate::vsc`] layer: see [`Ports`] / [`Layout`].
 
 use std::sync::Arc;
 
 use super::{Features, Goal, Prepared, WlError};
 use crate::compiler::Configured;
-use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op};
-use crate::isa::{Cmd, LaneMask, Pattern2D, Program, VsCommand};
+use crate::dataflow::{Criticality, Op};
+use crate::isa::{LaneMask, Program};
 use crate::sim::{Machine, SimConfig};
 use crate::util::linalg::fft as fft_ref;
+use crate::vsc::{BuiltKernel, In, Kernel, Out, Region, SpadAlloc};
 
 /// Vector width of the butterfly dataflow.
 const W: usize = 4;
 
-// Scratchpad layout: ping-pong complex buffers (stages alternate
-// between them so no stage is an in-place RMW — the stores of stage s
-// and the loads of stage s+1 still order through the memory interlock,
-// but within a stage everything streams freely) plus the twiddle table.
-// n=1024 needs 5n words; the paper's 8KB SPAD would stream the second
-// buffer + twiddles from the shared scratchpad — we model that residency
-// with a larger local SPAD (see DESIGN.md SSDeviations).
-fn layout(n: usize) -> (i64, i64, i64, i64) {
-    // (buf0 re, buf0 im, twiddle re, twiddle im); buf1 = buf0 + 4n.
-    let re = 0i64;
-    let im = n as i64;
-    let twr = 4 * n as i64;
-    let twi = twr + (n / 2) as i64;
-    (re, im, twr, twi)
+/// Typed port handles of the butterfly dataflow.
+pub struct Ports {
+    /// Top-half real stream.
+    pub ar: In,
+    /// Top-half imaginary stream.
+    pub ai: In,
+    /// Bottom-half real stream.
+    pub br: In,
+    /// Bottom-half imaginary stream.
+    pub bi: In,
+    /// Twiddle real stream (rewinding).
+    pub wr: In,
+    /// Twiddle imaginary stream (rewinding).
+    pub wi: In,
+    /// Top output (real, imaginary).
+    pub or0: Out,
+    /// Top output imaginary.
+    pub oi0: Out,
+    /// Bottom output real.
+    pub or1: Out,
+    /// Bottom output imaginary.
+    pub oi1: Out,
 }
 
-/// Base of the ping-pong buffer used as *input* of stage `s`.
-fn buf(n: usize, s: usize) -> (i64, i64) {
-    if s % 2 == 0 {
-        (0, n as i64)
-    } else {
-        (2 * n as i64, 3 * n as i64)
+/// Scratchpad regions: ping-pong complex buffers (stages alternate
+/// between them so no stage is an in-place RMW — the stores of stage s
+/// and the loads of stage s+1 still order through the memory interlock,
+/// but within a stage everything streams freely) plus the twiddle
+/// table. n=1024 needs 5n words; the paper's 8KB SPAD would stream the
+/// second buffer + twiddles from the shared scratchpad — we model that
+/// residency with a larger local SPAD (see DESIGN.md Deviations).
+pub struct Layout {
+    /// Buffer 0 real part (stage inputs for even stages).
+    pub re0: Region,
+    /// Buffer 0 imaginary part.
+    pub im0: Region,
+    /// Buffer 1 real part.
+    pub re1: Region,
+    /// Buffer 1 imaginary part.
+    pub im1: Region,
+    /// Twiddle cosines, n/2 words.
+    pub twr: Region,
+    /// Twiddle sines, n/2 words.
+    pub twi: Region,
+}
+
+impl Layout {
+    /// The (re, im) regions holding the *input* of stage `s`.
+    pub fn buf(&self, s: usize) -> (&Region, &Region) {
+        if s % 2 == 0 {
+            (&self.re0, &self.im0)
+        } else {
+            (&self.re1, &self.im1)
+        }
     }
 }
 
-// Ports. In: 0=ar(W), 1=ai(W), 2=br(W), 3=bi(W), 4=wr(W), 5=wi(W).
-// Out: 0=ar', 1=ai', 2=br', 3=bi'.
-fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
-    let mut f = DfgBuilder::new("butterfly", Criticality::Critical);
-    let ar = f.in_port(0, W);
-    let ai = f.in_port(1, W);
-    let br = f.in_port(2, W);
-    let bi = f.in_port(3, W);
-    let wr = f.in_port(4, W);
-    let wi = f.in_port(5, W);
-    let m1 = f.node(Op::Mul, &[br, wr]);
-    let m2 = f.node(Op::Mul, &[bi, wi]);
+/// A planned kernel instance (see [`plan`]).
+pub struct Plan {
+    built: BuiltKernel,
+    /// Compiled lane configuration.
+    pub cfg: Arc<Configured>,
+    /// Typed port handles.
+    pub ports: Ports,
+    /// Allocated scratchpad layout.
+    pub lay: Layout,
+}
+
+/// Local scratchpad words needed for an n-point FFT.
+pub fn spad_words(n: usize) -> usize {
+    (5 * n).max(2048).next_power_of_two()
+}
+
+fn kernel(_feats: Features) -> Result<(BuiltKernel, Ports), WlError> {
+    let mut k = Kernel::new("fft");
+    let mut f = k.dfg("butterfly", Criticality::Critical);
+    let ar = f.input(W);
+    let ai = f.input(W);
+    let br = f.input(W);
+    let bi = f.input(W);
+    let wr = f.input(W);
+    let wi = f.input(W);
+    let m1 = f.node(Op::Mul, &[br.wire(), wr.wire()]);
+    let m2 = f.node(Op::Mul, &[bi.wire(), wi.wire()]);
     let tr = f.node(Op::Sub, &[m1, m2]);
-    let m3 = f.node(Op::Mul, &[br, wi]);
-    let m4 = f.node(Op::Mul, &[bi, wr]);
+    let m3 = f.node(Op::Mul, &[br.wire(), wi.wire()]);
+    let m4 = f.node(Op::Mul, &[bi.wire(), wr.wire()]);
     let ti = f.node(Op::Add, &[m3, m4]);
-    let or0 = f.node(Op::Add, &[ar, tr]);
-    let oi0 = f.node(Op::Add, &[ai, ti]);
-    let or1 = f.node(Op::Sub, &[ar, tr]);
-    let oi1 = f.node(Op::Sub, &[ai, ti]);
-    f.out(0, or0, W);
-    f.out(1, oi0, W);
-    f.out(2, or1, W);
-    f.out(3, oi1, W);
-    let cfg = LaneConfig { name: "fft".into(), dfgs: vec![f.build()] };
-    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+    let o0 = f.node(Op::Add, &[ar.wire(), tr]);
+    let e0 = f.node(Op::Add, &[ai.wire(), ti]);
+    let o1 = f.node(Op::Sub, &[ar.wire(), tr]);
+    let e1 = f.node(Op::Sub, &[ai.wire(), ti]);
+    let or0 = f.output(o0, W);
+    let oi0 = f.output(e0, W);
+    let or1 = f.output(o1, W);
+    let oi1 = f.output(e1, W);
+    f.done();
+    let built = k.build()?;
+    Ok((built, Ports { ar, ai, br, bi, wr, wi, or0, oi0, or1, oi1 }))
+}
+
+/// Allocate the scratchpad layout for an n-point FFT.
+pub fn layout(n: usize) -> Result<Layout, WlError> {
+    let mut al = SpadAlloc::with_capacity(spad_words(n));
+    let re0 = al.region("fft.re0", n as i64)?;
+    let im0 = al.region("fft.im0", n as i64)?;
+    let re1 = al.region("fft.re1", n as i64)?;
+    let im1 = al.region("fft.im1", n as i64)?;
+    let twr = al.region("fft.twr", (n / 2) as i64)?;
+    let twi = al.region("fft.twi", (n / 2) as i64)?;
+    Ok(Layout { re0, im0, re1, im1, twr, twi })
+}
+
+/// Build the plan: kernel (cached compile) + ports + layout.
+pub fn plan(n: usize, feats: Features) -> Result<Plan, WlError> {
+    let (built, ports) = kernel(feats)?;
+    let lc = built.config.clone();
+    let cfg = super::cached_config(built.name(), feats, move || Ok(lc))?;
+    let lay = layout(n)?;
+    Ok(Plan { built, cfg, ports, lay })
 }
 
 pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlError> {
     assert!(n.is_power_of_two());
-    let cfg = config(feats)?;
-    let (_, _, twr, twi) = layout(n);
-    let vs = |c: Cmd| VsCommand::new(c, mask);
-    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
+    let plan = plan(n, feats)?;
+    let p = &plan.ports;
+    let lay = &plan.lay;
+    let mut b = plan.built.program(plan.cfg.clone(), feats, mask);
     let mut len = 2usize;
     let mut stage = 0usize;
     while len <= n {
-        let (sre, sim_) = buf(n, stage);
-        let (dre, dim_) = buf(n, stage + 1);
+        let (sre, sim_) = lay.buf(stage);
+        let (dre, dim_) = lay.buf(stage + 1);
         let half = (len / 2) as i64;
         let groups = (n / len) as i64;
         // Top/bottom halves of each butterfly group (RR streams).
-        let shape = |base: i64, off: i64| {
-            Pattern2D::rect(base + off, 1, half, len as i64, groups)
-        };
+        let shape = |reg: &Region, off: i64| reg.rect(off, 1, half, len as i64, groups);
         // Twiddles: the same half-row re-read per group (c_j = 0): the
         // stream-reuse that cuts scratchpad bandwidth.
         let tw_stride = (n / len) as i64;
-        let wr = Pattern2D::rect(twr, tw_stride, half, 0, groups);
-        let wi = Pattern2D::rect(twi, tw_stride, half, 0, groups);
+        let wr = lay.twr.rect(0, tw_stride, half, 0, groups);
+        let wi = lay.twi.rect(0, tw_stride, half, 0, groups);
         // Ping-pong: read stage input from one buffer, write outputs to
         // the other. The memory interlock orders stage s+1's loads
         // after stage s's stores automatically (range overlap). The
         // four output streams interleave within the destination buffer
         // (coarse bounds overlap, addresses disjoint) — mark them rmw
         // so they don't falsely WAW-serialize against each other; the
-        // next stage's (non-rmw) loads still wait for them.
-        for (src, dst, port) in [
-            (shape(sre, 0), shape(dre, 0), 0usize),
-            (shape(sim_, 0), shape(dim_, 0), 1),
-            (shape(sre, half), shape(dre, half), 2),
-            (shape(sim_, half), shape(dim_, half), 3),
+        // next stage's (non-rmw) loads still wait for them. All streams
+        // are rectangular-native: never decomposed by the ablation.
+        for (src, dst, in_p, out_p) in [
+            (shape(sre, 0), shape(dre, 0), p.ar, p.or0),
+            (shape(sim_, 0), shape(dim_, 0), p.ai, p.oi0),
+            (shape(sre, half), shape(dre, half), p.br, p.or1),
+            (shape(sim_, half), shape(dim_, half), p.bi, p.oi1),
         ] {
-            p.push(vs(Cmd::LocalSt { pat: dst, port, rmw: true }));
-            p.push(vs(Cmd::LocalLd {
-                pat: src,
-                port,
-                reuse: None,
-                masked: feats.masking,
-                rmw: None,
-            }));
+            b.st_rect(dst, out_p, true);
+            b.ld_rect(src, in_p, None);
         }
-        p.push(vs(Cmd::LocalLd {
-            pat: wr,
-            port: 4,
-            reuse: None,
-            masked: feats.masking,
-            rmw: None,
-        }));
-        p.push(vs(Cmd::LocalLd {
-            pat: wi,
-            port: 5,
-            reuse: None,
-            masked: feats.masking,
-            rmw: None,
-        }));
+        b.ld_rect(wr, p.wr, None);
+        b.ld_rect(wi, p.wi, None);
         len <<= 1;
         stage += 1;
     }
-    p.push(vs(Cmd::Wait));
-    Ok(p)
+    Ok(b.finish())
 }
 
 /// Number of butterfly stages (which ping-pong buffer holds the result).
@@ -179,13 +230,13 @@ pub fn instance(n: usize, seed: usize) -> Instance {
 }
 
 pub fn load_lane(lane: &mut crate::sim::Lane, n: usize, inst: &Instance) {
-    let (re, im, twr, twi) = layout(n);
-    lane.spad.load_slice(re, &inst.re_in);
-    lane.spad.load_slice(im, &inst.im_in);
+    let lay = layout(n).expect("fft layout fits the configured scratchpad");
+    lane.spad.load_slice(lay.re0.base(), &inst.re_in);
+    lane.spad.load_slice(lay.im0.base(), &inst.im_in);
     for k in 0..n / 2 {
         let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
-        lane.spad.write(twr + k as i64, ang.cos());
-        lane.spad.write(twi + k as i64, ang.sin());
+        lane.spad.write(lay.twr.addr(k as i64), ang.cos());
+        lane.spad.write(lay.twi.addr(k as i64), ang.sin());
     }
 }
 
@@ -197,23 +248,27 @@ pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
     };
     let mask = LaneMask::first_n(lanes);
     let prog = program(n, feats, mask)?;
-    let spad = (5 * n).max(2048).next_power_of_two();
+    let lay = layout(n)?;
     let mut m = Machine::new(SimConfig {
         lanes,
-        lane_spad_words: spad,
+        lane_spad_words: spad_words(n),
+        max_cycles: crate::sim::max_cycles_budget(),
         ..Default::default()
     });
     let insts: Vec<Instance> = (0..lanes).map(|l| instance(n, l)).collect();
     for (l, inst) in insts.iter().enumerate() {
         load_lane(&mut m.lanes[l], n, inst);
     }
+    let (out_re, out_im) = {
+        let (r, i) = lay.buf(stages(n));
+        (*r, *i)
+    };
     let verify = Box::new(move |m: &Machine| {
-        let (re, im) = buf(n, stages(n));
         let mut max_err = 0.0f64;
         for (l, inst) in insts.iter().enumerate() {
             for i in 0..n {
-                let gr = m.lanes[l].spad.read(re + i as i64);
-                let gi = m.lanes[l].spad.read(im + i as i64);
+                let gr = m.lanes[l].spad.read(out_re.addr(i as i64));
+                let gi = m.lanes[l].spad.read(out_im.addr(i as i64));
                 let er = (gr - inst.re_ref[i]).abs();
                 let ei = (gi - inst.im_ref[i]).abs();
                 if er > 1e-6 || ei > 1e-6 {
@@ -260,5 +315,17 @@ mod tests {
             .execute()
             .unwrap();
         assert_eq!(r.problems, 8);
+    }
+
+    #[test]
+    fn program_passes_the_vsc_check() {
+        let prog = program(64, Features::ALL, LaneMask::one(0)).unwrap();
+        let sim = SimConfig {
+            lanes: 1,
+            lane_spad_words: spad_words(64),
+            ..Default::default()
+        };
+        let rep = crate::vsc::check_program(&prog, &sim);
+        assert!(rep.errors().is_empty(), "{rep}");
     }
 }

@@ -6,39 +6,91 @@
 //! halving the multiplies. One accumulating dataflow over output chunks:
 //! the two window streams walk toward each other (the second with a
 //! negative outer stride), the tap scalar broadcasts across lanes, and
-//! the accumulator emits after m/2 steps.
+//! the accumulator emits after m/2 steps. Built on the typed
+//! [`crate::vsc`] layer: see [`Ports`] / [`Layout`].
 
 use std::sync::Arc;
 
 use super::{machine, Features, Goal, Prepared, WlError};
 use crate::compiler::Configured;
-use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op};
-use crate::isa::{Cmd, ConstPattern, LaneMask, Pattern2D, Program, VsCommand};
-use crate::sim::Machine;
+use crate::dataflow::{Criticality, Op};
+use crate::isa::{LaneMask, Program};
+use crate::sim::{Machine, SimConfig};
 use crate::util::linalg::fir as fir_ref;
+use crate::vsc::{BuiltKernel, In, Kernel, Out, Region, SpadAlloc};
 
 /// Vector width (one output chunk per accumulation group).
 const W: usize = 8;
 /// Output samples (matches the AOT artifacts: input = 64 + m - 1).
 pub const N_OUT: usize = 64;
 
-const X_BASE: i64 = 0;
-const H_BASE: i64 = 256;
-const Y_BASE: i64 = 320;
+/// Typed port handles of the folded-window dataflow.
+pub struct Ports {
+    /// Forward half-window stream (width W).
+    pub xa: In,
+    /// Backward half-window stream (width W).
+    pub xb: In,
+    /// Tap scalar per accumulation step.
+    pub h: In,
+    /// Accumulator emit gate.
+    pub gate: In,
+    /// Output chunks (gated).
+    pub y: Out,
+}
 
-// Ports. In: 0=xa(W), 1=xb(W), 2=h(1), 3=emit gate(1). Out: 0=y(W).
-fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
-    let mut f = DfgBuilder::new("fir", Criticality::Critical);
-    let xa = f.in_port(0, W);
-    let xb = f.in_port(1, W);
-    let h = f.in_port(2, 1);
-    let gate = f.in_port(3, 1);
-    let s = f.node(Op::Add, &[xa, xb]);
-    let prod = f.node(Op::Mul, &[s, h]);
-    let acc = f.node(Op::Acc, &[prod, gate]);
-    f.out_gated(0, acc, W, Some(gate));
-    let cfg = LaneConfig { name: "fir".into(), dfgs: vec![f.build()] };
-    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+/// Scratchpad regions (per lane).
+pub struct Layout {
+    /// Input samples, `N_OUT + m - 1` words.
+    pub x: Region,
+    /// Taps, m words.
+    pub h: Region,
+    /// Outputs, `N_OUT` words.
+    pub y: Region,
+}
+
+/// A planned kernel instance (see [`plan`]).
+pub struct Plan {
+    built: BuiltKernel,
+    /// Compiled lane configuration.
+    pub cfg: Arc<Configured>,
+    /// Typed port handles.
+    pub ports: Ports,
+    /// Allocated scratchpad layout.
+    pub lay: Layout,
+}
+
+fn kernel(_feats: Features) -> Result<(BuiltKernel, Ports), WlError> {
+    let mut k = Kernel::new("fir");
+    let mut f = k.dfg("fir", Criticality::Critical);
+    let xa = f.input(W);
+    let xb = f.input(W);
+    let h = f.input(1);
+    let gate = f.input(1);
+    let s = f.node(Op::Add, &[xa.wire(), xb.wire()]);
+    let prod = f.node(Op::Mul, &[s, h.wire()]);
+    let acc = f.node(Op::Acc, &[prod, gate.wire()]);
+    let y = f.output_gated(acc, W, gate);
+    f.done();
+    let built = k.build()?;
+    Ok((built, Ports { xa, xb, h, gate, y }))
+}
+
+/// Allocate the scratchpad layout for tap count `m`.
+pub fn layout(m: usize) -> Result<Layout, WlError> {
+    let mut al = SpadAlloc::lane(&SimConfig::default());
+    let x = al.region("fir.x", (N_OUT + m - 1) as i64)?;
+    let h = al.region("fir.h", m as i64)?;
+    let y = al.region("fir.y", N_OUT as i64)?;
+    Ok(Layout { x, h, y })
+}
+
+/// Build the plan: kernel (cached compile) + ports + layout.
+pub fn plan(m: usize, feats: Features) -> Result<Plan, WlError> {
+    let (built, ports) = kernel(feats)?;
+    let lc = built.config.clone();
+    let cfg = super::cached_config(built.name(), feats, move || Ok(lc))?;
+    let lay = layout(m)?;
+    Ok(Plan { built, cfg, ports, lay })
 }
 
 /// Program computing `chunks` output chunks per lane, tap count m (even).
@@ -50,62 +102,29 @@ pub fn program(
     lane_stride: i64,
 ) -> Result<Program, WlError> {
     assert!(m % 2 == 0, "centro-symmetric fold needs even tap count");
-    let cfg = config(feats)?;
+    let plan = plan(m, feats)?;
     let half = (m / 2) as i64;
-    let vs = |c: Cmd| VsCommand::new(c, mask);
-    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
+    let p = &plan.ports;
+    let lay = &plan.lay;
+    let mut b = plan.built.program(plan.cfg.clone(), feats, mask);
     // Hoisted emit gate (one emission per chunk) and output stream,
     // issued first so they serve the whole run.
-    p.push(vs(Cmd::ConstSt {
-        pat: ConstPattern::last_of_row(1.0, 0.0, half as f64, chunks as i64, 0.0),
-        port: 3,
-    }));
-    p.push(VsCommand::with_stride(
-        Cmd::LocalSt {
-            pat: Pattern2D::lin(Y_BASE, (chunks * W) as i64),
-            port: 0,
-            rmw: false,
-        },
-        mask,
-        lane_stride,
-    ));
+    b.gate_last_of_row(p.gate, 1.0, 0.0, half as f64, chunks as i64, 0.0);
+    b.st_strided_lanes(lay.y.lin(0, (chunks * W) as i64), p.y, lane_stride);
     for ic in 0..chunks as i64 {
-        let x0 = X_BASE + ic * W as i64;
+        let x0 = ic * W as i64;
         // Forward half-window walk: row j covers x[i + j].
-        p.push(VsCommand::with_stride(
-            Cmd::LocalLd {
-                pat: Pattern2D::rect(x0, 1, W as i64, 1, half),
-                port: 0,
-                reuse: None,
-                masked: feats.masking,
-                rmw: None,
-            },
-            mask,
-            lane_stride,
-        ));
+        b.ld_strided_lanes(lay.x.rect(x0, 1, W as i64, 1, half), p.xa, lane_stride);
         // Backward half-window walk: row j covers x[i + m-1-j].
-        p.push(VsCommand::with_stride(
-            Cmd::LocalLd {
-                pat: Pattern2D::rect(x0 + m as i64 - 1, 1, W as i64, -1, half),
-                port: 1,
-                reuse: None,
-                masked: feats.masking,
-                rmw: None,
-            },
-            mask,
+        b.ld_strided_lanes(
+            lay.x.rect(x0 + m as i64 - 1, 1, W as i64, -1, half),
+            p.xb,
             lane_stride,
-        ));
+        );
         // Taps, one scalar per accumulation step.
-        p.push(vs(Cmd::LocalLd {
-            pat: Pattern2D::lin(H_BASE, half),
-            port: 2,
-            reuse: None,
-            masked: feats.masking,
-            rmw: None,
-        }));
+        b.ld(lay.h.lin(0, half), p.h);
     }
-    p.push(vs(Cmd::Wait));
-    Ok(p)
+    Ok(b.finish())
 }
 
 pub struct Instance {
@@ -139,6 +158,7 @@ pub fn prepare(m: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
         Goal::Throughput => (chunks_total, 0, lanes),
     };
     let prog = program(m, chunks, feats, mask, stride)?;
+    let lay = layout(m)?;
     let mut mach = machine(lanes);
     let insts: Vec<Instance> = match goal {
         Goal::Latency => vec![instance(m, 0)],
@@ -146,20 +166,21 @@ pub fn prepare(m: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
     };
     for l in 0..lanes {
         let inst = &insts[if problems == 1 { 0 } else { l }];
-        mach.lanes[l].spad.load_slice(X_BASE, &inst.x);
-        mach.lanes[l].spad.load_slice(H_BASE, &inst.h);
+        mach.lanes[l].spad.load_slice(lay.x.base(), &inst.x);
+        mach.lanes[l].spad.load_slice(lay.h.base(), &inst.h);
     }
+    let y_region = lay.y;
     let verify = Box::new(move |mach: &Machine| {
         let mut max_err = 0.0f64;
         for l in 0..lanes {
             let inst = &insts[if problems == 1 { 0 } else { l }];
             for c in 0..chunks * W {
-                let (y_idx, addr) = if problems == 1 {
-                    (l * chunks * W + c, Y_BASE + (l * chunks * W + c) as i64)
+                let (y_idx, off) = if problems == 1 {
+                    (l * chunks * W + c, (l * chunks * W + c) as i64)
                 } else {
-                    (c, Y_BASE + c as i64)
+                    (c, c as i64)
                 };
-                let got = mach.lanes[l].spad.read(addr);
+                let got = mach.lanes[l].spad.read(y_region.addr(off));
                 let want = inst.y_ref[y_idx];
                 let err = (got - want).abs();
                 if err > 1e-9 {
@@ -203,5 +224,12 @@ mod tests {
             .execute()
             .unwrap();
         assert!(lat.cycles < thr.cycles, "{} vs {}", lat.cycles, thr.cycles);
+    }
+
+    #[test]
+    fn program_passes_the_vsc_check() {
+        let prog = program(16, 1, Features::ALL, LaneMask::first_n(8), 8).unwrap();
+        let rep = crate::vsc::check_program(&prog, &SimConfig::default());
+        assert!(rep.errors().is_empty(), "{rep}");
     }
 }

@@ -8,16 +8,18 @@
 //! Streams per (row i, column-chunk jc): the B tile rows (2D rectangular
 //! stream, k-major) and the A row scalars (broadcast: one scratchpad
 //! word feeds all 8 lanes — the stream-reuse bandwidth saving the paper
-//! notes even non-FGOP kernels enjoy).
+//! notes even non-FGOP kernels enjoy). Built on the typed
+//! [`crate::vsc`] layer: see [`Ports`] / [`Layout`].
 
 use std::sync::Arc;
 
 use super::{Features, Goal, Prepared, WlError};
 use crate::compiler::Configured;
-use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op};
-use crate::isa::{Cmd, ConstPattern, LaneMask, Pattern2D, Program, VsCommand};
+use crate::dataflow::{Criticality, Op};
+use crate::isa::{LaneMask, Program};
 use crate::sim::Machine;
 use crate::util::linalg::Mat;
+use crate::vsc::{BuiltKernel, In, Kernel, Out, Region, SpadAlloc};
 
 /// Vector width (64 columns = 8 chunks of 8).
 const W: usize = 8;
@@ -25,22 +27,73 @@ const W: usize = 8;
 pub const K: usize = 16;
 pub const P: usize = 64;
 
-const A_BASE: i64 = 0; // m x 16 row-major
-const B_BASE: i64 = 1024; // 16 x 64 row-major
-const C_BASE: i64 = 0; // reuse A region? no — C after B
-const C_OFF: i64 = 1024 + (K * P) as i64;
+/// C (up to 48x64 words) exceeds the 8KB local SPAD; hardware would
+/// stream C to the shared scratchpad — modeled as a larger local.
+const SPAD_WORDS: usize = 8192;
 
-// Ports. In: 0=b(W), 1=a(1), 2=emit gate(1). Out: 0=c(W).
-fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
-    let mut g = DfgBuilder::new("gemm", Criticality::Critical);
-    let b = g.in_port(0, W);
-    let a = g.in_port(1, 1);
-    let gate = g.in_port(2, 1);
-    let prod = g.node(Op::Mul, &[b, a]);
-    let acc = g.node(Op::Acc, &[prod, gate]);
-    g.out_gated(0, acc, W, Some(gate));
-    let cfg = LaneConfig { name: "gemm".into(), dfgs: vec![g.build()] };
-    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+/// Typed port handles of the accumulating dataflow.
+pub struct Ports {
+    /// B tile chunk stream (width W).
+    pub b: In,
+    /// A row scalars.
+    pub a: In,
+    /// Accumulator emit gate.
+    pub gate: In,
+    /// C output chunks (gated).
+    pub c: Out,
+}
+
+/// Scratchpad regions (per lane).
+pub struct Layout {
+    /// A row block, `rows x 16`, row-major.
+    pub a: Region,
+    /// B, `16 x 64`, row-major.
+    pub b: Region,
+    /// C, `rows x 64`, row-major.
+    pub c: Region,
+}
+
+/// A planned kernel instance (see [`plan`]).
+pub struct Plan {
+    built: BuiltKernel,
+    /// Compiled lane configuration.
+    pub cfg: Arc<Configured>,
+    /// Typed port handles.
+    pub ports: Ports,
+    /// Allocated scratchpad layout.
+    pub lay: Layout,
+}
+
+fn kernel(_feats: Features) -> Result<(BuiltKernel, Ports), WlError> {
+    let mut k = Kernel::new("gemm");
+    let mut g = k.dfg("gemm", Criticality::Critical);
+    let b = g.input(W);
+    let a = g.input(1);
+    let gate = g.input(1);
+    let prod = g.node(Op::Mul, &[b.wire(), a.wire()]);
+    let acc = g.node(Op::Acc, &[prod, gate.wire()]);
+    let c = g.output_gated(acc, W, gate);
+    g.done();
+    let built = k.build()?;
+    Ok((built, Ports { b, a, gate, c }))
+}
+
+/// Allocate the scratchpad layout for `rows` resident A rows per lane.
+pub fn layout(rows: usize) -> Result<Layout, WlError> {
+    let mut al = SpadAlloc::with_capacity(SPAD_WORDS);
+    let a = al.region("gemm.A", (rows * K) as i64)?;
+    let b = al.region("gemm.B", (K * P) as i64)?;
+    let c = al.region("gemm.C", (rows * P) as i64)?;
+    Ok(Layout { a, b, c })
+}
+
+/// Build the plan: kernel (cached compile) + ports + layout.
+pub fn plan(rows: usize, feats: Features) -> Result<Plan, WlError> {
+    let (built, ports) = kernel(feats)?;
+    let lc = built.config.clone();
+    let cfg = super::cached_config(built.name(), feats, move || Ok(lc))?;
+    let lay = layout(rows)?;
+    Ok(Plan { built, cfg, ports, lay })
 }
 
 /// Rows handled per lane for an m-row latency-split across `lanes`.
@@ -51,50 +104,30 @@ fn rows_per_lane(m: usize, lanes: usize) -> usize {
 /// Program for `rows` rows of A resident per lane (same commands on all
 /// masked lanes; each lane's scratchpad holds its own row block).
 pub fn program(rows: usize, feats: Features, mask: LaneMask) -> Result<Program, WlError> {
-    let cfg = config(feats)?;
-    let vs = |c: Cmd| VsCommand::new(c, mask);
-    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
+    let plan = plan(rows, feats)?;
+    let p = &plan.ports;
+    let lay = &plan.lay;
+    let mut b = plan.built.program(plan.cfg.clone(), feats, mask);
     // C streams to memory through one hoisted command (issued first so
     // the output port drains for the whole run).
-    p.push(vs(Cmd::LocalSt {
-        pat: Pattern2D::lin(C_OFF, (rows * P) as i64),
-        port: 0,
-        rmw: false,
-    }));
+    b.st(lay.c.lin(0, (rows * P) as i64), p.c);
     let chunks = P / W;
     for i in 0..rows {
         for jc in 0..chunks {
-            // B tile: k rows of the jc-th column chunk (RR stream).
-            p.push(vs(Cmd::LocalLd {
-                pat: Pattern2D::rect(
-                    B_BASE + (jc * W) as i64,
-                    1,
-                    W as i64,
-                    P as i64,
-                    K as i64,
-                ),
-                port: 0,
-                reuse: None,
-                masked: feats.masking,
-                rmw: None,
-            }));
+            // B tile: k rows of the jc-th column chunk (RR stream —
+            // rectangular-native, never decomposed by the ablation).
+            b.ld_rect(
+                lay.b.rect((jc * W) as i64, 1, W as i64, P as i64, K as i64),
+                p.b,
+                None,
+            );
             // A row scalars, one per k step.
-            p.push(vs(Cmd::LocalLd {
-                pat: Pattern2D::lin(A_BASE + (i * K) as i64, K as i64),
-                port: 1,
-                reuse: None,
-                masked: feats.masking,
-                rmw: None,
-            }));
+            b.ld(lay.a.lin((i * K) as i64, K as i64), p.a);
             // Emit gate: accumulate 15 steps, emit on the 16th.
-            p.push(vs(Cmd::ConstSt {
-                pat: ConstPattern::last_of_row(1.0, 0.0, K as f64, 1, 0.0),
-                port: 2,
-            }));
+            b.gate_last_of_row(p.gate, 1.0, 0.0, K as f64, 1, 0.0);
         }
     }
-    p.push(vs(Cmd::Wait));
-    Ok(p)
+    Ok(b.finish())
 }
 
 pub struct Instance {
@@ -122,11 +155,11 @@ pub fn prepare(m: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
     };
     let mask = LaneMask::first_n(lanes);
     let prog = program(rows, feats, mask)?;
-    // C (up to 48x64 words) exceeds the 8KB local SPAD; hardware would
-    // stream C to the shared scratchpad — modeled as a larger local.
+    let lay = layout(rows)?;
     let mut mach = crate::sim::Machine::new(crate::sim::SimConfig {
         lanes,
-        lane_spad_words: 8192,
+        lane_spad_words: SPAD_WORDS,
+        max_cycles: crate::sim::max_cycles_budget(),
         ..Default::default()
     });
     let insts: Vec<Instance> = match goal {
@@ -140,15 +173,18 @@ pub fn prepare(m: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
             for k in 0..K {
                 mach.lanes[l]
                     .spad
-                    .write(A_BASE + (r * K + k) as i64, inst.a[(row0 + r, k)]);
+                    .write(lay.a.addr((r * K + k) as i64), inst.a[(row0 + r, k)]);
             }
         }
         for k in 0..K {
             for j in 0..P {
-                mach.lanes[l].spad.write(B_BASE + (k * P + j) as i64, inst.b[(k, j)]);
+                mach.lanes[l]
+                    .spad
+                    .write(lay.b.addr((k * P + j) as i64), inst.b[(k, j)]);
             }
         }
     }
+    let c_region = lay.c;
     let verify = Box::new(move |mach: &Machine| {
         let mut max_err = 0.0f64;
         for l in 0..lanes {
@@ -156,7 +192,7 @@ pub fn prepare(m: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
             let row0 = if problems == 1 { l * rows } else { 0 };
             for r in 0..rows {
                 for j in 0..P {
-                    let got = mach.lanes[l].spad.read(C_OFF + (r * P + j) as i64);
+                    let got = mach.lanes[l].spad.read(c_region.addr((r * P + j) as i64));
                     let want = inst.c_ref[(row0 + r, j)];
                     let err = (got - want).abs();
                     if err > 1e-9 {
@@ -173,9 +209,6 @@ pub fn prepare(m: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
     let flops = (2 * m * K * P * problems.max(1)) as f64;
     Ok(Prepared { machine: mach, prog, verify, flops, problems })
 }
-
-// Silence the unused-constant lint for the aliased base.
-const _: i64 = C_BASE;
 
 #[cfg(test)]
 mod tests {
@@ -213,5 +246,17 @@ mod tests {
             "utilization {:.3}",
             r.stats.utilization()
         );
+    }
+
+    #[test]
+    fn program_passes_the_vsc_check() {
+        let prog = program(12, Features::ALL, LaneMask::first_n(4)).unwrap();
+        let sim = crate::sim::SimConfig {
+            lanes: 4,
+            lane_spad_words: SPAD_WORDS,
+            ..Default::default()
+        };
+        let rep = crate::vsc::check_program(&prog, &sim);
+        assert!(rep.errors().is_empty(), "{rep}");
     }
 }

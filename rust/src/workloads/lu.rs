@@ -1,0 +1,352 @@
+//! LU decomposition (no pivoting — paper Table 4 lists LU in the
+//! ideal-ASIC suite; instances are diagonally dominant SPD so pivoting
+//! is unnecessary). In-place right-looking Doolittle factorization,
+//! three dataflow regions mirroring Cholesky's shape:
+//!
+//! * `point` (non-critical): inv = 1 / a_kk;
+//! * `vector` (critical): l_ik = a_ik * inv, i in (k..n);
+//! * `matrix` (critical): a_ij -= l_ik * a_kj over the square trailing
+//!   block (LU's trailing update is rectangular, not triangular — the
+//!   structural difference from Cholesky).
+//!
+//! Fine-grain ordered dependence: point -> vector (inv, reused for the
+//! whole column via XFER); the ablation round-trips it through the
+//! scratchpad. The trailing block updates in place (rmw store + lag-0
+//! rmw load), the L-column stream rewinds per trailing column
+//! (c_j = 0 stream reuse), and the pivot-row scalars feed the matrix
+//! region with column-length reuse.
+//!
+//! This workload is authored *purely* against the typed [`crate::vsc`]
+//! API — it is the template for every future kernel PR.
+
+use std::sync::Arc;
+
+use super::{machine, Features, Goal, Prepared, WlError};
+use crate::compiler::Configured;
+use crate::dataflow::{Criticality, Op, Operand};
+use crate::isa::{LaneMask, Program, Reuse};
+use crate::sim::{Machine, SimConfig};
+use crate::util::linalg::Mat;
+use crate::vsc::{BuiltKernel, In, Kernel, Out, Region, SpadAlloc};
+
+/// Vector width of the critical dataflows.
+const W: usize = 8;
+
+/// Typed port handles of the three dataflows.
+pub struct Ports {
+    /// point: pivot a_kk.
+    pub akk: In,
+    /// vector: column-k suffix (width W).
+    pub acol: In,
+    /// vector: 1/a_kk scalar (reused).
+    pub inv: In,
+    /// matrix: trailing-block element stream (width W).
+    pub a: In,
+    /// matrix: L column suffix, rewound per trailing column (width W).
+    pub lcol: In,
+    /// matrix: pivot-row scalar a_kj per trailing column (reused).
+    pub akj: In,
+    /// point out: inv.
+    pub inv_out: Out,
+    /// vector out: the scaled L column.
+    pub l_out: Out,
+    /// matrix out: updated trailing elements.
+    pub upd: Out,
+}
+
+/// Scratchpad regions (per lane).
+pub struct Layout {
+    /// A, column-major, `n*n` words (becomes L\U in place).
+    pub a: Region,
+    /// inv round-trip scratch (non-fine-grain ablation only).
+    pub tmp: Region,
+}
+
+/// A planned kernel instance (see [`plan`]).
+pub struct Plan {
+    built: BuiltKernel,
+    /// Compiled lane configuration.
+    pub cfg: Arc<Configured>,
+    /// Typed port handles.
+    pub ports: Ports,
+    /// Allocated scratchpad layout.
+    pub lay: Layout,
+}
+
+fn kernel(_feats: Features) -> Result<(BuiltKernel, Ports), WlError> {
+    let mut k = Kernel::new("lu");
+
+    let mut pt = k.dfg("point", Criticality::NonCritical);
+    let akk = pt.input(1);
+    let inv = pt.node(Op::Div, &[Operand::Const(1.0), akk.wire()]);
+    let inv_out = pt.output(inv, 1);
+    pt.done();
+
+    let mut v = k.dfg("vector", Criticality::Critical);
+    let acol = v.input(W);
+    let iv = v.input(1);
+    let l = v.node(Op::Mul, &[acol.wire(), iv.wire()]);
+    let l_out = v.output(l, W);
+    v.done();
+
+    let mut m = k.dfg("matrix", Criticality::Critical);
+    let a = m.input(W);
+    let lc = m.input(W);
+    let akj = m.input(1);
+    let prod = m.node(Op::Mul, &[lc.wire(), akj.wire()]);
+    let upd = m.node(Op::Sub, &[a.wire(), prod]);
+    let upd_out = m.output(upd, W);
+    m.done();
+
+    let built = k.build()?;
+    let ports = Ports {
+        akk,
+        acol,
+        inv: iv,
+        a,
+        lcol: lc,
+        akj,
+        inv_out,
+        l_out,
+        upd: upd_out,
+    };
+    Ok((built, ports))
+}
+
+/// Allocate the scratchpad layout for problem size `n`.
+pub fn layout(n: usize) -> Result<Layout, WlError> {
+    let mut al = SpadAlloc::lane(&SimConfig::default());
+    let a = al.region("lu.A", (n * n) as i64)?;
+    let tmp = al.region("lu.inv_tmp", n as i64)?;
+    Ok(Layout { a, tmp })
+}
+
+/// Build the plan: kernel (cached compile) + ports + layout.
+pub fn plan(n: usize, feats: Features) -> Result<Plan, WlError> {
+    let (built, ports) = kernel(feats)?;
+    let lc = built.config.clone();
+    let cfg = super::cached_config(built.name(), feats, move || Ok(lc))?;
+    let lay = layout(n)?;
+    Ok(Plan { built, cfg, ports, lay })
+}
+
+/// Column-major offset of `A[i][j]` inside the A region.
+fn at(n: i64, i: i64, j: i64) -> i64 {
+    j * n + i
+}
+
+pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlError> {
+    let plan = plan(n, feats)?;
+    let n_i = n as i64;
+    let p = &plan.ports;
+    let a = &plan.lay.a;
+    let mut b = plan.built.program(plan.cfg.clone(), feats, mask);
+
+    for k in 0..n_i - 1 {
+        let t = n_i - k - 1; // trailing dimension
+        // Pivot: written by the previous trailing update; the memory
+        // interlock orders this load after that rmw store.
+        b.ld(a.lin(at(n_i, k, k), 1), p.akk);
+        if feats.fine_grain {
+            // point -> vector: inv reused for the whole column.
+            b.xfer_reuse(p.inv_out, p.inv, 1, Reuse::uniform(t as f64));
+        } else {
+            // Memory round-trip for the region transition.
+            b.st(plan.lay.tmp.lin(k, 1), p.inv_out);
+            b.barrier();
+            b.ld_reuse(plan.lay.tmp.lin(k, 1), p.inv, Reuse::uniform(t as f64));
+        }
+        // Scale column k below the pivot; L lands over A in place.
+        b.ld(a.lin(at(n_i, k + 1, k), t), p.acol);
+        b.st(a.lin(at(n_i, k + 1, k), t), p.l_out);
+
+        // ---- matrix region: square trailing update ------------------
+        b.barrier();
+        if feats.inductive {
+            // Whole trailing block in single 2D commands: pivot-row
+            // scalars (each reused for one column), the in-place rmw
+            // pair over the block, and the rewinding L-column stream.
+            b.ld_reuse(
+                a.strided(at(n_i, k, k + 1), n_i, t),
+                p.akj,
+                Reuse::uniform(t as f64),
+            );
+            let block = a.rect(at(n_i, k + 1, k + 1), 1, t, n_i, t);
+            b.st_rmw(block.clone(), p.upd);
+            b.ld_rmw(block, p.a, 0);
+            b.ld(a.rect(at(n_i, k + 1, k), 1, t, 0, t), p.lcol);
+        } else {
+            // Rectangular-only decomposition, interleaved per column so
+            // the stores don't head-of-line block the command queue.
+            for j in 0..t {
+                b.ld_reuse(
+                    a.lin(at(n_i, k, k + 1 + j), 1),
+                    p.akj,
+                    Reuse::uniform(t as f64),
+                );
+                let colp = a.lin(at(n_i, k + 1, k + 1 + j), t);
+                b.st_rmw(colp.clone(), p.upd);
+                b.ld_rmw(colp, p.a, 0);
+                b.ld(a.lin(at(n_i, k + 1, k), t), p.lcol);
+            }
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Scalar mirror of the exact simulated arithmetic (multiply by the
+/// reciprocal, same update order).
+pub fn lu_mirror(a: &mut Mat) {
+    let n = a.rows;
+    for k in 0..n.saturating_sub(1) {
+        let inv = 1.0 / a[(k, k)];
+        for i in k + 1..n {
+            a[(i, k)] *= inv;
+        }
+        for j in k + 1..n {
+            let akj = a[(k, j)];
+            for i in k + 1..n {
+                let l = a[(i, k)];
+                a[(i, j)] -= l * akj;
+            }
+        }
+    }
+}
+
+/// Problem data for one lane.
+pub struct Instance {
+    pub a: Mat,
+    pub lu_ref: Mat,
+}
+
+pub fn instance(n: usize, seed: usize) -> Instance {
+    // Diagonally dominant SPD input: no pivoting required.
+    let a = Mat::spd(n, seed as f64 * 0.9 + 0.1);
+    let mut lu_ref = a.clone();
+    lu_mirror(&mut lu_ref);
+    Instance { a, lu_ref }
+}
+
+pub fn load_lane(lane: &mut crate::sim::Lane, inst: &Instance) {
+    let n = inst.a.rows;
+    let lay = layout(n).expect("lu layout fits the lane scratchpad");
+    for j in 0..n {
+        for i in 0..n {
+            lane.spad
+                .write(lay.a.addr(at(n as i64, i as i64, j as i64)), inst.a[(i, j)]);
+        }
+    }
+}
+
+pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlError> {
+    let lanes = match goal {
+        Goal::Latency => 1,
+        Goal::Throughput => 8,
+    };
+    let mask = LaneMask::first_n(lanes);
+    let prog = program(n, feats, mask)?;
+    let lay = layout(n)?;
+    let mut m = machine(lanes);
+    let insts: Vec<Instance> = (0..lanes).map(|l| instance(n, l)).collect();
+    for (l, inst) in insts.iter().enumerate() {
+        load_lane(&mut m.lanes[l], inst);
+    }
+    let a_region = lay.a;
+    let verify = Box::new(move |m: &Machine| {
+        let mut max_err = 0.0f64;
+        for (l, inst) in insts.iter().enumerate() {
+            let nn = inst.a.rows as i64;
+            for j in 0..nn {
+                for i in 0..nn {
+                    let got = m.lanes[l].spad.read(a_region.addr(at(nn, i, j)));
+                    let want = inst.lu_ref[(i as usize, j as usize)];
+                    let err = (got - want).abs();
+                    if err > 1e-9 {
+                        return Err(format!(
+                            "lane {l} LU[{i}][{j}]: got {got}, want {want}"
+                        ));
+                    }
+                    max_err = max_err.max(err);
+                }
+            }
+        }
+        Ok(max_err)
+    });
+    // ~2/3 n^3 useful flops (mul + sub over the trailing blocks).
+    let flops = lanes as f64 * 2.0 / 3.0 * (n * n * n) as f64;
+    Ok(Prepared { machine: m, prog, verify, flops, problems: lanes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::program_stats;
+    use crate::util::linalg::lu as lu_ref;
+
+    #[test]
+    fn mirror_matches_library_lu() {
+        for n in [4, 8, 16] {
+            let inst = instance(n, 0);
+            let lib = lu_ref(&inst.a);
+            assert!(
+                inst.lu_ref.max_abs_diff(&lib) < 1e-8,
+                "n={n}: mirror vs library LU"
+            );
+        }
+    }
+
+    #[test]
+    fn fgop_lu_is_correct_all_sizes() {
+        for n in [8, 12, 16, 24, 32] {
+            prepare(n, Features::ALL, Goal::Latency)
+                .unwrap()
+                .execute()
+                .unwrap_or_else(|e| panic!("n={n}: {e}"));
+        }
+    }
+
+    #[test]
+    fn all_feature_ladder_versions_are_correct() {
+        for (name, feats) in Features::ladder() {
+            prepare(12, feats, Goal::Latency)
+                .unwrap()
+                .execute()
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn inductive_streams_cut_commands() {
+        let ind = program(16, Features::ALL, LaneMask::one(0)).unwrap();
+        let no = program(
+            16,
+            Features { inductive: false, ..Features::ALL },
+            LaneMask::one(0),
+        )
+        .unwrap();
+        assert!(
+            program_stats(&ind).commands * 3 < program_stats(&no).commands,
+            "{} vs {}",
+            ind.len(),
+            no.len()
+        );
+    }
+
+    #[test]
+    fn throughput_runs_eight_lanes() {
+        let r = prepare(12, Features::ALL, Goal::Throughput)
+            .unwrap()
+            .execute()
+            .unwrap();
+        assert_eq!(r.problems, 8);
+    }
+
+    #[test]
+    fn program_passes_the_vsc_check() {
+        for feats in [Features::ALL, Features::NONE] {
+            let prog = program(12, feats, LaneMask::one(0)).unwrap();
+            let rep = crate::vsc::check_program(&prog, &SimConfig::default());
+            assert!(rep.errors().is_empty(), "{feats:?}:\n{rep}");
+        }
+    }
+}

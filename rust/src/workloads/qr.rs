@@ -14,228 +14,236 @@
 //! lives in-place in column k (v0 overwrites a_kk; R's diagonal is
 //! stored aside), and the v streams re-read it per column with a
 //! rewinding (c_j = 0) pattern — stream-reuse cutting SPAD bandwidth.
+//! Built on the typed [`crate::vsc`] layer: see [`Ports`] / [`Layout`].
 
 use std::sync::Arc;
 
-use super::{machine, push_ld, push_st, Features, Goal, Prepared, WlError};
+use super::{machine, Features, Goal, Prepared, WlError};
 use crate::compiler::Configured;
-use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op, Operand};
-use crate::isa::{
-    Cmd, ConstPattern, LaneMask, Pattern2D, Program, Reuse, VsCommand, XferDst,
-};
-use crate::sim::Machine;
+use crate::dataflow::{Criticality, Op, Operand};
+use crate::isa::{LaneMask, Program, Reuse};
+use crate::sim::{Machine, SimConfig};
 use crate::util::linalg::Mat;
+use crate::vsc::{BuiltKernel, In, Kernel, Out, Region, SpadAlloc};
 
 const W: usize = 4;
 
-/// A (column-major, n<=32 => 1024 words), R diagonal, constants/scratch.
-const A_BASE: i64 = 0;
-const RDIAG_BASE: i64 = 1060;
-const ONE_ADDR: i64 = 1100;
-const TMP_BASE: i64 = 1200;
-
-// Ports. In: 0=dot.a(W), 1=dot.v(W), 2=dot gate(1), 3=dot.inv(1),
-// 4=house.sigma(1), 5=house.akk(1), 6=upd.a(W), 7=upd.v(W), 8=upd.w(1).
-// Out: 0=w' (dot), 1=v0, 2=rkk, 3=inv, 4=a_upd.
-fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
-    let mut d = DfgBuilder::new("dot", Criticality::Critical);
-    let a = d.in_port(0, W);
-    let v = d.in_port(1, W);
-    let gate = d.in_port(2, 1);
-    let inv = d.in_port(3, 1);
-    let prod = d.node(Op::Mul, &[a, v]);
-    let s = d.node(Op::AccReduce, &[prod, gate]);
-    let w = d.node(Op::Mul, &[s, inv]);
-    d.out_gated(0, w, 1, Some(gate));
-
-    let mut h = DfgBuilder::new("house", Criticality::NonCritical);
-    let sigma = h.in_port(4, 1);
-    let akk = h.in_port(5, 1);
-    let nrm = h.node(Op::Sqrt, &[sigma]);
-    let ge = h.node(Op::CmpGe, &[akk, Operand::Const(0.0)]);
-    let sg = h.node(Op::Select, &[ge, Operand::Const(1.0), Operand::Const(-1.0)]);
-    let sn = h.node(Op::Mul, &[sg, nrm]);
-    let v0 = h.node(Op::Add, &[akk, sn]);
-    let rkk = h.node(Op::Neg, &[sn]);
-    let akk2 = h.node(Op::Mul, &[akk, akk]);
-    let v02 = h.node(Op::Mul, &[v0, v0]);
-    let t1 = h.node(Op::Sub, &[sigma, akk2]);
-    let vn2 = h.node(Op::Add, &[t1, v02]);
-    let invv = h.node(Op::Div, &[Operand::Const(2.0), vn2]);
-    h.out(1, v0, 1);
-    h.out(2, rkk, 1);
-    h.out(3, invv, 1);
-
-    let mut u = DfgBuilder::new("update", Criticality::Critical);
-    let a2 = u.in_port(6, W);
-    let v2 = u.in_port(7, W);
-    let w2 = u.in_port(8, 1);
-    let p2 = u.node(Op::Mul, &[v2, w2]);
-    let upd = u.node(Op::Sub, &[a2, p2]);
-    u.out(4, upd, W);
-
-    let cfg = LaneConfig {
-        name: "qr".into(),
-        dfgs: vec![d.build(), h.build(), u.build()],
-    };
-    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+/// Typed port handles of the three dataflows.
+pub struct Ports {
+    /// dot: column stream (width W).
+    pub dot_a: In,
+    /// dot: Householder vector stream (width W).
+    pub dot_v: In,
+    /// dot: reduction emit gate.
+    pub dot_gate: In,
+    /// dot: inv scalar from house.
+    pub dot_inv: In,
+    /// house: sigma.
+    pub sigma: In,
+    /// house: original a_kk.
+    pub akk: In,
+    /// update: trailing-column stream (width W).
+    pub upd_a: In,
+    /// update: Householder vector stream (width W).
+    pub upd_v: In,
+    /// update: w_j scalar (reused).
+    pub upd_w: In,
+    /// dot out (gated): sigma / w_j reductions.
+    pub w_out: Out,
+    /// house out: v0 (overwrites a_kk).
+    pub v0: Out,
+    /// house out: r_kk (parked in the diagonal store).
+    pub rkk: Out,
+    /// house out: inv = 2 / |v|^2.
+    pub inv: Out,
+    /// update out: updated trailing elements.
+    pub a_upd: Out,
 }
 
+/// Scratchpad regions (per lane).
+pub struct Layout {
+    /// A, column-major, `n*n` words (in-place Householder vectors + R).
+    pub a: Region,
+    /// R's diagonal.
+    pub rdiag: Region,
+    /// The constant 1.0 (sigma dot multiplier).
+    pub one: Region,
+    /// sigma/inv/w_j round-trip scratch (`n+1` words).
+    pub tmp: Region,
+}
+
+/// A planned kernel instance (see [`plan`]).
+pub struct Plan {
+    built: BuiltKernel,
+    /// Compiled lane configuration.
+    pub cfg: Arc<Configured>,
+    /// Typed port handles.
+    pub ports: Ports,
+    /// Allocated scratchpad layout.
+    pub lay: Layout,
+}
+
+fn kernel(_feats: Features) -> Result<(BuiltKernel, Ports), WlError> {
+    let mut k = Kernel::new("qr");
+
+    let mut d = k.dfg("dot", Criticality::Critical);
+    let a = d.input(W);
+    let v = d.input(W);
+    let gate = d.input(1);
+    let inv = d.input(1);
+    let prod = d.node(Op::Mul, &[a.wire(), v.wire()]);
+    let s = d.node(Op::AccReduce, &[prod, gate.wire()]);
+    let w = d.node(Op::Mul, &[s, inv.wire()]);
+    let w_out = d.output_gated(w, 1, gate);
+    d.done();
+
+    let mut h = k.dfg("house", Criticality::NonCritical);
+    let sigma = h.input(1);
+    let akk = h.input(1);
+    let nrm = h.node(Op::Sqrt, &[sigma.wire()]);
+    let ge = h.node(Op::CmpGe, &[akk.wire(), Operand::Const(0.0)]);
+    let sg = h.node(Op::Select, &[ge, Operand::Const(1.0), Operand::Const(-1.0)]);
+    let sn = h.node(Op::Mul, &[sg, nrm]);
+    let v0 = h.node(Op::Add, &[akk.wire(), sn]);
+    let rkk = h.node(Op::Neg, &[sn]);
+    let akk2 = h.node(Op::Mul, &[akk.wire(), akk.wire()]);
+    let v02 = h.node(Op::Mul, &[v0, v0]);
+    let t1 = h.node(Op::Sub, &[sigma.wire(), akk2]);
+    let vn2 = h.node(Op::Add, &[t1, v02]);
+    let invv = h.node(Op::Div, &[Operand::Const(2.0), vn2]);
+    let v0_out = h.output(v0, 1);
+    let rkk_out = h.output(rkk, 1);
+    let inv_out = h.output(invv, 1);
+    h.done();
+
+    let mut u = k.dfg("update", Criticality::Critical);
+    let a2 = u.input(W);
+    let v2 = u.input(W);
+    let w2 = u.input(1);
+    let p2 = u.node(Op::Mul, &[v2.wire(), w2.wire()]);
+    let upd = u.node(Op::Sub, &[a2.wire(), p2]);
+    let a_upd = u.output(upd, W);
+    u.done();
+
+    let built = k.build()?;
+    let ports = Ports {
+        dot_a: a,
+        dot_v: v,
+        dot_gate: gate,
+        dot_inv: inv,
+        sigma,
+        akk,
+        upd_a: a2,
+        upd_v: v2,
+        upd_w: w2,
+        w_out,
+        v0: v0_out,
+        rkk: rkk_out,
+        inv: inv_out,
+        a_upd,
+    };
+    Ok((built, ports))
+}
+
+/// Allocate the scratchpad layout for problem size `n`.
+pub fn layout(n: usize) -> Result<Layout, WlError> {
+    let mut al = SpadAlloc::lane(&SimConfig::default());
+    let a = al.region("qr.A", (n * n) as i64)?;
+    let rdiag = al.region("qr.rdiag", n as i64)?;
+    let one = al.region("qr.one", 1)?;
+    let tmp = al.region("qr.tmp", n as i64 + 1)?;
+    Ok(Layout { a, rdiag, one, tmp })
+}
+
+/// Build the plan: kernel (cached compile) + ports + layout.
+pub fn plan(n: usize, feats: Features) -> Result<Plan, WlError> {
+    let (built, ports) = kernel(feats)?;
+    let lc = built.config.clone();
+    let cfg = super::cached_config(built.name(), feats, move || Ok(lc))?;
+    let lay = layout(n)?;
+    Ok(Plan { built, cfg, ports, lay })
+}
+
+/// Column-major offset of `A[i][j]` inside the A region.
 fn at(n: i64, i: i64, j: i64) -> i64 {
-    A_BASE + j * n + i
+    j * n + i
 }
 
 pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlError> {
-    let cfg = config(feats)?;
+    let plan = plan(n, feats)?;
     let n_i = n as i64;
-    let vs = |c: Cmd| VsCommand::new(c, mask);
-    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
+    let p = &plan.ports;
+    let (a, tmp) = (&plan.lay.a, &plan.lay.tmp);
+    let mut b = plan.built.program(plan.cfg.clone(), feats, mask);
 
     for k in 0..n_i {
         let len = n_i - k; // live column height (rows k..n)
         let cols = n_i - k - 1; // trailing columns
-        p.push(vs(Cmd::Barrier));
+        b.barrier();
         // a_kk (original) for the house region.
-        push_ld(&mut p, mask, Pattern2D::lin(at(n_i, k, k), 1), 5, None, feats, None);
+        b.ld(a.lin(at(n_i, k, k), 1), p.akk);
         // sigma dot: column k against itself, multiplier 1.0.
-        push_ld(&mut p, mask, Pattern2D::lin(at(n_i, k, k), len), 0, None, feats, None);
-        push_ld(&mut p, mask, Pattern2D::lin(at(n_i, k, k), len), 1, None, feats, None);
-        push_ld(
-            &mut p,
-            mask,
-            Pattern2D::lin(ONE_ADDR, 1),
-            3,
-            Some(Reuse::uniform(len as f64)),
-            feats,
-            None,
-        );
+        b.ld(a.lin(at(n_i, k, k), len), p.dot_a);
+        b.ld(a.lin(at(n_i, k, k), len), p.dot_v);
+        b.ld_reuse(plan.lay.one.lin(0, 1), p.dot_inv, Reuse::uniform(len as f64));
         // Emit gate for all (1 + cols) dots of this iteration. Scalar
         // gate streams pace *firings*: ceil(len/W) per column.
         let firings = (len + W as i64 - 1) / W as i64;
-        p.push(vs(Cmd::ConstSt {
-            pat: ConstPattern::last_of_row(1.0, 0.0, firings as f64, cols + 1, 0.0),
-            port: 2,
-        }));
+        b.gate_last_of_row(p.dot_gate, 1.0, 0.0, firings as f64, cols + 1, 0.0);
         if feats.fine_grain {
             // dot -> house (sigma), house -> memory (v0, rkk),
             // house -> dot (inv).
-            p.push(vs(Cmd::Xfer {
-                src_port: 0,
-                dst_port: 4,
-                dst: XferDst::Local,
-                n: 1,
-                reuse: None,
-            }));
+            b.xfer(p.w_out, p.sigma, 1);
         } else {
             // sigma round-trips through the scratchpad.
-            p.push(vs(Cmd::LocalSt {
-                pat: Pattern2D::lin(TMP_BASE, 1),
-                port: 0,
-                rmw: false,
-            }));
-            p.push(vs(Cmd::Barrier));
-            push_ld(&mut p, mask, Pattern2D::lin(TMP_BASE, 1), 4, None, feats, None);
+            b.st(tmp.lin(0, 1), p.w_out);
+            b.barrier();
+            b.ld(tmp.lin(0, 1), p.sigma);
         }
         // v0 overwrites a_kk; r_kk parked in the diagonal store.
-        p.push(vs(Cmd::LocalSt {
-            pat: Pattern2D::lin(at(n_i, k, k), 1),
-            port: 1,
-            rmw: false,
-        }));
-        p.push(vs(Cmd::LocalSt {
-            pat: Pattern2D::lin(RDIAG_BASE + k, 1),
-            port: 2,
-            rmw: false,
-        }));
+        b.st(a.lin(at(n_i, k, k), 1), p.v0);
+        b.st(plan.lay.rdiag.lin(k, 1), p.rkk);
         if cols == 0 {
             // Last iteration: drain the unused inv output.
-            p.push(vs(Cmd::LocalSt {
-                pat: Pattern2D::lin(TMP_BASE + 1, 1),
-                port: 3,
-                rmw: false,
-            }));
+            b.st(tmp.lin(1, 1), p.inv);
             continue;
         }
         let inv_uses = (len * cols) as f64;
         if feats.fine_grain {
-            p.push(vs(Cmd::Xfer {
-                src_port: 3,
-                dst_port: 3,
-                dst: XferDst::Local,
-                n: 1,
-                reuse: Some(Reuse::uniform(inv_uses)),
-            }));
+            b.xfer_reuse(p.inv, p.dot_inv, 1, Reuse::uniform(inv_uses));
         } else {
-            p.push(vs(Cmd::LocalSt {
-                pat: Pattern2D::lin(TMP_BASE + 1, 1),
-                port: 3,
-                rmw: false,
-            }));
-            p.push(vs(Cmd::Barrier));
-            push_ld(
-                &mut p,
-                mask,
-                Pattern2D::lin(TMP_BASE + 1, 1),
-                3,
-                Some(Reuse::uniform(inv_uses)),
-                feats,
-                None,
-            );
+            b.st(tmp.lin(1, 1), p.inv);
+            b.barrier();
+            b.ld_reuse(tmp.lin(1, 1), p.dot_inv, Reuse::uniform(inv_uses));
         }
         // Trailing block patterns (rectangular within one iteration).
-        let block = Pattern2D::rect(at(n_i, k, k + 1), 1, len, n_i, cols);
-        let vpat = Pattern2D::rect(at(n_i, k, k), 1, len, 0, cols);
+        let block = a.rect(at(n_i, k, k + 1), 1, len, n_i, cols);
+        let vpat = a.rect(at(n_i, k, k), 1, len, 0, cols);
         // w dots over the trailing columns. The rectangular-only
         // decomposition must interleave the two streams per column —
         // back-to-back per-row commands head-of-line block the queue.
         if feats.inductive {
-            push_ld(&mut p, mask, block.clone(), 0, None, feats, Some(0));
-            push_ld(&mut p, mask, vpat.clone(), 1, None, feats, None);
+            b.ld_rmw(block.clone(), p.dot_a, 0);
+            b.ld(vpat.clone(), p.dot_v);
         } else {
             for j in 0..cols {
-                push_ld(
-                    &mut p,
-                    mask,
-                    Pattern2D::lin(at(n_i, k, k + 1 + j), len),
-                    0,
-                    None,
-                    feats,
-                    Some(0),
-                );
-                push_ld(
-                    &mut p,
-                    mask,
-                    Pattern2D::lin(at(n_i, k, k), len),
-                    1,
-                    None,
-                    feats,
-                    None,
-                );
+                b.ld_rmw(a.lin(at(n_i, k, k + 1 + j), len), p.dot_a, 0);
+                b.ld(a.lin(at(n_i, k, k), len), p.dot_v);
                 if !feats.fine_grain {
                     // Drain each w_j to memory as it is produced — the
                     // 16-deep output FIFO cannot hold a whole trailing
                     // block's worth of emissions at n=32.
-                    p.push(vs(Cmd::LocalSt {
-                        pat: Pattern2D::lin(TMP_BASE + 2 + j, 1),
-                        port: 0,
-                        rmw: false,
-                    }));
+                    b.st(tmp.lin(2 + j, 1), p.w_out);
                 }
             }
         }
         if feats.fine_grain {
             // w_j stream: one scalar per column, each reused len times.
-            p.push(vs(Cmd::Xfer {
-                src_port: 0,
-                dst_port: 8,
-                dst: XferDst::Local,
-                n: cols,
-                reuse: Some(Reuse::uniform(len as f64)),
-            }));
+            b.xfer_reuse(p.w_out, p.upd_w, cols, Reuse::uniform(len as f64));
             // In-place update of the trailing block.
-            push_st(&mut p, mask, block.clone(), 4, true, feats);
-            push_ld(&mut p, mask, block, 6, None, feats, Some(0));
-            push_ld(&mut p, mask, vpat, 7, None, feats, None);
+            b.st_rmw(block.clone(), p.a_upd);
+            b.ld_rmw(block, p.upd_a, 0);
+            b.ld(vpat, p.upd_v);
         } else {
             // w_j through memory. (The rectangular-only decomposition
             // already interleaved these stores with the loads above —
@@ -243,41 +251,20 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
             // and overflow the output FIFO otherwise.)
             if feats.inductive {
                 for j in 0..cols {
-                    p.push(vs(Cmd::LocalSt {
-                        pat: Pattern2D::lin(TMP_BASE + 2 + j, 1),
-                        port: 0,
-                        rmw: false,
-                    }));
+                    b.st(tmp.lin(2 + j, 1), p.w_out);
                 }
             }
-            p.push(vs(Cmd::Barrier));
+            b.barrier();
             for j in 0..cols {
-                push_ld(
-                    &mut p,
-                    mask,
-                    Pattern2D::lin(TMP_BASE + 2 + j, 1),
-                    8,
-                    Some(Reuse::uniform(len as f64)),
-                    feats,
-                    None,
-                );
-                let colp = Pattern2D::lin(at(n_i, k, k + 1 + j), len);
-                push_st(&mut p, mask, colp.clone(), 4, true, feats);
-                push_ld(&mut p, mask, colp, 6, None, feats, Some(0));
-                push_ld(
-                    &mut p,
-                    mask,
-                    Pattern2D::lin(at(n_i, k, k), len),
-                    7,
-                    None,
-                    feats,
-                    None,
-                );
+                b.ld_reuse(tmp.lin(2 + j, 1), p.upd_w, Reuse::uniform(len as f64));
+                let colp = a.lin(at(n_i, k, k + 1 + j), len);
+                b.st_rmw(colp.clone(), p.a_upd);
+                b.ld_rmw(colp, p.upd_a, 0);
+                b.ld(a.lin(at(n_i, k, k), len), p.upd_v);
             }
         }
     }
-    p.push(vs(Cmd::Wait));
-    Ok(p)
+    Ok(b.finish())
 }
 
 /// Scalar mirror of the exact simulated algorithm (same formulas and
@@ -322,12 +309,14 @@ pub fn instance(n: usize, seed: usize) -> Instance {
 
 pub fn load_lane(lane: &mut crate::sim::Lane, inst: &Instance) {
     let n = inst.a.rows;
+    let lay = layout(n).expect("qr layout fits the lane scratchpad");
     for j in 0..n {
         for i in 0..n {
-            lane.spad.write(at(n as i64, i as i64, j as i64), inst.a[(i, j)]);
+            lane.spad
+                .write(lay.a.addr(at(n as i64, i as i64, j as i64)), inst.a[(i, j)]);
         }
     }
-    lane.spad.write(ONE_ADDR, 1.0);
+    lane.spad.write(lay.one.addr(0), 1.0);
 }
 
 pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlError> {
@@ -337,11 +326,13 @@ pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
     };
     let mask = LaneMask::first_n(lanes);
     let prog = program(n, feats, mask)?;
+    let lay = layout(n)?;
     let mut m = machine(lanes);
     let insts: Vec<Instance> = (0..lanes).map(|l| instance(n, l)).collect();
     for (l, inst) in insts.iter().enumerate() {
         load_lane(&mut m.lanes[l], inst);
     }
+    let (a_region, rdiag_region) = (lay.a, lay.rdiag);
     let verify = Box::new(move |m: &Machine| {
         let mut max_err = 0.0f64;
         for (l, inst) in insts.iter().enumerate() {
@@ -350,7 +341,7 @@ pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
             // in-place Householder vectors below the diagonal.
             for j in 0..nn {
                 for i in 0..nn {
-                    let got = m.lanes[l].spad.read(at(nn, i, j));
+                    let got = m.lanes[l].spad.read(a_region.addr(at(nn, i, j)));
                     let want = inst.a_ref[(i as usize, j as usize)];
                     let err = (got - want).abs();
                     if err > 1e-8 {
@@ -362,7 +353,7 @@ pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
                 }
             }
             for k in 0..nn {
-                let got = m.lanes[l].spad.read(RDIAG_BASE + k);
+                let got = m.lanes[l].spad.read(rdiag_region.addr(k));
                 let err = (got - inst.rdiag_ref[k as usize]).abs();
                 if err > 1e-8 {
                     return Err(format!("lane {l} rdiag[{k}]"));
@@ -445,5 +436,14 @@ mod tests {
             .execute()
             .unwrap();
         assert_eq!(r.problems, 8);
+    }
+
+    #[test]
+    fn program_passes_the_vsc_check() {
+        for feats in [Features::ALL, Features::NONE] {
+            let prog = program(12, feats, LaneMask::one(0)).unwrap();
+            let rep = crate::vsc::check_program(&prog, &SimConfig::default());
+            assert!(rep.errors().is_empty(), "{feats:?}:\n{rep}");
+        }
     }
 }

@@ -11,93 +11,165 @@
 //!
 //! With all FGOP features the whole kernel is ~11 control commands
 //! (paper Fig 11); the ablations decompose streams per-row and/or
-//! round-trip the fine-grain values through the scratchpad.
+//! round-trip the fine-grain values through the scratchpad. Built on
+//! the typed [`crate::vsc`] layer: see [`Ports`] / [`Layout`].
 
 use std::sync::Arc;
 
 use super::{machine, Features, Goal, Prepared, WlError};
 use crate::compiler::Configured;
-use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op};
-use crate::isa::{
-    Cmd, ConstPattern, LaneMask, Pattern2D, Program, Reuse, VsCommand, XferDst,
-};
+use crate::dataflow::{Criticality, Op};
+use crate::isa::{ConstPattern, LaneMask, Program, Reuse};
+use crate::sim::{Machine, SimConfig};
 use crate::util::linalg::{cholesky, fwd_solve, Mat};
+use crate::vsc::{BuiltKernel, In, Kernel, Out, Region, SpadAlloc};
 
 /// Vector width of the critical update dataflow.
 const W: usize = 4;
 
-/// Scratchpad layout (per lane).
-const L_BASE: i64 = 0;
-const B_BASE: i64 = 1100;
-const X_BASE: i64 = 1200;
-/// Scratch region for the non-fine-grain x round-trip (disjoint from the
-/// hoisted X store so the memory interlock doesn't pin it).
-const XT_BASE: i64 = 1300;
+/// Typed port handles. The gated taps (`gate_up`/`b_first`,
+/// `gate_div`) exist only in the fine-grain variant; `x_tap` is the
+/// second x output in both variants (gated when fine-grain, a plain
+/// second binding otherwise — the per-iteration x store needs an output
+/// a store can drain).
+pub struct Ports {
+    /// update: b suffix (width W).
+    pub bvec: In,
+    /// update: L column elements (width W).
+    pub lcol: In,
+    /// update: x_j scalar (reused).
+    pub x: In,
+    /// update: gate for the loop-carried first-element tap.
+    pub gate_up: Option<In>,
+    /// div: b_j.
+    pub b_j: In,
+    /// div: l_jj.
+    pub l_jj: In,
+    /// div: emit gate for the x forward.
+    pub gate_div: Option<In>,
+    /// update out: updated b elements.
+    pub b_out: Out,
+    /// update out (gated): first updated element -> next div.
+    pub b_first: Option<Out>,
+    /// div out: x results (streamed to memory).
+    pub x_out: Out,
+    /// div out: x copy for the update region.
+    pub x_tap: Out,
+}
 
-// Port map. Input: 0=bvec, 1=lcol, 2=x (reused scalar), 3=update gate,
-// 4=b_j, 5=l_jj, 6=div gate. Output: 0=b' (store), 1=b'[first] (to div),
-// 2=x (store), 3=x (to update).
-fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
-    let mut u = DfgBuilder::new("update", Criticality::Critical);
-    let bv = u.in_port(0, W);
-    let lc = u.in_port(1, W);
-    let x = u.in_port(2, 1);
-    let prod = u.node(Op::Mul, &[lc, x]);
-    let bnew = u.node(Op::Sub, &[bv, prod]);
-    u.out(0, bnew, W);
-    if feats.fine_grain {
-        let g = u.in_port(3, W);
-        u.out_gated(1, bnew, 1, Some(g));
-    }
+/// Scratchpad regions (per lane).
+pub struct Layout {
+    /// L, column-major, `n*n` words.
+    pub l: Region,
+    /// b (updated in place).
+    pub b: Region,
+    /// x results.
+    pub x: Region,
+    /// Scratch for the non-fine-grain x round-trip (disjoint from the
+    /// hoisted X store so the memory interlock doesn't pin it).
+    pub xt: Region,
+}
 
-    let mut d = DfgBuilder::new("div", Criticality::NonCritical);
-    let bj = d.in_port(4, 1);
-    let ljj = d.in_port(5, 1);
-    let xv = d.node(Op::Div, &[bj, ljj]);
-    d.out(2, xv, 1);
-    if feats.fine_grain {
-        let g = d.in_port(6, 1);
-        d.out_gated(3, xv, 1, Some(g));
-    }
+/// A planned kernel instance (see [`plan`]).
+pub struct Plan {
+    built: BuiltKernel,
+    /// Compiled lane configuration.
+    pub cfg: Arc<Configured>,
+    /// Typed port handles.
+    pub ports: Ports,
+    /// Allocated scratchpad layout.
+    pub lay: Layout,
+}
 
-    let cfg = LaneConfig { name: "solver".into(), dfgs: vec![u.build(), d.build()] };
-    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+fn kernel(feats: Features) -> Result<(BuiltKernel, Ports), WlError> {
+    // The two variants differ in their output taps; they are distinct
+    // configurations (and distinct compile-cache entries).
+    let name = if feats.fine_grain { "solver" } else { "solver_nofg" };
+    let mut k = Kernel::new(name);
+
+    let mut u = k.dfg("update", Criticality::Critical);
+    let bv = u.input(W);
+    let lc = u.input(W);
+    let x = u.input(1);
+    let prod = u.node(Op::Mul, &[lc.wire(), x.wire()]);
+    let bnew = u.node(Op::Sub, &[bv.wire(), prod]);
+    let b_out = u.output(bnew, W);
+    let (gate_up, b_first) = if feats.fine_grain {
+        let g = u.input(W);
+        (Some(g), Some(u.output_gated(bnew, 1, g)))
+    } else {
+        (None, None)
+    };
+    u.done();
+
+    let mut d = k.dfg("div", Criticality::NonCritical);
+    let bj = d.input(1);
+    let ljj = d.input(1);
+    let xv = d.node(Op::Div, &[bj.wire(), ljj.wire()]);
+    let x_out = d.output(xv, 1);
+    let (gate_div, x_tap) = if feats.fine_grain {
+        let g = d.input(1);
+        (Some(g), d.output_gated(xv, 1, g))
+    } else {
+        (None, d.output(xv, 1))
+    };
+    d.done();
+
+    let built = k.build()?;
+    let ports = Ports {
+        bvec: bv,
+        lcol: lc,
+        x,
+        gate_up,
+        b_j: bj,
+        l_jj: ljj,
+        gate_div,
+        b_out,
+        b_first,
+        x_out,
+        x_tap,
+    };
+    Ok((built, ports))
+}
+
+/// Allocate the scratchpad layout for problem size `n`.
+pub fn layout(n: usize) -> Result<Layout, WlError> {
+    let mut al = SpadAlloc::lane(&SimConfig::default());
+    let l = al.region("solver.L", (n * n) as i64)?;
+    let b = al.region("solver.b", n as i64)?;
+    let x = al.region("solver.x", n as i64)?;
+    let xt = al.region("solver.x_tmp", n as i64)?;
+    Ok(Layout { l, b, x, xt })
+}
+
+/// Build the plan: kernel (cached compile) + ports + layout.
+pub fn plan(n: usize, feats: Features) -> Result<Plan, WlError> {
+    let (built, ports) = kernel(feats)?;
+    let lc = built.config.clone();
+    let cfg = super::cached_config(built.name(), feats, move || Ok(lc))?;
+    let lay = layout(n)?;
+    Ok(Plan { built, cfg, ports, lay })
 }
 
 /// Build the control program for one n-sized solve on `mask` lanes.
 pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlError> {
-    let cfg = config(feats)?;
+    let plan = plan(n, feats)?;
     let n_i = n as i64;
-    let vs = |c: Cmd| VsCommand::new(c, mask);
-    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
+    let p = &plan.ports;
+    let lay = &plan.lay;
+    let mut b = plan.built.program(plan.cfg.clone(), feats, mask);
 
     if feats.fine_grain {
         // Diagonal l_jj feeds div every iteration (stride n+1) and the
         // x results stream to memory as produced — both hoisted for the
         // whole kernel.
-        p.push(vs(Cmd::LocalLd {
-            pat: Pattern2D::strided(L_BASE, n_i + 1, n_i),
-            port: 5,
-            reuse: None,
-            masked: feats.masking,
-            rmw: None,
-        }));
-        p.push(vs(Cmd::LocalSt {
-            pat: Pattern2D::lin(X_BASE, n_i),
-            port: 2,
-            rmw: false,
-        }));
+        b.ld(lay.l.strided(0, n_i + 1, n_i), p.l_jj);
+        b.st(lay.x.lin(0, n_i), p.x_out);
         // b[0] seeds div; the rest arrive over the loop-carried XFER.
-        p.push(vs(Cmd::LocalLd {
-            pat: Pattern2D::lin(B_BASE, 1),
-            port: 4,
-            reuse: None,
-            masked: feats.masking,
-            rmw: None,
-        }));
+        b.ld(lay.b.lin(0, 1), p.b_j);
         // div emit gate: forward x for the first n-1 iterations only.
-        p.push(vs(Cmd::ConstSt {
-            pat: ConstPattern {
+        b.const_st(
+            ConstPattern {
                 val1: 1.0,
                 n1: (n - 1) as f64,
                 s1: 0.0,
@@ -106,10 +178,10 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
                 s2: 0.0,
                 n_j: 1,
             },
-            port: 6,
-        }));
-        let tri = |base: i64, c_j: i64| {
-            Pattern2D::inductive(base, 1, (n - 1) as f64, c_j, n_i - 1, -1.0)
+            p.gate_div.unwrap(),
+        );
+        let tri = |reg: &Region, c_j: i64| {
+            reg.inductive(1, 1, (n - 1) as f64, c_j, n_i - 1, -1.0)
         };
         if feats.inductive {
             // The whole triangular domain in single commands (Fig 11).
@@ -117,82 +189,36 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
             // load second — element-level ordering lets row j's load
             // trail row j-1's store (cross-iteration RAW) while the
             // store trails the load within a row (WAR).
-            p.push(vs(Cmd::LocalSt { pat: tri(B_BASE + 1, 1), port: 0, rmw: true }));
-            p.push(vs(Cmd::LocalLd {
-                pat: tri(B_BASE + 1, 1),
-                port: 0,
-                reuse: None,
-                masked: feats.masking,
-                rmw: Some(1),
-            }));
-            p.push(vs(Cmd::LocalLd {
-                pat: tri(L_BASE + 1, n_i + 1),
-                port: 1,
-                reuse: None,
-                masked: feats.masking,
-                rmw: None,
-            }));
-            p.push(vs(Cmd::ConstSt {
-                pat: ConstPattern::first_of_row(1.0, 0.0, (n - 1) as f64, n_i - 1, -1.0),
-                port: 3,
-            }));
+            b.st_rmw(tri(&lay.b, 1), p.b_out);
+            b.ld_rmw(tri(&lay.b, 1), p.bvec, 1);
+            b.ld(tri(&lay.l, n_i + 1), p.lcol);
+            b.gate_first_of_row(
+                p.gate_up.unwrap(),
+                1.0,
+                0.0,
+                (n - 1) as f64,
+                n_i - 1,
+                -1.0,
+            );
             // x_j consumed (n-1-j) times: inductive reuse stretch.
-            p.push(vs(Cmd::Xfer {
-                src_port: 3,
-                dst_port: 2,
-                dst: XferDst::Local,
-                n: n_i - 1,
-                reuse: Some(Reuse { n_r: (n - 1) as f64, s_r: -1.0 }),
-            }));
+            b.xfer_reuse(
+                p.x_tap,
+                p.x,
+                n_i - 1,
+                Reuse { n_r: (n - 1) as f64, s_r: -1.0 },
+            );
             // Loop-carried: first updated element of each row -> next div.
-            p.push(vs(Cmd::Xfer {
-                src_port: 1,
-                dst_port: 4,
-                dst: XferDst::Local,
-                n: n_i - 1,
-                reuse: None,
-            }));
+            b.xfer(p.b_first.unwrap(), p.b_j, n_i - 1);
         } else {
             // Rectangular-only ISA: decompose per row (Fig 11 right).
             for j in 0..n_i - 1 {
                 let len = n_i - 1 - j;
-                p.push(vs(Cmd::LocalLd {
-                    pat: Pattern2D::lin(B_BASE + 1 + j, len),
-                    port: 0,
-                    reuse: None,
-                    masked: feats.masking,
-                    rmw: None,
-                }));
-                p.push(vs(Cmd::LocalLd {
-                    pat: Pattern2D::lin(L_BASE + j * (n_i + 1) + 1, len),
-                    port: 1,
-                    reuse: None,
-                    masked: feats.masking,
-                    rmw: None,
-                }));
-                p.push(vs(Cmd::ConstSt {
-                    pat: ConstPattern::first_of_row(1.0, 0.0, len as f64, 1, 0.0),
-                    port: 3,
-                }));
-                p.push(vs(Cmd::Xfer {
-                    src_port: 3,
-                    dst_port: 2,
-                    dst: XferDst::Local,
-                    n: 1,
-                    reuse: Some(Reuse::uniform(len as f64)),
-                }));
-                p.push(vs(Cmd::Xfer {
-                    src_port: 1,
-                    dst_port: 4,
-                    dst: XferDst::Local,
-                    n: 1,
-                    reuse: None,
-                }));
-                p.push(vs(Cmd::LocalSt {
-                    pat: Pattern2D::lin(B_BASE + 1 + j, len),
-                    port: 0,
-                    rmw: true,
-                }));
+                b.ld(lay.b.lin(1 + j, len), p.bvec);
+                b.ld(lay.l.lin(j * (n_i + 1) + 1, len), p.lcol);
+                b.gate_first_of_row(p.gate_up.unwrap(), 1.0, 0.0, len as f64, 1, 0.0);
+                b.xfer_reuse(p.x_tap, p.x, 1, Reuse::uniform(len as f64));
+                b.xfer(p.b_first.unwrap(), p.b_j, 1);
+                b.st_rmw(lay.b.lin(1 + j, len), p.b_out);
             }
         }
     } else {
@@ -203,94 +229,26 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
             // Without fine-grain ordering hardware the program must
             // barrier at every region transition (waits for all SPAD
             // streams *and* pipeline output to drain to memory).
-            p.push(vs(Cmd::Barrier));
+            b.barrier();
             // b[j] (written by the previous row's update store).
-            p.push(vs(Cmd::LocalLd {
-                pat: Pattern2D::lin(B_BASE + j, 1),
-                port: 4,
-                reuse: None,
-                masked: feats.masking,
-                rmw: None,
-            }));
+            b.ld(lay.b.lin(j, 1), p.b_j);
             // l_jj per iteration (nothing is hoisted without FGOP).
-            p.push(vs(Cmd::LocalLd {
-                pat: Pattern2D::lin(L_BASE + j * (n_i + 1), 1),
-                port: 5,
-                reuse: None,
-                masked: feats.masking,
-                rmw: None,
-            }));
+            b.ld(lay.l.lin(j * (n_i + 1), 1), p.l_jj);
             // x[j] lands in memory: result copy + update-region copy.
-            p.push(vs(Cmd::LocalSt {
-                pat: Pattern2D::lin(X_BASE + j, 1),
-                port: 2,
-                rmw: false,
-            }));
-            p.push(vs(Cmd::LocalSt {
-                pat: Pattern2D::lin(XT_BASE + j, 1),
-                port: 3,
-                rmw: false,
-            }));
+            b.st(lay.x.lin(j, 1), p.x_out);
+            b.st(lay.xt.lin(j, 1), p.x_tap);
             if j == n_i - 1 {
                 break;
             }
             let len = n_i - 1 - j;
-            p.push(vs(Cmd::Barrier)); // x must land in memory first
-            p.push(vs(Cmd::LocalLd {
-                pat: Pattern2D::lin(XT_BASE + j, 1),
-                port: 2,
-                reuse: Some(Reuse::uniform(len as f64)),
-                masked: feats.masking,
-                rmw: None,
-            }));
-            p.push(vs(Cmd::LocalLd {
-                pat: Pattern2D::lin(B_BASE + 1 + j, len),
-                port: 0,
-                reuse: None,
-                masked: feats.masking,
-                rmw: None,
-            }));
-            p.push(vs(Cmd::LocalLd {
-                pat: Pattern2D::lin(L_BASE + j * (n_i + 1) + 1, len),
-                port: 1,
-                reuse: None,
-                masked: feats.masking,
-                rmw: None,
-            }));
-            p.push(vs(Cmd::LocalSt {
-                pat: Pattern2D::lin(B_BASE + 1 + j, len),
-                port: 0,
-                rmw: true,
-            }));
+            b.barrier(); // x must land in memory first
+            b.ld_reuse(lay.xt.lin(j, 1), p.x, Reuse::uniform(len as f64));
+            b.ld(lay.b.lin(1 + j, len), p.bvec);
+            b.ld(lay.l.lin(j * (n_i + 1) + 1, len), p.lcol);
+            b.st_rmw(lay.b.lin(1 + j, len), p.b_out);
         }
     }
-    p.push(vs(Cmd::Wait));
-    Ok(p)
-}
-
-/// Non-fine-grain variants need div's x on an *output* port that a store
-/// can drain per iteration; reuse port 3 for that (no gated tap exists).
-/// The div DFG built without fine_grain emits x only on out port 2; the
-/// per-j x store in `program` uses port 3 — so bind x there too.
-fn config_no_fg(feats: Features) -> Result<Arc<Configured>, WlError> {
-    let mut u = DfgBuilder::new("update", Criticality::Critical);
-    let bv = u.in_port(0, W);
-    let lc = u.in_port(1, W);
-    let x = u.in_port(2, 1);
-    let prod = u.node(Op::Mul, &[lc, x]);
-    let bnew = u.node(Op::Sub, &[bv, prod]);
-    u.out(0, bnew, W);
-
-    let mut d = DfgBuilder::new("div", Criticality::NonCritical);
-    let bj = d.in_port(4, 1);
-    let ljj = d.in_port(5, 1);
-    let xv = d.node(Op::Div, &[bj, ljj]);
-    d.out(2, xv, 1);
-    d.out(3, xv, 1);
-
-    let cfg =
-        LaneConfig { name: "solver_nofg".into(), dfgs: vec![u.build(), d.build()] };
-    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+    Ok(b.finish())
 }
 
 /// Problem data for one lane.
@@ -311,12 +269,13 @@ pub fn instance(n: usize, seed: usize) -> Instance {
 /// Load an instance into a lane's scratchpad (L column-major).
 pub fn load_lane(lane: &mut crate::sim::Lane, inst: &Instance) {
     let n = inst.l.rows;
+    let lay = layout(n).expect("solver layout fits the lane scratchpad");
     for j in 0..n {
         for i in 0..n {
-            lane.spad.write(L_BASE + (j * n + i) as i64, inst.l[(i, j)]);
+            lane.spad.write(lay.l.addr((j * n + i) as i64), inst.l[(i, j)]);
         }
     }
-    lane.spad.load_slice(B_BASE, &inst.b);
+    lane.spad.load_slice(lay.b.base(), &inst.b);
 }
 
 pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlError> {
@@ -325,21 +284,19 @@ pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
         Goal::Throughput => 8,
     };
     let mask = LaneMask::first_n(lanes);
-    let mut prog = program(n, feats, mask)?;
-    if !feats.fine_grain {
-        // Swap in the no-tap config (x additionally on out port 3).
-        prog[0] = VsCommand::new(Cmd::Configure(config_no_fg(feats)?), mask);
-    }
+    let prog = program(n, feats, mask)?;
+    let lay = layout(n)?;
     let mut m = machine(lanes);
     let insts: Vec<Instance> = (0..lanes).map(|l| instance(n, l)).collect();
     for (l, inst) in insts.iter().enumerate() {
         load_lane(&mut m.lanes[l], inst);
     }
+    let x_region = lay.x;
     let verify = Box::new(move |m: &Machine| {
         let mut max_err = 0.0f64;
         for (l, inst) in insts.iter().enumerate() {
             for (j, &want) in inst.x_ref.iter().enumerate() {
-                let got = m.lanes[l].spad.read(X_BASE + j as i64);
+                let got = m.lanes[l].spad.read(x_region.addr(j as i64));
                 let err = (got - want).abs();
                 if err > 1e-9 {
                     return Err(format!(
@@ -359,8 +316,6 @@ pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
         problems: lanes,
     })
 }
-
-use crate::sim::Machine;
 
 #[cfg(test)]
 mod tests {
@@ -440,5 +395,14 @@ mod tests {
             .execute()
             .unwrap();
         assert!(r.cycles < one.cycles * 3, "{} vs {}", r.cycles, one.cycles);
+    }
+
+    #[test]
+    fn program_passes_the_vsc_check() {
+        for feats in [Features::ALL, Features::NONE] {
+            let prog = program(12, feats, LaneMask::one(0)).unwrap();
+            let rep = crate::vsc::check_program(&prog, &SimConfig::default());
+            assert!(rep.errors().is_empty(), "{feats:?}:\n{rep}");
+        }
     }
 }

@@ -11,46 +11,96 @@
 //! stream to `rotate` with column-length reuse. Columns update in place
 //! (rmw pairs). After `SWEEPS` sweeps the column norms are the singular
 //! values; verification mirrors the exact pair order and formulas.
+//! Built on the typed [`crate::vsc`] layer: see [`Ports`] / [`Layout`].
 
 use std::sync::Arc;
 
-use super::{machine, push_ld, push_st, Features, Goal, Prepared, WlError};
+use super::{machine, Features, Goal, Prepared, WlError};
 use crate::compiler::Configured;
-use crate::dataflow::{Criticality, DfgBuilder, LaneConfig, Op, Operand};
-use crate::isa::{
-    Cmd, ConstPattern, LaneMask, Pattern2D, Program, Reuse, VsCommand, XferDst,
-};
-use crate::sim::Machine;
+use crate::dataflow::{Criticality, Op, Operand};
+use crate::isa::{LaneMask, Program, Reuse};
+use crate::sim::{Machine, SimConfig};
 use crate::util::linalg::Mat;
+use crate::vsc::{BuiltKernel, In, Kernel, Out, Region, SpadAlloc};
 
 const W: usize = 4;
 /// Jacobi sweeps (fixed schedule; enough for n<=32 convergence).
 pub const SWEEPS: usize = 6;
 
-const A_BASE: i64 = 0;
-const TMP_BASE: i64 = 1100;
+/// Typed port handles of the three dataflows.
+pub struct Ports {
+    /// dot: first column stream (width W).
+    pub dot_a: In,
+    /// dot: second column stream (width W).
+    pub dot_b: In,
+    /// dot: reduction emit gate.
+    pub dot_gate: In,
+    /// rot: app.
+    pub app: In,
+    /// rot: aqq.
+    pub aqq: In,
+    /// rot: apq.
+    pub apq: In,
+    /// rotate: a_p column (width W).
+    pub rot_ap: In,
+    /// rotate: a_q column (width W).
+    pub rot_aq: In,
+    /// rotate: c scalar (reused).
+    pub rot_c: In,
+    /// rotate: s scalar (reused).
+    pub rot_s: In,
+    /// dot out (gated): the three reductions per pair.
+    pub dot_out: Out,
+    /// rot out: c.
+    pub c_out: Out,
+    /// rot out: s.
+    pub s_out: Out,
+    /// rotate out: a_p'.
+    pub ap_out: Out,
+    /// rotate out: a_q'.
+    pub aq_out: Out,
+}
 
-// Ports. In: 0=dot.a(W), 1=dot.b(W), 2=dot gate(1), 3=rot.app(1),
-// 4=rot.aqq(1), 5=rot.apq(1), 6=rotate.ap(W), 7=rotate.aq(W),
-// 8=rotate.c(1), 9=rotate.s(1).
-// Out: 0=dot result, 1=c, 2=s, 3=a_p', 4=a_q'.
-fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
-    let mut d = DfgBuilder::new("dot", Criticality::Critical);
-    let a = d.in_port(0, W);
-    let b = d.in_port(1, W);
-    let gate = d.in_port(2, 1);
-    let prod = d.node(Op::Mul, &[a, b]);
-    let s = d.node(Op::AccReduce, &[prod, gate]);
-    d.out_gated(0, s, 1, Some(gate));
+/// Scratchpad regions (per lane).
+pub struct Layout {
+    /// A, column-major, `n*n` words (rotated in place).
+    pub a: Region,
+    /// Region hand-off scratch for the non-fine-grain ablation (5
+    /// words: app/aqq/apq/c/s).
+    pub tmp: Region,
+}
 
-    let mut r = DfgBuilder::new("rot", Criticality::NonCritical);
-    let app = r.in_port(3, 1);
-    let aqq = r.in_port(4, 1);
-    let apq = r.in_port(5, 1);
+/// A planned kernel instance (see [`plan`]).
+pub struct Plan {
+    built: BuiltKernel,
+    /// Compiled lane configuration.
+    pub cfg: Arc<Configured>,
+    /// Typed port handles.
+    pub ports: Ports,
+    /// Allocated scratchpad layout.
+    pub lay: Layout,
+}
+
+fn kernel(_feats: Features) -> Result<(BuiltKernel, Ports), WlError> {
+    let mut k = Kernel::new("svd");
+
+    let mut d = k.dfg("dot", Criticality::Critical);
+    let a = d.input(W);
+    let b = d.input(W);
+    let gate = d.input(1);
+    let prod = d.node(Op::Mul, &[a.wire(), b.wire()]);
+    let s = d.node(Op::AccReduce, &[prod, gate.wire()]);
+    let dot_out = d.output_gated(s, 1, gate);
+    d.done();
+
+    let mut r = k.dfg("rot", Criticality::NonCritical);
+    let app = r.input(1);
+    let aqq = r.input(1);
+    let apq = r.input(1);
     // tau = (aqq - app + tiny) / (2 apq): apq == 0 -> tau = +-inf -> t = 0.
-    let num = r.node(Op::Sub, &[aqq, app]);
+    let num = r.node(Op::Sub, &[aqq.wire(), app.wire()]);
     let numb = r.node(Op::Add, &[num, Operand::Const(1e-300)]);
-    let den = r.node(Op::Mul, &[Operand::Const(2.0), apq]);
+    let den = r.node(Op::Mul, &[Operand::Const(2.0), apq.wire()]);
     let tau = r.node(Op::Div, &[numb, den]);
     let ge = r.node(Op::CmpGe, &[tau, Operand::Const(0.0)]);
     let sg = r.node(Op::Select, &[ge, Operand::Const(1.0), Operand::Const(-1.0)]);
@@ -64,37 +114,70 @@ fn config(feats: Features) -> Result<Arc<Configured>, WlError> {
     let t2p1 = r.node(Op::Add, &[Operand::Const(1.0), t2]);
     let c = r.node(Op::Rsqrt, &[t2p1]);
     let s2 = r.node(Op::Mul, &[c, t]);
-    r.out(1, c, 1);
-    r.out(2, s2, 1);
+    let c_out = r.output(c, 1);
+    let s_out = r.output(s2, 1);
+    r.done();
 
     // Rotation as a complex multiply (c + i s)(ap + i aq) using the
     // Gauss 3-multiplication form — the naive 4-mult version exceeds
     // the fabric's 9 multiply tiles at width 4.
-    let mut ro = DfgBuilder::new("rotate", Criticality::Critical);
-    let ap = ro.in_port(6, W);
-    let aq = ro.in_port(7, W);
-    let cc = ro.in_port(8, 1);
-    let ss = ro.in_port(9, 1);
-    let apq_sum = ro.node(Op::Add, &[ap, aq]);
-    let smc = ro.node(Op::Sub, &[ss, cc]);
-    let cps = ro.node(Op::Add, &[cc, ss]);
-    let k1 = ro.node(Op::Mul, &[cc, apq_sum]);
-    let k2 = ro.node(Op::Mul, &[ap, smc]);
-    let k3 = ro.node(Op::Mul, &[aq, cps]);
+    let mut ro = k.dfg("rotate", Criticality::Critical);
+    let ap = ro.input(W);
+    let aq = ro.input(W);
+    let cc = ro.input(1);
+    let ss = ro.input(1);
+    let apq_sum = ro.node(Op::Add, &[ap.wire(), aq.wire()]);
+    let smc = ro.node(Op::Sub, &[ss.wire(), cc.wire()]);
+    let cps = ro.node(Op::Add, &[cc.wire(), ss.wire()]);
+    let k1 = ro.node(Op::Mul, &[cc.wire(), apq_sum]);
+    let k2 = ro.node(Op::Mul, &[ap.wire(), smc]);
+    let k3 = ro.node(Op::Mul, &[aq.wire(), cps]);
     let pn = ro.node(Op::Sub, &[k1, k3]);
     let qn = ro.node(Op::Add, &[k1, k2]);
-    ro.out(3, pn, W);
-    ro.out(4, qn, W);
+    let ap_out = ro.output(pn, W);
+    let aq_out = ro.output(qn, W);
+    ro.done();
 
-    let cfg = LaneConfig {
-        name: "svd".into(),
-        dfgs: vec![d.build(), r.build(), ro.build()],
+    let built = k.build()?;
+    let ports = Ports {
+        dot_a: a,
+        dot_b: b,
+        dot_gate: gate,
+        app,
+        aqq,
+        apq,
+        rot_ap: ap,
+        rot_aq: aq,
+        rot_c: cc,
+        rot_s: ss,
+        dot_out,
+        c_out,
+        s_out,
+        ap_out,
+        aq_out,
     };
-    super::cached_config(&cfg.name.clone(), feats, move || Ok(cfg))
+    Ok((built, ports))
+}
+
+/// Allocate the scratchpad layout for problem size `n`.
+pub fn layout(n: usize) -> Result<Layout, WlError> {
+    let mut al = SpadAlloc::lane(&SimConfig::default());
+    let a = al.region("svd.A", (n * n) as i64)?;
+    let tmp = al.region("svd.tmp", 5)?;
+    Ok(Layout { a, tmp })
+}
+
+/// Build the plan: kernel (cached compile) + ports + layout.
+pub fn plan(n: usize, feats: Features) -> Result<Plan, WlError> {
+    let (built, ports) = kernel(feats)?;
+    let lc = built.config.clone();
+    let cfg = super::cached_config(built.name(), feats, move || Ok(lc))?;
+    let lay = layout(n)?;
+    Ok(Plan { built, cfg, ports, lay })
 }
 
 fn at(n: i64, i: i64, j: i64) -> i64 {
-    A_BASE + j * n + i
+    j * n + i
 }
 
 pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlError> {
@@ -108,107 +191,56 @@ pub fn program_sweeps(
     feats: Features,
     mask: LaneMask,
 ) -> Result<Program, WlError> {
-    let cfg = config(feats)?;
+    let plan = plan(n, feats)?;
     let n_i = n as i64;
-    let vs = |c: Cmd| VsCommand::new(c, mask);
-    let mut p: Program = vec![vs(Cmd::Configure(cfg))];
-    let col = |j: i64| Pattern2D::lin(at(n_i, 0, j), n_i);
+    let p = &plan.ports;
+    let (a, tmp) = (&plan.lay.a, &plan.lay.tmp);
+    let mut b = plan.built.program(plan.cfg.clone(), feats, mask);
+    let col = |j: i64| a.lin(at(n_i, 0, j), n_i);
     let firings = (n_i + W as i64 - 1) / W as i64;
 
     for _sweep in 0..sweeps {
         for pi in 0..n_i - 1 {
             for qi in pi + 1..n_i {
-                p.push(vs(Cmd::Barrier));
+                b.barrier();
                 // Emit gate first (it must not queue behind blocked
                 // loads), then the three dots: (p,p), (q,q), (p,q).
-                p.push(vs(Cmd::ConstSt {
-                    pat: ConstPattern::last_of_row(1.0, 0.0, firings as f64, 3, 0.0),
-                    port: 2,
-                }));
+                b.gate_last_of_row(p.dot_gate, 1.0, 0.0, firings as f64, 3, 0.0);
                 for (x, y) in [(pi, pi), (qi, qi), (pi, qi)] {
-                    push_ld(&mut p, mask, col(x), 0, None, feats, None);
-                    push_ld(&mut p, mask, col(y), 1, None, feats, None);
+                    b.ld(col(x), p.dot_a);
+                    b.ld(col(y), p.dot_b);
                 }
                 if feats.fine_grain {
-                    for dst in [3usize, 4, 5] {
-                        p.push(vs(Cmd::Xfer {
-                            src_port: 0,
-                            dst_port: dst,
-                            dst: XferDst::Local,
-                            n: 1,
-                            reuse: None,
-                        }));
+                    for dst in [p.app, p.aqq, p.apq] {
+                        b.xfer(p.dot_out, dst, 1);
                     }
-                    for (src, dst) in [(1usize, 8usize), (2, 9)] {
-                        p.push(vs(Cmd::Xfer {
-                            src_port: src,
-                            dst_port: dst,
-                            dst: XferDst::Local,
-                            n: 1,
-                            reuse: Some(Reuse::uniform(n as f64)),
-                        }));
+                    for (src, dst) in [(p.c_out, p.rot_c), (p.s_out, p.rot_s)] {
+                        b.xfer_reuse(src, dst, 1, Reuse::uniform(n as f64));
                     }
                 } else {
                     // Region hand-offs through the scratchpad.
                     for k in 0..3i64 {
-                        p.push(vs(Cmd::LocalSt {
-                            pat: Pattern2D::lin(TMP_BASE + k, 1),
-                            port: 0,
-                            rmw: false,
-                        }));
+                        b.st(tmp.lin(k, 1), p.dot_out);
                     }
-                    p.push(vs(Cmd::Barrier));
-                    for (k, dst) in [(0i64, 3usize), (1, 4), (2, 5)] {
-                        push_ld(
-                            &mut p,
-                            mask,
-                            Pattern2D::lin(TMP_BASE + k, 1),
-                            dst,
-                            None,
-                            feats,
-                            None,
-                        );
+                    b.barrier();
+                    for (k, dst) in [(0i64, p.app), (1, p.aqq), (2, p.apq)] {
+                        b.ld(tmp.lin(k, 1), dst);
                     }
-                    p.push(vs(Cmd::LocalSt {
-                        pat: Pattern2D::lin(TMP_BASE + 3, 1),
-                        port: 1,
-                        rmw: false,
-                    }));
-                    p.push(vs(Cmd::LocalSt {
-                        pat: Pattern2D::lin(TMP_BASE + 4, 1),
-                        port: 2,
-                        rmw: false,
-                    }));
-                    p.push(vs(Cmd::Barrier));
-                    push_ld(
-                        &mut p,
-                        mask,
-                        Pattern2D::lin(TMP_BASE + 3, 1),
-                        8,
-                        Some(Reuse::uniform(n as f64)),
-                        feats,
-                        None,
-                    );
-                    push_ld(
-                        &mut p,
-                        mask,
-                        Pattern2D::lin(TMP_BASE + 4, 1),
-                        9,
-                        Some(Reuse::uniform(n as f64)),
-                        feats,
-                        None,
-                    );
+                    b.st(tmp.lin(3, 1), p.c_out);
+                    b.st(tmp.lin(4, 1), p.s_out);
+                    b.barrier();
+                    b.ld_reuse(tmp.lin(3, 1), p.rot_c, Reuse::uniform(n as f64));
+                    b.ld_reuse(tmp.lin(4, 1), p.rot_s, Reuse::uniform(n as f64));
                 }
                 // In-place rotation of both columns.
-                push_st(&mut p, mask, col(pi), 3, true, feats);
-                push_st(&mut p, mask, col(qi), 4, true, feats);
-                push_ld(&mut p, mask, col(pi), 6, None, feats, Some(0));
-                push_ld(&mut p, mask, col(qi), 7, None, feats, Some(0));
+                b.st_rmw(col(pi), p.ap_out);
+                b.st_rmw(col(qi), p.aq_out);
+                b.ld_rmw(col(pi), p.rot_ap, 0);
+                b.ld_rmw(col(qi), p.rot_aq, 0);
             }
         }
     }
-    p.push(vs(Cmd::Wait));
-    Ok(p)
+    Ok(b.finish())
 }
 
 /// Scalar mirror with the exact same pair order and formulas.
@@ -256,9 +288,11 @@ pub fn instance(n: usize, seed: usize) -> Instance {
 
 pub fn load_lane(lane: &mut crate::sim::Lane, inst: &Instance) {
     let n = inst.a.rows;
+    let lay = layout(n).expect("svd layout fits the lane scratchpad");
     for j in 0..n {
         for i in 0..n {
-            lane.spad.write(at(n as i64, i as i64, j as i64), inst.a[(i, j)]);
+            lane.spad
+                .write(lay.a.addr(at(n as i64, i as i64, j as i64)), inst.a[(i, j)]);
         }
     }
 }
@@ -270,6 +304,7 @@ pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
     };
     let mask = LaneMask::first_n(lanes);
     let prog = program(n, feats, mask)?;
+    let lay = layout(n)?;
     let mut m = machine(lanes);
     let insts: Vec<Instance> = (0..lanes).map(|l| instance(n, l)).collect();
     for (l, inst) in insts.iter().enumerate() {
@@ -281,13 +316,18 @@ pub fn prepare(n: usize, feats: Features, goal: Goal) -> Result<Prepared, WlErro
     // simulation may legitimately diverge. Verify the invariants
     // instead: singular values (sorted column norms) and pairwise
     // column orthogonality.
+    let a_region = lay.a;
     let verify = Box::new(move |m: &Machine| {
         let mut max_err = 0.0f64;
         for (l, inst) in insts.iter().enumerate() {
             let nn = inst.a.rows;
             let col = |j: usize| -> Vec<f64> {
                 (0..nn)
-                    .map(|i| m.lanes[l].spad.read(at(nn as i64, i as i64, j as i64)))
+                    .map(|i| {
+                        m.lanes[l]
+                            .spad
+                            .read(a_region.addr(at(nn as i64, i as i64, j as i64)))
+                    })
                     .collect()
             };
             let mut got: Vec<f64> = (0..nn)
@@ -371,6 +411,15 @@ mod tests {
                 .unwrap()
                 .execute()
                 .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn program_passes_the_vsc_check() {
+        for feats in [Features::ALL, Features::NONE] {
+            let prog = program_sweeps(8, 1, feats, LaneMask::one(0)).unwrap();
+            let rep = crate::vsc::check_program(&prog, &SimConfig::default());
+            assert!(rep.errors().is_empty(), "{feats:?}:\n{rep}");
         }
     }
 }

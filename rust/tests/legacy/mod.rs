@@ -1,0 +1,930 @@
+//! Frozen copies of the pre-`vsc` control-program builders: the exact
+//! raw-command construction logic the workloads shipped with before the
+//! typed-builder port, parameterized by the port numbers and scratchpad
+//! bases the new plans assign (resources are degrees of freedom; the
+//! *lowering* is what the equivalence property test pins down).
+//!
+//! Do not "modernize" this module — its value is being the old code.
+
+use revel::isa::{
+    decompose_rows, Cmd, ConstPattern, LaneMask, Pattern2D, Program, Reuse,
+    VsCommand, XferDst,
+};
+use revel::util::ceil_div;
+use revel::workloads::{self, Features};
+
+/// The old `workloads::push_ld` (verbatim).
+fn push_ld(
+    p: &mut Program,
+    mask: LaneMask,
+    pat: Pattern2D,
+    port: usize,
+    reuse: Option<Reuse>,
+    feats: Features,
+    rmw: Option<u8>,
+) {
+    if feats.inductive || pat.n_j <= 1 {
+        p.push(VsCommand::new(
+            Cmd::LocalLd { pat, port, reuse, masked: feats.masking, rmw },
+            mask,
+        ));
+    } else {
+        for row in decompose_rows(&pat) {
+            p.push(VsCommand::new(
+                Cmd::LocalLd { pat: row, port, reuse, masked: feats.masking, rmw },
+                mask,
+            ));
+        }
+    }
+}
+
+/// The old `workloads::push_st` (verbatim).
+fn push_st(
+    p: &mut Program,
+    mask: LaneMask,
+    pat: Pattern2D,
+    port: usize,
+    rmw: bool,
+    feats: Features,
+) {
+    if feats.inductive || pat.n_j <= 1 {
+        p.push(VsCommand::new(Cmd::LocalSt { pat, port, rmw }, mask));
+    } else {
+        for row in decompose_rows(&pat) {
+            p.push(VsCommand::new(Cmd::LocalSt { pat: row, port, rmw }, mask));
+        }
+    }
+}
+
+// ---- Cholesky ---------------------------------------------------------
+
+pub fn cholesky(n: usize, feats: Features, mask: LaneMask) -> Program {
+    const W: usize = 8;
+    let plan = workloads::cholesky::plan(n, feats).expect("plan");
+    let po = &plan.ports;
+    let (i_acol, i_inva, i_a, i_ci, i_akk, i_cj) = (
+        po.acol.id(),
+        po.inva.id(),
+        po.a.id(),
+        po.ci.id(),
+        po.akk.id(),
+        po.cj.id(),
+    );
+    let (o_lcol, o_inva, o_aupd) = (po.lcol.id(), po.inva_out.id(), po.a_upd.id());
+    let g_col = po.gate_col.map(|g| g.id());
+    let g_akk = po.gate_akk.map(|g| g.id());
+    let o_colf = po.col_fwd.map(|o| o.id());
+    let o_akkf = po.akk_fwd.map(|o| o.id());
+    let a_base = plan.lay.a.base();
+    let tmp_base = plan.lay.tmp.base();
+
+    let n_i = n as i64;
+    let at = |i: i64, j: i64| a_base + j * n_i + i;
+    let trailing = |k: i64| {
+        Pattern2D::inductive(
+            at(k + 1, k + 1),
+            1,
+            (n_i - k - 1) as f64,
+            n_i + 1,
+            n_i - k - 1,
+            -1.0,
+        )
+    };
+    let cj_pat = |k: i64| {
+        Pattern2D::inductive(at(k + 1, k), 1, (n_i - k - 1) as f64, 1, n_i - k - 1, -1.0)
+    };
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let push_gates = |p: &mut Program, k: i64| {
+        let first = n_i - k - 1;
+        p.push(vs(Cmd::ConstSt {
+            pat: ConstPattern {
+                val1: 1.0,
+                n1: first as f64,
+                s1: 0.0,
+                val2: 0.0,
+                n2: 0.0,
+                s2: 0.0,
+                n_j: 1,
+            },
+            port: g_col.unwrap(),
+        }));
+        p.push(vs(Cmd::ConstSt {
+            pat: ConstPattern::first_of_row(1.0, 0.0, first as f64, 1, 0.0),
+            port: g_akk.unwrap(),
+        }));
+        if first > 1 {
+            let zeros = ConstPattern {
+                val1: 0.0,
+                n1: (first - 1) as f64,
+                s1: -1.0,
+                val2: 0.0,
+                n2: 0.0,
+                s2: 0.0,
+                n_j: first - 1,
+            };
+            p.push(vs(Cmd::ConstSt { pat: zeros.clone(), port: g_col.unwrap() }));
+            p.push(vs(Cmd::ConstSt { pat: zeros, port: g_akk.unwrap() }));
+        }
+    };
+
+    let mut p: Program = vec![vs(Cmd::Configure(plan.cfg.clone()))];
+    if feats.fine_grain {
+        push_ld(&mut p, mask, Pattern2D::lin(at(0, 0), 1), i_akk, None, feats, None);
+        push_ld(&mut p, mask, Pattern2D::lin(at(0, 0), n_i), i_acol, None, feats, None);
+    }
+    for k in 0..n_i {
+        let len = n_i - k;
+        if feats.fine_grain {
+            p.push(vs(Cmd::Xfer {
+                src_port: o_inva,
+                dst_port: i_inva,
+                dst: XferDst::Local,
+                n: 1,
+                reuse: Some(Reuse::uniform(len as f64)),
+            }));
+        } else {
+            p.push(vs(Cmd::Barrier));
+            push_ld(&mut p, mask, Pattern2D::lin(at(k, k), 1), i_akk, None, feats, None);
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(tmp_base + k, 1),
+                port: o_inva,
+                rmw: false,
+            }));
+            p.push(vs(Cmd::Barrier));
+            push_ld(
+                &mut p,
+                mask,
+                Pattern2D::lin(tmp_base + k, 1),
+                i_inva,
+                Some(Reuse::uniform(len as f64)),
+                feats,
+                None,
+            );
+            push_ld(&mut p, mask, Pattern2D::lin(at(k, k), len), i_acol, None, feats, None);
+        }
+        push_st(&mut p, mask, Pattern2D::lin(at(k, k), len), o_lcol, false, feats);
+
+        if k < n_i - 1 {
+            p.push(vs(Cmd::Barrier));
+            if feats.inductive {
+                push_st(&mut p, mask, trailing(k), o_aupd, true, feats);
+                push_ld(&mut p, mask, trailing(k), i_a, None, feats, Some(0));
+                push_ld(
+                    &mut p,
+                    mask,
+                    Pattern2D::lin(at(k + 1, k), n_i - k - 1),
+                    i_ci,
+                    Some(Reuse { n_r: (n_i - k - 1) as f64, s_r: -1.0 }),
+                    feats,
+                    None,
+                );
+                push_ld(&mut p, mask, cj_pat(k), i_cj, None, feats, None);
+            } else {
+                for r in 0..n_i - k - 1 {
+                    let col = k + 1 + r;
+                    let len = n_i - col;
+                    push_ld(
+                        &mut p,
+                        mask,
+                        Pattern2D::lin(at(col, k), 1),
+                        i_ci,
+                        Some(Reuse::uniform(len as f64)),
+                        feats,
+                        None,
+                    );
+                    push_ld(&mut p, mask, Pattern2D::lin(at(col, col), len), i_a, None, feats, None);
+                    push_ld(&mut p, mask, Pattern2D::lin(at(col, k), len), i_cj, None, feats, None);
+                    push_st(&mut p, mask, Pattern2D::lin(at(col, col), len), o_aupd, true, feats);
+                    if feats.fine_grain {
+                        let g = if r == 0 { 1.0 } else { 0.0 };
+                        p.push(vs(Cmd::ConstSt {
+                            pat: ConstPattern {
+                                val1: g,
+                                n1: len as f64,
+                                s1: 0.0,
+                                val2: 0.0,
+                                n2: 0.0,
+                                s2: 0.0,
+                                n_j: 1,
+                            },
+                            port: g_col.unwrap(),
+                        }));
+                        p.push(vs(Cmd::ConstSt {
+                            pat: ConstPattern::first_of_row(g, 0.0, len as f64, 1, 0.0),
+                            port: g_akk.unwrap(),
+                        }));
+                    }
+                }
+            }
+            if feats.fine_grain {
+                if feats.inductive {
+                    push_gates(&mut p, k);
+                }
+                p.push(vs(Cmd::Xfer {
+                    src_port: o_colf.unwrap(),
+                    dst_port: i_acol,
+                    dst: XferDst::Local,
+                    n: ceil_div((n_i - k - 1) as usize, W) as i64,
+                    reuse: None,
+                }));
+                p.push(vs(Cmd::Xfer {
+                    src_port: o_akkf.unwrap(),
+                    dst_port: i_akk,
+                    dst: XferDst::Local,
+                    n: 1,
+                    reuse: None,
+                }));
+            }
+        }
+    }
+    p.push(vs(Cmd::Wait));
+    p
+}
+
+// ---- Solver -----------------------------------------------------------
+
+pub fn solver(n: usize, feats: Features, mask: LaneMask) -> Program {
+    let plan = workloads::solver::plan(n, feats).expect("plan");
+    let po = &plan.ports;
+    let (i_bv, i_lc, i_x, i_bj, i_ljj) =
+        (po.bvec.id(), po.lcol.id(), po.x.id(), po.b_j.id(), po.l_jj.id());
+    let (o_b, o_x, o_xt) = (po.b_out.id(), po.x_out.id(), po.x_tap.id());
+    let l_base = plan.lay.l.base();
+    let b_base = plan.lay.b.base();
+    let x_base = plan.lay.x.base();
+    let xt_base = plan.lay.xt.base();
+
+    let n_i = n as i64;
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let mut p: Program = vec![vs(Cmd::Configure(plan.cfg.clone()))];
+
+    if feats.fine_grain {
+        let i_gu = po.gate_up.unwrap().id();
+        let i_gd = po.gate_div.unwrap().id();
+        let o_bf = po.b_first.unwrap().id();
+        p.push(vs(Cmd::LocalLd {
+            pat: Pattern2D::strided(l_base, n_i + 1, n_i),
+            port: i_ljj,
+            reuse: None,
+            masked: feats.masking,
+            rmw: None,
+        }));
+        p.push(vs(Cmd::LocalSt {
+            pat: Pattern2D::lin(x_base, n_i),
+            port: o_x,
+            rmw: false,
+        }));
+        p.push(vs(Cmd::LocalLd {
+            pat: Pattern2D::lin(b_base, 1),
+            port: i_bj,
+            reuse: None,
+            masked: feats.masking,
+            rmw: None,
+        }));
+        p.push(vs(Cmd::ConstSt {
+            pat: ConstPattern {
+                val1: 1.0,
+                n1: (n - 1) as f64,
+                s1: 0.0,
+                val2: 0.0,
+                n2: 1.0,
+                s2: 0.0,
+                n_j: 1,
+            },
+            port: i_gd,
+        }));
+        let tri = |base: i64, c_j: i64| {
+            Pattern2D::inductive(base, 1, (n - 1) as f64, c_j, n_i - 1, -1.0)
+        };
+        if feats.inductive {
+            p.push(vs(Cmd::LocalSt { pat: tri(b_base + 1, 1), port: o_b, rmw: true }));
+            p.push(vs(Cmd::LocalLd {
+                pat: tri(b_base + 1, 1),
+                port: i_bv,
+                reuse: None,
+                masked: feats.masking,
+                rmw: Some(1),
+            }));
+            p.push(vs(Cmd::LocalLd {
+                pat: tri(l_base + 1, n_i + 1),
+                port: i_lc,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            }));
+            p.push(vs(Cmd::ConstSt {
+                pat: ConstPattern::first_of_row(1.0, 0.0, (n - 1) as f64, n_i - 1, -1.0),
+                port: i_gu,
+            }));
+            p.push(vs(Cmd::Xfer {
+                src_port: o_xt,
+                dst_port: i_x,
+                dst: XferDst::Local,
+                n: n_i - 1,
+                reuse: Some(Reuse { n_r: (n - 1) as f64, s_r: -1.0 }),
+            }));
+            p.push(vs(Cmd::Xfer {
+                src_port: o_bf,
+                dst_port: i_bj,
+                dst: XferDst::Local,
+                n: n_i - 1,
+                reuse: None,
+            }));
+        } else {
+            for j in 0..n_i - 1 {
+                let len = n_i - 1 - j;
+                p.push(vs(Cmd::LocalLd {
+                    pat: Pattern2D::lin(b_base + 1 + j, len),
+                    port: i_bv,
+                    reuse: None,
+                    masked: feats.masking,
+                    rmw: None,
+                }));
+                p.push(vs(Cmd::LocalLd {
+                    pat: Pattern2D::lin(l_base + j * (n_i + 1) + 1, len),
+                    port: i_lc,
+                    reuse: None,
+                    masked: feats.masking,
+                    rmw: None,
+                }));
+                p.push(vs(Cmd::ConstSt {
+                    pat: ConstPattern::first_of_row(1.0, 0.0, len as f64, 1, 0.0),
+                    port: i_gu,
+                }));
+                p.push(vs(Cmd::Xfer {
+                    src_port: o_xt,
+                    dst_port: i_x,
+                    dst: XferDst::Local,
+                    n: 1,
+                    reuse: Some(Reuse::uniform(len as f64)),
+                }));
+                p.push(vs(Cmd::Xfer {
+                    src_port: o_bf,
+                    dst_port: i_bj,
+                    dst: XferDst::Local,
+                    n: 1,
+                    reuse: None,
+                }));
+                p.push(vs(Cmd::LocalSt {
+                    pat: Pattern2D::lin(b_base + 1 + j, len),
+                    port: o_b,
+                    rmw: true,
+                }));
+            }
+        }
+    } else {
+        for j in 0..n_i {
+            p.push(vs(Cmd::Barrier));
+            p.push(vs(Cmd::LocalLd {
+                pat: Pattern2D::lin(b_base + j, 1),
+                port: i_bj,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            }));
+            p.push(vs(Cmd::LocalLd {
+                pat: Pattern2D::lin(l_base + j * (n_i + 1), 1),
+                port: i_ljj,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            }));
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(x_base + j, 1),
+                port: o_x,
+                rmw: false,
+            }));
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(xt_base + j, 1),
+                port: o_xt,
+                rmw: false,
+            }));
+            if j == n_i - 1 {
+                break;
+            }
+            let len = n_i - 1 - j;
+            p.push(vs(Cmd::Barrier));
+            p.push(vs(Cmd::LocalLd {
+                pat: Pattern2D::lin(xt_base + j, 1),
+                port: i_x,
+                reuse: Some(Reuse::uniform(len as f64)),
+                masked: feats.masking,
+                rmw: None,
+            }));
+            p.push(vs(Cmd::LocalLd {
+                pat: Pattern2D::lin(b_base + 1 + j, len),
+                port: i_bv,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            }));
+            p.push(vs(Cmd::LocalLd {
+                pat: Pattern2D::lin(l_base + j * (n_i + 1) + 1, len),
+                port: i_lc,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            }));
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(b_base + 1 + j, len),
+                port: o_b,
+                rmw: true,
+            }));
+        }
+    }
+    p.push(vs(Cmd::Wait));
+    p
+}
+
+// ---- QR ---------------------------------------------------------------
+
+pub fn qr(n: usize, feats: Features, mask: LaneMask) -> Program {
+    const W: usize = 4;
+    let plan = workloads::qr::plan(n, feats).expect("plan");
+    let po = &plan.ports;
+    let (i_a, i_v, i_g, i_inv, i_sig, i_akk, i_ua, i_uv, i_uw) = (
+        po.dot_a.id(),
+        po.dot_v.id(),
+        po.dot_gate.id(),
+        po.dot_inv.id(),
+        po.sigma.id(),
+        po.akk.id(),
+        po.upd_a.id(),
+        po.upd_v.id(),
+        po.upd_w.id(),
+    );
+    let (o_w, o_v0, o_rkk, o_inv, o_upd) =
+        (po.w_out.id(), po.v0.id(), po.rkk.id(), po.inv.id(), po.a_upd.id());
+    let a_base = plan.lay.a.base();
+    let rdiag_base = plan.lay.rdiag.base();
+    let one_addr = plan.lay.one.base();
+    let tmp_base = plan.lay.tmp.base();
+
+    let n_i = n as i64;
+    let at = |i: i64, j: i64| a_base + j * n_i + i;
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let mut p: Program = vec![vs(Cmd::Configure(plan.cfg.clone()))];
+
+    for k in 0..n_i {
+        let len = n_i - k;
+        let cols = n_i - k - 1;
+        p.push(vs(Cmd::Barrier));
+        push_ld(&mut p, mask, Pattern2D::lin(at(k, k), 1), i_akk, None, feats, None);
+        push_ld(&mut p, mask, Pattern2D::lin(at(k, k), len), i_a, None, feats, None);
+        push_ld(&mut p, mask, Pattern2D::lin(at(k, k), len), i_v, None, feats, None);
+        push_ld(
+            &mut p,
+            mask,
+            Pattern2D::lin(one_addr, 1),
+            i_inv,
+            Some(Reuse::uniform(len as f64)),
+            feats,
+            None,
+        );
+        let firings = (len + W as i64 - 1) / W as i64;
+        p.push(vs(Cmd::ConstSt {
+            pat: ConstPattern::last_of_row(1.0, 0.0, firings as f64, cols + 1, 0.0),
+            port: i_g,
+        }));
+        if feats.fine_grain {
+            p.push(vs(Cmd::Xfer {
+                src_port: o_w,
+                dst_port: i_sig,
+                dst: XferDst::Local,
+                n: 1,
+                reuse: None,
+            }));
+        } else {
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(tmp_base, 1),
+                port: o_w,
+                rmw: false,
+            }));
+            p.push(vs(Cmd::Barrier));
+            push_ld(&mut p, mask, Pattern2D::lin(tmp_base, 1), i_sig, None, feats, None);
+        }
+        p.push(vs(Cmd::LocalSt {
+            pat: Pattern2D::lin(at(k, k), 1),
+            port: o_v0,
+            rmw: false,
+        }));
+        p.push(vs(Cmd::LocalSt {
+            pat: Pattern2D::lin(rdiag_base + k, 1),
+            port: o_rkk,
+            rmw: false,
+        }));
+        if cols == 0 {
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(tmp_base + 1, 1),
+                port: o_inv,
+                rmw: false,
+            }));
+            continue;
+        }
+        let inv_uses = (len * cols) as f64;
+        if feats.fine_grain {
+            p.push(vs(Cmd::Xfer {
+                src_port: o_inv,
+                dst_port: i_inv,
+                dst: XferDst::Local,
+                n: 1,
+                reuse: Some(Reuse::uniform(inv_uses)),
+            }));
+        } else {
+            p.push(vs(Cmd::LocalSt {
+                pat: Pattern2D::lin(tmp_base + 1, 1),
+                port: o_inv,
+                rmw: false,
+            }));
+            p.push(vs(Cmd::Barrier));
+            push_ld(
+                &mut p,
+                mask,
+                Pattern2D::lin(tmp_base + 1, 1),
+                i_inv,
+                Some(Reuse::uniform(inv_uses)),
+                feats,
+                None,
+            );
+        }
+        let block = Pattern2D::rect(at(k, k + 1), 1, len, n_i, cols);
+        let vpat = Pattern2D::rect(at(k, k), 1, len, 0, cols);
+        if feats.inductive {
+            push_ld(&mut p, mask, block.clone(), i_a, None, feats, Some(0));
+            push_ld(&mut p, mask, vpat.clone(), i_v, None, feats, None);
+        } else {
+            for j in 0..cols {
+                push_ld(
+                    &mut p,
+                    mask,
+                    Pattern2D::lin(at(k, k + 1 + j), len),
+                    i_a,
+                    None,
+                    feats,
+                    Some(0),
+                );
+                push_ld(&mut p, mask, Pattern2D::lin(at(k, k), len), i_v, None, feats, None);
+                if !feats.fine_grain {
+                    p.push(vs(Cmd::LocalSt {
+                        pat: Pattern2D::lin(tmp_base + 2 + j, 1),
+                        port: o_w,
+                        rmw: false,
+                    }));
+                }
+            }
+        }
+        if feats.fine_grain {
+            p.push(vs(Cmd::Xfer {
+                src_port: o_w,
+                dst_port: i_uw,
+                dst: XferDst::Local,
+                n: cols,
+                reuse: Some(Reuse::uniform(len as f64)),
+            }));
+            push_st(&mut p, mask, block.clone(), o_upd, true, feats);
+            push_ld(&mut p, mask, block, i_ua, None, feats, Some(0));
+            push_ld(&mut p, mask, vpat, i_uv, None, feats, None);
+        } else {
+            if feats.inductive {
+                for j in 0..cols {
+                    p.push(vs(Cmd::LocalSt {
+                        pat: Pattern2D::lin(tmp_base + 2 + j, 1),
+                        port: o_w,
+                        rmw: false,
+                    }));
+                }
+            }
+            p.push(vs(Cmd::Barrier));
+            for j in 0..cols {
+                push_ld(
+                    &mut p,
+                    mask,
+                    Pattern2D::lin(tmp_base + 2 + j, 1),
+                    i_uw,
+                    Some(Reuse::uniform(len as f64)),
+                    feats,
+                    None,
+                );
+                let colp = Pattern2D::lin(at(k, k + 1 + j), len);
+                push_st(&mut p, mask, colp.clone(), o_upd, true, feats);
+                push_ld(&mut p, mask, colp, i_ua, None, feats, Some(0));
+                push_ld(&mut p, mask, Pattern2D::lin(at(k, k), len), i_uv, None, feats, None);
+            }
+        }
+    }
+    p.push(vs(Cmd::Wait));
+    p
+}
+
+// ---- SVD --------------------------------------------------------------
+
+pub fn svd(n: usize, sweeps: usize, feats: Features, mask: LaneMask) -> Program {
+    const W: usize = 4;
+    let plan = workloads::svd::plan(n, feats).expect("plan");
+    let po = &plan.ports;
+    let (i_a, i_b, i_g) = (po.dot_a.id(), po.dot_b.id(), po.dot_gate.id());
+    let (i_app, i_aqq, i_apq) = (po.app.id(), po.aqq.id(), po.apq.id());
+    let (i_ap, i_aq, i_c, i_s) =
+        (po.rot_ap.id(), po.rot_aq.id(), po.rot_c.id(), po.rot_s.id());
+    let (o_dot, o_c, o_s, o_ap, o_aq) = (
+        po.dot_out.id(),
+        po.c_out.id(),
+        po.s_out.id(),
+        po.ap_out.id(),
+        po.aq_out.id(),
+    );
+    let a_base = plan.lay.a.base();
+    let tmp_base = plan.lay.tmp.base();
+
+    let n_i = n as i64;
+    let at = |i: i64, j: i64| a_base + j * n_i + i;
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let mut p: Program = vec![vs(Cmd::Configure(plan.cfg.clone()))];
+    let col = |j: i64| Pattern2D::lin(at(0, j), n_i);
+    let firings = (n_i + W as i64 - 1) / W as i64;
+
+    for _sweep in 0..sweeps {
+        for pi in 0..n_i - 1 {
+            for qi in pi + 1..n_i {
+                p.push(vs(Cmd::Barrier));
+                p.push(vs(Cmd::ConstSt {
+                    pat: ConstPattern::last_of_row(1.0, 0.0, firings as f64, 3, 0.0),
+                    port: i_g,
+                }));
+                for (x, y) in [(pi, pi), (qi, qi), (pi, qi)] {
+                    push_ld(&mut p, mask, col(x), i_a, None, feats, None);
+                    push_ld(&mut p, mask, col(y), i_b, None, feats, None);
+                }
+                if feats.fine_grain {
+                    for dst in [i_app, i_aqq, i_apq] {
+                        p.push(vs(Cmd::Xfer {
+                            src_port: o_dot,
+                            dst_port: dst,
+                            dst: XferDst::Local,
+                            n: 1,
+                            reuse: None,
+                        }));
+                    }
+                    for (src, dst) in [(o_c, i_c), (o_s, i_s)] {
+                        p.push(vs(Cmd::Xfer {
+                            src_port: src,
+                            dst_port: dst,
+                            dst: XferDst::Local,
+                            n: 1,
+                            reuse: Some(Reuse::uniform(n as f64)),
+                        }));
+                    }
+                } else {
+                    for k in 0..3i64 {
+                        p.push(vs(Cmd::LocalSt {
+                            pat: Pattern2D::lin(tmp_base + k, 1),
+                            port: o_dot,
+                            rmw: false,
+                        }));
+                    }
+                    p.push(vs(Cmd::Barrier));
+                    for (k, dst) in [(0i64, i_app), (1, i_aqq), (2, i_apq)] {
+                        push_ld(
+                            &mut p,
+                            mask,
+                            Pattern2D::lin(tmp_base + k, 1),
+                            dst,
+                            None,
+                            feats,
+                            None,
+                        );
+                    }
+                    p.push(vs(Cmd::LocalSt {
+                        pat: Pattern2D::lin(tmp_base + 3, 1),
+                        port: o_c,
+                        rmw: false,
+                    }));
+                    p.push(vs(Cmd::LocalSt {
+                        pat: Pattern2D::lin(tmp_base + 4, 1),
+                        port: o_s,
+                        rmw: false,
+                    }));
+                    p.push(vs(Cmd::Barrier));
+                    push_ld(
+                        &mut p,
+                        mask,
+                        Pattern2D::lin(tmp_base + 3, 1),
+                        i_c,
+                        Some(Reuse::uniform(n as f64)),
+                        feats,
+                        None,
+                    );
+                    push_ld(
+                        &mut p,
+                        mask,
+                        Pattern2D::lin(tmp_base + 4, 1),
+                        i_s,
+                        Some(Reuse::uniform(n as f64)),
+                        feats,
+                        None,
+                    );
+                }
+                push_st(&mut p, mask, col(pi), o_ap, true, feats);
+                push_st(&mut p, mask, col(qi), o_aq, true, feats);
+                push_ld(&mut p, mask, col(pi), i_ap, None, feats, Some(0));
+                push_ld(&mut p, mask, col(qi), i_aq, None, feats, Some(0));
+            }
+        }
+    }
+    p.push(vs(Cmd::Wait));
+    p
+}
+
+// ---- GEMM -------------------------------------------------------------
+
+pub fn gemm(rows: usize, feats: Features, mask: LaneMask) -> Program {
+    const W: usize = 8;
+    let plan = workloads::gemm::plan(rows, feats).expect("plan");
+    let po = &plan.ports;
+    let (i_b, i_a, i_g, o_c) = (po.b.id(), po.a.id(), po.gate.id(), po.c.id());
+    let a_base = plan.lay.a.base();
+    let b_base = plan.lay.b.base();
+    let c_base = plan.lay.c.base();
+    let (k_dim, p_dim) = (workloads::gemm::K, workloads::gemm::P);
+
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let mut p: Program = vec![vs(Cmd::Configure(plan.cfg.clone()))];
+    p.push(vs(Cmd::LocalSt {
+        pat: Pattern2D::lin(c_base, (rows * p_dim) as i64),
+        port: o_c,
+        rmw: false,
+    }));
+    let chunks = p_dim / W;
+    for i in 0..rows {
+        for jc in 0..chunks {
+            p.push(vs(Cmd::LocalLd {
+                pat: Pattern2D::rect(
+                    b_base + (jc * W) as i64,
+                    1,
+                    W as i64,
+                    p_dim as i64,
+                    k_dim as i64,
+                ),
+                port: i_b,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            }));
+            p.push(vs(Cmd::LocalLd {
+                pat: Pattern2D::lin(a_base + (i * k_dim) as i64, k_dim as i64),
+                port: i_a,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            }));
+            p.push(vs(Cmd::ConstSt {
+                pat: ConstPattern::last_of_row(1.0, 0.0, k_dim as f64, 1, 0.0),
+                port: i_g,
+            }));
+        }
+    }
+    p.push(vs(Cmd::Wait));
+    p
+}
+
+// ---- FIR --------------------------------------------------------------
+
+pub fn fir(
+    m: usize,
+    chunks: usize,
+    feats: Features,
+    mask: LaneMask,
+    lane_stride: i64,
+) -> Program {
+    const W: usize = 8;
+    assert!(m % 2 == 0);
+    let plan = workloads::fir::plan(m, feats).expect("plan");
+    let po = &plan.ports;
+    let (i_xa, i_xb, i_h, i_g, o_y) =
+        (po.xa.id(), po.xb.id(), po.h.id(), po.gate.id(), po.y.id());
+    let x_base = plan.lay.x.base();
+    let h_base = plan.lay.h.base();
+    let y_base = plan.lay.y.base();
+
+    let half = (m / 2) as i64;
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let mut p: Program = vec![vs(Cmd::Configure(plan.cfg.clone()))];
+    p.push(vs(Cmd::ConstSt {
+        pat: ConstPattern::last_of_row(1.0, 0.0, half as f64, chunks as i64, 0.0),
+        port: i_g,
+    }));
+    p.push(VsCommand::with_stride(
+        Cmd::LocalSt {
+            pat: Pattern2D::lin(y_base, (chunks * W) as i64),
+            port: o_y,
+            rmw: false,
+        },
+        mask,
+        lane_stride,
+    ));
+    for ic in 0..chunks as i64 {
+        let x0 = x_base + ic * W as i64;
+        p.push(VsCommand::with_stride(
+            Cmd::LocalLd {
+                pat: Pattern2D::rect(x0, 1, W as i64, 1, half),
+                port: i_xa,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            },
+            mask,
+            lane_stride,
+        ));
+        p.push(VsCommand::with_stride(
+            Cmd::LocalLd {
+                pat: Pattern2D::rect(x0 + m as i64 - 1, 1, W as i64, -1, half),
+                port: i_xb,
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            },
+            mask,
+            lane_stride,
+        ));
+        p.push(vs(Cmd::LocalLd {
+            pat: Pattern2D::lin(h_base, half),
+            port: i_h,
+            reuse: None,
+            masked: feats.masking,
+            rmw: None,
+        }));
+    }
+    p.push(vs(Cmd::Wait));
+    p
+}
+
+// ---- FFT --------------------------------------------------------------
+
+pub fn fft(n: usize, feats: Features, mask: LaneMask) -> Program {
+    assert!(n.is_power_of_two());
+    let plan = workloads::fft::plan(n, feats).expect("plan");
+    let po = &plan.ports;
+    let lay = &plan.lay;
+    let buf = |s: usize| -> (i64, i64) {
+        if s % 2 == 0 {
+            (lay.re0.base(), lay.im0.base())
+        } else {
+            (lay.re1.base(), lay.im1.base())
+        }
+    };
+    let (twr_base, twi_base) = (lay.twr.base(), lay.twi.base());
+    let in_ports = [po.ar.id(), po.ai.id(), po.br.id(), po.bi.id()];
+    let out_ports = [po.or0.id(), po.oi0.id(), po.or1.id(), po.oi1.id()];
+
+    let vs = |c: Cmd| VsCommand::new(c, mask);
+    let mut p: Program = vec![vs(Cmd::Configure(plan.cfg.clone()))];
+    let mut len = 2usize;
+    let mut stage = 0usize;
+    while len <= n {
+        let (sre, sim_) = buf(stage);
+        let (dre, dim_) = buf(stage + 1);
+        let half = (len / 2) as i64;
+        let groups = (n / len) as i64;
+        let shape =
+            |base: i64, off: i64| Pattern2D::rect(base + off, 1, half, len as i64, groups);
+        let tw_stride = (n / len) as i64;
+        let wr = Pattern2D::rect(twr_base, tw_stride, half, 0, groups);
+        let wi = Pattern2D::rect(twi_base, tw_stride, half, 0, groups);
+        for (idx, (src, dst)) in [
+            (shape(sre, 0), shape(dre, 0)),
+            (shape(sim_, 0), shape(dim_, 0)),
+            (shape(sre, half), shape(dre, half)),
+            (shape(sim_, half), shape(dim_, half)),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            p.push(vs(Cmd::LocalSt { pat: dst, port: out_ports[idx], rmw: true }));
+            p.push(vs(Cmd::LocalLd {
+                pat: src,
+                port: in_ports[idx],
+                reuse: None,
+                masked: feats.masking,
+                rmw: None,
+            }));
+        }
+        p.push(vs(Cmd::LocalLd {
+            pat: wr,
+            port: po.wr.id(),
+            reuse: None,
+            masked: feats.masking,
+            rmw: None,
+        }));
+        p.push(vs(Cmd::LocalLd {
+            pat: wi,
+            port: po.wi.id(),
+            reuse: None,
+            masked: feats.masking,
+            rmw: None,
+        }));
+        len <<= 1;
+        stage += 1;
+    }
+    p.push(vs(Cmd::Wait));
+    p
+}

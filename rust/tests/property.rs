@@ -1,10 +1,21 @@
 //! Property-based tests over the ISA/simulator invariants (in-repo
-//! `prop` helper; proptest is unavailable offline).
+//! `prop` helper; proptest is unavailable offline), plus the
+//! old-vs-new port-equivalence suite: every workload's control program
+//! built through the typed `vsc` layer must lower bit-identically to
+//! the frozen pre-port builders in `legacy/` and simulate in exactly
+//! the same number of cycles.
 
-use revel::isa::{Capability, LaneMask, Pattern2D, Reuse};
+// The frozen legacy builders mirror the lib's explicit index/length
+// arithmetic; keep the same clippy posture as rust/src/lib.rs.
+#![allow(clippy::manual_div_ceil, clippy::needless_range_loop)]
+
+mod legacy;
+
+use revel::isa::{Capability, LaneMask, Pattern2D, Program, Reuse};
 use revel::prop::check;
 use revel::sim::{Machine, SimConfig, StreamCursor};
-use revel::workloads::{self, Features, Goal};
+use revel::vsc::{self, programs_equal, SpadAlloc};
+use revel::workloads::{self, Features, Goal, Prepared};
 
 /// Cursor chunked traversal == pattern iterator, for arbitrary patterns.
 #[test]
@@ -138,6 +149,164 @@ fn solver_correct_under_all_feature_combinations() {
             .execute()
             .unwrap_or_else(|e| panic!("{feats:?}: {e}"));
     }
+}
+
+/// Feature sets the port-equivalence suite covers: full FGOP, the base
+/// machine, and the two ablations with distinct lowering paths
+/// (per-row decomposition; scratchpad round-trips).
+fn feature_sets() -> [Features; 4] {
+    [
+        Features::ALL,
+        Features::NONE,
+        Features { inductive: false, ..Features::ALL },
+        Features { fine_grain: false, ..Features::ALL },
+    ]
+}
+
+/// Old-vs-new lowering equivalence: across sizes — including the
+/// non-multiple-of-8 partial-vector cases 12 and 23 — and across
+/// feature sets, the `vsc`-built program must equal the legacy
+/// raw-command program command for command.
+#[test]
+fn vsc_lowering_matches_legacy_builders_bit_for_bit() {
+    let mask = LaneMask::one(0);
+    let ck = |what: &str, new: &Program, old: &Program| {
+        programs_equal(new, old)
+            .unwrap_or_else(|e| panic!("{what}: vsc and legacy programs differ: {e}"));
+    };
+    for feats in feature_sets() {
+        for &n in &[4usize, 12, 16, 23] {
+            let f = format!("{feats:?} n={n}");
+            ck(
+                &format!("cholesky {f}"),
+                &workloads::cholesky::program(n, feats, mask).unwrap(),
+                &legacy::cholesky(n, feats, mask),
+            );
+            ck(
+                &format!("solver {f}"),
+                &workloads::solver::program(n, feats, mask).unwrap(),
+                &legacy::solver(n, feats, mask),
+            );
+            ck(
+                &format!("qr {f}"),
+                &workloads::qr::program(n, feats, mask).unwrap(),
+                &legacy::qr(n, feats, mask),
+            );
+            ck(
+                &format!("svd {f}"),
+                &workloads::svd::program_sweeps(n, 1, feats, mask).unwrap(),
+                &legacy::svd(n, 1, feats, mask),
+            );
+            ck(
+                &format!("gemm rows={n} {feats:?}"),
+                &workloads::gemm::program(n, feats, mask).unwrap(),
+                &legacy::gemm(n, feats, mask),
+            );
+        }
+        for &n in &[4usize, 16, 64] {
+            ck(
+                &format!("fft {feats:?} n={n}"),
+                &workloads::fft::program(n, feats, mask).unwrap(),
+                &legacy::fft(n, feats, mask),
+            );
+        }
+        for &m in &[4usize, 12, 16, 24] {
+            for (chunks, stride) in [(1usize, 8i64), (8, 0)] {
+                ck(
+                    &format!("fir {feats:?} m={m} chunks={chunks}"),
+                    &workloads::fir::program(m, chunks, feats, mask, stride).unwrap(),
+                    &legacy::fir(m, chunks, feats, mask, stride),
+                );
+            }
+        }
+    }
+}
+
+/// Run a prepared machine under an explicit program; returns the cycle
+/// count after the workload's own verifier has passed.
+fn cycles_with(mut prep: Prepared, prog: Program) -> u64 {
+    prep.machine.run(prog).expect("program must complete");
+    (prep.verify)(&prep.machine).expect("program must verify");
+    prep.machine.stats.cycles
+}
+
+/// The port is cycle-exact, not just command-exact: simulating the
+/// legacy program on an identically prepared machine produces the same
+/// cycle count (and passes the same functional verification) as the
+/// vsc-built program.
+#[test]
+fn vsc_port_preserves_cycle_counts() {
+    let feats = Features::ALL;
+    let l1 = LaneMask::first_n(1);
+    let cases: Vec<(&str, Program)> = vec![
+        ("cholesky/12", legacy::cholesky(12, feats, l1)),
+        ("qr/12", legacy::qr(12, feats, l1)),
+        ("solver/16", legacy::solver(16, feats, l1)),
+        ("fft/16", legacy::fft(16, feats, l1)),
+        ("gemm/12", legacy::gemm(3, feats, LaneMask::first_n(4))),
+        ("fir/16", legacy::fir(16, 1, feats, LaneMask::first_n(8), 8)),
+    ];
+    for (what, legacy_prog) in cases {
+        let (kernel, n) = what.split_once('/').unwrap();
+        let n: usize = n.parse().unwrap();
+        let new_prep = workloads::prepare(kernel, n, feats, Goal::Latency).unwrap();
+        let new_prog = new_prep.prog.clone();
+        let new_cycles =
+            cycles_with(Prepared { prog: Vec::new(), ..new_prep }, new_prog);
+        let old_prep = workloads::prepare(kernel, n, feats, Goal::Latency).unwrap();
+        let old_cycles =
+            cycles_with(Prepared { prog: Vec::new(), ..old_prep }, legacy_prog);
+        assert_eq!(new_cycles, old_cycles, "{what}: cycle counts diverged");
+    }
+}
+
+/// Every workload's program — including the new LU — comes out of the
+/// `vsc` check pass without errors, at an awkward partial-vector size.
+#[test]
+fn all_workload_programs_pass_the_vsc_check() {
+    for k in workloads::NAMES {
+        let n = match k {
+            "fft" => 64,
+            "gemm" => 12,
+            "fir" => 24, // centro-symmetric fold needs an even tap count
+            _ => 23,
+        };
+        let prep = workloads::prepare(k, n, Features::ALL, Goal::Latency).unwrap();
+        let rep = vsc::check_program(&prep.prog, &prep.machine.cfg);
+        assert!(rep.errors().is_empty(), "{k} n={n}:\n{rep}");
+    }
+}
+
+/// Allocator behaviour through the public API: packed, line-aligned,
+/// disjoint regions; capacity and duplicate errors render usefully.
+#[test]
+fn spad_allocator_overlap_and_capacity_properties() {
+    check("spad allocator", 100, |rng| {
+        let cap = 128 + rng.int(0, 8) as usize * 64;
+        let mut al = SpadAlloc::with_capacity(cap);
+        let mut regions = Vec::new();
+        for name in ["r0", "r1", "r2", "r3", "r4", "r5"] {
+            let words = rng.int(1, 40);
+            match al.region(name, words) {
+                Ok(r) => {
+                    assert_eq!(r.base() % 16, 0, "line-aligned base");
+                    assert!(r.end() <= cap as i64, "inside capacity");
+                    for prev in &regions {
+                        let p: &revel::vsc::Region = prev;
+                        assert!(
+                            r.base() >= p.end() || r.end() <= p.base(),
+                            "regions {p:?} and {r:?} overlap"
+                        );
+                    }
+                    regions.push(r);
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    assert!(msg.contains(name), "error names the region: {msg}");
+                }
+            }
+        }
+    });
 }
 
 /// Machine watchdog fires instead of hanging on a bad program.
