@@ -39,4 +39,4 @@ ci: build test fmt clippy bench-smoke
 
 clean:
 	$(CARGO) clean
-	rm -f BENCH_sweep.json
+	rm -f BENCH_sweep.json BENCH_hotpath.json

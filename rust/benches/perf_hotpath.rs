@@ -3,14 +3,26 @@
 //! target in EXPERIMENTS.md). Run before/after optimizations.
 //!
 //! The mix dispatches through the parallel sweep harness (memoization
-//! disabled — this measures simulation, not cache lookups) and emits
-//! the per-point results as `BENCH_sweep.json` so CI can archive the
-//! perf trajectory. Knobs:
-//!   REVEL_BENCH_REPS   repetitions of the mix (default 5; CI smoke: 1)
-//!   REVEL_WORKERS      worker threads (default: available parallelism)
-//!   REVEL_BENCH_OUT    artifact path (default BENCH_sweep.json)
+//! disabled — this measures simulation, not cache lookups). Two
+//! artifacts come out:
+//!   BENCH_sweep.json    per-point results of the last rep, with
+//!                       per-point host wall time aggregated (mean/min)
+//!                       across all reps — `revel sweep-diff` reports
+//!                       wall deltas from it informationally.
+//!   BENCH_hotpath.json  the wall-time trajectory artifact: reps,
+//!                       per-rep wall seconds, and per-point wall
+//!                       ns (mean/min over reps) — CI archives it next
+//!                       to BENCH_sweep.json so the simulator's real
+//!                       speed is tracked PR over PR.
+//! Knobs:
+//!   REVEL_BENCH_REPS          repetitions of the mix (default 5; CI: 1)
+//!   REVEL_WORKERS             worker threads (default: all cores)
+//!   REVEL_BENCH_OUT           sweep artifact path (BENCH_sweep.json)
+//!   REVEL_BENCH_HOTPATH_OUT   hotpath artifact path (BENCH_hotpath.json)
 
-use revel::harness::{self, Options, SweepPoint};
+use std::sync::Arc;
+
+use revel::harness::{self, json::Json, Options, SweepOutcome, SweepPoint};
 use revel::workloads::{Features, Goal};
 
 fn mix() -> Vec<SweepPoint> {
@@ -36,23 +48,25 @@ fn main() {
         .unwrap_or(5);
     let out_path = std::env::var("REVEL_BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_sweep.json".to_string());
+    let hot_path = std::env::var("REVEL_BENCH_HOTPATH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     let workers = harness::pool::default_workers();
     let opts = Options { workers: Some(workers), use_cache: false };
 
     let mut total_cycles = 0u64;
     let mut total_lane_cycles = 0u64;
-    let mut last = Vec::new();
-    let mut last_rep_s = 0.0;
+    let mut per_rep: Vec<Vec<Arc<SweepOutcome>>> = Vec::new();
+    let mut rep_walls_s: Vec<f64> = Vec::new();
     let t = std::time::Instant::now();
     for _ in 0..reps {
         let t_rep = std::time::Instant::now();
         let outcomes = harness::run_all_opts(&mix(), &opts).expect("mix verifies");
-        last_rep_s = t_rep.elapsed().as_secs_f64();
+        rep_walls_s.push(t_rep.elapsed().as_secs_f64());
         for o in &outcomes {
             total_cycles += o.cycles;
             total_lane_cycles += o.stats.lane_cycles.iter().sum::<u64>();
         }
-        last = outcomes;
+        per_rep.push(outcomes);
     }
     let dt = t.elapsed().as_secs_f64();
     println!(
@@ -64,9 +78,77 @@ fn main() {
         total_cycles as f64 / dt / 1e6,
         total_lane_cycles as f64 / dt / 1e6
     );
-    // The artifact pairs one rep's results with that rep's wall time
-    // (the totals above span all reps and would skew throughput math).
-    harness::write_artifact(&out_path, &last, last_rep_s, workers)
+
+    // Aggregate each point's host wall time across reps (mean/min) onto
+    // the last rep's outcomes — simulated results are identical every
+    // rep; only the wall measurements differ.
+    let last = per_rep.last().expect("reps >= 1");
+    let merged: Vec<Arc<SweepOutcome>> = last
+        .iter()
+        .enumerate()
+        .map(|(i, o)| {
+            let walls: Vec<f64> =
+                per_rep.iter().map(|r| r[i].wall_ns_mean).collect();
+            let mut out = o.as_ref().clone();
+            out.wall_ns_mean = walls.iter().sum::<f64>() / walls.len() as f64;
+            out.wall_ns_min =
+                walls.iter().copied().fold(f64::INFINITY, f64::min);
+            Arc::new(out)
+        })
+        .collect();
+
+    // The sweep artifact pairs one rep's results with that rep's wall
+    // time (the totals above span all reps and would skew throughput
+    // math); per-point walls carry the cross-rep aggregate.
+    let last_rep_s = *rep_walls_s.last().expect("reps >= 1");
+    harness::write_artifact(&out_path, &merged, last_rep_s, workers)
         .expect("write BENCH_sweep.json");
     println!("  wrote {out_path}");
+
+    let hotpath = Json::obj(vec![
+        ("schema", Json::Str("revel-bench-hotpath".into())),
+        ("version", Json::Num(1.0)),
+        ("reps", Json::Num(reps as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("wall_s_total", Json::Num(dt)),
+        (
+            "rep_wall_s",
+            Json::Arr(rep_walls_s.iter().map(|&w| Json::Num(w)).collect()),
+        ),
+        ("machine_cycles", Json::Num(total_cycles as f64)),
+        ("lane_cycles", Json::Num(total_lane_cycles as f64)),
+        (
+            "machine_cycles_per_s",
+            Json::Num(total_cycles as f64 / dt.max(1e-12)),
+        ),
+        (
+            "lane_cycles_per_s",
+            Json::Num(total_lane_cycles as f64 / dt.max(1e-12)),
+        ),
+        (
+            "points",
+            Json::Arr(
+                merged
+                    .iter()
+                    .map(|o| {
+                        Json::obj(vec![
+                            ("kernel", Json::Str(o.point.kernel.clone())),
+                            ("n", Json::Num(o.point.n as f64)),
+                            (
+                                "goal",
+                                Json::Str(
+                                    format!("{:?}", o.point.goal).to_lowercase(),
+                                ),
+                            ),
+                            ("cycles", Json::Num(o.cycles as f64)),
+                            ("wall_ns_mean", Json::Num(o.wall_ns_mean)),
+                            ("wall_ns_min", Json::Num(o.wall_ns_min)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(&hot_path, hotpath.pretty()).expect("write BENCH_hotpath.json");
+    println!("  wrote {hot_path}");
 }

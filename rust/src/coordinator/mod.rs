@@ -37,7 +37,7 @@ pub mod slo;
 pub use cluster::{Arrival, ClusterConfig, ClusterRun, Completion, UnitStats, Workload};
 pub use serve::{
     read_artifact, serve, write_artifact, ArrivalMode, Batching, ClassReport,
-    ServeConfig, ServeReport, UnitReport,
+    HostOnly, ServeConfig, ServeReport, StageWall, UnitReport,
 };
 pub use slo::{Pctls, SloAccountant, SloDigest};
 

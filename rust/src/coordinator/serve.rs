@@ -98,6 +98,30 @@ pub struct Batching {
     pub stage_runs: usize,
 }
 
+/// Host-only payload carried inside an otherwise deterministic report.
+/// Compares equal to everything, so two same-config runs still satisfy
+/// `ServeReport == ServeReport` (the determinism contract CI diffs);
+/// serialization routes it into the artifact's nondeterministic `host`
+/// block, which readers drop.
+#[derive(Clone, Debug, Default)]
+pub struct HostOnly<T>(pub T);
+
+impl<T> PartialEq for HostOnly<T> {
+    fn eq(&self, _other: &Self) -> bool {
+        true
+    }
+}
+
+/// Host wall time of one distinct pre-simulated stage point. Memoized
+/// stages report the wall time of their first (only) execution.
+#[derive(Clone, Debug)]
+pub struct StageWall {
+    pub kernel: String,
+    pub n: usize,
+    pub wall_ns_mean: f64,
+    pub wall_ns_min: f64,
+}
+
 /// Everything one serve run reports. All fields are deterministic in
 /// the [`ServeConfig`]; host wall-clock data is added only at
 /// serialization time ([`ServeReport::to_json`]) so two runs with the
@@ -127,12 +151,17 @@ pub struct ServeReport {
     pub stage_errors: Vec<String>,
     /// Per-job timing (present when `jobs <= DETAIL_CAP`).
     pub jobs_detail: Vec<Completion>,
+    /// Host wall time per distinct pre-simulated stage point. Excluded
+    /// from equality and from the deterministic part of the artifact
+    /// (it serializes into the `host` block).
+    pub stage_wall: HostOnly<Vec<StageWall>>,
 }
 
 struct StageTable {
     per_class: Vec<Option<[u64; 4]>>,
     distinct_points: usize,
     errors: Vec<String>,
+    stage_wall: Vec<StageWall>,
 }
 
 /// One batched harness pass over the distinct stage kernels of all
@@ -190,7 +219,19 @@ fn stage_table(classes: &[JobClass], workers: Option<usize>) -> StageTable {
             Some(cy)
         })
         .collect();
-    StageTable { per_class, distinct_points: points.len(), errors }
+    let stage_wall = points
+        .iter()
+        .zip(&outcomes)
+        .filter_map(|(p, o)| {
+            o.as_ref().map(|o| StageWall {
+                kernel: p.kernel.clone(),
+                n: p.n,
+                wall_ns_mean: o.wall_ns_mean,
+                wall_ns_min: o.wall_ns_min,
+            })
+        })
+        .collect();
+    StageTable { per_class, distinct_points: points.len(), errors, stage_wall }
 }
 
 /// Sample a class index from cumulative weights.
@@ -309,6 +350,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         batching: Batching { distinct_points: st.distinct_points, stage_runs: 4 * completed },
         stage_errors: st.errors,
         jobs_detail: if cfg.jobs <= DETAIL_CAP { run.completions.clone() } else { Vec::new() },
+        stage_wall: HostOnly(st.stage_wall),
     })
 }
 
@@ -368,6 +410,26 @@ impl ServeReport {
                 Json::obj(vec![
                     ("wall_s", Json::Num(host_wall_s)),
                     ("workers", Json::Num(host_workers as f64)),
+                    (
+                        // Per-point host wall time of the batched stage
+                        // pre-simulation (nondeterministic, so it lives
+                        // in the host block readers drop).
+                        "stage_wall_ns",
+                        Json::Arr(
+                            self.stage_wall
+                                .0
+                                .iter()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("kernel", Json::Str(s.kernel.clone())),
+                                        ("n", Json::Num(s.n as f64)),
+                                        ("mean", Json::Num(s.wall_ns_mean)),
+                                        ("min", Json::Num(s.wall_ns_min)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
             (
@@ -590,6 +652,8 @@ impl ServeReport {
             },
             stage_errors,
             jobs_detail,
+            // Host-block content is intentionally not round-tripped.
+            stage_wall: HostOnly::default(),
         })
     }
 }
@@ -681,6 +745,15 @@ mod tests {
         let back = read_artifact(&text).unwrap();
         assert_eq!(back, r, "host block drops; everything else round-trips");
         assert!(read_artifact("{\"schema\": \"other\"}").is_err());
+        // Stage wall times ride in the (dropped) host block only.
+        let doc = json::parse(&text).unwrap();
+        let walls = doc
+            .get("host")
+            .and_then(|h| h.get("stage_wall_ns"))
+            .and_then(Json::as_arr)
+            .expect("host.stage_wall_ns present");
+        assert_eq!(walls.len(), r.stage_wall.0.len());
+        assert!(back.stage_wall.0.is_empty(), "host block not round-tripped");
     }
 
     #[test]
@@ -708,5 +781,8 @@ mod tests {
         assert_eq!(r.batching.distinct_points, 5);
         assert_eq!(r.batching.stage_runs, 96);
         assert!(r.stage_errors.is_empty());
+        // One wall-time record per distinct stage point, all measured.
+        assert_eq!(r.stage_wall.0.len(), 5);
+        assert!(r.stage_wall.0.iter().all(|s| s.wall_ns_mean > 0.0));
     }
 }

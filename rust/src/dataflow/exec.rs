@@ -13,7 +13,10 @@ use super::{Dfg, Op, Operand};
 
 /// One vector instance travelling through a port: values + active-lane
 /// predicate (paper §6.2 "Implicit Vector Masking" predication FIFO).
-#[derive(Clone, Debug, PartialEq)]
+/// `Default` is the empty instance — the lane's buffer pool recycles
+/// spent instances through it so steady-state stream delivery reuses
+/// capacity instead of allocating.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct VecVal {
     pub vals: Vec<f64>,
     pub pred: Vec<bool>,

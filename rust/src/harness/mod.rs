@@ -79,6 +79,15 @@ pub struct SweepOutcome {
     pub flops: f64,
     pub problems: usize,
     pub stats: Stats,
+    /// Host wall time of this point's prepare+simulate+verify pass, in
+    /// nanoseconds (mean over repetitions). A single execution records
+    /// mean == min; benches that re-run the mix (`perf_hotpath`)
+    /// aggregate across reps before emitting the artifact. Zero when
+    /// parsed from a pre-wall-time artifact. Informational only — the
+    /// CI regression gate reads simulated cycles, never wall time.
+    pub wall_ns_mean: f64,
+    /// Fastest observed execution of this point, nanoseconds.
+    pub wall_ns_min: f64,
 }
 
 impl SweepOutcome {
@@ -131,6 +140,8 @@ impl SweepOutcome {
             ("max_err", Json::Num(self.max_err)),
             ("flops", Json::Num(self.flops)),
             ("flops_per_cycle", Json::Num(self.flops_per_cycle())),
+            ("wall_ns_mean", Json::Num(self.wall_ns_mean)),
+            ("wall_ns_min", Json::Num(self.wall_ns_min)),
             (
                 "lane_cycles",
                 Json::Arr(
@@ -234,6 +245,14 @@ impl SweepOutcome {
                 .ok_or_else(|| err("problems"))?,
             point,
             stats,
+            // Wall-time fields arrived with artifact version 2; older
+            // baselines parse as 0 (meaning "unknown") so the wall-time
+            // delta report degrades instead of failing.
+            wall_ns_mean: v
+                .get("wall_ns_mean")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            wall_ns_min: v.get("wall_ns_min").and_then(Json::as_f64).unwrap_or(0.0),
         })
     }
 }
@@ -262,8 +281,12 @@ pub fn ensure_budget() {
 }
 
 /// Execute one sweep point on the current thread (fabric override is
-/// installed thread-locally for the duration of the run).
+/// installed thread-locally for the duration of the run). The point's
+/// host wall time (prepare + simulate + verify) is captured into the
+/// outcome so every bench artifact can track the simulator's real
+/// speed alongside its simulated cycles.
 pub fn execute_point(p: &SweepPoint) -> Result<SweepOutcome, WlError> {
+    let t0 = std::time::Instant::now();
     if let Some((w, h)) = p.fabric {
         workloads::set_fabric(Some(FabricSpec::revel(w, h)));
     }
@@ -273,6 +296,7 @@ pub fn execute_point(p: &SweepPoint) -> Result<SweepOutcome, WlError> {
         workloads::set_fabric(None);
     }
     let r = r?;
+    let wall_ns = t0.elapsed().as_nanos() as f64;
     Ok(SweepOutcome {
         point: p.clone(),
         cycles: r.cycles,
@@ -280,6 +304,8 @@ pub fn execute_point(p: &SweepPoint) -> Result<SweepOutcome, WlError> {
         flops: r.flops,
         problems: r.problems,
         stats: r.stats,
+        wall_ns_mean: wall_ns,
+        wall_ns_min: wall_ns,
     })
 }
 
@@ -389,9 +415,27 @@ pub struct SweepDiff {
     pub missing: Vec<String>,
     /// Current points absent from the baseline (new coverage).
     pub added: Vec<String>,
+    /// Matched points carrying wall-time data on both sides, paired for
+    /// the informational before/after report. Wall time never gates the
+    /// diff — only the cycle classification above does.
+    pub walls: Vec<WallRow>,
 }
 
-fn point_key(p: &SweepPoint) -> String {
+/// Per-point host wall-time pair of a matched baseline/current point.
+#[derive(Clone, Debug)]
+pub struct WallRow {
+    /// Point identity ([`point_key`]).
+    pub key: String,
+    /// Baseline host wall time, nanoseconds (mean over reps).
+    pub base_ns: f64,
+    /// Current host wall time, nanoseconds (mean over reps).
+    pub cur_ns: f64,
+}
+
+/// Stable identity string of a sweep point (kernel/n/features/goal/
+/// fabric) — the key `diff_outcomes` matches baseline and current
+/// artifacts on.
+pub fn point_key(p: &SweepPoint) -> String {
     format!(
         "{}/n{}/{}/{:?}/{:?}",
         p.kernel,
@@ -421,6 +465,13 @@ pub fn diff_outcomes(
             d.missing.push(key);
             continue;
         };
+        if b.wall_ns_mean > 0.0 && c.wall_ns_mean > 0.0 {
+            d.walls.push(WallRow {
+                key: key.clone(),
+                base_ns: b.wall_ns_mean,
+                cur_ns: c.wall_ns_mean,
+            });
+        }
         let limit = b.cycles as f64 * (1.0 + tol_pct / 100.0);
         let row = DiffRow { key, base: b.cycles, cur: c.cycles };
         if (c.cycles as f64) > limit {
@@ -448,7 +499,9 @@ pub fn artifact_json(
 ) -> Json {
     Json::obj(vec![
         ("schema", Json::Str("revel-bench-sweep".into())),
-        ("version", Json::Num(1.0)),
+        // Version 2 added per-point host wall time (wall_ns_mean /
+        // wall_ns_min); version-1 artifacts still parse (walls read 0).
+        ("version", Json::Num(2.0)),
         ("workers", Json::Num(workers as f64)),
         ("wall_s", Json::Num(wall_s)),
         ("freq_ghz", Json::Num(model::FREQ_GHZ)),
@@ -576,6 +629,9 @@ mod tests {
             assert_eq!(rt.max_err, orig.max_err);
             assert_eq!(rt.stats.lane_cycles, orig.stats.lane_cycles);
             assert_eq!(rt.stats.commands, orig.stats.commands);
+            assert!(orig.wall_ns_mean > 0.0, "execution records wall time");
+            assert_eq!(rt.wall_ns_mean, orig.wall_ns_mean);
+            assert_eq!(rt.wall_ns_min, orig.wall_ns_min);
         }
         // Round-trip is a fixed point: re-serializing parses identically.
         let doc2 = artifact_json(
@@ -598,10 +654,22 @@ mod tests {
         let out = run_all_in(&pts, &opts, Some(&memo)).unwrap();
         let base: Vec<SweepOutcome> =
             out.iter().map(|o| o.as_ref().clone()).collect();
-        // Identical runs: no regressions, everything unchanged.
+        // Identical runs: no regressions, everything unchanged; wall
+        // time aggregates over all matched points.
         let d = diff_outcomes(&base, &base, 0.0);
         assert!(d.regressions.is_empty() && d.improvements.is_empty());
         assert_eq!(d.unchanged, 2);
+        assert_eq!(d.walls.len(), 2);
+        assert!(d.walls.iter().all(|w| w.base_ns > 0.0 && w.base_ns == w.cur_ns));
+        // A wall-less baseline (old artifact) degrades informationally.
+        let mut old = base.clone();
+        for o in &mut old {
+            o.wall_ns_mean = 0.0;
+            o.wall_ns_min = 0.0;
+        }
+        let d = diff_outcomes(&old, &base, 0.0);
+        assert!(d.walls.is_empty(), "no wall data on one side: not paired");
+        assert_eq!(d.unchanged, 2, "cycle gate unaffected by missing walls");
         // Inflate one current point: regression at 0%, absorbed by 200%.
         let mut slow = base.clone();
         slow[0].cycles = base[0].cycles * 2;

@@ -261,6 +261,41 @@ fn main() {
                 d.added.len(),
                 d.missing.len()
             );
+            // Host wall-time before/after (informational only — the
+            // exit code below depends exclusively on simulated cycles).
+            // diff_outcomes owns the point matching; this just renders.
+            if !d.walls.is_empty() {
+                let mut wt = revel::util::stats::Table::new(&[
+                    "point",
+                    "base ms",
+                    "cur ms",
+                    "speedup",
+                ]);
+                for w in &d.walls {
+                    wt.row(vec![
+                        w.key.clone(),
+                        format!("{:.2}", w.base_ns / 1e6),
+                        format!("{:.2}", w.cur_ns / 1e6),
+                        format!("{:.2}x", w.base_ns / w.cur_ns.max(1.0)),
+                    ]);
+                }
+                println!("host wall time per point (informational):");
+                println!("{}", wt.render());
+                let base_ns: f64 = d.walls.iter().map(|w| w.base_ns).sum();
+                let cur_ns: f64 = d.walls.iter().map(|w| w.cur_ns).sum();
+                println!(
+                    "host wall total over {} matched points: {:.1} ms -> {:.1} ms ({:.2}x)",
+                    d.walls.len(),
+                    base_ns / 1e6,
+                    cur_ns / 1e6,
+                    base_ns / cur_ns.max(1.0),
+                );
+            } else {
+                println!(
+                    "host wall time: baseline artifact carries no per-point wall \
+                     data (pre-v2 schema); skipping the informational table"
+                );
+            }
             // Lost coverage fails too: if baseline points stop matching
             // (kernel removed, point identity changed), the gate would
             // otherwise "pass" while comparing nothing.

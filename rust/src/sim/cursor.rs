@@ -67,6 +67,16 @@ impl StreamCursor {
         assert!(k <= self.remaining_in_row(), "cursor over-advance");
         let out: Vec<i64> =
             (0..k).map(|d| self.pat.addr(self.j, self.i + d)).collect();
+        self.advance(k);
+        out
+    }
+
+    /// Advance by k elements (must be <= remaining_in_row) without
+    /// materializing their addresses — the allocation-free hot path.
+    /// Callers that need the addresses compute them first from
+    /// [`Self::pos`] + `pat.addr` (the row is fixed within one chunk).
+    pub fn advance(&mut self, k: i64) {
+        assert!(k <= self.remaining_in_row(), "cursor over-advance");
         self.i += k;
         if self.i >= self.cur_len {
             self.j += 1;
@@ -74,7 +84,6 @@ impl StreamCursor {
             self.cur_len = if self.j < self.pat.n_j { self.pat.len_at(self.j) } else { 0 };
             self.skip_empty_rows();
         }
-        out
     }
 
     pub fn total_remaining(&self) -> i64 {

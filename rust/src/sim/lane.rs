@@ -41,8 +41,10 @@ pub enum LaneEvent {
 }
 
 /// External state the lane needs for barrier/config/idle decisions but
-/// which lives at the machine level.
-#[derive(Clone, Copy, Debug, Default)]
+/// which lives at the machine level. The machine maintains these bits
+/// incrementally as xfer/shared streams start and retire, so producing
+/// one is O(1) — not a scan over the active stream lists.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ExtBusy {
     /// A shared-scratchpad stream for this lane is still active.
     pub shared_active: bool,
@@ -109,6 +111,21 @@ pub struct LaneCounters {
     pub fires_temporal: u64,
 }
 
+/// Upper bound on recycled stream instances kept in the lane's buffer
+/// pool (enough to cover every port FIFO at full depth).
+const VEC_POOL_CAP: usize = 64;
+
+/// Zero-width placeholder used to initialize the stack-allocated firing
+/// `heads` array (`Vec::new` is const, so this carries no allocation).
+static EMPTY_INSTANCE: VecVal = VecVal { vals: Vec::new(), pred: Vec::new() };
+
+/// Whether `REVEL_TRACE` firing traces are enabled (read once — the
+/// per-firing environment lookup was measurable in the hot path).
+fn trace_enabled() -> bool {
+    static TRACE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *TRACE.get_or_init(|| std::env::var_os("REVEL_TRACE").is_some())
+}
+
 pub struct Lane {
     pub id: usize,
     pub spad: Spad,
@@ -116,13 +133,18 @@ pub struct Lane {
     pub in_ports: Vec<InPort>,
     pub out_ports: Vec<OutPort>,
     config: Option<Arc<Configured>>,
-    /// Configuration being applied: (config, cycles remaining).
+    /// Configuration being applied: (config, absolute completion cycle).
+    /// Holding the end time (rather than a per-cycle countdown) lets the
+    /// event-driven scheduler sleep through the whole drain window.
     config_pending: Option<(Arc<Configured>, u64)>,
     acc: Vec<AccState>,
     next_fire: Vec<u64>,
     loads: Vec<LoadStream>,
     stores: Vec<StoreStream>,
     consts: Vec<ConstStream>,
+    /// Recycled vector instances: stream delivery pops here instead of
+    /// allocating, and spent instances return via [`Lane::recycle`].
+    vec_pool: Vec<VecVal>,
     pub flags: CycleFlags,
     pub counters: LaneCounters,
 }
@@ -142,8 +164,28 @@ impl Lane {
             loads: Vec::new(),
             stores: Vec::new(),
             consts: Vec::new(),
+            vec_pool: Vec::new(),
             flags: CycleFlags::default(),
             counters: LaneCounters::default(),
+        }
+    }
+
+    /// Pop a cleared instance from the buffer pool (or allocate one on
+    /// first use — the pool refills from retired instances, so steady
+    /// state recycles capacity instead of allocating).
+    fn vec_from_pool(&mut self) -> VecVal {
+        let mut v = self.vec_pool.pop().unwrap_or_default();
+        v.vals.clear();
+        v.pred.clear();
+        v
+    }
+
+    /// Return a spent instance's buffers to the pool.
+    pub(crate) fn recycle(&mut self, mut v: VecVal) {
+        if self.vec_pool.len() < VEC_POOL_CAP {
+            v.vals.clear();
+            v.pred.clear();
+            self.vec_pool.push(v);
         }
     }
 
@@ -187,22 +229,26 @@ impl Lane {
     }
 
     /// Phase 1: issue at most one command from the queue head.
-    /// Returns a machine-level event if the command starts one.
-    pub fn step_issue(&mut self, _now: u64, ext: ExtBusy) -> Option<LaneEvent> {
+    /// Returns a machine-level event if the command starts one, plus
+    /// whether any architectural state changed this cycle (the flags are
+    /// derived per-cycle conditions, not state — the event-driven
+    /// scheduler uses the bool to detect quiescence).
+    pub fn step_issue(&mut self, now: u64, ext: ExtBusy) -> (Option<LaneEvent>, bool) {
         self.flags = CycleFlags::default();
-        // Advance an in-progress configuration.
-        if let Some((cfg, left)) = &mut self.config_pending {
+        // Advance an in-progress configuration (its completion cycle is
+        // absolute, so waiting for it mutates nothing).
+        if let Some((cfg, done_at)) = &self.config_pending {
             self.flags.drain = true;
-            *left -= 1;
-            if *left == 0 {
+            if now >= *done_at {
                 let cfg = cfg.clone();
                 self.install(cfg);
                 self.config_pending = None;
+                return (None, true);
             }
-            return None;
+            return (None, false);
         }
-        let head = self.queue.front()?.clone();
-        match head {
+        let Some(head) = self.queue.front() else { return (None, false) };
+        match head.clone() {
             Cmd::Configure(cfg) => {
                 // Reconfiguration requires full drain (paper Q5: the
                 // biggest remaining overhead on short phases).
@@ -211,12 +257,15 @@ impl Lane {
                     && self.consts.is_empty()
                     && self.fifos_empty()
                     && !ext.any();
+                let mut changed = false;
                 if quiet {
                     self.queue.pop_front();
-                    self.config_pending = Some((cfg.clone(), cfg.config_cycles()));
+                    self.config_pending =
+                        Some((cfg.clone(), now + cfg.config_cycles()));
+                    changed = true;
                 }
                 self.flags.drain = true;
-                None
+                (None, changed)
             }
             Cmd::Barrier => {
                 // Scratchpad barrier: local SPAD streams + shared-bus
@@ -228,10 +277,11 @@ impl Lane {
                     && !ext.shared_active
                 {
                     self.queue.pop_front();
+                    (None, true)
                 } else {
                     self.flags.barrier = true;
+                    (None, false)
                 }
-                None
             }
             Cmd::Wait => unreachable!("Wait is handled by the control core"),
             Cmd::LocalLd { pat, port, reuse, masked, rmw } => {
@@ -262,8 +312,9 @@ impl Lane {
                         bounds,
                         rmw,
                     });
+                    return (None, true);
                 }
-                None
+                (None, false)
             }
             Cmd::LocalSt { pat, port, rmw } => {
                 let bounds = pat.bounds().unwrap_or((0, -1));
@@ -288,8 +339,9 @@ impl Lane {
                         bounds,
                         rmw,
                     });
+                    return (None, true);
                 }
-                None
+                (None, false)
             }
             Cmd::ConstSt { pat, port } => {
                 if !self.in_ports[port].busy && self.table_used() < STREAM_TABLE {
@@ -298,25 +350,29 @@ impl Lane {
                     let w = self.in_width(port);
                     self.in_ports[port].push_reuse(None, pat.instances(w));
                     self.consts.push(ConstStream { cur: ConstCursor::new(pat), port });
+                    return (None, true);
                 }
-                None
+                (None, false)
             }
             Cmd::Xfer { src_port, dst_port, dst, n, reuse } => {
                 if !self.out_ports[src_port].busy {
                     self.queue.pop_front();
                     self.out_ports[src_port].busy = true;
-                    Some(LaneEvent::StartXfer { src_port, dst_port, dst, n, reuse })
+                    (
+                        Some(LaneEvent::StartXfer { src_port, dst_port, dst, n, reuse }),
+                        true,
+                    )
                 } else {
-                    None
+                    (None, false)
                 }
             }
             Cmd::SharedLd { pat, shared_addr, local_addr } => {
                 self.queue.pop_front();
-                Some(LaneEvent::StartSharedLd { pat, shared_addr, local_addr })
+                (Some(LaneEvent::StartSharedLd { pat, shared_addr, local_addr }), true)
             }
             Cmd::SharedSt { pat, local_addr, shared_addr } => {
                 self.queue.pop_front();
-                Some(LaneEvent::StartSharedSt { pat, local_addr, shared_addr })
+                (Some(LaneEvent::StartSharedSt { pat, local_addr, shared_addr }), true)
             }
         }
     }
@@ -324,10 +380,13 @@ impl Lane {
     /// Phase 2: stream control. The single-bank scratchpad serves one
     /// load stream and one store stream per cycle (1R/1W); const streams
     /// are generated at the ports and do not consume SPAD bandwidth.
-    pub fn step_streams(&mut self, now: u64) {
-        self.step_one_load(now);
-        self.step_one_store(now);
-        self.step_consts(now);
+    /// Returns whether any stream made progress (data moved, a stall
+    /// counter ticked, or a stream retired).
+    pub fn step_streams(&mut self, now: u64) -> bool {
+        let ld = self.step_one_load(now);
+        let st = self.step_one_store(now);
+        let ct = self.step_consts(now);
+        ld || st || ct
     }
 
     /// RMW ordering, load side: a load overlapping an active RMW store
@@ -358,10 +417,16 @@ impl Lane {
         l.cur.remaining_in_row().min(w)
     }
 
-    fn step_one_load(&mut self, now: u64) {
-        // Streams ready to generate; need FIFO space at the destination
-        // port and clearance from the memory-ordering logic.
-        let mut ready: Vec<usize> = Vec::new();
+    fn step_one_load(&mut self, now: u64) -> bool {
+        // Select the served stream directly — no scratch list. A stream
+        // is ready when its destination FIFO has space and the ordering
+        // logic clears it (or it is mid-stall). Priority: minimum
+        // "cycles-to-stall", i.e. least buffered data at the destination
+        // port first (paper §6.1 Stream Control); ties keep the lowest
+        // stream index, matching the previous `min_by_key` selection.
+        let mut best: Option<usize> = None;
+        let mut best_len = usize::MAX;
+        let mut n_ready = 0usize;
         let mut blocked = false;
         for (k, s) in self.loads.iter().enumerate() {
             if !self.in_ports[s.port].has_space() {
@@ -371,27 +436,26 @@ impl Lane {
                 blocked = true;
                 continue;
             }
-            ready.push(k);
+            n_ready += 1;
+            let len = self.in_ports[s.port].len();
+            if len < best_len {
+                best_len = len;
+                best = Some(k);
+            }
         }
-        if ready.is_empty() {
+        let Some(k) = best else {
             if blocked {
                 self.flags.barrier = true; // memory-order stall
             }
-            return;
-        }
-        if ready.len() > 1 {
+            return false;
+        };
+        if n_ready > 1 {
             self.flags.spad_contention = true;
         }
-        // Prioritize by minimum "cycles-to-stall": least buffered data at
-        // the destination port first (paper §6.1 Stream Control).
-        let &k = ready
-            .iter()
-            .min_by_key(|&&k| self.in_ports[self.loads[k].port].len())
-            .unwrap();
         // A stalled stream occupies the read port without new output.
         if self.loads[k].stall > 0 {
             self.loads[k].stall -= 1;
-            return;
+            return true;
         }
         // One 512-bit line per cycle: deliver as many instances as the
         // line, the row, the FIFO and the ordering logic allow.
@@ -404,34 +468,39 @@ impl Lane {
             && self.in_ports[port].has_space()
             && self.rmw_load_clear(&self.loads[k], self.load_take(&self.loads[k]))
         {
-            let s = &mut self.loads[k];
-            let rem = s.cur.remaining_in_row();
+            let rem = self.loads[k].cur.remaining_in_row();
             debug_assert!(rem > 0);
             let take = rem.min(w as i64).min(budget);
             if take < rem.min(w as i64) {
                 break; // line budget exhausted mid-instance: next cycle
             }
-            let gather =
-                Spad::line_gather(s.cur.addr(), s.cur.stride()).max(1) as i64;
-            extra_cycles += (take + gather - 1) / gather - 1;
-            let addrs = s.cur.take(take);
-            let mut vals: Vec<f64> =
-                addrs.iter().map(|&a| self.spad.read(a)).collect();
-            let mut pred = vec![true; take as usize];
+            let mut inst = self.vec_from_pool();
+            {
+                let s = &self.loads[k];
+                let gather =
+                    Spad::line_gather(s.cur.addr(), s.cur.stride()).max(1) as i64;
+                extra_cycles += (take + gather - 1) / gather - 1;
+                let (j, i) = s.cur.pos();
+                for d in 0..take {
+                    inst.vals.push(self.spad.read(s.cur.pat.addr(j, i + d)));
+                    inst.pred.push(true);
+                }
+            }
+            self.loads[k].cur.advance(take);
             if (take as usize) < w {
                 // Partial vector: zero-pad + predicate off. With implicit
                 // masking this is free; without it the hardware
                 // scalarizes the remainder — charge one cycle/element.
-                vals.resize(w, 0.0);
-                pred.resize(w, false);
-                if !s.masked {
+                inst.vals.resize(w, 0.0);
+                inst.pred.resize(w, false);
+                if !self.loads[k].masked {
                     extra_cycles += take - 1;
                 }
             }
             budget -= take;
             self.counters.spad_words += take as u64;
             let ready_at = now + SPAD_LAT + extra_cycles.max(0) as u64;
-            self.in_ports[port].push(VecVal::masked(vals, pred), ready_at);
+            self.in_ports[port].push(inst, ready_at);
         }
         let s = &mut self.loads[k];
         s.stall = extra_cycles.max(0) as u64;
@@ -439,6 +508,7 @@ impl Lane {
             self.loads.retain(|x| !x.cur.done());
             self.in_ports[port].busy = false;
         }
+        true
     }
 
     /// RMW element ordering: the store's next element may be written only
@@ -452,29 +522,33 @@ impl Lane {
                 .all(|l| l.cur.pos() > s.cur.pos())
     }
 
-    fn step_one_store(&mut self, now: u64) {
-        let mut ready: Vec<usize> = Vec::new();
+    fn step_one_store(&mut self, now: u64) -> bool {
+        // Direct selection (no scratch list): maximum buffered data at
+        // the source port first; ties keep the highest stream index,
+        // matching the previous `max_by_key` selection.
+        let mut best: Option<usize> = None;
+        let mut best_len = 0usize;
+        let mut n_ready = 0usize;
         for (k, s) in self.stores.iter().enumerate() {
             if s.stall > 0
                 || (self.out_ports[s.port].head_ready(now).is_some()
                     && self.rmw_clear(s))
             {
-                ready.push(k);
+                n_ready += 1;
+                let len = self.out_ports[s.port].len();
+                if best.is_none() || len >= best_len {
+                    best_len = len;
+                    best = Some(k);
+                }
             }
         }
-        if ready.is_empty() {
-            return;
-        }
-        if ready.len() > 1 {
+        let Some(k) = best else { return false };
+        if n_ready > 1 {
             self.flags.spad_contention = true;
         }
-        let &k = ready
-            .iter()
-            .max_by_key(|&&k| self.out_ports[self.stores[k].port].len())
-            .unwrap();
         if self.stores[k].stall > 0 {
             self.stores[k].stall -= 1;
-            return;
+            return true;
         }
         // One 512-bit line per cycle: drain as many ready instances of
         // the chosen stream as the line budget allows.
@@ -486,31 +560,35 @@ impl Lane {
             && self.out_ports[port].head_ready(now).is_some()
             && self.rmw_clear(&self.stores[k])
         {
-            let s = &mut self.stores[k];
             let inst = self.out_ports[port].pop();
-            let active: Vec<f64> = inst
-                .vals
-                .iter()
-                .zip(&inst.pred)
-                .filter(|(_, &p)| p)
-                .map(|(&v, _)| v)
-                .collect();
-            let n = active.len() as i64;
-            assert!(
-                n <= s.cur.remaining_in_row(),
-                "store instance ({n}) crosses row boundary ({} left) on lane {} port {port}",
-                s.cur.remaining_in_row(),
-                self.id,
-            );
-            let gather =
-                Spad::line_gather(s.cur.addr(), s.cur.stride()).max(1) as i64;
-            extra_cycles += if n == 0 { 0 } else { (n + gather - 1) / gather - 1 };
-            let addrs = s.cur.take(n);
-            for (a, v) in addrs.iter().zip(&active) {
-                self.spad.write(*a, *v);
+            let n =
+                inst.vals.iter().zip(&inst.pred).filter(|(_, &p)| p).count() as i64;
+            {
+                let s = &self.stores[k];
+                assert!(
+                    n <= s.cur.remaining_in_row(),
+                    "store instance ({n}) crosses row boundary ({} left) on lane {} port {port}",
+                    s.cur.remaining_in_row(),
+                    self.id,
+                );
+                let gather =
+                    Spad::line_gather(s.cur.addr(), s.cur.stride()).max(1) as i64;
+                extra_cycles += if n == 0 { 0 } else { (n + gather - 1) / gather - 1 };
+                // Write the active elements in element order, without
+                // materializing address or value scratch lists.
+                let (j, i) = s.cur.pos();
+                let mut d = 0i64;
+                for (v, &p) in inst.vals.iter().zip(&inst.pred) {
+                    if p {
+                        self.spad.write(s.cur.pat.addr(j, i + d), *v);
+                        d += 1;
+                    }
+                }
             }
+            self.stores[k].cur.advance(n);
             self.counters.spad_words += n as u64;
             budget -= n.max(1);
+            self.recycle(inst);
         }
         let s = &mut self.stores[k];
         s.stall = extra_cycles.max(0) as u64;
@@ -518,47 +596,56 @@ impl Lane {
             self.stores.retain(|x| !x.cur.done());
             self.out_ports[port].busy = false;
         }
+        true
     }
 
-    fn step_consts(&mut self, now: u64) {
-        let widths: Vec<usize> =
-            self.consts.iter().map(|c| self.in_width(c.port)).collect();
-        let mut finished = Vec::new();
-        for (k, c) in self.consts.iter_mut().enumerate() {
-            if !self.in_ports[c.port].has_space() {
+    fn step_consts(&mut self, now: u64) -> bool {
+        // Index-based walk so widths need no scratch collection and
+        // finished streams retire in place.
+        let mut changed = false;
+        let mut k = 0;
+        while k < self.consts.len() {
+            let port = self.consts[k].port;
+            if !self.in_ports[port].has_space() {
+                k += 1;
                 continue;
             }
-            let w = widths[k];
+            let w = self.in_width(port);
             // Instances respect row boundaries so gate streams stay
             // aligned with the masked data instances they predicate.
-            let chunk = (c.cur.remaining_in_row().max(0) as usize).min(w);
-            let mut vals = Vec::with_capacity(w);
+            let chunk =
+                (self.consts[k].cur.remaining_in_row().max(0) as usize).min(w);
+            let mut inst = self.vec_from_pool();
             for _ in 0..chunk.max(1) {
-                match c.cur.next() {
-                    Some(v) => vals.push(v),
+                match self.consts[k].cur.next() {
+                    Some(v) => {
+                        inst.vals.push(v);
+                        inst.pred.push(true);
+                    }
                     None => break,
                 }
             }
-            if vals.is_empty() {
-                finished.push(k);
+            if inst.vals.is_empty() {
+                self.recycle(inst);
+                self.in_ports[port].busy = false;
+                self.consts.remove(k);
+                changed = true;
                 continue;
             }
-            let n = vals.len();
-            let mut pred = vec![true; n];
-            if n < w {
-                vals.resize(w, 0.0);
-                pred.resize(w, false);
+            if inst.vals.len() < w {
+                inst.vals.resize(w, 0.0);
+                inst.pred.resize(w, false);
             }
-            self.in_ports[c.port].push(VecVal::masked(vals, pred), now + 1);
-            if c.cur.done() {
-                finished.push(k);
+            self.in_ports[port].push(inst, now + 1);
+            changed = true;
+            if self.consts[k].cur.done() {
+                self.in_ports[port].busy = false;
+                self.consts.remove(k);
+            } else {
+                k += 1;
             }
         }
-        for &k in finished.iter().rev() {
-            let port = self.consts[k].port;
-            self.in_ports[port].busy = false;
-            self.consts.remove(k);
-        }
+        changed
     }
 
     /// Phase 3: dataflow firing. Every eligible dataflow fires (the data
@@ -577,13 +664,15 @@ impl Lane {
             if t.temporal && temporal_budget == 0 {
                 continue;
             }
-            // All inputs visible? (borrow heads; consumption happens
-            // after execution via present()).
-            let mut heads: Vec<&VecVal> = Vec::with_capacity(dfg.in_ports.len());
+            // All inputs visible? Heads borrow into a fixed stack array
+            // (no per-cycle allocation); consumption happens after
+            // execution via present().
+            debug_assert!(dfg.in_ports.len() <= NUM_PORTS);
+            let mut heads: [&VecVal; NUM_PORTS] = [&EMPTY_INSTANCE; NUM_PORTS];
             let mut all = true;
-            for p in &dfg.in_ports {
+            for (slot, p) in heads.iter_mut().zip(&dfg.in_ports) {
                 match self.in_ports[p.gid].head(now) {
-                    Some(v) => heads.push(v),
+                    Some(v) => *slot = v,
                     None => {
                         all = false;
                         break;
@@ -593,13 +682,15 @@ impl Lane {
             if !all {
                 continue;
             }
+            let heads = &heads[..dfg.in_ports.len()];
             // All outputs have space?
             if !dfg.outs.iter().all(|o| self.out_ports[o.gid].has_space()) {
                 continue;
             }
             // Active lanes this firing = AND of vector-width predicates.
             let w = dfg.width();
-            let mut pred = vec![true; w];
+            debug_assert!(w <= LINE_WORDS);
+            let mut pred = [true; LINE_WORDS];
             for (h, p) in heads.iter().zip(&dfg.in_ports) {
                 if p.width > 1 || w == 1 {
                     for l in 0..w.min(h.width()) {
@@ -607,9 +698,9 @@ impl Lane {
                     }
                 }
             }
-            let active = pred.iter().filter(|&&b| b).count().max(1);
-            let outs = exec_dfg(dfg, &heads, &mut self.acc[di]);
-            if std::env::var_os("REVEL_TRACE").is_some() {
+            let active = pred[..w].iter().filter(|&&b| b).count().max(1);
+            let outs = exec_dfg(dfg, heads, &mut self.acc[di]);
+            if trace_enabled() {
                 eprintln!(
                     "[{now}] lane{} fire {}: in={:?} out={:?}",
                     self.id,
@@ -622,10 +713,13 @@ impl Lane {
             }
             // Consume inputs: scalar ports feeding a vector dataflow burn
             // `active` element-consumptions (reuse in element units);
-            // full-width ports burn one presentation.
+            // full-width ports burn one presentation. Spent instances go
+            // back to the buffer pool.
             for p in &dfg.in_ports {
                 let units = if p.width == 1 && w > 1 { active } else { 1 };
-                self.in_ports[p.gid].present(units);
+                if let Some(spent) = self.in_ports[p.gid].present(units) {
+                    self.recycle(spent);
+                }
             }
             for (o, out) in dfg.outs.iter().zip(outs) {
                 if let Some(v) = out {
@@ -682,6 +776,38 @@ impl Lane {
             || !self.consts.is_empty()
             || self.config_pending.is_some()
             || !self.fifos_empty()
+    }
+
+    /// Earliest future cycle (>= `now`) at which this lane's time-gated
+    /// state can unblock: pending-configuration completion, dataflow
+    /// initiation intervals, and FIFO-head visibility (only the head of
+    /// each FIFO gates behavior — `head`/`head_ready` never look
+    /// deeper). `None` means the lane holds no future-dated state, so
+    /// any progress must come from a state change elsewhere.
+    pub fn next_wake(&self, now: u64) -> Option<u64> {
+        let mut wake: Option<u64> = None;
+        let mut upd = |t: u64| {
+            if t >= now && wake.map_or(true, |w| t < w) {
+                wake = Some(t);
+            }
+        };
+        if let Some((_, done_at)) = &self.config_pending {
+            upd(*done_at);
+        }
+        for &t in &self.next_fire {
+            upd(t);
+        }
+        for p in &self.in_ports {
+            if let Some(e) = p.fifo.front() {
+                upd(e.ready);
+            }
+        }
+        for p in &self.out_ports {
+            if let Some(e) = p.fifo.front() {
+                upd(e.ready);
+            }
+        }
+        wake
     }
 
     fn install(&mut self, cfgd: Arc<Configured>) {

@@ -21,6 +21,12 @@ pub struct SimConfig {
     pub shared_words: usize,
     /// Watchdog: abort (deadlock diagnostics) after this many cycles.
     pub max_cycles: u64,
+    /// Force the pre-event-driven dense scheduler: advance one cycle at
+    /// a time instead of fast-forwarding over provably quiescent spans.
+    /// Simulated cycle counts and every `Stats` bucket are bit-identical
+    /// either way (pinned by `tests/equivalence.rs`); the flag exists
+    /// for that A/B proof and for debugging, not for users.
+    pub dense_stepping: bool,
 }
 
 /// Default watchdog budget. Real workload runs finish in well under 1M
@@ -70,6 +76,7 @@ impl Default for SimConfig {
             lane_spad_words: 2048,
             shared_words: 32768,
             max_cycles: DEFAULT_MAX_CYCLES,
+            dense_stepping: false,
         }
     }
 }
@@ -143,6 +150,39 @@ enum CtrlState {
     Fetch,
 }
 
+/// Per-lane external-activity counters, maintained incrementally as
+/// XFER / shared-scratchpad streams start and retire. Replaces the
+/// per-lane-per-cycle scans over the active stream lists that the dense
+/// poll loop performed in `ext_busy()`/`classify()`.
+#[derive(Clone, Debug, Default)]
+struct ExtActivity {
+    /// Active shared-scratchpad streams per lane.
+    shared: Vec<u32>,
+    /// Active XFER streams sourcing from each lane.
+    xfer_src: Vec<u32>,
+    /// Active XFER streams destined to each lane (broadcasts count once
+    /// per destination lane).
+    xfer_dst: Vec<u32>,
+}
+
+impl ExtActivity {
+    fn new(lanes: usize) -> Self {
+        Self {
+            shared: vec![0; lanes],
+            xfer_src: vec![0; lanes],
+            xfer_dst: vec![0; lanes],
+        }
+    }
+
+    fn busy(&self, lane: usize) -> ExtBusy {
+        ExtBusy {
+            shared_active: self.shared[lane] > 0,
+            xfer_src_active: self.xfer_src[lane] > 0,
+            xfer_dst_active: self.xfer_dst[lane] > 0,
+        }
+    }
+}
+
 pub struct Machine {
     pub cfg: SimConfig,
     pub lanes: Vec<Lane>,
@@ -152,15 +192,30 @@ pub struct Machine {
     prog: VecDeque<VsCommand>,
     ctrl: CtrlState,
     xfers: Vec<XferStream>,
-    shareds: Vec<SharedStream>,
+    shareds: VecDeque<SharedStream>,
+    /// Incrementally maintained activity counters behind `ext_busy`.
+    ext: ExtActivity,
+    /// Cached finish predicate: recomputed only on ticks that change
+    /// state, making `finished()` O(1) in the run loop.
+    done: bool,
+    /// Per-lane Fig-18 bucket of the most recently simulated cycle. A
+    /// quiescent span repeats the last cycle verbatim, so the skip
+    /// batch-attributes these buckets to every skipped cycle.
+    last_buckets: Vec<Bucket>,
+    /// Reusable per-tick scratch for XFER local-bus arbitration.
+    xfer_local_busy: Vec<bool>,
 }
 
 impl Machine {
     pub fn new(cfg: SimConfig) -> Self {
-        let lanes =
+        let lanes: Vec<Lane> =
             (0..cfg.lanes).map(|i| Lane::new(i, cfg.lane_spad_words)).collect();
         Self {
             shared: Spad::new(cfg.shared_words),
+            ext: ExtActivity::new(lanes.len()),
+            done: true,
+            last_buckets: vec![Bucket::Done; lanes.len()],
+            xfer_local_busy: vec![false; lanes.len()],
             lanes,
             cfg,
             stats: Stats::default(),
@@ -168,7 +223,7 @@ impl Machine {
             prog: VecDeque::new(),
             ctrl: CtrlState::Fetch,
             xfers: Vec::new(),
-            shareds: Vec::new(),
+            shareds: VecDeque::new(),
         }
     }
 
@@ -178,21 +233,57 @@ impl Machine {
 
     /// Run a control program to completion; cycle counts accumulate into
     /// `stats` (callers may run several programs back to back).
+    ///
+    /// Scheduling is event-driven: after any cycle in which no
+    /// architectural state changed, `now` fast-forwards to the next
+    /// cycle at which some component *can* make progress (the internal
+    /// wake-time calendar), and the skipped cycles are batch-attributed
+    /// to the same Fig-18 buckets the last simulated cycle produced — a
+    /// skipped cycle is by construction identical to it.
+    /// `SimConfig::dense_stepping` disables the skip for A/B
+    /// verification; results are bit-identical either way.
     pub fn run(&mut self, prog: Program) -> Result<&Stats, SimError> {
         self.prog = prog.into();
         self.ctrl = CtrlState::Fetch;
+        self.done = self.compute_finished();
         let deadline = self.now + self.cfg.max_cycles;
         while !self.finished() {
             if self.now >= deadline {
+                self.stats.cycles = self.now;
                 return Err(SimError::Deadlock(self.snapshot()));
             }
-            self.tick();
+            if self.tick() {
+                self.done = self.compute_finished();
+            } else if !self.cfg.dense_stepping && !self.done {
+                self.skip_quiescent(deadline);
+            }
         }
         self.stats.cycles = self.now;
         Ok(&self.stats)
     }
 
+    /// Advance exactly one cycle (dense stepping, no quiescence skip).
+    /// A hook for tests and external drivers that need cycle-by-cycle
+    /// control; [`Machine::run`] is the normal entry point. Returns
+    /// whether any architectural state changed.
+    pub fn step_cycle(&mut self) -> bool {
+        let changed = self.tick();
+        // Keep Stats self-consistent for external drivers (`run` only
+        // refreshes the field at its exit points).
+        self.stats.cycles = self.now;
+        if changed {
+            self.done = self.compute_finished();
+        }
+        changed
+    }
+
+    /// O(1): reads the finish state cached by the last state-changing
+    /// tick (a cycle that changes nothing cannot finish the machine).
     fn finished(&self) -> bool {
+        self.done
+    }
+
+    fn compute_finished(&self) -> bool {
         self.prog.is_empty()
             && matches!(self.ctrl, CtrlState::Fetch)
             && self.xfers.is_empty()
@@ -200,7 +291,58 @@ impl Machine {
             && self.lanes.iter().all(|l| l.local_idle())
     }
 
+    /// Fast-forward over a provably quiescent span. Called only after a
+    /// tick that changed nothing: every cycle up to the next wake time
+    /// would repeat that tick exactly, so the span's lane-cycles land in
+    /// the very same buckets (`last_buckets`) and no per-cycle work is
+    /// needed. The deadline clamp keeps the watchdog firing at the same
+    /// cycle — with the same accumulated `Stats` — as dense stepping.
+    fn skip_quiescent(&mut self, deadline: u64) {
+        let wake = self.next_wake().map_or(deadline, |w| w.min(deadline));
+        if wake <= self.now {
+            return;
+        }
+        let skipped = wake - self.now;
+        for &b in &self.last_buckets {
+            self.stats.add_many(b, skipped);
+        }
+        self.now = wake;
+    }
+
+    /// The wake-time calendar: earliest future cycle at which any
+    /// time-gated component can act — the control core's parameter
+    /// computation window, lane configuration completions, dataflow
+    /// initiation intervals, and FIFO-head visibility times. All other
+    /// blocking conditions are pure state, which by definition cannot
+    /// change during a quiescent span.
+    fn next_wake(&self) -> Option<u64> {
+        let now = self.now;
+        let mut wake: Option<u64> = None;
+        let mut upd = |t: u64| {
+            if t >= now && wake.map_or(true, |w| t < w) {
+                wake = Some(t);
+            }
+        };
+        if let CtrlState::Computing { until, .. } = &self.ctrl {
+            upd(*until);
+        }
+        for lane in &self.lanes {
+            if let Some(t) = lane.next_wake(now) {
+                upd(t);
+            }
+        }
+        wake
+    }
+
+    /// O(1) via the incrementally maintained [`ExtActivity`] counters.
     fn ext_busy(&self, lane: usize) -> ExtBusy {
+        self.ext.busy(lane)
+    }
+
+    /// Reference implementation of `ext_busy` by scanning the stream
+    /// lists — the cross-check for the incremental counters.
+    #[cfg(test)]
+    fn ext_busy_scan(&self, lane: usize) -> ExtBusy {
         ExtBusy {
             shared_active: self.shareds.iter().any(|s| s.lane == lane),
             xfer_src_active: self.xfers.iter().any(|x| x.src_lane == lane),
@@ -215,32 +357,39 @@ impl Machine {
         self.lanes[lane].local_idle() && !self.ext_busy(lane).any()
     }
 
-    fn tick(&mut self) {
+    /// Simulate exactly one cycle. Returns whether any architectural
+    /// state changed — `false` means the machine is quiescent and every
+    /// following cycle until [`Machine::next_wake`] would be identical.
+    fn tick(&mut self) -> bool {
         let now = self.now;
-        self.ctrl_step(now);
+        let mut changed = self.ctrl_step(now);
         // Lane command issue (may start machine-level streams).
         for l in 0..self.lanes.len() {
             let ext = self.ext_busy(l);
-            if let Some(ev) = self.lanes[l].step_issue(now, ext) {
+            let (ev, issued) = self.lanes[l].step_issue(now, ext);
+            changed |= issued;
+            if let Some(ev) = ev {
                 self.start_event(l, ev);
             }
         }
         // Local SPAD/const streams.
         for lane in &mut self.lanes {
-            lane.step_streams(now);
+            changed |= lane.step_streams(now);
         }
         // Machine-arbitrated buses.
-        self.step_xfers(now);
-        self.step_shareds(now);
+        changed |= self.step_xfers(now);
+        changed |= self.step_shareds(now);
         // Fabric firing + Fig-18 accounting.
         let prog_live = !self.prog.is_empty() || !matches!(self.ctrl, CtrlState::Fetch);
         for l in 0..self.lanes.len() {
             let (ded, temp) = self.lanes[l].step_fire(now);
+            changed |= ded + temp > 0;
             let bucket = self.classify(l, ded, temp, prog_live);
+            self.last_buckets[l] = bucket;
             self.stats.add(bucket);
         }
         self.now += 1;
-        self.stats.cycles = self.now;
+        changed
     }
 
     fn classify(&self, l: usize, ded: usize, temp: usize, prog_live: bool) -> Bucket {
@@ -268,52 +417,66 @@ impl Machine {
 
     // ---- Control core ---------------------------------------------------
 
-    fn ctrl_step(&mut self, now: u64) {
+    /// Advance the control core. Returns whether its state changed this
+    /// cycle (a stalled broadcast or an unexpired compute window mutates
+    /// nothing). The state is taken by value (`mem::replace` against
+    /// `Fetch`) so command payloads move between states without the
+    /// per-cycle `cmd.clone()` the borrowed match needed.
+    fn ctrl_step(&mut self, now: u64) -> bool {
+        let mut changed = false;
         loop {
-            match &self.ctrl {
+            match std::mem::replace(&mut self.ctrl, CtrlState::Fetch) {
                 CtrlState::Fetch => {
-                    let Some(cmd) = self.prog.pop_front() else { return };
+                    let Some(cmd) = self.prog.pop_front() else {
+                        return changed; // ctrl stays Fetch
+                    };
                     let cost = cmd.ctrl_cost();
                     self.stats.commands += 1;
                     self.stats.ctrl_core_cycles += cost;
                     self.ctrl = CtrlState::Computing { until: now + cost, cmd };
-                    return;
+                    return true;
                 }
                 CtrlState::Computing { until, cmd } => {
-                    if now < *until {
-                        return;
+                    if now < until {
+                        self.ctrl = CtrlState::Computing { until, cmd };
+                        return changed;
                     }
-                    self.ctrl = CtrlState::Broadcasting { cmd: cmd.clone() };
+                    changed = true;
+                    self.ctrl = CtrlState::Broadcasting { cmd };
                 }
                 CtrlState::Broadcasting { cmd } => {
-                    let cmd = cmd.clone();
                     if matches!(cmd.cmd, Cmd::Wait) {
                         self.ctrl = CtrlState::Waiting { mask: cmd.lanes };
-                        return;
+                        return true;
                     }
                     // All masked lanes need queue space (broadcast bus).
-                    let targets: Vec<usize> =
-                        cmd.lanes.lanes().filter(|&l| l < self.lanes.len()).collect();
-                    if !targets.iter().all(|&l| self.lanes[l].queue_has_space()) {
-                        return; // stall; retry next cycle
+                    let space = cmd
+                        .lanes
+                        .lanes()
+                        .filter(|&l| l < self.lanes.len())
+                        .all(|l| self.lanes[l].queue_has_space());
+                    if !space {
+                        self.ctrl = CtrlState::Broadcasting { cmd };
+                        return changed; // stall; retry next cycle
                     }
-                    for &l in &targets {
+                    for l in cmd.lanes.lanes().filter(|&l| l < self.lanes.len()) {
                         let c = instantiate(&cmd, l);
                         self.lanes[l].queue.push_back(c);
                     }
-                    self.ctrl = CtrlState::Fetch;
-                    return; // one broadcast per cycle
+                    // ctrl is already Fetch from the replace above.
+                    return true; // one broadcast per cycle
                 }
                 CtrlState::Waiting { mask } => {
-                    let mask = *mask;
-                    let done = mask
+                    let released = mask
                         .lanes()
                         .filter(|&l| l < self.lanes.len())
                         .all(|l| self.lane_inactive(l));
-                    if !done {
-                        return;
+                    if !released {
+                        self.ctrl = CtrlState::Waiting { mask };
+                        return changed;
                     }
-                    self.ctrl = CtrlState::Fetch;
+                    changed = true;
+                    // Fall through to Fetch on the next loop iteration.
                 }
             }
         }
@@ -340,7 +503,9 @@ impl Machine {
                 for &(dl, dp) in &dsts {
                     self.lanes[dl].in_ports[dp].busy = true;
                     self.lanes[dl].in_ports[dp].push_reuse(reuse, n);
+                    self.ext.xfer_dst[dl] += 1;
                 }
+                self.ext.xfer_src[l] += 1;
                 self.xfers.push(XferStream {
                     src_lane: l,
                     src_port,
@@ -352,7 +517,8 @@ impl Machine {
             LaneEvent::StartSharedLd { pat, shared_addr, local_addr } => {
                 let mut pat = pat;
                 pat.start += shared_addr;
-                self.shareds.push(SharedStream {
+                self.ext.shared[l] += 1;
+                self.shareds.push_back(SharedStream {
                     lane: l,
                     cur: StreamCursor::new(pat),
                     dst_base: local_addr,
@@ -363,7 +529,8 @@ impl Machine {
             LaneEvent::StartSharedSt { pat, local_addr, shared_addr } => {
                 let mut pat = pat;
                 pat.start += local_addr;
-                self.shareds.push(SharedStream {
+                self.ext.shared[l] += 1;
+                self.shareds.push_back(SharedStream {
                     lane: l,
                     cur: StreamCursor::new(pat),
                     dst_base: shared_addr,
@@ -374,72 +541,102 @@ impl Machine {
         }
     }
 
+    /// Release a finished XFER stream's port scoreboards and activity
+    /// counters.
+    fn retire_xfer(&mut self, x: &XferStream) {
+        self.lanes[x.src_lane].out_ports[x.src_port].busy = false;
+        self.ext.xfer_src[x.src_lane] -= 1;
+        for &(dl, dp) in &x.dsts {
+            self.lanes[dl].in_ports[dp].busy = false;
+            self.ext.xfer_dst[dl] -= 1;
+        }
+    }
+
     /// XFER arbitration: each lane's local bus moves one instance per
     /// cycle; the inter-lane 512-bit bus carries one transfer per cycle
-    /// machine-wide (paper Table 3).
-    fn step_xfers(&mut self, now: u64) {
+    /// machine-wide (paper Table 3). Streams retire in place via
+    /// `retain_mut` (arbitration order — the Vec order — is preserved
+    /// for the survivors, exactly as the old collect-then-`remove`
+    /// dance preserved it). Returns whether anything moved or retired.
+    fn step_xfers(&mut self, now: u64) -> bool {
+        if self.xfers.is_empty() {
+            return false;
+        }
+        let mut changed = false;
         let mut global_budget = 1usize;
-        let mut local_busy = vec![false; self.lanes.len()];
-        let mut done: Vec<usize> = Vec::new();
-        for (xi, x) in self.xfers.iter_mut().enumerate() {
+        self.xfer_local_busy.clear();
+        self.xfer_local_busy.resize(self.lanes.len(), false);
+        // Take the list out so the closure can borrow the rest of self.
+        let mut xfers = std::mem::take(&mut self.xfers);
+        xfers.retain_mut(|x| {
             if x.remaining == 0 {
-                done.push(xi);
-                continue;
+                // Zero-length transfer: retire without moving data.
+                self.retire_xfer(x);
+                changed = true;
+                return false;
             }
             let (dl, dp) = x.dsts[x.dst_idx];
             let is_local = dl == x.src_lane;
             if is_local {
-                if local_busy[x.src_lane] {
-                    continue;
+                if self.xfer_local_busy[x.src_lane] {
+                    return true;
                 }
             } else if global_budget == 0 {
-                continue;
+                return true;
             }
             // Source head ready and destination space?
-            let Some(val) = self.lanes[x.src_lane].out_ports[x.src_port]
-                .head_ready(now)
-                .cloned()
-            else {
-                continue;
-            };
-            if !self.lanes[dl].in_ports[dp].has_space() {
-                continue;
+            if self.lanes[x.src_lane].out_ports[x.src_port].head_ready(now).is_none()
+                || !self.lanes[dl].in_ports[dp].has_space()
+            {
+                return true;
             }
+            let last_dst = x.dst_idx + 1 == x.dsts.len();
+            let val = if last_dst {
+                // Final fan-out destination: move the instance instead
+                // of cloning it (single-destination transfers — the
+                // common case — never clone).
+                self.lanes[x.src_lane].out_ports[x.src_port].pop()
+            } else {
+                self.lanes[x.src_lane].out_ports[x.src_port]
+                    .head_ready(now)
+                    .cloned()
+                    .expect("head readiness checked above")
+            };
             self.lanes[dl].in_ports[dp].push(val, now + 1);
             self.stats.xfer_elems += 1;
+            changed = true;
             if is_local {
-                local_busy[x.src_lane] = true;
+                self.xfer_local_busy[x.src_lane] = true;
             } else {
                 global_budget -= 1;
             }
             x.dst_idx += 1;
-            if x.dst_idx == x.dsts.len() {
+            if last_dst {
                 x.dst_idx = 0;
-                self.lanes[x.src_lane].out_ports[x.src_port].pop();
                 x.remaining -= 1;
                 if x.remaining == 0 {
-                    done.push(xi);
+                    self.retire_xfer(x);
+                    return false;
                 }
             }
-        }
-        for &xi in done.iter().rev() {
-            let x = self.xfers.remove(xi);
-            self.lanes[x.src_lane].out_ports[x.src_port].busy = false;
-            for &(dl, dp) in &x.dsts {
-                self.lanes[dl].in_ports[dp].busy = false;
-            }
-        }
+            true
+        });
+        self.xfers = xfers;
+        changed
     }
 
     /// Shared-scratchpad bus: one lane's stream served per cycle, up to
-    /// one 512-bit line (16 words).
-    fn step_shareds(&mut self, _now: u64) {
-        let Some(s) = self.shareds.first_mut() else { return };
+    /// one 512-bit line (16 words). Returns whether a stream was served
+    /// (an active stream always moves data or retires, so the bus is
+    /// never silently idle while streams queue).
+    fn step_shareds(&mut self, _now: u64) -> bool {
+        let Some(s) = self.shareds.front_mut() else { return false };
         let mut moved_now = 0usize;
         while moved_now < LINE_WORDS && !s.cur.done() {
             let k = s.cur.remaining_in_row().min((LINE_WORDS - moved_now) as i64);
-            let addrs = s.cur.take(k);
-            for a in addrs {
+            let (j, i) = s.cur.pos();
+            for d in 0..k {
+                let a = s.cur.pat.addr(j, i + d);
                 let dst = s.dst_base + s.moved;
                 if s.is_load {
                     let v = self.shared.read(a);
@@ -451,11 +648,15 @@ impl Machine {
                 s.moved += 1;
                 moved_now += 1;
             }
+            s.cur.advance(k);
         }
         self.stats.spad_words += moved_now as u64;
         if s.cur.done() {
-            self.shareds.remove(0);
+            let lane = s.lane;
+            self.shareds.pop_front();
+            self.ext.shared[lane] -= 1;
         }
+        true
     }
 
     fn snapshot(&self) -> String {
@@ -799,5 +1000,205 @@ mod tests {
         let total: u64 = m.stats.lane_cycles.iter().sum();
         assert_eq!(total, m.stats.cycles * 1, "every lane-cycle bucketed");
         assert!(m.stats.get(Bucket::Issue) > 0);
+    }
+
+    /// The incrementally maintained ExtActivity counters must agree with
+    /// a scan of the live stream lists on every single cycle of a run
+    /// that exercises broadcasts, remote xfers and shared streams.
+    #[test]
+    fn cached_ext_busy_matches_stream_list_scan_every_cycle() {
+        let lanes = 4;
+        let mut m = Machine::new(SimConfig { lanes, ..Default::default() });
+        m.lanes[0].spad.write(16, 25.0);
+        for l in 0..lanes {
+            m.lanes[l].spad.load_slice(0, &[l as f64 + 1.0; 4]);
+        }
+        let l0 = LaneMask::one(0);
+        let all = LaneMask::first_n(lanes);
+        let prog: Program = vec![
+            vs(Cmd::Configure(sqrt_cfg()), all),
+            VsCommand::with_stride(
+                Cmd::SharedSt {
+                    pat: Pattern2D::lin(0, 4),
+                    local_addr: 0,
+                    shared_addr: 300,
+                },
+                all,
+                4,
+            ),
+            vs(ld(Pattern2D::lin(16, 1), 2), l0),
+            vs(
+                Cmd::Xfer {
+                    src_port: 2,
+                    dst_port: 1,
+                    dst: XferDst::Bcast(all),
+                    n: 1,
+                    reuse: Some(Reuse::uniform(4.0)),
+                },
+                l0,
+            ),
+            vs(ld(Pattern2D::lin(0, 4), 0), all),
+            vs(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false }, all),
+            vs(Cmd::Wait, all),
+        ];
+        m.prog = prog.into();
+        m.ctrl = CtrlState::Fetch;
+        m.done = m.compute_finished();
+        let mut guard = 0u64;
+        while !m.finished() {
+            m.step_cycle();
+            for l in 0..lanes {
+                assert_eq!(
+                    m.ext_busy(l),
+                    m.ext_busy_scan(l),
+                    "cycle {} lane {l}",
+                    m.now()
+                );
+            }
+            guard += 1;
+            assert!(guard < 100_000, "run did not complete");
+        }
+        for l in 0..lanes {
+            assert_eq!(m.ext.shared[l], 0, "lane {l} shared count drained");
+            assert_eq!(m.ext.xfer_src[l], 0, "lane {l} src count drained");
+            assert_eq!(m.ext.xfer_dst[l], 0, "lane {l} dst count drained");
+        }
+    }
+
+    /// Quiescence skipping must leave cycle counts, every Fig-18 bucket
+    /// and the memory image bit-identical to dense stepping.
+    #[test]
+    fn quiescence_skipping_matches_dense_stepping() {
+        let run = |dense: bool| {
+            let lanes = 4;
+            let mut m = Machine::new(SimConfig {
+                lanes,
+                dense_stepping: dense,
+                ..Default::default()
+            });
+            m.lanes[0].spad.write(16, 25.0);
+            for l in 0..lanes {
+                m.lanes[l].spad.load_slice(0, &[l as f64 + 1.0; 4]);
+            }
+            let l0 = LaneMask::one(0);
+            let all = LaneMask::first_n(lanes);
+            let prog: Program = vec![
+                vs(Cmd::Configure(sqrt_cfg()), all),
+                vs(ld(Pattern2D::lin(16, 1), 2), l0),
+                vs(
+                    Cmd::Xfer {
+                        src_port: 2,
+                        dst_port: 1,
+                        dst: XferDst::Bcast(all),
+                        n: 1,
+                        reuse: Some(Reuse::uniform(4.0)),
+                    },
+                    l0,
+                ),
+                vs(ld(Pattern2D::lin(0, 4), 0), all),
+                vs(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false }, all),
+                vs(Cmd::Wait, all),
+            ];
+            m.run(prog).unwrap();
+            let mem: Vec<Vec<f64>> =
+                (0..lanes).map(|l| m.lanes[l].spad.read_slice(8, 4)).collect();
+            (m.stats.clone(), mem)
+        };
+        let dense = run(true);
+        let event = run(false);
+        assert_eq!(dense.0, event.0, "Stats must be bit-identical");
+        assert_eq!(dense.1, event.1, "memory images must match");
+    }
+
+    /// Regression for the xfer retire path: two transfers in flight at
+    /// once (both lanes source one) retire through a single step_xfers
+    /// pass, identically in both scheduling modes.
+    #[test]
+    fn concurrent_xfers_retire_cleanly_in_both_modes() {
+        let run = |dense: bool| {
+            let mut m = Machine::new(SimConfig {
+                lanes: 2,
+                dense_stepping: dense,
+                ..Default::default()
+            });
+            m.lanes[0].spad.write(16, 16.0);
+            m.lanes[1].spad.write(16, 25.0);
+            for l in 0..2 {
+                m.lanes[l].spad.load_slice(0, &[1.0, 2.0, 3.0, 4.0]);
+            }
+            let both = LaneMask::first_n(2);
+            let prog: Program = vec![
+                vs(Cmd::Configure(sqrt_cfg()), both),
+                vs(ld(Pattern2D::lin(16, 1), 2), both),
+                // Cross transfers: lane0 -> lane1 and lane1 -> lane0 are
+                // in flight together.
+                vs(
+                    Cmd::Xfer {
+                        src_port: 2,
+                        dst_port: 1,
+                        dst: XferDst::Lane(1),
+                        n: 1,
+                        reuse: Some(Reuse::uniform(4.0)),
+                    },
+                    both,
+                ),
+                vs(ld(Pattern2D::lin(0, 4), 0), both),
+                vs(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false }, both),
+                vs(Cmd::Wait, both),
+            ];
+            m.run(prog).unwrap();
+            (
+                m.stats.clone(),
+                m.lanes[0].spad.read_slice(8, 4),
+                m.lanes[1].spad.read_slice(8, 4),
+            )
+        };
+        let dense = run(true);
+        let event = run(false);
+        assert_eq!(dense, event);
+        // lane1's sqrt(25)=5 scales lane0; lane0's sqrt(16)=4 scales lane1.
+        assert_eq!(event.1, vec![5.0, 10.0, 15.0, 20.0]);
+        assert_eq!(event.2, vec![4.0, 8.0, 12.0, 16.0]);
+        assert!(event.0.xfer_elems >= 2);
+    }
+
+    /// A zero-length transfer must retire (releasing its port
+    /// scoreboards) instead of wedging the source port forever.
+    #[test]
+    fn zero_length_xfer_retires_and_frees_the_port() {
+        let mut m = Machine::new(SimConfig { lanes: 1, ..Default::default() });
+        m.lanes[0].spad.write(16, 9.0);
+        m.lanes[0].spad.load_slice(0, &[1.0, 2.0, 3.0, 4.0]);
+        let one = LaneMask::one(0);
+        let prog: Program = vec![
+            vs(Cmd::Configure(sqrt_cfg()), one),
+            // n = 0: occupies out port 2, then must retire without data.
+            vs(
+                Cmd::Xfer {
+                    src_port: 2,
+                    dst_port: 3,
+                    dst: XferDst::Local,
+                    n: 0,
+                    reuse: None,
+                },
+                one,
+            ),
+            vs(ld(Pattern2D::lin(16, 1), 2), one),
+            vs(
+                Cmd::Xfer {
+                    src_port: 2,
+                    dst_port: 1,
+                    dst: XferDst::Local,
+                    n: 1,
+                    reuse: Some(Reuse::uniform(4.0)),
+                },
+                one,
+            ),
+            vs(ld(Pattern2D::lin(0, 4), 0), one),
+            vs(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false }, one),
+            vs(Cmd::Wait, one),
+        ];
+        m.run(prog).unwrap();
+        assert_eq!(m.lanes[0].spad.read_slice(8, 4), vec![3.0, 6.0, 9.0, 12.0]);
     }
 }

@@ -15,6 +15,15 @@
 //!   sqrt/div FUs); the temporal region retires one dataflow firing per
 //!   cycle across its tiles;
 //! * every lane-cycle lands in exactly one Fig-18 accounting bucket.
+//!
+//! Scheduling is event-driven: the machine simulates a cycle, and if
+//! nothing changed it fast-forwards to the next wake time (control-core
+//! compute window, configuration completion, FIFO-head visibility,
+//! dataflow II) while batch-attributing the skipped cycles to the same
+//! Fig-18 buckets — results are bit-identical to dense 1-cycle
+//! stepping (`SimConfig::dense_stepping` re-enables the old loop; the
+//! `tests/equivalence.rs` suite pins the equivalence). See
+//! `docs/ARCHITECTURE.md` §"Simulator scheduling model".
 
 pub mod cursor;
 pub mod lane;

@@ -101,19 +101,22 @@ impl InPort {
 
     /// Record one firing that presented the head to the fabric, consuming
     /// `active` data elements' worth. Pops the head when its reuse budget
-    /// is exhausted (no-reuse ports pop immediately).
-    pub fn present(&mut self, active: usize) {
+    /// is exhausted (no-reuse ports pop immediately). Returns the popped
+    /// instance, if any, so the lane can recycle its buffers.
+    pub fn present(&mut self, active: usize) -> Option<VecVal> {
         let Some(cfg) = self.reuse.head_cfg() else {
-            self.fifo.pop_front();
+            let spent = self.fifo.pop_front();
             self.reuse.advance();
-            return;
+            return spent.map(|e| e.val);
         };
         self.reuse.consumed += active as i64;
         let budget = cfg.count_at(self.reuse.elem_idx);
         if self.reuse.consumed >= budget {
-            self.fifo.pop_front();
+            let spent = self.fifo.pop_front();
             self.reuse.advance();
+            return spent.map(|e| e.val);
         }
+        None
     }
 
     pub fn len(&self) -> usize {

@@ -54,7 +54,7 @@ impl Bucket {
 }
 
 /// Aggregated run statistics.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Stats {
     /// Lane-cycle counts per bucket, indexed as BUCKETS.
     pub lane_cycles: [u64; 9],
@@ -75,7 +75,15 @@ pub struct Stats {
 
 impl Stats {
     pub fn add(&mut self, b: Bucket) {
-        self.lane_cycles[BUCKETS.iter().position(|&x| x == b).unwrap()] += 1;
+        self.add_many(b, 1);
+    }
+
+    /// Attribute `k` lane-cycles to bucket `b` at once. The event-driven
+    /// scheduler uses this to batch-attribute quiescent spans: a skipped
+    /// cycle is by construction identical to the last simulated one, so
+    /// its bucket repeats verbatim.
+    pub fn add_many(&mut self, b: Bucket, k: u64) {
+        self.lane_cycles[BUCKETS.iter().position(|&x| x == b).unwrap()] += k;
     }
 
     pub fn get(&self, b: Bucket) -> u64 {

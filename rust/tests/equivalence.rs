@@ -1,0 +1,134 @@
+//! Event-driven-vs-dense scheduler equivalence suite.
+//!
+//! The simulator's event-driven core (wake-time calendar + quiescence
+//! skipping, `rust/src/sim/machine.rs`) must be *bit-identical* to the
+//! original dense one-cycle-at-a-time stepping: same simulated cycle
+//! counts, same value in every Fig-18 `Stats` bucket, same memory
+//! image, and — on broken programs — the watchdog must fire at the
+//! same cycle with the same diagnostic snapshot. This suite pins that
+//! claim across every workload, awkward partial-vector sizes, and the
+//! four feature sets with distinct lowering paths, by running each
+//! point twice with `SimConfig::dense_stepping` toggled.
+
+use revel::isa::{Cmd, LaneMask, Pattern2D, VsCommand};
+use revel::sim::{Machine, SimConfig};
+use revel::workloads::{self, Features, Goal, RunOutcome};
+
+/// Feature sets with distinct lowering paths (mirrors the
+/// port-equivalence suite in property.rs).
+fn feature_sets() -> [Features; 4] {
+    [
+        Features::ALL,
+        Features::NONE,
+        Features { inductive: false, ..Features::ALL },
+        Features { fine_grain: false, ..Features::ALL },
+    ]
+}
+
+/// Per-kernel size grid: the awkward non-multiple-of-8 sizes 12 and 23
+/// where partial vectors stress masking, plus each kernel's structural
+/// constraints (fft: powers of two; fir: even tap counts; gemm: paper
+/// row multiples).
+fn sizes_for(kernel: &str) -> &'static [usize] {
+    match kernel {
+        "fft" => &[4, 16, 64],
+        "fir" => &[4, 12, 16, 24],
+        "gemm" => &[12, 24],
+        _ => &[4, 12, 16, 23],
+    }
+}
+
+/// Prepare + execute one point under the given scheduling mode.
+/// `None`: the workload rejects this size (both modes must agree).
+/// `Some(Err(_))`: simulation, verification or an internal assertion
+/// failed — the failure text (including any deadlock snapshot) must
+/// match across modes. Panics are captured so a size a workload cannot
+/// execute still verifies parity instead of aborting the whole grid.
+fn outcome(
+    kernel: &str,
+    n: usize,
+    feats: Features,
+    dense: bool,
+) -> Option<Result<RunOutcome, String>> {
+    let mut prep = workloads::prepare(kernel, n, feats, Goal::Latency).ok()?;
+    prep.machine.cfg.dense_stepping = dense;
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        prep.execute().map_err(|e| e.to_string())
+    }));
+    Some(run.unwrap_or_else(|p| {
+        let msg = p
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "non-string panic payload".into());
+        Err(format!("panic: {msg}"))
+    }))
+}
+
+#[test]
+fn event_driven_core_matches_dense_stepping_for_every_workload() {
+    // Bound the watchdog so a pathological point cannot stall CI; the
+    // budget is process-wide and applies identically to both modes, so
+    // even a watchdog abort must be bit-identical.
+    revel::sim::set_max_cycles_budget(2_000_000);
+    for kernel in workloads::NAMES {
+        for &n in sizes_for(kernel) {
+            for feats in feature_sets() {
+                let what = format!("{kernel} n={n} {feats:?}");
+                match (outcome(kernel, n, feats, true), outcome(kernel, n, feats, false)) {
+                    (None, None) => {} // size unsupported; modes agree
+                    (Some(Ok(dense)), Some(Ok(event))) => {
+                        assert_eq!(
+                            dense.cycles, event.cycles,
+                            "{what}: simulated cycle counts diverged"
+                        );
+                        assert_eq!(
+                            dense.stats, event.stats,
+                            "{what}: Stats (Fig-18 buckets et al.) diverged"
+                        );
+                        assert_eq!(dense.max_err, event.max_err, "{what}: outputs diverged");
+                        assert_eq!(dense.flops, event.flops, "{what}");
+                        assert_eq!(dense.problems, event.problems, "{what}");
+                    }
+                    (Some(Err(dense)), Some(Err(event))) => {
+                        assert_eq!(dense, event, "{what}: failure modes diverged");
+                    }
+                    (dense, event) => panic!(
+                        "{what}: scheduling modes disagree on outcome shape: \
+                         dense={dense:?} vs event={event:?}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Deadlock-path parity: on a wedged program the watchdog must fire at
+/// the same cycle, with the same snapshot text and the same accumulated
+/// per-bucket statistics, in both scheduling modes.
+#[test]
+fn deadlock_fires_at_the_same_cycle_in_both_modes() {
+    let run = |dense: bool| {
+        let mut m = Machine::new(SimConfig {
+            lanes: 1,
+            max_cycles: 20_000,
+            dense_stepping: dense,
+            ..Default::default()
+        });
+        // A store from an out port that never receives data.
+        let prog = vec![
+            VsCommand::new(
+                Cmd::LocalSt { pat: Pattern2D::lin(0, 4), port: 0, rmw: false },
+                LaneMask::one(0),
+            ),
+            VsCommand::new(Cmd::Wait, LaneMask::one(0)),
+        ];
+        let err = m.run(prog).expect_err("program must deadlock").to_string();
+        (err, m.stats.clone())
+    };
+    let (dense_err, dense_stats) = run(true);
+    let (event_err, event_stats) = run(false);
+    assert_eq!(dense_err, event_err, "deadlock snapshots must match");
+    assert_eq!(dense_stats, event_stats, "deadlock-path Stats must match");
+    assert_eq!(dense_stats.cycles, 20_000, "watchdog fires at the budget");
+}
