@@ -1,0 +1,126 @@
+//! Shared wake-time calendar for virtual-time discrete-event engines.
+//!
+//! Generalizes the two event cores that existed before it: the
+//! per-machine wake-time scan inside [`crate::sim::Machine`] (which
+//! fast-forwards one unit over quiescent spans) and the private binary
+//! heap of [`super::cluster`] (which replays memoized service times).
+//! Both the replay dispatcher and the multi-unit co-simulation engine
+//! ([`super::cosim`]) now schedule against this one structure, so a
+//! cluster run is a single totally ordered virtual timeline in which
+//! unit progress, dispatch, work stealing, admission, and shared-bus
+//! grants interleave deterministically.
+//!
+//! Ordering: earliest timestamp first; ties break on insertion
+//! sequence (FIFO), which is what makes runs bit-deterministic — two
+//! events at the same virtual instant pop in the order the engine
+//! created them, never in allocator or hash order.
+
+use std::collections::BinaryHeap;
+
+/// One scheduled event: a timestamp, a tie-breaking sequence number,
+/// and the engine-specific payload.
+struct Entry<E> {
+    t: f64,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, o: &Self) -> bool {
+        self.t.to_bits() == o.t.to_bits() && self.seq == o.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    // Reversed: BinaryHeap is a max-heap, we want the earliest event
+    // (and, within a timestamp, the lowest sequence number) on top.
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        o.t.total_cmp(&self.t).then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+
+/// A deterministic virtual-time event calendar.
+pub struct Calendar<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+impl<E> Default for Calendar<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Calendar<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `ev` at virtual time `t` (seconds). Events at equal
+    /// times pop in push order.
+    pub fn push(&mut self, t: f64, ev: E) {
+        self.heap.push(Entry { t, seq: self.seq, ev });
+        self.seq += 1;
+    }
+
+    /// Remove and return the earliest event with its timestamp.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| (e.t, e.ev))
+    }
+
+    /// Timestamp of the earliest pending event, if any. Co-simulation
+    /// drivers use this as the lookahead signal: with no pending event
+    /// a unit may run its stage out in one go, since nothing can
+    /// interact with it earlier; otherwise it advances one bounded
+    /// chunk and yields the timeline back.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.t)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_then_insertion_order() {
+        let mut c = Calendar::new();
+        c.push(2.0, "late");
+        c.push(1.0, "a");
+        c.push(1.0, "b");
+        c.push(0.5, "first");
+        assert_eq!(c.peek_time(), Some(0.5));
+        let order: Vec<&str> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["first", "a", "b", "late"]);
+        assert!(c.is_empty());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn negative_zero_and_identical_times_stay_fifo() {
+        let mut c = Calendar::new();
+        c.push(0.0, 1);
+        c.push(-0.0, 2);
+        c.push(0.0, 3);
+        // total_cmp orders -0.0 before +0.0; within a bit-identical
+        // timestamp, insertion order decides.
+        let order: Vec<i32> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![2, 1, 3]);
+    }
+}

@@ -26,7 +26,9 @@
 //! A unit that finishes its run queue steals the newest job from the
 //! most-backlogged peer before going idle.
 
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
+
+use super::calendar::Calendar;
 
 /// Cluster sizing and admission policy.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -117,35 +119,6 @@ enum EvKind {
     Free(usize),
 }
 
-/// Heap entry ordered by (time, insertion sequence) so the binary heap
-/// pops events in deterministic virtual-time order.
-struct Ev {
-    t_s: f64,
-    seq: u64,
-    kind: EvKind,
-}
-
-impl PartialEq for Ev {
-    fn eq(&self, o: &Self) -> bool {
-        self.t_s.to_bits() == o.t_s.to_bits() && self.seq == o.seq
-    }
-}
-
-impl Eq for Ev {}
-
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(o))
-    }
-}
-
-impl Ord for Ev {
-    // Reversed: BinaryHeap is a max-heap, we want the earliest event.
-    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
-        o.t_s.total_cmp(&self.t_s).then_with(|| o.seq.cmp(&self.seq))
-    }
-}
-
 struct Unit {
     busy: bool,
     /// When the in-service job finishes (valid while `busy`).
@@ -173,8 +146,7 @@ struct Engine<'a> {
     /// Per-class stage service seconds; `None` marks a degraded class.
     service: &'a [Option<[f64; 4]>],
     units: Vec<Unit>,
-    heap: BinaryHeap<Ev>,
-    seq: u64,
+    cal: Calendar<EvKind>,
     admission: VecDeque<Arrival>,
     out: ClusterRun,
 }
@@ -190,8 +162,7 @@ impl Engine<'_> {
     }
 
     fn push(&mut self, t_s: f64, kind: EvKind) {
-        self.heap.push(Ev { t_s, seq: self.seq, kind });
-        self.seq += 1;
+        self.cal.push(t_s, kind);
     }
 
     /// Backlog a new job would wait behind at unit `u`.
@@ -348,8 +319,7 @@ pub fn run(
         units: (0..cfg.units).map(|_| Unit::new()).collect(),
         cfg,
         service: class_service,
-        heap: BinaryHeap::new(),
-        seq: 0,
+        cal: Calendar::new(),
         admission: VecDeque::new(),
         out: ClusterRun::default(),
     };
@@ -373,9 +343,8 @@ pub fn run(
     // start; makespan is measured from it, not from virtual t=0 (a
     // paced trace's first Poisson gap is not serving time).
     let mut first_arrival: Option<f64> = None;
-    while let Some(ev) = eng.heap.pop() {
-        let now = ev.t_s;
-        let resubmit = match ev.kind {
+    while let Some((now, kind)) = eng.cal.pop() {
+        let resubmit = match kind {
             EvKind::Arrive(a) => {
                 first_arrival.get_or_insert(now);
                 // A degraded-class job fails instantly; its closed-loop

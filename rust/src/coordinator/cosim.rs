@@ -1,0 +1,876 @@
+//! Calendar-driven multi-unit co-simulation: the serving cluster's
+//! second engine, in which every unit's [`crate::sim::Machine`]
+//! advances **live** on one shared virtual timeline instead of
+//! replaying service times memoized by the harness.
+//!
+//! The replay engine ([`super::cluster`]) treats a job as an opaque
+//! block of pre-simulated seconds: accurate per unit, but blind to
+//! anything that happens *between* units. This engine schedules three
+//! kinds of actors on one [`super::calendar::Calendar`]:
+//!
+//! * **Units** own a live machine per in-flight stage. While other
+//!   events are pending, a unit advances its machine in fixed bounded
+//!   chunks and yields the timeline back, so machine progress
+//!   genuinely interleaves with dispatch, work stealing, and admission
+//!   decisions; with the calendar otherwise empty the stage runs out
+//!   in one go. Chunking is invisible to results
+//!   ([`crate::sim::Machine::advance_until`] is bit-identical to an
+//!   unchunked run).
+//! * **Stage-pipelined jobs**: a subframe occupies a unit for one
+//!   stage at a time. When a stage retires, the unit is freed for
+//!   queued work immediately and the subframe's working set crosses
+//!   the cluster's **shared interconnect** (one handoff at a time,
+//!   [`crate::model::handoff_cycles`]) before its next stage re-enters
+//!   dispatch — on whichever unit is then least loaded.
+//! * **SLO-aware admission**: with a deadline configured, an arrival
+//!   whose predicted completion (calendar lookahead over unit backlogs
+//!   plus the class's service + handoff demand) misses the deadline is
+//!   shed at admission instead of wasting cluster time.
+//!
+//! Relationship to replay — pinned by `tests/cosim_equivalence.rs`:
+//! for **single-stage jobs** there are no handoffs and stage
+//! granularity coincides with job granularity, so this engine
+//! reproduces the replay engine's completions, unit stats, and SLO
+//! digests **bit-exactly** (the dispatch policies below are the same
+//! policies, and live machine cycles equal memoized cycles because the
+//! simulator is deterministic in the stage point). For multi-stage
+//! jobs, replay is the optimistic bound: it assumes inter-stage
+//! handoffs are free and infinitely parallel, so co-simulated
+//! latencies are `>=` replayed ones — the delta is exactly the
+//! cross-unit contention replay cannot see.
+
+use std::collections::VecDeque;
+
+use crate::model;
+use crate::sim::Machine;
+use crate::workloads::{self, Features, Goal, Prepared};
+
+use super::calendar::Calendar;
+use super::cluster::{Arrival, ClusterConfig, Completion, UnitStats, Workload};
+
+/// Machine progress per calendar step while other events are pending,
+/// in cycles. Bounds calendar traffic (one event per chunk, not per
+/// cycle) while keeping the interleave fine enough that dispatch never
+/// waits long on a busy unit's turn. Any chunking yields bit-identical
+/// results; the fixed size also keeps simultaneous identical stages in
+/// cycle lockstep (see `Engine::on_step`).
+const MIN_CHUNK: u64 = 1024;
+
+/// Virtual seconds of `c` simulated cycles — the exact conversion the
+/// replay path applies to memoized stage cycles, so a co-simulated
+/// stage of `c` cycles lands on the same `f64` timestamp replay would
+/// produce.
+fn s_of(c: u64) -> f64 {
+    model::cycles_to_us(c) * 1e-6
+}
+
+/// One pipeline stage of a co-simulated job class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageTask {
+    pub kernel: String,
+    pub n: usize,
+    /// Predicted service seconds. Steers the dispatcher's least-loaded
+    /// metric and SLO admission lookahead (a profiled cost model, as a
+    /// real scheduler would use) — never the timeline itself, which
+    /// comes from the live machines.
+    pub est_s: f64,
+}
+
+/// A co-simulated job class: an arbitrary-length stage chain (the
+/// serving pipeline uses four; the equivalence suite pins single-stage
+/// chains against the replay oracle).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CosimClass {
+    pub stages: Vec<StageTask>,
+}
+
+impl CosimClass {
+    /// Total predicted demand of one job: every stage's estimate plus
+    /// every inter-stage handoff on the shared interconnect.
+    pub fn demand_s(&self) -> f64 {
+        let mut d: f64 = self.stages.iter().map(|s| s.est_s).sum();
+        for w in self.stages.windows(2) {
+            d += s_of(model::handoff_cycles(&w[1].kernel, w[1].n));
+        }
+        d
+    }
+}
+
+/// Co-simulation engine configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CosimConfig {
+    pub cluster: ClusterConfig,
+    /// SLO-aware admission: shed arrivals whose predicted completion
+    /// lies more than this many virtual seconds after arrival. `None`
+    /// falls back to queue-depth-only admission (replay's policy).
+    pub deadline_s: Option<f64>,
+}
+
+/// Outcome of one co-simulated run. `completions` (and the aligned
+/// `stage_cycles`) are ordered by service start, exactly like
+/// [`super::cluster::ClusterRun::completions`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CosimRun {
+    pub completions: Vec<Completion>,
+    /// Live-measured simulated cycles of every stage of every
+    /// completed job, aligned index-for-index with `completions`. The
+    /// equivalence suite pins these against the harness-memoized
+    /// per-stage cycles.
+    pub stage_cycles: Vec<Vec<u64>>,
+    /// Arrivals shed by admission control (every queue full).
+    pub dropped: usize,
+    /// Arrivals shed by the SLO deadline lookahead.
+    pub deadline_shed: usize,
+    /// Degraded-class arrivals plus jobs lost to a stage that failed
+    /// to prepare, simulate, or verify mid-run.
+    pub failed: usize,
+    /// Per-unit counters. A subframe occupies one unit *per stage*, so
+    /// `jobs`/`stolen` here count stage executions, not whole jobs —
+    /// 4x the replay engine's numbers for the 4-stage classes, and
+    /// identical for the single-stage classes the equivalence suite
+    /// pins. `busy_s` is compute occupancy either way.
+    pub units: Vec<UnitStats>,
+    /// Virtual seconds from the first arrival to the last pipeline
+    /// exit (0 when nothing completes).
+    pub makespan_s: f64,
+    pub peak_admit_queue: usize,
+    /// Inter-stage handoffs granted on the shared interconnect.
+    pub handoffs: usize,
+    /// Virtual seconds the shared interconnect spent moving data.
+    pub bus_busy_s: f64,
+    /// Virtual seconds handoffs waited for the interconnect — the
+    /// cross-unit contention replay cannot model.
+    pub bus_wait_s: f64,
+    /// Mid-run stage failures, rendered (normally empty).
+    pub stage_errors: Vec<String>,
+}
+
+/// One in-flight job.
+struct Job {
+    id: u64,
+    class: usize,
+    arrival_s: f64,
+    /// Index of the stage currently running or next to run.
+    stage: usize,
+    /// Service start of the first stage.
+    start_s: f64,
+    /// Position in the global service-start order (completions sort on
+    /// it, matching replay's push-at-start ordering).
+    start_ord: u64,
+    /// Any stage of this job ran via work stealing.
+    stolen: bool,
+    /// Live-measured cycles of completed stages.
+    cycles: Vec<u64>,
+}
+
+/// A unit's in-flight stage: a live machine plus the verifier that
+/// checks its functional outputs at retirement.
+struct Active {
+    job: usize,
+    machine: Machine,
+    verify: Box<dyn Fn(&Machine) -> Result<f64, String>>,
+    start_s: f64,
+    /// Exact finish time, once the machine has completed (the
+    /// `StageDone` event is scheduled here).
+    done: Option<f64>,
+}
+
+struct Unit {
+    run: Option<Active>,
+    /// Ready stages (job indices) queued at this unit.
+    queue: VecDeque<usize>,
+    /// Predicted service seconds sitting in `queue`.
+    queued_s: f64,
+    /// Predicted end of the in-service stage (valid while `run` is
+    /// `Some`) — the dispatcher's in-service-remainder estimate.
+    est_end_s: f64,
+    stats: UnitStats,
+}
+
+impl Unit {
+    fn new() -> Self {
+        Self {
+            run: None,
+            queue: VecDeque::new(),
+            queued_s: 0.0,
+            est_end_s: 0.0,
+            stats: UnitStats::default(),
+        }
+    }
+}
+
+enum Ev {
+    Arrive(Arrival),
+    /// Advance unit `usize`'s live machine (up to the calendar's next
+    /// pending event).
+    Step(usize),
+    /// Unit `usize`'s in-flight stage retires at this instant.
+    StageDone(usize),
+    /// Job `usize`'s inter-stage handoff leaves the shared
+    /// interconnect; its next stage enters dispatch.
+    BusDone(usize),
+}
+
+struct Engine<'a> {
+    cfg: ClusterConfig,
+    deadline_s: Option<f64>,
+    /// Per-class stage chains; `None` marks a degraded class (same
+    /// contract as replay's service table).
+    classes: &'a [Option<CosimClass>],
+    units: Vec<Unit>,
+    cal: Calendar<Ev>,
+    jobs: Vec<Job>,
+    /// Cluster-wide admission queue of stage-0 jobs.
+    admission: VecDeque<usize>,
+    bus_busy: bool,
+    /// Pending handoffs: (job, request time).
+    bus_fifo: VecDeque<(usize, f64)>,
+    next_ord: u64,
+    /// Jobs lost after admission (prepare / simulate / verify failure).
+    /// The closed-loop driver watches this so a client whose job dies
+    /// mid-run still submits its next one (replay has no mid-run
+    /// deaths; its clients resubmit on every completion or degraded
+    /// arrival, and this keeps the invariant).
+    mid_run_deaths: usize,
+    /// (start_ord, completion, per-stage cycles); sorted at the end.
+    done_jobs: Vec<(u64, Completion, Vec<u64>)>,
+    dropped: usize,
+    deadline_shed: usize,
+    failed: usize,
+    makespan_s: f64,
+    peak_admit_queue: usize,
+    handoffs: usize,
+    bus_busy_s: f64,
+    bus_wait_s: f64,
+    stage_errors: Vec<String>,
+}
+
+impl Engine<'_> {
+    fn class_of(&self, j: usize) -> &CosimClass {
+        self.classes[self.jobs[j].class]
+            .as_ref()
+            .expect("enqueued jobs have a service profile")
+    }
+
+    /// Predicted service seconds of job `j`'s current stage.
+    fn cur_est(&self, j: usize) -> f64 {
+        self.class_of(j).stages[self.jobs[j].stage].est_s
+    }
+
+    /// Backlog a new stage would wait behind at unit `u` — the same
+    /// metric as replay's, with the in-service remainder read from the
+    /// profiled estimate (the live machine's exact remainder is the
+    /// future; a dispatcher only ever has a prediction).
+    fn load(&self, u: usize, now: f64) -> f64 {
+        let unit = &self.units[u];
+        let in_service =
+            if unit.run.is_some() { (unit.est_end_s - now).max(0.0) } else { 0.0 };
+        in_service + unit.queued_s
+    }
+
+    /// Least-loaded dispatch of job `j`'s current stage; `false` means
+    /// every eligible queue is full. Stage-0 jobs respect the per-unit
+    /// queue cap (admission backpressure); later stages of an admitted
+    /// job always find a queue — admission gates jobs, not the
+    /// pipeline's interior.
+    fn try_assign(&mut self, j: usize, now: f64) -> bool {
+        let first = self.jobs[j].stage == 0;
+        let mut best: Option<(f64, usize)> = None;
+        for u in 0..self.units.len() {
+            let unit = &self.units[u];
+            let eligible =
+                unit.run.is_none() || !first || unit.queue.len() < self.cfg.queue_cap;
+            if !eligible {
+                continue;
+            }
+            let load = self.load(u, now);
+            match best {
+                Some((b, _)) if load >= b => {}
+                _ => best = Some((load, u)),
+            }
+        }
+        let Some((_, u)) = best else { return false };
+        if self.units[u].run.is_none() {
+            // Idle units always have empty queues (they drain or steal
+            // before idling), so this stage starts immediately.
+            self.start_stage(u, j, false, now);
+        } else {
+            let est = self.cur_est(j);
+            self.units[u].queued_s += est;
+            self.units[u].queue.push_back(j);
+        }
+        true
+    }
+
+    /// An idle unit with an empty queue takes the *newest* ready stage
+    /// from the most-backlogged peer (steal-from-tail keeps the
+    /// victim's FIFO head intact) — replay's policy at stage
+    /// granularity.
+    fn steal_for(&mut self, u: usize) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for v in 0..self.units.len() {
+            if v == u || self.units[v].queue.is_empty() {
+                continue;
+            }
+            let backlog = self.units[v].queued_s;
+            match best {
+                Some((b, _)) if backlog <= b => {}
+                _ => best = Some((backlog, v)),
+            }
+        }
+        let (_, v) = best?;
+        let j = self.units[v].queue.pop_back()?;
+        let est = self.cur_est(j);
+        self.units[v].queued_s -= est;
+        Some(j)
+    }
+
+    /// Begin job `j`'s current stage on idle unit `u`: prepare the
+    /// stage kernel (program + preloaded data + verifier), install it
+    /// on a fresh live machine, and schedule the unit's first calendar
+    /// step. A preparation failure degrades this one job and leaves
+    /// the unit idle (the caller's dispatch loop moves on).
+    fn start_stage(&mut self, u: usize, j: usize, stolen: bool, now: f64) {
+        let (kernel, n, est_s) = {
+            let st = &self.class_of(j).stages[self.jobs[j].stage];
+            (st.kernel.clone(), st.n, st.est_s)
+        };
+        match workloads::prepare(&kernel, n, Features::ALL, Goal::Latency) {
+            Err(e) => {
+                self.failed += 1;
+                self.mid_run_deaths += 1;
+                self.stage_errors
+                    .push(format!("cosim: {kernel} n={n} failed to prepare: {e}"));
+            }
+            Ok(prep) => {
+                let Prepared { mut machine, prog, verify, .. } = prep;
+                machine.begin(prog);
+                let job = &mut self.jobs[j];
+                if job.stage == 0 {
+                    job.start_s = now;
+                    job.start_ord = self.next_ord;
+                    self.next_ord += 1;
+                }
+                job.stolen |= stolen;
+                let unit = &mut self.units[u];
+                if stolen {
+                    unit.stats.stolen += 1;
+                }
+                // Stage-pipelined units serve *stages*, so the per-unit
+                // jobs/stolen counters count stage executions here
+                // (replay counts whole jobs; identical for single-stage
+                // classes). See `CosimRun::units`.
+                unit.stats.jobs += 1;
+                unit.est_end_s = now + est_s;
+                unit.run = Some(Active { job: j, machine, verify, start_s: now, done: None });
+                self.cal.push(now, Ev::Step(u));
+            }
+        }
+    }
+
+    /// Advance unit `u`'s live machine by one bounded chunk (or to
+    /// stage completion when the calendar holds nothing else). Units
+    /// never interact mid-stage, so any chunking is conservative and
+    /// cannot change results — only how finely machine progress
+    /// interleaves with the rest of the timeline.
+    fn on_step(&mut self, u: usize, now: f64) {
+        enum Next {
+            Done(f64),
+            Again(f64),
+            /// (job index, rendered simulator error)
+            Fail(usize, String),
+        }
+        // Calendar lookahead: does anything else want the timeline
+        // before this stage could end? If not, the stage runs out in
+        // one go; otherwise advance one fixed chunk and yield. Fixed
+        // chunks (rather than horizon-shaped ones) matter for
+        // determinism across engines: every machine's chunk grid
+        // depends only on its own stage, so units that started
+        // identical stages at the same instant stay in exact cycle
+        // lockstep and retire in the deterministic unit order the
+        // replay engine uses — a horizon-shaped limit would hand
+        // whichever unit popped second a head start (it sees the first
+        // unit's *next* event, one chunk further out). Results never
+        // depend on chunking (advance_until is chunk-invisible); only
+        // event interleaving granularity does.
+        let others_pending = self.cal.peek_time().is_some();
+        let next = {
+            let Some(active) = self.units[u].run.as_mut() else { return };
+            if active.done.is_some() {
+                return; // stage already finished; StageDone is pending
+            }
+            let limit = if others_pending {
+                active.machine.now().saturating_add(MIN_CHUNK)
+            } else {
+                u64::MAX
+            };
+            match active.machine.advance_until(limit) {
+                Err(e) => Next::Fail(active.job, e.to_string()),
+                Ok(true) => {
+                    let finish = active.start_s + s_of(active.machine.now());
+                    active.done = Some(finish);
+                    Next::Done(finish)
+                }
+                Ok(false) => Next::Again(active.start_s + s_of(active.machine.now())),
+            }
+        };
+        match next {
+            Next::Done(finish) => self.cal.push(finish, Ev::StageDone(u)),
+            Next::Again(t) => self.cal.push(t, Ev::Step(u)),
+            Next::Fail(j, err) => {
+                let msg = format!(
+                    "cosim: job {} stage {} on unit {u} aborted: {err}",
+                    self.jobs[j].id, self.jobs[j].stage
+                );
+                self.stage_errors.push(msg);
+                self.failed += 1;
+                self.mid_run_deaths += 1;
+                self.units[u].run = None;
+                self.dispatch_free(u, now);
+            }
+        }
+    }
+
+    /// Retire unit `u`'s finished stage: account its live-measured
+    /// cycles, verify its functional outputs, hand the subframe to the
+    /// shared interconnect (or complete it after its last stage), and
+    /// put the freed unit back to work. Returns whether a job
+    /// completed (the closed-loop workload resubmits on completions).
+    fn on_stage_done(&mut self, u: usize, t: f64) -> bool {
+        let Some(active) = self.units[u].run.take() else { return false };
+        let Active { job: j, machine, verify, start_s: _, done } = active;
+        let finish = done.unwrap_or(t);
+        let cycles = machine.now();
+        self.units[u].stats.busy_s += s_of(cycles);
+        let verdict = verify(&machine);
+        drop(machine);
+        let mut completed = false;
+        match verdict {
+            Err(e) => {
+                self.failed += 1;
+                self.mid_run_deaths += 1;
+                let job = &self.jobs[j];
+                self.stage_errors.push(format!(
+                    "cosim: job {} stage {} failed verification: {e}",
+                    job.id, job.stage
+                ));
+            }
+            Ok(_max_err) => {
+                self.jobs[j].cycles.push(cycles);
+                let nstages = self.class_of(j).stages.len();
+                if self.jobs[j].stage + 1 < nstages {
+                    self.request_handoff(j, finish);
+                } else {
+                    let job = &self.jobs[j];
+                    let comp = Completion {
+                        id: job.id,
+                        class: job.class,
+                        unit: u,
+                        arrival_s: job.arrival_s,
+                        start_s: job.start_s,
+                        finish_s: finish,
+                        stolen: job.stolen,
+                    };
+                    if finish > self.makespan_s {
+                        self.makespan_s = finish;
+                    }
+                    self.done_jobs.push((job.start_ord, comp, job.cycles.clone()));
+                    completed = true;
+                }
+            }
+        }
+        self.dispatch_free(u, finish);
+        completed
+    }
+
+    fn request_handoff(&mut self, j: usize, now: f64) {
+        self.bus_fifo.push_back((j, now));
+        self.try_grant(now);
+    }
+
+    /// Grant the interconnect to the oldest pending handoff (capacity
+    /// one, FIFO — the serialization replay cannot model).
+    fn try_grant(&mut self, now: f64) {
+        if self.bus_busy {
+            return;
+        }
+        let Some((j, req_s)) = self.bus_fifo.pop_front() else { return };
+        let h_s = {
+            let next = &self.class_of(j).stages[self.jobs[j].stage + 1];
+            s_of(model::handoff_cycles(&next.kernel, next.n))
+        };
+        self.bus_busy = true;
+        self.bus_wait_s += now - req_s;
+        self.bus_busy_s += h_s;
+        self.handoffs += 1;
+        self.cal.push(now + h_s, Ev::BusDone(j));
+    }
+
+    /// Job `j`'s handoff left the interconnect: its next stage is
+    /// ready and re-enters least-loaded dispatch (possibly on a
+    /// different unit — stage-granularity load balancing).
+    fn on_bus_done(&mut self, j: usize, now: f64) {
+        self.bus_busy = false;
+        self.jobs[j].stage += 1;
+        let assigned = self.try_assign(j, now);
+        // Mid-job stages bypass the queue cap, so with >= 1 unit the
+        // dispatch above cannot fail.
+        debug_assert!(assigned, "mid-job stages always find a queue");
+        self.try_grant(now);
+    }
+
+    /// Calendar-lookahead completion prediction for SLO admission: the
+    /// least-loaded unit's backlog, this arrival's share of the
+    /// admission queue, and the class's full service + handoff demand.
+    fn predict_latency(&self, class: usize, now: f64) -> f64 {
+        let demand = self.classes[class]
+            .as_ref()
+            .map(CosimClass::demand_s)
+            .unwrap_or(0.0);
+        let best_wait = (0..self.units.len())
+            .map(|u| self.load(u, now))
+            .fold(f64::INFINITY, f64::min);
+        let admitted: f64 = self
+            .admission
+            .iter()
+            .filter_map(|&j| self.classes[self.jobs[j].class].as_ref())
+            .map(CosimClass::demand_s)
+            .sum();
+        best_wait + admitted / self.units.len() as f64 + demand
+    }
+
+    /// Returns whether the arrival died at the door (degraded class or
+    /// SLO shed) — the closed-loop workload resubmits those.
+    fn on_arrive(&mut self, a: Arrival, now: f64) -> bool {
+        if self.classes.get(a.class).and_then(|c| c.as_ref()).is_none() {
+            self.failed += 1;
+            return true;
+        }
+        if let Some(dl) = self.deadline_s {
+            if self.predict_latency(a.class, now) > dl {
+                self.deadline_shed += 1;
+                return true;
+            }
+        }
+        let j = self.jobs.len();
+        self.jobs.push(Job {
+            id: a.id,
+            class: a.class,
+            arrival_s: a.t_s,
+            stage: 0,
+            start_s: 0.0,
+            start_ord: 0,
+            stolen: false,
+            cycles: Vec::new(),
+        });
+        if self.try_assign(j, now) {
+            return false;
+        }
+        if self.admission.len() < self.cfg.admit_cap {
+            self.admission.push_back(j);
+            self.peak_admit_queue = self.peak_admit_queue.max(self.admission.len());
+        } else {
+            self.dropped += 1;
+        }
+        false
+    }
+
+    /// Move admission-queue jobs into freed run-queue slots, in FIFO
+    /// order, until assignment backpressures again.
+    fn drain_admission(&mut self, now: f64) {
+        while let Some(&j) = self.admission.front() {
+            if self.try_assign(j, now) {
+                self.admission.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Put a freed unit back to work: its own FIFO head, else a stolen
+    /// stage; loop past stages that fail to prepare.
+    fn dispatch_free(&mut self, u: usize, now: f64) {
+        while self.units[u].run.is_none() {
+            let next = if let Some(j) = self.units[u].queue.pop_front() {
+                let est = self.cur_est(j);
+                self.units[u].queued_s -= est;
+                Some((j, false))
+            } else {
+                self.steal_for(u).map(|j| (j, true))
+            };
+            let Some((j, stolen)) = next else { break };
+            self.start_stage(u, j, stolen, now);
+        }
+        self.drain_admission(now);
+    }
+}
+
+/// Co-simulate a workload on the cluster. Same contract as
+/// [`super::cluster::run`] — deterministic: identical inputs give a
+/// bit-identical [`CosimRun`] — with per-class stage chains instead of
+/// a memoized service table. All failures (degraded classes, mid-run
+/// stage errors) are recorded in the run, never panicked.
+pub fn run(
+    cfg: &CosimConfig,
+    classes: &[Option<CosimClass>],
+    workload: Workload<'_>,
+    mut pick_class: impl FnMut() -> usize,
+) -> CosimRun {
+    // Live stages run real kernels; make sure the watchdog budget
+    // covers the legitimately long ones (same budget the harness uses).
+    crate::harness::ensure_budget();
+    let cl = ClusterConfig {
+        units: cfg.cluster.units.max(1),
+        queue_cap: cfg.cluster.queue_cap.max(1),
+        admit_cap: cfg.cluster.admit_cap,
+    };
+    let mut eng = Engine {
+        units: (0..cl.units).map(|_| Unit::new()).collect(),
+        cfg: cl,
+        deadline_s: cfg.deadline_s,
+        classes,
+        cal: Calendar::new(),
+        jobs: Vec::new(),
+        admission: VecDeque::new(),
+        bus_busy: false,
+        bus_fifo: VecDeque::new(),
+        next_ord: 0,
+        mid_run_deaths: 0,
+        done_jobs: Vec::new(),
+        dropped: 0,
+        deadline_shed: 0,
+        failed: 0,
+        makespan_s: 0.0,
+        peak_admit_queue: 0,
+        handoffs: 0,
+        bus_busy_s: 0.0,
+        bus_wait_s: 0.0,
+        stage_errors: Vec::new(),
+    };
+    let (mut remaining, mut next_id, closed) = match workload {
+        Workload::Open(trace) => {
+            for a in trace {
+                eng.cal.push(a.t_s, Ev::Arrive(*a));
+            }
+            (0usize, 0u64, false)
+        }
+        Workload::Closed { clients, jobs } => {
+            let c = clients.max(1).min(jobs);
+            for id in 0..c {
+                let class = pick_class();
+                eng.cal
+                    .push(0.0, Ev::Arrive(Arrival { id: id as u64, class, t_s: 0.0 }));
+            }
+            (jobs - c, c as u64, true)
+        }
+    };
+    let mut first_arrival: Option<f64> = None;
+    let mut seen_deaths = 0usize;
+    while let Some((now, ev)) = eng.cal.pop() {
+        let resubmit = match ev {
+            Ev::Arrive(a) => {
+                first_arrival.get_or_insert(now);
+                let dead = eng.on_arrive(a, now);
+                closed && dead
+            }
+            Ev::Step(u) => {
+                eng.on_step(u, now);
+                false
+            }
+            Ev::StageDone(u) => {
+                let completed = eng.on_stage_done(u, now);
+                closed && completed
+            }
+            Ev::BusDone(j) => {
+                eng.on_bus_done(j, now);
+                false
+            }
+        };
+        // Closed loop: a client resubmits when its job leaves the
+        // system — on completion, on a dead arrival, and also when a
+        // job dies mid-run (stage prepare/simulate/verify failure), so
+        // failures never silently starve the loop.
+        let mut want = usize::from(resubmit);
+        if closed {
+            want += eng.mid_run_deaths - seen_deaths;
+        }
+        seen_deaths = eng.mid_run_deaths;
+        while want > 0 && remaining > 0 {
+            let class = pick_class();
+            eng.cal.push(now, Ev::Arrive(Arrival { id: next_id, class, t_s: now }));
+            next_id += 1;
+            remaining -= 1;
+            want -= 1;
+        }
+    }
+    eng.done_jobs.sort_by_key(|&(ord, _, _)| ord);
+    let mut out = CosimRun {
+        completions: eng.done_jobs.iter().map(|(_, c, _)| *c).collect(),
+        stage_cycles: eng.done_jobs.into_iter().map(|(_, _, cy)| cy).collect(),
+        dropped: eng.dropped,
+        deadline_shed: eng.deadline_shed,
+        failed: eng.failed,
+        units: eng.units.iter().map(|u| u.stats.clone()).collect(),
+        makespan_s: eng.makespan_s,
+        peak_admit_queue: eng.peak_admit_queue,
+        handoffs: eng.handoffs,
+        bus_busy_s: eng.bus_busy_s,
+        bus_wait_s: eng.bus_wait_s,
+        stage_errors: eng.stage_errors,
+    };
+    // Events pop in time order, so the first Arrive seen is the trace
+    // start; makespan is measured from it (replay's convention).
+    if let Some(t0) = first_arrival {
+        out.makespan_s = (out.makespan_s - t0).max(0.0);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cluster;
+    use crate::harness;
+
+    /// Profiled estimate of one stage point, in virtual seconds (the
+    /// same memoized cycles replay consumes).
+    fn est(kernel: &str, n: usize) -> f64 {
+        s_of(harness::cycles(kernel, n, Features::ALL, Goal::Latency).unwrap())
+    }
+
+    fn single_stage(kernel: &str, n: usize) -> Option<CosimClass> {
+        Some(CosimClass {
+            stages: vec![StageTask {
+                kernel: kernel.into(),
+                n,
+                est_s: est(kernel, n),
+            }],
+        })
+    }
+
+    fn flood(n: usize, class: usize) -> Vec<Arrival> {
+        (0..n).map(|i| Arrival { id: i as u64, class, t_s: 0.0 }).collect()
+    }
+
+    #[test]
+    fn single_stage_flood_matches_replay_bit_exactly() {
+        let classes = vec![single_stage("solver", 8)];
+        let service =
+            vec![Some([classes[0].as_ref().unwrap().stages[0].est_s, 0.0, 0.0, 0.0])];
+        let cl = ClusterConfig { units: 2, queue_cap: 4, admit_cap: 32 };
+        let tr = flood(10, 0);
+        let replay = cluster::run(&cl, &service, Workload::Open(&tr), || 0);
+        let cfg = CosimConfig { cluster: cl, deadline_s: None };
+        let co = run(&cfg, &classes, Workload::Open(&tr), || 0);
+        assert_eq!(co.completions, replay.completions, "per-job times/units");
+        assert_eq!(co.units, replay.units, "per-unit stats");
+        assert_eq!(co.makespan_s, replay.makespan_s);
+        assert_eq!(co.dropped, replay.dropped);
+        assert_eq!(co.handoffs, 0, "single-stage jobs never touch the bus");
+        // Live cycles == the memoized cycles the estimates came from.
+        let want = classes[0].as_ref().unwrap().stages[0].est_s;
+        for (comp, cy) in co.completions.iter().zip(&co.stage_cycles) {
+            assert_eq!(cy.len(), 1);
+            assert_eq!(s_of(cy[0]), want, "job {}", comp.id);
+        }
+    }
+
+    #[test]
+    fn multi_stage_jobs_serialize_handoffs_on_the_shared_interconnect() {
+        let two = |a: usize, b: usize| -> Option<CosimClass> {
+            Some(CosimClass {
+                stages: vec![
+                    StageTask { kernel: "solver".into(), n: a, est_s: est("solver", a) },
+                    StageTask { kernel: "gemm".into(), n: b, est_s: est("gemm", b) },
+                ],
+            })
+        };
+        let classes = vec![two(8, 12)];
+        let cl = ClusterConfig { units: 2, queue_cap: 8, admit_cap: 32 };
+        let cfg = CosimConfig { cluster: cl, deadline_s: None };
+        let co = run(&cfg, &classes, Workload::Open(&flood(4, 0)), || 0);
+        assert_eq!(co.completions.len(), 4);
+        assert_eq!(co.handoffs, 4, "one handoff per job between its two stages");
+        assert!(co.bus_busy_s > 0.0);
+        // Every job's latency covers both stages plus its handoff.
+        let demand = classes[0].as_ref().unwrap().demand_s();
+        for c in &co.completions {
+            assert!(
+                c.finish_s - c.start_s >= demand - 1e-15,
+                "job {}: {} < {}",
+                c.id,
+                c.finish_s - c.start_s,
+                demand
+            );
+        }
+        // Two jobs finish their first stage simultaneously (two idle
+        // units, identical class): the second handoff must wait.
+        assert!(co.bus_wait_s > 0.0, "concurrent handoffs must serialize");
+    }
+
+    #[test]
+    fn slo_deadline_sheds_predicted_misses_at_admission() {
+        let classes = vec![single_stage("solver", 8)];
+        let svc = classes[0].as_ref().unwrap().stages[0].est_s;
+        let cl = ClusterConfig { units: 1, queue_cap: 64, admit_cap: 64 };
+        // Deadline admits ~3 queued jobs' worth of backlog.
+        let cfg = CosimConfig { cluster: cl.clone(), deadline_s: Some(3.5 * svc) };
+        let co = run(&cfg, &classes, Workload::Open(&flood(10, 0)), || 0);
+        assert!(co.deadline_shed > 0, "flood must trip the deadline lookahead");
+        assert!(co.completions.len() + co.deadline_shed == 10);
+        // Admitted jobs all meet the deadline (estimates are exact here).
+        for c in &co.completions {
+            assert!(c.finish_s - c.arrival_s <= 3.5 * svc + 1e-12, "job {}", c.id);
+        }
+        // Without a deadline everything completes, some of it late.
+        let all = run(
+            &CosimConfig { cluster: cl, deadline_s: None },
+            &classes,
+            Workload::Open(&flood(10, 0)),
+            || 0,
+        );
+        assert_eq!(all.completions.len(), 10);
+        assert_eq!(all.deadline_shed, 0);
+    }
+
+    #[test]
+    fn cosim_is_deterministic_and_closed_loop_self_limits() {
+        let classes = vec![single_stage("solver", 8), single_stage("gemm", 12)];
+        let cl = ClusterConfig { units: 2, queue_cap: 2, admit_cap: 8 };
+        let cfg = CosimConfig { cluster: cl, deadline_s: None };
+        let mk = || {
+            let mut k = 0usize;
+            run(&cfg, &classes, Workload::Closed { clients: 3, jobs: 9 }, move || {
+                k += 1;
+                k % 2
+            })
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a, b, "bit-identical rerun");
+        assert_eq!(a.completions.len(), 9);
+        assert_eq!(a.dropped, 0, "closed loop self-limits");
+    }
+
+    #[test]
+    fn degraded_class_fails_without_poisoning_the_run() {
+        let classes = vec![single_stage("solver", 8), None];
+        let service = vec![
+            Some([classes[0].as_ref().unwrap().stages[0].est_s, 0.0, 0.0, 0.0]),
+            None,
+        ];
+        let cl = ClusterConfig::default();
+        let tr: Vec<Arrival> = (0..8)
+            .map(|i| Arrival { id: i as u64, class: (i % 2) as usize, t_s: 0.0 })
+            .collect();
+        let co = run(
+            &CosimConfig { cluster: cl.clone(), deadline_s: None },
+            &classes,
+            Workload::Open(&tr),
+            || 0,
+        );
+        let replay = cluster::run(&cl, &service, Workload::Open(&tr), || 0);
+        assert_eq!(co.failed, 4);
+        assert_eq!(co.completions, replay.completions);
+    }
+}

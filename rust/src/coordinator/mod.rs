@@ -11,18 +11,28 @@
 //! routing, stage-level batching, admission control with backpressure,
 //! and latency/SLO accounting.
 //!
-//! The subsystem splits cleanly in three:
-//! * [`cluster`] — N units with per-unit bounded run queues, a
-//!   least-loaded dispatcher with idle-time work stealing, and a
-//!   cluster-wide admission queue that sheds load when full. A
-//!   deterministic virtual-time discrete-event engine: service times
-//!   are simulated stage cycles at the REVEL clock.
+//! The subsystem splits in five:
+//! * [`calendar`] — the shared wake-time calendar both engines
+//!   schedule on (one deterministic virtual timeline per run).
+//! * [`cluster`] — the **replay** engine: N units with per-unit
+//!   bounded run queues, a least-loaded dispatcher with idle-time work
+//!   stealing, and a cluster-wide admission queue that sheds load when
+//!   full. Service times are memoized simulated stage cycles at the
+//!   REVEL clock; a job occupies its unit for all four stages.
+//! * [`cosim`] — the **co-simulation** engine: every unit advances a
+//!   live [`crate::sim::Machine`] on the shared calendar, subframes
+//!   are stage-pipelined (the unit frees between stages; inter-stage
+//!   handoffs serialize on a shared interconnect), and admission can
+//!   shed by predicted SLO-deadline miss. Replay is kept as the
+//!   optimistic oracle; `tests/cosim_equivalence.rs` pins the two
+//!   engines against each other.
 //! * [`slo`] — the latency accountant (p50/p95/p99/mean/max digests
 //!   end-to-end, queueing, and per stage).
 //! * [`serve`](mod@serve) — trace synthesis (open-loop Poisson or
 //!   closed-loop clients, seeded via [`crate::util::Rng`]), the batched
 //!   stage pre-simulation through the [`crate::harness`] memo cache,
-//!   and the `BENCH_serve.json` artifact.
+//!   engine selection (`--engine replay|cosim`), and the
+//!   `BENCH_serve.json` artifact.
 //!
 //! Every stage kernel is functionally simulated and verified, so the
 //! pipeline doubles as an end-to-end correctness test of the whole
@@ -30,14 +40,18 @@
 //! against the AOT-compiled JAX artifacts through PJRT (the L2/L1
 //! layers).
 
+pub mod calendar;
 pub mod cluster;
+pub mod cosim;
 pub mod serve;
 pub mod slo;
 
+pub use calendar::Calendar;
 pub use cluster::{Arrival, ClusterConfig, ClusterRun, Completion, UnitStats, Workload};
+pub use cosim::{CosimClass, CosimConfig, CosimRun, StageTask};
 pub use serve::{
     read_artifact, serve, write_artifact, ArrivalMode, Batching, ClassReport,
-    HostOnly, ServeConfig, ServeReport, StageWall, UnitReport,
+    EngineKind, HostOnly, ServeConfig, ServeReport, StageWall, UnitReport,
 };
 pub use slo::{Pctls, SloAccountant, SloDigest};
 

@@ -7,8 +7,11 @@
 //! features, goal)` across all job classes is simulated exactly once,
 //! in one parallel [`crate::harness`] pass through the process-wide
 //! memo cache — thousands of subframes amortize a handful of cycle-
-//! accurate simulations. The cluster then replays those service times
-//! in virtual time, so for a fixed [`ServeConfig`] the whole report is
+//! accurate simulations. The replay engine ([`EngineKind::Replay`])
+//! then replays those service times in virtual time; the co-simulation
+//! engine ([`EngineKind::Cosim`]) uses them only as dispatch/admission
+//! estimates and times every stage on a live machine instead. Either
+//! way, for a fixed [`ServeConfig`] the whole report is
 //! bit-deterministic; only the `host` block of the artifact (wall
 //! clock, worker count) varies between runs.
 
@@ -21,6 +24,7 @@ use crate::util::Rng;
 use crate::workloads::{Features, Goal};
 
 use super::cluster::{self, Arrival, ClusterConfig, Completion, Workload};
+use super::cosim::{self, CosimClass, CosimConfig, StageTask};
 use super::slo::{Pctls, SloAccountant, SloDigest};
 use super::{JobClass, CLASSES, STAGE_NAMES};
 
@@ -40,6 +44,28 @@ pub enum ArrivalMode {
     Closed { clients: usize },
 }
 
+/// Which cluster engine serves the trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Replay memoized per-stage service times; a job occupies one
+    /// unit for its whole stage chain ([`super::cluster`]). The
+    /// optimistic oracle: inter-stage handoffs are assumed free.
+    Replay,
+    /// Calendar-driven co-simulation: live per-unit machines,
+    /// stage-pipelined subframes, a shared inter-stage interconnect,
+    /// and optional SLO-aware admission ([`super::cosim`]).
+    Cosim,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Replay => "replay",
+            EngineKind::Cosim => "cosim",
+        }
+    }
+}
+
 /// Full configuration of one serve run.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -49,6 +75,13 @@ pub struct ServeConfig {
     pub seed: u64,
     pub mode: ArrivalMode,
     pub cluster: ClusterConfig,
+    /// Replay (memoized service times) or co-simulation (live
+    /// machines on the shared calendar).
+    pub engine: EngineKind,
+    /// SLO deadline for the co-simulation engine's predictive
+    /// admission, in virtual microseconds; `None` (and the replay
+    /// engine) admit by queue depth only.
+    pub slo_deadline_us: Option<f64>,
     /// Host worker threads for the batched stage pre-simulation
     /// (`None` = harness default / `REVEL_WORKERS`).
     pub workers: Option<usize>,
@@ -63,6 +96,8 @@ impl Default for ServeConfig {
             seed: 7,
             mode: ArrivalMode::Open { lambda: 0.0 },
             cluster: ClusterConfig::default(),
+            engine: EngineKind::Replay,
+            slo_deadline_us: None,
             workers: None,
             classes: CLASSES.to_vec(),
         }
@@ -70,6 +105,12 @@ impl Default for ServeConfig {
 }
 
 /// Per-unit slice of the report.
+///
+/// Granularity depends on the engine: replay places whole jobs on
+/// units, so `jobs`/`stolen` count jobs; the co-sim engine
+/// stage-pipelines, so they count stage executions (4x for the
+/// four-stage classes). `busy_s`/`utilization` are compute occupancy
+/// under both engines.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct UnitReport {
     pub jobs: usize,
@@ -132,11 +173,23 @@ pub struct ServeReport {
     pub jobs: usize,
     pub seed: u64,
     pub mode: ArrivalMode,
+    pub engine: EngineKind,
+    /// Echo of [`ServeConfig::slo_deadline_us`].
+    pub slo_deadline_us: Option<f64>,
     pub queue_cap: usize,
     pub admit_cap: usize,
     pub completed: usize,
     pub dropped: usize,
     pub failed: usize,
+    /// Arrivals shed by the co-sim engine's SLO deadline lookahead
+    /// (always 0 for replay).
+    pub deadline_shed: usize,
+    /// Inter-stage handoffs granted on the shared interconnect
+    /// (co-sim only; replay models handoffs as free).
+    pub handoffs: usize,
+    /// Virtual seconds handoffs waited for the shared interconnect —
+    /// the cross-unit contention the replay engine cannot see.
+    pub bus_wait_s: f64,
     pub peak_admit_queue: usize,
     /// Virtual seconds from first arrival to last pipeline exit.
     pub makespan_s: f64,
@@ -273,26 +326,122 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         admit_cap: cfg.cluster.admit_cap,
     };
     let mut rng = Rng::new(cfg.seed);
-    let run = match cfg.mode {
+    // The open-loop trace is synthesized up front — identically for
+    // both engines, so `--engine replay` vs `--engine cosim` compare
+    // the very same traffic.
+    let open_trace: Option<Vec<Arrival>> = match cfg.mode {
         ArrivalMode::Open { lambda } => {
             let mut t = 0.0;
-            let arrivals: Vec<Arrival> = (0..cfg.jobs)
-                .map(|id| {
-                    if lambda > 0.0 {
-                        t += rng.exp(lambda);
-                    }
-                    let class = pick_weighted(&mut rng, &cum);
-                    Arrival { id: id as u64, class, t_s: t }
+            Some(
+                (0..cfg.jobs)
+                    .map(|id| {
+                        if lambda > 0.0 {
+                            t += rng.exp(lambda);
+                        }
+                        let class = pick_weighted(&mut rng, &cum);
+                        Arrival { id: id as u64, class, t_s: t }
+                    })
+                    .collect(),
+            )
+        }
+        ArrivalMode::Closed { .. } => None,
+    };
+    // Engine-neutral view of a run's outcome.
+    struct EngineOut {
+        completions: Vec<Completion>,
+        dropped: usize,
+        failed: usize,
+        deadline_shed: usize,
+        handoffs: usize,
+        bus_wait_s: f64,
+        units: Vec<cluster::UnitStats>,
+        makespan_s: f64,
+        peak_admit_queue: usize,
+        extra_errors: Vec<String>,
+    }
+    let run = match cfg.engine {
+        EngineKind::Replay => {
+            let r = match cfg.mode {
+                ArrivalMode::Open { .. } => cluster::run(
+                    &cluster_cfg,
+                    &class_service,
+                    Workload::Open(open_trace.as_deref().unwrap_or(&[])),
+                    || 0,
+                ),
+                ArrivalMode::Closed { clients } => cluster::run(
+                    &cluster_cfg,
+                    &class_service,
+                    Workload::Closed { clients, jobs: cfg.jobs },
+                    || pick_weighted(&mut rng, &cum),
+                ),
+            };
+            EngineOut {
+                completions: r.completions,
+                dropped: r.dropped,
+                failed: r.failed,
+                deadline_shed: 0,
+                handoffs: 0,
+                bus_wait_s: 0.0,
+                units: r.units,
+                makespan_s: r.makespan_s,
+                peak_admit_queue: r.peak_admit_queue,
+                extra_errors: Vec::new(),
+            }
+        }
+        EngineKind::Cosim => {
+            // Per-class stage chains with profiled estimates (the same
+            // memoized cycles replay consumes); a degraded class maps
+            // to `None`, exactly like the replay service table.
+            let cosim_classes: Vec<Option<CosimClass>> = cfg
+                .classes
+                .iter()
+                .zip(&st.per_class)
+                .map(|(c, cy)| {
+                    cy.map(|cy| CosimClass {
+                        stages: c
+                            .stages
+                            .iter()
+                            .zip(cy.iter())
+                            .map(|(s, &cycles)| StageTask {
+                                kernel: s.kernel.to_string(),
+                                n: s.n,
+                                est_s: model::cycles_to_us(cycles) * 1e-6,
+                            })
+                            .collect(),
+                    })
                 })
                 .collect();
-            cluster::run(&cluster_cfg, &class_service, Workload::Open(&arrivals), || 0)
+            let ccfg = CosimConfig {
+                cluster: cluster_cfg.clone(),
+                deadline_s: cfg.slo_deadline_us.map(|us| us * 1e-6),
+            };
+            let r = match cfg.mode {
+                ArrivalMode::Open { .. } => cosim::run(
+                    &ccfg,
+                    &cosim_classes,
+                    Workload::Open(open_trace.as_deref().unwrap_or(&[])),
+                    || 0,
+                ),
+                ArrivalMode::Closed { clients } => cosim::run(
+                    &ccfg,
+                    &cosim_classes,
+                    Workload::Closed { clients, jobs: cfg.jobs },
+                    || pick_weighted(&mut rng, &cum),
+                ),
+            };
+            EngineOut {
+                completions: r.completions,
+                dropped: r.dropped,
+                failed: r.failed,
+                deadline_shed: r.deadline_shed,
+                handoffs: r.handoffs,
+                bus_wait_s: r.bus_wait_s,
+                units: r.units,
+                makespan_s: r.makespan_s,
+                peak_admit_queue: r.peak_admit_queue,
+                extra_errors: r.stage_errors,
+            }
         }
-        ArrivalMode::Closed { clients } => cluster::run(
-            &cluster_cfg,
-            &class_service,
-            Workload::Closed { clients, jobs: cfg.jobs },
-            || pick_weighted(&mut rng, &cum),
-        ),
     };
     let mut acc = SloAccountant::new();
     let mut per_class_done = vec![0usize; cfg.classes.len()];
@@ -331,16 +480,23 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
             stage_cycles: st.per_class[i],
         })
         .collect();
+    let mut stage_errors = st.errors;
+    stage_errors.extend(run.extra_errors);
     Ok(ServeReport {
         units: cluster_cfg.units,
         jobs: cfg.jobs,
         seed: cfg.seed,
         mode: cfg.mode,
+        engine: cfg.engine,
+        slo_deadline_us: cfg.slo_deadline_us,
         queue_cap: cluster_cfg.queue_cap,
         admit_cap: cluster_cfg.admit_cap,
         completed,
         dropped: run.dropped,
         failed: run.failed,
+        deadline_shed: run.deadline_shed,
+        handoffs: run.handoffs,
+        bus_wait_s: run.bus_wait_s,
         peak_admit_queue: run.peak_admit_queue,
         makespan_s: run.makespan_s,
         throughput_per_s: throughput,
@@ -348,7 +504,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         per_unit,
         classes,
         batching: Batching { distinct_points: st.distinct_points, stage_runs: 4 * completed },
-        stage_errors: st.errors,
+        stage_errors,
         jobs_detail: if cfg.jobs <= DETAIL_CAP { run.completions.clone() } else { Vec::new() },
         stage_wall: HostOnly(st.stage_wall),
     })
@@ -399,6 +555,14 @@ impl ServeReport {
                     ("jobs", Json::Num(self.jobs as f64)),
                     ("seed", Json::Num(self.seed as f64)),
                     ("mode", Json::Str(mode.into())),
+                    ("engine", Json::Str(self.engine.name().into())),
+                    (
+                        "slo_deadline_us",
+                        match self.slo_deadline_us {
+                            None => Json::Null,
+                            Some(us) => Json::Num(us),
+                        },
+                    ),
                     ("lambda", Json::Num(lambda)),
                     ("clients", Json::Num(clients as f64)),
                     ("queue_cap", Json::Num(self.queue_cap as f64)),
@@ -438,6 +602,9 @@ impl ServeReport {
                     ("completed", Json::Num(self.completed as f64)),
                     ("dropped", Json::Num(self.dropped as f64)),
                     ("failed", Json::Num(self.failed as f64)),
+                    ("deadline_shed", Json::Num(self.deadline_shed as f64)),
+                    ("handoffs", Json::Num(self.handoffs as f64)),
+                    ("bus_wait_s", Json::Num(self.bus_wait_s)),
                     ("peak_admit_queue", Json::Num(self.peak_admit_queue as f64)),
                     ("makespan_s", Json::Num(self.makespan_s)),
                     ("throughput_per_s", Json::Num(self.throughput_per_s)),
@@ -532,6 +699,17 @@ impl ServeReport {
             Some("closed") => ArrivalMode::Closed { clients: cnum("clients")? },
             _ => return Err(err("mode")),
         };
+        // Engine and SLO fields arrived with the co-sim engine; absent
+        // (pre-cosim) artifacts parse as replay with no deadline.
+        let engine = match cfg.get("engine").and_then(Json::as_str) {
+            None | Some("replay") => EngineKind::Replay,
+            Some("cosim") => EngineKind::Cosim,
+            _ => return Err(err("engine")),
+        };
+        let slo_deadline_us = match cfg.get("slo_deadline_us") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or_else(|| err("slo_deadline_us"))?),
+        };
         let digest = |k: &str| -> std::result::Result<Pctls, String> {
             Pctls::from_json(summary.get(k).ok_or_else(|| err(k))?)
         };
@@ -618,11 +796,24 @@ impl ServeReport {
             jobs: cnum("jobs")?,
             seed: cfg.get("seed").and_then(Json::as_u64).ok_or_else(|| err("seed"))?,
             mode,
+            engine,
+            slo_deadline_us,
             queue_cap: cnum("queue_cap")?,
             admit_cap: cnum("admit_cap")?,
             completed: snum("completed")?,
             dropped: snum("dropped")?,
             failed: snum("failed")?,
+            // Pre-cosim artifacts carry none of these; default to the
+            // replay engine's values.
+            deadline_shed: summary
+                .get("deadline_shed")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            handoffs: summary.get("handoffs").and_then(Json::as_usize).unwrap_or(0),
+            bus_wait_s: summary
+                .get("bus_wait_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
             peak_admit_queue: snum("peak_admit_queue")?,
             makespan_s: summary
                 .get("makespan_s")
@@ -717,6 +908,18 @@ mod tests {
             cluster: ClusterConfig { units, ..ClusterConfig::default() },
             workers: Some(2),
             classes: cheap_classes(),
+            ..ServeConfig::default()
+        }
+    }
+
+    /// A small co-sim run (live machines make each job's stages real
+    /// simulations, so the test traces stay short).
+    fn cosim_cfg(units: usize, jobs: usize) -> ServeConfig {
+        ServeConfig {
+            jobs,
+            engine: EngineKind::Cosim,
+            cluster: ClusterConfig { units, ..ClusterConfig::default() },
+            ..cfg(units)
         }
     }
 
@@ -771,6 +974,86 @@ mod tests {
         let p = serve(&paced).unwrap();
         assert_eq!(p.completed, 24);
         assert!(p.slo.queue_us.p99 <= flood.slo.queue_us.p99);
+    }
+
+    #[test]
+    fn cosim_engine_is_deterministic_and_never_beats_replay_makespan() {
+        let a = serve(&cosim_cfg(1, 12)).unwrap();
+        let b = serve(&cosim_cfg(1, 12)).unwrap();
+        assert_eq!(a, b, "cosim: same config, same seed => identical report");
+        assert_eq!(a.engine, EngineKind::Cosim);
+        assert_eq!(a.completed, 12);
+        assert!(a.handoffs > 0, "4-stage jobs hand off between stages");
+        assert!(a.stage_errors.is_empty(), "{:?}", a.stage_errors);
+        // Replay is the optimistic oracle: on one unit its flood
+        // makespan equals the total compute — a lower bound for any
+        // schedule that additionally pays inter-stage handoffs.
+        let mut rcfg = cfg(1);
+        rcfg.jobs = 12;
+        let replay = serve(&rcfg).unwrap();
+        assert_eq!(replay.completed, 12);
+        assert!(
+            a.makespan_s >= replay.makespan_s,
+            "cosim {} < replay {}",
+            a.makespan_s,
+            replay.makespan_s
+        );
+        assert_eq!(replay.handoffs, 0);
+        assert_eq!(replay.bus_wait_s, 0.0);
+    }
+
+    #[test]
+    fn slo_admission_sheds_through_the_serve_path() {
+        let mut c = cosim_cfg(1, 10);
+        // Far below one subframe's service demand: every arrival is
+        // predicted late and shed at admission.
+        c.slo_deadline_us = Some(1.0);
+        let r = serve(&c).unwrap();
+        assert!(r.deadline_shed > 0, "flood must trip the deadline lookahead");
+        assert_eq!(r.completed + r.deadline_shed + r.dropped + r.failed, 10);
+        // Replay ignores the knob entirely.
+        let mut rc = cfg(1);
+        rc.slo_deadline_us = Some(1.0);
+        rc.jobs = 10;
+        let rr = serve(&rc).unwrap();
+        assert_eq!(rr.deadline_shed, 0);
+        assert_eq!(rr.completed, 10);
+    }
+
+    #[test]
+    fn cosim_artifact_roundtrips_and_precosim_artifacts_parse_as_replay() {
+        let mut c = cosim_cfg(2, 8);
+        c.slo_deadline_us = Some(1e9); // generous: nothing sheds
+        let r = serve(&c).unwrap();
+        assert_eq!(r.deadline_shed, 0);
+        let text = r.to_json(0.5, 4).pretty();
+        let back = read_artifact(&text).unwrap();
+        assert_eq!(back, r, "host block drops; everything else round-trips");
+        assert_eq!(back.engine, EngineKind::Cosim);
+        assert_eq!(back.slo_deadline_us, Some(1e9));
+        // Emulate a pre-cosim (version-1) artifact by dropping the new
+        // keys line-wise (keys sort alphabetically, so none of them is
+        // the last entry of its object and the JSON stays valid).
+        let replay = serve(&cfg(1)).unwrap();
+        let new_keys = [
+            "\"engine\"",
+            "\"slo_deadline_us\"",
+            "\"deadline_shed\"",
+            "\"handoffs\"",
+            "\"bus_wait_s\"",
+        ];
+        let old_text: String = replay
+            .to_json(0.5, 4)
+            .pretty()
+            .lines()
+            .filter(|l| !new_keys.iter().any(|k| l.trim_start().starts_with(k)))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let old = read_artifact(&old_text).unwrap();
+        assert_eq!(old.engine, EngineKind::Replay);
+        assert_eq!(old.slo_deadline_us, None);
+        assert_eq!(old.deadline_shed, 0);
+        assert_eq!(old, replay, "defaults reconstruct the replay report");
     }
 
     #[test]

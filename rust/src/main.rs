@@ -6,15 +6,16 @@
 //! revel trace <kernel> <n>
 //! revel sweep [--out FILE] [--workers N] [kernel ...]
 //! revel sweep-diff <BASELINE.json> <CURRENT.json> [--tolerance PCT]
-//! revel serve [--units N] [--jobs M] [--seed S] [--mode open|closed]
-//!             [--lambda R] [--clients C] [--queue-cap Q] [--admit-cap A]
+//! revel serve [--engine replay|cosim] [--units N] [--jobs M] [--seed S]
+//!             [--mode open|closed] [--lambda R] [--clients C]
+//!             [--queue-cap Q] [--admit-cap A] [--slo-deadline-us D]
 //!             [--workers W] [--out FILE]
 //! revel pipeline [jobs] [units]
 //! revel list
 //! ```
 
 use revel::analysis::kernels;
-use revel::coordinator::{ArrivalMode, ClusterConfig, ServeConfig, ServeReport};
+use revel::coordinator::{ArrivalMode, ClusterConfig, EngineKind, ServeConfig, ServeReport};
 use revel::harness;
 use revel::model;
 use revel::report;
@@ -24,10 +25,25 @@ use revel::workloads::{self, Features, Goal};
 /// `pipeline` alias).
 fn print_serve(report: &ServeReport, wall_s: f64) {
     println!(
-        "serve: {} units, {} jobs (seed {}): {} completed, {} dropped, {} failed",
-        report.units, report.jobs, report.seed, report.completed, report.dropped,
-        report.failed
+        "serve[{}]: {} units, {} jobs (seed {}): {} completed, {} dropped, \
+         {} failed, {} deadline-shed",
+        report.engine.name(),
+        report.units,
+        report.jobs,
+        report.seed,
+        report.completed,
+        report.dropped,
+        report.failed,
+        report.deadline_shed
     );
+    if report.handoffs > 0 {
+        println!(
+            "  shared interconnect: {} handoffs, {:.1} us spent waiting \
+             (contention replay cannot see)",
+            report.handoffs,
+            report.bus_wait_s * 1e6
+        );
+    }
     println!(
         "  virtual makespan {:.3} ms -> {:.0} subframes/s @ {} GHz",
         report.makespan_s * 1e3,
@@ -335,10 +351,21 @@ fn main() {
                     std::process::exit(2);
                 }
             };
+            let engine = match flag("--engine").map(|s| s.as_str()) {
+                None | Some("replay") => EngineKind::Replay,
+                Some("cosim") => EngineKind::Cosim,
+                Some(other) => {
+                    eprintln!("unknown engine {other} (expected replay|cosim)");
+                    std::process::exit(2);
+                }
+            };
             let cfg = ServeConfig {
                 jobs,
                 seed,
                 mode,
+                engine,
+                slo_deadline_us: flag("--slo-deadline-us")
+                    .and_then(|s| s.parse::<f64>().ok()),
                 cluster: ClusterConfig {
                     units,
                     queue_cap: flag("--queue-cap")
@@ -403,8 +430,9 @@ fn main() {
                    revel trace qr 32\n\
                    revel sweep --out BENCH_sweep.json [--workers 8] [cholesky solver ...]\n\
                    revel sweep-diff baseline.json BENCH_sweep.json [--tolerance 0]\n\
-                   revel serve --units 4 --jobs 200 --seed 7 [--mode open|closed]\n\
-                              [--lambda R] [--clients C] [--queue-cap 8] [--admit-cap 1024]\n\
+                   revel serve --units 4 --jobs 200 --seed 7 [--engine replay|cosim]\n\
+                              [--mode open|closed] [--lambda R] [--clients C]\n\
+                              [--queue-cap 8] [--admit-cap 1024] [--slo-deadline-us D]\n\
                               [--workers W] [--out BENCH_serve.json]\n\
                    revel pipeline [jobs] [units]   (golden check + default serve run)"
             );

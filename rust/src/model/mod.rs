@@ -140,6 +140,27 @@ pub fn cycles_to_us(cycles: u64) -> f64 {
     cycles as f64 / (FREQ_GHZ * 1000.0)
 }
 
+/// Words of a subframe's working set handed from one pipeline stage to
+/// the next over the serving cluster's shared interconnect: an `n`x`n`
+/// matrix for the linear-algebra stages, a complex `n`-vector for the
+/// sample-stream stages. The co-simulation engine serializes these
+/// handoffs on one shared bus ([`crate::coordinator::cosim`]); the
+/// replay engine optimistically assumes they are free, which is exactly
+/// the gap the two engines' latency delta measures.
+pub fn handoff_words(kernel: &str, n: usize) -> u64 {
+    match kernel {
+        "fft" | "fir" => 2 * n as u64,
+        _ => (n * n) as u64,
+    }
+}
+
+/// Cycles one inter-stage handoff occupies the cluster's shared
+/// interconnect, at one 512-bit line (16 words) per cycle — the same
+/// width as the unit-internal shared-scratchpad bus (paper Table 3).
+pub fn handoff_cycles(kernel: &str, n: usize) -> u64 {
+    handoff_words(kernel, n).div_ceil(16).max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,5 +204,16 @@ mod tests {
         let mean: f64 =
             ks.iter().map(|k| power_overhead(k)).sum::<f64>() / ks.len() as f64;
         assert!((mean - 2.2).abs() < 0.15, "mean {mean}");
+    }
+
+    #[test]
+    fn handoff_model_is_line_quantized() {
+        // Matrix stages move n*n words; sample-stream stages 2n.
+        assert_eq!(handoff_words("cholesky", 16), 256);
+        assert_eq!(handoff_words("fft", 64), 128);
+        // One 512-bit line (16 words) per cycle, at least one cycle.
+        assert_eq!(handoff_cycles("gemm", 12), 9);
+        assert_eq!(handoff_cycles("fft", 64), 8);
+        assert_eq!(handoff_cycles("fir", 4), 1);
     }
 }

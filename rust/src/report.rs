@@ -102,8 +102,7 @@ pub fn pipeline() -> String {
             seed: 7,
             mode: ArrivalMode::Open { lambda: 0.0 },
             cluster: ClusterConfig { units, ..ClusterConfig::default() },
-            workers: None,
-            classes: coordinator::CLASSES.to_vec(),
+            ..ServeConfig::default()
         };
         let r = coordinator::serve(&cfg).expect("serve must run");
         let util = r.per_unit.iter().map(|u| u.utilization).sum::<f64>()

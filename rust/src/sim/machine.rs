@@ -69,6 +69,22 @@ pub fn max_cycles_budget() -> u64 {
     }
 }
 
+/// Process-wide `REVEL_DENSE_STEPPING` switch, read once. Unlike
+/// `REVEL_MAX_CYCLES` (which changes observable results and is
+/// therefore applied only by the CLI entry point), the scheduling mode
+/// is proven bit-identical either way (`tests/equivalence.rs`), so
+/// consulting it from `Default` keeps library determinism while letting
+/// CI run the entire test suite through the dense scheduler as an A/B
+/// leg (`REVEL_DENSE_STEPPING=1 cargo test`).
+fn dense_stepping_env() -> bool {
+    static DENSE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *DENSE.get_or_init(|| {
+        std::env::var("REVEL_DENSE_STEPPING")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
 impl Default for SimConfig {
     fn default() -> Self {
         Self {
@@ -76,7 +92,7 @@ impl Default for SimConfig {
             lane_spad_words: 2048,
             shared_words: 32768,
             max_cycles: DEFAULT_MAX_CYCLES,
-            dense_stepping: false,
+            dense_stepping: dense_stepping_env(),
         }
     }
 }
@@ -196,7 +212,7 @@ pub struct Machine {
     /// Incrementally maintained activity counters behind `ext_busy`.
     ext: ExtActivity,
     /// Cached finish predicate: recomputed only on ticks that change
-    /// state, making `finished()` O(1) in the run loop.
+    /// state, making `is_finished()` O(1) in the run loop.
     done: bool,
     /// Per-lane Fig-18 bucket of the most recently simulated cycle. A
     /// quiescent span repeats the last cycle verbatim, so the skip
@@ -204,6 +220,9 @@ pub struct Machine {
     last_buckets: Vec<Bucket>,
     /// Reusable per-tick scratch for XFER local-bus arbitration.
     xfer_local_busy: Vec<bool>,
+    /// Watchdog deadline of the program installed by [`Machine::begin`]
+    /// (absolute cycle; `run` and `advance_until` share it).
+    run_deadline: u64,
 }
 
 impl Machine {
@@ -224,6 +243,7 @@ impl Machine {
             ctrl: CtrlState::Fetch,
             xfers: Vec::new(),
             shareds: VecDeque::new(),
+            run_deadline: u64::MAX,
         }
     }
 
@@ -243,23 +263,50 @@ impl Machine {
     /// `SimConfig::dense_stepping` disables the skip for A/B
     /// verification; results are bit-identical either way.
     pub fn run(&mut self, prog: Program) -> Result<&Stats, SimError> {
+        self.begin(prog);
+        self.advance_until(u64::MAX)?;
+        Ok(&self.stats)
+    }
+
+    /// Install a control program for externally driven execution
+    /// without advancing a single cycle. The co-simulation layer uses
+    /// this to interleave several machines' progress on one shared
+    /// calendar: `begin` once, then [`Machine::advance_until`] in
+    /// chunks. [`Machine::run`] is exactly `begin` +
+    /// `advance_until(u64::MAX)`, so chunked driving is bit-identical
+    /// to a plain `run` of the same program.
+    pub fn begin(&mut self, prog: Program) {
         self.prog = prog.into();
         self.ctrl = CtrlState::Fetch;
         self.done = self.compute_finished();
-        let deadline = self.now + self.cfg.max_cycles;
-        while !self.finished() {
-            if self.now >= deadline {
+        self.run_deadline = self.now + self.cfg.max_cycles;
+    }
+
+    /// Advance the program installed by [`Machine::begin`] until it
+    /// finishes or `now` reaches `until`, whichever comes first, using
+    /// the same event-driven schedule as [`Machine::run`]. Returns
+    /// `Ok(true)` once the program has finished.
+    ///
+    /// Chunk boundaries are invisible: a quiescent span split by
+    /// `until` batch-attributes exactly the same Fig-18 buckets as an
+    /// unsplit skip (the span repeats the last simulated cycle
+    /// verbatim, so attribution is additive), and the watchdog fires at
+    /// the same cycle with the same snapshot regardless of how the
+    /// caller chunks the run.
+    pub fn advance_until(&mut self, until: u64) -> Result<bool, SimError> {
+        while !self.is_finished() && self.now < until {
+            if self.now >= self.run_deadline {
                 self.stats.cycles = self.now;
                 return Err(SimError::Deadlock(self.snapshot()));
             }
             if self.tick() {
                 self.done = self.compute_finished();
             } else if !self.cfg.dense_stepping && !self.done {
-                self.skip_quiescent(deadline);
+                self.skip_quiescent(self.run_deadline.min(until));
             }
         }
         self.stats.cycles = self.now;
-        Ok(&self.stats)
+        Ok(self.is_finished())
     }
 
     /// Advance exactly one cycle (dense stepping, no quiescence skip).
@@ -277,9 +324,13 @@ impl Machine {
         changed
     }
 
-    /// O(1): reads the finish state cached by the last state-changing
-    /// tick (a cycle that changes nothing cannot finish the machine).
-    fn finished(&self) -> bool {
+    /// Whether the installed program has run to completion. O(1): reads
+    /// the finish state cached by the last state-changing tick (a cycle
+    /// that changes nothing cannot finish the machine). Also the
+    /// completion signal for external drivers pairing
+    /// [`Machine::begin`] with [`Machine::step_cycle`] /
+    /// [`Machine::advance_until`].
+    pub fn is_finished(&self) -> bool {
         self.done
     }
 
@@ -295,10 +346,13 @@ impl Machine {
     /// tick that changed nothing: every cycle up to the next wake time
     /// would repeat that tick exactly, so the span's lane-cycles land in
     /// the very same buckets (`last_buckets`) and no per-cycle work is
-    /// needed. The deadline clamp keeps the watchdog firing at the same
-    /// cycle — with the same accumulated `Stats` — as dense stepping.
-    fn skip_quiescent(&mut self, deadline: u64) {
-        let wake = self.next_wake().map_or(deadline, |w| w.min(deadline));
+    /// needed. `limit` clamps the skip — to the watchdog deadline (so
+    /// deadlocks fire at the same cycle, with the same accumulated
+    /// `Stats`, as dense stepping) and, for chunked external drivers,
+    /// to the caller's `until` horizon (splitting a skip attributes the
+    /// same bucket totals).
+    fn skip_quiescent(&mut self, limit: u64) {
+        let wake = self.next_wake().map_or(limit, |w| w.min(limit));
         if wake <= self.now {
             return;
         }
@@ -341,7 +395,6 @@ impl Machine {
 
     /// Reference implementation of `ext_busy` by scanning the stream
     /// lists — the cross-check for the incremental counters.
-    #[cfg(test)]
     fn ext_busy_scan(&self, lane: usize) -> ExtBusy {
         ExtBusy {
             shared_active: self.shareds.iter().any(|s| s.lane == lane),
@@ -351,6 +404,40 @@ impl Machine {
                 .iter()
                 .any(|x| x.dsts.iter().any(|&(l, _)| l == lane)),
         }
+    }
+
+    /// Validation hook: assert the incrementally maintained
+    /// `ExtActivity` counters agree with a fresh scan of the live
+    /// stream lists on every lane, and that the counters are exactly
+    /// zero on an externally idle machine. Returns the first mismatch,
+    /// rendered. Exists so the cross-check runs in release-mode
+    /// integration suites (`tests/equivalence.rs`) and co-simulation
+    /// drivers, not only in this module's debug unit tests.
+    pub fn validate_ext_activity(&self) -> Result<(), String> {
+        for l in 0..self.lanes.len() {
+            let cached = self.ext_busy(l);
+            let scanned = self.ext_busy_scan(l);
+            if cached != scanned {
+                return Err(format!(
+                    "cycle {}: lane {l} ExtActivity counters report {cached:?} \
+                     but the stream lists scan to {scanned:?}",
+                    self.now
+                ));
+            }
+        }
+        if self.xfers.is_empty() && self.shareds.is_empty() {
+            for l in 0..self.lanes.len() {
+                let e = &self.ext;
+                if e.shared[l] != 0 || e.xfer_src[l] != 0 || e.xfer_dst[l] != 0 {
+                    return Err(format!(
+                        "cycle {}: no machine-level stream is live but lane {l} \
+                         counters read shared={} xfer_src={} xfer_dst={}",
+                        self.now, e.shared[l], e.xfer_src[l], e.xfer_dst[l]
+                    ));
+                }
+            }
+        }
+        Ok(())
     }
 
     fn lane_inactive(&self, lane: usize) -> bool {
@@ -1041,20 +1128,12 @@ mod tests {
             vs(Cmd::LocalSt { pat: Pattern2D::lin(8, 4), port: 0, rmw: false }, all),
             vs(Cmd::Wait, all),
         ];
-        m.prog = prog.into();
-        m.ctrl = CtrlState::Fetch;
-        m.done = m.compute_finished();
+        m.begin(prog);
         let mut guard = 0u64;
-        while !m.finished() {
+        while !m.is_finished() {
             m.step_cycle();
-            for l in 0..lanes {
-                assert_eq!(
-                    m.ext_busy(l),
-                    m.ext_busy_scan(l),
-                    "cycle {} lane {l}",
-                    m.now()
-                );
-            }
+            m.validate_ext_activity()
+                .unwrap_or_else(|e| panic!("cycle {}: {e}", m.now()));
             guard += 1;
             assert!(guard < 100_000, "run did not complete");
         }

@@ -24,6 +24,13 @@
 //! stepping (`SimConfig::dense_stepping` re-enables the old loop; the
 //! `tests/equivalence.rs` suite pins the equivalence). See
 //! `docs/ARCHITECTURE.md` §"Simulator scheduling model".
+//!
+//! External drivers (the cluster co-simulation,
+//! `crate::coordinator::cosim`) interleave several machines on one
+//! shared calendar via [`Machine::begin`] + [`Machine::advance_until`]
+//! — chunked driving is bit-identical to a plain [`Machine::run`] of
+//! the same program, so co-simulated stage timings equal batch-run
+//! ones by construction.
 
 pub mod cursor;
 pub mod lane;

@@ -1,0 +1,277 @@
+//! Cross-layer equivalence & determinism suite for the serving
+//! cluster's two engines.
+//!
+//! The co-simulation engine (`coordinator::cosim` — live per-unit
+//! machines on one shared calendar, stage-pipelined jobs, a shared
+//! inter-stage interconnect) is pinned against the replay oracle
+//! (`coordinator::cluster` — memoized service times):
+//!
+//! * **Equality** — for single-stage jobs there are no handoffs and
+//!   stage granularity coincides with job granularity, so both engines
+//!   must produce bit-identical per-job completions, per-job stage
+//!   cycles, unit stats, and SLO digests, across seeds × unit counts,
+//!   under floods, paced Poisson arrivals, and closed loops.
+//! * **Monotonicity** — for multi-stage jobs replay is the optimistic
+//!   bound (it models inter-stage handoffs as free), so co-simulated
+//!   latencies are `>=` replayed ones wherever the comparison is
+//!   order-robust: pointwise on sorted latencies for one unit (any
+//!   work-conserving single-server schedule satisfies `c_(k) >= k*S`),
+//!   and on makespan for symmetric multi-unit floods (`makespan >=
+//!   total work / units`, which is exactly replay's flood makespan).
+//! * **Determinism** — identical inputs give bit-identical runs.
+
+use revel::coordinator::{
+    cluster, cosim, Arrival, ClusterConfig, CosimClass, CosimConfig, SloAccountant,
+    StageTask, Workload,
+};
+use revel::harness;
+use revel::model;
+use revel::util::Rng;
+use revel::workloads::{Features, Goal};
+
+/// Virtual seconds of `c` simulated cycles — the conversion both
+/// engines apply.
+fn s_of(c: u64) -> f64 {
+    model::cycles_to_us(c) * 1e-6
+}
+
+/// Memoized cycles of one stage point (what replay's service table and
+/// cosim's estimates are both built from).
+fn cycles(kernel: &str, n: usize) -> u64 {
+    harness::cycles(kernel, n, Features::ALL, Goal::Latency).unwrap()
+}
+
+fn single_stage(kernel: &str, n: usize) -> CosimClass {
+    CosimClass {
+        stages: vec![StageTask { kernel: kernel.into(), n, est_s: s_of(cycles(kernel, n)) }],
+    }
+}
+
+/// The replay service table equivalent to `classes` (stage chains
+/// padded to replay's fixed four slots with zero-duration stages).
+fn replay_service(classes: &[CosimClass]) -> Vec<Option<[f64; 4]>> {
+    classes
+        .iter()
+        .map(|c| {
+            assert!(c.stages.len() <= 4);
+            let mut s = [0.0; 4];
+            for (slot, st) in s.iter_mut().zip(&c.stages) {
+                *slot = st.est_s;
+            }
+            Some(s)
+        })
+        .collect()
+}
+
+/// SLO digest over a completion list, computed exactly as the serve
+/// layer computes it.
+fn digest(
+    completions: &[cluster::Completion],
+    service: &[Option<[f64; 4]>],
+) -> revel::coordinator::SloDigest {
+    let mut acc = SloAccountant::new();
+    for c in completions {
+        let s = service[c.class].unwrap_or([0.0; 4]);
+        let svc: f64 = s.iter().sum();
+        acc.record(
+            (c.finish_s - c.arrival_s) * 1e6,
+            (c.start_s - c.arrival_s) * 1e6,
+            svc * 1e6,
+            [s[0] * 1e6, s[1] * 1e6, s[2] * 1e6, s[3] * 1e6],
+        );
+    }
+    acc.digest()
+}
+
+/// Assert the two engines agree bit-exactly on a single-stage workload.
+fn assert_engines_agree(
+    what: &str,
+    cl: &ClusterConfig,
+    classes: &[CosimClass],
+    workload: &dyn Fn() -> (Vec<Arrival>, bool, usize, usize, u64),
+) {
+    // workload() returns (trace, closed, clients, jobs, pick_seed).
+    let service = replay_service(classes);
+    let cosim_classes: Vec<Option<CosimClass>> =
+        classes.iter().cloned().map(Some).collect();
+    let ccfg = CosimConfig { cluster: cl.clone(), deadline_s: None };
+    let (trace, closed, clients, jobs, pick_seed) = workload();
+    let (replay, co) = if closed {
+        let mut r1 = Rng::new(pick_seed);
+        let replay = cluster::run(cl, &service, Workload::Closed { clients, jobs }, || {
+            r1.below(classes.len())
+        });
+        let mut r2 = Rng::new(pick_seed);
+        let co =
+            cosim::run(&ccfg, &cosim_classes, Workload::Closed { clients, jobs }, || {
+                r2.below(classes.len())
+            });
+        (replay, co)
+    } else {
+        let replay = cluster::run(cl, &service, Workload::Open(&trace), || 0);
+        let co = cosim::run(&ccfg, &cosim_classes, Workload::Open(&trace), || 0);
+        (replay, co)
+    };
+    assert_eq!(co.completions, replay.completions, "{what}: per-job records");
+    assert_eq!(co.units, replay.units, "{what}: per-unit stats");
+    assert_eq!(co.makespan_s, replay.makespan_s, "{what}: makespan");
+    assert_eq!(co.dropped, replay.dropped, "{what}: shed arrivals");
+    assert_eq!(co.failed, replay.failed, "{what}: failed arrivals");
+    assert_eq!(co.peak_admit_queue, replay.peak_admit_queue, "{what}");
+    assert_eq!(co.handoffs, 0, "{what}: single-stage jobs never touch the bus");
+    assert_eq!(
+        digest(&co.completions, &service),
+        digest(&replay.completions, &service),
+        "{what}: SLO digests"
+    );
+    // Live-measured stage cycles == the memoized cycles replay served.
+    for (comp, cy) in co.completions.iter().zip(&co.stage_cycles) {
+        assert_eq!(cy.len(), 1, "{what}: job {}", comp.id);
+        let stage = &classes[comp.class].stages[0];
+        let want = cycles(&stage.kernel, stage.n);
+        assert_eq!(cy[0], want, "{what}: job {} live != memoized", comp.id);
+    }
+    // And the co-sim engine is bit-deterministic: rerun and compare.
+    let again = if closed {
+        let mut r = Rng::new(pick_seed);
+        cosim::run(&ccfg, &cosim_classes, Workload::Closed { clients, jobs }, || {
+            r.below(classes.len())
+        })
+    } else {
+        cosim::run(&ccfg, &cosim_classes, Workload::Open(&trace), || 0)
+    };
+    assert_eq!(again, co, "{what}: cosim must be bit-deterministic");
+}
+
+/// The acceptance pin: single-stage jobs, no handoffs — cosim == replay
+/// bit-exactly across seeds × {1, 4, 8} units, for paced Poisson
+/// traffic (mixed classes) and sequential closed loops.
+#[test]
+fn cosim_equals_replay_on_contention_free_workloads() {
+    let classes = vec![single_stage("solver", 8), single_stage("solver", 12)];
+    let mean_svc =
+        (classes[0].stages[0].est_s + classes[1].stages[0].est_s) / 2.0;
+    for seed in [7u64, 23u64] {
+        for units in [1usize, 4, 8] {
+            let cl = ClusterConfig { units, queue_cap: 8, admit_cap: 256 };
+            // Paced Poisson arrivals at roughly half of one unit's
+            // capacity: sparse enough that queues stay short (and with
+            // several units, contention-free), dense enough to be a
+            // real trace. Distinct timestamps make event ordering
+            // trivially robust.
+            let lambda = 0.5 / mean_svc;
+            let mut rng = Rng::new(seed);
+            let mut t = 0.0;
+            let trace: Vec<Arrival> = (0..16)
+                .map(|id| {
+                    t += rng.exp(lambda);
+                    Arrival { id, class: rng.below(2), t_s: t }
+                })
+                .collect();
+            assert_engines_agree(
+                &format!("paced seed={seed} units={units}"),
+                &cl,
+                &classes,
+                &|| (trace.clone(), false, 0, 0, seed),
+            );
+            // Closed loop, one client: strictly sequential — the
+            // purest contention-free chain.
+            assert_engines_agree(
+                &format!("closed seed={seed} units={units}"),
+                &cl,
+                &classes,
+                &|| (Vec::new(), true, 1, 8, seed),
+            );
+        }
+    }
+}
+
+/// Single-class floods are contended (queues form) but symmetric, and
+/// single-stage jobs make stage granularity == job granularity: the
+/// engines must still agree bit-exactly.
+#[test]
+fn cosim_equals_replay_on_single_class_floods() {
+    let classes = vec![single_stage("solver", 8)];
+    for units in [1usize, 2, 4] {
+        let cl = ClusterConfig { units, queue_cap: 8, admit_cap: 256 };
+        let trace: Vec<Arrival> =
+            (0..12).map(|id| Arrival { id, class: 0, t_s: 0.0 }).collect();
+        assert_engines_agree(
+            &format!("flood units={units}"),
+            &cl,
+            &classes,
+            &|| (trace.clone(), false, 0, 0, 7),
+        );
+    }
+}
+
+/// Multi-stage jobs: replay is the optimistic bound. One unit —
+/// sorted co-simulated latencies dominate replay's pointwise (any
+/// schedule on one server satisfies `c_(k) >= k*S`); symmetric floods —
+/// co-simulated makespan `>=` replay's (total work / units is replay's
+/// exact flood makespan and every schedule's lower bound). Handoffs
+/// make the domination strict.
+#[test]
+fn cosim_latencies_dominate_replay_under_contention() {
+    let s = s_of(cycles("solver", 8));
+    let four = CosimClass {
+        stages: (0..4)
+            .map(|_| StageTask { kernel: "solver".into(), n: 8, est_s: s })
+            .collect(),
+    };
+    let classes = vec![four];
+    let service = replay_service(&classes);
+    let cosim_classes: Vec<Option<CosimClass>> =
+        classes.iter().cloned().map(Some).collect();
+    let trace: Vec<Arrival> =
+        (0..24).map(|id| Arrival { id, class: 0, t_s: 0.0 }).collect();
+    for units in [1usize, 4, 8] {
+        let cl = ClusterConfig { units, queue_cap: 32, admit_cap: 1024 };
+        let replay = cluster::run(&cl, &service, Workload::Open(&trace), || 0);
+        let co = cosim::run(
+            &CosimConfig { cluster: cl, deadline_s: None },
+            &cosim_classes,
+            Workload::Open(&trace),
+            || 0,
+        );
+        assert_eq!(replay.completions.len(), 24, "units={units}: replay served all");
+        assert_eq!(co.completions.len(), 24, "units={units}: cosim served all");
+        assert!(co.handoffs > 0, "units={units}: multi-stage jobs hand off");
+        // Makespan: work-conservation lower bound == replay's flood
+        // makespan on n-divisible symmetric clusters.
+        assert!(
+            co.makespan_s >= replay.makespan_s * (1.0 - 1e-12),
+            "units={units}: cosim makespan {} < replay {}",
+            co.makespan_s,
+            replay.makespan_s
+        );
+        let lat = |r: &[cluster::Completion]| -> Vec<f64> {
+            let mut v: Vec<f64> =
+                r.iter().map(|c| c.finish_s - c.arrival_s).collect();
+            v.sort_by(f64::total_cmp);
+            v
+        };
+        let rl = lat(&replay.completions);
+        let col = lat(&co.completions);
+        if units == 1 {
+            for (k, (&c, &r)) in col.iter().zip(&rl).enumerate() {
+                assert!(
+                    c >= r * (1.0 - 1e-12),
+                    "units=1: sorted latency {k}: cosim {c} < replay {r}"
+                );
+            }
+            // Handoffs (and breadth-first stage interleaving) make the
+            // domination strict well beyond rounding noise.
+            assert!(
+                col[0] > rl[0] * (1.0 + 1e-9),
+                "units=1: min latency must strictly exceed replay's"
+            );
+        }
+        // Per-stage live cycles stay the memoized ones even under
+        // contention — contention delays stages, it never alters them.
+        for cy in &co.stage_cycles {
+            assert_eq!(cy.len(), 4);
+            assert!(cy.iter().all(|&c| c == cycles("solver", 8)));
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Edge-case coverage for `harness::diff_outcomes` — the
+//! perf-neutrality gate CI applies to archived `BENCH_sweep.json`
+//! artifacts. These are the awkward shapes the happy-path unit tests
+//! skip: version-1 artifacts with no wall-time fields, disjoint point
+//! sets, and mixed regression + coverage-gap reports.
+
+use std::sync::Arc;
+
+use revel::harness::{self, diff_outcomes, SweepOutcome, SweepPoint};
+use revel::sim::Stats;
+use revel::workloads::{Features, Goal};
+
+/// A synthetic outcome (no simulation needed — the diff only reads
+/// point identity, cycles, and wall fields).
+fn out(kernel: &str, n: usize, cycles: u64, wall_ns: f64) -> SweepOutcome {
+    SweepOutcome {
+        point: SweepPoint::new(kernel, n, Features::ALL, Goal::Latency),
+        cycles,
+        max_err: 0.0,
+        flops: 1.0,
+        problems: 1,
+        stats: Stats { cycles, ..Stats::default() },
+        wall_ns_mean: wall_ns,
+        wall_ns_min: wall_ns,
+    }
+}
+
+/// Version-1 artifacts predate per-point wall time: the fields are
+/// absent from the JSON entirely. They must parse (walls read 0), and
+/// a diff against them must still gate on cycles while emitting no
+/// wall rows.
+#[test]
+fn v1_artifacts_without_wall_fields_parse_and_diff() {
+    let cur = vec![out("solver", 8, 1000, 5e6), out("gemm", 12, 2000, 7e6)];
+    let doc = harness::artifact_json(
+        &cur.iter().cloned().map(Arc::new).collect::<Vec<_>>(),
+        1.0,
+        2,
+    )
+    .pretty();
+    // Strip the wall fields line-wise to reconstruct a v1 document
+    // (keys serialize alphabetically, so neither is the last entry of
+    // its object and the JSON stays valid).
+    let v1_text: String = doc
+        .lines()
+        .filter(|l| !l.trim_start().starts_with("\"wall_ns_"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    assert!(v1_text.len() < doc.len(), "strip must remove wall lines");
+    let v1 = harness::read_artifact(&v1_text).expect("v1 artifact parses");
+    assert!(v1.iter().all(|o| o.wall_ns_mean == 0.0 && o.wall_ns_min == 0.0));
+    assert_eq!(v1.len(), cur.len());
+    assert_eq!(v1[0].cycles, 1000, "cycles survive the missing wall fields");
+
+    // Diff v1 (baseline) against the wall-carrying current run: the
+    // cycle gate is fully live, the wall report is empty (pairing
+    // requires wall data on both sides).
+    let d = diff_outcomes(&v1, &cur, 0.0);
+    assert!(d.regressions.is_empty() && d.improvements.is_empty());
+    assert_eq!(d.unchanged, 2);
+    assert!(d.walls.is_empty(), "no wall pairing against a v1 baseline");
+
+    // Explicit zeros behave exactly like absent fields.
+    let mut zeroed = cur.clone();
+    for o in &mut zeroed {
+        o.wall_ns_mean = 0.0;
+        o.wall_ns_min = 0.0;
+    }
+    let d = diff_outcomes(&zeroed, &cur, 0.0);
+    assert!(d.walls.is_empty());
+    assert_eq!(d.unchanged, 2);
+}
+
+/// Wall rows pair per point: a baseline with wall data for only some
+/// points reports only those points.
+#[test]
+fn wall_pairing_is_per_point_not_all_or_nothing() {
+    let base = vec![out("solver", 8, 1000, 4e6), out("gemm", 12, 2000, 0.0)];
+    let cur = vec![out("solver", 8, 1000, 3e6), out("gemm", 12, 2000, 6e6)];
+    let d = diff_outcomes(&base, &cur, 0.0);
+    assert_eq!(d.walls.len(), 1);
+    assert!(d.walls[0].key.contains("solver/n8"), "{:?}", d.walls);
+    assert_eq!(d.walls[0].base_ns, 4e6);
+    assert_eq!(d.walls[0].cur_ns, 3e6);
+    assert_eq!(d.unchanged, 2, "wall data never affects the cycle gate");
+}
+
+/// Disjoint point sets: nothing matches, so nothing can regress or
+/// improve — everything is a coverage change, which the CLI gate
+/// treats as a failure (missing baseline points).
+#[test]
+fn disjoint_point_sets_classify_as_pure_coverage_change() {
+    let base = vec![out("solver", 8, 1000, 1e6), out("solver", 12, 1500, 1e6)];
+    let cur = vec![out("gemm", 12, 2000, 1e6)];
+    let d = diff_outcomes(&base, &cur, 0.0);
+    assert_eq!(d.unchanged, 0);
+    assert!(d.regressions.is_empty() && d.improvements.is_empty());
+    assert_eq!(d.missing.len(), 2);
+    assert_eq!(d.added.len(), 1);
+    assert!(d.walls.is_empty(), "unmatched points never pair walls");
+    // Empty-vs-empty degenerates cleanly.
+    let d = diff_outcomes(&[], &[], 0.0);
+    assert_eq!(d.unchanged, 0);
+    assert!(d.missing.is_empty() && d.added.is_empty() && d.walls.is_empty());
+}
+
+/// A report can mix every classification at once; tolerance moves the
+/// regression boundary without touching coverage accounting.
+#[test]
+fn mixed_regression_and_coverage_gap_reports() {
+    let base = vec![
+        out("solver", 8, 1000, 1e6),  // will regress
+        out("solver", 12, 1500, 1e6), // unchanged
+        out("solver", 16, 1800, 1e6), // will improve
+        out("gemm", 12, 2000, 1e6),   // dropped from current
+    ];
+    let cur = vec![
+        out("solver", 8, 1300, 1e6),
+        out("solver", 12, 1500, 1e6),
+        out("solver", 16, 1700, 1e6),
+        out("fir", 12, 900, 1e6), // new coverage
+    ];
+    let d = diff_outcomes(&base, &cur, 0.0);
+    assert_eq!(d.regressions.len(), 1);
+    assert!(d.regressions[0].key.contains("solver/n8"));
+    assert_eq!((d.regressions[0].base, d.regressions[0].cur), (1000, 1300));
+    assert_eq!(d.improvements.len(), 1);
+    assert!(d.improvements[0].key.contains("solver/n16"));
+    assert_eq!(d.unchanged, 1);
+    assert_eq!(d.missing, vec![harness::point_key(&base[3].point)]);
+    assert_eq!(d.added, vec![harness::point_key(&cur[3].point)]);
+    assert_eq!(d.walls.len(), 3, "only matched points pair walls");
+    // 30% growth sits inside a 50% tolerance: regression absorbed, the
+    // coverage gap still reported.
+    let d = diff_outcomes(&base, &cur, 50.0);
+    assert!(d.regressions.is_empty());
+    assert_eq!(d.unchanged, 2);
+    assert_eq!(d.missing.len(), 1);
+    assert_eq!(d.added.len(), 1);
+}

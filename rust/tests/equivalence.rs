@@ -103,6 +103,43 @@ fn event_driven_core_matches_dense_stepping_for_every_workload() {
     }
 }
 
+/// Release-mode promotion of the `ExtActivity` cross-check: the
+/// incremental per-lane activity counters behind `ext_busy()` (shared
+/// bus, XFER source, XFER destination) must agree with a scan of the
+/// live machine-level stream lists on *every cycle* of real workload
+/// runs — not only in the debug-build unit test that first pinned
+/// them. Driven through the public `begin`/`step_cycle`/
+/// `validate_ext_activity` API so CI exercises the counters with
+/// release codegen.
+#[test]
+fn ext_activity_counters_match_stream_scans_on_real_workloads() {
+    // Kernels chosen for machine-level stream coverage: cholesky's
+    // fine-grain XFER chains, fft's shared-scratchpad staging, and a
+    // throughput variant for multi-lane traffic.
+    let points = [
+        ("cholesky", 12, Goal::Latency),
+        ("fft", 64, Goal::Latency),
+        ("solver", 12, Goal::Throughput),
+    ];
+    for (kernel, n, goal) in points {
+        let mut prep = workloads::prepare(kernel, n, Features::ALL, goal)
+            .unwrap_or_else(|e| panic!("{kernel} n={n}: {e}"));
+        prep.machine.begin(std::mem::take(&mut prep.prog));
+        let mut guard = 0u64;
+        while !prep.machine.is_finished() {
+            prep.machine.step_cycle();
+            prep.machine.validate_ext_activity().unwrap_or_else(|e| {
+                panic!("{kernel} n={n} {goal:?}: {e}");
+            });
+            guard += 1;
+            assert!(guard < 5_000_000, "{kernel} n={n}: run did not complete");
+        }
+        let max_err = (prep.verify)(&prep.machine)
+            .unwrap_or_else(|e| panic!("{kernel} n={n}: verify failed: {e}"));
+        assert!(max_err < 1e-6, "{kernel} n={n}: max_err {max_err}");
+    }
+}
+
 /// Deadlock-path parity: on a wedged program the watchdog must fire at
 /// the same cycle, with the same snapshot text and the same accumulated
 /// per-bucket statistics, in both scheduling modes.

@@ -1,0 +1,208 @@
+//! Property tests for the `vsc::check` program-validation pass: seed
+//! targeted corruptions into every workload's real `plan()`/`program()`
+//! output and assert the check reports the *expected diagnostic class*
+//! — never a silent pass.
+//!
+//! Three corruption classes, mirroring the bug families the pass
+//! exists to catch before they become watchdog deadlocks:
+//!
+//! * **unfed input** — delete every stream feeding one input port of a
+//!   dataflow that remains otherwise fed: the check must say the
+//!   dataflow can never fire;
+//! * **undrained output** — delete every store/XFER draining one
+//!   produced output whose dataflow stays fed: the check must flag the
+//!   FIFO that will fill (an error for always-produced outputs, a
+//!   warning for gated ones);
+//! * **out-of-bounds pattern** — shift a local load/store pattern past
+//!   the scratchpad: the check must report the bounds violation.
+//!
+//! Corruption sites are picked per seed from an era-aware usage scan
+//! (the same Configure-delimited accounting the check itself applies),
+//! so every seeded corruption is one the pass is *required* to
+//! diagnose — a clean report is a test failure, not an unlucky pick.
+
+use std::sync::Arc;
+
+use revel::compiler::Configured;
+use revel::isa::{Cmd, Program};
+use revel::prop::check;
+use revel::sim::SimConfig;
+use revel::vsc::{check_program, Severity};
+use revel::workloads::{self, Features, Goal};
+
+/// A modest, structurally valid size per kernel (matches the grid the
+/// clean-program check test uses).
+fn size_for(kernel: &str) -> usize {
+    match kernel {
+        "fft" => 64,
+        "gemm" => 12,
+        "fir" => 24,
+        _ => 16,
+    }
+}
+
+/// One Configure-delimited era of a program: its configuration and the
+/// in/out port gids the era's stream commands touch.
+struct Era {
+    cfg: Arc<Configured>,
+    fed: Vec<usize>,
+    drained: Vec<usize>,
+}
+
+fn scan(prog: &Program) -> Vec<Era> {
+    let mut eras: Vec<Era> = Vec::new();
+    for c in prog {
+        match &c.cmd {
+            Cmd::Configure(cfg) => {
+                eras.push(Era { cfg: cfg.clone(), fed: Vec::new(), drained: Vec::new() })
+            }
+            Cmd::LocalLd { port, .. } | Cmd::ConstSt { port, .. } => {
+                if let Some(e) = eras.last_mut() {
+                    e.fed.push(*port);
+                }
+            }
+            Cmd::LocalSt { port, .. } => {
+                if let Some(e) = eras.last_mut() {
+                    e.drained.push(*port);
+                }
+            }
+            Cmd::Xfer { src_port, dst_port, .. } => {
+                if let Some(e) = eras.last_mut() {
+                    e.drained.push(*src_port);
+                    e.fed.push(*dst_port);
+                }
+            }
+            _ => {}
+        }
+    }
+    eras
+}
+
+/// Input-port gids whose removal *must* produce "can never fire": fed
+/// ports of dataflows that have at least one other fed input in the
+/// same era (a fully unfed dataflow is legitimately "unused").
+fn unfed_candidates(eras: &[Era]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for e in eras {
+        for &gid in &e.fed {
+            let Some((di, pi)) = e.cfg.config.find_in_port(gid) else { continue };
+            let sibling_fed = e.fed.iter().any(|&g2| {
+                g2 != gid
+                    && matches!(e.cfg.config.find_in_port(g2),
+                                Some((d2, p2)) if d2 == di && p2 != pi)
+            });
+            if sibling_fed && !out.contains(&gid) {
+                out.push(gid);
+            }
+        }
+    }
+    out
+}
+
+/// Output-port gids whose drain removal must produce "never consumed":
+/// drained outputs of dataflows that stay fed in the same era. Returns
+/// (gid, gated) — gated outputs demote the diagnostic to a warning.
+fn undrained_candidates(eras: &[Era]) -> Vec<(usize, bool)> {
+    let mut out: Vec<(usize, bool)> = Vec::new();
+    for e in eras {
+        for &gid in &e.drained {
+            let Some((di, oi)) = e.cfg.config.find_out_port(gid) else { continue };
+            let dfg_fed = e.fed.iter().any(
+                |&g2| matches!(e.cfg.config.find_in_port(g2), Some((d2, _)) if d2 == di),
+            );
+            if dfg_fed && !out.iter().any(|&(g, _)| g == gid) {
+                out.push((gid, e.cfg.config.dfgs[di].outs[oi].gate.is_some()));
+            }
+        }
+    }
+    out
+}
+
+fn remove_feeders(prog: &mut Program, gid: usize) {
+    prog.retain(|c| match &c.cmd {
+        Cmd::LocalLd { port, .. } | Cmd::ConstSt { port, .. } => *port != gid,
+        Cmd::Xfer { dst_port, .. } => *dst_port != gid,
+        _ => true,
+    });
+}
+
+fn remove_drains(prog: &mut Program, gid: usize) {
+    prog.retain(|c| match &c.cmd {
+        Cmd::LocalSt { port, .. } => *port != gid,
+        Cmd::Xfer { src_port, .. } => *src_port != gid,
+        _ => true,
+    });
+}
+
+/// Command indices carrying a local pattern that can be pushed out of
+/// bounds.
+fn oob_sites(prog: &Program) -> Vec<usize> {
+    prog.iter()
+        .enumerate()
+        .filter(|(_, c)| match &c.cmd {
+            Cmd::LocalLd { pat, .. } | Cmd::LocalSt { pat, .. } => pat.bounds().is_some(),
+            _ => false,
+        })
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[test]
+fn seeded_corruptions_always_produce_the_expected_diagnostic() {
+    let sim = SimConfig::default();
+    for kernel in workloads::NAMES {
+        let n = size_for(kernel);
+        let prep = workloads::prepare(kernel, n, Features::ALL, Goal::Latency)
+            .unwrap_or_else(|e| panic!("{kernel} n={n}: {e}"));
+        let clean = check_program(&prep.prog, &sim);
+        assert!(clean.errors().is_empty(), "{kernel} n={n} baseline:\n{clean}");
+        let eras = scan(&prep.prog);
+        let unfed = unfed_candidates(&eras);
+        let undrained = undrained_candidates(&eras);
+        let oob = oob_sites(&prep.prog);
+        assert!(!unfed.is_empty(), "{kernel}: no multi-input dataflow fed?");
+        assert!(!undrained.is_empty(), "{kernel}: no drained fed output?");
+        assert!(!oob.is_empty(), "{kernel}: no local pattern to corrupt?");
+
+        check(&format!("{kernel}: unfed input diagnosed"), 5, |rng| {
+            let gid = unfed[rng.below(unfed.len())];
+            let mut prog = prep.prog.clone();
+            remove_feeders(&mut prog, gid);
+            let rep = check_program(&prog, &sim);
+            assert!(
+                rep.errors().iter().any(|d| d.msg.contains("never receives a stream")),
+                "{kernel}: unfeeding port {gid} passed silently:\n{rep}"
+            );
+        });
+
+        check(&format!("{kernel}: undrained output diagnosed"), 5, |rng| {
+            let (gid, gated) = undrained[rng.below(undrained.len())];
+            let mut prog = prep.prog.clone();
+            remove_drains(&mut prog, gid);
+            let rep = check_program(&prog, &sim);
+            let expected = if gated { Severity::Warning } else { Severity::Error };
+            assert!(
+                rep.diags
+                    .iter()
+                    .any(|d| d.severity == expected && d.msg.contains("never consumed")),
+                "{kernel}: undraining port {gid} (gated={gated}) passed silently:\n{rep}"
+            );
+        });
+
+        check(&format!("{kernel}: OOB pattern diagnosed"), 5, |rng| {
+            let at = oob[rng.below(oob.len())];
+            let mut prog = prep.prog.clone();
+            match &mut prog[at].cmd {
+                Cmd::LocalLd { pat, .. } | Cmd::LocalSt { pat, .. } => {
+                    pat.start += sim.lane_spad_words as i64 * 4;
+                }
+                _ => unreachable!("oob_sites only selects local patterns"),
+            }
+            let rep = check_program(&prog, &sim);
+            assert!(
+                rep.errors().iter().any(|d| d.at == Some(at) && d.msg.contains("outside")),
+                "{kernel}: OOB pattern at command {at} passed silently:\n{rep}"
+            );
+        });
+    }
+}
