@@ -5,13 +5,16 @@
 //! loop (latency under self-limiting load) — each reporting
 //! p50/p95/p99 latency, throughput in subframes per virtual second,
 //! per-unit balance, and how far the batched stage simulations were
-//! amortized. When `make artifacts` has run, the stage results are also
-//! cross-checked against the AOT-compiled JAX golden models via PJRT.
+//! amortized. A final metro-scale run co-simulates four cells with
+//! mixed arrival processes (flood / MMPP burst / diurnal / closed) as
+//! conservative shards on pool threads. When `make artifacts` has run,
+//! the stage results are also cross-checked against the AOT-compiled
+//! JAX golden models via PJRT.
 //!
 //!     cargo run --release --example pipeline_5g [jobs] [units]
 
 use revel::coordinator::{
-    self, ArrivalMode, ClusterConfig, ServeConfig, ServeReport,
+    self, ArrivalProcess, CellSpec, ClusterSpec, EngineKind, ServeReport,
 };
 
 fn show(tag: &str, r: &ServeReport) {
@@ -27,9 +30,21 @@ fn show(tag: &str, r: &ServeReport) {
         r.slo.latency_us.p50, r.slo.latency_us.p95, r.slo.latency_us.p99
     );
     println!("  queue delay p99            {:.1} us", r.slo.queue_us.p99);
-    let jobs: Vec<usize> = r.per_unit.iter().map(|u| u.jobs).collect();
-    let stolen: usize = r.per_unit.iter().map(|u| u.stolen).sum();
-    println!("  jobs per unit              {jobs:?} ({stolen} stolen)");
+    for (i, cell) in r.cells.iter().enumerate() {
+        let jobs: Vec<usize> = cell.per_unit.iter().map(|u| u.jobs).collect();
+        let stolen: usize = cell.per_unit.iter().map(|u| u.stolen).sum();
+        if r.cells.len() == 1 {
+            println!("  jobs per unit              {jobs:?} ({stolen} stolen)");
+        } else {
+            println!(
+                "  cell {i} [{:<7}]           {} done, p99 {:.1} us, \
+                 per-unit {jobs:?} ({stolen} stolen)",
+                cell.arrival.kind(),
+                cell.completed,
+                cell.slo.latency_us.p99
+            );
+        }
+    }
     println!(
         "  batching                   {} stage sims for {} stage executions",
         r.batching.distinct_points, r.batching.stage_runs
@@ -55,29 +70,27 @@ fn main() {
         Err(e) => println!("PJRT golden check skipped/failed: {e}"),
     }
 
-    let base = ServeConfig {
-        jobs,
-        seed: 7,
-        mode: ArrivalMode::Open { lambda: 0.0 },
-        cluster: ClusterConfig { units, ..ClusterConfig::default() },
-        ..ServeConfig::default()
-    };
-
-    // Open-loop flood: every subframe at t=0 measures raw capacity.
+    // One cell, default flood arrival: every subframe at t=0 measures
+    // raw capacity.
+    let base = ClusterSpec::new(7).cell(CellSpec::new(units).jobs(jobs));
     let flood = coordinator::serve(&base).expect("flood run");
     show("flood (open loop, all subframes at t=0)", &flood);
 
     // Poisson arrivals at 80% of the measured capacity: queues form
     // and drain; latency shows the queueing tail, not just service.
     let lambda = (flood.throughput_per_s * 0.8).max(1.0);
-    let mut paced = base.clone();
-    paced.mode = ArrivalMode::Open { lambda };
+    let paced = ClusterSpec::new(7).cell(
+        CellSpec::new(units).jobs(jobs).arrival(ArrivalProcess::Poisson { lambda }),
+    );
     let p = coordinator::serve(&paced).expect("paced run");
     show(&format!("poisson arrivals at {lambda:.0} subframes/s (80% load)"), &p);
 
     // Closed loop: 2 clients per unit, zero think time.
-    let mut closed = base.clone();
-    closed.mode = ArrivalMode::Closed { clients: 2 * units };
+    let closed = ClusterSpec::new(7).cell(
+        CellSpec::new(units)
+            .jobs(jobs)
+            .arrival(ArrivalProcess::Closed { clients: 2 * units }),
+    );
     let c = coordinator::serve(&closed).expect("closed run");
     show(&format!("closed loop ({} clients)", 2 * units), &c);
 
@@ -85,14 +98,45 @@ fn main() {
     // per-unit machines with stage-pipelined subframes and a shared
     // inter-stage interconnect. Replay above is the optimistic bound;
     // the latency delta is the cross-unit contention it cannot see.
-    let mut co = base.clone();
-    co.engine = coordinator::EngineKind::Cosim;
-    co.jobs = jobs.min(32);
+    let co = ClusterSpec::new(7)
+        .engine(EngineKind::Cosim)
+        .cell(CellSpec::new(units).jobs(jobs.min(32)));
     let r = coordinator::serve(&co).expect("cosim run");
     show("co-simulated flood (live machines, shared interconnect)", &r);
     println!(
         "  {} inter-stage handoffs; {:.1} us spent waiting on the shared bus",
         r.handoffs,
         r.bus_wait_s * 1e6
+    );
+
+    // Metro scale: four cells with different traffic shapes, advanced
+    // as conservative shards on pool threads. Shard count never changes
+    // the report — only wall time (see `revel serve --scaling`).
+    let cell_jobs = (jobs / 8).clamp(4, 24);
+    let metro = ClusterSpec::new(7)
+        .engine(EngineKind::Cosim)
+        .cell(CellSpec::new(units).jobs(cell_jobs))
+        .cell(CellSpec::new(units).jobs(cell_jobs).arrival(ArrivalProcess::Mmpp {
+            lambda_lo: 500.0,
+            lambda_hi: 50_000.0,
+            mean_dwell_s: 0.001,
+        }))
+        .cell(CellSpec::new(units).jobs(cell_jobs).arrival(ArrivalProcess::Diurnal {
+            lambda: 20_000.0,
+            period_s: 0.002,
+            depth: 0.9,
+        }))
+        .cell(
+            CellSpec::new(units)
+                .jobs(cell_jobs)
+                .arrival(ArrivalProcess::Closed { clients: units }),
+        );
+    let m = coordinator::serve(&metro).expect("metro run");
+    show(
+        &format!(
+            "co-simulated metro (4 cells, {} shards)",
+            metro.effective_shards()
+        ),
+        &m,
     );
 }

@@ -1,0 +1,374 @@
+//! Typed arrival processes for the multi-cell serving cluster.
+//!
+//! Each [`super::serve::CellSpec`] names one [`ArrivalProcess`]; the
+//! serve layer synthesizes a per-cell arrival trace from it with a
+//! per-cell RNG, so cells are independent traffic domains and the
+//! whole metro run stays bit-deterministic per seed:
+//!
+//! * `Poisson` — open-loop homogeneous Poisson at `lambda` jobs/s;
+//!   `lambda <= 0` degenerates to a flood (every job at `t = 0`), the
+//!   peak-capacity probe.
+//! * `Mmpp` — a 2-state Markov-modulated Poisson process (the classic
+//!   bursty-traffic model): the cell alternates between a low-rate and
+//!   a high-rate state with exponentially distributed dwell times.
+//! * `Diurnal` — a non-homogeneous Poisson process whose rate swings
+//!   sinusoidally around `lambda` (period `period_s`, relative
+//!   amplitude `depth`), sampled exactly by Lewis–Shedler thinning.
+//! * `Replay` — the recorded `jobs_detail` arrivals of an earlier
+//!   serve artifact, replayed verbatim (loaded by the serve layer,
+//!   which owns artifact parsing).
+//! * `Closed` — not a trace at all: `clients` zero-think-time
+//!   submitters, each issuing its next job on completion.
+
+use crate::harness::json::Json;
+use crate::util::Rng;
+
+use super::cluster::Arrival;
+
+/// How jobs arrive at one cell. See the module docs for the semantics
+/// of each variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Open-loop Poisson at `lambda` jobs/s (`lambda <= 0`: flood).
+    Poisson { lambda: f64 },
+    /// Bursty 2-state MMPP: rate `lambda_lo` or `lambda_hi`, state
+    /// dwell times exponential with mean `mean_dwell_s` seconds.
+    Mmpp { lambda_lo: f64, lambda_hi: f64, mean_dwell_s: f64 },
+    /// Diurnally modulated Poisson: rate(t) = `lambda` * (1 + `depth` *
+    /// sin(2πt / `period_s`)), with `0 <= depth <= 1`.
+    Diurnal { lambda: f64, period_s: f64, depth: f64 },
+    /// Replay the arrivals recorded in the `jobs_detail` of the serve
+    /// artifact at `path` (rows of this cell's index).
+    Replay { path: String },
+    /// Closed loop with `clients` zero-think-time submitters.
+    Closed { clients: usize },
+}
+
+impl Default for ArrivalProcess {
+    fn default() -> Self {
+        ArrivalProcess::Poisson { lambda: 0.0 }
+    }
+}
+
+impl ArrivalProcess {
+    /// Short kind tag used in artifacts and CLI output.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Mmpp { .. } => "mmpp",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+            ArrivalProcess::Replay { .. } => "replay",
+            ArrivalProcess::Closed { .. } => "closed",
+        }
+    }
+
+    /// Reject parameterizations with no sensible sampling semantics.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            ArrivalProcess::Poisson { lambda } => {
+                if !lambda.is_finite() {
+                    return Err(format!("poisson lambda must be finite, got {lambda}"));
+                }
+            }
+            ArrivalProcess::Mmpp { lambda_lo, lambda_hi, mean_dwell_s } => {
+                if !(*lambda_lo > 0.0 && *lambda_hi > 0.0 && *mean_dwell_s > 0.0) {
+                    return Err(format!(
+                        "mmpp needs lambda_lo/lambda_hi/mean_dwell_s > 0, got \
+                         {lambda_lo}/{lambda_hi}/{mean_dwell_s}"
+                    ));
+                }
+            }
+            ArrivalProcess::Diurnal { lambda, period_s, depth } => {
+                if !(*lambda > 0.0 && *period_s > 0.0) {
+                    return Err(format!(
+                        "diurnal needs lambda/period_s > 0, got {lambda}/{period_s}"
+                    ));
+                }
+                if !(0.0..=1.0).contains(depth) {
+                    return Err(format!("diurnal depth must be in [0, 1], got {depth}"));
+                }
+            }
+            ArrivalProcess::Replay { path } => {
+                if path.is_empty() {
+                    return Err("replay needs a non-empty artifact path".into());
+                }
+            }
+            ArrivalProcess::Closed { clients } => {
+                if *clients == 0 {
+                    return Err("closed loop needs clients > 0".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Synthesize this cell's arrival trace: `jobs` arrivals, class of
+    /// each drawn by `pick` (interleaved with the time draws on the
+    /// same RNG, exactly one pick per arrival). Returns `None` for the
+    /// variants that are not open-loop traces (`Closed` runs a
+    /// client loop in the engine; `Replay` is loaded from its artifact
+    /// by the serve layer).
+    pub fn synthesize(
+        &self,
+        jobs: usize,
+        rng: &mut Rng,
+        mut pick: impl FnMut(&mut Rng) -> usize,
+    ) -> Option<Vec<Arrival>> {
+        let mut trace = Vec::with_capacity(jobs);
+        let mut t = 0.0f64;
+        match *self {
+            ArrivalProcess::Poisson { lambda } => {
+                for id in 0..jobs as u64 {
+                    if lambda > 0.0 {
+                        t += rng.exp(lambda);
+                    }
+                    trace.push(Arrival { id, class: pick(rng), t_s: t });
+                }
+            }
+            ArrivalProcess::Mmpp { lambda_lo, lambda_hi, mean_dwell_s } => {
+                let mut hi = false;
+                let mut next_switch = rng.exp(1.0 / mean_dwell_s);
+                for id in 0..jobs as u64 {
+                    loop {
+                        let lam = if hi { lambda_hi } else { lambda_lo };
+                        let dt = rng.exp(lam);
+                        if t + dt <= next_switch {
+                            t += dt;
+                            break;
+                        }
+                        // The Poisson clock is memoryless: jump to the
+                        // state switch and redraw at the new rate.
+                        t = next_switch;
+                        hi = !hi;
+                        next_switch += rng.exp(1.0 / mean_dwell_s);
+                    }
+                    trace.push(Arrival { id, class: pick(rng), t_s: t });
+                }
+            }
+            ArrivalProcess::Diurnal { lambda, period_s, depth } => {
+                // Lewis–Shedler thinning against the envelope rate.
+                let l_max = lambda * (1.0 + depth);
+                let rate = |t: f64| {
+                    lambda
+                        * (1.0 + depth * (std::f64::consts::TAU * t / period_s).sin())
+                };
+                for id in 0..jobs as u64 {
+                    loop {
+                        t += rng.exp(l_max);
+                        if rng.f64() * l_max <= rate(t) {
+                            break;
+                        }
+                    }
+                    trace.push(Arrival { id, class: pick(rng), t_s: t });
+                }
+            }
+            ArrivalProcess::Replay { .. } | ArrivalProcess::Closed { .. } => {
+                return None;
+            }
+        }
+        Some(trace)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(&str, Json)> = vec![("kind", Json::Str(self.kind().into()))];
+        match self {
+            ArrivalProcess::Poisson { lambda } => {
+                kv.push(("lambda", Json::Num(*lambda)));
+            }
+            ArrivalProcess::Mmpp { lambda_lo, lambda_hi, mean_dwell_s } => {
+                kv.push(("lambda_lo", Json::Num(*lambda_lo)));
+                kv.push(("lambda_hi", Json::Num(*lambda_hi)));
+                kv.push(("mean_dwell_s", Json::Num(*mean_dwell_s)));
+            }
+            ArrivalProcess::Diurnal { lambda, period_s, depth } => {
+                kv.push(("lambda", Json::Num(*lambda)));
+                kv.push(("period_s", Json::Num(*period_s)));
+                kv.push(("depth", Json::Num(*depth)));
+            }
+            ArrivalProcess::Replay { path } => {
+                kv.push(("path", Json::Str(path.clone())));
+            }
+            ArrivalProcess::Closed { clients } => {
+                kv.push(("clients", Json::Num(*clients as f64)));
+            }
+        }
+        Json::obj(kv)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ArrivalProcess, String> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("arrival process missing \"kind\"")?;
+        let num = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("arrival process {kind:?} missing {k:?}"))
+        };
+        let p = match kind {
+            "poisson" => ArrivalProcess::Poisson { lambda: num("lambda")? },
+            "mmpp" => ArrivalProcess::Mmpp {
+                lambda_lo: num("lambda_lo")?,
+                lambda_hi: num("lambda_hi")?,
+                mean_dwell_s: num("mean_dwell_s")?,
+            },
+            "diurnal" => ArrivalProcess::Diurnal {
+                lambda: num("lambda")?,
+                period_s: num("period_s")?,
+                depth: num("depth")?,
+            },
+            "replay" => ArrivalProcess::Replay {
+                path: v
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or("replay arrival missing \"path\"")?
+                    .to_string(),
+            },
+            "closed" => ArrivalProcess::Closed { clients: num("clients")? as usize },
+            other => return Err(format!("unknown arrival process kind {other:?}")),
+        };
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::json;
+
+    fn times(p: &ArrivalProcess, jobs: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        p.synthesize(jobs, &mut rng, |r| r.below(2))
+            .expect("open-loop trace")
+            .iter()
+            .map(|a| a.t_s)
+            .collect()
+    }
+
+    #[test]
+    fn synthesis_is_deterministic_and_monotone() {
+        let procs = [
+            ArrivalProcess::Poisson { lambda: 1000.0 },
+            ArrivalProcess::Mmpp {
+                lambda_lo: 200.0,
+                lambda_hi: 5000.0,
+                mean_dwell_s: 0.01,
+            },
+            ArrivalProcess::Diurnal { lambda: 1000.0, period_s: 0.1, depth: 0.9 },
+        ];
+        for p in &procs {
+            p.validate().unwrap();
+            let a = times(p, 200, 7);
+            let b = times(p, 200, 7);
+            assert_eq!(a, b, "{}: same seed, same trace", p.kind());
+            assert!(
+                a.windows(2).all(|w| w[1] >= w[0]),
+                "{}: arrival times are nondecreasing",
+                p.kind()
+            );
+            assert_ne!(a, times(p, 200, 8), "{}: seeds decorrelate", p.kind());
+        }
+    }
+
+    #[test]
+    fn poisson_zero_lambda_floods_at_t0() {
+        let t = times(&ArrivalProcess::Poisson { lambda: 0.0 }, 16, 7);
+        assert!(t.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson_at_equal_mean_load() {
+        // Squared coefficient of variation of inter-arrival gaps:
+        // exactly 1 for Poisson in expectation, > 1 for a 2-state MMPP
+        // with well-separated rates. Use the empirical Poisson value as
+        // the baseline so the test is about the process, not the RNG.
+        let cv2 = |t: &[f64]| {
+            let gaps: Vec<f64> = t.windows(2).map(|w| w[1] - w[0]).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>()
+                / gaps.len() as f64;
+            var / (m * m)
+        };
+        let poisson = times(&ArrivalProcess::Poisson { lambda: 1000.0 }, 2000, 23);
+        let mmpp = times(
+            &ArrivalProcess::Mmpp {
+                lambda_lo: 100.0,
+                lambda_hi: 10_000.0,
+                mean_dwell_s: 0.05,
+            },
+            2000,
+            23,
+        );
+        assert!(
+            cv2(&mmpp) > 2.0 * cv2(&poisson),
+            "mmpp cv2 {} vs poisson cv2 {}",
+            cv2(&mmpp),
+            cv2(&poisson)
+        );
+    }
+
+    #[test]
+    fn diurnal_modulates_arrival_density() {
+        // With depth near 1, the half-periods where sin > 0 must hold
+        // clearly more arrivals than the half-periods where sin < 0.
+        let period = 0.1;
+        let t = times(
+            &ArrivalProcess::Diurnal { lambda: 2000.0, period_s: period, depth: 0.95 },
+            4000,
+            7,
+        );
+        let mut peak = 0usize;
+        let mut trough = 0usize;
+        for &x in &t {
+            let phase = (x / period).fract();
+            if phase < 0.5 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "peak {peak} vs trough {trough}"
+        );
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_parameters() {
+        assert!(ArrivalProcess::Mmpp {
+            lambda_lo: 0.0,
+            lambda_hi: 1.0,
+            mean_dwell_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(ArrivalProcess::Diurnal { lambda: 1.0, period_s: 1.0, depth: 1.5 }
+            .validate()
+            .is_err());
+        assert!(ArrivalProcess::Replay { path: String::new() }.validate().is_err());
+        assert!(ArrivalProcess::Closed { clients: 0 }.validate().is_err());
+        assert!(ArrivalProcess::Poisson { lambda: 0.0 }.validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_every_variant() {
+        let procs = [
+            ArrivalProcess::Poisson { lambda: 1234.5 },
+            ArrivalProcess::Mmpp {
+                lambda_lo: 10.0,
+                lambda_hi: 900.0,
+                mean_dwell_s: 0.25,
+            },
+            ArrivalProcess::Diurnal { lambda: 55.0, period_s: 2.0, depth: 0.4 },
+            ArrivalProcess::Replay { path: "BENCH_serve.json".into() },
+            ArrivalProcess::Closed { clients: 8 },
+        ];
+        for p in &procs {
+            let back = ArrivalProcess::from_json(
+                &json::parse(&p.to_json().pretty()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(&back, p);
+        }
+    }
+}

@@ -85,6 +85,18 @@ impl<E> Calendar<E> {
         self.heap.peek().map(|e| e.t)
     }
 
+    /// Remove and return the earliest event if it is scheduled strictly
+    /// before `horizon` — the primitive of conservative sharded
+    /// co-simulation: a shard drains its calendar up to the agreed
+    /// horizon and stops, leaving at-or-after events (and their FIFO
+    /// order) intact for the next window.
+    pub fn pop_before(&mut self, horizon: f64) -> Option<(f64, E)> {
+        match self.peek_time() {
+            Some(t) if t < horizon => self.pop(),
+            _ => None,
+        }
+    }
+
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -122,5 +134,19 @@ mod tests {
         // timestamp, insertion order decides.
         let order: Vec<i32> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
         assert_eq!(order, vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn pop_before_respects_the_horizon_and_fifo() {
+        let mut c = Calendar::new();
+        c.push(1.0, "a");
+        c.push(1.0, "b");
+        c.push(2.0, "later");
+        assert_eq!(c.pop_before(1.0), None, "horizon is exclusive");
+        assert_eq!(c.pop_before(1.5), Some((1.0, "a")));
+        assert_eq!(c.pop_before(1.5), Some((1.0, "b")));
+        assert_eq!(c.pop_before(1.5), None);
+        assert_eq!(c.len(), 1, "at-or-after events stay queued");
+        assert_eq!(c.pop_before(f64::INFINITY), Some((2.0, "later")));
     }
 }

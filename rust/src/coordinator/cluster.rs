@@ -2,15 +2,18 @@
 //! run queues, a least-loaded dispatcher with idle-time work stealing,
 //! and cluster-wide admission control with load shedding.
 //!
-//! The engine is a single-threaded discrete-event simulation over
-//! *virtual* time. Per-job service times are the simulated stage cycle
-//! counts at the REVEL clock (supplied by the caller, who obtains them
-//! from one batched [`crate::harness`] pass), so a run is bit-exactly
-//! deterministic for a fixed trace: every tie — same event timestamp,
-//! equal unit load — breaks on insertion order or the lowest unit
-//! index. Host parallelism lives entirely in the harness worker pool
-//! that pre-simulates the distinct stage kernels; the dispatcher itself
-//! never races.
+//! The engine is a sequential discrete-event simulation over *virtual*
+//! time — this is the **replay** engine behind one cell of a
+//! [`super::serve::ClusterSpec`] metro. Per-job service times are the
+//! simulated stage cycle counts at the REVEL clock (supplied by the
+//! caller, who obtains them from one batched [`crate::harness`] pass),
+//! so a run is bit-exactly deterministic for a fixed trace: every tie —
+//! same event timestamp, equal unit load — breaks on insertion order or
+//! the lowest unit index. Host parallelism lives in the harness worker
+//! pool that pre-simulates the distinct stage kernels and, for
+//! multi-cell co-simulation, in the [`super::shard`] driver that
+//! advances whole cells on pool threads; within a cell the dispatcher
+//! itself never races.
 //!
 //! Dispatch policy, in order:
 //! 1. an idle unit runs an arriving job immediately (idle units always

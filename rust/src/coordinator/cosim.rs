@@ -168,7 +168,7 @@ struct Job {
 struct Active {
     job: usize,
     machine: Machine,
-    verify: Box<dyn Fn(&Machine) -> Result<f64, String>>,
+    verify: Box<dyn Fn(&Machine) -> Result<f64, String> + Send + Sync>,
     start_s: f64,
     /// Exact finish time, once the machine has completed (the
     /// `StageDone` event is scheduled here).
@@ -605,125 +605,204 @@ impl Engine<'_> {
     }
 }
 
-/// Co-simulate a workload on the cluster. Same contract as
-/// [`super::cluster::run`] — deterministic: identical inputs give a
-/// bit-identical [`CosimRun`] — with per-class stage chains instead of
-/// a memoized service table. All failures (degraded classes, mid-run
-/// stage errors) are recorded in the run, never panicked.
+/// A resumable co-simulation: the whole engine state between two
+/// conservative synchronization horizons. The single-timeline [`run`]
+/// below drives one session to exhaustion; the sharded multi-cell path
+/// ([`super::shard`]) holds one session per cell and advances them
+/// window by window on pool threads — which is why a session is `Send`
+/// (live machines, verifiers, and the class picker all migrate with
+/// it) while its behavior stays identical to the single-threaded run:
+/// `advance_to(h)` processes exactly the events strictly before `h`,
+/// in the same order [`run`] would.
+pub struct CosimSession<'a> {
+    eng: Engine<'a>,
+    remaining: usize,
+    next_id: u64,
+    closed: bool,
+    first_arrival: Option<f64>,
+    seen_deaths: usize,
+    pick: Box<dyn FnMut() -> usize + Send + 'a>,
+}
+
+// A session migrates between pool threads at horizon barriers.
+fn _cosim_session_is_send(s: CosimSession<'static>) -> impl Send {
+    s
+}
+
+impl<'a> CosimSession<'a> {
+    /// Build the session and schedule the workload's initial arrivals.
+    /// Same inputs as [`run`]; the class picker must be `Send` so the
+    /// session can advance on a pool thread.
+    pub fn new(
+        cfg: &CosimConfig,
+        classes: &'a [Option<CosimClass>],
+        workload: Workload<'_>,
+        pick_class: impl FnMut() -> usize + Send + 'a,
+    ) -> Self {
+        // Live stages run real kernels; make sure the watchdog budget
+        // covers the legitimately long ones (the harness's budget).
+        crate::harness::ensure_budget();
+        let cl = ClusterConfig {
+            units: cfg.cluster.units.max(1),
+            queue_cap: cfg.cluster.queue_cap.max(1),
+            admit_cap: cfg.cluster.admit_cap,
+        };
+        let eng = Engine {
+            units: (0..cl.units).map(|_| Unit::new()).collect(),
+            cfg: cl,
+            deadline_s: cfg.deadline_s,
+            classes,
+            cal: Calendar::new(),
+            jobs: Vec::new(),
+            admission: VecDeque::new(),
+            bus_busy: false,
+            bus_fifo: VecDeque::new(),
+            next_ord: 0,
+            mid_run_deaths: 0,
+            done_jobs: Vec::new(),
+            dropped: 0,
+            deadline_shed: 0,
+            failed: 0,
+            makespan_s: 0.0,
+            peak_admit_queue: 0,
+            handoffs: 0,
+            bus_busy_s: 0.0,
+            bus_wait_s: 0.0,
+            stage_errors: Vec::new(),
+        };
+        let mut s = CosimSession {
+            eng,
+            remaining: 0,
+            next_id: 0,
+            closed: false,
+            first_arrival: None,
+            seen_deaths: 0,
+            pick: Box::new(pick_class),
+        };
+        match workload {
+            Workload::Open(trace) => {
+                for a in trace {
+                    s.eng.cal.push(a.t_s, Ev::Arrive(*a));
+                }
+            }
+            Workload::Closed { clients, jobs } => {
+                let c = clients.max(1).min(jobs);
+                for id in 0..c {
+                    let class = (s.pick)();
+                    s.eng.cal.push(
+                        0.0,
+                        Ev::Arrive(Arrival { id: id as u64, class, t_s: 0.0 }),
+                    );
+                }
+                s.remaining = jobs - c;
+                s.next_id = c as u64;
+                s.closed = true;
+            }
+        }
+        s
+    }
+
+    /// Timestamp of the next pending event, if any — what a sharded
+    /// driver inspects to decide whether another window is needed.
+    pub fn next_time(&self) -> Option<f64> {
+        self.eng.cal.peek_time()
+    }
+
+    /// Process every event scheduled strictly before `horizon`, in
+    /// calendar order (time, then FIFO within a timestamp). Returns
+    /// `true` once the calendar is empty — the session is drained and
+    /// ready to [`CosimSession::finish`]. Conservative-DES contract:
+    /// any ascending horizon schedule yields the run [`run`] produces,
+    /// because events an event creates never precede their creator.
+    pub fn advance_to(&mut self, horizon: f64) -> bool {
+        while let Some((now, ev)) = self.eng.cal.pop_before(horizon) {
+            let resubmit = match ev {
+                Ev::Arrive(a) => {
+                    self.first_arrival.get_or_insert(now);
+                    let dead = self.eng.on_arrive(a, now);
+                    self.closed && dead
+                }
+                Ev::Step(u) => {
+                    self.eng.on_step(u, now);
+                    false
+                }
+                Ev::StageDone(u) => {
+                    let completed = self.eng.on_stage_done(u, now);
+                    self.closed && completed
+                }
+                Ev::BusDone(j) => {
+                    self.eng.on_bus_done(j, now);
+                    false
+                }
+            };
+            // Closed loop: a client resubmits when its job leaves the
+            // system — on completion, on a dead arrival, and also when
+            // a job dies mid-run (stage prepare/simulate/verify
+            // failure), so failures never silently starve the loop.
+            let mut want = usize::from(resubmit);
+            if self.closed {
+                want += self.eng.mid_run_deaths - self.seen_deaths;
+            }
+            self.seen_deaths = self.eng.mid_run_deaths;
+            while want > 0 && self.remaining > 0 {
+                let class = (self.pick)();
+                self.eng.cal.push(
+                    now,
+                    Ev::Arrive(Arrival { id: self.next_id, class, t_s: now }),
+                );
+                self.next_id += 1;
+                self.remaining -= 1;
+                want -= 1;
+            }
+        }
+        self.eng.cal.is_empty()
+    }
+
+    /// Seal the run: sort completions into service-start order and
+    /// normalize the makespan to the first arrival (replay's
+    /// convention). Call after [`CosimSession::advance_to`] drained the
+    /// calendar; a non-drained session simply reports what completed.
+    pub fn finish(self) -> CosimRun {
+        let mut eng = self.eng;
+        eng.done_jobs.sort_by_key(|&(ord, _, _)| ord);
+        let mut out = CosimRun {
+            completions: eng.done_jobs.iter().map(|(_, c, _)| *c).collect(),
+            stage_cycles: eng.done_jobs.into_iter().map(|(_, _, cy)| cy).collect(),
+            dropped: eng.dropped,
+            deadline_shed: eng.deadline_shed,
+            failed: eng.failed,
+            units: eng.units.iter().map(|u| u.stats.clone()).collect(),
+            makespan_s: eng.makespan_s,
+            peak_admit_queue: eng.peak_admit_queue,
+            handoffs: eng.handoffs,
+            bus_busy_s: eng.bus_busy_s,
+            bus_wait_s: eng.bus_wait_s,
+            stage_errors: eng.stage_errors,
+        };
+        // Events pop in time order, so the first Arrive seen is the
+        // trace start; makespan is measured from it.
+        if let Some(t0) = self.first_arrival {
+            out.makespan_s = (out.makespan_s - t0).max(0.0);
+        }
+        out
+    }
+}
+
+/// Co-simulate a workload on the cluster to completion on the calling
+/// thread. Same contract as [`super::cluster::run`] — deterministic:
+/// identical inputs give a bit-identical [`CosimRun`] — with per-class
+/// stage chains instead of a memoized service table. All failures
+/// (degraded classes, mid-run stage errors) are recorded in the run,
+/// never panicked.
 pub fn run(
     cfg: &CosimConfig,
     classes: &[Option<CosimClass>],
     workload: Workload<'_>,
-    mut pick_class: impl FnMut() -> usize,
+    pick_class: impl FnMut() -> usize + Send,
 ) -> CosimRun {
-    // Live stages run real kernels; make sure the watchdog budget
-    // covers the legitimately long ones (same budget the harness uses).
-    crate::harness::ensure_budget();
-    let cl = ClusterConfig {
-        units: cfg.cluster.units.max(1),
-        queue_cap: cfg.cluster.queue_cap.max(1),
-        admit_cap: cfg.cluster.admit_cap,
-    };
-    let mut eng = Engine {
-        units: (0..cl.units).map(|_| Unit::new()).collect(),
-        cfg: cl,
-        deadline_s: cfg.deadline_s,
-        classes,
-        cal: Calendar::new(),
-        jobs: Vec::new(),
-        admission: VecDeque::new(),
-        bus_busy: false,
-        bus_fifo: VecDeque::new(),
-        next_ord: 0,
-        mid_run_deaths: 0,
-        done_jobs: Vec::new(),
-        dropped: 0,
-        deadline_shed: 0,
-        failed: 0,
-        makespan_s: 0.0,
-        peak_admit_queue: 0,
-        handoffs: 0,
-        bus_busy_s: 0.0,
-        bus_wait_s: 0.0,
-        stage_errors: Vec::new(),
-    };
-    let (mut remaining, mut next_id, closed) = match workload {
-        Workload::Open(trace) => {
-            for a in trace {
-                eng.cal.push(a.t_s, Ev::Arrive(*a));
-            }
-            (0usize, 0u64, false)
-        }
-        Workload::Closed { clients, jobs } => {
-            let c = clients.max(1).min(jobs);
-            for id in 0..c {
-                let class = pick_class();
-                eng.cal
-                    .push(0.0, Ev::Arrive(Arrival { id: id as u64, class, t_s: 0.0 }));
-            }
-            (jobs - c, c as u64, true)
-        }
-    };
-    let mut first_arrival: Option<f64> = None;
-    let mut seen_deaths = 0usize;
-    while let Some((now, ev)) = eng.cal.pop() {
-        let resubmit = match ev {
-            Ev::Arrive(a) => {
-                first_arrival.get_or_insert(now);
-                let dead = eng.on_arrive(a, now);
-                closed && dead
-            }
-            Ev::Step(u) => {
-                eng.on_step(u, now);
-                false
-            }
-            Ev::StageDone(u) => {
-                let completed = eng.on_stage_done(u, now);
-                closed && completed
-            }
-            Ev::BusDone(j) => {
-                eng.on_bus_done(j, now);
-                false
-            }
-        };
-        // Closed loop: a client resubmits when its job leaves the
-        // system — on completion, on a dead arrival, and also when a
-        // job dies mid-run (stage prepare/simulate/verify failure), so
-        // failures never silently starve the loop.
-        let mut want = usize::from(resubmit);
-        if closed {
-            want += eng.mid_run_deaths - seen_deaths;
-        }
-        seen_deaths = eng.mid_run_deaths;
-        while want > 0 && remaining > 0 {
-            let class = pick_class();
-            eng.cal.push(now, Ev::Arrive(Arrival { id: next_id, class, t_s: now }));
-            next_id += 1;
-            remaining -= 1;
-            want -= 1;
-        }
-    }
-    eng.done_jobs.sort_by_key(|&(ord, _, _)| ord);
-    let mut out = CosimRun {
-        completions: eng.done_jobs.iter().map(|(_, c, _)| *c).collect(),
-        stage_cycles: eng.done_jobs.into_iter().map(|(_, _, cy)| cy).collect(),
-        dropped: eng.dropped,
-        deadline_shed: eng.deadline_shed,
-        failed: eng.failed,
-        units: eng.units.iter().map(|u| u.stats.clone()).collect(),
-        makespan_s: eng.makespan_s,
-        peak_admit_queue: eng.peak_admit_queue,
-        handoffs: eng.handoffs,
-        bus_busy_s: eng.bus_busy_s,
-        bus_wait_s: eng.bus_wait_s,
-        stage_errors: eng.stage_errors,
-    };
-    // Events pop in time order, so the first Arrive seen is the trace
-    // start; makespan is measured from it (replay's convention).
-    if let Some(t0) = first_arrival {
-        out.makespan_s = (out.makespan_s - t0).max(0.0);
-    }
-    out
+    let mut s = CosimSession::new(cfg, classes, workload, pick_class);
+    s.advance_to(f64::INFINITY);
+    s.finish()
 }
 
 #[cfg(test)]
@@ -850,6 +929,31 @@ mod tests {
         assert_eq!(a, b, "bit-identical rerun");
         assert_eq!(a.completions.len(), 9);
         assert_eq!(a.dropped, 0, "closed loop self-limits");
+    }
+
+    #[test]
+    fn windowed_advance_matches_one_shot_run_bit_exactly() {
+        // The conservative-horizon contract: draining the session
+        // through any ascending schedule of horizons yields the exact
+        // run a single advance-to-infinity produces.
+        let classes = vec![single_stage("solver", 8), single_stage("gemm", 12)];
+        let cl = ClusterConfig { units: 2, queue_cap: 8, admit_cap: 64 };
+        let cfg = CosimConfig { cluster: cl, deadline_s: None };
+        let tr: Vec<Arrival> = (0..10)
+            .map(|i| Arrival { id: i as u64, class: (i % 2) as usize, t_s: 0.0 })
+            .collect();
+        let one_shot = run(&cfg, &classes, Workload::Open(&tr), || 0);
+        let mut s = CosimSession::new(&cfg, &classes, Workload::Open(&tr), || 0);
+        let window = classes[0].as_ref().unwrap().stages[0].est_s / 3.0;
+        let mut horizon = window;
+        let mut windows = 0usize;
+        while !s.advance_to(horizon) {
+            horizon += window;
+            windows += 1;
+            assert!(windows < 100_000, "windowed run must terminate");
+        }
+        assert!(windows > 3, "the window must actually split the run");
+        assert_eq!(s.finish(), one_shot, "windowing is bit-invisible");
     }
 
     #[test]

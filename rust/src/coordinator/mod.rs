@@ -11,9 +11,9 @@
 //! routing, stage-level batching, admission control with backpressure,
 //! and latency/SLO accounting.
 //!
-//! The subsystem splits in five:
+//! The subsystem splits in seven:
 //! * [`calendar`] — the shared wake-time calendar both engines
-//!   schedule on (one deterministic virtual timeline per run).
+//!   schedule on (one deterministic virtual timeline per cell).
 //! * [`cluster`] — the **replay** engine: N units with per-unit
 //!   bounded run queues, a least-loaded dispatcher with idle-time work
 //!   stealing, and a cluster-wide admission queue that sheds load when
@@ -26,13 +26,21 @@
 //!   shed by predicted SLO-deadline miss. Replay is kept as the
 //!   optimistic oracle; `tests/cosim_equivalence.rs` pins the two
 //!   engines against each other.
+//! * [`shard`] — the conservative parallel driver for multi-cell
+//!   co-simulation: per-cell [`cosim::CosimSession`]s advance on
+//!   worker-pool threads between synchronization horizons bounded by
+//!   the [`crate::model::handoff_s`] lookahead; results are
+//!   bit-identical for every shard count.
+//! * [`arrival`] — typed per-cell arrival processes: Poisson, bursty
+//!   MMPP, diurnal, recorded-trace replay, and closed client loops.
 //! * [`slo`] — the latency accountant (p50/p95/p99/mean/max digests
 //!   end-to-end, queueing, and per stage).
-//! * [`serve`](mod@serve) — trace synthesis (open-loop Poisson or
-//!   closed-loop clients, seeded via [`crate::util::Rng`]), the batched
+//! * [`serve`](mod@serve) — the typed [`serve::ClusterSpec`] /
+//!   [`serve::CellSpec`] metro API: per-cell trace synthesis (seeded
+//!   via [`crate::util::Rng`] and [`serve::cell_seed`]), the batched
 //!   stage pre-simulation through the [`crate::harness`] memo cache,
 //!   engine selection (`--engine replay|cosim`), and the
-//!   `BENCH_serve.json` artifact.
+//!   `BENCH_serve.json` artifact (schema v3: multi-cell).
 //!
 //! Every stage kernel is functionally simulated and verified, so the
 //! pipeline doubles as an end-to-end correctness test of the whole
@@ -40,19 +48,24 @@
 //! against the AOT-compiled JAX artifacts through PJRT (the L2/L1
 //! layers).
 
+pub mod arrival;
 pub mod calendar;
 pub mod cluster;
 pub mod cosim;
 pub mod serve;
+pub mod shard;
 pub mod slo;
 
+pub use arrival::ArrivalProcess;
 pub use calendar::Calendar;
 pub use cluster::{Arrival, ClusterConfig, ClusterRun, Completion, UnitStats, Workload};
-pub use cosim::{CosimClass, CosimConfig, CosimRun, StageTask};
+pub use cosim::{CosimClass, CosimConfig, CosimRun, CosimSession, StageTask};
 pub use serve::{
-    read_artifact, serve, write_artifact, ArrivalMode, Batching, ClassReport,
-    EngineKind, HostOnly, ServeConfig, ServeReport, StageWall, UnitReport,
+    cell_seed, read_artifact, serve, strong_scaling, write_artifact, Batching,
+    CellReport, CellSpec, ClassReport, ClusterSpec, EngineKind, HostOnly, JobRecord,
+    ScalingRow, ServeReport, StageWall, UnitReport,
 };
+pub use shard::ShardPlan;
 pub use slo::{Pctls, SloAccountant, SloDigest};
 
 use crate::runtime::{Result, RtError};

@@ -1,50 +1,50 @@
-//! `revel serve`: synthesize a deterministic 5G subframe arrival trace,
-//! push it through the [`super::cluster`] dispatcher, and account
-//! latency/SLO results into a `BENCH_serve.json` artifact (same
-//! hand-rolled JSON dialect as `BENCH_sweep.json`).
+//! `revel serve`: synthesize deterministic per-cell arrival traces,
+//! push them through the cluster engines, and account latency/SLO
+//! results into a `BENCH_serve.json` artifact (same hand-rolled JSON
+//! dialect as `BENCH_sweep.json`).
+//!
+//! A serve run is described by a typed [`ClusterSpec`]: a metro of N
+//! [`CellSpec`] cells, each its own cluster (units, queue policy) with
+//! its own job mix and [`ArrivalProcess`] (Poisson, bursty MMPP,
+//! diurnal, recorded-trace replay, or a closed client loop). Every
+//! cell draws from an independent RNG stream ([`cell_seed`]), so the
+//! whole metro report is bit-deterministic in `(spec, seed)`.
 //!
 //! Host-side batching: each distinct stage kernel `(kernel, n,
-//! features, goal)` across all job classes is simulated exactly once,
-//! in one parallel [`crate::harness`] pass through the process-wide
-//! memo cache — thousands of subframes amortize a handful of cycle-
-//! accurate simulations. The replay engine ([`EngineKind::Replay`])
-//! then replays those service times in virtual time; the co-simulation
-//! engine ([`EngineKind::Cosim`]) uses them only as dispatch/admission
-//! estimates and times every stage on a live machine instead. Either
-//! way, for a fixed [`ServeConfig`] the whole report is
-//! bit-deterministic; only the `host` block of the artifact (wall
-//! clock, worker count) varies between runs.
+//! features, goal)` across *all* cells' job classes is simulated
+//! exactly once, in one parallel [`crate::harness`] pass through the
+//! process-wide memo cache — thousands of subframes across the metro
+//! amortize a handful of cycle-accurate simulations. The replay engine
+//! ([`EngineKind::Replay`]) then replays those service times in
+//! virtual time; the co-simulation engine ([`EngineKind::Cosim`]) uses
+//! them only as dispatch/admission estimates, times every stage on a
+//! live machine, and — with more than one cell — advances the cells as
+//! conservative shards on pool threads ([`super::shard`]). Shard count
+//! never changes results: only the `host` block of the artifact (wall
+//! clock, worker/shard counts, strong-scaling rows) varies between
+//! runs.
 
 use std::sync::Arc;
 
-use crate::harness::{self, json, json::Json, SweepOutcome, SweepPoint};
+use crate::harness::{self, json, json::Json, pool, SweepOutcome, SweepPoint};
 use crate::model;
 use crate::runtime::{Result, RtError};
 use crate::util::Rng;
 use crate::workloads::{Features, Goal};
 
+use super::arrival::ArrivalProcess;
 use super::cluster::{self, Arrival, ClusterConfig, Completion, Workload};
-use super::cosim::{self, CosimClass, CosimConfig, StageTask};
+use super::cosim::{CosimClass, CosimConfig, CosimSession, StageTask};
+use super::shard::{self, ShardPlan};
 use super::slo::{Pctls, SloAccountant, SloDigest};
 use super::{JobClass, CLASSES, STAGE_NAMES};
 
 /// Per-job records are embedded in the artifact only up to this many
-/// jobs (they exist to make determinism diffable, not to bloat disk).
+/// jobs metro-wide (they exist to make determinism diffable and
+/// replayable, not to bloat disk).
 pub const DETAIL_CAP: usize = 1024;
 
-/// How the synthetic trace offers subframes to the cluster.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum ArrivalMode {
-    /// Open loop: Poisson arrivals at `lambda` subframes per virtual
-    /// second; `lambda <= 0` floods every job at t = 0 (peak load).
-    Open { lambda: f64 },
-    /// Closed loop: `clients` concurrent submitters with zero think
-    /// time — each submits its next subframe when the previous one
-    /// finishes.
-    Closed { clients: usize },
-}
-
-/// Which cluster engine serves the trace.
+/// Which cluster engine serves the traces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     /// Replay memoized per-stage service times; a job occupies one
@@ -53,7 +53,8 @@ pub enum EngineKind {
     Replay,
     /// Calendar-driven co-simulation: live per-unit machines,
     /// stage-pipelined subframes, a shared inter-stage interconnect,
-    /// and optional SLO-aware admission ([`super::cosim`]).
+    /// and optional SLO-aware admission ([`super::cosim`]). Multi-cell
+    /// specs advance as conservative shards ([`super::shard`]).
     Cosim,
 }
 
@@ -66,17 +67,93 @@ impl EngineKind {
     }
 }
 
-/// Full configuration of one serve run.
-#[derive(Clone, Debug)]
-pub struct ServeConfig {
-    /// Total subframes in the trace.
+/// Mix `cell` into the metro seed: each cell gets an independent,
+/// reproducible RNG stream. Cell 0 uses the raw seed, so a one-cell
+/// spec synthesizes exactly the trace the pre-metro serve command did.
+pub fn cell_seed(seed: u64, cell: usize) -> u64 {
+    seed ^ (cell as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// One cell of the metro: a cluster of units with its own admission
+/// policy, job mix, and arrival process.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellSpec {
+    /// Simulated REVEL units in this cell (min 1).
+    pub units: usize,
+    /// Per-unit run-queue bound (min 1).
+    pub queue_cap: usize,
+    /// Cell-wide admission-queue bound; beyond it arrivals drop.
+    pub admit_cap: usize,
+    /// Jobs this cell's trace offers (ignored by `Replay` arrivals,
+    /// which carry their own length).
     pub jobs: usize,
-    /// Seed for the arrival trace and class mix ([`Rng`] — xoshiro).
+    /// How jobs arrive at this cell.
+    pub arrival: ArrivalProcess,
+    /// Subframe classes in this cell's traffic mix.
+    pub job_mix: Vec<JobClass>,
+}
+
+impl Default for CellSpec {
+    fn default() -> Self {
+        let cl = ClusterConfig::default();
+        Self {
+            units: cl.units,
+            queue_cap: cl.queue_cap,
+            admit_cap: cl.admit_cap,
+            jobs: 200,
+            arrival: ArrivalProcess::default(),
+            job_mix: CLASSES.to_vec(),
+        }
+    }
+}
+
+impl CellSpec {
+    pub fn new(units: usize) -> Self {
+        Self { units, ..Self::default() }
+    }
+
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
+    pub fn arrival(mut self, arrival: ArrivalProcess) -> Self {
+        self.arrival = arrival;
+        self
+    }
+
+    pub fn job_mix(mut self, mix: Vec<JobClass>) -> Self {
+        self.job_mix = mix;
+        self
+    }
+
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    pub fn admit_cap(mut self, cap: usize) -> Self {
+        self.admit_cap = cap;
+        self
+    }
+
+    /// The normalized cluster policy this cell actually runs with.
+    fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            units: self.units.max(1),
+            queue_cap: self.queue_cap.max(1),
+            admit_cap: self.admit_cap,
+        }
+    }
+}
+
+/// Full configuration of one serve run: the typed multi-cell spec.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// Metro seed; each cell derives its stream via [`cell_seed`].
     pub seed: u64,
-    pub mode: ArrivalMode,
-    pub cluster: ClusterConfig,
     /// Replay (memoized service times) or co-simulation (live
-    /// machines on the shared calendar).
+    /// machines on shared calendars).
     pub engine: EngineKind,
     /// SLO deadline for the co-simulation engine's predictive
     /// admission, in virtual microseconds; `None` (and the replay
@@ -85,26 +162,81 @@ pub struct ServeConfig {
     /// Host worker threads for the batched stage pre-simulation
     /// (`None` = harness default / `REVEL_WORKERS`).
     pub workers: Option<usize>,
-    /// Subframe classes in the traffic mix (defaults to [`CLASSES`]).
-    pub classes: Vec<JobClass>,
+    /// Worker shards for the multi-cell co-simulation (`None` = one
+    /// per cell, capped at the host's worker default). Results are
+    /// bit-identical for every value; only wall time varies.
+    pub shards: Option<usize>,
+    /// The cells of the metro, in fixed cell order.
+    pub cells: Vec<CellSpec>,
 }
 
-impl Default for ServeConfig {
+impl Default for ClusterSpec {
     fn default() -> Self {
         Self {
-            jobs: 200,
             seed: 7,
-            mode: ArrivalMode::Open { lambda: 0.0 },
-            cluster: ClusterConfig::default(),
             engine: EngineKind::Replay,
             slo_deadline_us: None,
             workers: None,
-            classes: CLASSES.to_vec(),
+            shards: None,
+            cells: vec![CellSpec::default()],
         }
     }
 }
 
-/// Per-unit slice of the report.
+impl ClusterSpec {
+    /// Start an empty metro (add cells with [`ClusterSpec::cell`] /
+    /// [`ClusterSpec::cells`]).
+    pub fn new(seed: u64) -> Self {
+        Self { seed, cells: Vec::new(), ..Self::default() }
+    }
+
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn slo_deadline_us(mut self, us: Option<f64>) -> Self {
+        self.slo_deadline_us = us;
+        self
+    }
+
+    pub fn workers(mut self, workers: Option<usize>) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = Some(shards);
+        self
+    }
+
+    /// Append one cell.
+    pub fn cell(mut self, cell: CellSpec) -> Self {
+        self.cells.push(cell);
+        self
+    }
+
+    /// Append `n` clones of `proto` (a homogeneous metro).
+    pub fn cells(mut self, n: usize, proto: CellSpec) -> Self {
+        self.cells.extend((0..n).map(|_| proto.clone()));
+        self
+    }
+
+    /// Total jobs the spec's traces offer (replay cells resolve their
+    /// length only at serve time).
+    pub fn jobs(&self) -> usize {
+        self.cells.iter().map(|c| c.jobs).sum()
+    }
+
+    /// The shard count a co-simulated run of this spec would use.
+    pub fn effective_shards(&self) -> usize {
+        self.shards
+            .unwrap_or_else(|| self.cells.len().min(pool::default_workers()))
+            .max(1)
+    }
+}
+
+/// Per-unit slice of a cell report.
 ///
 /// Granularity depends on the engine: replay places whole jobs on
 /// units, so `jobs`/`stolen` count jobs; the co-sim engine
@@ -115,12 +247,12 @@ impl Default for ServeConfig {
 pub struct UnitReport {
     pub jobs: usize,
     pub busy_s: f64,
-    /// busy_s / makespan — fraction of the run this unit served.
+    /// busy_s / cell makespan — fraction of the run this unit served.
     pub utilization: f64,
     pub stolen: usize,
 }
 
-/// Per-class slice of the report.
+/// Per-class slice of a cell report.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClassReport {
     pub name: String,
@@ -132,7 +264,7 @@ pub struct ClassReport {
 }
 
 /// Host-side batching accounting: how many cycle-accurate simulations
-/// actually ran vs. how many stage executions the trace represents.
+/// actually ran vs. how many stage executions the traces represent.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Batching {
     pub distinct_points: usize,
@@ -140,7 +272,7 @@ pub struct Batching {
 }
 
 /// Host-only payload carried inside an otherwise deterministic report.
-/// Compares equal to everything, so two same-config runs still satisfy
+/// Compares equal to everything, so two same-spec runs still satisfy
 /// `ServeReport == ServeReport` (the determinism contract CI diffs);
 /// serialization routes it into the artifact's nondeterministic `host`
 /// block, which readers drop.
@@ -163,51 +295,115 @@ pub struct StageWall {
     pub wall_ns_min: f64,
 }
 
-/// Everything one serve run reports. All fields are deterministic in
-/// the [`ServeConfig`]; host wall-clock data is added only at
-/// serialization time ([`ServeReport::to_json`]) so two runs with the
-/// same config compare equal.
+/// One host strong-scaling measurement: metro wall time at a shard
+/// count (the deterministic results are identical across rows —
+/// that's the point).
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingRow {
+    pub shards: usize,
+    pub wall_s: f64,
+}
+
+/// One completed job, tagged with the cell that served it. The
+/// `jobs_detail` rows of the artifact — and the rows
+/// [`ArrivalProcess::Replay`] feeds back in.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobRecord {
+    pub cell: usize,
+    pub completion: Completion,
+}
+
+/// Everything one cell of a serve run reports: its config echo plus
+/// its outcome. All fields are deterministic in the spec.
 #[derive(Clone, Debug, PartialEq)]
-pub struct ServeReport {
+pub struct CellReport {
+    // -- config echo (normalized, as run) --
     pub units: usize,
-    pub jobs: usize,
-    pub seed: u64,
-    pub mode: ArrivalMode,
-    pub engine: EngineKind,
-    /// Echo of [`ServeConfig::slo_deadline_us`].
-    pub slo_deadline_us: Option<f64>,
     pub queue_cap: usize,
     pub admit_cap: usize,
+    /// Jobs this cell's trace offered (resolved length for replay).
+    pub jobs: usize,
+    pub arrival: ArrivalProcess,
+    // -- outcome --
     pub completed: usize,
     pub dropped: usize,
     pub failed: usize,
     /// Arrivals shed by the co-sim engine's SLO deadline lookahead
     /// (always 0 for replay).
     pub deadline_shed: usize,
-    /// Inter-stage handoffs granted on the shared interconnect
+    /// Inter-stage handoffs granted on this cell's interconnect
     /// (co-sim only; replay models handoffs as free).
     pub handoffs: usize,
-    /// Virtual seconds handoffs waited for the shared interconnect —
-    /// the cross-unit contention the replay engine cannot see.
+    /// Virtual seconds handoffs waited for the cell's interconnect.
     pub bus_wait_s: f64,
     pub peak_admit_queue: usize,
-    /// Virtual seconds from first arrival to last pipeline exit.
+    /// Virtual seconds from this cell's first arrival to its last
+    /// pipeline exit.
     pub makespan_s: f64,
-    /// Subframes per virtual second at the REVEL clock.
     pub throughput_per_s: f64,
     pub slo: SloDigest,
     pub per_unit: Vec<UnitReport>,
     pub classes: Vec<ClassReport>,
+}
+
+/// Everything one serve run reports: the per-cell reports plus the
+/// metro-wide aggregate. All fields are deterministic in the
+/// [`ClusterSpec`]; host wall-clock data is added only at
+/// serialization time ([`ServeReport::to_json`]) so two runs with the
+/// same spec compare equal — for any shard count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeReport {
+    pub seed: u64,
+    pub engine: EngineKind,
+    /// Echo of [`ClusterSpec::slo_deadline_us`].
+    pub slo_deadline_us: Option<f64>,
+    /// Total jobs offered across all cells.
+    pub jobs: usize,
+    /// Per-cell reports, in cell order.
+    pub cells: Vec<CellReport>,
+    // -- metro aggregates (sums/maxes over cells, in cell order) --
+    pub completed: usize,
+    pub dropped: usize,
+    pub failed: usize,
+    pub deadline_shed: usize,
+    pub handoffs: usize,
+    pub bus_wait_s: f64,
+    pub peak_admit_queue: usize,
+    /// Max over cell makespans (cells start at virtual t = 0).
+    pub makespan_s: f64,
+    pub throughput_per_s: f64,
+    /// Metro-wide digest: cell samples absorbed in fixed cell order.
+    pub slo: SloDigest,
     pub batching: Batching,
-    /// Human-readable reasons for degraded classes (empty when
-    /// everything simulated cleanly).
+    /// Human-readable reasons for degraded classes or mid-run stage
+    /// failures, prefixed with their cell.
     pub stage_errors: Vec<String>,
-    /// Per-job timing (present when `jobs <= DETAIL_CAP`).
-    pub jobs_detail: Vec<Completion>,
+    /// Per-job timing (present when total jobs <= [`DETAIL_CAP`]).
+    pub jobs_detail: Vec<JobRecord>,
     /// Host wall time per distinct pre-simulated stage point. Excluded
     /// from equality and from the deterministic part of the artifact
     /// (it serializes into the `host` block).
     pub stage_wall: HostOnly<Vec<StageWall>>,
+    /// Host strong-scaling rows ([`strong_scaling`]); same `host`
+    /// block treatment as `stage_wall`.
+    pub strong_scaling: HostOnly<Vec<ScalingRow>>,
+}
+
+impl ServeReport {
+    /// Aggregate per-class completions across cells (cells with the
+    /// same class name fold together; mixes may differ per cell).
+    pub fn class_totals(&self) -> Vec<ClassReport> {
+        let mut out: Vec<ClassReport> = Vec::new();
+        for cell in &self.cells {
+            for c in &cell.classes {
+                match out.iter_mut().find(|o| o.name == c.name) {
+                    Some(o) => o.completed += c.completed,
+                    None => out.push(c.clone()),
+                }
+            }
+        }
+        out
+    }
 }
 
 struct StageTable {
@@ -218,8 +414,8 @@ struct StageTable {
 }
 
 /// One batched harness pass over the distinct stage kernels of all
-/// classes. A failing stage degrades only the classes that use it (the
-/// error is recorded); it does not abort the serve run.
+/// cells' classes. A failing stage degrades only the classes that use
+/// it (the error is recorded); it does not abort the serve run.
 fn stage_table(classes: &[JobClass], workers: Option<usize>) -> StageTable {
     let mut points: Vec<SweepPoint> = Vec::new();
     for c in classes {
@@ -294,224 +490,386 @@ fn pick_weighted(rng: &mut Rng, cum: &[f64]) -> usize {
     cum.iter().position(|&c| r < c).unwrap_or(cum.len().saturating_sub(1))
 }
 
-/// Serve a synthetic subframe trace on a simulated REVEL cluster.
+/// Everything one cell needs to run, resolved from its spec.
+struct Prep {
+    cl: ClusterConfig,
+    /// Per-class memoized stage cycles (this cell's slice of the
+    /// metro-wide stage table).
+    cycles: Vec<Option<[u64; 4]>>,
+    /// The same, as per-stage virtual seconds (replay service table).
+    service: Vec<Option<[f64; 4]>>,
+    cum: Vec<f64>,
+    rng: Rng,
+    /// Synthesized or replayed open-loop trace; `None` = closed loop.
+    trace: Option<Vec<Arrival>>,
+    clients: Option<usize>,
+    jobs: usize,
+}
+
+/// Load an [`ArrivalProcess::Replay`] trace: the `jobs_detail` rows of
+/// the artifact at `path` that belong to `cell`, re-sorted into the
+/// original synthesis push order (arrival time, then id).
+fn load_replay_trace(path: &str, cell: usize, mix_len: usize) -> Result<Vec<Arrival>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| RtError(format!("cell {cell}: replay trace {path}: {e}")))?;
+    let src = read_artifact(&text)
+        .map_err(|e| RtError(format!("cell {cell}: replay trace {path}: {e}")))?;
+    if src.jobs_detail.is_empty() {
+        return Err(RtError(format!(
+            "cell {cell}: replay trace {path} has no jobs_detail \
+             (recorded runs keep it only up to {DETAIL_CAP} jobs)"
+        )));
+    }
+    let mut trace: Vec<Arrival> = src
+        .jobs_detail
+        .iter()
+        .filter(|r| r.cell == cell)
+        .map(|r| Arrival {
+            id: r.completion.id,
+            class: r.completion.class,
+            t_s: r.completion.arrival_s,
+        })
+        .collect();
+    for a in &trace {
+        if a.class >= mix_len {
+            return Err(RtError(format!(
+                "cell {cell}: replay trace {path} job {} names class {} but the \
+                 cell's mix has {mix_len} classes",
+                a.id, a.class
+            )));
+        }
+    }
+    trace.sort_by(|a, b| a.t_s.total_cmp(&b.t_s).then(a.id.cmp(&b.id)));
+    Ok(trace)
+}
+
+/// Engine-neutral view of one cell's outcome.
+struct EngineOut {
+    completions: Vec<Completion>,
+    dropped: usize,
+    failed: usize,
+    deadline_shed: usize,
+    handoffs: usize,
+    bus_wait_s: f64,
+    units: Vec<cluster::UnitStats>,
+    makespan_s: f64,
+    peak_admit_queue: usize,
+    extra_errors: Vec<String>,
+}
+
+/// Serve the spec's traces on the simulated REVEL metro.
 ///
 /// Stage failures degrade the affected class (recorded in
 /// `stage_errors` / `failed`) instead of panicking a worker; a
-/// [`RtError`] is returned only for unusable configurations.
-pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
-    if cfg.classes.is_empty() {
-        return Err(RtError("serve: no job classes configured".into()));
+/// [`RtError`] is returned only for unusable specs (no cells, empty
+/// mixes, degenerate arrival parameters, unreadable replay traces).
+pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
+    if spec.cells.is_empty() {
+        return Err(RtError("serve: spec has no cells".into()));
+    }
+    for (i, cell) in spec.cells.iter().enumerate() {
+        if cell.job_mix.is_empty() {
+            return Err(RtError(format!("serve: cell {i} has no job classes")));
+        }
+        cell.arrival
+            .validate()
+            .map_err(|e| RtError(format!("serve: cell {i}: {e}")))?;
     }
     harness::ensure_budget();
-    let st = stage_table(&cfg.classes, cfg.workers);
-    let class_service: Vec<Option<[f64; 4]>> = st
-        .per_class
-        .iter()
-        .map(|o| o.map(|cy| cy.map(|c| model::cycles_to_us(c) * 1e-6)))
-        .collect();
-    let cum: Vec<f64> = cfg
-        .classes
-        .iter()
-        .scan(0.0, |acc, c| {
-            *acc += c.weight.max(0.0);
-            Some(*acc)
-        })
-        .collect();
-    // Normalize exactly as cluster::run will, so the artifact's config
-    // block echoes the policy that actually ran.
-    let cluster_cfg = ClusterConfig {
-        units: cfg.cluster.units.max(1),
-        queue_cap: cfg.cluster.queue_cap.max(1),
-        admit_cap: cfg.cluster.admit_cap,
-    };
-    let mut rng = Rng::new(cfg.seed);
-    // The open-loop trace is synthesized up front — identically for
-    // both engines, so `--engine replay` vs `--engine cosim` compare
-    // the very same traffic.
-    let open_trace: Option<Vec<Arrival>> = match cfg.mode {
-        ArrivalMode::Open { lambda } => {
-            let mut t = 0.0;
-            Some(
-                (0..cfg.jobs)
-                    .map(|id| {
-                        if lambda > 0.0 {
-                            t += rng.exp(lambda);
-                        }
-                        let class = pick_weighted(&mut rng, &cum);
-                        Arrival { id: id as u64, class, t_s: t }
-                    })
-                    .collect(),
-            )
-        }
-        ArrivalMode::Closed { .. } => None,
-    };
-    // Engine-neutral view of a run's outcome.
-    struct EngineOut {
-        completions: Vec<Completion>,
-        dropped: usize,
-        failed: usize,
-        deadline_shed: usize,
-        handoffs: usize,
-        bus_wait_s: f64,
-        units: Vec<cluster::UnitStats>,
-        makespan_s: f64,
-        peak_admit_queue: usize,
-        extra_errors: Vec<String>,
+    // One batched pre-simulation over the union of every cell's mix;
+    // each cell then slices its rows back out by offset.
+    let mut all_classes: Vec<JobClass> = Vec::new();
+    let mut offsets: Vec<usize> = Vec::new();
+    for cell in &spec.cells {
+        offsets.push(all_classes.len());
+        all_classes.extend(cell.job_mix.iter().cloned());
     }
-    let run = match cfg.engine {
-        EngineKind::Replay => {
-            let r = match cfg.mode {
-                ArrivalMode::Open { .. } => cluster::run(
-                    &cluster_cfg,
-                    &class_service,
-                    Workload::Open(open_trace.as_deref().unwrap_or(&[])),
-                    || 0,
-                ),
-                ArrivalMode::Closed { clients } => cluster::run(
-                    &cluster_cfg,
-                    &class_service,
-                    Workload::Closed { clients, jobs: cfg.jobs },
-                    || pick_weighted(&mut rng, &cum),
-                ),
-            };
-            EngineOut {
-                completions: r.completions,
-                dropped: r.dropped,
-                failed: r.failed,
-                deadline_shed: 0,
-                handoffs: 0,
-                bus_wait_s: 0.0,
-                units: r.units,
-                makespan_s: r.makespan_s,
-                peak_admit_queue: r.peak_admit_queue,
-                extra_errors: Vec::new(),
+    let st = stage_table(&all_classes, spec.workers);
+
+    let mut preps: Vec<Prep> = Vec::with_capacity(spec.cells.len());
+    for (i, cell) in spec.cells.iter().enumerate() {
+        let off = offsets[i];
+        let cycles: Vec<Option<[u64; 4]>> =
+            st.per_class[off..off + cell.job_mix.len()].to_vec();
+        let service: Vec<Option<[f64; 4]>> = cycles
+            .iter()
+            .map(|o| o.map(|cy| cy.map(|c| model::cycles_to_us(c) * 1e-6)))
+            .collect();
+        let cum: Vec<f64> = cell
+            .job_mix
+            .iter()
+            .scan(0.0, |acc, c| {
+                *acc += c.weight.max(0.0);
+                Some(*acc)
+            })
+            .collect();
+        let mut rng = Rng::new(cell_seed(spec.seed, i));
+        let (trace, clients, jobs) = match &cell.arrival {
+            ArrivalProcess::Closed { clients } => (None, Some(*clients), cell.jobs),
+            ArrivalProcess::Replay { path } => {
+                let t = load_replay_trace(path, i, cell.job_mix.len())?;
+                let n = t.len();
+                (Some(t), None, n)
             }
-        }
+            open => {
+                let t = open
+                    .synthesize(cell.jobs, &mut rng, |r| pick_weighted(r, &cum))
+                    .expect("open-loop arrival synthesizes a trace");
+                (Some(t), None, cell.jobs)
+            }
+        };
+        preps.push(Prep { cl: cell.cluster_config(), cycles, service, cum, rng, trace, clients, jobs });
+    }
+
+    let outs: Vec<EngineOut> = match spec.engine {
+        EngineKind::Replay => preps
+            .iter_mut()
+            .map(|p| {
+                let Prep { cl, service, cum, rng, trace, clients, jobs, .. } = p;
+                let r = match (trace.as_deref(), *clients) {
+                    (Some(t), _) => cluster::run(cl, service, Workload::Open(t), || 0),
+                    (None, clients) => cluster::run(
+                        cl,
+                        service,
+                        Workload::Closed {
+                            clients: clients.unwrap_or(1),
+                            jobs: *jobs,
+                        },
+                        || pick_weighted(rng, cum),
+                    ),
+                };
+                EngineOut {
+                    completions: r.completions,
+                    dropped: r.dropped,
+                    failed: r.failed,
+                    deadline_shed: 0,
+                    handoffs: 0,
+                    bus_wait_s: 0.0,
+                    units: r.units,
+                    makespan_s: r.makespan_s,
+                    peak_admit_queue: r.peak_admit_queue,
+                    extra_errors: Vec::new(),
+                }
+            })
+            .collect(),
         EngineKind::Cosim => {
             // Per-class stage chains with profiled estimates (the same
             // memoized cycles replay consumes); a degraded class maps
             // to `None`, exactly like the replay service table.
-            let cosim_classes: Vec<Option<CosimClass>> = cfg
-                .classes
+            let tables: Vec<Vec<Option<CosimClass>>> = spec
+                .cells
                 .iter()
-                .zip(&st.per_class)
-                .map(|(c, cy)| {
-                    cy.map(|cy| CosimClass {
-                        stages: c
-                            .stages
-                            .iter()
-                            .zip(cy.iter())
-                            .map(|(s, &cycles)| StageTask {
-                                kernel: s.kernel.to_string(),
-                                n: s.n,
-                                est_s: model::cycles_to_us(cycles) * 1e-6,
+                .zip(&preps)
+                .map(|(cell, p)| {
+                    cell.job_mix
+                        .iter()
+                        .zip(&p.cycles)
+                        .map(|(c, cy)| {
+                            cy.map(|cy| CosimClass {
+                                stages: c
+                                    .stages
+                                    .iter()
+                                    .zip(cy.iter())
+                                    .map(|(s, &cycles)| StageTask {
+                                        kernel: s.kernel.to_string(),
+                                        n: s.n,
+                                        est_s: model::cycles_to_us(cycles) * 1e-6,
+                                    })
+                                    .collect(),
                             })
-                            .collect(),
-                    })
+                        })
+                        .collect()
                 })
                 .collect();
-            let ccfg = CosimConfig {
-                cluster: cluster_cfg.clone(),
-                deadline_s: cfg.slo_deadline_us.map(|us| us * 1e-6),
-            };
-            let r = match cfg.mode {
-                ArrivalMode::Open { .. } => cosim::run(
-                    &ccfg,
-                    &cosim_classes,
-                    Workload::Open(open_trace.as_deref().unwrap_or(&[])),
-                    || 0,
-                ),
-                ArrivalMode::Closed { clients } => cosim::run(
-                    &ccfg,
-                    &cosim_classes,
-                    Workload::Closed { clients, jobs: cfg.jobs },
-                    || pick_weighted(&mut rng, &cum),
-                ),
-            };
-            EngineOut {
-                completions: r.completions,
-                dropped: r.dropped,
-                failed: r.failed,
-                deadline_shed: r.deadline_shed,
-                handoffs: r.handoffs,
-                bus_wait_s: r.bus_wait_s,
-                units: r.units,
-                makespan_s: r.makespan_s,
-                peak_admit_queue: r.peak_admit_queue,
-                extra_errors: r.stage_errors,
+            let union: Vec<Option<CosimClass>> =
+                tables.iter().flatten().cloned().collect();
+            let plan = ShardPlan::for_mix(spec.effective_shards(), &union);
+            let deadline_s = spec.slo_deadline_us.map(|us| us * 1e-6);
+            let mut sessions: Vec<CosimSession<'_>> = Vec::new();
+            for (p, table) in preps.iter_mut().zip(&tables) {
+                let ccfg = CosimConfig { cluster: p.cl.clone(), deadline_s };
+                let workload = match (p.trace.as_deref(), p.clients) {
+                    (Some(t), _) => Workload::Open(t),
+                    (None, clients) => Workload::Closed {
+                        clients: clients.unwrap_or(1),
+                        jobs: p.jobs,
+                    },
+                };
+                // The class picker migrates into the session (and onto
+                // pool threads), so it owns its RNG and weights.
+                let mut rng = std::mem::replace(&mut p.rng, Rng::new(0));
+                let cum = p.cum.clone();
+                sessions.push(CosimSession::new(&ccfg, table, workload, move || {
+                    pick_weighted(&mut rng, &cum)
+                }));
             }
+            shard::run_sharded(sessions, &plan)
+                .into_iter()
+                .map(|r| EngineOut {
+                    completions: r.completions,
+                    dropped: r.dropped,
+                    failed: r.failed,
+                    deadline_shed: r.deadline_shed,
+                    handoffs: r.handoffs,
+                    bus_wait_s: r.bus_wait_s,
+                    units: r.units,
+                    makespan_s: r.makespan_s,
+                    peak_admit_queue: r.peak_admit_queue,
+                    extra_errors: r.stage_errors,
+                })
+                .collect()
         }
     };
-    let mut acc = SloAccountant::new();
-    let mut per_class_done = vec![0usize; cfg.classes.len()];
-    for c in &run.completions {
-        per_class_done[c.class] += 1;
-        let s = class_service[c.class].unwrap_or([0.0; 4]);
-        let service: f64 = s.iter().sum();
-        acc.record(
-            (c.finish_s - c.arrival_s) * 1e6,
-            (c.start_s - c.arrival_s) * 1e6,
-            service * 1e6,
-            [s[0] * 1e6, s[1] * 1e6, s[2] * 1e6, s[3] * 1e6],
-        );
-    }
-    let completed = run.completions.len();
-    let throughput =
-        if run.makespan_s > 0.0 { completed as f64 / run.makespan_s } else { 0.0 };
-    let per_unit = run
-        .units
-        .iter()
-        .map(|u| UnitReport {
-            jobs: u.jobs,
-            busy_s: u.busy_s,
-            utilization: if run.makespan_s > 0.0 { u.busy_s / run.makespan_s } else { 0.0 },
-            stolen: u.stolen,
-        })
-        .collect();
-    let classes = cfg
-        .classes
-        .iter()
-        .enumerate()
-        .map(|(i, c)| ClassReport {
-            name: c.name.to_string(),
-            weight: c.weight,
-            completed: per_class_done[i],
-            stage_cycles: st.per_class[i],
-        })
-        .collect();
+
+    // Merge in fixed cell order — the bitwise-determinism contract the
+    // sharded engine relies on (see SloAccountant::absorb).
+    let total_jobs: usize = preps.iter().map(|p| p.jobs).sum();
+    let mut metro_acc = SloAccountant::new();
     let mut stage_errors = st.errors;
-    stage_errors.extend(run.extra_errors);
+    let mut cells: Vec<CellReport> = Vec::with_capacity(outs.len());
+    let mut jobs_detail: Vec<JobRecord> = Vec::new();
+    for (i, (out, p)) in outs.iter().zip(&preps).enumerate() {
+        let mut cell_acc = SloAccountant::new();
+        let mut per_class_done = vec![0usize; spec.cells[i].job_mix.len()];
+        for c in &out.completions {
+            per_class_done[c.class] += 1;
+            let s = p.service[c.class].unwrap_or([0.0; 4]);
+            let service: f64 = s.iter().sum();
+            cell_acc.record(
+                (c.finish_s - c.arrival_s) * 1e6,
+                (c.start_s - c.arrival_s) * 1e6,
+                service * 1e6,
+                [s[0] * 1e6, s[1] * 1e6, s[2] * 1e6, s[3] * 1e6],
+            );
+        }
+        metro_acc.absorb(&cell_acc);
+        let completed = out.completions.len();
+        let throughput =
+            if out.makespan_s > 0.0 { completed as f64 / out.makespan_s } else { 0.0 };
+        let per_unit = out
+            .units
+            .iter()
+            .map(|u| UnitReport {
+                jobs: u.jobs,
+                busy_s: u.busy_s,
+                utilization: if out.makespan_s > 0.0 {
+                    u.busy_s / out.makespan_s
+                } else {
+                    0.0
+                },
+                stolen: u.stolen,
+            })
+            .collect();
+        let classes = spec.cells[i]
+            .job_mix
+            .iter()
+            .enumerate()
+            .map(|(k, c)| ClassReport {
+                name: c.name.to_string(),
+                weight: c.weight,
+                completed: per_class_done[k],
+                stage_cycles: p.cycles[k],
+            })
+            .collect();
+        stage_errors
+            .extend(out.extra_errors.iter().map(|e| format!("cell {i}: {e}")));
+        if total_jobs <= DETAIL_CAP {
+            jobs_detail.extend(
+                out.completions.iter().map(|&completion| JobRecord { cell: i, completion }),
+            );
+        }
+        cells.push(CellReport {
+            units: p.cl.units,
+            queue_cap: p.cl.queue_cap,
+            admit_cap: p.cl.admit_cap,
+            jobs: p.jobs,
+            arrival: spec.cells[i].arrival.clone(),
+            completed,
+            dropped: out.dropped,
+            failed: out.failed,
+            deadline_shed: out.deadline_shed,
+            handoffs: out.handoffs,
+            bus_wait_s: out.bus_wait_s,
+            peak_admit_queue: out.peak_admit_queue,
+            makespan_s: out.makespan_s,
+            throughput_per_s: throughput,
+            slo: cell_acc.digest(),
+            per_unit,
+            classes,
+        });
+    }
+    let completed: usize = cells.iter().map(|c| c.completed).sum();
+    let makespan_s = cells.iter().map(|c| c.makespan_s).fold(0.0f64, f64::max);
     Ok(ServeReport {
-        units: cluster_cfg.units,
-        jobs: cfg.jobs,
-        seed: cfg.seed,
-        mode: cfg.mode,
-        engine: cfg.engine,
-        slo_deadline_us: cfg.slo_deadline_us,
-        queue_cap: cluster_cfg.queue_cap,
-        admit_cap: cluster_cfg.admit_cap,
+        seed: spec.seed,
+        engine: spec.engine,
+        slo_deadline_us: spec.slo_deadline_us,
+        jobs: total_jobs,
         completed,
-        dropped: run.dropped,
-        failed: run.failed,
-        deadline_shed: run.deadline_shed,
-        handoffs: run.handoffs,
-        bus_wait_s: run.bus_wait_s,
-        peak_admit_queue: run.peak_admit_queue,
-        makespan_s: run.makespan_s,
-        throughput_per_s: throughput,
-        slo: acc.digest(),
-        per_unit,
-        classes,
-        batching: Batching { distinct_points: st.distinct_points, stage_runs: 4 * completed },
+        dropped: cells.iter().map(|c| c.dropped).sum(),
+        failed: cells.iter().map(|c| c.failed).sum(),
+        deadline_shed: cells.iter().map(|c| c.deadline_shed).sum(),
+        handoffs: cells.iter().map(|c| c.handoffs).sum(),
+        bus_wait_s: cells.iter().map(|c| c.bus_wait_s).sum(),
+        peak_admit_queue: cells.iter().map(|c| c.peak_admit_queue).max().unwrap_or(0),
+        makespan_s,
+        throughput_per_s: if makespan_s > 0.0 { completed as f64 / makespan_s } else { 0.0 },
+        slo: metro_acc.digest(),
+        batching: Batching {
+            distinct_points: st.distinct_points,
+            stage_runs: 4 * completed,
+        },
         stage_errors,
-        jobs_detail: if cfg.jobs <= DETAIL_CAP { run.completions.clone() } else { Vec::new() },
+        jobs_detail,
         stage_wall: HostOnly(st.stage_wall),
+        strong_scaling: HostOnly(Vec::new()),
+        cells,
     })
 }
 
-fn completion_to_json(c: &Completion) -> Json {
+/// Serve `spec` once per shard count, wall-timing each run, and return
+/// the (bit-identical) report with the strong-scaling rows attached to
+/// its `host`-only block. Returns an error if any shard count produces
+/// a divergent report — that would be a determinism bug, and this
+/// helper doubles as its detector in CI.
+///
+/// Wall times are informational: the first row also pays any cold
+/// stage-simulation cache misses unless the caller warmed the memo
+/// cache (e.g. by serving the spec once before).
+pub fn strong_scaling(spec: &ClusterSpec, shard_counts: &[usize]) -> Result<ServeReport> {
+    if shard_counts.is_empty() {
+        return Err(RtError("strong scaling: no shard counts given".into()));
+    }
+    let mut rows: Vec<ScalingRow> = Vec::with_capacity(shard_counts.len());
+    let mut base: Option<ServeReport> = None;
+    for &k in shard_counts {
+        let mut s = spec.clone();
+        s.shards = Some(k.max(1));
+        let t0 = std::time::Instant::now();
+        let r = serve(&s)?;
+        rows.push(ScalingRow { shards: k.max(1), wall_s: t0.elapsed().as_secs_f64() });
+        match &base {
+            None => base = Some(r),
+            Some(b) => {
+                if *b != r {
+                    return Err(RtError(format!(
+                        "strong scaling: shards={k} diverged from shards={} — \
+                         shard count must not change results",
+                        shard_counts[0].max(1)
+                    )));
+                }
+            }
+        }
+    }
+    let mut report = base.expect("at least one shard count ran");
+    report.strong_scaling = HostOnly(rows);
+    Ok(report)
+}
+
+fn job_record_to_json(r: &JobRecord) -> Json {
+    let c = &r.completion;
     Json::obj(vec![
+        ("cell", Json::Num(r.cell as f64)),
         ("id", Json::Num(c.id as f64)),
         ("class", Json::Num(c.class as f64)),
         ("unit", Json::Num(c.unit as f64)),
@@ -522,39 +880,222 @@ fn completion_to_json(c: &Completion) -> Json {
     ])
 }
 
-fn completion_from_json(v: &Json) -> std::result::Result<Completion, String> {
+fn job_record_from_json(v: &Json) -> std::result::Result<JobRecord, String> {
     let err = |f: &str| format!("jobs_detail entry missing/invalid {f:?}");
     let num = |k: &str| v.get(k).and_then(Json::as_f64).ok_or_else(|| err(k));
-    Ok(Completion {
-        id: v.get("id").and_then(Json::as_u64).ok_or_else(|| err("id"))?,
-        class: v.get("class").and_then(Json::as_usize).ok_or_else(|| err("class"))?,
-        unit: v.get("unit").and_then(Json::as_usize).ok_or_else(|| err("unit"))?,
-        arrival_s: num("arrival_s")?,
-        start_s: num("start_s")?,
-        finish_s: num("finish_s")?,
-        stolen: v.get("stolen").and_then(Json::as_bool).ok_or_else(|| err("stolen"))?,
+    Ok(JobRecord {
+        // Pre-metro artifacts carry no cell tag: everything is cell 0.
+        cell: v.get("cell").and_then(Json::as_usize).unwrap_or(0),
+        completion: Completion {
+            id: v.get("id").and_then(Json::as_u64).ok_or_else(|| err("id"))?,
+            class: v.get("class").and_then(Json::as_usize).ok_or_else(|| err("class"))?,
+            unit: v.get("unit").and_then(Json::as_usize).ok_or_else(|| err("unit"))?,
+            arrival_s: num("arrival_s")?,
+            start_s: num("start_s")?,
+            finish_s: num("finish_s")?,
+            stolen: v.get("stolen").and_then(Json::as_bool).ok_or_else(|| err("stolen"))?,
+        },
+    })
+}
+
+fn slo_to_json_fields(slo: &SloDigest) -> Vec<(&'static str, Json)> {
+    vec![
+        ("latency_us", slo.latency_us.to_json()),
+        ("queue_us", slo.queue_us.to_json()),
+        ("service_us", slo.service_us.to_json()),
+    ]
+}
+
+fn stage_us_to_json(slo: &SloDigest) -> Json {
+    Json::Obj(
+        STAGE_NAMES
+            .iter()
+            .zip(slo.stage_us.iter())
+            .map(|(n, p)| (n.to_string(), p.to_json()))
+            .collect(),
+    )
+}
+
+fn slo_from_json(summary: &Json, stage_obj: &Json) -> std::result::Result<SloDigest, String> {
+    let err = |f: &str| format!("BENCH_serve document missing/invalid {f:?}");
+    let digest = |k: &str| -> std::result::Result<Pctls, String> {
+        Pctls::from_json(summary.get(k).ok_or_else(|| err(k))?)
+    };
+    let mut stage_us = [Pctls::default(); 4];
+    for (slot, name) in stage_us.iter_mut().zip(STAGE_NAMES) {
+        *slot = Pctls::from_json(stage_obj.get(name).ok_or_else(|| err(name))?)?;
+    }
+    Ok(SloDigest {
+        latency_us: digest("latency_us")?,
+        queue_us: digest("queue_us")?,
+        service_us: digest("service_us")?,
+        stage_us,
+    })
+}
+
+fn per_unit_to_json(per_unit: &[UnitReport]) -> Json {
+    Json::Arr(
+        per_unit
+            .iter()
+            .map(|u| {
+                Json::obj(vec![
+                    ("jobs", Json::Num(u.jobs as f64)),
+                    ("busy_s", Json::Num(u.busy_s)),
+                    ("utilization", Json::Num(u.utilization)),
+                    ("stolen", Json::Num(u.stolen as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn per_unit_from_json(v: &Json) -> std::result::Result<Vec<UnitReport>, String> {
+    let err = |f: &str| format!("per_unit entry missing/invalid {f:?}");
+    v.as_arr()
+        .ok_or_else(|| err("per_unit"))?
+        .iter()
+        .map(|u| {
+            Ok(UnitReport {
+                jobs: u.get("jobs").and_then(Json::as_usize).ok_or_else(|| err("jobs"))?,
+                busy_s: u.get("busy_s").and_then(Json::as_f64).ok_or_else(|| err("busy_s"))?,
+                utilization: u
+                    .get("utilization")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| err("utilization"))?,
+                stolen: u
+                    .get("stolen")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| err("stolen"))?,
+            })
+        })
+        .collect()
+}
+
+fn classes_to_json(classes: &[ClassReport]) -> Json {
+    Json::Arr(
+        classes
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("name", Json::Str(c.name.clone())),
+                    ("weight", Json::Num(c.weight)),
+                    ("completed", Json::Num(c.completed as f64)),
+                    (
+                        "stage_cycles",
+                        match c.stage_cycles {
+                            None => Json::Null,
+                            Some(cy) => Json::Arr(
+                                cy.iter().map(|&x| Json::Num(x as f64)).collect(),
+                            ),
+                        },
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn classes_from_json(v: &Json) -> std::result::Result<Vec<ClassReport>, String> {
+    let err = |f: &str| format!("classes entry missing/invalid {f:?}");
+    v.as_arr()
+        .ok_or_else(|| err("classes"))?
+        .iter()
+        .map(|c| {
+            let stage_cycles = match c.get("stage_cycles") {
+                None | Some(Json::Null) => None,
+                Some(Json::Arr(a)) if a.len() == 4 => {
+                    let mut cy = [0u64; 4];
+                    for (slot, e) in cy.iter_mut().zip(a) {
+                        *slot = e.as_u64().ok_or_else(|| err("stage_cycles"))?;
+                    }
+                    Some(cy)
+                }
+                _ => return Err(err("stage_cycles")),
+            };
+            Ok(ClassReport {
+                name: c
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| err("name"))?
+                    .to_string(),
+                weight: c.get("weight").and_then(Json::as_f64).ok_or_else(|| err("weight"))?,
+                completed: c
+                    .get("completed")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| err("completed"))?,
+                stage_cycles,
+            })
+        })
+        .collect()
+}
+
+/// The aggregate counters shared by the metro summary and each
+/// per-cell outcome block (identical key set at both levels).
+struct OutcomeFields {
+    completed: usize,
+    dropped: usize,
+    failed: usize,
+    deadline_shed: usize,
+    handoffs: usize,
+    bus_wait_s: f64,
+    peak_admit_queue: usize,
+    makespan_s: f64,
+    throughput_per_s: f64,
+}
+
+fn outcome_to_json(o: &OutcomeFields, slo: &SloDigest) -> Vec<(&'static str, Json)> {
+    let mut kv = vec![
+        ("completed", Json::Num(o.completed as f64)),
+        ("dropped", Json::Num(o.dropped as f64)),
+        ("failed", Json::Num(o.failed as f64)),
+        ("deadline_shed", Json::Num(o.deadline_shed as f64)),
+        ("handoffs", Json::Num(o.handoffs as f64)),
+        ("bus_wait_s", Json::Num(o.bus_wait_s)),
+        ("peak_admit_queue", Json::Num(o.peak_admit_queue as f64)),
+        ("makespan_s", Json::Num(o.makespan_s)),
+        ("throughput_per_s", Json::Num(o.throughput_per_s)),
+    ];
+    kv.extend(slo_to_json_fields(slo));
+    kv
+}
+
+fn outcome_from_json(v: &Json) -> std::result::Result<OutcomeFields, String> {
+    let err = |f: &str| format!("outcome block missing/invalid {f:?}");
+    let num = |k: &str| v.get(k).and_then(Json::as_usize).ok_or_else(|| err(k));
+    Ok(OutcomeFields {
+        completed: num("completed")?,
+        dropped: num("dropped")?,
+        failed: num("failed")?,
+        // Pre-cosim artifacts carry none of these; default to the
+        // replay engine's values.
+        deadline_shed: v.get("deadline_shed").and_then(Json::as_usize).unwrap_or(0),
+        handoffs: v.get("handoffs").and_then(Json::as_usize).unwrap_or(0),
+        bus_wait_s: v.get("bus_wait_s").and_then(Json::as_f64).unwrap_or(0.0),
+        peak_admit_queue: num("peak_admit_queue")?,
+        makespan_s: v
+            .get("makespan_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| err("makespan_s"))?,
+        throughput_per_s: v
+            .get("throughput_per_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| err("throughput_per_s"))?,
     })
 }
 
 impl ServeReport {
-    /// Build the `BENCH_serve.json` document. Everything except the
-    /// `host` block is deterministic in the serve config.
-    pub fn to_json(&self, host_wall_s: f64, host_workers: usize) -> Json {
-        let (mode, lambda, clients) = match self.mode {
-            ArrivalMode::Open { lambda } => ("open", lambda, 0usize),
-            ArrivalMode::Closed { clients } => ("closed", 0.0, clients),
-        };
+    /// Build the `BENCH_serve.json` document (schema version 3:
+    /// multi-cell). Everything except the `host` block is
+    /// deterministic in the serve spec.
+    pub fn to_json(&self, host_wall_s: f64, host_workers: usize, host_shards: usize) -> Json {
         Json::obj(vec![
             ("schema", Json::Str("revel-bench-serve".into())),
-            ("version", Json::Num(1.0)),
+            ("version", Json::Num(3.0)),
             ("freq_ghz", Json::Num(model::FREQ_GHZ)),
             (
                 "config",
                 Json::obj(vec![
-                    ("units", Json::Num(self.units as f64)),
-                    ("jobs", Json::Num(self.jobs as f64)),
                     ("seed", Json::Num(self.seed as f64)),
-                    ("mode", Json::Str(mode.into())),
                     ("engine", Json::Str(self.engine.name().into())),
                     (
                         "slo_deadline_us",
@@ -563,10 +1104,24 @@ impl ServeReport {
                             Some(us) => Json::Num(us),
                         },
                     ),
-                    ("lambda", Json::Num(lambda)),
-                    ("clients", Json::Num(clients as f64)),
-                    ("queue_cap", Json::Num(self.queue_cap as f64)),
-                    ("admit_cap", Json::Num(self.admit_cap as f64)),
+                    ("jobs", Json::Num(self.jobs as f64)),
+                    (
+                        "cells",
+                        Json::Arr(
+                            self.cells
+                                .iter()
+                                .map(|c| {
+                                    Json::obj(vec![
+                                        ("units", Json::Num(c.units as f64)),
+                                        ("queue_cap", Json::Num(c.queue_cap as f64)),
+                                        ("admit_cap", Json::Num(c.admit_cap as f64)),
+                                        ("jobs", Json::Num(c.jobs as f64)),
+                                        ("arrival", c.arrival.to_json()),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
             (
@@ -574,6 +1129,7 @@ impl ServeReport {
                 Json::obj(vec![
                     ("wall_s", Json::Num(host_wall_s)),
                     ("workers", Json::Num(host_workers as f64)),
+                    ("shards", Json::Num(host_shards as f64)),
                     (
                         // Per-point host wall time of the batched stage
                         // pre-simulation (nondeterministic, so it lives
@@ -594,74 +1150,75 @@ impl ServeReport {
                                 .collect(),
                         ),
                     ),
+                    (
+                        // Metro wall time per shard count (results are
+                        // identical across rows; CI prints this as the
+                        // informational strong-scaling table).
+                        "strong_scaling",
+                        Json::Arr(
+                            self.strong_scaling
+                                .0
+                                .iter()
+                                .map(|r| {
+                                    Json::obj(vec![
+                                        ("shards", Json::Num(r.shards as f64)),
+                                        ("wall_s", Json::Num(r.wall_s)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
             (
                 "summary",
-                Json::obj(vec![
-                    ("completed", Json::Num(self.completed as f64)),
-                    ("dropped", Json::Num(self.dropped as f64)),
-                    ("failed", Json::Num(self.failed as f64)),
-                    ("deadline_shed", Json::Num(self.deadline_shed as f64)),
-                    ("handoffs", Json::Num(self.handoffs as f64)),
-                    ("bus_wait_s", Json::Num(self.bus_wait_s)),
-                    ("peak_admit_queue", Json::Num(self.peak_admit_queue as f64)),
-                    ("makespan_s", Json::Num(self.makespan_s)),
-                    ("throughput_per_s", Json::Num(self.throughput_per_s)),
-                    ("latency_us", self.slo.latency_us.to_json()),
-                    ("queue_us", self.slo.queue_us.to_json()),
-                    ("service_us", self.slo.service_us.to_json()),
-                ]),
+                Json::obj(outcome_to_json(
+                    &OutcomeFields {
+                        completed: self.completed,
+                        dropped: self.dropped,
+                        failed: self.failed,
+                        deadline_shed: self.deadline_shed,
+                        handoffs: self.handoffs,
+                        bus_wait_s: self.bus_wait_s,
+                        peak_admit_queue: self.peak_admit_queue,
+                        makespan_s: self.makespan_s,
+                        throughput_per_s: self.throughput_per_s,
+                    },
+                    &self.slo,
+                )),
             ),
             (
                 // Keyed by pipeline *position* (STAGE_NAMES slot labels):
                 // the "cholesky" slot aggregates every channel estimator
                 // in the mix, including the LU classes.
                 "stage_us",
-                Json::Obj(
-                    STAGE_NAMES
-                        .iter()
-                        .zip(self.slo.stage_us.iter())
-                        .map(|(n, p)| (n.to_string(), p.to_json()))
-                        .collect(),
-                ),
+                stage_us_to_json(&self.slo),
             ),
             (
-                "per_unit",
+                // Index-aligned with config.cells.
+                "per_cell",
                 Json::Arr(
-                    self.per_unit
-                        .iter()
-                        .map(|u| {
-                            Json::obj(vec![
-                                ("jobs", Json::Num(u.jobs as f64)),
-                                ("busy_s", Json::Num(u.busy_s)),
-                                ("utilization", Json::Num(u.utilization)),
-                                ("stolen", Json::Num(u.stolen as f64)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-            (
-                "classes",
-                Json::Arr(
-                    self.classes
+                    self.cells
                         .iter()
                         .map(|c| {
-                            Json::obj(vec![
-                                ("name", Json::Str(c.name.clone())),
-                                ("weight", Json::Num(c.weight)),
-                                ("completed", Json::Num(c.completed as f64)),
-                                (
-                                    "stage_cycles",
-                                    match c.stage_cycles {
-                                        None => Json::Null,
-                                        Some(cy) => Json::Arr(
-                                            cy.iter().map(|&x| Json::Num(x as f64)).collect(),
-                                        ),
-                                    },
-                                ),
-                            ])
+                            let mut kv = outcome_to_json(
+                                &OutcomeFields {
+                                    completed: c.completed,
+                                    dropped: c.dropped,
+                                    failed: c.failed,
+                                    deadline_shed: c.deadline_shed,
+                                    handoffs: c.handoffs,
+                                    bus_wait_s: c.bus_wait_s,
+                                    peak_admit_queue: c.peak_admit_queue,
+                                    makespan_s: c.makespan_s,
+                                    throughput_per_s: c.throughput_per_s,
+                                },
+                                &c.slo,
+                            );
+                            kv.push(("stage_us", stage_us_to_json(&c.slo)));
+                            kv.push(("per_unit", per_unit_to_json(&c.per_unit)));
+                            kv.push(("classes", classes_to_json(&c.classes)));
+                            Json::obj(kv)
                         })
                         .collect(),
                 ),
@@ -679,26 +1236,22 @@ impl ServeReport {
             ),
             (
                 "jobs_detail",
-                Json::Arr(self.jobs_detail.iter().map(completion_to_json).collect()),
+                Json::Arr(self.jobs_detail.iter().map(job_record_to_json).collect()),
             ),
         ])
     }
 
-    /// Inverse of [`to_json`] (the `host` block is intentionally
-    /// dropped — it is the only nondeterministic part of the artifact).
+    /// Inverse of [`ServeReport::to_json`] (the `host` block is
+    /// intentionally dropped — it is the only nondeterministic part of
+    /// the artifact). Pre-metro artifacts (schema versions 1/2: flat
+    /// `config.units`/`config.mode`, no `per_cell`) parse as a
+    /// one-cell metro, so every recorded `BENCH_serve.json` stays
+    /// readable and replayable.
     pub fn from_json(v: &Json) -> std::result::Result<ServeReport, String> {
         let err = |f: &str| format!("BENCH_serve document missing/invalid {f:?}");
         let cfg = v.get("config").ok_or_else(|| err("config"))?;
         let summary = v.get("summary").ok_or_else(|| err("summary"))?;
-        let cnum = |k: &str| cfg.get(k).and_then(Json::as_usize).ok_or_else(|| err(k));
-        let snum = |k: &str| summary.get(k).and_then(Json::as_usize).ok_or_else(|| err(k));
-        let mode = match cfg.get("mode").and_then(Json::as_str) {
-            Some("open") => ArrivalMode::Open {
-                lambda: cfg.get("lambda").and_then(Json::as_f64).ok_or_else(|| err("lambda"))?,
-            },
-            Some("closed") => ArrivalMode::Closed { clients: cnum("clients")? },
-            _ => return Err(err("mode")),
-        };
+        let seed = cfg.get("seed").and_then(Json::as_u64).ok_or_else(|| err("seed"))?;
         // Engine and SLO fields arrived with the co-sim engine; absent
         // (pre-cosim) artifacts parse as replay with no deadline.
         let engine = match cfg.get("engine").and_then(Json::as_str) {
@@ -710,72 +1263,95 @@ impl ServeReport {
             None | Some(Json::Null) => None,
             Some(v) => Some(v.as_f64().ok_or_else(|| err("slo_deadline_us"))?),
         };
-        let digest = |k: &str| -> std::result::Result<Pctls, String> {
-            Pctls::from_json(summary.get(k).ok_or_else(|| err(k))?)
+        let jobs = cfg.get("jobs").and_then(Json::as_usize).ok_or_else(|| err("jobs"))?;
+        let slo = slo_from_json(summary, v.get("stage_us").ok_or_else(|| err("stage_us"))?)?;
+        let metro = outcome_from_json(summary)?;
+
+        let cells: Vec<CellReport> = if let Some(cfg_cells) =
+            cfg.get("cells").and_then(Json::as_arr)
+        {
+            // Schema v3: zip config.cells with the per_cell outcomes.
+            let out_cells =
+                v.get("per_cell").and_then(Json::as_arr).ok_or_else(|| err("per_cell"))?;
+            if cfg_cells.len() != out_cells.len() {
+                return Err(err("per_cell (length mismatch with config.cells)"));
+            }
+            cfg_cells
+                .iter()
+                .zip(out_cells)
+                .map(|(cc, oc)| {
+                    let cnum =
+                        |k: &str| cc.get(k).and_then(Json::as_usize).ok_or_else(|| err(k));
+                    let o = outcome_from_json(oc)?;
+                    Ok(CellReport {
+                        units: cnum("units")?,
+                        queue_cap: cnum("queue_cap")?,
+                        admit_cap: cnum("admit_cap")?,
+                        jobs: cnum("jobs")?,
+                        arrival: ArrivalProcess::from_json(
+                            cc.get("arrival").ok_or_else(|| err("arrival"))?,
+                        )?,
+                        completed: o.completed,
+                        dropped: o.dropped,
+                        failed: o.failed,
+                        deadline_shed: o.deadline_shed,
+                        handoffs: o.handoffs,
+                        bus_wait_s: o.bus_wait_s,
+                        peak_admit_queue: o.peak_admit_queue,
+                        makespan_s: o.makespan_s,
+                        throughput_per_s: o.throughput_per_s,
+                        slo: slo_from_json(
+                            oc,
+                            oc.get("stage_us").ok_or_else(|| err("stage_us"))?,
+                        )?,
+                        per_unit: per_unit_from_json(
+                            oc.get("per_unit").ok_or_else(|| err("per_unit"))?,
+                        )?,
+                        classes: classes_from_json(
+                            oc.get("classes").ok_or_else(|| err("classes"))?,
+                        )?,
+                    })
+                })
+                .collect::<std::result::Result<Vec<_>, String>>()?
+        } else {
+            // Legacy flat schema: the whole document is one cell whose
+            // outcome equals the metro summary.
+            let cnum = |k: &str| cfg.get(k).and_then(Json::as_usize).ok_or_else(|| err(k));
+            let arrival = match cfg.get("mode").and_then(Json::as_str) {
+                Some("open") => ArrivalProcess::Poisson {
+                    lambda: cfg
+                        .get("lambda")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| err("lambda"))?,
+                },
+                Some("closed") => ArrivalProcess::Closed { clients: cnum("clients")? },
+                _ => return Err(err("mode")),
+            };
+            vec![CellReport {
+                units: cnum("units")?,
+                queue_cap: cnum("queue_cap")?,
+                admit_cap: cnum("admit_cap")?,
+                jobs,
+                arrival,
+                completed: metro.completed,
+                dropped: metro.dropped,
+                failed: metro.failed,
+                deadline_shed: metro.deadline_shed,
+                handoffs: metro.handoffs,
+                bus_wait_s: metro.bus_wait_s,
+                peak_admit_queue: metro.peak_admit_queue,
+                makespan_s: metro.makespan_s,
+                throughput_per_s: metro.throughput_per_s,
+                slo: slo.clone(),
+                per_unit: per_unit_from_json(
+                    v.get("per_unit").ok_or_else(|| err("per_unit"))?,
+                )?,
+                classes: classes_from_json(
+                    v.get("classes").ok_or_else(|| err("classes"))?,
+                )?,
+            }]
         };
-        let stage_obj = v.get("stage_us").ok_or_else(|| err("stage_us"))?;
-        let mut stage_us = [Pctls::default(); 4];
-        for (slot, name) in stage_us.iter_mut().zip(STAGE_NAMES) {
-            *slot = Pctls::from_json(stage_obj.get(name).ok_or_else(|| err(name))?)?;
-        }
-        let per_unit = v
-            .get("per_unit")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| err("per_unit"))?
-            .iter()
-            .map(|u| {
-                Ok(UnitReport {
-                    jobs: u.get("jobs").and_then(Json::as_usize).ok_or_else(|| err("jobs"))?,
-                    busy_s: u
-                        .get("busy_s")
-                        .and_then(Json::as_f64)
-                        .ok_or_else(|| err("busy_s"))?,
-                    utilization: u
-                        .get("utilization")
-                        .and_then(Json::as_f64)
-                        .ok_or_else(|| err("utilization"))?,
-                    stolen: u
-                        .get("stolen")
-                        .and_then(Json::as_usize)
-                        .ok_or_else(|| err("stolen"))?,
-                })
-            })
-            .collect::<std::result::Result<Vec<_>, String>>()?;
-        let classes = v
-            .get("classes")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| err("classes"))?
-            .iter()
-            .map(|c| {
-                let stage_cycles = match c.get("stage_cycles") {
-                    None | Some(Json::Null) => None,
-                    Some(Json::Arr(a)) if a.len() == 4 => {
-                        let mut cy = [0u64; 4];
-                        for (slot, e) in cy.iter_mut().zip(a) {
-                            *slot = e.as_u64().ok_or_else(|| err("stage_cycles"))?;
-                        }
-                        Some(cy)
-                    }
-                    _ => return Err(err("stage_cycles")),
-                };
-                Ok(ClassReport {
-                    name: c
-                        .get("name")
-                        .and_then(Json::as_str)
-                        .ok_or_else(|| err("name"))?
-                        .to_string(),
-                    weight: c
-                        .get("weight")
-                        .and_then(Json::as_f64)
-                        .ok_or_else(|| err("weight"))?,
-                    completed: c
-                        .get("completed")
-                        .and_then(Json::as_usize)
-                        .ok_or_else(|| err("completed"))?,
-                    stage_cycles,
-                })
-            })
-            .collect::<std::result::Result<Vec<_>, String>>()?;
+
         let batching = v.get("batching").ok_or_else(|| err("batching"))?;
         let stage_errors = v
             .get("stage_errors")
@@ -789,48 +1365,24 @@ impl ServeReport {
             .and_then(Json::as_arr)
             .ok_or_else(|| err("jobs_detail"))?
             .iter()
-            .map(completion_from_json)
+            .map(job_record_from_json)
             .collect::<std::result::Result<Vec<_>, String>>()?;
         Ok(ServeReport {
-            units: cnum("units")?,
-            jobs: cnum("jobs")?,
-            seed: cfg.get("seed").and_then(Json::as_u64).ok_or_else(|| err("seed"))?,
-            mode,
+            seed,
             engine,
             slo_deadline_us,
-            queue_cap: cnum("queue_cap")?,
-            admit_cap: cnum("admit_cap")?,
-            completed: snum("completed")?,
-            dropped: snum("dropped")?,
-            failed: snum("failed")?,
-            // Pre-cosim artifacts carry none of these; default to the
-            // replay engine's values.
-            deadline_shed: summary
-                .get("deadline_shed")
-                .and_then(Json::as_usize)
-                .unwrap_or(0),
-            handoffs: summary.get("handoffs").and_then(Json::as_usize).unwrap_or(0),
-            bus_wait_s: summary
-                .get("bus_wait_s")
-                .and_then(Json::as_f64)
-                .unwrap_or(0.0),
-            peak_admit_queue: snum("peak_admit_queue")?,
-            makespan_s: summary
-                .get("makespan_s")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| err("makespan_s"))?,
-            throughput_per_s: summary
-                .get("throughput_per_s")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| err("throughput_per_s"))?,
-            slo: SloDigest {
-                latency_us: digest("latency_us")?,
-                queue_us: digest("queue_us")?,
-                service_us: digest("service_us")?,
-                stage_us,
-            },
-            per_unit,
-            classes,
+            jobs,
+            cells,
+            completed: metro.completed,
+            dropped: metro.dropped,
+            failed: metro.failed,
+            deadline_shed: metro.deadline_shed,
+            handoffs: metro.handoffs,
+            bus_wait_s: metro.bus_wait_s,
+            peak_admit_queue: metro.peak_admit_queue,
+            makespan_s: metro.makespan_s,
+            throughput_per_s: metro.throughput_per_s,
+            slo,
             batching: Batching {
                 distinct_points: batching
                     .get("distinct_points")
@@ -845,6 +1397,7 @@ impl ServeReport {
             jobs_detail,
             // Host-block content is intentionally not round-tripped.
             stage_wall: HostOnly::default(),
+            strong_scaling: HostOnly::default(),
         })
     }
 }
@@ -855,11 +1408,13 @@ pub fn write_artifact(
     report: &ServeReport,
     host_wall_s: f64,
     host_workers: usize,
+    host_shards: usize,
 ) -> std::io::Result<()> {
-    std::fs::write(path, report.to_json(host_wall_s, host_workers).pretty())
+    std::fs::write(path, report.to_json(host_wall_s, host_workers, host_shards).pretty())
 }
 
-/// Parse a serve artifact back (schema round-trip).
+/// Parse a serve artifact back (schema round-trip; accepts every
+/// schema version this repo has ever written).
 pub fn read_artifact(text: &str) -> std::result::Result<ServeReport, String> {
     let doc = json::parse(text)?;
     if doc.get("schema").and_then(Json::as_str) != Some("revel-bench-serve") {
@@ -900,37 +1455,31 @@ mod tests {
         ]
     }
 
-    fn cfg(units: usize) -> ServeConfig {
-        ServeConfig {
-            jobs: 24,
-            seed: 7,
-            mode: ArrivalMode::Open { lambda: 0.0 },
-            cluster: ClusterConfig { units, ..ClusterConfig::default() },
-            workers: Some(2),
-            classes: cheap_classes(),
-            ..ServeConfig::default()
-        }
+    /// One flood cell on `units` units: the pre-metro default probe.
+    fn spec(units: usize) -> ClusterSpec {
+        ClusterSpec::new(7).workers(Some(2)).cell(
+            CellSpec::new(units).jobs(24).job_mix(cheap_classes()),
+        )
     }
 
     /// A small co-sim run (live machines make each job's stages real
     /// simulations, so the test traces stay short).
-    fn cosim_cfg(units: usize, jobs: usize) -> ServeConfig {
-        ServeConfig {
-            jobs,
-            engine: EngineKind::Cosim,
-            cluster: ClusterConfig { units, ..ClusterConfig::default() },
-            ..cfg(units)
-        }
+    fn cosim_spec(units: usize, jobs: usize) -> ClusterSpec {
+        ClusterSpec::new(7).workers(Some(2)).engine(EngineKind::Cosim).cell(
+            CellSpec::new(units).jobs(jobs).job_mix(cheap_classes()),
+        )
     }
 
     #[test]
     fn deterministic_and_scales_with_units() {
-        let a = serve(&cfg(1)).unwrap();
-        let b = serve(&cfg(1)).unwrap();
-        assert_eq!(a, b, "same config, same seed => identical report");
+        let a = serve(&spec(1)).unwrap();
+        let b = serve(&spec(1)).unwrap();
+        assert_eq!(a, b, "same spec, same seed => identical report");
         assert_eq!(a.completed, 24);
+        assert_eq!(a.cells.len(), 1);
+        assert_eq!(a.cells[0].completed, 24);
         assert!(a.slo.latency_us.p99 > 0.0);
-        let c = serve(&cfg(4)).unwrap();
+        let c = serve(&spec(4)).unwrap();
         assert_eq!(c.completed, 24, "same trace, more units");
         assert!(
             c.throughput_per_s > a.throughput_per_s,
@@ -943,12 +1492,13 @@ mod tests {
 
     #[test]
     fn artifact_roundtrip_through_json() {
-        let r = serve(&cfg(2)).unwrap();
-        let text = r.to_json(1.5, 8).pretty();
+        let r = serve(&spec(2)).unwrap();
+        let text = r.to_json(1.5, 8, 1).pretty();
         let back = read_artifact(&text).unwrap();
         assert_eq!(back, r, "host block drops; everything else round-trips");
         assert!(read_artifact("{\"schema\": \"other\"}").is_err());
-        // Stage wall times ride in the (dropped) host block only.
+        // Stage wall times and scaling rows ride in the (dropped) host
+        // block only.
         let doc = json::parse(&text).unwrap();
         let walls = doc
             .get("host")
@@ -957,30 +1507,114 @@ mod tests {
             .expect("host.stage_wall_ns present");
         assert_eq!(walls.len(), r.stage_wall.0.len());
         assert!(back.stage_wall.0.is_empty(), "host block not round-tripped");
+        assert!(back.strong_scaling.0.is_empty());
+        assert_eq!(
+            doc.get("version").and_then(Json::as_u64),
+            Some(3),
+            "multi-cell schema version"
+        );
     }
 
     #[test]
     fn closed_loop_and_paced_open_complete_everything() {
-        let mut closed = cfg(2);
-        closed.mode = ArrivalMode::Closed { clients: 3 };
+        let closed = ClusterSpec::new(7).workers(Some(2)).cell(
+            CellSpec::new(2)
+                .jobs(24)
+                .arrival(ArrivalProcess::Closed { clients: 3 })
+                .job_mix(cheap_classes()),
+        );
         let r = serve(&closed).unwrap();
         assert_eq!(r.completed, 24);
         assert_eq!(r.dropped, 0, "closed loop self-limits");
 
-        let mut paced = cfg(2);
         // Pace arrivals near half the flood capacity: queues stay short.
-        let flood = serve(&cfg(2)).unwrap();
-        paced.mode = ArrivalMode::Open { lambda: flood.throughput_per_s * 0.5 };
+        let flood = serve(&spec(2)).unwrap();
+        let mut paced = spec(2);
+        paced.cells[0].arrival =
+            ArrivalProcess::Poisson { lambda: flood.throughput_per_s * 0.5 };
         let p = serve(&paced).unwrap();
         assert_eq!(p.completed, 24);
         assert!(p.slo.queue_us.p99 <= flood.slo.queue_us.p99);
     }
 
     #[test]
+    fn multi_cell_metro_aggregates_in_cell_order() {
+        let metro = ClusterSpec::new(11)
+            .workers(Some(2))
+            .cell(CellSpec::new(1).jobs(8).job_mix(cheap_classes()))
+            .cell(
+                CellSpec::new(2)
+                    .jobs(10)
+                    .arrival(ArrivalProcess::Mmpp {
+                        lambda_lo: 100.0,
+                        lambda_hi: 10_000.0,
+                        mean_dwell_s: 0.01,
+                    })
+                    .job_mix(cheap_classes()),
+            )
+            .cell(
+                CellSpec::new(2)
+                    .jobs(6)
+                    .arrival(ArrivalProcess::Closed { clients: 2 })
+                    .job_mix(cheap_classes()),
+            );
+        let a = serve(&metro).unwrap();
+        let b = serve(&metro).unwrap();
+        assert_eq!(a, b, "metro runs are deterministic per seed");
+        assert_eq!(a.cells.len(), 3);
+        assert_eq!(a.jobs, 24);
+        assert_eq!(
+            a.completed,
+            a.cells.iter().map(|c| c.completed).sum::<usize>()
+        );
+        assert_eq!(
+            a.makespan_s,
+            a.cells.iter().map(|c| c.makespan_s).fold(0.0, f64::max)
+        );
+        // Every job record is tagged with a live cell index.
+        assert_eq!(a.jobs_detail.len(), a.completed);
+        assert!(a.jobs_detail.iter().all(|r| r.cell < 3));
+        for cell in 0..3 {
+            assert_eq!(
+                a.jobs_detail.iter().filter(|r| r.cell == cell).count(),
+                a.cells[cell].completed
+            );
+        }
+        // Class totals fold the shared mix across cells.
+        let totals = a.class_totals();
+        assert_eq!(totals.len(), 2);
+        assert_eq!(
+            totals.iter().map(|c| c.completed).sum::<usize>(),
+            a.completed
+        );
+        // The metro artifact round-trips.
+        let back = read_artifact(&a.to_json(0.5, 2, 2).pretty()).unwrap();
+        assert_eq!(back, a);
+        // Cells see different traffic (flood vs MMPP on independent
+        // per-cell RNG streams), so their digests differ.
+        assert_ne!(a.cells[0].slo.latency_us, a.cells[1].slo.latency_us);
+    }
+
+    #[test]
+    fn single_cell_seed_matches_cell_zero_of_a_metro() {
+        // cell_seed(seed, 0) == seed: the pre-metro single-cell trace
+        // is exactly cell 0 of any metro with the same first cell.
+        assert_eq!(cell_seed(7, 0), 7);
+        assert_ne!(cell_seed(7, 1), 7);
+        let solo = serve(&spec(2)).unwrap();
+        let metro = ClusterSpec::new(7)
+            .workers(Some(2))
+            .cell(CellSpec::new(2).jobs(24).job_mix(cheap_classes()))
+            .cell(CellSpec::new(1).jobs(4).job_mix(cheap_classes()));
+        let m = serve(&metro).unwrap();
+        assert_eq!(m.cells[0], solo.cells[0], "cell 0 unchanged by cell 1");
+    }
+
+    #[test]
     fn cosim_engine_is_deterministic_and_never_beats_replay_makespan() {
-        let a = serve(&cosim_cfg(1, 12)).unwrap();
-        let b = serve(&cosim_cfg(1, 12)).unwrap();
-        assert_eq!(a, b, "cosim: same config, same seed => identical report");
+        let a = serve(&cosim_spec(1, 12)).unwrap();
+        let b = serve(&cosim_spec(1, 12)).unwrap();
+        assert_eq!(a, b, "cosim: same spec, same seed => identical report");
         assert_eq!(a.engine, EngineKind::Cosim);
         assert_eq!(a.completed, 12);
         assert!(a.handoffs > 0, "4-stage jobs hand off between stages");
@@ -988,9 +1622,9 @@ mod tests {
         // Replay is the optimistic oracle: on one unit its flood
         // makespan equals the total compute — a lower bound for any
         // schedule that additionally pays inter-stage handoffs.
-        let mut rcfg = cfg(1);
-        rcfg.jobs = 12;
-        let replay = serve(&rcfg).unwrap();
+        let mut rspec = spec(1);
+        rspec.cells[0].jobs = 12;
+        let replay = serve(&rspec).unwrap();
         assert_eq!(replay.completed, 12);
         assert!(
             a.makespan_s >= replay.makespan_s,
@@ -1004,61 +1638,200 @@ mod tests {
 
     #[test]
     fn slo_admission_sheds_through_the_serve_path() {
-        let mut c = cosim_cfg(1, 10);
         // Far below one subframe's service demand: every arrival is
         // predicted late and shed at admission.
-        c.slo_deadline_us = Some(1.0);
+        let c = cosim_spec(1, 10).slo_deadline_us(Some(1.0));
         let r = serve(&c).unwrap();
         assert!(r.deadline_shed > 0, "flood must trip the deadline lookahead");
         assert_eq!(r.completed + r.deadline_shed + r.dropped + r.failed, 10);
         // Replay ignores the knob entirely.
-        let mut rc = cfg(1);
-        rc.slo_deadline_us = Some(1.0);
-        rc.jobs = 10;
-        let rr = serve(&rc).unwrap();
+        let mut rspec = spec(1).slo_deadline_us(Some(1.0));
+        rspec.cells[0].jobs = 10;
+        let rr = serve(&rspec).unwrap();
         assert_eq!(rr.deadline_shed, 0);
         assert_eq!(rr.completed, 10);
     }
 
     #[test]
-    fn cosim_artifact_roundtrips_and_precosim_artifacts_parse_as_replay() {
-        let mut c = cosim_cfg(2, 8);
-        c.slo_deadline_us = Some(1e9); // generous: nothing sheds
+    fn cosim_artifact_roundtrips() {
+        let c = cosim_spec(2, 8).slo_deadline_us(Some(1e9)); // generous: nothing sheds
         let r = serve(&c).unwrap();
         assert_eq!(r.deadline_shed, 0);
-        let text = r.to_json(0.5, 4).pretty();
+        let text = r.to_json(0.5, 4, 1).pretty();
         let back = read_artifact(&text).unwrap();
         assert_eq!(back, r, "host block drops; everything else round-trips");
         assert_eq!(back.engine, EngineKind::Cosim);
         assert_eq!(back.slo_deadline_us, Some(1e9));
-        // Emulate a pre-cosim (version-1) artifact by dropping the new
-        // keys line-wise (keys sort alphabetically, so none of them is
-        // the last entry of its object and the JSON stays valid).
-        let replay = serve(&cfg(1)).unwrap();
-        let new_keys = [
+    }
+
+    /// Render `r` (a one-cell report) in the legacy flat schema the
+    /// repo wrote before the multi-cell redesign — the compatibility
+    /// corpus for [`ServeReport::from_json`]'s legacy path.
+    fn legacy_v1_doc(r: &ServeReport) -> Json {
+        let cell = &r.cells[0];
+        let (mode, lambda, clients) = match &cell.arrival {
+            ArrivalProcess::Poisson { lambda } => ("open", *lambda, 0usize),
+            ArrivalProcess::Closed { clients } => ("closed", 0.0, *clients),
+            other => panic!("legacy schema cannot express {other:?}"),
+        };
+        Json::obj(vec![
+            ("schema", Json::Str("revel-bench-serve".into())),
+            ("version", Json::Num(1.0)),
+            ("freq_ghz", Json::Num(model::FREQ_GHZ)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("units", Json::Num(cell.units as f64)),
+                    ("jobs", Json::Num(r.jobs as f64)),
+                    ("seed", Json::Num(r.seed as f64)),
+                    ("mode", Json::Str(mode.into())),
+                    ("engine", Json::Str(r.engine.name().into())),
+                    (
+                        "slo_deadline_us",
+                        match r.slo_deadline_us {
+                            None => Json::Null,
+                            Some(us) => Json::Num(us),
+                        },
+                    ),
+                    ("lambda", Json::Num(lambda)),
+                    ("clients", Json::Num(clients as f64)),
+                    ("queue_cap", Json::Num(cell.queue_cap as f64)),
+                    ("admit_cap", Json::Num(cell.admit_cap as f64)),
+                ]),
+            ),
+            ("host", Json::obj(vec![("wall_s", Json::Num(0.25))])),
+            (
+                "summary",
+                Json::obj(outcome_to_json(
+                    &OutcomeFields {
+                        completed: r.completed,
+                        dropped: r.dropped,
+                        failed: r.failed,
+                        deadline_shed: r.deadline_shed,
+                        handoffs: r.handoffs,
+                        bus_wait_s: r.bus_wait_s,
+                        peak_admit_queue: r.peak_admit_queue,
+                        makespan_s: r.makespan_s,
+                        throughput_per_s: r.throughput_per_s,
+                    },
+                    &r.slo,
+                )),
+            ),
+            ("stage_us", stage_us_to_json(&r.slo)),
+            ("per_unit", per_unit_to_json(&cell.per_unit)),
+            ("classes", classes_to_json(&cell.classes)),
+            (
+                "batching",
+                Json::obj(vec![
+                    ("distinct_points", Json::Num(r.batching.distinct_points as f64)),
+                    ("stage_runs", Json::Num(r.batching.stage_runs as f64)),
+                ]),
+            ),
+            ("stage_errors", Json::Arr(Vec::new())),
+            (
+                // Legacy rows carry no "cell" key.
+                "jobs_detail",
+                Json::Arr(
+                    r.jobs_detail
+                        .iter()
+                        .map(|jr| {
+                            let c = &jr.completion;
+                            Json::obj(vec![
+                                ("id", Json::Num(c.id as f64)),
+                                ("class", Json::Num(c.class as f64)),
+                                ("unit", Json::Num(c.unit as f64)),
+                                ("arrival_s", Json::Num(c.arrival_s)),
+                                ("start_s", Json::Num(c.start_s)),
+                                ("finish_s", Json::Num(c.finish_s)),
+                                ("stolen", Json::Bool(c.stolen)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn legacy_flat_artifacts_parse_as_a_one_cell_metro() {
+        let r = serve(&spec(2)).unwrap();
+        let old = read_artifact(&legacy_v1_doc(&r).pretty()).unwrap();
+        assert_eq!(old, r, "legacy flat schema reconstructs the one-cell report");
+        assert_eq!(old.cells.len(), 1);
+        assert!(old.jobs_detail.iter().all(|jr| jr.cell == 0));
+        // Pre-cosim documents additionally lack the engine/SLO keys;
+        // drop them line-wise (keys sort alphabetically, so none is the
+        // last entry of its object and the JSON stays valid).
+        let precosim_keys = [
             "\"engine\"",
             "\"slo_deadline_us\"",
             "\"deadline_shed\"",
             "\"handoffs\"",
             "\"bus_wait_s\"",
         ];
-        let old_text: String = replay
-            .to_json(0.5, 4)
+        let old_text: String = legacy_v1_doc(&r)
             .pretty()
             .lines()
-            .filter(|l| !new_keys.iter().any(|k| l.trim_start().starts_with(k)))
+            .filter(|l| !precosim_keys.iter().any(|k| l.trim_start().starts_with(k)))
             .collect::<Vec<_>>()
             .join("\n");
-        let old = read_artifact(&old_text).unwrap();
-        assert_eq!(old.engine, EngineKind::Replay);
-        assert_eq!(old.slo_deadline_us, None);
-        assert_eq!(old.deadline_shed, 0);
-        assert_eq!(old, replay, "defaults reconstruct the replay report");
+        let pre = read_artifact(&old_text).unwrap();
+        assert_eq!(pre.engine, EngineKind::Replay);
+        assert_eq!(pre.slo_deadline_us, None);
+        assert_eq!(pre.deadline_shed, 0);
+        assert_eq!(pre, r, "defaults reconstruct the replay report");
+    }
+
+    #[test]
+    fn trace_replay_roundtrip_is_bit_identical() {
+        // Record a paced run (everything completes, so jobs_detail is
+        // the full trace)...
+        let flood = serve(&spec(2)).unwrap();
+        let mut paced = spec(2);
+        paced.cells[0].arrival =
+            ArrivalProcess::Poisson { lambda: flood.throughput_per_s * 0.5 };
+        let recorded = serve(&paced).unwrap();
+        assert_eq!(recorded.completed, 24);
+        let path = std::env::temp_dir().join("revel_serve_replay_roundtrip.json");
+        let path = path.to_str().unwrap().to_string();
+        write_artifact(&path, &recorded, 0.0, 1, 1).unwrap();
+        // ...then replay it through ArrivalProcess::Replay: completions
+        // are bit-identical (ids, classes, arrival/start/finish times).
+        let mut replayed_spec = spec(2);
+        replayed_spec.cells[0].arrival = ArrivalProcess::Replay { path: path.clone() };
+        let replayed = serve(&replayed_spec).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(replayed.jobs, 24, "replay resolves its own trace length");
+        assert_eq!(replayed.jobs_detail, recorded.jobs_detail);
+        assert_eq!(replayed.slo, recorded.slo);
+        assert_eq!(replayed.completed, recorded.completed);
+        assert_eq!(
+            replayed.cells[0].arrival,
+            ArrivalProcess::Replay { path },
+            "the report echoes the replay source"
+        );
+    }
+
+    #[test]
+    fn strong_scaling_rows_are_attached_and_reports_identical() {
+        let metro = ClusterSpec::new(7)
+            .workers(Some(2))
+            .cells(4, CellSpec::new(1).jobs(4).job_mix(cheap_classes()))
+            .engine(EngineKind::Cosim);
+        let r = strong_scaling(&metro, &[1, 2]).unwrap();
+        assert_eq!(r.strong_scaling.0.len(), 2);
+        assert_eq!(r.strong_scaling.0[0].shards, 1);
+        assert_eq!(r.strong_scaling.0[1].shards, 2);
+        assert!(r.strong_scaling.0.iter().all(|row| row.wall_s >= 0.0));
+        assert_eq!(r.completed, 16);
+        // The attached report equals a plain serve of the same spec.
+        let plain = serve(&metro).unwrap();
+        assert_eq!(r, plain);
     }
 
     #[test]
     fn batching_amortizes_stage_sims() {
-        let r = serve(&cfg(2)).unwrap();
+        let r = serve(&spec(2)).unwrap();
         // 2 classes share gemm/fir/solver-12 points: 5 distinct sims
         // behind 24 * 4 stage executions.
         assert_eq!(r.batching.distinct_points, 5);

@@ -1,0 +1,230 @@
+//! Sharded co-simulation: conservative parallel DES over per-cell
+//! [`super::cosim::CosimSession`]s.
+//!
+//! A metro-scale serve run holds N cells, each a full co-simulated
+//! cluster on its own calendar. Cells are partitioned into `shards`
+//! by the **fixed** mapping `cell -> cell % shards`, and each shard
+//! advances its cells on a worker-pool thread
+//! ([`crate::harness::pool::scope`]) between conservative
+//! synchronization horizons:
+//!
+//! ```text
+//!   round k:   barrier ── every shard drains its cells' calendars
+//!              up to horizon h_k (strictly-before, FIFO intact) ── barrier
+//!   round k+1: h_{k+1} = earliest pending event + window
+//! ```
+//!
+//! **Why any horizon is safe.** Classic conservative (CMB-style)
+//! parallel simulation may only process an event once no other shard
+//! can still send one earlier; the distance other shards must respect
+//! is the *lookahead*. Here the cheapest cross-cluster interaction is
+//! one inter-stage handoff on a shared interconnect, so the lookahead
+//! bound is `min` [`crate::model::handoff_s`] over the mix's stage
+//! chains ([`ShardPlan::lookahead_s`]), and [`ShardPlan`] asserts the
+//! window respects that floor. Today's cells exchange **no** events —
+//! each is an independent traffic domain — so every horizon is
+//! trivially conservative and the window only trades barrier overhead
+//! against merge granularity; the lookahead floor is what becomes
+//! load-bearing the day cross-cell coupling (inter-cell handover,
+//! fronthaul sharing) lands.
+//!
+//! **Why results are bit-deterministic under any shard→thread
+//! mapping.** Each session is deterministic in (cell config, seed) and
+//! touches no shared mutable state; shards only decide *where* a cell
+//! advances, never *what* it observes. The runner returns runs in cell
+//! order, and the serve layer merges them in that same fixed order —
+//! so artifacts are byte-identical across `shards` ∈ {1, 2, 8, …},
+//! pinned by `tests/cosim_equivalence.rs` and the CI serve-smoke diff.
+
+use crate::harness::pool;
+use crate::model;
+
+use super::cosim::{CosimClass, CosimRun, CosimSession};
+
+/// How a multi-cell co-simulation is driven: shard count plus the
+/// horizon window, with the conservative lookahead floor it respects.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardPlan {
+    /// Worker shards (clamped to the cell count by the runner).
+    pub shards: usize,
+    /// Virtual seconds per synchronization window.
+    pub horizon_s: f64,
+    /// Conservative-DES lookahead bound: the cheapest inter-stage
+    /// handoff in the mix. `horizon_s >= lookahead_s` always.
+    pub lookahead_s: f64,
+}
+
+impl ShardPlan {
+    /// Minimum virtual seconds before any cross-cluster interaction
+    /// could take effect: the cheapest handoff a multi-stage chain in
+    /// `mix` puts on a shared interconnect, floored at one bus cycle
+    /// when the mix has no handoffs at all.
+    pub fn lookahead_s(mix: &[Option<CosimClass>]) -> f64 {
+        let one_cycle = model::cycles_to_us(1) * 1e-6;
+        mix.iter()
+            .flatten()
+            .flat_map(|c| c.stages.windows(2))
+            .map(|w| model::handoff_s(&w[1].kernel, w[1].n))
+            .fold(one_cycle, f64::min)
+            .max(one_cycle)
+    }
+
+    /// Plan for `shards` workers over a metro whose union job mix is
+    /// `mix`: the window is one longest-job's demand — coarse enough
+    /// that a run takes a handful of windows, well above the lookahead
+    /// floor (asserted).
+    pub fn for_mix(shards: usize, mix: &[Option<CosimClass>]) -> ShardPlan {
+        let lookahead_s = Self::lookahead_s(mix);
+        let horizon_s = mix
+            .iter()
+            .flatten()
+            .map(CosimClass::demand_s)
+            .fold(0.0f64, f64::max)
+            .max(lookahead_s);
+        assert!(
+            horizon_s >= lookahead_s,
+            "horizon {horizon_s} violates the conservative lookahead {lookahead_s}"
+        );
+        ShardPlan { shards: shards.max(1), horizon_s, lookahead_s }
+    }
+}
+
+/// Drive every cell session to completion under `plan` and return the
+/// per-cell runs **in cell order** (index-aligned with `sessions`).
+/// Bit-identical for any `plan.shards` and any window: sessions never
+/// interact, and within a cell events replay in single-timeline order.
+pub fn run_sharded(sessions: Vec<CosimSession<'_>>, plan: &ShardPlan) -> Vec<CosimRun> {
+    struct Slot<'a> {
+        cell: usize,
+        session: CosimSession<'a>,
+        drained: bool,
+    }
+    let n = sessions.len();
+    let shards = plan.shards.max(1).min(n.max(1));
+    let window =
+        if plan.horizon_s.is_finite() && plan.horizon_s > 0.0 { plan.horizon_s } else { f64::INFINITY };
+    // Fixed cell→shard mapping: round-robin by cell index. Results do
+    // not depend on it (cells are independent); only wall time does.
+    let mut groups: Vec<Vec<Slot<'_>>> = (0..shards).map(|_| Vec::new()).collect();
+    for (cell, session) in sessions.into_iter().enumerate() {
+        groups[cell % shards].push(Slot { cell, session, drained: false });
+    }
+    loop {
+        // Next horizon: one window past the earliest pending event, so
+        // every round retires at least one event and the loop is
+        // guaranteed to terminate (no event is ever scheduled in its
+        // creator's past).
+        let earliest = groups
+            .iter()
+            .flat_map(|g| g.iter())
+            .filter(|s| !s.drained)
+            .filter_map(|s| s.session.next_time())
+            .fold(f64::INFINITY, f64::min);
+        if !earliest.is_finite() {
+            break;
+        }
+        let horizon = earliest + window;
+        if shards == 1 {
+            // One shard is the single-timeline engine, on this thread.
+            for slot in groups[0].iter_mut().filter(|s| !s.drained) {
+                slot.drained = slot.session.advance_to(horizon);
+            }
+        } else {
+            pool::scope(shards, |s| {
+                for group in groups.iter_mut() {
+                    s.spawn(move || {
+                        for slot in group.iter_mut().filter(|s| !s.drained) {
+                            slot.drained = slot.session.advance_to(horizon);
+                        }
+                    });
+                }
+            });
+        }
+    }
+    let mut out: Vec<Option<CosimRun>> = (0..n).map(|_| None).collect();
+    for slot in groups.into_iter().flatten() {
+        out[slot.cell] = Some(slot.session.finish());
+    }
+    out.into_iter().map(|r| r.expect("every cell ran")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cluster::{Arrival, ClusterConfig, Workload};
+    use crate::coordinator::cosim::{self, CosimConfig, StageTask};
+    use crate::harness;
+    use crate::workloads::{Features, Goal};
+
+    fn est_s(kernel: &str, n: usize) -> f64 {
+        model::cycles_to_us(harness::cycles(kernel, n, Features::ALL, Goal::Latency).unwrap())
+            * 1e-6
+    }
+
+    fn mix() -> Vec<Option<CosimClass>> {
+        let two = CosimClass {
+            stages: vec![
+                StageTask { kernel: "solver".into(), n: 8, est_s: est_s("solver", 8) },
+                StageTask { kernel: "gemm".into(), n: 12, est_s: est_s("gemm", 12) },
+            ],
+        };
+        let one = CosimClass {
+            stages: vec![StageTask {
+                kernel: "solver".into(),
+                n: 12,
+                est_s: est_s("solver", 12),
+            }],
+        };
+        vec![Some(two), Some(one)]
+    }
+
+    #[test]
+    fn plan_respects_the_lookahead_floor() {
+        let mix = mix();
+        let plan = ShardPlan::for_mix(4, &mix);
+        assert!(plan.lookahead_s > 0.0);
+        assert!(plan.horizon_s >= plan.lookahead_s);
+        // The lookahead is the cheapest handoff in the mix: gemm n=12.
+        assert_eq!(plan.lookahead_s, model::handoff_s("gemm", 12));
+        // A mix with no handoffs floors at one bus cycle.
+        let single = vec![mix[1].clone()];
+        assert_eq!(
+            ShardPlan::lookahead_s(&single),
+            model::cycles_to_us(1) * 1e-6
+        );
+    }
+
+    #[test]
+    fn sharded_runs_are_bit_identical_for_any_shard_count() {
+        let mix = mix();
+        let cfg = CosimConfig {
+            cluster: ClusterConfig { units: 2, queue_cap: 8, admit_cap: 64 },
+            deadline_s: None,
+        };
+        let traces: Vec<Vec<Arrival>> = (0..5)
+            .map(|cell| {
+                (0..6)
+                    .map(|i| Arrival {
+                        id: i as u64,
+                        class: (i + cell) % 2,
+                        t_s: 0.0,
+                    })
+                    .collect()
+            })
+            .collect();
+        // The single-timeline oracle: each cell run to completion alone.
+        let solo: Vec<CosimRun> = traces
+            .iter()
+            .map(|t| cosim::run(&cfg, &mix, Workload::Open(t), || 0))
+            .collect();
+        for shards in [1usize, 2, 3, 8] {
+            let plan = ShardPlan::for_mix(shards, &mix);
+            let sessions: Vec<CosimSession<'_>> = traces
+                .iter()
+                .map(|t| CosimSession::new(&cfg, &mix, Workload::Open(t), || 0))
+                .collect();
+            let runs = run_sharded(sessions, &plan);
+            assert_eq!(runs, solo, "shards={shards} must be bit-identical");
+        }
+    }
+}

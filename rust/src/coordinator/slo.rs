@@ -100,6 +100,21 @@ impl SloAccountant {
         }
     }
 
+    /// Fold another accountant's samples into this one. The multi-cell
+    /// serve path digests each cell independently, then absorbs the
+    /// cells in fixed cell order into the metro-wide digest. The fixed
+    /// order matters bitwise: percentiles sort internally, but `mean`
+    /// sums in sample order, so only a shard-mapping-independent absorb
+    /// order keeps the digest bit-identical across shard counts.
+    pub fn absorb(&mut self, other: &SloAccountant) {
+        self.latency_us.extend_from_slice(&other.latency_us);
+        self.queue_us.extend_from_slice(&other.queue_us);
+        self.service_us.extend_from_slice(&other.service_us);
+        for (acc, s) in self.stage_us.iter_mut().zip(&other.stage_us) {
+            acc.extend_from_slice(s);
+        }
+    }
+
     pub fn jobs(&self) -> usize {
         self.latency_us.len()
     }
@@ -144,6 +159,26 @@ mod tests {
         let d = SloAccountant::new().digest();
         assert_eq!(d.latency_us, Pctls::default());
         assert!(!d.latency_us.p99.is_nan());
+    }
+
+    #[test]
+    fn absorb_equals_recording_in_one_accountant() {
+        // Two "cells" absorbed in cell order must digest bit-identically
+        // to one accountant fed the same samples in the same order.
+        let mut all = SloAccountant::new();
+        let mut parts = [SloAccountant::new(), SloAccountant::new()];
+        for part in 0..2 {
+            for i in 0..20 {
+                let x = ((part * 20 + i) * 7 % 13) as f64 + 0.5;
+                all.record(x, x / 2.0, x / 3.0, [x; 4]);
+                parts[part].record(x, x / 2.0, x / 3.0, [x; 4]);
+            }
+        }
+        let mut merged = SloAccountant::new();
+        merged.absorb(&parts[0]);
+        merged.absorb(&parts[1]);
+        assert_eq!(merged.digest(), all.digest());
+        assert_eq!(merged.jobs(), 40);
     }
 
     #[test]

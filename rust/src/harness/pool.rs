@@ -1,11 +1,14 @@
-//! Work-queue worker pool for the sweep engine: sweep points are
-//! embarrassingly parallel (one simulated REVEL unit each), so they are
-//! dispatched over `std::thread` workers pulling indices off a shared
-//! atomic counter. Results come back in input order regardless of which
-//! worker ran them.
+//! The repo's single scoped worker-pool primitive. Sweep points and
+//! co-simulation shards are both embarrassingly parallel between
+//! synchronization points, so they share one mechanism: [`scope`]
+//! starts `workers` scoped `std::thread` workers pulling boxed jobs off
+//! one shared queue, runs the caller's closure (which submits jobs via
+//! [`Scope::spawn`]), and joins every worker — so returning from
+//! `scope` is a barrier. [`run_parallel`] (the sweep engine's
+//! map-over-items entry point) is a thin layer on top.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
 
 /// Worker count: `REVEL_WORKERS` if set (>0), else the machine's
 /// available parallelism.
@@ -17,6 +20,78 @@ pub fn default_workers() -> usize {
         .unwrap_or_else(|| {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         })
+}
+
+type Job<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+struct Queue<'env> {
+    jobs: VecDeque<Job<'env>>,
+    /// Set when the scope closure has returned: once the queue drains,
+    /// workers exit instead of waiting for more submissions.
+    closed: bool,
+}
+
+/// Handle passed to the [`scope`] closure; submits jobs to the pool.
+pub struct Scope<'env, 'p> {
+    queue: &'p Mutex<Queue<'env>>,
+    work: &'p Condvar,
+    workers: usize,
+}
+
+impl<'env, 'p> Scope<'env, 'p> {
+    /// Submit a job; some worker picks it up in FIFO order. Jobs may
+    /// borrow anything that outlives the `scope` call.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'env) {
+        let mut q = self.queue.lock().unwrap();
+        q.jobs.push_back(Box::new(job));
+        drop(q);
+        self.work.notify_one();
+    }
+
+    /// Number of worker threads serving this scope.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+/// Run `f` with a pool of `workers` scoped threads; every job submitted
+/// through the handle has finished when `scope` returns (the workers
+/// are joined — this is the barrier the cosim shard runner relies on).
+/// A panicking job propagates to the caller via scoped-join semantics;
+/// jobs still queued behind it on other workers are drained normally.
+pub fn scope<'env, R>(
+    workers: usize,
+    f: impl FnOnce(&Scope<'env, '_>) -> R,
+) -> R {
+    let workers = workers.max(1);
+    let queue = Mutex::new(Queue { jobs: VecDeque::new(), closed: false });
+    let work = Condvar::new();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let job = {
+                    let mut q = queue.lock().unwrap();
+                    loop {
+                        if let Some(j) = q.jobs.pop_front() {
+                            break Some(j);
+                        }
+                        if q.closed {
+                            break None;
+                        }
+                        q = work.wait(q).unwrap();
+                    }
+                };
+                match job {
+                    Some(j) => j(),
+                    None => return,
+                }
+            });
+        }
+        let r = f(&Scope { queue: &queue, work: &work, workers });
+        queue.lock().unwrap().closed = true;
+        work.notify_all();
+        r
+    })
 }
 
 /// Run `f` over every item on up to `workers` threads; the returned
@@ -33,17 +108,13 @@ where
     if workers <= 1 || n <= 1 {
         return items.iter().map(&f).collect();
     }
-    let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                *slots[i].lock().unwrap() = Some(r);
+    let f = &f;
+    scope(workers, |s| {
+        for (item, slot) in items.iter().zip(&slots) {
+            s.spawn(move || {
+                let r = f(item);
+                *slot.lock().unwrap() = Some(r);
             });
         }
     });
@@ -56,6 +127,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn results_align_with_input_order() {
@@ -83,5 +155,54 @@ mod tests {
         // With 64 items and 4 workers at least one thread ran something;
         // usually several do. (No strict assertion on >1: scheduling.)
         assert!(!distinct.is_empty());
+    }
+
+    #[test]
+    fn scope_is_a_barrier() {
+        // Every spawned job has run by the time `scope` returns, and
+        // jobs may mutate disjoint borrows of caller state.
+        let mut cells = vec![0usize; 33];
+        scope(4, |s| {
+            for (i, c) in cells.iter_mut().enumerate() {
+                s.spawn(move || *c = i + 1);
+            }
+        });
+        assert!(cells.iter().enumerate().all(|(i, &c)| c == i + 1));
+    }
+
+    #[test]
+    fn scope_supports_sequential_rounds() {
+        // The shard-runner pattern: repeated barriered rounds over the
+        // same mutable state, one fresh scope per round.
+        let mut shards = vec![0u64; 5];
+        for _round in 0..7 {
+            scope(3, |s| {
+                for sh in shards.iter_mut() {
+                    s.spawn(move || *sh += 1);
+                }
+            });
+        }
+        assert!(shards.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn scope_runs_many_jobs_on_few_workers() {
+        let hits = AtomicUsize::new(0);
+        scope(2, |s| {
+            for _ in 0..100 {
+                s.spawn(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "job panic propagates")]
+    fn scope_propagates_job_panics() {
+        scope(2, |s| {
+            s.spawn(|| panic!("job panic propagates"));
+        });
     }
 }

@@ -6,8 +6,11 @@
 //! revel trace <kernel> <n>
 //! revel sweep [--out FILE] [--workers N] [kernel ...]
 //! revel sweep-diff <BASELINE.json> <CURRENT.json> [--tolerance PCT]
-//! revel serve [--engine replay|cosim] [--units N] [--jobs M] [--seed S]
-//!             [--mode open|closed] [--lambda R] [--clients C]
+//! revel serve [--engine replay|cosim] [--cells N] [--units U] [--jobs M]
+//!             [--seed S] [--shards K] [--scaling 1,2,8]
+//!             [--arrival poisson|mmpp|diurnal|replay|closed]
+//!             [--lambda R] [--lambda-lo R] [--lambda-hi R] [--dwell-s T]
+//!             [--period-s T] [--depth D] [--trace FILE] [--clients C]
 //!             [--queue-cap Q] [--admit-cap A] [--slo-deadline-us D]
 //!             [--workers W] [--out FILE]
 //! revel pipeline [jobs] [units]
@@ -15,7 +18,9 @@
 //! ```
 
 use revel::analysis::kernels;
-use revel::coordinator::{ArrivalMode, ClusterConfig, EngineKind, ServeConfig, ServeReport};
+use revel::coordinator::{
+    ArrivalProcess, CellSpec, ClusterSpec, EngineKind, ServeReport,
+};
 use revel::harness;
 use revel::model;
 use revel::report;
@@ -24,11 +29,13 @@ use revel::workloads::{self, Features, Goal};
 /// Render one serve report to stdout (shared by `serve` and the
 /// `pipeline` alias).
 fn print_serve(report: &ServeReport, wall_s: f64) {
+    let units: usize = report.cells.iter().map(|c| c.units).sum();
     println!(
-        "serve[{}]: {} units, {} jobs (seed {}): {} completed, {} dropped, \
-         {} failed, {} deadline-shed",
+        "serve[{}]: {} cells / {} units, {} jobs (seed {}): {} completed, \
+         {} dropped, {} failed, {} deadline-shed",
         report.engine.name(),
-        report.units,
+        report.cells.len(),
+        units,
         report.jobs,
         report.seed,
         report.completed,
@@ -57,15 +64,31 @@ fn print_serve(report: &ServeReport, wall_s: f64) {
         report.slo.latency_us.p99,
         report.slo.queue_us.p99
     );
-    let jobs: Vec<usize> = report.per_unit.iter().map(|u| u.jobs).collect();
-    let stolen: usize = report.per_unit.iter().map(|u| u.stolen).sum();
-    println!("  per-unit jobs {jobs:?}, {stolen} stolen");
+    for (i, c) in report.cells.iter().enumerate() {
+        let jobs: Vec<usize> = c.per_unit.iter().map(|u| u.jobs).collect();
+        let stolen: usize = c.per_unit.iter().map(|u| u.stolen).sum();
+        println!(
+            "  cell {i} [{}]: {} jobs -> {} completed, makespan {:.3} ms, \
+             p99 {:.1} us, per-unit {jobs:?} ({stolen} stolen)",
+            c.arrival.kind(),
+            c.jobs,
+            c.completed,
+            c.makespan_s * 1e3,
+            c.slo.latency_us.p99
+        );
+    }
     println!(
         "  batching: {} distinct stage sims amortized over {} stage executions",
         report.batching.distinct_points, report.batching.stage_runs
     );
     if !report.stage_errors.is_empty() {
         println!("  degraded stages: {:?}", report.stage_errors);
+    }
+    if !report.strong_scaling.0.is_empty() {
+        println!("  strong scaling (host wall; identical results per row):");
+        for row in &report.strong_scaling.0 {
+            println!("    shards {:>2}: {:.2} s", row.shards, row.wall_s);
+        }
     }
     println!("  host wall {wall_s:.2} s");
 }
@@ -335,6 +358,8 @@ fn main() {
             let flag = |name: &str| {
                 args.iter().position(|a| a == name).and_then(|i| args.get(i + 1))
             };
+            let cells_n: usize =
+                flag("--cells").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
             let units: usize =
                 flag("--units").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
             let jobs: usize = flag("--jobs").and_then(|s| s.parse().ok()).unwrap_or(200);
@@ -343,11 +368,46 @@ fn main() {
                 flag("--lambda").and_then(|s| s.parse().ok()).unwrap_or(0.0);
             let clients: usize =
                 flag("--clients").and_then(|s| s.parse().ok()).unwrap_or(2 * units);
-            let mode = match flag("--mode").map(|s| s.as_str()) {
-                None | Some("open") => ArrivalMode::Open { lambda },
-                Some("closed") => ArrivalMode::Closed { clients },
+            // --arrival names the per-cell process; the pre-metro
+            // --mode open|closed stays as an alias.
+            let kind = flag("--arrival")
+                .map(|s| s.as_str())
+                .or_else(|| match flag("--mode").map(|s| s.as_str()) {
+                    Some("open") => Some("poisson"),
+                    other => other,
+                });
+            let arrival = match kind {
+                None | Some("poisson") => ArrivalProcess::Poisson { lambda },
+                Some("mmpp") => ArrivalProcess::Mmpp {
+                    lambda_lo: flag("--lambda-lo")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(500.0),
+                    lambda_hi: flag("--lambda-hi")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(5000.0),
+                    mean_dwell_s: flag("--dwell-s")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(0.01),
+                },
+                Some("diurnal") => ArrivalProcess::Diurnal {
+                    lambda,
+                    period_s: flag("--period-s")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(0.05),
+                    depth: flag("--depth").and_then(|s| s.parse().ok()).unwrap_or(0.5),
+                },
+                Some("replay") => ArrivalProcess::Replay {
+                    path: flag("--trace").cloned().unwrap_or_else(|| {
+                        eprintln!("--arrival replay needs --trace FILE");
+                        std::process::exit(2);
+                    }),
+                },
+                Some("closed") => ArrivalProcess::Closed { clients },
                 Some(other) => {
-                    eprintln!("unknown arrival mode {other} (expected open|closed)");
+                    eprintln!(
+                        "unknown arrival process {other} \
+                         (expected poisson|mmpp|diurnal|replay|closed)"
+                    );
                     std::process::exit(2);
                 }
             };
@@ -359,39 +419,55 @@ fn main() {
                     std::process::exit(2);
                 }
             };
-            let cfg = ServeConfig {
-                jobs,
-                seed,
-                mode,
-                engine,
-                slo_deadline_us: flag("--slo-deadline-us")
-                    .and_then(|s| s.parse::<f64>().ok()),
-                cluster: ClusterConfig {
-                    units,
-                    queue_cap: flag("--queue-cap")
-                        .and_then(|s| s.parse().ok())
-                        .unwrap_or(8),
-                    admit_cap: flag("--admit-cap")
-                        .and_then(|s| s.parse().ok())
-                        .unwrap_or(1024),
-                },
-                workers: flag("--workers").and_then(|s| s.parse::<usize>().ok()),
-                classes: revel::coordinator::CLASSES.to_vec(),
-            };
+            let proto = CellSpec::new(units)
+                .jobs(jobs)
+                .arrival(arrival)
+                .queue_cap(flag("--queue-cap").and_then(|s| s.parse().ok()).unwrap_or(8))
+                .admit_cap(
+                    flag("--admit-cap").and_then(|s| s.parse().ok()).unwrap_or(1024),
+                );
+            let mut spec = ClusterSpec::new(seed)
+                .engine(engine)
+                .slo_deadline_us(
+                    flag("--slo-deadline-us").and_then(|s| s.parse::<f64>().ok()),
+                )
+                .workers(flag("--workers").and_then(|s| s.parse::<usize>().ok()))
+                .cells(cells_n, proto);
+            if let Some(s) = flag("--shards").and_then(|s| s.parse::<usize>().ok()) {
+                spec = spec.shards(s);
+            }
+            // --scaling 1,2,8 re-serves the spec per shard count and
+            // records the informational wall-time rows in the artifact.
+            let scaling: Vec<usize> = flag("--scaling")
+                .map(|s| {
+                    s.split(',').filter_map(|t| t.trim().parse::<usize>().ok()).collect()
+                })
+                .unwrap_or_default();
             let out_path = flag("--out")
                 .cloned()
                 .unwrap_or_else(|| "BENCH_serve.json".to_string());
             let t0 = std::time::Instant::now();
-            let report = revel::coordinator::serve(&cfg).unwrap_or_else(|e| {
+            let result = if scaling.is_empty() {
+                revel::coordinator::serve(&spec)
+            } else {
+                revel::coordinator::strong_scaling(&spec, &scaling)
+            };
+            let report = result.unwrap_or_else(|e| {
                 eprintln!("serve failed: {e}");
                 std::process::exit(1);
             });
             let wall_s = t0.elapsed().as_secs_f64();
             print_serve(&report, wall_s);
             let host_workers =
-                cfg.workers.unwrap_or_else(harness::pool::default_workers);
-            revel::coordinator::write_artifact(&out_path, &report, wall_s, host_workers)
-                .expect("write serve artifact");
+                spec.workers.unwrap_or_else(harness::pool::default_workers);
+            revel::coordinator::write_artifact(
+                &out_path,
+                &report,
+                wall_s,
+                host_workers,
+                spec.effective_shards(),
+            )
+            .expect("write serve artifact");
             println!("wrote {out_path}");
         }
         Some("pipeline") => {
@@ -405,13 +481,9 @@ fn main() {
                 Ok(()) => println!("PJRT golden check: ok"),
                 Err(e) => println!("PJRT golden check skipped: {e}"),
             }
-            let cfg = ServeConfig {
-                jobs,
-                cluster: ClusterConfig { units, ..ClusterConfig::default() },
-                ..ServeConfig::default()
-            };
+            let spec = ClusterSpec::new(7).cell(CellSpec::new(units).jobs(jobs));
             let t0 = std::time::Instant::now();
-            let report = revel::coordinator::serve(&cfg).unwrap_or_else(|e| {
+            let report = revel::coordinator::serve(&spec).unwrap_or_else(|e| {
                 eprintln!("pipeline failed: {e}");
                 std::process::exit(1);
             });
@@ -430,8 +502,11 @@ fn main() {
                    revel trace qr 32\n\
                    revel sweep --out BENCH_sweep.json [--workers 8] [cholesky solver ...]\n\
                    revel sweep-diff baseline.json BENCH_sweep.json [--tolerance 0]\n\
-                   revel serve --units 4 --jobs 200 --seed 7 [--engine replay|cosim]\n\
-                              [--mode open|closed] [--lambda R] [--clients C]\n\
+                   revel serve --cells 4 --units 4 --jobs 200 --seed 7\n\
+                              [--engine replay|cosim] [--shards K] [--scaling 1,2,8]\n\
+                              [--arrival poisson|mmpp|diurnal|replay|closed]\n\
+                              [--lambda R] [--lambda-lo R] [--lambda-hi R] [--dwell-s T]\n\
+                              [--period-s T] [--depth D] [--trace FILE] [--clients C]\n\
                               [--queue-cap 8] [--admit-cap 1024] [--slo-deadline-us D]\n\
                               [--workers W] [--out BENCH_serve.json]\n\
                    revel pipeline [jobs] [units]   (golden check + default serve run)"

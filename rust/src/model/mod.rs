@@ -161,6 +161,15 @@ pub fn handoff_cycles(kernel: &str, n: usize) -> u64 {
     handoff_words(kernel, n).div_ceil(16).max(1)
 }
 
+/// One inter-stage handoff in virtual seconds — the conservative-DES
+/// lookahead bound of the sharded co-simulation: no cross-shard
+/// interaction can take effect sooner than the cheapest handoff, so any
+/// synchronization horizon `>=` this is safe
+/// ([`crate::coordinator::shard`]).
+pub fn handoff_s(kernel: &str, n: usize) -> f64 {
+    cycles_to_us(handoff_cycles(kernel, n)) * 1e-6
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,5 +224,8 @@ mod tests {
         assert_eq!(handoff_cycles("gemm", 12), 9);
         assert_eq!(handoff_cycles("fft", 64), 8);
         assert_eq!(handoff_cycles("fir", 4), 1);
+        // The lookahead bound is the same quantity in virtual seconds.
+        assert_eq!(handoff_s("gemm", 12), cycles_to_us(9) * 1e-6);
+        assert!(handoff_s("fir", 4) > 0.0);
     }
 }

@@ -76,7 +76,7 @@ fn pipeline_points() -> Vec<SweepPoint> {
 /// stage latencies, and throughput scaling of the serving cluster on
 /// one deterministic flood trace.
 pub fn pipeline() -> String {
-    use crate::coordinator::{ArrivalMode, ClusterConfig, ServeConfig};
+    use crate::coordinator::{CellSpec, ClusterSpec};
     let rs = sweep(&pipeline_points());
     let mut t = Table::new(&["class", "stage", "kernel", "n", "cycles", "us"]);
     let mut i = 0;
@@ -97,17 +97,12 @@ pub fn pipeline() -> String {
         "units", "subframes/s", "p50 us", "p99 us", "util", "stolen", "dropped",
     ]);
     for units in [1usize, 2, 4, 8] {
-        let cfg = ServeConfig {
-            jobs: 64,
-            seed: 7,
-            mode: ArrivalMode::Open { lambda: 0.0 },
-            cluster: ClusterConfig { units, ..ClusterConfig::default() },
-            ..ServeConfig::default()
-        };
-        let r = coordinator::serve(&cfg).expect("serve must run");
-        let util = r.per_unit.iter().map(|u| u.utilization).sum::<f64>()
-            / r.per_unit.len().max(1) as f64;
-        let stolen: usize = r.per_unit.iter().map(|u| u.stolen).sum();
+        let spec = ClusterSpec::new(7).cell(CellSpec::new(units).jobs(64));
+        let r = coordinator::serve(&spec).expect("serve must run");
+        let cell = &r.cells[0];
+        let util = cell.per_unit.iter().map(|u| u.utilization).sum::<f64>()
+            / cell.per_unit.len().max(1) as f64;
+        let stolen: usize = cell.per_unit.iter().map(|u| u.stolen).sum();
         sc.row(vec![
             units.to_string(),
             format!("{:.0}", r.throughput_per_s),

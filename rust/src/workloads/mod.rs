@@ -157,7 +157,9 @@ pub struct Prepared {
     pub machine: Machine,
     pub prog: Program,
     /// Checks simulated outputs against the reference; returns max |err|.
-    pub verify: Box<dyn Fn(&Machine) -> Result<f64, String>>,
+    /// `Send + Sync` so a prepared run can migrate to a pool worker —
+    /// the sharded co-simulation advances live machines on pool threads.
+    pub verify: Box<dyn Fn(&Machine) -> Result<f64, String> + Send + Sync>,
     /// Useful FLOPs of the kernel (for utilization metrics).
     pub flops: f64,
     /// Problems solved in this run (8 for throughput versions).

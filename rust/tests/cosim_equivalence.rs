@@ -19,9 +19,13 @@
 //!   and on makespan for symmetric multi-unit floods (`makespan >=
 //!   total work / units`, which is exactly replay's flood makespan).
 //! * **Determinism** — identical inputs give bit-identical runs.
+//! * **Shard invariance** — a multi-cell co-simulated metro produces a
+//!   bit-identical `ServeReport` for every shard count (the shard→
+//!   thread mapping is a host-side concern only), across reruns.
 
 use revel::coordinator::{
-    cluster, cosim, Arrival, ClusterConfig, CosimClass, CosimConfig, SloAccountant,
+    cluster, cosim, Arrival, ArrivalProcess, CellSpec, ClusterConfig, ClusterSpec,
+    CosimClass, CosimConfig, EngineKind, JobClass, SloAccountant, StageSpec,
     StageTask, Workload,
 };
 use revel::harness;
@@ -274,4 +278,86 @@ fn cosim_latencies_dominate_replay_under_contention() {
             assert!(cy.iter().all(|&c| c == cycles("solver", 8)));
         }
     }
+}
+
+/// A two-class mix of small stage points so the live co-simulations
+/// stay cheap (mirrors the serve-layer unit-test mix).
+fn metro_mix() -> Vec<JobClass> {
+    vec![
+        JobClass {
+            name: "lite",
+            stages: [
+                StageSpec { kernel: "solver", n: 8 },
+                StageSpec { kernel: "solver", n: 12 },
+                StageSpec { kernel: "gemm", n: 12 },
+                StageSpec { kernel: "fir", n: 12 },
+            ],
+            weight: 0.7,
+        },
+        JobClass {
+            name: "heavy",
+            stages: [
+                StageSpec { kernel: "solver", n: 16 },
+                StageSpec { kernel: "solver", n: 12 },
+                StageSpec { kernel: "gemm", n: 12 },
+                StageSpec { kernel: "fir", n: 12 },
+            ],
+            weight: 0.3,
+        },
+    ]
+}
+
+/// A four-cell co-simulated metro with heterogeneous arrivals, pinned
+/// to `shards` shards. Cell configs (not just seeds) differ, so a
+/// shard-mapping bug that swaps or reorders cells cannot cancel out.
+fn metro_spec(shards: usize) -> ClusterSpec {
+    ClusterSpec::new(23)
+        .engine(EngineKind::Cosim)
+        .workers(Some(2))
+        .shards(shards)
+        .cell(CellSpec::new(2).jobs(6).job_mix(metro_mix()))
+        .cell(CellSpec::new(1).jobs(6).job_mix(metro_mix()).arrival(
+            ArrivalProcess::Poisson { lambda: 30_000.0 },
+        ))
+        .cell(CellSpec::new(2).jobs(6).job_mix(metro_mix()).arrival(
+            ArrivalProcess::Mmpp {
+                lambda_lo: 5_000.0,
+                lambda_hi: 80_000.0,
+                mean_dwell_s: 1e-4,
+            },
+        ))
+        .cell(CellSpec::new(1).jobs(6).job_mix(metro_mix()).arrival(
+            ArrivalProcess::Closed { clients: 2 },
+        ))
+}
+
+/// The tentpole acceptance pin: sharding is a wall-clock optimization,
+/// never a semantic one. Serving the same four-cell metro with 1, 2,
+/// and 8 shards (8 > cells forces sparse shard groups) must produce
+/// bit-identical reports — per-job completions, per-cell digests, and
+/// the merged SLO digest included — and rerunning any shard count
+/// reproduces the same bits.
+#[test]
+fn metro_report_is_invariant_under_shard_count() {
+    let base = revel::coordinator::serve(&metro_spec(1)).unwrap();
+    assert_eq!(base.cells.len(), 4);
+    assert_eq!(base.completed + base.dropped + base.deadline_shed, 24);
+    assert!(base.completed > 0, "the metro must actually serve jobs");
+    assert!(base.handoffs > 0, "multi-stage cosim jobs hand off");
+    // Per-job records carry their cell tag in fixed cell order.
+    assert!(!base.jobs_detail.is_empty());
+    let mut last_cell = 0;
+    for rec in &base.jobs_detail {
+        assert!(rec.cell >= last_cell, "jobs_detail merges in cell order");
+        last_cell = rec.cell;
+    }
+    for shards in [2usize, 8] {
+        let sharded = revel::coordinator::serve(&metro_spec(shards)).unwrap();
+        assert_eq!(
+            sharded, base,
+            "shards={shards}: report must be bit-identical to shards=1"
+        );
+    }
+    let again = revel::coordinator::serve(&metro_spec(8)).unwrap();
+    assert_eq!(again, base, "rerun at shards=8 must reproduce the same bits");
 }
