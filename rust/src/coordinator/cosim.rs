@@ -26,6 +26,14 @@
 //!   whose predicted completion (calendar lookahead over unit backlogs
 //!   plus the class's service + handoff demand) misses the deadline is
 //!   shed at admission instead of wasting cluster time.
+//! * **Cross-cell coupling** (multi-cell metros only, [`Coupling`]):
+//!   a retiring stage may hand its subframe over the fronthaul to the
+//!   ring-neighbor cell ([`Migrant`]), and a shed arrival may be
+//!   re-offered to the least-backlogged peer before it counts. The
+//!   engine only ever *emits* [`Outbound`] messages; the sharded
+//!   driver ([`super::shard::run_sharded`]) exchanges them at
+//!   conservative horizon barriers, which is what keeps multi-cell
+//!   results bit-identical for every shard count.
 //!
 //! Relationship to replay — pinned by `tests/cosim_equivalence.rs`:
 //! for **single-stage jobs** there are no handoffs and stage
@@ -43,6 +51,7 @@ use std::collections::VecDeque;
 
 use crate::model;
 use crate::sim::Machine;
+use crate::util::Rng;
 use crate::workloads::{self, Features, Goal, Prepared};
 
 use super::calendar::Calendar;
@@ -106,6 +115,94 @@ pub struct CosimConfig {
     pub deadline_s: Option<f64>,
 }
 
+/// Cross-cell coupling of one cell's engine inside a multi-cell
+/// metro ([`super::shard::run_sharded`]): subframe handover to the
+/// ring neighbor and metro-level re-routing of shed arrivals. The
+/// engine never talks to other cells directly — it *emits*
+/// [`Outbound`] messages into an outbox that the sharded driver
+/// collects and delivers at the next conservative horizon barrier, so
+/// every cross-cell event rides the same protocol for every shard
+/// count (including one).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coupling {
+    /// This cell's index in the metro.
+    pub cell: usize,
+    /// Total cells in the metro (handover targets the ring neighbor
+    /// `(cell + 1) % cells`).
+    pub cells: usize,
+    /// Probability that a retiring non-final stage hands the subframe
+    /// over to the neighbor cell instead of the local interconnect.
+    /// Drawn from the cell's dedicated handover seed stream, and only
+    /// when positive — a zero fraction makes zero draws, so uncoupled
+    /// metros stay bit-identical to pre-coupling runs.
+    pub handover_frac: f64,
+    /// Fronthaul traversal latency in virtual seconds — the conserva-
+    /// tive cross-shard lookahead. Must already be floored at the
+    /// [`super::shard::ShardPlan::lookahead_s`] bound by the caller;
+    /// the horizon window must not exceed it (CMB safety).
+    pub fronthaul_s: f64,
+    /// Re-offer SLO-shed and admission-overflowed arrivals to the
+    /// least-backlogged peer (one hop, terminal) before counting them.
+    pub reroute: bool,
+}
+
+impl Coupling {
+    /// The single-cell / uncoupled configuration: no messages are ever
+    /// emitted and no handover randomness is ever drawn.
+    pub fn none() -> Self {
+        Coupling { cell: 0, cells: 1, handover_frac: 0.0, fronthaul_s: 0.0, reroute: false }
+    }
+
+    /// Whether this cell can exchange any cross-cell event at all.
+    pub fn active(&self) -> bool {
+        self.cells > 1 && (self.reroute || self.handover_frac > 0.0)
+    }
+}
+
+/// A subframe mid-chain in flight over the fronthaul: everything the
+/// receiving cell needs to resume the job at its next stage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Migrant {
+    pub id: u64,
+    pub class: usize,
+    pub arrival_s: f64,
+    /// Service start of the first stage (in the source cell) — carried
+    /// so end-to-end latency stays honest across the handover.
+    pub start_s: f64,
+    pub stolen: bool,
+    /// Next stage index to run in the receiving cell. Class indices
+    /// are only meaningful when every cell serves the same job mix —
+    /// the serve layer enforces that whenever handover is enabled.
+    pub stage: usize,
+    /// Live-measured cycles of the stages already completed upstream.
+    pub cycles: Vec<u64>,
+}
+
+/// One cross-cell event payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Subframe handover: the job's remaining stages run at the
+    /// destination cell.
+    Migrate(Migrant),
+    /// An arrival shed here, re-offered to the least-backlogged peer.
+    Shed(Arrival),
+}
+
+/// An outbound cross-cell message, parked in the sender's outbox until
+/// the sharded driver drains it at a horizon barrier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Outbound {
+    /// Destination cell. `None` means "least-backlogged peer" — the
+    /// driver resolves it at the barrier, so the routing decision uses
+    /// horizon-consistent metro state instead of whatever the sender
+    /// happened to see mid-window.
+    pub dst: Option<usize>,
+    /// Delivery time: send time + fronthaul latency. With the window
+    /// bounded by the fronthaul this is never in the receiver's past.
+    pub t_s: f64,
+    pub msg: Msg,
+}
+
 /// Outcome of one co-simulated run. `completions` (and the aligned
 /// `stage_cycles`) are ordered by service start, exactly like
 /// [`super::cluster::ClusterRun::completions`].
@@ -141,6 +238,21 @@ pub struct CosimRun {
     /// Virtual seconds handoffs waited for the interconnect — the
     /// cross-unit contention replay cannot model.
     pub bus_wait_s: f64,
+    /// Subframes handed over to a neighbor cell mid-chain (egress).
+    pub migrated_out: usize,
+    /// Subframes received from a neighbor cell mid-chain (ingress).
+    pub migrated_in: usize,
+    /// Shed arrivals re-offered to a peer instead of counted here.
+    pub rerouted_out: usize,
+    /// Re-offered arrivals received from a peer (their outcome —
+    /// completion or a now-terminal shed — is accounted in this cell).
+    pub rerouted_in: usize,
+    /// Cross-cell messages delivered with a timestamp behind this
+    /// cell's clock. Always zero when the horizon window respects the
+    /// fronthaul lookahead; the canary suite drives it positive with a
+    /// deliberately oversized window to prove the bound is
+    /// load-bearing.
+    pub causality_violations: usize,
     /// Mid-run stage failures, rendered (normally empty).
     pub stage_errors: Vec<String>,
 }
@@ -157,6 +269,14 @@ struct Job {
     /// Position in the global service-start order (completions sort on
     /// it, matching replay's push-at-start ordering).
     start_ord: u64,
+    /// `start_ord` has been assigned (first local stage started).
+    /// Local jobs take their ordinal at stage 0 exactly as before;
+    /// migrants enter mid-chain and take a fresh ordinal here.
+    ord_set: bool,
+    /// This job entered the cell over the fronthaul (migrant or
+    /// re-offered arrival). Foreign departures never free a *local*
+    /// closed-loop client.
+    foreign: bool,
     /// Any stage of this job ran via work stealing.
     stolen: bool,
     /// Live-measured cycles of completed stages.
@@ -209,6 +329,12 @@ enum Ev {
     /// Job `usize`'s inter-stage handoff leaves the shared
     /// interconnect; its next stage enters dispatch.
     BusDone(usize),
+    /// A subframe lands from a neighbor cell (fronthaul traversal
+    /// done); its next stage enters dispatch here.
+    MigrateIn(Migrant),
+    /// A shed arrival re-offered by a peer lands here. Terminal: a
+    /// second shed counts locally, it is never re-offered again.
+    Rerouted(Arrival),
 }
 
 struct Engine<'a> {
@@ -242,6 +368,25 @@ struct Engine<'a> {
     handoffs: usize,
     bus_busy_s: f64,
     bus_wait_s: f64,
+    /// Cross-cell role of this cell, plus the dedicated handover seed
+    /// stream (separate from trace synthesis so enabling coupling
+    /// never perturbs arrival randomness).
+    coupling: Coupling,
+    hand_rng: Rng,
+    /// Cross-cell messages emitted since the last barrier drain.
+    outbox: Vec<Outbound>,
+    migrated_out: usize,
+    migrated_in: usize,
+    rerouted_out: usize,
+    rerouted_in: usize,
+    /// Local jobs that left this cell over the fronthaul — the closed
+    /// loop resubmits on egress (the client's slot frees when its job
+    /// leaves the cell), mirroring `mid_run_deaths`.
+    local_egress: usize,
+    /// Latest event timestamp popped from the calendar; deliveries
+    /// behind it are causality violations.
+    last_t: f64,
+    causality_violations: usize,
     stage_errors: Vec<String>,
 }
 
@@ -338,7 +483,9 @@ impl Engine<'_> {
         match workloads::prepare(&kernel, n, Features::ALL, Goal::Latency) {
             Err(e) => {
                 self.failed += 1;
-                self.mid_run_deaths += 1;
+                if !self.jobs[j].foreign {
+                    self.mid_run_deaths += 1;
+                }
                 self.stage_errors
                     .push(format!("cosim: {kernel} n={n} failed to prepare: {e}"));
             }
@@ -348,6 +495,12 @@ impl Engine<'_> {
                 let job = &mut self.jobs[j];
                 if job.stage == 0 {
                     job.start_s = now;
+                }
+                if !job.ord_set {
+                    // First local stage: local jobs hit this at stage 0
+                    // (identical ordinals to the uncoupled engine),
+                    // migrants at whatever stage they resume at.
+                    job.ord_set = true;
                     job.start_ord = self.next_ord;
                     self.next_ord += 1;
                 }
@@ -424,7 +577,9 @@ impl Engine<'_> {
                 );
                 self.stage_errors.push(msg);
                 self.failed += 1;
-                self.mid_run_deaths += 1;
+                if !self.jobs[j].foreign {
+                    self.mid_run_deaths += 1;
+                }
                 self.units[u].run = None;
                 self.dispatch_free(u, now);
             }
@@ -433,9 +588,12 @@ impl Engine<'_> {
 
     /// Retire unit `u`'s finished stage: account its live-measured
     /// cycles, verify its functional outputs, hand the subframe to the
-    /// shared interconnect (or complete it after its last stage), and
-    /// put the freed unit back to work. Returns whether a job
-    /// completed (the closed-loop workload resubmits on completions).
+    /// shared interconnect — or over the fronthaul to the neighbor
+    /// cell, when the handover draw fires — or complete it after its
+    /// last stage, and put the freed unit back to work. Returns
+    /// whether a *locally submitted* job completed (the closed-loop
+    /// client it frees resubmits; a migrant's completion belongs to
+    /// its source cell's loop, which already resubmitted on egress).
     fn on_stage_done(&mut self, u: usize, t: f64) -> bool {
         let Some(active) = self.units[u].run.take() else { return false };
         let Active { job: j, machine, verify, start_s: _, done } = active;
@@ -448,7 +606,9 @@ impl Engine<'_> {
         match verdict {
             Err(e) => {
                 self.failed += 1;
-                self.mid_run_deaths += 1;
+                if !self.jobs[j].foreign {
+                    self.mid_run_deaths += 1;
+                }
                 let job = &self.jobs[j];
                 self.stage_errors.push(format!(
                     "cosim: job {} stage {} failed verification: {e}",
@@ -459,7 +619,17 @@ impl Engine<'_> {
                 self.jobs[j].cycles.push(cycles);
                 let nstages = self.class_of(j).stages.len();
                 if self.jobs[j].stage + 1 < nstages {
-                    self.request_handoff(j, finish);
+                    // The handover stream is only consulted when a
+                    // positive fraction is configured, so uncoupled
+                    // runs make zero draws and stay bit-identical.
+                    if self.coupling.handover_frac > 0.0
+                        && self.coupling.active()
+                        && self.hand_rng.f64() < self.coupling.handover_frac
+                    {
+                        self.migrate_out(j, finish);
+                    } else {
+                        self.request_handoff(j, finish);
+                    }
                 } else {
                     let job = &self.jobs[j];
                     let comp = Completion {
@@ -475,12 +645,61 @@ impl Engine<'_> {
                         self.makespan_s = finish;
                     }
                     self.done_jobs.push((job.start_ord, comp, job.cycles.clone()));
-                    completed = true;
+                    completed = !job.foreign;
                 }
             }
         }
         self.dispatch_free(u, finish);
         completed
+    }
+
+    /// Hand job `j` over to the ring neighbor: its remaining stages
+    /// run there after one fronthaul traversal. The fronthaul is a
+    /// dedicated point-to-point link with fixed latency — the local
+    /// shared interconnect is not involved, so a handover frees the
+    /// bus slot an intra-cell handoff would have taken.
+    fn migrate_out(&mut self, j: usize, now: f64) {
+        self.migrated_out += 1;
+        let job = &self.jobs[j];
+        if !job.foreign {
+            self.local_egress += 1;
+        }
+        let m = Migrant {
+            id: job.id,
+            class: job.class,
+            arrival_s: job.arrival_s,
+            start_s: job.start_s,
+            stolen: job.stolen,
+            stage: job.stage + 1,
+            cycles: job.cycles.clone(),
+        };
+        self.outbox.push(Outbound {
+            dst: Some((self.coupling.cell + 1) % self.coupling.cells),
+            t_s: now + self.coupling.fronthaul_s,
+            msg: Msg::Migrate(m),
+        });
+    }
+
+    /// A migrant landed: resume it at its carried stage. Mid-chain
+    /// stages bypass admission (the job was admitted at its source
+    /// cell), exactly like a local job between stages.
+    fn on_migrate_in(&mut self, m: Migrant, now: f64) {
+        self.migrated_in += 1;
+        let j = self.jobs.len();
+        self.jobs.push(Job {
+            id: m.id,
+            class: m.class,
+            arrival_s: m.arrival_s,
+            stage: m.stage,
+            start_s: m.start_s,
+            start_ord: 0,
+            ord_set: false,
+            foreign: true,
+            stolen: m.stolen,
+            cycles: m.cycles,
+        });
+        let assigned = self.try_assign(j, now);
+        debug_assert!(assigned, "mid-job stages always find a queue");
     }
 
     fn request_handoff(&mut self, j: usize, now: f64) {
@@ -539,17 +758,47 @@ impl Engine<'_> {
         best_wait + admitted / self.units.len() as f64 + demand
     }
 
+    /// An admission decision went against arrival `a`: re-offer it to
+    /// the metro when this cell may (reroute enabled, first hop), else
+    /// count it locally — `deadline_shed` for an SLO miss, `dropped`
+    /// for admission overflow. Returns whether the arrival died at
+    /// this cell's door.
+    fn shed(&mut self, a: Arrival, now: f64, rerouted: bool, slo: bool) -> bool {
+        if self.coupling.reroute && !rerouted && self.coupling.active() {
+            self.rerouted_out += 1;
+            self.local_egress += 1;
+            self.outbox.push(Outbound {
+                dst: None,
+                t_s: now + self.coupling.fronthaul_s,
+                msg: Msg::Shed(a),
+            });
+            false
+        } else if slo {
+            self.deadline_shed += 1;
+            true
+        } else {
+            self.dropped += 1;
+            false
+        }
+    }
+
     /// Returns whether the arrival died at the door (degraded class or
     /// SLO shed) — the closed-loop workload resubmits those.
-    fn on_arrive(&mut self, a: Arrival, now: f64) -> bool {
+    /// `rerouted` marks an arrival re-offered by a peer: it already
+    /// burned fronthaul time (`now > a.t_s`, charged against the
+    /// deadline) and a second shed is terminal.
+    fn on_arrive(&mut self, a: Arrival, now: f64, rerouted: bool) -> bool {
         if self.classes.get(a.class).and_then(|c| c.as_ref()).is_none() {
             self.failed += 1;
             return true;
         }
         if let Some(dl) = self.deadline_s {
-            if self.predict_latency(a.class, now) > dl {
-                self.deadline_shed += 1;
-                return true;
+            // Elapsed-since-arrival plus predicted completion. Local
+            // arrivals pop at exactly `a.t_s`, so the elapsed term is
+            // exactly zero and the predicate is unchanged from the
+            // uncoupled engine.
+            if (now - a.t_s) + self.predict_latency(a.class, now) > dl {
+                return self.shed(a, now, rerouted, true);
             }
         }
         let j = self.jobs.len();
@@ -560,6 +809,8 @@ impl Engine<'_> {
             stage: 0,
             start_s: 0.0,
             start_ord: 0,
+            ord_set: false,
+            foreign: rerouted,
             stolen: false,
             cycles: Vec::new(),
         });
@@ -569,10 +820,10 @@ impl Engine<'_> {
         if self.admission.len() < self.cfg.admit_cap {
             self.admission.push_back(j);
             self.peak_admit_queue = self.peak_admit_queue.max(self.admission.len());
+            false
         } else {
-            self.dropped += 1;
+            self.shed(a, now, rerouted, false)
         }
-        false
     }
 
     /// Move admission-queue jobs into freed run-queue slots, in FIFO
@@ -621,6 +872,7 @@ pub struct CosimSession<'a> {
     closed: bool,
     first_arrival: Option<f64>,
     seen_deaths: usize,
+    seen_egress: usize,
     pick: Box<dyn FnMut() -> usize + Send + 'a>,
 }
 
@@ -632,12 +884,28 @@ fn _cosim_session_is_send(s: CosimSession<'static>) -> impl Send {
 impl<'a> CosimSession<'a> {
     /// Build the session and schedule the workload's initial arrivals.
     /// Same inputs as [`run`]; the class picker must be `Send` so the
-    /// session can advance on a pool thread.
+    /// session can advance on a pool thread. Uncoupled: the cell never
+    /// emits or receives cross-cell events.
     pub fn new(
         cfg: &CosimConfig,
         classes: &'a [Option<CosimClass>],
         workload: Workload<'_>,
         pick_class: impl FnMut() -> usize + Send + 'a,
+    ) -> Self {
+        Self::with_coupling(cfg, classes, workload, pick_class, Coupling::none(), Rng::new(0))
+    }
+
+    /// [`CosimSession::new`] plus a cross-cell role: `coupling` names
+    /// this cell's place in the metro and `hand_rng` seeds its
+    /// dedicated handover stream (unused — zero draws — unless
+    /// `coupling.handover_frac > 0`).
+    pub fn with_coupling(
+        cfg: &CosimConfig,
+        classes: &'a [Option<CosimClass>],
+        workload: Workload<'_>,
+        pick_class: impl FnMut() -> usize + Send + 'a,
+        coupling: Coupling,
+        hand_rng: Rng,
     ) -> Self {
         // Live stages run real kernels; make sure the watchdog budget
         // covers the legitimately long ones (the harness's budget).
@@ -668,6 +936,16 @@ impl<'a> CosimSession<'a> {
             handoffs: 0,
             bus_busy_s: 0.0,
             bus_wait_s: 0.0,
+            coupling,
+            hand_rng,
+            outbox: Vec::new(),
+            migrated_out: 0,
+            migrated_in: 0,
+            rerouted_out: 0,
+            rerouted_in: 0,
+            local_egress: 0,
+            last_t: f64::NEG_INFINITY,
+            causality_violations: 0,
             stage_errors: Vec::new(),
         };
         let mut s = CosimSession {
@@ -677,6 +955,7 @@ impl<'a> CosimSession<'a> {
             closed: false,
             first_arrival: None,
             seen_deaths: 0,
+            seen_egress: 0,
             pick: Box::new(pick_class),
         };
         match workload {
@@ -716,10 +995,13 @@ impl<'a> CosimSession<'a> {
     /// because events an event creates never precede their creator.
     pub fn advance_to(&mut self, horizon: f64) -> bool {
         while let Some((now, ev)) = self.eng.cal.pop_before(horizon) {
+            if now > self.eng.last_t {
+                self.eng.last_t = now;
+            }
             let resubmit = match ev {
                 Ev::Arrive(a) => {
                     self.first_arrival.get_or_insert(now);
-                    let dead = self.eng.on_arrive(a, now);
+                    let dead = self.eng.on_arrive(a, now, false);
                     self.closed && dead
                 }
                 Ev::Step(u) => {
@@ -734,16 +1016,32 @@ impl<'a> CosimSession<'a> {
                     self.eng.on_bus_done(j, now);
                     false
                 }
+                Ev::MigrateIn(m) => {
+                    self.eng.on_migrate_in(m, now);
+                    false
+                }
+                Ev::Rerouted(a) => {
+                    self.eng.rerouted_in += 1;
+                    // A foreign arrival's death never frees a local
+                    // closed-loop client; its source cell already
+                    // resubmitted on egress.
+                    self.eng.on_arrive(a, now, true);
+                    false
+                }
             };
             // Closed loop: a client resubmits when its job leaves the
-            // system — on completion, on a dead arrival, and also when
-            // a job dies mid-run (stage prepare/simulate/verify
-            // failure), so failures never silently starve the loop.
+            // system — on completion, on a dead arrival, when a job
+            // dies mid-run (stage prepare/simulate/verify failure),
+            // and when its job leaves the cell over the fronthaul
+            // (handover or re-route egress) — so neither failures nor
+            // migration ever silently starve the loop.
             let mut want = usize::from(resubmit);
             if self.closed {
                 want += self.eng.mid_run_deaths - self.seen_deaths;
+                want += self.eng.local_egress - self.seen_egress;
             }
             self.seen_deaths = self.eng.mid_run_deaths;
+            self.seen_egress = self.eng.local_egress;
             while want > 0 && self.remaining > 0 {
                 let class = (self.pick)();
                 self.eng.cal.push(
@@ -756,6 +1054,48 @@ impl<'a> CosimSession<'a> {
             }
         }
         self.eng.cal.is_empty()
+    }
+
+    /// Take every cross-cell message emitted since the last drain, in
+    /// emit order. The sharded driver calls this at each horizon
+    /// barrier; a coupled session advanced without draining would
+    /// silently lose its cross-cell traffic, so only drive coupled
+    /// sessions through [`super::shard::run_sharded`].
+    pub fn drain_outbox(&mut self) -> Vec<Outbound> {
+        std::mem::take(&mut self.eng.outbox)
+    }
+
+    /// Deliver a cross-cell message into this cell's calendar at its
+    /// fronthaul arrival time. A delivery behind the cell's clock is
+    /// counted as a causality violation (and processed anyway, late) —
+    /// impossible while the horizon window respects the fronthaul
+    /// lookahead, and exactly what the canary suite provokes to prove
+    /// that bound is load-bearing.
+    pub fn deliver(&mut self, out: Outbound) {
+        if out.t_s < self.eng.last_t {
+            self.eng.causality_violations += 1;
+        }
+        match out.msg {
+            Msg::Migrate(m) => self.eng.cal.push(out.t_s, Ev::MigrateIn(m)),
+            Msg::Shed(a) => self.eng.cal.push(out.t_s, Ev::Rerouted(a)),
+        }
+    }
+
+    /// Predicted backlog seconds across the whole cell at `now`: every
+    /// unit's in-service remainder and queue, plus the admission
+    /// queue's demand. The sharded driver ranks cells by this at
+    /// horizon barriers to route re-offered arrivals to the
+    /// least-backlogged peer with horizon-consistent state.
+    pub fn backlog_s(&self, now: f64) -> f64 {
+        let e = &self.eng;
+        let units: f64 = (0..e.units.len()).map(|u| e.load(u, now)).sum();
+        let admitted: f64 = e
+            .admission
+            .iter()
+            .filter_map(|&j| e.classes[e.jobs[j].class].as_ref())
+            .map(CosimClass::demand_s)
+            .sum();
+        units + admitted
     }
 
     /// Seal the run: sort completions into service-start order and
@@ -777,6 +1117,11 @@ impl<'a> CosimSession<'a> {
             handoffs: eng.handoffs,
             bus_busy_s: eng.bus_busy_s,
             bus_wait_s: eng.bus_wait_s,
+            migrated_out: eng.migrated_out,
+            migrated_in: eng.migrated_in,
+            rerouted_out: eng.rerouted_out,
+            rerouted_in: eng.rerouted_in,
+            causality_violations: eng.causality_violations,
             stage_errors: eng.stage_errors,
         };
         // Events pop in time order, so the first Arrive seen is the

@@ -29,8 +29,10 @@
 //! * [`shard`] — the conservative parallel driver for multi-cell
 //!   co-simulation: per-cell [`cosim::CosimSession`]s advance on
 //!   worker-pool threads between synchronization horizons bounded by
-//!   the [`crate::model::handoff_s`] lookahead; results are
-//!   bit-identical for every shard count.
+//!   the fronthaul lookahead (floored at
+//!   [`crate::model::handoff_s`]), exchanging cross-cell messages
+//!   (subframe handover, shed re-routing — [`cosim::Coupling`]) at
+//!   the barriers; results are bit-identical for every shard count.
 //! * [`arrival`] — typed per-cell arrival processes: Poisson, bursty
 //!   MMPP, diurnal, recorded-trace replay, and closed client loops.
 //! * [`slo`] — the latency accountant (p50/p95/p99/mean/max digests
@@ -39,8 +41,9 @@
 //!   [`serve::CellSpec`] metro API: per-cell trace synthesis (seeded
 //!   via [`crate::util::Rng`] and [`serve::cell_seed`]), the batched
 //!   stage pre-simulation through the [`crate::harness`] memo cache,
-//!   engine selection (`--engine replay|cosim`), and the
-//!   `BENCH_serve.json` artifact (schema v3: multi-cell).
+//!   engine selection (`--engine replay|cosim`), cross-cell coupling
+//!   knobs (`--handover-frac`, `--fronthaul-us`, `--reroute`), and the
+//!   `BENCH_serve.json` artifact (schema v4: multi-cell + coupling).
 //!
 //! Every stage kernel is functionally simulated and verified, so the
 //! pipeline doubles as an end-to-end correctness test of the whole
@@ -59,7 +62,10 @@ pub mod slo;
 pub use arrival::ArrivalProcess;
 pub use calendar::Calendar;
 pub use cluster::{Arrival, ClusterConfig, ClusterRun, Completion, UnitStats, Workload};
-pub use cosim::{CosimClass, CosimConfig, CosimRun, CosimSession, StageTask};
+pub use cosim::{
+    CosimClass, CosimConfig, CosimRun, CosimSession, Coupling, Migrant, Msg, Outbound,
+    StageTask,
+};
 pub use serve::{
     cell_seed, read_artifact, serve, strong_scaling, write_artifact, Batching,
     CellReport, CellSpec, ClassReport, ClusterSpec, EngineKind, HostOnly, JobRecord,

@@ -23,6 +23,16 @@
 //! never changes results: only the `host` block of the artifact (wall
 //! clock, worker/shard counts, strong-scaling rows) varies between
 //! runs.
+//!
+//! Cross-cell coupling (co-sim metros only): [`CellSpec::handover_frac`]
+//! migrates that fraction of inter-stage handoffs to the ring neighbor
+//! over a modeled fronthaul link, and [`ClusterSpec::reroute`] re-offers
+//! shed arrivals to the least-backlogged peer before they count as
+//! `deadline_shed`/`dropped`. The resolved fronthaul latency
+//! (`--fronthaul-us`, default [`DEFAULT_FRONTHAUL_US`], floored at the
+//! union mix's [`ShardPlan::lookahead_s`]) becomes the cross-shard
+//! lookahead of [`ShardPlan::for_metro`] — the Chandy–Misra–Bryant
+//! bound that keeps coupled runs bit-identical for every shard count.
 
 use std::sync::Arc;
 
@@ -34,7 +44,7 @@ use crate::workloads::{Features, Goal};
 
 use super::arrival::ArrivalProcess;
 use super::cluster::{self, Arrival, ClusterConfig, Completion, Workload};
-use super::cosim::{CosimClass, CosimConfig, CosimSession, StageTask};
+use super::cosim::{CosimClass, CosimConfig, CosimSession, Coupling, StageTask};
 use super::shard::{self, ShardPlan};
 use super::slo::{Pctls, SloAccountant, SloDigest};
 use super::{JobClass, CLASSES, STAGE_NAMES};
@@ -43,6 +53,17 @@ use super::{JobClass, CLASSES, STAGE_NAMES};
 /// jobs metro-wide (they exist to make determinism diffable and
 /// replayable, not to bloat disk).
 pub const DETAIL_CAP: usize = 1024;
+
+/// Default one-way fronthaul latency between neighboring cells, in
+/// virtual microseconds (metro dark-fiber scale — orders of magnitude
+/// above any intra-cell interconnect handoff). Used when a coupled
+/// spec leaves [`ClusterSpec::fronthaul_us`] unset; always floored at
+/// the union mix's [`ShardPlan::lookahead_s`] before use.
+pub const DEFAULT_FRONTHAUL_US: f64 = 50.0;
+
+/// Salt XORed into [`cell_seed`] for the per-cell handover coin-flip
+/// stream, so migration draws never correlate with trace synthesis.
+const HANDOVER_SALT: u64 = 0x4841_4E44_4F56_4552; // "HANDOVER"
 
 /// Which cluster engine serves the traces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -91,6 +112,10 @@ pub struct CellSpec {
     pub arrival: ArrivalProcess,
     /// Subframe classes in this cell's traffic mix.
     pub job_mix: Vec<JobClass>,
+    /// Fraction of this cell's inter-stage boundaries that hand the
+    /// subframe over to the ring-neighbor cell (co-sim metros only;
+    /// drawn from a dedicated per-cell seed stream). 0 = no handover.
+    pub handover_frac: f64,
 }
 
 impl Default for CellSpec {
@@ -103,6 +128,7 @@ impl Default for CellSpec {
             jobs: 200,
             arrival: ArrivalProcess::default(),
             job_mix: CLASSES.to_vec(),
+            handover_frac: 0.0,
         }
     }
 }
@@ -137,6 +163,11 @@ impl CellSpec {
         self
     }
 
+    pub fn handover_frac(mut self, frac: f64) -> Self {
+        self.handover_frac = frac;
+        self
+    }
+
     /// The normalized cluster policy this cell actually runs with.
     fn cluster_config(&self) -> ClusterConfig {
         ClusterConfig {
@@ -166,6 +197,15 @@ pub struct ClusterSpec {
     /// per cell, capped at the host's worker default). Results are
     /// bit-identical for every value; only wall time varies.
     pub shards: Option<usize>,
+    /// One-way fronthaul latency between neighboring cells, in virtual
+    /// microseconds (`None` = [`DEFAULT_FRONTHAUL_US`]). Only read by
+    /// coupled co-sim metros; always floored at the union mix's
+    /// [`ShardPlan::lookahead_s`].
+    pub fronthaul_us: Option<f64>,
+    /// Re-offer SLO/queue-shed arrivals to the least-backlogged peer
+    /// cell (one hop over the fronthaul) before counting them as
+    /// `deadline_shed`/`dropped`. Co-sim metros only.
+    pub reroute: bool,
     /// The cells of the metro, in fixed cell order.
     pub cells: Vec<CellSpec>,
 }
@@ -178,6 +218,8 @@ impl Default for ClusterSpec {
             slo_deadline_us: None,
             workers: None,
             shards: None,
+            fronthaul_us: None,
+            reroute: false,
             cells: vec![CellSpec::default()],
         }
     }
@@ -210,6 +252,16 @@ impl ClusterSpec {
         self
     }
 
+    pub fn fronthaul_us(mut self, us: Option<f64>) -> Self {
+        self.fronthaul_us = us;
+        self
+    }
+
+    pub fn reroute(mut self, on: bool) -> Self {
+        self.reroute = on;
+        self
+    }
+
     /// Append one cell.
     pub fn cell(mut self, cell: CellSpec) -> Self {
         self.cells.push(cell);
@@ -226,6 +278,14 @@ impl ClusterSpec {
     /// length only at serve time).
     pub fn jobs(&self) -> usize {
         self.cells.iter().map(|c| c.jobs).sum()
+    }
+
+    /// Whether this spec couples its cells: more than one cell with
+    /// handover or re-routing enabled. Coupling needs the co-sim
+    /// engine; [`serve`] rejects coupling knobs under replay.
+    pub fn coupled(&self) -> bool {
+        self.cells.len() > 1
+            && (self.reroute || self.cells.iter().any(|c| c.handover_frac > 0.0))
     }
 
     /// The shard count a co-simulated run of this spec would use.
@@ -324,6 +384,8 @@ pub struct CellReport {
     /// Jobs this cell's trace offered (resolved length for replay).
     pub jobs: usize,
     pub arrival: ArrivalProcess,
+    /// Echo of [`CellSpec::handover_frac`].
+    pub handover_frac: f64,
     // -- outcome --
     pub completed: usize,
     pub dropped: usize,
@@ -336,6 +398,17 @@ pub struct CellReport {
     pub handoffs: usize,
     /// Virtual seconds handoffs waited for the cell's interconnect.
     pub bus_wait_s: f64,
+    /// Subframes this cell handed over to its ring neighbor (fronthaul
+    /// egress; coupled co-sim metros only).
+    pub migrated_out: usize,
+    /// Subframes that arrived mid-chain from a neighbor (fronthaul
+    /// ingress).
+    pub migrated_in: usize,
+    /// Shed arrivals this cell re-offered to a peer instead of
+    /// counting them as `deadline_shed`/`dropped`.
+    pub rerouted_out: usize,
+    /// Re-offered arrivals this cell received from peers.
+    pub rerouted_in: usize,
     pub peak_admit_queue: usize,
     /// Virtual seconds from this cell's first arrival to its last
     /// pipeline exit.
@@ -357,6 +430,12 @@ pub struct ServeReport {
     pub engine: EngineKind,
     /// Echo of [`ClusterSpec::slo_deadline_us`].
     pub slo_deadline_us: Option<f64>,
+    /// Resolved one-way fronthaul latency in virtual microseconds
+    /// (spec value or [`DEFAULT_FRONTHAUL_US`], after the lookahead
+    /// floor); `None` for uncoupled runs.
+    pub fronthaul_us: Option<f64>,
+    /// Echo of [`ClusterSpec::reroute`].
+    pub reroute: bool,
     /// Total jobs offered across all cells.
     pub jobs: usize,
     /// Per-cell reports, in cell order.
@@ -368,6 +447,11 @@ pub struct ServeReport {
     pub deadline_shed: usize,
     pub handoffs: usize,
     pub bus_wait_s: f64,
+    /// Metro-wide subframe handovers (sum of per-cell `migrated_out`;
+    /// every migrant lands, so ingress sums to the same number).
+    pub migrations: usize,
+    /// Metro-wide shed re-offers (sum of per-cell `rerouted_out`).
+    pub reroutes: usize,
     pub peak_admit_queue: usize,
     /// Max over cell makespans (cells start at virtual t = 0).
     pub makespan_s: f64,
@@ -551,6 +635,10 @@ struct EngineOut {
     deadline_shed: usize,
     handoffs: usize,
     bus_wait_s: f64,
+    migrated_out: usize,
+    migrated_in: usize,
+    rerouted_out: usize,
+    rerouted_in: usize,
     units: Vec<cluster::UnitStats>,
     makespan_s: f64,
     peak_admit_queue: usize,
@@ -571,9 +659,42 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
         if cell.job_mix.is_empty() {
             return Err(RtError(format!("serve: cell {i} has no job classes")));
         }
+        if !(0.0..=1.0).contains(&cell.handover_frac) {
+            return Err(RtError(format!(
+                "serve: cell {i}: handover_frac {} is outside [0, 1]",
+                cell.handover_frac
+            )));
+        }
         cell.arrival
             .validate()
             .map_err(|e| RtError(format!("serve: cell {i}: {e}")))?;
+    }
+    let wants_coupling =
+        spec.reroute || spec.cells.iter().any(|c| c.handover_frac > 0.0);
+    if wants_coupling && spec.engine != EngineKind::Cosim {
+        return Err(RtError(
+            "serve: cross-cell coupling (--handover-frac / --reroute) \
+             requires the cosim engine"
+                .into(),
+        ));
+    }
+    if let Some(us) = spec.fronthaul_us {
+        if !(us.is_finite() && us > 0.0) {
+            return Err(RtError(format!(
+                "serve: fronthaul latency {us} us is not a positive finite value"
+            )));
+        }
+    }
+    if spec.coupled() {
+        // Cross-cell messages carry class *indices*; they only mean
+        // the same thing everywhere if every cell runs the same mix.
+        if spec.cells.iter().any(|c| c.job_mix != spec.cells[0].job_mix) {
+            return Err(RtError(
+                "serve: cross-cell coupling requires an identical job_mix \
+                 in every cell (migrants carry class indices)"
+                    .into(),
+            ));
+        }
     }
     harness::ensure_budget();
     // One batched pre-simulation over the union of every cell's mix;
@@ -621,8 +742,10 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
         preps.push(Prep { cl: cell.cluster_config(), cycles, service, cum, rng, trace, clients, jobs });
     }
 
-    let outs: Vec<EngineOut> = match spec.engine {
-        EngineKind::Replay => preps
+    // `fronthaul_us` is the resolved cross-cell latency (None when the
+    // spec is uncoupled) — echoed into the report and the v4 artifact.
+    let (outs, fronthaul_us): (Vec<EngineOut>, Option<f64>) = match spec.engine {
+        EngineKind::Replay => (preps
             .iter_mut()
             .map(|p| {
                 let Prep { cl, service, cum, rng, trace, clients, jobs, .. } = p;
@@ -645,13 +768,17 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
                     deadline_shed: 0,
                     handoffs: 0,
                     bus_wait_s: 0.0,
+                    migrated_out: 0,
+                    migrated_in: 0,
+                    rerouted_out: 0,
+                    rerouted_in: 0,
                     units: r.units,
                     makespan_s: r.makespan_s,
                     peak_admit_queue: r.peak_admit_queue,
                     extra_errors: Vec::new(),
                 }
             })
-            .collect(),
+            .collect(), None),
         EngineKind::Cosim => {
             // Per-class stage chains with profiled estimates (the same
             // memoized cycles replay consumes); a degraded class maps
@@ -683,11 +810,33 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
                 .collect();
             let union: Vec<Option<CosimClass>> =
                 tables.iter().flatten().cloned().collect();
-            let plan = ShardPlan::for_mix(spec.effective_shards(), &union);
+            // Coupled metros window rounds by the fronthaul latency —
+            // the CMB lookahead that makes horizon exchange safe — so
+            // it is floored at the mix's conservative lookahead.
+            let fronthaul_s = if spec.coupled() {
+                let f = spec.fronthaul_us.unwrap_or(DEFAULT_FRONTHAUL_US) * 1e-6;
+                Some(f.max(ShardPlan::lookahead_s(&union)))
+            } else {
+                None
+            };
+            let plan =
+                ShardPlan::for_metro(spec.effective_shards(), &union, fronthaul_s);
             let deadline_s = spec.slo_deadline_us.map(|us| us * 1e-6);
+            let cells_n = spec.cells.len();
             let mut sessions: Vec<CosimSession<'_>> = Vec::new();
-            for (p, table) in preps.iter_mut().zip(&tables) {
+            for (i, (p, table)) in preps.iter_mut().zip(&tables).enumerate() {
                 let ccfg = CosimConfig { cluster: p.cl.clone(), deadline_s };
+                let coupling = match fronthaul_s {
+                    Some(f) => Coupling {
+                        cell: i,
+                        cells: cells_n,
+                        handover_frac: spec.cells[i].handover_frac,
+                        fronthaul_s: f,
+                        reroute: spec.reroute,
+                    },
+                    None => Coupling::none(),
+                };
+                let hand_rng = Rng::new(cell_seed(spec.seed, i) ^ HANDOVER_SALT);
                 let workload = match (p.trace.as_deref(), p.clients) {
                     (Some(t), _) => Workload::Open(t),
                     (None, clients) => Workload::Closed {
@@ -699,25 +848,40 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
                 // pool threads), so it owns its RNG and weights.
                 let mut rng = std::mem::replace(&mut p.rng, Rng::new(0));
                 let cum = p.cum.clone();
-                sessions.push(CosimSession::new(&ccfg, table, workload, move || {
-                    pick_weighted(&mut rng, &cum)
-                }));
+                sessions.push(CosimSession::with_coupling(
+                    &ccfg,
+                    table,
+                    workload,
+                    move || pick_weighted(&mut rng, &cum),
+                    coupling,
+                    hand_rng,
+                ));
             }
-            shard::run_sharded(sessions, &plan)
+            let outs = shard::run_sharded(sessions, &plan)
                 .into_iter()
-                .map(|r| EngineOut {
-                    completions: r.completions,
-                    dropped: r.dropped,
-                    failed: r.failed,
-                    deadline_shed: r.deadline_shed,
-                    handoffs: r.handoffs,
-                    bus_wait_s: r.bus_wait_s,
-                    units: r.units,
-                    makespan_s: r.makespan_s,
-                    peak_admit_queue: r.peak_admit_queue,
-                    extra_errors: r.stage_errors,
+                .map(|r| {
+                    // serve() never shrinks the horizon below the
+                    // fronthaul bound, so no message can arrive late.
+                    debug_assert_eq!(r.causality_violations, 0);
+                    EngineOut {
+                        completions: r.completions,
+                        dropped: r.dropped,
+                        failed: r.failed,
+                        deadline_shed: r.deadline_shed,
+                        handoffs: r.handoffs,
+                        bus_wait_s: r.bus_wait_s,
+                        migrated_out: r.migrated_out,
+                        migrated_in: r.migrated_in,
+                        rerouted_out: r.rerouted_out,
+                        rerouted_in: r.rerouted_in,
+                        units: r.units,
+                        makespan_s: r.makespan_s,
+                        peak_admit_queue: r.peak_admit_queue,
+                        extra_errors: r.stage_errors,
+                    }
                 })
-                .collect()
+                .collect();
+            (outs, fronthaul_s.map(|f| f * 1e6))
         }
     };
 
@@ -784,12 +948,17 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
             admit_cap: p.cl.admit_cap,
             jobs: p.jobs,
             arrival: spec.cells[i].arrival.clone(),
+            handover_frac: spec.cells[i].handover_frac,
             completed,
             dropped: out.dropped,
             failed: out.failed,
             deadline_shed: out.deadline_shed,
             handoffs: out.handoffs,
             bus_wait_s: out.bus_wait_s,
+            migrated_out: out.migrated_out,
+            migrated_in: out.migrated_in,
+            rerouted_out: out.rerouted_out,
+            rerouted_in: out.rerouted_in,
             peak_admit_queue: out.peak_admit_queue,
             makespan_s: out.makespan_s,
             throughput_per_s: throughput,
@@ -804,6 +973,8 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
         seed: spec.seed,
         engine: spec.engine,
         slo_deadline_us: spec.slo_deadline_us,
+        fronthaul_us,
+        reroute: spec.reroute,
         jobs: total_jobs,
         completed,
         dropped: cells.iter().map(|c| c.dropped).sum(),
@@ -811,6 +982,8 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
         deadline_shed: cells.iter().map(|c| c.deadline_shed).sum(),
         handoffs: cells.iter().map(|c| c.handoffs).sum(),
         bus_wait_s: cells.iter().map(|c| c.bus_wait_s).sum(),
+        migrations: cells.iter().map(|c| c.migrated_out).sum(),
+        reroutes: cells.iter().map(|c| c.rerouted_out).sum(),
         peak_admit_queue: cells.iter().map(|c| c.peak_admit_queue).max().unwrap_or(0),
         makespan_s,
         throughput_per_s: if makespan_s > 0.0 { completed as f64 / makespan_s } else { 0.0 },
@@ -1084,13 +1257,13 @@ fn outcome_from_json(v: &Json) -> std::result::Result<OutcomeFields, String> {
 }
 
 impl ServeReport {
-    /// Build the `BENCH_serve.json` document (schema version 3:
-    /// multi-cell). Everything except the `host` block is
-    /// deterministic in the serve spec.
+    /// Build the `BENCH_serve.json` document (schema version 4:
+    /// multi-cell + cross-cell coupling). Everything except the `host`
+    /// block is deterministic in the serve spec.
     pub fn to_json(&self, host_wall_s: f64, host_workers: usize, host_shards: usize) -> Json {
         Json::obj(vec![
             ("schema", Json::Str("revel-bench-serve".into())),
-            ("version", Json::Num(3.0)),
+            ("version", Json::Num(4.0)),
             ("freq_ghz", Json::Num(model::FREQ_GHZ)),
             (
                 "config",
@@ -1104,6 +1277,14 @@ impl ServeReport {
                             Some(us) => Json::Num(us),
                         },
                     ),
+                    (
+                        "fronthaul_us",
+                        match self.fronthaul_us {
+                            None => Json::Null,
+                            Some(us) => Json::Num(us),
+                        },
+                    ),
+                    ("reroute", Json::Bool(self.reroute)),
                     ("jobs", Json::Num(self.jobs as f64)),
                     (
                         "cells",
@@ -1117,6 +1298,10 @@ impl ServeReport {
                                         ("admit_cap", Json::Num(c.admit_cap as f64)),
                                         ("jobs", Json::Num(c.jobs as f64)),
                                         ("arrival", c.arrival.to_json()),
+                                        (
+                                            "handover_frac",
+                                            Json::Num(c.handover_frac),
+                                        ),
                                     ])
                                 })
                                 .collect(),
@@ -1172,20 +1357,25 @@ impl ServeReport {
             ),
             (
                 "summary",
-                Json::obj(outcome_to_json(
-                    &OutcomeFields {
-                        completed: self.completed,
-                        dropped: self.dropped,
-                        failed: self.failed,
-                        deadline_shed: self.deadline_shed,
-                        handoffs: self.handoffs,
-                        bus_wait_s: self.bus_wait_s,
-                        peak_admit_queue: self.peak_admit_queue,
-                        makespan_s: self.makespan_s,
-                        throughput_per_s: self.throughput_per_s,
-                    },
-                    &self.slo,
-                )),
+                Json::obj({
+                    let mut kv = outcome_to_json(
+                        &OutcomeFields {
+                            completed: self.completed,
+                            dropped: self.dropped,
+                            failed: self.failed,
+                            deadline_shed: self.deadline_shed,
+                            handoffs: self.handoffs,
+                            bus_wait_s: self.bus_wait_s,
+                            peak_admit_queue: self.peak_admit_queue,
+                            makespan_s: self.makespan_s,
+                            throughput_per_s: self.throughput_per_s,
+                        },
+                        &self.slo,
+                    );
+                    kv.push(("migrations", Json::Num(self.migrations as f64)));
+                    kv.push(("reroutes", Json::Num(self.reroutes as f64)));
+                    kv
+                }),
             ),
             (
                 // Keyed by pipeline *position* (STAGE_NAMES slot labels):
@@ -1215,6 +1405,16 @@ impl ServeReport {
                                 },
                                 &c.slo,
                             );
+                            kv.push((
+                                "migrated_out",
+                                Json::Num(c.migrated_out as f64),
+                            ));
+                            kv.push(("migrated_in", Json::Num(c.migrated_in as f64)));
+                            kv.push((
+                                "rerouted_out",
+                                Json::Num(c.rerouted_out as f64),
+                            ));
+                            kv.push(("rerouted_in", Json::Num(c.rerouted_in as f64)));
                             kv.push(("stage_us", stage_us_to_json(&c.slo)));
                             kv.push(("per_unit", per_unit_to_json(&c.per_unit)));
                             kv.push(("classes", classes_to_json(&c.classes)));
@@ -1245,8 +1445,9 @@ impl ServeReport {
     /// intentionally dropped — it is the only nondeterministic part of
     /// the artifact). Pre-metro artifacts (schema versions 1/2: flat
     /// `config.units`/`config.mode`, no `per_cell`) parse as a
-    /// one-cell metro, so every recorded `BENCH_serve.json` stays
-    /// readable and replayable.
+    /// one-cell metro, and pre-coupling v3 artifacts parse with the
+    /// coupling counters zeroed, so every recorded `BENCH_serve.json`
+    /// stays readable and replayable.
     pub fn from_json(v: &Json) -> std::result::Result<ServeReport, String> {
         let err = |f: &str| format!("BENCH_serve document missing/invalid {f:?}");
         let cfg = v.get("config").ok_or_else(|| err("config"))?;
@@ -1263,6 +1464,13 @@ impl ServeReport {
             None | Some(Json::Null) => None,
             Some(v) => Some(v.as_f64().ok_or_else(|| err("slo_deadline_us"))?),
         };
+        // Coupling fields arrived with schema v4; older artifacts parse
+        // as uncoupled.
+        let fronthaul_us = match cfg.get("fronthaul_us") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or_else(|| err("fronthaul_us"))?),
+        };
+        let reroute = cfg.get("reroute").and_then(Json::as_bool).unwrap_or(false);
         let jobs = cfg.get("jobs").and_then(Json::as_usize).ok_or_else(|| err("jobs"))?;
         let slo = slo_from_json(summary, v.get("stage_us").ok_or_else(|| err("stage_us"))?)?;
         let metro = outcome_from_json(summary)?;
@@ -1283,6 +1491,8 @@ impl ServeReport {
                     let cnum =
                         |k: &str| cc.get(k).and_then(Json::as_usize).ok_or_else(|| err(k));
                     let o = outcome_from_json(oc)?;
+                    let cnt =
+                        |k: &str| oc.get(k).and_then(Json::as_usize).unwrap_or(0);
                     Ok(CellReport {
                         units: cnum("units")?,
                         queue_cap: cnum("queue_cap")?,
@@ -1291,12 +1501,20 @@ impl ServeReport {
                         arrival: ArrivalProcess::from_json(
                             cc.get("arrival").ok_or_else(|| err("arrival"))?,
                         )?,
+                        handover_frac: cc
+                            .get("handover_frac")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0),
                         completed: o.completed,
                         dropped: o.dropped,
                         failed: o.failed,
                         deadline_shed: o.deadline_shed,
                         handoffs: o.handoffs,
                         bus_wait_s: o.bus_wait_s,
+                        migrated_out: cnt("migrated_out"),
+                        migrated_in: cnt("migrated_in"),
+                        rerouted_out: cnt("rerouted_out"),
+                        rerouted_in: cnt("rerouted_in"),
                         peak_admit_queue: o.peak_admit_queue,
                         makespan_s: o.makespan_s,
                         throughput_per_s: o.throughput_per_s,
@@ -1333,12 +1551,17 @@ impl ServeReport {
                 admit_cap: cnum("admit_cap")?,
                 jobs,
                 arrival,
+                handover_frac: 0.0,
                 completed: metro.completed,
                 dropped: metro.dropped,
                 failed: metro.failed,
                 deadline_shed: metro.deadline_shed,
                 handoffs: metro.handoffs,
                 bus_wait_s: metro.bus_wait_s,
+                migrated_out: 0,
+                migrated_in: 0,
+                rerouted_out: 0,
+                rerouted_in: 0,
                 peak_admit_queue: metro.peak_admit_queue,
                 makespan_s: metro.makespan_s,
                 throughput_per_s: metro.throughput_per_s,
@@ -1371,6 +1594,8 @@ impl ServeReport {
             seed,
             engine,
             slo_deadline_us,
+            fronthaul_us,
+            reroute,
             jobs,
             cells,
             completed: metro.completed,
@@ -1379,6 +1604,11 @@ impl ServeReport {
             deadline_shed: metro.deadline_shed,
             handoffs: metro.handoffs,
             bus_wait_s: metro.bus_wait_s,
+            migrations: summary
+                .get("migrations")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            reroutes: summary.get("reroutes").and_then(Json::as_usize).unwrap_or(0),
             peak_admit_queue: metro.peak_admit_queue,
             makespan_s: metro.makespan_s,
             throughput_per_s: metro.throughput_per_s,
@@ -1510,8 +1740,8 @@ mod tests {
         assert!(back.strong_scaling.0.is_empty());
         assert_eq!(
             doc.get("version").and_then(Json::as_u64),
-            Some(3),
-            "multi-cell schema version"
+            Some(4),
+            "multi-cell + coupling schema version"
         );
     }
 
@@ -1662,6 +1892,59 @@ mod tests {
         assert_eq!(back, r, "host block drops; everything else round-trips");
         assert_eq!(back.engine, EngineKind::Cosim);
         assert_eq!(back.slo_deadline_us, Some(1e9));
+    }
+
+    #[test]
+    fn coupling_knobs_validate_and_roundtrip() {
+        let cell = || CellSpec::new(1).jobs(5).job_mix(cheap_classes());
+        // Coupling knobs under replay are an error, not a silent no-op.
+        let replayed = ClusterSpec::new(7).reroute(true).cells(2, cell());
+        assert!(serve(&replayed).is_err());
+        // Migrants carry class indices: mixes must match across cells.
+        let uneven = ClusterSpec::new(7)
+            .workers(Some(2))
+            .engine(EngineKind::Cosim)
+            .cell(cell().handover_frac(0.5))
+            .cell(cell().job_mix(vec![cheap_classes()[0]]));
+        assert!(serve(&uneven).is_err());
+        // handover_frac is a probability.
+        let out_of_range = ClusterSpec::new(7)
+            .engine(EngineKind::Cosim)
+            .cells(2, cell().handover_frac(1.5));
+        assert!(serve(&out_of_range).is_err());
+        let bad_fronthaul = ClusterSpec::new(7)
+            .engine(EngineKind::Cosim)
+            .fronthaul_us(Some(-1.0))
+            .cells(2, cell().handover_frac(0.5));
+        assert!(serve(&bad_fronthaul).is_err());
+
+        // A coupled metro serves, counts its cross-cell traffic, and
+        // its v4 artifact round-trips bit-exactly.
+        let coupled = ClusterSpec::new(7)
+            .workers(Some(2))
+            .engine(EngineKind::Cosim)
+            .reroute(true)
+            .cells(2, cell().handover_frac(1.0));
+        let r = serve(&coupled).unwrap();
+        assert!(r.migrations > 0, "handover_frac=1 migrates every boundary");
+        assert_eq!(
+            r.migrations,
+            r.cells.iter().map(|c| c.migrated_in).sum::<usize>(),
+            "every migrant lands somewhere"
+        );
+        // The resolved echo is the default link (well above the
+        // lookahead floor), modulo the us <-> s unit round-trip.
+        let fh = r.fronthaul_us.expect("coupled runs echo the fronthaul");
+        assert!((fh - DEFAULT_FRONTHAUL_US).abs() < 1e-6, "{fh}");
+        assert_eq!(
+            r.completed + r.dropped + r.failed + r.deadline_shed,
+            10,
+            "coupling conserves jobs metro-wide"
+        );
+        let back = read_artifact(&r.to_json(0.5, 2, 1).pretty()).unwrap();
+        assert_eq!(back, r);
+        assert!(back.reroute);
+        assert_eq!(back.cells[0].handover_frac, 1.0);
     }
 
     /// Render `r` (a one-cell report) in the legacy flat schema the

@@ -1,45 +1,55 @@
 //! Sharded co-simulation: conservative parallel DES over per-cell
-//! [`super::cosim::CosimSession`]s.
+//! [`super::cosim::CosimSession`]s, with cross-cell coupling.
 //!
 //! A metro-scale serve run holds N cells, each a full co-simulated
 //! cluster on its own calendar. Cells are partitioned into `shards`
-//! by the **fixed** mapping `cell -> cell % shards`, and each shard
-//! advances its cells on a worker-pool thread
-//! ([`crate::harness::pool::scope`]) between conservative
-//! synchronization horizons:
+//! contiguous groups, and each shard advances its cells on a
+//! worker-pool thread ([`crate::harness::pool::scope`]) between
+//! conservative synchronization horizons:
 //!
 //! ```text
 //!   round k:   barrier ── every shard drains its cells' calendars
-//!              up to horizon h_k (strictly-before, FIFO intact) ── barrier
-//!   round k+1: h_{k+1} = earliest pending event + window
+//!              up to horizon h_k (strictly-before, FIFO intact)
+//!              ── barrier ── exchange cross-cell messages, in cell
+//!              order ── repeat with h_{k+1} = earliest pending + W
 //! ```
 //!
-//! **Why any horizon is safe.** Classic conservative (CMB-style)
-//! parallel simulation may only process an event once no other shard
-//! can still send one earlier; the distance other shards must respect
-//! is the *lookahead*. Here the cheapest cross-cluster interaction is
-//! one inter-stage handoff on a shared interconnect, so the lookahead
-//! bound is `min` [`crate::model::handoff_s`] over the mix's stage
-//! chains ([`ShardPlan::lookahead_s`]), and [`ShardPlan`] asserts the
-//! window respects that floor. Today's cells exchange **no** events —
-//! each is an independent traffic domain — so every horizon is
-//! trivially conservative and the window only trades barrier overhead
-//! against merge granularity; the lookahead floor is what becomes
-//! load-bearing the day cross-cell coupling (inter-cell handover,
-//! fronthaul sharing) lands.
+//! **Why the window bound is the fronthaul latency.** Classic
+//! conservative (Chandy–Misra–Bryant) parallel simulation may only
+//! process an event once no other shard can still send one earlier;
+//! the distance other shards must respect is the *lookahead*. With
+//! cross-cell coupling ([`super::cosim::Coupling`]) the cheapest
+//! inter-cell interaction is one fronthaul traversal of latency `F`:
+//! a message emitted while round `k` processes events in
+//! `[earliest_k, h_k)` is stamped `t_send + F >= earliest_k + F`, so
+//! with window `W = h_k - earliest_k <= F` every delivery lands at or
+//! after `h_k` — in the receiver's strict future, because
+//! `pop_before` is strictly-before. [`ShardPlan::for_metro`] sets
+//! `W = F` exactly (the largest safe window); `F` itself is floored
+//! at the mix's cheapest [`crate::model::handoff_s`] (a fronthaul
+//! cannot beat the on-die interconnect), which is the
+//! [`ShardPlan::lookahead_s`] bound. An uncoupled metro exchanges no
+//! events, so any window is safe and [`ShardPlan::for_mix`] picks a
+//! coarse one (one longest-job demand) purely for barrier economy.
 //!
 //! **Why results are bit-deterministic under any shard→thread
-//! mapping.** Each session is deterministic in (cell config, seed) and
-//! touches no shared mutable state; shards only decide *where* a cell
-//! advances, never *what* it observes. The runner returns runs in cell
-//! order, and the serve layer merges them in that same fixed order —
-//! so artifacts are byte-identical across `shards` ∈ {1, 2, 8, …},
-//! pinned by `tests/cosim_equivalence.rs` and the CI serve-smoke diff.
+//! mapping.** Horizons are computed globally (the minimum pending
+//! event over *all* cells), sessions share no state while a round
+//! runs, and cross-cell messages are exchanged only at barriers, in
+//! canonical order — source cell order, emit order within a source —
+//! for every shard count including one. Shards only decide *where* a
+//! cell advances, never *what* it observes. The runner returns runs
+//! in cell order and the serve layer merges them in that same fixed
+//! order, so artifacts are byte-identical across `shards` ∈ {1, 2,
+//! 8, …}, pinned by `tests/cosim_equivalence.rs`, `tests/coupling.rs`
+//! (which also proves the bound is *load-bearing* via
+//! [`ShardPlan::with_unchecked_horizon`]), and the CI serve-smoke
+//! diffs.
 
 use crate::harness::pool;
 use crate::model;
 
-use super::cosim::{CosimClass, CosimRun, CosimSession};
+use super::cosim::{CosimClass, CosimRun, CosimSession, Outbound};
 
 /// How a multi-cell co-simulation is driven: shard count plus the
 /// horizon window, with the conservative lookahead floor it respects.
@@ -47,18 +57,25 @@ use super::cosim::{CosimClass, CosimRun, CosimSession};
 pub struct ShardPlan {
     /// Worker shards (clamped to the cell count by the runner).
     pub shards: usize,
-    /// Virtual seconds per synchronization window.
+    /// Virtual seconds per synchronization window. For a coupled
+    /// metro this must not exceed `lookahead_s` (it is set equal);
+    /// uncoupled metros may use any window.
     pub horizon_s: f64,
-    /// Conservative-DES lookahead bound: the cheapest inter-stage
-    /// handoff in the mix. `horizon_s >= lookahead_s` always.
+    /// Conservative-DES lookahead bound: the fronthaul latency for a
+    /// coupled metro, else the cheapest inter-stage handoff in the
+    /// mix. Always finite and positive.
     pub lookahead_s: f64,
 }
 
 impl ShardPlan {
     /// Minimum virtual seconds before any cross-cluster interaction
     /// could take effect: the cheapest handoff a multi-stage chain in
-    /// `mix` puts on a shared interconnect, floored at one bus cycle
-    /// when the mix has no handoffs at all.
+    /// `mix` puts on a shared interconnect. **Floor contract:** the
+    /// result is always finite and at least one bus cycle
+    /// (`model::cycles_to_us(1) * 1e-6`) — an empty mix, an all-`None`
+    /// (fully degraded) mix, or a mix of single-stage chains has no
+    /// handoffs at all, and the floor keeps the plan finite instead of
+    /// panicking or degenerating to a zero/∞ window.
     pub fn lookahead_s(mix: &[Option<CosimClass>]) -> f64 {
         let one_cycle = model::cycles_to_us(1) * 1e-6;
         mix.iter()
@@ -69,56 +86,103 @@ impl ShardPlan {
             .max(one_cycle)
     }
 
-    /// Plan for `shards` workers over a metro whose union job mix is
-    /// `mix`: the window is one longest-job's demand — coarse enough
-    /// that a run takes a handful of windows, well above the lookahead
-    /// floor (asserted).
+    /// Plan for `shards` workers over an **uncoupled** metro whose
+    /// union job mix is `mix`: cells exchange no events, so the window
+    /// is one longest-job's demand — coarse enough that a run takes a
+    /// handful of windows, and clamped back to the (finite, positive)
+    /// lookahead floor if the mix's demand estimates are degenerate
+    /// (empty, all-`None`, or non-finite `est_s`).
     pub fn for_mix(shards: usize, mix: &[Option<CosimClass>]) -> ShardPlan {
         let lookahead_s = Self::lookahead_s(mix);
-        let horizon_s = mix
+        let demand = mix
             .iter()
             .flatten()
             .map(CosimClass::demand_s)
-            .fold(0.0f64, f64::max)
-            .max(lookahead_s);
+            .fold(0.0f64, f64::max);
+        let horizon_s =
+            if demand.is_finite() { demand.max(lookahead_s) } else { lookahead_s };
         assert!(
             horizon_s >= lookahead_s,
             "horizon {horizon_s} violates the conservative lookahead {lookahead_s}"
         );
         ShardPlan { shards: shards.max(1), horizon_s, lookahead_s }
     }
+
+    /// Plan for a **coupled** metro: cells exchange fronthaul messages
+    /// of latency `fronthaul_s`, so the conservative window is exactly
+    /// that latency — the largest window that still delivers every
+    /// message in its receiver's future (see the module docs for the
+    /// bound). `fronthaul_s` must be the *effective* latency messages
+    /// actually traverse, already floored at the mix's
+    /// [`ShardPlan::lookahead_s`] (the serve layer does this once and
+    /// hands the same value to [`super::cosim::Coupling`]).
+    /// `None` means uncoupled and delegates to [`ShardPlan::for_mix`].
+    pub fn for_metro(
+        shards: usize,
+        mix: &[Option<CosimClass>],
+        fronthaul_s: Option<f64>,
+    ) -> ShardPlan {
+        let Some(f) = fronthaul_s else { return Self::for_mix(shards, mix) };
+        let floor = Self::lookahead_s(mix);
+        assert!(
+            f.is_finite() && f >= floor,
+            "fronthaul {f} must be finite and >= the lookahead floor {floor}"
+        );
+        ShardPlan { shards: shards.max(1), horizon_s: f, lookahead_s: f }
+    }
+
+    /// **Test-only escape hatch**: replace the window with one that
+    /// may violate the conservative lookahead bound, bypassing every
+    /// safety assertion. A coupled metro driven with `horizon_s >
+    /// lookahead_s` delivers fronthaul messages into receivers' pasts
+    /// — counted as `causality_violations` and processed late — and
+    /// its reports diverge from a correctly-windowed run. The canary
+    /// suite (`tests/coupling.rs`) uses exactly this to prove the
+    /// bound is load-bearing rather than vacuous. Never use outside
+    /// tests.
+    pub fn with_unchecked_horizon(mut self, horizon_s: f64) -> ShardPlan {
+        self.horizon_s = horizon_s;
+        self
+    }
 }
 
 /// Drive every cell session to completion under `plan` and return the
 /// per-cell runs **in cell order** (index-aligned with `sessions`).
-/// Bit-identical for any `plan.shards` and any window: sessions never
-/// interact, and within a cell events replay in single-timeline order.
+///
+/// Rounds alternate compute and exchange: all sessions advance to the
+/// global horizon (in parallel across shards), then — at the barrier —
+/// every outbox is drained in cell order and delivered. Re-offered
+/// arrivals (`dst: None`) are routed here, to the cell with the least
+/// [`CosimSession::backlog_s`] at the horizon (ties to the lowest
+/// index), so the routing decision is made on horizon-consistent
+/// metro state identically for every shard count.
+///
+/// Bit-identical for any `plan.shards`: the exchange happens at the
+/// same virtual times with the same canonical ordering whether one
+/// thread advances every cell or eight threads advance one each.
 pub fn run_sharded(sessions: Vec<CosimSession<'_>>, plan: &ShardPlan) -> Vec<CosimRun> {
-    struct Slot<'a> {
-        cell: usize,
-        session: CosimSession<'a>,
-        drained: bool,
-    }
+    let mut sessions = sessions;
     let n = sessions.len();
     let shards = plan.shards.max(1).min(n.max(1));
-    let window =
-        if plan.horizon_s.is_finite() && plan.horizon_s > 0.0 { plan.horizon_s } else { f64::INFINITY };
-    // Fixed cell→shard mapping: round-robin by cell index. Results do
-    // not depend on it (cells are independent); only wall time does.
-    let mut groups: Vec<Vec<Slot<'_>>> = (0..shards).map(|_| Vec::new()).collect();
-    for (cell, session) in sessions.into_iter().enumerate() {
-        groups[cell % shards].push(Slot { cell, session, drained: false });
-    }
+    let window = if plan.horizon_s.is_finite() && plan.horizon_s > 0.0 {
+        plan.horizon_s
+    } else {
+        f64::INFINITY
+    };
+    // Fixed cell→shard mapping: contiguous chunks of the cell vector
+    // (cells [0, c), [c, 2c), …). Results do not depend on it — only
+    // where a cell advances does — and chunked borrows let the barrier
+    // code below address every session by cell index between rounds.
+    let chunk = n.max(1).div_ceil(shards);
     loop {
-        // Next horizon: one window past the earliest pending event, so
-        // every round retires at least one event and the loop is
-        // guaranteed to terminate (no event is ever scheduled in its
-        // creator's past).
-        let earliest = groups
+        // Next horizon: one window past the earliest pending event
+        // metro-wide, so every round retires at least one event and
+        // the loop terminates (no event is ever scheduled in its
+        // creator's past, and cross-cell messages always land at or
+        // after the horizon that produced them).
+        let earliest = sessions
             .iter()
-            .flat_map(|g| g.iter())
-            .filter(|s| !s.drained)
-            .filter_map(|s| s.session.next_time())
+            .filter_map(|s| s.next_time())
             .fold(f64::INFINITY, f64::min);
         if !earliest.is_finite() {
             break;
@@ -126,26 +190,51 @@ pub fn run_sharded(sessions: Vec<CosimSession<'_>>, plan: &ShardPlan) -> Vec<Cos
         let horizon = earliest + window;
         if shards == 1 {
             // One shard is the single-timeline engine, on this thread.
-            for slot in groups[0].iter_mut().filter(|s| !s.drained) {
-                slot.drained = slot.session.advance_to(horizon);
+            for session in sessions.iter_mut() {
+                session.advance_to(horizon);
             }
         } else {
             pool::scope(shards, |s| {
-                for group in groups.iter_mut() {
+                for group in sessions.chunks_mut(chunk) {
                     s.spawn(move || {
-                        for slot in group.iter_mut().filter(|s| !s.drained) {
-                            slot.drained = slot.session.advance_to(horizon);
+                        for session in group.iter_mut() {
+                            session.advance_to(horizon);
                         }
                     });
                 }
             });
         }
+        // Horizon barrier: exchange cross-cell messages in canonical
+        // order — source cell order, emit order within a source. The
+        // delivery schedule is therefore a pure function of the
+        // virtual timeline, independent of the shard→thread mapping.
+        let mut msgs: Vec<(usize, Outbound)> = Vec::new();
+        for (cell, session) in sessions.iter_mut().enumerate() {
+            for out in session.drain_outbox() {
+                msgs.push((cell, out));
+            }
+        }
+        for (src, out) in msgs {
+            let dst = out.dst.unwrap_or_else(|| {
+                // Least-backlogged peer at the horizon; ties break to
+                // the lowest cell index.
+                let mut best: Option<(f64, usize)> = None;
+                for (c, session) in sessions.iter().enumerate() {
+                    if c == src {
+                        continue;
+                    }
+                    let b = session.backlog_s(horizon);
+                    match best {
+                        Some((bb, _)) if b >= bb => {}
+                        _ => best = Some((b, c)),
+                    }
+                }
+                best.map_or(src, |(_, c)| c)
+            });
+            sessions[dst].deliver(out);
+        }
     }
-    let mut out: Vec<Option<CosimRun>> = (0..n).map(|_| None).collect();
-    for slot in groups.into_iter().flatten() {
-        out[slot.cell] = Some(slot.session.finish());
-    }
-    out.into_iter().map(|r| r.expect("every cell ran")).collect()
+    sessions.into_iter().map(|s| s.finish()).collect()
 }
 
 #[cfg(test)]
@@ -192,6 +281,47 @@ mod tests {
             ShardPlan::lookahead_s(&single),
             model::cycles_to_us(1) * 1e-6
         );
+    }
+
+    #[test]
+    fn degenerate_mixes_floor_at_one_finite_bus_cycle() {
+        let one_cycle = model::cycles_to_us(1) * 1e-6;
+        // Empty and fully-degraded (all-None) mixes: no chains at all.
+        for mix in [Vec::new(), vec![None, None]] {
+            assert_eq!(ShardPlan::lookahead_s(&mix), one_cycle);
+            let plan = ShardPlan::for_mix(3, &mix);
+            assert_eq!(plan.horizon_s, one_cycle, "window floors at one bus cycle");
+            assert_eq!(plan.lookahead_s, one_cycle);
+            assert!(plan.horizon_s.is_finite() && plan.horizon_s > 0.0);
+        }
+        // Non-finite demand estimates clamp back to the floor instead
+        // of poisoning the window (∞ would disable coupling safety).
+        let bad = vec![Some(CosimClass {
+            stages: vec![StageTask {
+                kernel: "solver".into(),
+                n: 8,
+                est_s: f64::INFINITY,
+            }],
+        })];
+        let plan = ShardPlan::for_mix(2, &bad);
+        assert!(plan.horizon_s.is_finite());
+        assert_eq!(plan.horizon_s, one_cycle);
+    }
+
+    #[test]
+    fn metro_plan_windows_exactly_the_fronthaul() {
+        let mix = mix();
+        let floor = ShardPlan::lookahead_s(&mix);
+        let f = floor.max(50e-6);
+        let plan = ShardPlan::for_metro(4, &mix, Some(f));
+        assert_eq!(plan.horizon_s, f, "coupled window == fronthaul latency");
+        assert_eq!(plan.lookahead_s, f);
+        // Uncoupled delegates to the coarse for_mix window.
+        assert_eq!(ShardPlan::for_metro(4, &mix, None), ShardPlan::for_mix(4, &mix));
+        // The canary hook really does bypass the bound.
+        let canary = plan.with_unchecked_horizon(f * 64.0);
+        assert_eq!(canary.horizon_s, f * 64.0);
+        assert_eq!(canary.lookahead_s, f);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! revel sweep-diff <BASELINE.json> <CURRENT.json> [--tolerance PCT]
 //! revel serve [--engine replay|cosim] [--cells N] [--units U] [--jobs M]
 //!             [--seed S] [--shards K] [--scaling 1,2,8]
+//!             [--handover-frac F] [--fronthaul-us T] [--reroute]
 //!             [--arrival poisson|mmpp|diurnal|replay|closed]
 //!             [--lambda R] [--lambda-lo R] [--lambda-hi R] [--dwell-s T]
 //!             [--period-s T] [--depth D] [--trace FILE] [--clients C]
@@ -49,6 +50,14 @@ fn print_serve(report: &ServeReport, wall_s: f64) {
              (contention replay cannot see)",
             report.handoffs,
             report.bus_wait_s * 1e6
+        );
+    }
+    if let Some(fh) = report.fronthaul_us {
+        println!(
+            "  fronthaul ({fh:.1} us/hop): {} handovers, {} shed re-routes{}",
+            report.migrations,
+            report.reroutes,
+            if report.reroute { "" } else { " (reroute off)" }
         );
     }
     println!(
@@ -425,6 +434,9 @@ fn main() {
                 .queue_cap(flag("--queue-cap").and_then(|s| s.parse().ok()).unwrap_or(8))
                 .admit_cap(
                     flag("--admit-cap").and_then(|s| s.parse().ok()).unwrap_or(1024),
+                )
+                .handover_frac(
+                    flag("--handover-frac").and_then(|s| s.parse().ok()).unwrap_or(0.0),
                 );
             let mut spec = ClusterSpec::new(seed)
                 .engine(engine)
@@ -432,6 +444,8 @@ fn main() {
                     flag("--slo-deadline-us").and_then(|s| s.parse::<f64>().ok()),
                 )
                 .workers(flag("--workers").and_then(|s| s.parse::<usize>().ok()))
+                .fronthaul_us(flag("--fronthaul-us").and_then(|s| s.parse::<f64>().ok()))
+                .reroute(args.iter().any(|a| a == "--reroute"))
                 .cells(cells_n, proto);
             if let Some(s) = flag("--shards").and_then(|s| s.parse::<usize>().ok()) {
                 spec = spec.shards(s);
@@ -504,6 +518,7 @@ fn main() {
                    revel sweep-diff baseline.json BENCH_sweep.json [--tolerance 0]\n\
                    revel serve --cells 4 --units 4 --jobs 200 --seed 7\n\
                               [--engine replay|cosim] [--shards K] [--scaling 1,2,8]\n\
+                              [--handover-frac F] [--fronthaul-us T] [--reroute]\n\
                               [--arrival poisson|mmpp|diurnal|replay|closed]\n\
                               [--lambda R] [--lambda-lo R] [--lambda-hi R] [--dwell-s T]\n\
                               [--period-s T] [--depth D] [--trace FILE] [--clients C]\n\

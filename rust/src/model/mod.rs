@@ -161,10 +161,14 @@ pub fn handoff_cycles(kernel: &str, n: usize) -> u64 {
     handoff_words(kernel, n).div_ceil(16).max(1)
 }
 
-/// One inter-stage handoff in virtual seconds — the conservative-DES
-/// lookahead bound of the sharded co-simulation: no cross-shard
-/// interaction can take effect sooner than the cheapest handoff, so any
-/// synchronization horizon `>=` this is safe
+/// One inter-stage handoff in virtual seconds — the floor of the
+/// conservative-DES lookahead in the sharded co-simulation. A coupled
+/// metro's cross-shard lookahead is the *fronthaul* latency (cells
+/// interact only through that link), but a fronthaul cannot beat the
+/// on-die interconnect, so
+/// [`ShardPlan::lookahead_s`](crate::coordinator::ShardPlan::lookahead_s)
+/// floors it at the mix's cheapest handoff; any synchronization
+/// horizon `<=` that effective latency is safe
 /// ([`crate::coordinator::shard`]).
 pub fn handoff_s(kernel: &str, n: usize) -> f64 {
     cycles_to_us(handoff_cycles(kernel, n)) * 1e-6

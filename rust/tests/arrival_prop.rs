@@ -1,0 +1,184 @@
+//! Property tests for the serving cluster's arrival processes:
+//! empirical mean rates match the configured parameters over long
+//! horizons, per-cell seed streams are independent (adding a cell
+//! never perturbs an existing cell's traffic or outcome, and cell 0
+//! bit-matches the pre-metro single-cell stream), and replay traces
+//! re-sort stably when arrival timestamps collide.
+
+use revel::coordinator::{
+    cell_seed, read_artifact, serve, write_artifact, ArrivalProcess, CellSpec,
+    ClusterSpec, JobClass, StageSpec,
+};
+use revel::util::Rng;
+
+fn times(p: &ArrivalProcess, jobs: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    p.synthesize(jobs, &mut rng, |r| r.below(2))
+        .expect("open-loop trace")
+        .iter()
+        .map(|a| a.t_s)
+        .collect()
+}
+
+/// Empirical arrival rate of a synthesized trace (jobs per virtual
+/// second over the span actually covered).
+fn empirical_rate(t: &[f64]) -> f64 {
+    let last = *t.last().unwrap();
+    assert!(last > 0.0, "a paced trace must advance time");
+    t.len() as f64 / last
+}
+
+/// Mean-rate sanity over long horizons: each open-loop process's
+/// empirical rate converges to its configured time-average — `lambda`
+/// for Poisson, the dwell-weighted `(lo + hi) / 2` for the symmetric
+/// 2-state MMPP, and `lambda` again for the diurnal modulation (the
+/// sinusoid integrates to zero over whole periods). Seeds are fixed, so
+/// these are exact pins with statistical-scale tolerances, not flaky
+/// statistical tests.
+#[test]
+fn open_loop_traces_hit_their_configured_mean_rates() {
+    // Poisson: n = 4000 puts the standard error of the rate near 1.6%.
+    let lambda = 1000.0;
+    let rate = empirical_rate(&times(&ArrivalProcess::Poisson { lambda }, 4000, 7));
+    assert!(
+        (rate - lambda).abs() < 0.10 * lambda,
+        "poisson empirical rate {rate} vs lambda {lambda}"
+    );
+    // MMPP with equal mean dwells spends half its time in each state:
+    // time-average rate (lo + hi) / 2. The horizon spans ~480 dwells.
+    let (lo, hi) = (500.0, 2000.0);
+    let mmpp =
+        ArrivalProcess::Mmpp { lambda_lo: lo, lambda_hi: hi, mean_dwell_s: 0.01 };
+    let want = (lo + hi) / 2.0;
+    let rate = empirical_rate(&times(&mmpp, 6000, 7));
+    assert!(
+        (rate - want).abs() < 0.25 * want,
+        "mmpp empirical rate {rate} vs time-average {want}"
+    );
+    // Diurnal: Lewis-Shedler thinning is exact, and over ~120 whole
+    // periods the modulation cancels.
+    let diurnal =
+        ArrivalProcess::Diurnal { lambda: 1000.0, period_s: 0.05, depth: 0.8 };
+    let rate = empirical_rate(&times(&diurnal, 6000, 7));
+    assert!(
+        (rate - 1000.0).abs() < 0.10 * 1000.0,
+        "diurnal empirical rate {rate} vs lambda 1000"
+    );
+}
+
+/// The cheap 4-stage class the serve-layer suites share.
+fn lite_mix() -> Vec<JobClass> {
+    vec![JobClass {
+        name: "lite",
+        stages: [
+            StageSpec { kernel: "solver", n: 8 },
+            StageSpec { kernel: "solver", n: 12 },
+            StageSpec { kernel: "gemm", n: 12 },
+            StageSpec { kernel: "fir", n: 12 },
+        ],
+        weight: 1.0,
+    }]
+}
+
+/// Per-cell seed streams: cell 0 uses the raw metro seed (so a
+/// one-cell metro bit-matches the pre-metro single-cluster serve),
+/// every cell's stream is distinct, and — the property the derivation
+/// exists for — adding a cell to a metro never changes an existing
+/// cell's synthesized traffic or served outcome.
+#[test]
+fn per_cell_seed_streams_are_independent() {
+    for seed in [0u64, 7, 23, 0xDEAD_BEEF] {
+        assert_eq!(cell_seed(seed, 0), seed, "cell 0 is the pre-metro stream");
+        let mut seen: Vec<u64> = (0..16).map(|i| cell_seed(seed, i)).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 16, "seed {seed}: cell streams must not collide");
+    }
+    // Distinct streams give distinct traces...
+    let p = ArrivalProcess::Poisson { lambda: 1000.0 };
+    let t0 = times(&p, 64, cell_seed(23, 0));
+    let t1 = times(&p, 64, cell_seed(23, 1));
+    assert_ne!(t0, t1, "neighboring cells must not draw correlated traffic");
+    // ...and growing the metro leaves existing cells' outcomes intact.
+    let solo = ClusterSpec::new(41).workers(Some(2)).cell(
+        CellSpec::new(1)
+            .jobs(12)
+            .job_mix(lite_mix())
+            .arrival(ArrivalProcess::Poisson { lambda: 25_000.0 }),
+    );
+    let grown = solo.clone().cell(
+        CellSpec::new(2).jobs(12).job_mix(lite_mix()).arrival(ArrivalProcess::Mmpp {
+            lambda_lo: 5_000.0,
+            lambda_hi: 50_000.0,
+            mean_dwell_s: 1e-4,
+        }),
+    );
+    let a = serve(&solo).unwrap();
+    let b = serve(&grown).unwrap();
+    assert_eq!(b.cells.len(), 2);
+    assert_eq!(
+        a.cells[0], b.cells[0],
+        "adding a cell must not perturb cell 0's report"
+    );
+    let cell0 = |r: &revel::coordinator::ServeReport| -> Vec<_> {
+        r.jobs_detail.iter().filter(|j| j.cell == 0).copied().collect()
+    };
+    assert_eq!(
+        cell0(&a),
+        cell0(&b),
+        "cell 0's per-job records must bit-match the solo run"
+    );
+}
+
+/// Replay traces re-sort into synthesis order by `(t_s, id)`. A flood
+/// makes every timestamp collide, so only the id tie-break orders the
+/// trace — the row order stored in the artifact must be irrelevant,
+/// and replaying a flood must bit-match the recorded run.
+#[test]
+fn replay_traces_sort_stably_on_duplicate_timestamps() {
+    let flood_spec = ClusterSpec::new(17).workers(Some(2)).cell(
+        CellSpec::new(2)
+            .jobs(12)
+            .job_mix(lite_mix())
+            .arrival(ArrivalProcess::Poisson { lambda: 0.0 }),
+    );
+    let recorded = serve(&flood_spec).unwrap();
+    assert_eq!(recorded.completed, 12);
+    assert!(
+        recorded.jobs_detail.windows(2).all(|w| {
+            w[0].completion.arrival_s == 0.0 && w[1].completion.arrival_s == 0.0
+        }),
+        "a flood must record all-duplicate arrival timestamps"
+    );
+    let dir = std::env::temp_dir();
+    let ordered = dir.join("revel_arrival_prop_ordered.json");
+    let scrambled = dir.join("revel_arrival_prop_scrambled.json");
+    let ordered = ordered.to_str().unwrap().to_string();
+    let scrambled = scrambled.to_str().unwrap().to_string();
+    write_artifact(&ordered, &recorded, 0.0, 1, 1).unwrap();
+    // Scramble the stored row order; the (t_s, id) sort must undo it.
+    let mut shuffled = read_artifact(&std::fs::read_to_string(&ordered).unwrap()).unwrap();
+    shuffled.jobs_detail.reverse();
+    write_artifact(&scrambled, &shuffled, 0.0, 1, 1).unwrap();
+    let replay = |path: &str| {
+        let mut spec = flood_spec.clone();
+        spec.cells[0].arrival = ArrivalProcess::Replay { path: path.into() };
+        serve(&spec).unwrap()
+    };
+    let from_ordered = replay(&ordered);
+    let from_scrambled = replay(&scrambled);
+    std::fs::remove_file(&ordered).ok();
+    std::fs::remove_file(&scrambled).ok();
+    // (The reports embed their distinct replay paths in the arrival
+    // echo, so compare outcomes, not the whole report.)
+    assert_eq!(
+        from_ordered.jobs_detail, from_scrambled.jobs_detail,
+        "stored row order must not leak into the replayed run"
+    );
+    assert_eq!(from_ordered.slo, from_scrambled.slo);
+    assert_eq!(from_ordered.completed, from_scrambled.completed);
+    // And the replay reproduces the recorded flood bit-exactly.
+    assert_eq!(from_ordered.jobs_detail, recorded.jobs_detail);
+    assert_eq!(from_ordered.completed, recorded.completed);
+    assert_eq!(from_ordered.slo, recorded.slo);
+}

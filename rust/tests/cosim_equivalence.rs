@@ -361,3 +361,53 @@ fn metro_report_is_invariant_under_shard_count() {
     let again = revel::coordinator::serve(&metro_spec(8)).unwrap();
     assert_eq!(again, base, "rerun at shards=8 must reproduce the same bits");
 }
+
+/// `metro_spec` with the cells actively coupled: every cell hands over
+/// a third of its stage boundaries to its ring neighbor and re-offers
+/// shed arrivals metro-wide. Cross-cell messages now cross shard
+/// boundaries every round, so the fronthaul lookahead window is doing
+/// real work (the uncoupled test above is trivially safe).
+fn coupled_metro_spec(shards: usize) -> ClusterSpec {
+    let mut spec = metro_spec(shards).reroute(true).fronthaul_us(Some(5.0));
+    for cell in &mut spec.cells {
+        cell.handover_frac = 1.0 / 3.0;
+    }
+    spec
+}
+
+/// The ISSUE 7 acceptance pin: shard invariance must survive *active*
+/// cross-cell traffic. With handover and re-routing on, every horizon
+/// exchange carries messages between cells that may live on different
+/// shards — and the reports must still be bit-identical for shards
+/// {1, 2, 8} and reproducible on rerun.
+#[test]
+fn coupled_metro_report_is_invariant_under_shard_count() {
+    let base = revel::coordinator::serve(&coupled_metro_spec(1)).unwrap();
+    assert_eq!(base.cells.len(), 4);
+    assert!(base.migrations > 0, "handover_frac=1/3 must migrate jobs");
+    assert_eq!(
+        base.migrations,
+        base.cells.iter().map(|c| c.migrated_in).sum::<usize>(),
+        "every migrant lands in some cell"
+    );
+    assert_eq!(
+        base.reroutes,
+        base.cells.iter().map(|c| c.rerouted_in).sum::<usize>(),
+        "every re-offer lands in some cell"
+    );
+    assert_eq!(
+        base.completed + base.dropped + base.deadline_shed + base.failed,
+        24,
+        "coupling moves jobs between cells, it never loses them"
+    );
+    assert!(base.completed > 0);
+    for shards in [2usize, 8] {
+        let sharded = revel::coordinator::serve(&coupled_metro_spec(shards)).unwrap();
+        assert_eq!(
+            sharded, base,
+            "shards={shards}: coupled report must be bit-identical to shards=1"
+        );
+    }
+    let again = revel::coordinator::serve(&coupled_metro_spec(8)).unwrap();
+    assert_eq!(again, base, "coupled rerun at shards=8 reproduces the same bits");
+}

@@ -1,0 +1,251 @@
+//! BENCH_serve schema evolution: every schema version this repo has
+//! ever written must keep parsing to the same `ServeReport` a current
+//! run produces, and the current (v4, coupled-metro) schema must
+//! round-trip bit-exactly.
+//!
+//! The older-version fixtures are synthesized from live v4 documents
+//! by *removing* exactly the keys each schema bump added — v3 lacked
+//! the coupling fields, v2 was the flat one-cell layout, v1
+//! additionally predated the co-sim engine keys. That keeps the
+//! goldens honest (every retained number comes from a real run) while
+//! pinning the reader's defaulting behavior for the removed keys.
+
+use std::collections::BTreeMap;
+
+use revel::coordinator::{
+    read_artifact, serve, ArrivalProcess, CellSpec, ClusterSpec, EngineKind, JobClass,
+    ServeReport, StageSpec,
+};
+use revel::harness::json::{self, Json};
+
+fn lite_mix() -> Vec<JobClass> {
+    vec![JobClass {
+        name: "lite",
+        stages: [
+            StageSpec { kernel: "solver", n: 8 },
+            StageSpec { kernel: "solver", n: 12 },
+            StageSpec { kernel: "gemm", n: 12 },
+            StageSpec { kernel: "fir", n: 12 },
+        ],
+        weight: 1.0,
+    }]
+}
+
+fn obj_mut(j: &mut Json) -> &mut BTreeMap<String, Json> {
+    match j {
+        Json::Obj(m) => m,
+        other => panic!("expected a JSON object, got {other:?}"),
+    }
+}
+
+/// Emit and re-parse the v4 document (exercises the text round-trip,
+/// not just the tree).
+fn v4_doc(r: &ServeReport) -> Json {
+    json::parse(&r.to_json(0.25, 2, 1).pretty()).unwrap()
+}
+
+/// Remove the keys schema v4 (cross-cell coupling) added.
+fn strip_to_v3(mut doc: Json) -> Json {
+    let top = obj_mut(&mut doc);
+    top.insert("version".into(), Json::Num(3.0));
+    let cfg = obj_mut(top.get_mut("config").unwrap());
+    cfg.remove("fronthaul_us");
+    cfg.remove("reroute");
+    if let Json::Arr(cells) = cfg.get_mut("cells").unwrap() {
+        for c in cells {
+            obj_mut(c).remove("handover_frac");
+        }
+    }
+    let summary = obj_mut(top.get_mut("summary").unwrap());
+    summary.remove("migrations");
+    summary.remove("reroutes");
+    if let Json::Arr(per_cell) = top.get_mut("per_cell").unwrap() {
+        for c in per_cell {
+            let m = obj_mut(c);
+            for k in ["migrated_out", "migrated_in", "rerouted_out", "rerouted_in"] {
+                m.remove(k);
+            }
+        }
+    }
+    doc
+}
+
+/// Collapse a one-cell v4 document into the flat pre-metro layout
+/// (schema v2: no `config.cells`, no `per_cell`; `per_unit`/`classes`
+/// at top level; `mode`/`lambda`/`clients` in the config; job rows
+/// without a `cell` tag).
+fn flatten_to_v2(mut doc: Json) -> Json {
+    let top = obj_mut(&mut doc);
+    top.insert("version".into(), Json::Num(2.0));
+    let cfg = obj_mut(top.get_mut("config").unwrap());
+    cfg.remove("fronthaul_us");
+    cfg.remove("reroute");
+    let cell = match cfg.remove("cells").unwrap() {
+        Json::Arr(mut v) => {
+            assert_eq!(v.len(), 1, "the flat schema holds exactly one cell");
+            v.remove(0)
+        }
+        other => panic!("config.cells should be an array, got {other:?}"),
+    };
+    for k in ["units", "queue_cap", "admit_cap"] {
+        cfg.insert(k.into(), cell.get(k).unwrap().clone());
+    }
+    let arrival = cell.get("arrival").unwrap();
+    match arrival.get("kind").and_then(Json::as_str).unwrap() {
+        "poisson" => {
+            cfg.insert("mode".into(), Json::Str("open".into()));
+            cfg.insert("lambda".into(), arrival.get("lambda").unwrap().clone());
+            cfg.insert("clients".into(), Json::Num(0.0));
+        }
+        "closed" => {
+            cfg.insert("mode".into(), Json::Str("closed".into()));
+            cfg.insert("lambda".into(), Json::Num(0.0));
+            cfg.insert("clients".into(), arrival.get("clients").unwrap().clone());
+        }
+        other => panic!("the flat schema cannot express {other:?} arrivals"),
+    }
+    let summary = obj_mut(top.get_mut("summary").unwrap());
+    summary.remove("migrations");
+    summary.remove("reroutes");
+    let cell_out = match top.remove("per_cell").unwrap() {
+        Json::Arr(mut v) => v.remove(0),
+        other => panic!("per_cell should be an array, got {other:?}"),
+    };
+    for k in ["per_unit", "classes"] {
+        top.insert(k.into(), cell_out.get(k).unwrap().clone());
+    }
+    if let Json::Arr(rows) = top.get_mut("jobs_detail").unwrap() {
+        for row in rows {
+            obj_mut(row).remove("cell");
+        }
+    }
+    doc
+}
+
+/// Remove the keys the co-sim engine added to the flat schema (v1:
+/// pre-engine, pre-SLO, pre-interconnect accounting).
+fn strip_to_v1(mut doc: Json) -> Json {
+    let top = obj_mut(&mut doc);
+    top.insert("version".into(), Json::Num(1.0));
+    let cfg = obj_mut(top.get_mut("config").unwrap());
+    cfg.remove("engine");
+    cfg.remove("slo_deadline_us");
+    let summary = obj_mut(top.get_mut("summary").unwrap());
+    for k in ["deadline_shed", "handoffs", "bus_wait_s"] {
+        summary.remove(k);
+    }
+    doc
+}
+
+/// Current schema, coupled metro: the artifact round-trips bit-exactly
+/// (everything but the `host` block), coupling counters included.
+#[test]
+fn v4_coupled_artifacts_roundtrip_bit_exactly() {
+    let mut spec = ClusterSpec::new(19)
+        .workers(Some(2))
+        .engine(EngineKind::Cosim)
+        .reroute(true)
+        .fronthaul_us(Some(4.0))
+        .cell(CellSpec::new(1).jobs(6).job_mix(lite_mix()))
+        .cell(CellSpec::new(1).jobs(6).job_mix(lite_mix()));
+    for c in &mut spec.cells {
+        c.handover_frac = 1.0;
+    }
+    let r = serve(&spec).unwrap();
+    assert!(r.migrations > 0, "frac 1.0 must migrate every boundary");
+    let text = r.to_json(0.25, 2, 2).pretty();
+    let doc = json::parse(&text).unwrap();
+    assert_eq!(doc.get("version").and_then(Json::as_u64), Some(4));
+    assert!(
+        doc.get("summary").and_then(|s| s.get("migrations")).is_some(),
+        "v4 summaries carry the migration counter"
+    );
+    let back = read_artifact(&text).unwrap();
+    assert_eq!(back, r, "v4 round-trips bit-exactly");
+    assert_eq!(back.migrations, r.migrations);
+    assert_eq!(back.reroutes, r.reroutes);
+    assert_eq!(back.cells[0].handover_frac, 1.0);
+}
+
+/// Schema v3 (multi-cell, pre-coupling): an uncoupled metro's v3
+/// document reconstructs today's report exactly — the reader zeroes
+/// the coupling counters and defaults `fronthaul_us`/`reroute` off.
+#[test]
+fn v3_documents_parse_with_coupling_defaulted_off() {
+    let spec = ClusterSpec::new(29)
+        .workers(Some(2))
+        .engine(EngineKind::Cosim)
+        .cell(CellSpec::new(1).jobs(6).job_mix(lite_mix()))
+        .cell(
+            CellSpec::new(2)
+                .jobs(6)
+                .job_mix(lite_mix())
+                .arrival(ArrivalProcess::Poisson { lambda: 30_000.0 }),
+        );
+    let r = serve(&spec).unwrap();
+    assert_eq!(r.migrations, 0, "uncoupled metros never migrate");
+    assert_eq!(r.fronthaul_us, None);
+    let v3 = strip_to_v3(v4_doc(&r));
+    let text = v3.pretty();
+    assert!(!text.contains("handover_frac"), "v3 has no coupling keys");
+    assert!(!text.contains("migrated_out"));
+    let back = read_artifact(&text).unwrap();
+    assert_eq!(back, r, "v3 reconstructs the uncoupled report exactly");
+}
+
+/// Schema v2 (flat one-cell, with engine/SLO keys): open-loop and
+/// closed-loop flat documents reconstruct today's one-cell reports.
+#[test]
+fn v2_flat_documents_parse_as_a_one_cell_metro() {
+    let open = ClusterSpec::new(31)
+        .workers(Some(2))
+        .engine(EngineKind::Cosim)
+        .slo_deadline_us(Some(1e9))
+        .cell(
+            CellSpec::new(2)
+                .jobs(8)
+                .job_mix(lite_mix())
+                .arrival(ArrivalProcess::Poisson { lambda: 20_000.0 }),
+        );
+    let closed = ClusterSpec::new(31).workers(Some(2)).cell(
+        CellSpec::new(2)
+            .jobs(8)
+            .job_mix(lite_mix())
+            .arrival(ArrivalProcess::Closed { clients: 2 }),
+    );
+    for spec in [open, closed] {
+        let r = serve(&spec).unwrap();
+        let v2 = flatten_to_v2(v4_doc(&r));
+        let text = v2.pretty();
+        assert!(!text.contains("per_cell"), "the flat schema has no per_cell");
+        let back = read_artifact(&text).unwrap();
+        assert_eq!(back, r, "v2 reconstructs the one-cell report exactly");
+        assert_eq!(back.cells.len(), 1);
+        assert!(back.jobs_detail.iter().all(|j| j.cell == 0));
+    }
+}
+
+/// Schema v1 (flat, pre-cosim): no engine, SLO, or interconnect keys —
+/// the reader defaults to the replay engine with no deadline and zero
+/// shed/handoff accounting, which is exactly what a replay run reports.
+#[test]
+fn v1_precosim_documents_parse_with_defaults() {
+    let spec = ClusterSpec::new(37).workers(Some(2)).cell(
+        CellSpec::new(2)
+            .jobs(8)
+            .job_mix(lite_mix())
+            .arrival(ArrivalProcess::Poisson { lambda: 20_000.0 }),
+    );
+    let r = serve(&spec).unwrap();
+    assert_eq!((r.deadline_shed, r.handoffs), (0, 0), "replay runs fit v1");
+    let v1 = strip_to_v1(flatten_to_v2(v4_doc(&r)));
+    let text = v1.pretty();
+    assert!(!text.contains("slo_deadline_us"));
+    let back = read_artifact(&text).unwrap();
+    assert_eq!(back, r, "v1 reconstructs the pre-cosim replay report exactly");
+    assert_eq!(back.engine, EngineKind::Replay);
+    assert_eq!(back.slo_deadline_us, None);
+    assert_eq!(back.fronthaul_us, None);
+    assert!(!back.reroute);
+    assert_eq!((back.migrations, back.reroutes), (0, 0));
+}
