@@ -8,7 +8,10 @@
 //! ([`super::cosim`]) now schedule against this one structure, so a
 //! cluster run is a single totally ordered virtual timeline in which
 //! unit progress, dispatch, work stealing, admission, and shared-bus
-//! grants interleave deterministically.
+//! grants interleave deterministically. The tile-DAG scheduler
+//! ([`super::cosim::run_dag`]) is the third client: its timeline is
+//! denominated in cycles rather than seconds, but leans on the same
+//! FIFO tie-break for its bit-deterministic task completions.
 //!
 //! Ordering: earliest timestamp first; ties break on insertion
 //! sequence (FIFO), which is what makes runs bit-deterministic — two

@@ -35,6 +35,14 @@
 //!   conservative horizon barriers, which is what keeps multi-cell
 //!   results bit-identical for every shard count.
 //!
+//! A second, independent engine in this module ([`run_dag`]) schedules
+//! a **tile-task DAG** ([`crate::taskgraph`]) instead of a job stream:
+//! persistent per-unit machines ([`crate::sim::Machine::reset_retaining_spad`])
+//! keep factored tiles resident in scratchpad slots between tasks, a
+//! dependence-count dispatcher releases ready tasks onto the same
+//! [`super::calendar::Calendar`], and inter-tile working sets are
+//! billed on the shared interconnect via [`crate::model::handoff_cycles`].
+//!
 //! Relationship to replay — pinned by `tests/cosim_equivalence.rs`:
 //! for **single-stage jobs** there are no handoffs and stage
 //! granularity coincides with job granularity, so this engine
@@ -47,11 +55,15 @@
 //! latencies are `>=` replayed ones — the delta is exactly the
 //! cross-unit contention replay cannot see.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
+use crate::harness::json::Json;
 use crate::model;
-use crate::sim::Machine;
+use crate::sim::{Machine, SimConfig, LINE_WORDS};
+use crate::taskgraph::{exec, DagKernel, Lowerer, TileDag};
+use crate::util::linalg::Mat;
 use crate::util::Rng;
+use crate::vsc::{Region, SpadAlloc};
 use crate::workloads::{self, Features, Goal, Prepared};
 
 use super::calendar::Calendar;
@@ -1150,6 +1162,434 @@ pub fn run(
     s.finish()
 }
 
+// ---------------------------------------------------------------------------
+// Tiled task-graph factorizations (`revel dag`)
+// ---------------------------------------------------------------------------
+
+/// Scratchpad slot name pool for the DAG engine's tile-resident
+/// regions (one name per live slot; the allocator requires static
+/// names). 24 names cover the smallest supported tile (b = 8 fills the
+/// default scratchpad at 24 slots before exhausting capacity).
+const SLOT_NAMES: [&str; 24] = [
+    "tg.s00", "tg.s01", "tg.s02", "tg.s03", "tg.s04", "tg.s05", "tg.s06",
+    "tg.s07", "tg.s08", "tg.s09", "tg.s10", "tg.s11", "tg.s12", "tg.s13",
+    "tg.s14", "tg.s15", "tg.s16", "tg.s17", "tg.s18", "tg.s19", "tg.s20",
+    "tg.s21", "tg.s22", "tg.s23",
+];
+
+/// Configuration of one DAG-scheduled tiled factorization run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DagConfig {
+    /// Which factorization to decompose.
+    pub kernel: DagKernel,
+    /// Problem size (`n x n`); must be a multiple of `tile`.
+    pub n: usize,
+    /// Tile dimension `b`.
+    pub tile: usize,
+    /// Number of persistent units to schedule across.
+    pub units: usize,
+}
+
+/// Per-unit occupancy accounting of a DAG run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DagUnitStat {
+    /// Unit index.
+    pub unit: usize,
+    /// Tile tasks this unit executed.
+    pub tasks: usize,
+    /// Cycles this unit spent computing (excludes transfer waits).
+    pub busy_cycles: u64,
+}
+
+/// Result of a DAG-scheduled tiled factorization.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DagRun {
+    /// Total tile tasks executed.
+    pub tasks: usize,
+    /// Schedule-independent critical-path bound (per-class measured
+    /// costs, no transfer time) — the makespan floor at infinite units.
+    pub critical_path_cycles: u64,
+    /// Achieved end-to-end cycles (last task completion).
+    pub makespan_cycles: u64,
+    /// Sum of all units' compute cycles.
+    pub total_compute_cycles: u64,
+    /// Tile transfers billed on the shared interconnect.
+    pub handoffs: u64,
+    /// Words those transfers moved.
+    pub handoff_words: u64,
+    /// Cycles the shared bus spent transferring.
+    pub bus_busy_cycles: u64,
+    /// Cycles transfers waited on the busy bus before starting.
+    pub bus_wait_cycles: u64,
+    /// Needed tiles found already resident in a unit's scratchpad
+    /// (re-load skipped — the machine-state-reuse payoff).
+    pub resident_hits: u64,
+    /// Resident tiles displaced to make room (LRU).
+    pub evictions: u64,
+    /// FNV-1a digest of the factor bits ([`exec::digest`]): must be
+    /// identical for every unit count and equal to the host replay.
+    pub factor_digest: u64,
+    /// Per-unit occupancy.
+    pub per_unit: Vec<DagUnitStat>,
+}
+
+impl DagRun {
+    /// Summary JSON for `BENCH_dag.json` (the digest renders as a hex
+    /// string: JSON numbers cannot carry 64 bits losslessly).
+    pub fn to_json(&self) -> Json {
+        let mk = self.makespan_cycles.max(1) as f64;
+        Json::obj(vec![
+            ("tasks", Json::Num(self.tasks as f64)),
+            ("critical_path_cycles", Json::Num(self.critical_path_cycles as f64)),
+            ("makespan_cycles", Json::Num(self.makespan_cycles as f64)),
+            ("total_compute_cycles", Json::Num(self.total_compute_cycles as f64)),
+            ("handoffs", Json::Num(self.handoffs as f64)),
+            ("handoff_words", Json::Num(self.handoff_words as f64)),
+            ("bus_busy_cycles", Json::Num(self.bus_busy_cycles as f64)),
+            ("bus_wait_cycles", Json::Num(self.bus_wait_cycles as f64)),
+            ("resident_hits", Json::Num(self.resident_hits as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
+            ("factor_digest", Json::Str(format!("{:016x}", self.factor_digest))),
+            (
+                "per_unit",
+                Json::Arr(
+                    self.per_unit
+                        .iter()
+                        .map(|u| {
+                            Json::obj(vec![
+                                ("unit", Json::Num(u.unit as f64)),
+                                ("tasks", Json::Num(u.tasks as f64)),
+                                ("busy_cycles", Json::Num(u.busy_cycles as f64)),
+                                (
+                                    "occupancy",
+                                    Json::Num(u.busy_cycles as f64 / mk),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// DAG-engine calendar payload: one event kind — a unit finishing its
+/// tile task. (Dispatch is not an event: it happens eagerly whenever a
+/// completion frees a unit or releases successors.)
+enum DagEv {
+    TaskDone { task: usize, unit: usize },
+}
+
+/// One tile-resident scratchpad slot of a unit.
+struct DagSlot {
+    region: Region,
+    /// Which tile currently lives here, if any.
+    tile: Option<(usize, usize)>,
+    /// Host-side version of that tile at load/refresh time; stale
+    /// (another unit advanced the tile since) means re-load.
+    version: u64,
+    /// Monotonic touch counter for LRU eviction.
+    last_use: u64,
+}
+
+/// One persistent unit: a live machine whose scratchpad survives
+/// between tile tasks, plus the slot allocator over it.
+struct DagUnit {
+    machine: Machine,
+    alloc: SpadAlloc,
+    slots: Vec<DagSlot>,
+    busy: bool,
+    tasks_done: usize,
+    busy_cycles: u64,
+}
+
+/// Run a tiled factorization DAG across `cfg.units` persistent units.
+///
+/// Deterministic: identical configs give bit-identical [`DagRun`]s,
+/// and the factor digest is invariant across unit counts (the
+/// numerics of record are the host-side replay, applied in dispatch
+/// order — a dependence-respecting order, which
+/// [`crate::taskgraph::exec`] proves is digest-invariant). The
+/// machines supply timing: per-task cycles measured live on the
+/// persistent machine after [`Machine::reset_retaining_spad`].
+pub fn run_dag(cfg: &DagConfig) -> Result<DagRun, String> {
+    if cfg.units == 0 {
+        return Err("units must be >= 1".into());
+    }
+    let dag = TileDag::build(cfg.kernel, cfg.n, cfg.tile)?;
+    let b = cfg.tile;
+    let bb = (b * b) as i64;
+    let spad_words = SimConfig::default().lane_spad_words;
+    let align = |w: i64| -> i64 {
+        let l = LINE_WORDS as i64;
+        w.div_ceil(l) * l
+    };
+    // Slot budget: leave room for the per-era transient (plus the one
+    // reusable hole it leaves behind) so slot growth can never starve
+    // it. The gemm-class tasks need target + two operands resident.
+    let max_slots = (((spad_words as i64 - 2 * align(b as i64)) / align(bb))
+        .max(0) as usize)
+        .min(SLOT_NAMES.len());
+    if max_slots < 3 {
+        return Err(format!(
+            "tile {b} too large: {spad_words}-word scratchpad fits {max_slots} \
+             slots, gemm-class tasks need 3"
+        ));
+    }
+    let lowerer = Lowerer::new(cfg.kernel, cfg.tile).map_err(|e| e.to_string())?;
+    let costs = lowerer.class_costs()?;
+    let cost_of = |op: &crate::taskgraph::TileOp| -> u64 {
+        *costs.get(op.class()).expect("every class was measured")
+    };
+
+    // Host matrix — the numerics of record.
+    let mut host: Mat = match cfg.kernel {
+        DagKernel::Cholesky => workloads::cholesky::instance(cfg.n, 0).a,
+        DagKernel::Lu => workloads::lu::instance(cfg.n, 0).a,
+    };
+    let critical_path_cycles = dag.critical_path(cost_of);
+
+    // Longest path to sink (own cost included): dispatch priority.
+    let mut dependents: Vec<Vec<usize>> = vec![vec![]; dag.tasks.len()];
+    for t in &dag.tasks {
+        for &d in &t.deps {
+            dependents[d].push(t.id);
+        }
+    }
+    let mut prio = vec![0u64; dag.tasks.len()];
+    for id in (0..dag.tasks.len()).rev() {
+        let down = dependents[id].iter().map(|&s| prio[s]).max().unwrap_or(0);
+        prio[id] = down + cost_of(&dag.tasks[id].op);
+    }
+
+    let mut units: Vec<DagUnit> = (0..cfg.units)
+        .map(|_| DagUnit {
+            machine: workloads::machine(1),
+            alloc: SpadAlloc::with_capacity(spad_words),
+            slots: Vec::new(),
+            busy: false,
+            tasks_done: 0,
+            busy_cycles: 0,
+        })
+        .collect();
+
+    let mut indeg: Vec<usize> = dag.tasks.iter().map(|t| t.deps.len()).collect();
+    let mut ready: Vec<usize> =
+        dag.tasks.iter().filter(|t| t.deps.is_empty()).map(|t| t.id).collect();
+    let mut tile_version: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+    let mut cal: Calendar<DagEv> = Calendar::new();
+    let mut now = 0.0f64;
+    let mut bus_free = 0.0f64;
+    let mut touch = 0u64;
+    let mut done_tasks = 0usize;
+    let mut run = DagRun {
+        tasks: dag.tasks.len(),
+        critical_path_cycles,
+        makespan_cycles: 0,
+        total_compute_cycles: 0,
+        handoffs: 0,
+        handoff_words: 0,
+        bus_busy_cycles: 0,
+        bus_wait_cycles: 0,
+        resident_hits: 0,
+        evictions: 0,
+        factor_digest: 0,
+        per_unit: Vec::new(),
+    };
+
+    loop {
+        // Greedy dispatch: drain (ready task, free unit) pairs.
+        loop {
+            // Highest priority first; ties to the lowest task id.
+            let Some(&task_id) = ready
+                .iter()
+                .max_by(|&&a, &&b| prio[a].cmp(&prio[b]).then(b.cmp(&a)))
+            else {
+                break;
+            };
+            let op = dag.tasks[task_id].op;
+            let mut needed: Vec<(usize, usize)> = vec![op.target()];
+            needed.extend(op.operands());
+            // Free unit holding the most of this task's tiles resident
+            // (current version); ties to the lowest unit index.
+            let Some(best_unit) = (0..units.len())
+                .filter(|&u| !units[u].busy)
+                .max_by_key(|&u| {
+                    let hits = needed
+                        .iter()
+                        .filter(|&&tl| {
+                            units[u].slots.iter().any(|s| {
+                                s.tile == Some(tl)
+                                    && Some(&s.version) == tile_version.get(&tl)
+                            })
+                        })
+                        .count();
+                    (hits, std::cmp::Reverse(u))
+                })
+            else {
+                break;
+            };
+            ready.retain(|&t| t != task_id);
+            let u = &mut units[best_unit];
+
+            // New era: drop the previous task's transient scratch.
+            u.alloc.advance_era();
+
+            // Bind each needed tile to a slot; remember which slots this
+            // task claims so eviction never displaces them mid-bind.
+            let mut claimed: Vec<usize> = Vec::new();
+            let mut loads: Vec<(usize, (usize, usize))> = Vec::new();
+            for &tl in &needed {
+                let cur_ver = tile_version.get(&tl).copied().unwrap_or(0);
+                if let Some(si) = u.slots.iter().position(|s| s.tile == Some(tl)) {
+                    if u.slots[si].version == cur_ver {
+                        run.resident_hits += 1;
+                    } else {
+                        loads.push((si, tl)); // stale: re-load in place
+                    }
+                    u.slots[si].last_use = touch;
+                    touch += 1;
+                    claimed.push(si);
+                    continue;
+                }
+                let si = if u.slots.len() < max_slots {
+                    let r = u
+                        .alloc
+                        .region(SLOT_NAMES[u.slots.len()], bb)
+                        .map_err(|e| e.to_string())?;
+                    u.alloc.retain(&r);
+                    u.slots.push(DagSlot {
+                        region: r,
+                        tile: None,
+                        version: 0,
+                        last_use: touch,
+                    });
+                    u.slots.len() - 1
+                } else {
+                    // LRU among slots this task has not claimed.
+                    let si = (0..u.slots.len())
+                        .filter(|i| !claimed.contains(i))
+                        .min_by_key(|&i| (u.slots[i].last_use, i))
+                        .expect("max_slots >= 3 leaves an evictable slot");
+                    // Recycle through the allocator so the region's
+                    // lifetime is visible to it (exact-fit reuse keeps
+                    // the base stable).
+                    let old = u.slots[si].region;
+                    let name = old.name();
+                    u.alloc.free(&old);
+                    let r = u.alloc.region(name, bb).map_err(|e| e.to_string())?;
+                    u.alloc.retain(&r);
+                    u.slots[si].region = r;
+                    u.slots[si].tile = None;
+                    run.evictions += 1;
+                    si
+                };
+                u.slots[si].last_use = touch;
+                touch += 1;
+                claimed.push(si);
+                loads.push((si, tl));
+            }
+            let tmp = u
+                .alloc
+                .region("tg.tmp", b as i64)
+                .map_err(|e| e.to_string())?;
+
+            // Bill and perform the loads: host tiles (pre-task values)
+            // cross the shared interconnect into the unit's slots, one
+            // transfer at a time on the capacity-1 bus.
+            let mut compute_start = now;
+            for &(si, (ti, tj)) in &loads {
+                let cyc = model::handoff_cycles(cfg.kernel.name(), b) as f64;
+                let start = now.max(bus_free);
+                run.bus_wait_cycles += (start - now) as u64;
+                run.bus_busy_cycles += cyc as u64;
+                run.handoffs += 1;
+                run.handoff_words += (b * b) as u64;
+                bus_free = start + cyc;
+                compute_start = bus_free;
+                let base = u.slots[si].region;
+                for j in 0..b {
+                    for i in 0..b {
+                        u.machine.lanes[0].spad.write(
+                            base.addr((j * b + i) as i64),
+                            host[(ti * b + i, tj * b + j)],
+                        );
+                    }
+                }
+            }
+
+            // Advance the numerics of record (dispatch order is a
+            // dependence-respecting order), then publish the new tile
+            // version and mark every claimed slot current.
+            exec::apply(&op, b, &mut host);
+            let tgt = op.target();
+            let v = tile_version.entry(tgt).or_insert(0);
+            *v += 1;
+            for (&tl, &si) in needed.iter().zip(&claimed) {
+                u.slots[si].tile = Some(tl);
+                u.slots[si].version = tile_version.get(&tl).copied().unwrap_or(0);
+            }
+
+            // Timing: run the relocated tile program on the persistent
+            // machine (scratchpad and clock retained across tasks).
+            let operand_regions: Vec<Region> = needed[1..]
+                .iter()
+                .zip(&claimed[1..])
+                .map(|(_, &si)| u.slots[si].region)
+                .collect();
+            let target_region = u.slots[claimed[0]].region;
+            let prog = lowerer.program(&op, &operand_regions, target_region, tmp);
+            u.machine.reset_retaining_spad();
+            let before = u.machine.now();
+            u.machine
+                .run(prog)
+                .map_err(|e| format!("task {task_id} ({}): {e}", op.class()))?;
+            let delta = u.machine.now() - before;
+            u.busy = true;
+            u.busy_cycles += delta;
+            run.total_compute_cycles += delta;
+            cal.push(
+                compute_start + delta as f64,
+                DagEv::TaskDone { task: task_id, unit: best_unit },
+            );
+        }
+
+        let Some((t, DagEv::TaskDone { task, unit })) = cal.pop() else {
+            break;
+        };
+        now = t;
+        run.makespan_cycles = run.makespan_cycles.max(t as u64);
+        units[unit].busy = false;
+        units[unit].tasks_done += 1;
+        done_tasks += 1;
+        for &s in &dependents[task] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+
+    if done_tasks != dag.tasks.len() {
+        return Err(format!(
+            "scheduler stalled: {done_tasks}/{} tasks completed",
+            dag.tasks.len()
+        ));
+    }
+    exec::finalize(cfg.kernel, &mut host);
+    run.factor_digest = exec::digest(&host);
+    run.per_unit = units
+        .iter()
+        .enumerate()
+        .map(|(i, u)| DagUnitStat {
+            unit: i,
+            tasks: u.tasks_done,
+            busy_cycles: u.busy_cycles,
+        })
+        .collect();
+    Ok(run)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1321,5 +1761,95 @@ mod tests {
         let replay = cluster::run(&cl, &service, Workload::Open(&tr), || 0);
         assert_eq!(co.failed, 4);
         assert_eq!(co.completions, replay.completions);
+    }
+}
+
+#[cfg(test)]
+mod dag_tests {
+    use super::*;
+
+    fn cfg(kernel: DagKernel, n: usize, tile: usize, units: usize) -> DagConfig {
+        DagConfig { kernel, n, tile, units }
+    }
+
+    #[test]
+    fn dag_rerun_is_bit_deterministic() {
+        let c = cfg(DagKernel::Cholesky, 32, 8, 4);
+        let a = run_dag(&c).unwrap();
+        let b = run_dag(&c).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dag_digest_is_invariant_across_units_and_matches_replay() {
+        for (kernel, a) in [
+            (DagKernel::Cholesky, workloads::cholesky::instance(32, 0).a),
+            (DagKernel::Lu, workloads::lu::instance(32, 0).a),
+        ] {
+            let dag = TileDag::build(kernel, 32, 8).unwrap();
+            let want = exec::digest(&exec::replay(&dag, &a));
+            for units in [1usize, 4, 8] {
+                let r = run_dag(&cfg(kernel, 32, 8, units)).unwrap();
+                assert_eq!(
+                    r.factor_digest, want,
+                    "{kernel:?} units={units}: factor bits moved"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dag_multi_unit_beats_single_unit() {
+        let one = run_dag(&cfg(DagKernel::Cholesky, 32, 8, 1)).unwrap();
+        let eight = run_dag(&cfg(DagKernel::Cholesky, 32, 8, 8)).unwrap();
+        assert!(
+            eight.makespan_cycles < one.makespan_cycles,
+            "8 units {} !< 1 unit {}",
+            eight.makespan_cycles,
+            one.makespan_cycles
+        );
+        // Both bound below by the dependence structure.
+        assert!(eight.makespan_cycles >= eight.critical_path_cycles);
+    }
+
+    #[test]
+    fn dag_residency_and_occupancy_accounting() {
+        // One unit, 10 distinct tiles, 7 slots at b = 16: residency
+        // must both hit (operand reuse) and churn (LRU evictions).
+        let r = run_dag(&cfg(DagKernel::Cholesky, 64, 16, 1)).unwrap();
+        assert!(r.resident_hits > 0, "no resident reuse");
+        assert!(r.evictions > 0, "no slot churn");
+        assert_eq!(r.per_unit.iter().map(|u| u.tasks).sum::<usize>(), r.tasks);
+        assert_eq!(
+            r.per_unit.iter().map(|u| u.busy_cycles).sum::<u64>(),
+            r.total_compute_cycles
+        );
+        assert_eq!(r.handoff_words, r.handoffs * 16 * 16);
+        assert!(r.bus_busy_cycles > 0);
+        assert!(r.makespan_cycles >= r.critical_path_cycles);
+    }
+
+    #[test]
+    fn dag_rejects_degenerate_configs() {
+        assert!(run_dag(&cfg(DagKernel::Cholesky, 32, 8, 0)).is_err());
+        assert!(run_dag(&cfg(DagKernel::Cholesky, 30, 8, 1)).is_err());
+        let err = run_dag(&cfg(DagKernel::Cholesky, 64, 32, 1)).unwrap_err();
+        assert!(err.contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn dag_json_summary_round_trips() {
+        let r = run_dag(&cfg(DagKernel::Lu, 16, 8, 2)).unwrap();
+        let j = r.to_json().render();
+        let back = crate::harness::json::parse(&j).unwrap();
+        assert_eq!(back.get("tasks").and_then(Json::as_u64), Some(r.tasks as u64));
+        assert_eq!(
+            back.get("factor_digest").and_then(Json::as_str),
+            Some(format!("{:016x}", r.factor_digest).as_str())
+        );
+        assert_eq!(
+            back.get("per_unit").and_then(Json::as_arr).map(|a| a.len()),
+            Some(2)
+        );
     }
 }

@@ -63,8 +63,8 @@ pub use arrival::ArrivalProcess;
 pub use calendar::Calendar;
 pub use cluster::{Arrival, ClusterConfig, ClusterRun, Completion, UnitStats, Workload};
 pub use cosim::{
-    CosimClass, CosimConfig, CosimRun, CosimSession, Coupling, Migrant, Msg, Outbound,
-    StageTask,
+    run_dag, CosimClass, CosimConfig, CosimRun, CosimSession, Coupling, DagConfig,
+    DagRun, DagUnitStat, Migrant, Msg, Outbound, StageTask,
 };
 pub use serve::{
     cell_seed, read_artifact, serve, strong_scaling, write_artifact, Batching,
@@ -110,6 +110,31 @@ pub struct JobClass {
     pub stages: [StageSpec; 4],
     /// Relative arrival weight in the synthetic trace.
     pub weight: f64,
+}
+
+impl JobClass {
+    /// The co-simulation view of this class: its stage chain with the
+    /// profiled per-stage estimates (`cycles`, in [`STAGE_NAMES`]
+    /// order — the same memoized counts the replay engine consumes).
+    /// This is the *single* lowering from the static class table to
+    /// [`cosim::CosimClass`]; serve's per-cell tables and the union
+    /// mix both go through it, so the two engines can never disagree
+    /// on a class's chain shape (pinned by the
+    /// `cosim_class_agrees_with_the_stage_tables` test).
+    pub fn cosim_class(&self, cycles: &[u64; 4]) -> cosim::CosimClass {
+        cosim::CosimClass {
+            stages: self
+                .stages
+                .iter()
+                .zip(cycles.iter())
+                .map(|(s, &cy)| cosim::StageTask {
+                    kernel: s.kernel.to_string(),
+                    n: s.n,
+                    est_s: crate::model::cycles_to_us(cy) * 1e-6,
+                })
+                .collect(),
+        }
+    }
 }
 
 /// The default traffic mix: PUSCH-like subframe classes of increasing
@@ -262,6 +287,34 @@ mod tests {
                     s.kernel,
                     s.n
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn cosim_class_agrees_with_the_stage_tables() {
+        // The single lowering from the static class table to the
+        // cosim chain: position-for-position the same kernels the
+        // STAGE_CHOICES table allows, the same sizes, and estimates
+        // that are exactly the profiled cycles at the REVEL clock.
+        let cycles = [11u64, 22, 33, 44];
+        for c in &CLASSES {
+            let cc = c.cosim_class(&cycles);
+            assert_eq!(cc.stages.len(), STAGE_NAMES.len(), "{}", c.name);
+            for ((task, spec), choices) in
+                cc.stages.iter().zip(c.stages.iter()).zip(STAGE_CHOICES)
+            {
+                assert_eq!(task.kernel, spec.kernel, "{}", c.name);
+                assert_eq!(task.n, spec.n, "{}", c.name);
+                assert!(
+                    choices.contains(&task.kernel.as_str()),
+                    "{}: {} escaped its pipeline position",
+                    c.name,
+                    task.kernel
+                );
+            }
+            for (task, &cy) in cc.stages.iter().zip(cycles.iter()) {
+                assert_eq!(task.est_s, crate::model::cycles_to_us(cy) * 1e-6);
             }
         }
     }

@@ -44,7 +44,7 @@ use crate::workloads::{Features, Goal};
 
 use super::arrival::ArrivalProcess;
 use super::cluster::{self, Arrival, ClusterConfig, Completion, Workload};
-use super::cosim::{CosimClass, CosimConfig, CosimSession, Coupling, StageTask};
+use super::cosim::{CosimClass, CosimConfig, CosimSession, Coupling};
 use super::shard::{self, ShardPlan};
 use super::slo::{Pctls, SloAccountant, SloDigest};
 use super::{JobClass, CLASSES, STAGE_NAMES};
@@ -679,9 +679,13 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
         ));
     }
     if let Some(us) = spec.fronthaul_us {
-        if !(us.is_finite() && us > 0.0) {
+        // Zero is a valid degenerate spec (co-located cells): it falls
+        // back to the one-bus-cycle lookahead floor downstream. Only
+        // negative or non-finite latencies are rejected.
+        if !(us.is_finite() && us >= 0.0) {
             return Err(RtError(format!(
-                "serve: fronthaul latency {us} us is not a positive finite value"
+                "serve: fronthaul latency {us} us is not a non-negative \
+                 finite value"
             )));
         }
     }
@@ -791,20 +795,7 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
                     cell.job_mix
                         .iter()
                         .zip(&p.cycles)
-                        .map(|(c, cy)| {
-                            cy.map(|cy| CosimClass {
-                                stages: c
-                                    .stages
-                                    .iter()
-                                    .zip(cy.iter())
-                                    .map(|(s, &cycles)| StageTask {
-                                        kernel: s.kernel.to_string(),
-                                        n: s.n,
-                                        est_s: model::cycles_to_us(cycles) * 1e-6,
-                                    })
-                                    .collect(),
-                            })
-                        })
+                        .map(|(c, cy)| cy.map(|cy| c.cosim_class(&cy)))
                         .collect()
                 })
                 .collect();

@@ -112,23 +112,32 @@ impl ShardPlan {
     /// of latency `fronthaul_s`, so the conservative window is exactly
     /// that latency — the largest window that still delivers every
     /// message in its receiver's future (see the module docs for the
-    /// bound). `fronthaul_s` must be the *effective* latency messages
-    /// actually traverse, already floored at the mix's
-    /// [`ShardPlan::lookahead_s`] (the serve layer does this once and
-    /// hands the same value to [`super::cosim::Coupling`]).
-    /// `None` means uncoupled and delegates to [`ShardPlan::for_mix`].
+    /// bound). A sub-floor fronthaul (notably `--fronthaul-us 0`, the
+    /// "co-located cells" degenerate case) is floored at the mix's
+    /// [`ShardPlan::lookahead_s`] — one bus cycle at minimum — because
+    /// a fronthaul cannot beat the on-die interconnect and a zero
+    /// window would retire one event per round forever. Negative or
+    /// non-finite latencies are caller bugs and panic. `None` means
+    /// uncoupled and delegates to [`ShardPlan::for_mix`].
     pub fn for_metro(
         shards: usize,
         mix: &[Option<CosimClass>],
         fronthaul_s: Option<f64>,
     ) -> ShardPlan {
         let Some(f) = fronthaul_s else { return Self::for_mix(shards, mix) };
-        let floor = Self::lookahead_s(mix);
         assert!(
-            f.is_finite() && f >= floor,
-            "fronthaul {f} must be finite and >= the lookahead floor {floor}"
+            f.is_finite() && f >= 0.0,
+            "fronthaul {f} must be a finite, non-negative latency"
         );
-        ShardPlan { shards: shards.max(1), horizon_s: f, lookahead_s: f }
+        let la = f.max(Self::lookahead_s(mix));
+        let plan = ShardPlan { shards: shards.max(1), horizon_s: la, lookahead_s: la };
+        debug_assert!(
+            plan.horizon_s <= plan.lookahead_s,
+            "window {} violates the conservative lookahead {}",
+            plan.horizon_s,
+            plan.lookahead_s
+        );
+        plan
     }
 
     /// **Test-only escape hatch**: replace the window with one that
@@ -322,6 +331,26 @@ mod tests {
         let canary = plan.with_unchecked_horizon(f * 64.0);
         assert_eq!(canary.horizon_s, f * 64.0);
         assert_eq!(canary.lookahead_s, f);
+    }
+
+    #[test]
+    fn zero_fronthaul_falls_back_to_the_lookahead_floor() {
+        // The "co-located cells" degenerate case: --fronthaul-us 0
+        // used to trip the f >= floor assertion; now it floors at the
+        // mix's lookahead instead of panicking or windowing at zero.
+        let mix = mix();
+        let floor = ShardPlan::lookahead_s(&mix);
+        let plan = ShardPlan::for_metro(4, &mix, Some(0.0));
+        assert_eq!(plan.horizon_s, floor);
+        assert_eq!(plan.lookahead_s, floor);
+        assert!(plan.horizon_s.is_finite() && plan.horizon_s > 0.0);
+        // Any sub-floor latency gets the same clamp.
+        let plan = ShardPlan::for_metro(4, &mix, Some(floor / 2.0));
+        assert_eq!(plan.horizon_s, floor);
+        // A fully-degraded mix floors at one finite bus cycle.
+        let degraded: Vec<Option<CosimClass>> = vec![None, None];
+        let plan = ShardPlan::for_metro(2, &degraded, Some(0.0));
+        assert_eq!(plan.horizon_s, model::cycles_to_us(1) * 1e-6);
     }
 
     #[test]

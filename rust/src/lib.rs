@@ -8,7 +8,9 @@
 //! hold the comparison and
 //! area/power models, `analysis` the FGOP characterization, `harness`
 //! the parallel sweep engine behind `report`, `runtime` the PJRT golden
-//! path, and `coordinator` the 5G serving cluster (`revel serve`).
+//! path, `taskgraph` the tiled task-graph factorizations scheduled
+//! across persistent units (`revel dag`), and `coordinator` the 5G
+//! serving cluster (`revel serve`).
 //! `docs/PAPER_MAP.md` maps every paper figure/table to the module and
 //! `revel report` subcommand that reproduces it.
 
@@ -36,6 +38,7 @@ pub mod prop;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod taskgraph;
 pub mod util;
 pub mod vsc;
 pub mod workloads;

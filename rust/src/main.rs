@@ -14,6 +14,8 @@
 //!             [--period-s T] [--depth D] [--trace FILE] [--clients C]
 //!             [--queue-cap Q] [--admit-cap A] [--slo-deadline-us D]
 //!             [--workers W] [--out FILE]
+//! revel dag [--kernel cholesky|lu] [--n N] [--tile B] [--units U]
+//!           [--out BENCH_dag.json]
 //! revel pipeline [jobs] [units]
 //! revel list
 //! ```
@@ -484,6 +486,61 @@ fn main() {
             .expect("write serve artifact");
             println!("wrote {out_path}");
         }
+        Some("dag") => {
+            // Tiled task-graph factorization across persistent units
+            // (library: coordinator::run_dag over taskgraph::TileDag).
+            use revel::harness::json::Json;
+            let flag = |name: &str| {
+                args.iter().position(|a| a == name).and_then(|i| args.get(i + 1))
+            };
+            let kernel = match flag("--kernel").map(|s| s.as_str()) {
+                None => revel::taskgraph::DagKernel::Cholesky,
+                Some(name) => revel::taskgraph::DagKernel::parse(name)
+                    .unwrap_or_else(|| {
+                        eprintln!("unknown kernel {name} (expected cholesky|lu)");
+                        std::process::exit(2);
+                    }),
+            };
+            let n: usize = flag("--n").and_then(|s| s.parse().ok()).unwrap_or(64);
+            let tile: usize =
+                flag("--tile").and_then(|s| s.parse().ok()).unwrap_or(16);
+            let units: usize =
+                flag("--units").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+            let out_path = flag("--out")
+                .cloned()
+                .unwrap_or_else(|| "BENCH_dag.json".to_string());
+            let cfg = revel::coordinator::DagConfig { kernel, n, tile, units };
+            let t0 = std::time::Instant::now();
+            let run = revel::coordinator::run_dag(&cfg).unwrap_or_else(|e| {
+                eprintln!("dag failed: {e}");
+                std::process::exit(1);
+            });
+            let wall_s = t0.elapsed().as_secs_f64();
+            println!("{}", report::dag_summary(&cfg, &run));
+            let doc = Json::obj(vec![
+                ("schema", Json::Str("revel-bench-dag".into())),
+                ("version", Json::Num(1.0)),
+                (
+                    "config",
+                    Json::obj(vec![
+                        ("kernel", Json::Str(kernel.name().into())),
+                        ("n", Json::Num(n as f64)),
+                        ("tile", Json::Num(tile as f64)),
+                        ("units", Json::Num(units as f64)),
+                    ]),
+                ),
+                ("summary", run.to_json()),
+                (
+                    "host",
+                    Json::obj(vec![("wall_s", Json::Num(wall_s))]),
+                ),
+            ]);
+            std::fs::write(&out_path, doc.pretty()).unwrap_or_else(|e| {
+                eprintln!("write {out_path}: {e}");
+                std::process::exit(1);
+            });
+            println!("wrote {out_path}");
+        }
         Some("pipeline") => {
             // Back-compat alias: a default open-loop serve run plus the
             // PJRT golden cross-check, no artifact.
@@ -510,7 +567,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: revel <report|run|trace|sweep|sweep-diff|serve|pipeline|list> ...\n\
+                "usage: revel <report|run|trace|sweep|sweep-diff|serve|dag|pipeline|list> ...\n\
                    revel report all\n\
                    revel run cholesky 16 [--throughput] [--features base]\n\
                    revel trace qr 32\n\
@@ -524,6 +581,8 @@ fn main() {
                               [--period-s T] [--depth D] [--trace FILE] [--clients C]\n\
                               [--queue-cap 8] [--admit-cap 1024] [--slo-deadline-us D]\n\
                               [--workers W] [--out BENCH_serve.json]\n\
+                   revel dag [--kernel cholesky|lu] [--n 64] [--tile 16] [--units 4]\n\
+                             [--out BENCH_dag.json]\n\
                    revel pipeline [jobs] [units]   (golden check + default serve run)"
             );
             std::process::exit(2);

@@ -146,7 +146,9 @@ pub fn cycles_to_us(cycles: u64) -> f64 {
 /// sample-stream stages. The co-simulation engine serializes these
 /// handoffs on one shared bus ([`crate::coordinator::cosim`]); the
 /// replay engine optimistically assumes they are free, which is exactly
-/// the gap the two engines' latency delta measures.
+/// the gap the two engines' latency delta measures. The tile-DAG
+/// scheduler bills inter-tile working sets through the same model at
+/// `n = b` (one `b`x`b` tile per transfer).
 pub fn handoff_words(kernel: &str, n: usize) -> u64 {
     match kernel {
         "fft" | "fir" => 2 * n as u64,

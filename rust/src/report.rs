@@ -538,6 +538,51 @@ pub fn all() -> String {
     .join("\n")
 }
 
+/// Render one tile-DAG run ([`coordinator::run_dag`]) as the `revel
+/// dag` console summary: headline counters plus the per-unit occupancy
+/// table.
+pub fn dag_summary(
+    cfg: &coordinator::DagConfig,
+    run: &coordinator::DagRun,
+) -> String {
+    let mut out = format!(
+        "dag[{}]: n={} tile={} over {} units: {} tasks, makespan {} cycles \
+         ({:.2} us), critical path {} cycles, {:.2}x vs serial compute\n\
+         interconnect: {} handoffs / {} words, bus busy {} wait {} cycles; \
+         residency: {} hits, {} evictions; factor digest {:016x}\n",
+        cfg.kernel.name(),
+        cfg.n,
+        cfg.tile,
+        cfg.units,
+        run.tasks,
+        run.makespan_cycles,
+        model::cycles_to_us(run.makespan_cycles),
+        run.critical_path_cycles,
+        run.total_compute_cycles as f64 / run.makespan_cycles.max(1) as f64,
+        run.handoffs,
+        run.handoff_words,
+        run.bus_busy_cycles,
+        run.bus_wait_cycles,
+        run.resident_hits,
+        run.evictions,
+        run.factor_digest,
+    );
+    let mut t = Table::new(&["unit", "tasks", "busy cycles", "occupancy"]);
+    for u in &run.per_unit {
+        t.row(vec![
+            u.unit.to_string(),
+            u.tasks.to_string(),
+            u.busy_cycles.to_string(),
+            format!(
+                "{:.1}%",
+                100.0 * u.busy_cycles as f64 / run.makespan_cycles.max(1) as f64
+            ),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -547,6 +592,20 @@ mod tests {
         for s in [fig1(), fig21_22(), table6()] {
             assert!(s.len() > 100);
         }
+    }
+
+    #[test]
+    fn dag_summary_renders() {
+        let cfg = coordinator::DagConfig {
+            kernel: crate::taskgraph::DagKernel::Cholesky,
+            n: 16,
+            tile: 8,
+            units: 2,
+        };
+        let run = coordinator::run_dag(&cfg).unwrap();
+        let s = dag_summary(&cfg, &run);
+        assert!(s.contains("dag[cholesky]"), "{s}");
+        assert!(s.contains("occupancy"), "{s}");
     }
 
     #[test]

@@ -268,6 +268,36 @@ impl Machine {
         Ok(&self.stats)
     }
 
+    /// Reset every piece of execution state — control core, lane
+    /// pipeline/port/stream state, in-flight XFER and shared-scratchpad
+    /// streams — while **retaining the scratchpads** (lane-local and
+    /// shared), the virtual clock, and the accumulated [`Stats`].
+    ///
+    /// This is the machine-state-reuse primitive behind the tiled
+    /// task-graph executor ([`crate::taskgraph`]): one persistent
+    /// machine per unit runs a stream of tile programs back to back,
+    /// and operands a previous tile left in the scratchpad stay
+    /// resident, so the scheduler can skip their re-load over the
+    /// modeled interconnect. After the reset the machine is idle
+    /// (`is_finished()` is true) and ready for the next
+    /// [`Machine::run`] / [`Machine::begin`].
+    pub fn reset_retaining_spad(&mut self) {
+        for lane in &mut self.lanes {
+            let spad = std::mem::replace(&mut lane.spad, Spad::new(0));
+            *lane = Lane::new(lane.id, 0);
+            lane.spad = spad;
+        }
+        self.prog.clear();
+        self.ctrl = CtrlState::Fetch;
+        self.xfers.clear();
+        self.shareds.clear();
+        self.ext = ExtActivity::new(self.lanes.len());
+        self.done = true;
+        self.last_buckets = vec![Bucket::Done; self.lanes.len()];
+        self.xfer_local_busy = vec![false; self.lanes.len()];
+        self.run_deadline = u64::MAX;
+    }
+
     /// Install a control program for externally driven execution
     /// without advancing a single cycle. The co-simulation layer uses
     /// this to interleave several machines' progress on one shared
@@ -891,6 +921,35 @@ mod tests {
         assert!(stats.cycles > 0);
         assert_eq!(m.lanes[0].spad.read_slice(8, 4), vec![2.0, 4.0, 6.0, 8.0]);
         assert_eq!(m.stats.commands, 5);
+    }
+
+    #[test]
+    fn reset_retaining_spad_keeps_data_clock_and_stats() {
+        let mut m = Machine::new(SimConfig { lanes: 1, ..Default::default() });
+        m.lanes[0].spad.load_slice(0, &[1.0, 2.0, 3.0, 4.0]);
+        let one = LaneMask::one(0);
+        let prog = |dst: i64| -> Program {
+            vec![
+                vs(Cmd::Configure(scale_cfg()), one),
+                vs(ld(Pattern2D::lin(0, 4), 0), one),
+                vs(Cmd::ConstSt { pat: ConstPattern::scalar(2.0, 1), port: 1 }, one),
+                vs(Cmd::LocalSt { pat: Pattern2D::lin(dst, 4), port: 0, rmw: false }, one),
+                vs(Cmd::Wait, one),
+            ]
+        };
+        m.run(prog(8)).unwrap();
+        let (t1, c1) = (m.now(), m.stats.commands);
+        m.reset_retaining_spad();
+        assert!(m.is_finished(), "reset leaves the machine idle");
+        assert_eq!(m.now(), t1, "virtual clock survives the reset");
+        assert_eq!(m.stats.commands, c1, "stats survive the reset");
+        // Inputs AND the first program's outputs are still resident.
+        assert_eq!(m.lanes[0].spad.read_slice(8, 4), vec![2.0, 4.0, 6.0, 8.0]);
+        // The second program consumes the retained scratchpad directly.
+        m.run(prog(16)).unwrap();
+        assert_eq!(m.lanes[0].spad.read_slice(16, 4), vec![2.0, 4.0, 6.0, 8.0]);
+        assert!(m.now() > t1, "the second run advances the same clock");
+        assert_eq!(m.stats.commands, c1 + 5);
     }
 
     #[test]

@@ -1,0 +1,438 @@
+//! Tile-DAG builder: decompose an `n x n` Cholesky or LU factorization
+//! into POTRF/TRSM/SYRK/GEMM-class tile tasks over a block size `b`
+//! (Buttari–Langou–Kurzak–Dongarra, arXiv:0709.1272), with explicit
+//! dependence edges.
+//!
+//! Edges encode two obligations at once:
+//!
+//! * **operand finality** — a task reads only tiles whose producing
+//!   tasks have retired (panel factorizations before the updates that
+//!   consume them);
+//! * **accumulation order** — tasks that update the *same* target tile
+//!   are chained in ascending panel index `K`, so every matrix element
+//!   receives its subtraction sequence in exactly the order the untiled
+//!   reference loop applies it. This chain is what makes the tiled
+//!   replay ([`super::exec`]) bit-identical to `util::linalg` for
+//!   *every* dependence-respecting schedule.
+//!
+//! Task ids are assigned in a deterministic topological order (panel
+//! rounds ascending), so iterating tasks by id is always a valid
+//! execution order.
+
+use std::collections::BTreeMap;
+
+/// Which factorization a DAG decomposes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DagKernel {
+    /// Symmetric positive-definite Cholesky (`A = L L^T`).
+    Cholesky,
+    /// Doolittle LU without pivoting (`A = L U`, unit-diagonal L).
+    Lu,
+}
+
+impl DagKernel {
+    /// Parse a CLI kernel name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "cholesky" => Some(DagKernel::Cholesky),
+            "lu" => Some(DagKernel::Lu),
+            _ => None,
+        }
+    }
+
+    /// The workload-registry name (also the interconnect model key for
+    /// [`crate::model::handoff_words`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            DagKernel::Cholesky => "cholesky",
+            DagKernel::Lu => "lu",
+        }
+    }
+}
+
+/// One tile task. Tile coordinates index `b x b` blocks: tile `(i, j)`
+/// covers rows `i*b..(i+1)*b` and columns `j*b..(j+1)*b`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TileOp {
+    /// Cholesky: factor diagonal tile `(k, k)` in place.
+    Potrf {
+        /// Panel index.
+        k: usize,
+    },
+    /// Cholesky: scale panel tile `(i, k)` by the factored `(k, k)`.
+    Trsm {
+        /// Target tile row.
+        i: usize,
+        /// Panel index.
+        k: usize,
+    },
+    /// Cholesky: symmetric update of diagonal tile `(i, i)` from panel
+    /// `k` (billed as a full square; see
+    /// [`crate::workloads::cholesky::tile_gemm_program`]).
+    Syrk {
+        /// Target tile row (and column).
+        i: usize,
+        /// Panel index.
+        k: usize,
+    },
+    /// Cholesky: update tile `(i, j)` from panel `k` (`k < j < i`).
+    Gemm {
+        /// Target tile row.
+        i: usize,
+        /// Target tile column.
+        j: usize,
+        /// Panel index.
+        k: usize,
+    },
+    /// LU: factor diagonal tile `(k, k)` in place.
+    Getrf {
+        /// Panel index.
+        k: usize,
+    },
+    /// LU: scale column-panel tile `(i, k)` (`i > k`).
+    TrsmCol {
+        /// Target tile row.
+        i: usize,
+        /// Panel index.
+        k: usize,
+    },
+    /// LU: eliminate inside row-panel tile `(k, j)` (`j > k`).
+    TrsmRow {
+        /// Panel index.
+        k: usize,
+        /// Target tile column.
+        j: usize,
+    },
+    /// LU: update tile `(i, j)` from panel `k` (`i > k`, `j > k`).
+    LuGemm {
+        /// Target tile row.
+        i: usize,
+        /// Target tile column.
+        j: usize,
+        /// Panel index.
+        k: usize,
+    },
+}
+
+impl TileOp {
+    /// Task-class name (cost-model and reporting key).
+    pub fn class(&self) -> &'static str {
+        match self {
+            TileOp::Potrf { .. } => "potrf",
+            TileOp::Trsm { .. } => "trsm",
+            TileOp::Syrk { .. } => "syrk",
+            TileOp::Gemm { .. } => "gemm",
+            TileOp::Getrf { .. } => "getrf",
+            TileOp::TrsmCol { .. } => "trsm_col",
+            TileOp::TrsmRow { .. } => "trsm_row",
+            TileOp::LuGemm { .. } => "lu_gemm",
+        }
+    }
+
+    /// The tile this task updates in place (read-modify-write).
+    pub fn target(&self) -> (usize, usize) {
+        match *self {
+            TileOp::Potrf { k } | TileOp::Getrf { k } => (k, k),
+            TileOp::Trsm { i, k } | TileOp::TrsmCol { i, k } => (i, k),
+            TileOp::Syrk { i, .. } => (i, i),
+            TileOp::TrsmRow { k, j } => (k, j),
+            TileOp::Gemm { i, j, .. } | TileOp::LuGemm { i, j, .. } => (i, j),
+        }
+    }
+
+    /// Tiles this task reads besides its target, in the operand order
+    /// the lowering ([`super::Lowerer`]) expects.
+    pub fn operands(&self) -> Vec<(usize, usize)> {
+        match *self {
+            TileOp::Potrf { .. } | TileOp::Getrf { .. } => vec![],
+            TileOp::Trsm { k, .. }
+            | TileOp::TrsmCol { k, .. }
+            | TileOp::TrsmRow { k, .. } => vec![(k, k)],
+            TileOp::Syrk { i, k } => vec![(i, k)],
+            TileOp::Gemm { i, j, k } => vec![(i, k), (j, k)],
+            TileOp::LuGemm { i, j, k } => vec![(i, k), (k, j)],
+        }
+    }
+}
+
+/// One node of the tile DAG.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Task {
+    /// Dense id; ids ascend in a valid topological order.
+    pub id: usize,
+    /// The tile operation.
+    pub op: TileOp,
+    /// Ids of tasks that must retire before this one may start.
+    pub deps: Vec<usize>,
+}
+
+/// A tile task DAG over an `n x n` factorization with `b x b` tiles.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TileDag {
+    /// Which factorization.
+    pub kernel: DagKernel,
+    /// Matrix dimension.
+    pub n: usize,
+    /// Tile (block) dimension; `n % b == 0`.
+    pub b: usize,
+    /// Tasks, id-indexed, in deterministic topological order.
+    pub tasks: Vec<Task>,
+}
+
+impl TileDag {
+    /// Decompose `kernel` at size `n` with tile size `b`.
+    pub fn build(kernel: DagKernel, n: usize, b: usize) -> Result<TileDag, String> {
+        if n == 0 || b == 0 {
+            return Err(format!("degenerate problem: n={n}, tile={b}"));
+        }
+        if n % b != 0 {
+            return Err(format!("tile size {b} does not divide n={n}"));
+        }
+        let t = n / b;
+        let mut tasks: Vec<Task> = Vec::new();
+        let mut ids: BTreeMap<TileOp, usize> = BTreeMap::new();
+        let mut push = |tasks: &mut Vec<Task>,
+                        ids: &mut BTreeMap<TileOp, usize>,
+                        op: TileOp,
+                        deps: Vec<Option<usize>>| {
+            let id = tasks.len();
+            let deps: Vec<usize> = deps.into_iter().flatten().collect();
+            ids.insert(op, id);
+            tasks.push(Task { id, op, deps });
+        };
+        match kernel {
+            DagKernel::Cholesky => {
+                for k in 0..t {
+                    let prev =
+                        |op: TileOp, ids: &BTreeMap<TileOp, usize>| ids.get(&op).copied();
+                    let p_dep = if k > 0 {
+                        prev(TileOp::Syrk { i: k, k: k - 1 }, &ids)
+                    } else {
+                        None
+                    };
+                    push(&mut tasks, &mut ids, TileOp::Potrf { k }, vec![p_dep]);
+                    for i in k + 1..t {
+                        // Panel tile (i, k)'s prior writer is always
+                        // GEMM(i, k, k-1) when k > 0 (k > k-1 and i > k).
+                        let chain = if k > 0 {
+                            prev(TileOp::Gemm { i, j: k, k: k - 1 }, &ids)
+                        } else {
+                            None
+                        };
+                        push(
+                            &mut tasks,
+                            &mut ids,
+                            TileOp::Trsm { i, k },
+                            vec![prev(TileOp::Potrf { k }, &ids), chain],
+                        );
+                    }
+                    for i in k + 1..t {
+                        let chain = if k > 0 {
+                            prev(TileOp::Syrk { i, k: k - 1 }, &ids)
+                        } else {
+                            None
+                        };
+                        push(
+                            &mut tasks,
+                            &mut ids,
+                            TileOp::Syrk { i, k },
+                            vec![prev(TileOp::Trsm { i, k }, &ids), chain],
+                        );
+                    }
+                    for j in k + 1..t {
+                        for i in j + 1..t {
+                            let chain = if k > 0 {
+                                prev(TileOp::Gemm { i, j, k: k - 1 }, &ids)
+                            } else {
+                                None
+                            };
+                            push(
+                                &mut tasks,
+                                &mut ids,
+                                TileOp::Gemm { i, j, k },
+                                vec![
+                                    prev(TileOp::Trsm { i, k }, &ids),
+                                    prev(TileOp::Trsm { i: j, k }, &ids),
+                                    chain,
+                                ],
+                            );
+                        }
+                    }
+                }
+            }
+            DagKernel::Lu => {
+                for k in 0..t {
+                    let prev =
+                        |op: TileOp, ids: &BTreeMap<TileOp, usize>| ids.get(&op).copied();
+                    let chain_of = |i: usize, j: usize, ids: &BTreeMap<TileOp, usize>| {
+                        if k > 0 {
+                            prev(TileOp::LuGemm { i, j, k: k - 1 }, ids)
+                        } else {
+                            None
+                        }
+                    };
+                    push(
+                        &mut tasks,
+                        &mut ids,
+                        TileOp::Getrf { k },
+                        vec![chain_of(k, k, &ids)],
+                    );
+                    for i in k + 1..t {
+                        push(
+                            &mut tasks,
+                            &mut ids,
+                            TileOp::TrsmCol { i, k },
+                            vec![prev(TileOp::Getrf { k }, &ids), chain_of(i, k, &ids)],
+                        );
+                    }
+                    for j in k + 1..t {
+                        push(
+                            &mut tasks,
+                            &mut ids,
+                            TileOp::TrsmRow { k, j },
+                            vec![prev(TileOp::Getrf { k }, &ids), chain_of(k, j, &ids)],
+                        );
+                    }
+                    for j in k + 1..t {
+                        for i in k + 1..t {
+                            push(
+                                &mut tasks,
+                                &mut ids,
+                                TileOp::LuGemm { i, j, k },
+                                vec![
+                                    prev(TileOp::TrsmCol { i, k }, &ids),
+                                    prev(TileOp::TrsmRow { k, j }, &ids),
+                                    chain_of(i, j, &ids),
+                                ],
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(TileDag { kernel, n, b, tasks })
+    }
+
+    /// Tiles per side (`n / b`).
+    pub fn tiles(&self) -> usize {
+        self.n / self.b
+    }
+
+    /// Longest path through the DAG under a per-task cost model — the
+    /// schedule-independent lower bound the `BENCH_dag.json` artifact
+    /// reports next to the achieved makespan.
+    pub fn critical_path(&self, cost: impl Fn(&TileOp) -> u64) -> u64 {
+        let mut dist = vec![0u64; self.tasks.len()];
+        let mut best = 0u64;
+        for task in &self.tasks {
+            let pred = task.deps.iter().map(|&d| dist[d]).max().unwrap_or(0);
+            dist[task.id] = pred + cost(&task.op);
+            best = best.max(dist[task.id]);
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(dag: &TileDag) -> BTreeMap<&'static str, usize> {
+        let mut c = BTreeMap::new();
+        for t in &dag.tasks {
+            *c.entry(t.op.class()).or_insert(0) += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn cholesky_task_counts_match_closed_forms() {
+        let dag = TileDag::build(DagKernel::Cholesky, 64, 16).unwrap();
+        let t = 4usize;
+        let c = counts(&dag);
+        assert_eq!(c["potrf"], t);
+        assert_eq!(c["trsm"], t * (t - 1) / 2);
+        assert_eq!(c["syrk"], t * (t - 1) / 2);
+        assert_eq!(c["gemm"], t * (t - 1) * (t - 2) / 6);
+        assert_eq!(dag.tasks.len(), c.values().sum::<usize>());
+    }
+
+    #[test]
+    fn lu_task_counts_match_closed_forms() {
+        let dag = TileDag::build(DagKernel::Lu, 64, 16).unwrap();
+        let t = 4usize;
+        let c = counts(&dag);
+        assert_eq!(c["getrf"], t);
+        assert_eq!(c["trsm_col"], t * (t - 1) / 2);
+        assert_eq!(c["trsm_row"], t * (t - 1) / 2);
+        let gemms: usize = (1..t).map(|r| r * r).sum();
+        assert_eq!(c["lu_gemm"], gemms);
+    }
+
+    #[test]
+    fn ids_ascend_in_topological_order() {
+        for kernel in [DagKernel::Cholesky, DagKernel::Lu] {
+            let dag = TileDag::build(kernel, 48, 8).unwrap();
+            for task in &dag.tasks {
+                for &d in &task.deps {
+                    assert!(d < task.id, "{:?} dep {d} >= id {}", task.op, task.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_target_writers_are_chained() {
+        // Any two tasks writing one tile must be ordered by a dependence
+        // path — the accumulation-order guarantee behind bit-identity.
+        for kernel in [DagKernel::Cholesky, DagKernel::Lu] {
+            let dag = TileDag::build(kernel, 48, 8).unwrap();
+            let n = dag.tasks.len();
+            // reach[i] = set of ancestors, as a bitset over ids.
+            let mut reach: Vec<Vec<bool>> = vec![vec![false; n]; n];
+            for task in &dag.tasks {
+                for &d in &task.deps {
+                    reach[task.id][d] = true;
+                    let (a, b) = {
+                        let (lo, hi) = reach.split_at_mut(task.id);
+                        (&mut hi[0], &lo[d])
+                    };
+                    for (x, y) in a.iter_mut().zip(b.iter()) {
+                        *x |= *y;
+                    }
+                }
+            }
+            for x in &dag.tasks {
+                for y in &dag.tasks {
+                    if x.id < y.id && x.op.target() == y.op.target() {
+                        assert!(
+                            reach[y.id][x.id],
+                            "{kernel:?}: writers {:?} and {:?} unordered",
+                            x.op,
+                            y.op
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_rejected() {
+        assert!(TileDag::build(DagKernel::Cholesky, 48, 7).is_err());
+        assert!(TileDag::build(DagKernel::Lu, 0, 8).is_err());
+        // Single tile is fine: one diagonal factorization, no edges.
+        let dag = TileDag::build(DagKernel::Cholesky, 16, 16).unwrap();
+        assert_eq!(dag.tasks.len(), 1);
+        assert!(dag.tasks[0].deps.is_empty());
+    }
+
+    #[test]
+    fn critical_path_is_the_panel_chain() {
+        // Unit costs: the Cholesky critical path alternates
+        // POTRF -> TRSM -> SYRK -> POTRF ... = 3 tasks per panel round
+        // except the last (POTRF only).
+        let dag = TileDag::build(DagKernel::Cholesky, 64, 16).unwrap();
+        assert_eq!(dag.critical_path(|_| 1), 3 * 3 + 1);
+    }
+}

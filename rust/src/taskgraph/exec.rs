@@ -1,0 +1,280 @@
+//! Host-side tile-task replay — the **numerics of record** for the
+//! task-graph subsystem.
+//!
+//! Each [`TileOp`] replays the untiled `util::linalg` reference loop
+//! *restricted* to the task's tile ranges, in the same statement form.
+//! Because (a) every matrix element receives its floating-point
+//! operations in exactly the untiled order (the DAG's accumulation
+//! chains force ascending panel index per target tile, and each task's
+//! internal loops ascend), and (b) every operand a task reads is final
+//! when the task runs (operand-finality edges), the tiled result is
+//! **bit-identical** to [`crate::util::linalg::cholesky`] /
+//! [`crate::util::linalg::lu`] under *every* dependence-respecting
+//! schedule — the property the digest invariance across `--units`
+//! counts pins in CI.
+//!
+//! The simulated tile kernels supply *timing only*: their point
+//! dataflows compute `Rsqrt`/reciprocal approximations that can never
+//! bit-match `sqrt`/divide, which is exactly why the record lives here.
+
+use super::dag::{DagKernel, TileDag, TileOp};
+use crate::util::linalg::Mat;
+
+/// Apply one tile task to the shared `n x n` matrix, in place.
+/// `b` is the tile dimension of the owning [`TileDag`].
+pub fn apply(op: &TileOp, b: usize, m: &mut Mat) {
+    match *op {
+        TileOp::Potrf { k } => {
+            let lo = k * b;
+            for kk in lo..lo + b {
+                let d = m[(kk, kk)].sqrt();
+                assert!(d.is_finite() && d > 0.0, "matrix not SPD at pivot {kk}");
+                m[(kk, kk)] = d;
+                for i in kk + 1..lo + b {
+                    m[(i, kk)] /= d;
+                }
+                for j in kk + 1..lo + b {
+                    let ljk = m[(j, kk)];
+                    for i in j..lo + b {
+                        let v = m[(i, kk)] * ljk;
+                        m[(i, j)] -= v;
+                    }
+                }
+            }
+        }
+        TileOp::Trsm { i, k } => {
+            let (rb, cb) = (i * b, k * b);
+            for kk in cb..cb + b {
+                let d = m[(kk, kk)];
+                for r in rb..rb + b {
+                    m[(r, kk)] /= d;
+                }
+                for j in kk + 1..cb + b {
+                    let ljk = m[(j, kk)];
+                    for r in rb..rb + b {
+                        let v = m[(r, kk)] * ljk;
+                        m[(r, j)] -= v;
+                    }
+                }
+            }
+        }
+        TileOp::Syrk { i, k } => {
+            let (tb, cb) = (i * b, k * b);
+            for kk in cb..cb + b {
+                for j in tb..tb + b {
+                    let ljk = m[(j, kk)];
+                    for r in j..tb + b {
+                        let v = m[(r, kk)] * ljk;
+                        m[(r, j)] -= v;
+                    }
+                }
+            }
+        }
+        TileOp::Gemm { i, j, k } => {
+            let (rb, jb, cb) = (i * b, j * b, k * b);
+            for kk in cb..cb + b {
+                for c in jb..jb + b {
+                    let ljk = m[(c, kk)];
+                    for r in rb..rb + b {
+                        let v = m[(r, kk)] * ljk;
+                        m[(r, c)] -= v;
+                    }
+                }
+            }
+        }
+        TileOp::Getrf { k } => {
+            let lo = k * b;
+            for kk in lo..lo + b {
+                let piv = m[(kk, kk)];
+                assert!(piv.abs() > 1e-300, "zero pivot at {kk}");
+                for i in kk + 1..lo + b {
+                    m[(i, kk)] /= piv;
+                }
+                for j in kk + 1..lo + b {
+                    let akj = m[(kk, j)];
+                    for i in kk + 1..lo + b {
+                        let l = m[(i, kk)];
+                        m[(i, j)] -= l * akj;
+                    }
+                }
+            }
+        }
+        TileOp::TrsmCol { i, k } => {
+            let (rb, cb) = (i * b, k * b);
+            for kk in cb..cb + b {
+                let piv = m[(kk, kk)];
+                for r in rb..rb + b {
+                    m[(r, kk)] /= piv;
+                }
+                for j in kk + 1..cb + b {
+                    let akj = m[(kk, j)];
+                    for r in rb..rb + b {
+                        let l = m[(r, kk)];
+                        m[(r, j)] -= l * akj;
+                    }
+                }
+            }
+        }
+        TileOp::TrsmRow { k, j } => {
+            let (cb, jb) = (k * b, j * b);
+            for kk in cb..cb + b {
+                for c in jb..jb + b {
+                    let akj = m[(kk, c)];
+                    for i in kk + 1..cb + b {
+                        let l = m[(i, kk)];
+                        m[(i, c)] -= l * akj;
+                    }
+                }
+            }
+        }
+        TileOp::LuGemm { i, j, k } => {
+            let (rb, jb, cb) = (i * b, j * b, k * b);
+            for kk in cb..cb + b {
+                for c in jb..jb + b {
+                    let akj = m[(kk, c)];
+                    for r in rb..rb + b {
+                        let l = m[(r, kk)];
+                        m[(r, c)] -= l * akj;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Post-factorization cleanup, matching the untiled reference exactly:
+/// Cholesky zeroes the strict upper triangle; LU leaves `L\U` packed.
+pub fn finalize(kernel: DagKernel, m: &mut Mat) {
+    if kernel == DagKernel::Cholesky {
+        let n = m.rows;
+        for i in 0..n {
+            for j in i + 1..n {
+                m[(i, j)] = 0.0;
+            }
+        }
+    }
+}
+
+/// Replay the whole DAG in id order (a valid topological order) and
+/// finalize — the oracle the scheduler's factor digest must match.
+pub fn replay(dag: &TileDag, a: &Mat) -> Mat {
+    let mut m = a.clone();
+    for task in &dag.tasks {
+        apply(&task.op, dag.b, &mut m);
+    }
+    finalize(dag.kernel, &mut m);
+    m
+}
+
+/// FNV-1a digest over the factor's f64 bit patterns in row-major order.
+/// Schedule-independent because the replay itself is; `BENCH_dag.json`
+/// pins it across `--units` counts.
+pub fn digest(m: &Mat) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in &m.data {
+        for byte in x.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::{cholesky as chol_ref, lu as lu_ref};
+
+    fn assert_bit_identical(got: &Mat, want: &Mat, ctx: &str) {
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{ctx}");
+        for i in 0..got.rows {
+            for j in 0..got.cols {
+                assert_eq!(
+                    got[(i, j)].to_bits(),
+                    want[(i, j)].to_bits(),
+                    "{ctx}: [{i}][{j}] got {} want {}",
+                    got[(i, j)],
+                    want[(i, j)],
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_cholesky_is_bit_identical_to_untiled() {
+        for n in [16usize, 48, 64] {
+            for b in [8usize, 16] {
+                let a = Mat::spd(n, 1.0);
+                let want = chol_ref(&a);
+                let dag = TileDag::build(DagKernel::Cholesky, n, b).unwrap();
+                let got = replay(&dag, &a);
+                assert_bit_identical(&got, &want, &format!("cholesky n={n} b={b}"));
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_lu_is_bit_identical_to_untiled() {
+        for n in [16usize, 48, 64] {
+            for b in [8usize, 16] {
+                let a = Mat::spd(n, 0.7);
+                let want = lu_ref(&a);
+                let dag = TileDag::build(DagKernel::Lu, n, b).unwrap();
+                let got = replay(&dag, &a);
+                assert_bit_identical(&got, &want, &format!("lu n={n} b={b}"));
+            }
+        }
+    }
+
+    #[test]
+    fn any_dependence_respecting_order_gives_identical_bits() {
+        // Greedy LIFO list schedule (deliberately different from id
+        // order): the digest must not move — the accumulation chains
+        // are doing their job.
+        for (kernel, seed) in [(DagKernel::Cholesky, 0.3), (DagKernel::Lu, 0.9)] {
+            let (n, b) = (48usize, 8usize);
+            let a = Mat::spd(n, seed);
+            let dag = TileDag::build(kernel, n, b).unwrap();
+            let want = replay(&dag, &a);
+
+            let mut indeg: Vec<usize> =
+                dag.tasks.iter().map(|t| t.deps.len()).collect();
+            let mut dependents: Vec<Vec<usize>> = vec![vec![]; dag.tasks.len()];
+            for t in &dag.tasks {
+                for &d in &t.deps {
+                    dependents[d].push(t.id);
+                }
+            }
+            let mut ready: Vec<usize> = dag
+                .tasks
+                .iter()
+                .filter(|t| t.deps.is_empty())
+                .map(|t| t.id)
+                .collect();
+            let mut m = a.clone();
+            let mut done = 0usize;
+            while let Some(id) = ready.pop() {
+                apply(&dag.tasks[id].op, b, &mut m);
+                done += 1;
+                for &s in &dependents[id] {
+                    indeg[s] -= 1;
+                    if indeg[s] == 0 {
+                        ready.push(s);
+                    }
+                }
+            }
+            assert_eq!(done, dag.tasks.len(), "schedule covered every task");
+            finalize(kernel, &mut m);
+            assert_eq!(digest(&m), digest(&want), "{kernel:?}: digest moved");
+        }
+    }
+
+    #[test]
+    fn digest_distinguishes_different_factors() {
+        let a = Mat::spd(16, 1.0);
+        let c = chol_ref(&a);
+        let l = lu_ref(&a);
+        assert_ne!(digest(&c), digest(&l));
+        assert_eq!(digest(&c), digest(&c.clone()));
+    }
+}

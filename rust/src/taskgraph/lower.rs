@@ -1,0 +1,209 @@
+//! Lowering tile tasks onto the typed `vsc` tile-kernel builders.
+//!
+//! A [`Lowerer`] compiles the per-kernel tile plan **once** (one
+//! dataflow configuration per kernel, reused by every task) and then
+//! stamps out relocated control programs per task: the same compiled
+//! kernel, re-targeted at whichever scratchpad slot regions the
+//! scheduler assigned. This is the task-graph face of the paper's
+//! "configure once, stream many" economy — reconfiguration cost is
+//! paid once per unit, not once per tile.
+//!
+//! It also measures per-class cycle costs on a scratch machine
+//! ([`Lowerer::class_costs`]), which the scheduler uses for
+//! critical-path priorities before any unit has run anything.
+
+use std::collections::BTreeMap;
+
+use super::dag::{DagKernel, TileOp};
+use crate::isa::{LaneMask, Program};
+use crate::sim::SimConfig;
+use crate::vsc::{Region, SpadAlloc};
+use crate::workloads::{self, cholesky, lu, WlError};
+
+/// The compiled tile plan for one kernel family.
+pub enum TilePlans {
+    /// Cholesky tile kernels (POTRF / TRSM / SYRK / GEMM share one plan).
+    Chol(cholesky::Plan),
+    /// LU tile kernels (GETRF / TRSM-col / TRSM-row / GEMM share one plan).
+    Lu(lu::Plan),
+}
+
+/// Compile-once, relocate-per-task program factory for tile tasks.
+pub struct Lowerer {
+    kernel: DagKernel,
+    b: usize,
+    plans: TilePlans,
+    mask: LaneMask,
+}
+
+impl Lowerer {
+    /// Compile the tile plan for `kernel` at tile size `b`.
+    pub fn new(kernel: DagKernel, b: usize) -> Result<Self, WlError> {
+        let plans = match kernel {
+            DagKernel::Cholesky => TilePlans::Chol(cholesky::tile_plan(b)?),
+            DagKernel::Lu => TilePlans::Lu(lu::tile_plan(b)?),
+        };
+        Ok(Self { kernel, b, plans, mask: LaneMask::one(0) })
+    }
+
+    /// Tile size the plan was compiled for.
+    pub fn b(&self) -> usize {
+        self.b
+    }
+
+    /// Whether this kernel's tile programs consume the `b`-word
+    /// transient scratch region (Cholesky round-trips `inva` through
+    /// the scratchpad; LU forwards the reciprocal over XFER).
+    pub fn needs_tmp(&self) -> bool {
+        self.kernel == DagKernel::Cholesky
+    }
+
+    /// Emit the control program for `op` against the assigned slot
+    /// regions. `operands` follow [`TileOp::operands`] order; `target`
+    /// holds the tile being written; `tmp` is the transient scratch
+    /// (ignored by LU programs). Panics if `op` belongs to the other
+    /// kernel family — the scheduler only feeds ops from its own DAG.
+    pub fn program(
+        &self,
+        op: &TileOp,
+        operands: &[Region],
+        target: Region,
+        tmp: Region,
+    ) -> Program {
+        let b = self.b;
+        match (&self.plans, op) {
+            (TilePlans::Chol(p), TileOp::Potrf { .. }) => {
+                cholesky::tile_potrf_program(p, b, target, tmp, self.mask)
+            }
+            (TilePlans::Chol(p), TileOp::Trsm { .. }) => {
+                cholesky::tile_trsm_program(p, b, operands[0], target, tmp, self.mask)
+            }
+            (TilePlans::Chol(p), TileOp::Syrk { .. }) => {
+                cholesky::tile_gemm_program(p, b, operands[0], operands[0], target, self.mask)
+            }
+            (TilePlans::Chol(p), TileOp::Gemm { .. }) => {
+                cholesky::tile_gemm_program(p, b, operands[0], operands[1], target, self.mask)
+            }
+            (TilePlans::Lu(p), TileOp::Getrf { .. }) => {
+                lu::tile_getrf_program(p, b, target, self.mask)
+            }
+            (TilePlans::Lu(p), TileOp::TrsmCol { .. }) => {
+                lu::tile_trsm_col_program(p, b, operands[0], target, self.mask)
+            }
+            (TilePlans::Lu(p), TileOp::TrsmRow { .. }) => {
+                lu::tile_trsm_row_program(p, b, operands[0], target, self.mask)
+            }
+            (TilePlans::Lu(p), TileOp::LuGemm { .. }) => {
+                lu::tile_gemm_program(p, b, operands[0], operands[1], target, self.mask)
+            }
+            _ => panic!("tile op {op:?} does not belong to kernel {:?}", self.kernel),
+        }
+    }
+
+    /// Representative ops, one per task class of this kernel.
+    fn class_reps(&self) -> Vec<TileOp> {
+        match self.kernel {
+            DagKernel::Cholesky => vec![
+                TileOp::Potrf { k: 0 },
+                TileOp::Trsm { i: 1, k: 0 },
+                TileOp::Syrk { i: 1, k: 0 },
+                TileOp::Gemm { i: 2, j: 1, k: 0 },
+            ],
+            DagKernel::Lu => vec![
+                TileOp::Getrf { k: 0 },
+                TileOp::TrsmCol { i: 1, k: 0 },
+                TileOp::TrsmRow { k: 0, j: 1 },
+                TileOp::LuGemm { i: 2, j: 1, k: 0 },
+            ],
+        }
+    }
+
+    /// Measure each task class once on a scratch single-lane machine
+    /// and return `class name -> cycles`. Tile-program cycle counts are
+    /// data-independent, so one representative per class suffices; the
+    /// scheduler uses these for longest-path-to-sink priorities.
+    pub fn class_costs(&self) -> Result<BTreeMap<&'static str, u64>, String> {
+        let b = self.b;
+        let mut al = SpadAlloc::with_capacity(SimConfig::default().lane_spad_words);
+        let bb = (b * b) as i64;
+        let s0 = al.region("cost.s0", bb).map_err(|e| e.to_string())?;
+        let s1 = al.region("cost.s1", bb).map_err(|e| e.to_string())?;
+        let s2 = al.region("cost.s2", bb).map_err(|e| e.to_string())?;
+        let tmp = al.region("cost.tmp", b as i64).map_err(|e| e.to_string())?;
+        let seed = crate::util::linalg::Mat::spd(b, 0.6);
+        let mut costs = BTreeMap::new();
+        for op in self.class_reps() {
+            let n_ops = op.operands().len();
+            let prog = self.program(&op, &[s1, s2][..n_ops], s0, tmp);
+            let mut m = workloads::machine(1);
+            // Plausible tile data everywhere (values cannot change the
+            // cycle count, but keep the arithmetic finite regardless).
+            for slot in [s0, s1, s2] {
+                for j in 0..b {
+                    for i in 0..b {
+                        m.lanes[0]
+                            .spad
+                            .write(slot.addr((j * b + i) as i64), seed[(i, j)]);
+                    }
+                }
+            }
+            m.run(prog).map_err(|e| format!("{}: {e}", op.class()))?;
+            costs.insert(op.class(), m.now());
+        }
+        Ok(costs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vsc::check_program;
+
+    #[test]
+    fn lowered_programs_pass_the_vsc_check_for_both_kernels() {
+        for kernel in [DagKernel::Cholesky, DagKernel::Lu] {
+            let lw = Lowerer::new(kernel, 8).unwrap();
+            let mut al = SpadAlloc::with_capacity(2048);
+            let s0 = al.region("t.s0", 64).unwrap();
+            let s1 = al.region("t.s1", 64).unwrap();
+            let s2 = al.region("t.s2", 64).unwrap();
+            let tmp = al.region("t.tmp", 8).unwrap();
+            for op in lw.class_reps() {
+                let n_ops = op.operands().len();
+                let prog = lw.program(&op, &[s1, s2][..n_ops], s0, tmp);
+                let rep = check_program(&prog, &SimConfig::default());
+                assert!(
+                    rep.errors().is_empty(),
+                    "{kernel:?} {}:\n{rep}",
+                    op.class()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn class_costs_cover_every_class_and_are_positive() {
+        for (kernel, classes) in [
+            (DagKernel::Cholesky, vec!["potrf", "trsm", "syrk", "gemm"]),
+            (DagKernel::Lu, vec!["getrf", "trsm_col", "trsm_row", "lu_gemm"]),
+        ] {
+            let lw = Lowerer::new(kernel, 8).unwrap();
+            let costs = lw.class_costs().unwrap();
+            for c in classes {
+                assert!(costs.get(c).copied().unwrap_or(0) > 0, "{kernel:?} {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_family_op_panics() {
+        let lw = Lowerer::new(DagKernel::Cholesky, 8).unwrap();
+        let mut al = SpadAlloc::with_capacity(2048);
+        let s0 = al.region("t.s0", 64).unwrap();
+        let tmp = al.region("t.tmp", 8).unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            lw.program(&TileOp::Getrf { k: 0 }, &[], s0, tmp)
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! `taskgraph` — tiled task-graph factorizations over persistent-state
+//! units.
+//!
+//! The paper's single-unit story ends at one kernel occupying one
+//! REVEL unit. This subsystem scales the two panel factorizations
+//! (Cholesky, LU without pivoting) *across* units by decomposing an
+//! `n x n` problem into a DAG of `b x b` tile tasks — the classic
+//! POTRF/TRSM/SYRK/GEMM (resp. GETRF/TRSM-col/TRSM-row/GEMM)
+//! tile-algorithm shape — and scheduling the DAG over a pool of
+//! persistent `sim::Machine` units that keep their scratchpads warm
+//! between tasks.
+//!
+//! Three layers:
+//!
+//! * [`dag`] — [`TileDag::build`] emits the task list in a
+//!   deterministic topological id order, with two edge families:
+//!   **operand finality** (a task reads only finished tiles) and
+//!   **accumulation order** (writers of the same target tile form a
+//!   chain in ascending panel index). Together they make the replayed
+//!   result schedule-invariant down to the bit.
+//! * [`exec`] — host-side replay of each task as the untiled
+//!   `util::linalg` loop restricted to the tile's index ranges: the
+//!   numerics of record, bit-identical to the untiled reference.
+//! * [`lower`] — [`Lowerer`] compiles each kernel's tile plan once and
+//!   stamps relocated `vsc` control programs per task for whichever
+//!   scratchpad slots the scheduler assigned; also measures per-class
+//!   cycle costs for critical-path priorities.
+//!
+//! The DAG-aware scheduler itself lives in
+//! [`crate::coordinator::cosim`] (`run_dag`), next to the calendar
+//! engine it shares with the serving co-simulator; `revel dag` is the
+//! CLI entry point and `BENCH_dag.json` the artifact.
+
+pub mod dag;
+pub mod exec;
+pub mod lower;
+
+pub use dag::{DagKernel, Task, TileDag, TileOp};
+pub use lower::{Lowerer, TilePlans};

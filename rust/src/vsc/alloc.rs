@@ -13,6 +13,20 @@
 //! [`Region`] doubles as a checked [`Pattern2D`] factory: patterns built
 //! through a region assert containment, so a stream can never silently
 //! walk into a neighbouring array.
+//!
+//! # Region lifetimes (eras)
+//!
+//! The tiled task-graph executor ([`crate::taskgraph`]) keeps one
+//! allocator alive per persistent unit across many tile tasks, so the
+//! allocator also tracks **eras**: [`SpadAlloc::advance_era`] opens a
+//! new stage and frees every live region from earlier eras that was not
+//! pinned with [`SpadAlloc::retain`]; [`SpadAlloc::free`] releases one
+//! region explicitly (slot eviction). Freed ranges land on an exact-fit
+//! free list and are reused deterministically (lowest base first), and
+//! a new allocation can never overlap a still-live region — the
+//! invariant `tests/taskgraph_alias.rs` checks on the real tile plans.
+//! Duplicate-name rejection applies to *live* regions only, so a fixed
+//! static name can be re-allocated era after era.
 
 use crate::isa::Pattern2D;
 use crate::sim::{SimConfig, LINE_WORDS};
@@ -141,18 +155,42 @@ impl std::fmt::Display for AllocError {
 
 impl std::error::Error for AllocError {}
 
+/// Per-region lifetime bookkeeping, index-aligned with
+/// `SpadAlloc::regions` (kept outside [`Region`] so regions stay `Copy`
+/// and value-comparable).
+#[derive(Clone, Copy, Debug)]
+struct RegionMeta {
+    /// Era the region was allocated in.
+    era: u32,
+    /// Retained regions survive [`SpadAlloc::advance_era`].
+    retained: bool,
+}
+
 /// Sequential, line-aligned scratchpad region allocator.
 #[derive(Clone, Debug)]
 pub struct SpadAlloc {
     cap: i64,
     cursor: i64,
     regions: Vec<Region>,
+    /// Lifetime metadata for each live region (index-aligned).
+    meta: Vec<RegionMeta>,
+    /// Current era (starts at 0; bumped by [`SpadAlloc::advance_era`]).
+    era: u32,
+    /// Freed `(base, words)` ranges, reusable by exact-fit allocation.
+    free_list: Vec<(i64, i64)>,
 }
 
 impl SpadAlloc {
     /// Allocator over an explicit capacity in words.
     pub fn with_capacity(words: usize) -> Self {
-        Self { cap: words as i64, cursor: 0, regions: Vec::new() }
+        Self {
+            cap: words as i64,
+            cursor: 0,
+            regions: Vec::new(),
+            meta: Vec::new(),
+            era: 0,
+            free_list: Vec::new(),
+        }
     }
 
     /// Allocator over a lane's local scratchpad.
@@ -166,7 +204,9 @@ impl SpadAlloc {
     }
 
     /// Allocate `words` words as a new named region. Bases are aligned
-    /// to a scratchpad line; regions never overlap by construction.
+    /// to a scratchpad line; live regions never overlap by construction.
+    /// An exact-fit freed range (lowest base first) is reused before the
+    /// bump cursor grows, so slot-sized churn is address-stable.
     pub fn region(&mut self, name: &'static str, words: i64) -> Result<Region, AllocError> {
         if words <= 0 {
             return Err(AllocError::Empty(name));
@@ -174,15 +214,84 @@ impl SpadAlloc {
         if self.regions.iter().any(|r| r.name == name) {
             return Err(AllocError::Duplicate(name));
         }
-        let line = LINE_WORDS as i64;
-        let base = (self.cursor + line - 1) / line * line;
-        if base + words > self.cap {
-            return Err(AllocError::Capacity { name, words, used: base, cap: self.cap });
-        }
+        let base = match self
+            .free_list
+            .iter()
+            .enumerate()
+            .filter(|(_, &(_, w))| w == words)
+            .min_by_key(|(_, &(b, _))| b)
+            .map(|(i, _)| i)
+        {
+            Some(i) => self.free_list.swap_remove(i).0,
+            None => {
+                let line = LINE_WORDS as i64;
+                let base = (self.cursor + line - 1) / line * line;
+                if base + words > self.cap {
+                    return Err(AllocError::Capacity {
+                        name,
+                        words,
+                        used: base,
+                        cap: self.cap,
+                    });
+                }
+                self.cursor = base + words;
+                base
+            }
+        };
         let r = Region { name, base, words };
-        self.cursor = base + words;
         self.regions.push(r);
+        self.meta.push(RegionMeta { era: self.era, retained: false });
         Ok(r)
+    }
+
+    /// Open a new era: every live region from an earlier era that was
+    /// not pinned with [`SpadAlloc::retain`] is freed (its range joins
+    /// the exact-fit free list, its name becomes reusable). Returns the
+    /// new era number.
+    pub fn advance_era(&mut self) -> u32 {
+        self.era += 1;
+        let era = self.era;
+        let mut i = 0;
+        while i < self.regions.len() {
+            if self.meta[i].era < era && !self.meta[i].retained {
+                let r = self.regions.remove(i);
+                self.meta.remove(i);
+                self.free_list.push((r.base, r.words));
+            } else {
+                i += 1;
+            }
+        }
+        era
+    }
+
+    /// Current era number.
+    pub fn era(&self) -> u32 {
+        self.era
+    }
+
+    /// Pin a live region so it survives [`SpadAlloc::advance_era`]
+    /// (persistent tile slots, round-trip scratch). Panics if the
+    /// region is not live in this allocator.
+    pub fn retain(&mut self, r: &Region) {
+        let i = self.index_of(r);
+        self.meta[i].retained = true;
+    }
+
+    /// Explicitly free a live region (tile-slot eviction): its range
+    /// joins the exact-fit free list and its name becomes reusable.
+    /// Panics if the region is not live in this allocator.
+    pub fn free(&mut self, r: &Region) {
+        let i = self.index_of(r);
+        self.regions.remove(i);
+        self.meta.remove(i);
+        self.free_list.push((r.base, r.words));
+    }
+
+    fn index_of(&self, r: &Region) -> usize {
+        self.regions
+            .iter()
+            .position(|x| x == r)
+            .unwrap_or_else(|| panic!("region {:?} is not live in this allocator", r.name))
     }
 
     /// Words still available (from the aligned cursor).
@@ -265,6 +374,59 @@ mod tests {
         let mut al = SpadAlloc::with_capacity(128);
         let a = al.region("a", 32).unwrap();
         let _ = a.lin(16, 32); // runs to word 47 > region end 32
+    }
+
+    #[test]
+    fn era_frees_unretained_regions_and_reuses_names() {
+        let mut al = SpadAlloc::with_capacity(256);
+        let keep = al.region("keep", 32).unwrap();
+        al.retain(&keep);
+        let tmp = al.region("tmp", 16).unwrap();
+        assert_eq!(al.era(), 0);
+        assert_eq!(al.advance_era(), 1);
+        // `keep` survives, `tmp` is gone and its name is reusable.
+        assert_eq!(al.regions(), &[keep]);
+        let tmp2 = al.region("tmp", 16).unwrap();
+        assert_eq!(tmp2.base(), tmp.base(), "exact-fit reuse is address-stable");
+        // But a still-live name is still a duplicate.
+        assert_eq!(al.region("keep", 32).unwrap_err(), AllocError::Duplicate("keep"));
+    }
+
+    #[test]
+    fn free_then_realloc_prefers_lowest_exact_fit() {
+        let mut al = SpadAlloc::with_capacity(512);
+        let a = al.region("a", 64).unwrap();
+        let b = al.region("b", 64).unwrap();
+        let c = al.region("c", 64).unwrap();
+        al.free(&b);
+        al.free(&a);
+        // Both freed slots fit; the lower base wins deterministically.
+        let d = al.region("d", 64).unwrap();
+        assert_eq!(d.base(), a.base());
+        let e = al.region("e", 64).unwrap();
+        assert_eq!(e.base(), b.base());
+        // No exact fit (different size) -> bump allocation past c.
+        let f = al.region("f", 32).unwrap();
+        assert!(f.base() >= c.end());
+        // Live regions stay pairwise disjoint through the churn.
+        let live = al.regions().to_vec();
+        for (i, x) in live.iter().enumerate() {
+            for y in &live[i + 1..] {
+                assert!(
+                    x.end() <= y.base() || y.end() <= x.base(),
+                    "{x:?} overlaps {y:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not live")]
+    fn double_free_panics() {
+        let mut al = SpadAlloc::with_capacity(128);
+        let a = al.region("a", 16).unwrap();
+        al.free(&a);
+        al.free(&a);
     }
 
     #[test]

@@ -291,6 +291,138 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
     Ok(b.finish())
 }
 
+/// Feature set of every Cholesky *tile* program in the task-graph
+/// subsystem ([`crate::taskgraph`]): the tested "+inductive" ladder
+/// shape with memory round-trips between dataflow regions. Fine-grain
+/// gated forwarding is deliberately off — tile programs are short and
+/// rebuilt per task, and the gate-port streams only exist on the
+/// fine-grain kernel build.
+pub const TILE_FEATS: Features = Features {
+    inductive: true,
+    fine_grain: false,
+    heterogeneous: true,
+    masking: true,
+};
+
+/// Plan for the `b x b` tile kernels (compile once, relocate per slot).
+/// Tile programs built from this plan must use [`TILE_FEATS`].
+pub fn tile_plan(b: usize) -> Result<Plan, WlError> {
+    plan(b, TILE_FEATS)
+}
+
+/// POTRF tile task: factor the diagonal tile held in `target`
+/// (column-major `b x b`) in place — the whole [`program`] body at
+/// `n = b`, relocated into an arbitrary slot region. `tmp` is the
+/// `b`-word inva round-trip scratch.
+pub fn tile_potrf_program(
+    plan: &Plan,
+    b_sz: usize,
+    target: Region,
+    tmp: Region,
+    mask: LaneMask,
+) -> Program {
+    let n_i = b_sz as i64;
+    let p = &plan.ports;
+    let mut b = plan.built.program(plan.cfg.clone(), TILE_FEATS, mask);
+    for k in 0..n_i {
+        let len = n_i - k;
+        b.barrier();
+        b.ld(target.lin(at(n_i, k, k), 1), p.akk);
+        b.st(tmp.lin(k, 1), p.inva_out);
+        b.barrier();
+        b.ld_reuse(tmp.lin(k, 1), p.inva, Reuse::uniform(len as f64));
+        b.ld(target.lin(at(n_i, k, k), len), p.acol);
+        b.st(target.lin(at(n_i, k, k), len), p.lcol);
+        if k < n_i - 1 {
+            b.barrier();
+            b.st_rmw(trailing(&target, n_i, k), p.a_upd);
+            b.ld_rmw(trailing(&target, n_i, k), p.a, 0);
+            b.ld_reuse(
+                target.lin(at(n_i, k + 1, k), n_i - k - 1),
+                p.ci,
+                Reuse { n_r: (n_i - k - 1) as f64, s_r: -1.0 },
+            );
+            b.ld(cj_pat(&target, n_i, k), p.cj);
+        }
+    }
+    b.finish()
+}
+
+/// TRSM tile task: scale the panel tile `target` (rows of tile `I`,
+/// columns of panel `K`) by the factored diagonal tile in `left`, with
+/// the same per-pivot trailing update the untiled kernel applies —
+/// restricted to `target`'s `b` rows. The point dataflow re-derives the
+/// column scale from `left`'s diagonal, so timing matches the untiled
+/// region schedule; numerics of record come from the host-side replay
+/// ([`crate::taskgraph::exec`]).
+pub fn tile_trsm_program(
+    plan: &Plan,
+    b_sz: usize,
+    left: Region,
+    target: Region,
+    tmp: Region,
+    mask: LaneMask,
+) -> Program {
+    let n_i = b_sz as i64;
+    let p = &plan.ports;
+    let mut b = plan.built.program(plan.cfg.clone(), TILE_FEATS, mask);
+    for k in 0..n_i {
+        let t = n_i - k - 1;
+        b.barrier();
+        b.ld(left.lin(at(n_i, k, k), 1), p.akk);
+        b.st(tmp.lin(k, 1), p.inva_out);
+        b.barrier();
+        b.ld_reuse(tmp.lin(k, 1), p.inva, Reuse::uniform(n_i as f64));
+        b.ld(target.lin(at(n_i, 0, k), n_i), p.acol);
+        b.st(target.lin(at(n_i, 0, k), n_i), p.lcol);
+        if t > 0 {
+            b.barrier();
+            let block = target.rect(at(n_i, 0, k + 1), 1, n_i, n_i, t);
+            b.st_rmw(block.clone(), p.a_upd);
+            b.ld_rmw(block, p.a, 0);
+            b.ld_reuse(
+                left.lin(at(n_i, k + 1, k), t),
+                p.ci,
+                Reuse::uniform(n_i as f64),
+            );
+            b.ld(target.rect(at(n_i, 0, k), 1, n_i, 0, t), p.cj);
+        }
+    }
+    b.finish()
+}
+
+/// SYRK/GEMM tile task: `target -= left_colk * right_colk^T` summed
+/// over the `b` columns of panel `K` — the trailing update restricted
+/// to one `b x b` tile. `left` holds tile `(I, K)`, `right` tile
+/// `(J, K)`; a SYRK passes the same region for both. The symmetric
+/// (SYRK) case is billed as the full square — a documented ~2x cycle
+/// overestimate that applies identically to every schedule.
+pub fn tile_gemm_program(
+    plan: &Plan,
+    b_sz: usize,
+    left: Region,
+    right: Region,
+    target: Region,
+    mask: LaneMask,
+) -> Program {
+    let n_i = b_sz as i64;
+    let p = &plan.ports;
+    let mut b = plan.built.program(plan.cfg.clone(), TILE_FEATS, mask);
+    for k in 0..n_i {
+        b.barrier();
+        let block = target.rect(0, 1, n_i, n_i, n_i);
+        b.st_rmw(block.clone(), p.a_upd);
+        b.ld_rmw(block, p.a, 0);
+        b.ld_reuse(
+            right.lin(at(n_i, 0, k), n_i),
+            p.ci,
+            Reuse::uniform(n_i as f64),
+        );
+        b.ld(left.rect(at(n_i, 0, k), 1, n_i, 0, n_i), p.cj);
+    }
+    b.finish()
+}
+
 /// Problem data for one lane.
 pub struct Instance {
     pub a: Mat,
@@ -429,6 +561,69 @@ mod tests {
             let prog = program(12, feats, LaneMask::one(0)).unwrap();
             let rep = crate::vsc::check_program(&prog, &SimConfig::default());
             assert!(rep.errors().is_empty(), "{feats:?}:\n{rep}");
+        }
+    }
+
+    /// Slot regions for tile tests: two operand tiles + target + tmp.
+    fn tile_regions(b: usize) -> (Region, Region, Region, Region) {
+        let mut al = SpadAlloc::with_capacity(SimConfig::default().lane_spad_words);
+        let s0 = al.region("t.s0", (b * b) as i64).unwrap();
+        let s1 = al.region("t.s1", (b * b) as i64).unwrap();
+        let s2 = al.region("t.s2", (b * b) as i64).unwrap();
+        let tmp = al.region("t.tmp", b as i64).unwrap();
+        (s0, s1, s2, tmp)
+    }
+
+    #[test]
+    fn tile_programs_pass_the_vsc_check() {
+        for b in [8usize, 16] {
+            let plan = tile_plan(b).unwrap();
+            let (s0, s1, s2, tmp) = tile_regions(b);
+            let mask = LaneMask::one(0);
+            for (name, prog) in [
+                ("potrf", tile_potrf_program(&plan, b, s0, tmp, mask)),
+                ("trsm", tile_trsm_program(&plan, b, s0, s1, tmp, mask)),
+                ("gemm", tile_gemm_program(&plan, b, s0, s1, s2, mask)),
+                ("syrk", tile_gemm_program(&plan, b, s0, s0, s2, mask)),
+            ] {
+                let rep = crate::vsc::check_program(&prog, &SimConfig::default());
+                assert!(rep.errors().is_empty(), "b={b} {name}:\n{rep}");
+            }
+        }
+    }
+
+    #[test]
+    fn potrf_tile_matches_reference_on_the_machine() {
+        // The diagonal tile task is a complete b x b factorization, so
+        // the simulated result must match the untiled reference — the
+        // same 1e-9 bound `prepare` enforces.
+        for b in [8usize, 16] {
+            let plan = tile_plan(b).unwrap();
+            let (s0, _, _, tmp) = tile_regions(b);
+            let mask = LaneMask::one(0);
+            let prog = tile_potrf_program(&plan, b, s0, tmp, mask);
+            let inst = instance(b, 3);
+            let mut m = machine(1);
+            for j in 0..b {
+                for i in 0..b {
+                    m.lanes[0].spad.write(
+                        s0.addr(at(b as i64, i as i64, j as i64)),
+                        inst.a[(i, j)],
+                    );
+                }
+            }
+            m.run(prog).unwrap();
+            for j in 0..b {
+                for i in j..b {
+                    let got =
+                        m.lanes[0].spad.read(s0.addr(at(b as i64, i as i64, j as i64)));
+                    let want = inst.l_ref[(i, j)];
+                    assert!(
+                        (got - want).abs() < 1e-9,
+                        "b={b} L[{i}][{j}]: got {got}, want {want}"
+                    );
+                }
+            }
         }
     }
 }

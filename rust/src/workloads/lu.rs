@@ -194,6 +194,143 @@ pub fn program(n: usize, feats: Features, mask: LaneMask) -> Result<Program, WlE
     Ok(b.finish())
 }
 
+/// Plan for the `b x b` tile kernels of the task-graph subsystem
+/// ([`crate::taskgraph`]). LU's kernel build ignores the feature set
+/// (no gated ports), so tile programs run the full-feature shape.
+pub fn tile_plan(b: usize) -> Result<Plan, WlError> {
+    plan(b, Features::ALL)
+}
+
+/// GETRF tile task: factor the diagonal tile in `target` (column-major
+/// `b x b`) in place — the whole [`program`] body at `n = b` relocated
+/// into an arbitrary slot region.
+pub fn tile_getrf_program(
+    plan: &Plan,
+    b_sz: usize,
+    target: Region,
+    mask: LaneMask,
+) -> Program {
+    let n_i = b_sz as i64;
+    let p = &plan.ports;
+    let mut b = plan.built.program(plan.cfg.clone(), Features::ALL, mask);
+    for k in 0..n_i - 1 {
+        let t = n_i - k - 1;
+        b.barrier();
+        b.ld(target.lin(at(n_i, k, k), 1), p.akk);
+        b.xfer_reuse(p.inv_out, p.inv, 1, Reuse::uniform(t as f64));
+        b.ld(target.lin(at(n_i, k + 1, k), t), p.acol);
+        b.st(target.lin(at(n_i, k + 1, k), t), p.l_out);
+        b.barrier();
+        b.ld_reuse(
+            target.strided(at(n_i, k, k + 1), n_i, t),
+            p.akj,
+            Reuse::uniform(t as f64),
+        );
+        let block = target.rect(at(n_i, k + 1, k + 1), 1, t, n_i, t);
+        b.st_rmw(block.clone(), p.upd);
+        b.ld_rmw(block, p.a, 0);
+        b.ld(target.rect(at(n_i, k + 1, k), 1, t, 0, t), p.lcol);
+    }
+    b.finish()
+}
+
+/// TRSM column-panel tile task: scale the `b` rows of `target` (tile
+/// `(I, K)`, `I > K`) by each pivot of the factored diagonal tile in
+/// `left`, applying the within-panel trailing updates restricted to
+/// `target`'s rows. Host-side replay is the numerics of record
+/// ([`crate::taskgraph::exec`]); the machine run supplies timing.
+pub fn tile_trsm_col_program(
+    plan: &Plan,
+    b_sz: usize,
+    left: Region,
+    target: Region,
+    mask: LaneMask,
+) -> Program {
+    let n_i = b_sz as i64;
+    let p = &plan.ports;
+    let mut b = plan.built.program(plan.cfg.clone(), Features::ALL, mask);
+    for k in 0..n_i {
+        let t = n_i - k - 1;
+        b.barrier();
+        b.ld(left.lin(at(n_i, k, k), 1), p.akk);
+        b.xfer_reuse(p.inv_out, p.inv, 1, Reuse::uniform(n_i as f64));
+        b.ld(target.lin(at(n_i, 0, k), n_i), p.acol);
+        b.st(target.lin(at(n_i, 0, k), n_i), p.l_out);
+        if t > 0 {
+            b.barrier();
+            b.ld_reuse(
+                left.strided(at(n_i, k, k + 1), n_i, t),
+                p.akj,
+                Reuse::uniform(n_i as f64),
+            );
+            let block = target.rect(at(n_i, 0, k + 1), 1, n_i, n_i, t);
+            b.st_rmw(block.clone(), p.upd);
+            b.ld_rmw(block, p.a, 0);
+            b.ld(target.rect(at(n_i, 0, k), 1, n_i, 0, t), p.lcol);
+        }
+    }
+    b.finish()
+}
+
+/// TRSM row-panel tile task: eliminate below each pivot row inside
+/// `target` (tile `(K, J)`, `J > K`) using the unit-lower columns of
+/// the factored diagonal tile in `left`. Row panels take no divides —
+/// only the rectangular trailing updates, restricted to the tile.
+pub fn tile_trsm_row_program(
+    plan: &Plan,
+    b_sz: usize,
+    left: Region,
+    target: Region,
+    mask: LaneMask,
+) -> Program {
+    let n_i = b_sz as i64;
+    let p = &plan.ports;
+    let mut b = plan.built.program(plan.cfg.clone(), Features::ALL, mask);
+    for k in 0..n_i - 1 {
+        let t = n_i - k - 1;
+        b.barrier();
+        b.ld_reuse(
+            target.strided(at(n_i, k, 0), n_i, n_i),
+            p.akj,
+            Reuse::uniform(t as f64),
+        );
+        let block = target.rect(at(n_i, k + 1, 0), 1, t, n_i, n_i);
+        b.st_rmw(block.clone(), p.upd);
+        b.ld_rmw(block, p.a, 0);
+        b.ld(left.rect(at(n_i, k + 1, k), 1, t, 0, n_i), p.lcol);
+    }
+    b.finish()
+}
+
+/// GEMM tile task: `target -= left_colk * right_rowk` summed over the
+/// `b` pivots of panel `K`. `left` holds tile `(I, K)` (L columns),
+/// `right` tile `(K, J)` (U rows); `target` is tile `(I, J)`.
+pub fn tile_gemm_program(
+    plan: &Plan,
+    b_sz: usize,
+    left: Region,
+    right: Region,
+    target: Region,
+    mask: LaneMask,
+) -> Program {
+    let n_i = b_sz as i64;
+    let p = &plan.ports;
+    let mut b = plan.built.program(plan.cfg.clone(), Features::ALL, mask);
+    for k in 0..n_i {
+        b.barrier();
+        b.ld_reuse(
+            right.strided(at(n_i, k, 0), n_i, n_i),
+            p.akj,
+            Reuse::uniform(n_i as f64),
+        );
+        let block = target.rect(0, 1, n_i, n_i, n_i);
+        b.st_rmw(block.clone(), p.upd);
+        b.ld_rmw(block, p.a, 0);
+        b.ld(left.rect(at(n_i, 0, k), 1, n_i, 0, n_i), p.lcol);
+    }
+    b.finish()
+}
+
 /// Scalar mirror of the exact simulated arithmetic (multiply by the
 /// reciprocal, same update order).
 pub fn lu_mirror(a: &mut Mat) {
@@ -347,6 +484,61 @@ mod tests {
             let prog = program(12, feats, LaneMask::one(0)).unwrap();
             let rep = crate::vsc::check_program(&prog, &SimConfig::default());
             assert!(rep.errors().is_empty(), "{feats:?}:\n{rep}");
+        }
+    }
+
+    #[test]
+    fn tile_programs_pass_the_vsc_check() {
+        for b in [8usize, 16] {
+            let mut al =
+                SpadAlloc::with_capacity(SimConfig::default().lane_spad_words);
+            let s0 = al.region("t.s0", (b * b) as i64).unwrap();
+            let s1 = al.region("t.s1", (b * b) as i64).unwrap();
+            let s2 = al.region("t.s2", (b * b) as i64).unwrap();
+            let plan = tile_plan(b).unwrap();
+            let mask = LaneMask::one(0);
+            for (name, prog) in [
+                ("getrf", tile_getrf_program(&plan, b, s0, mask)),
+                ("trsm_col", tile_trsm_col_program(&plan, b, s0, s1, mask)),
+                ("trsm_row", tile_trsm_row_program(&plan, b, s0, s1, mask)),
+                ("gemm", tile_gemm_program(&plan, b, s0, s1, s2, mask)),
+            ] {
+                let rep = crate::vsc::check_program(&prog, &SimConfig::default());
+                assert!(rep.errors().is_empty(), "b={b} {name}:\n{rep}");
+            }
+        }
+    }
+
+    #[test]
+    fn getrf_tile_matches_mirror_on_the_machine() {
+        for b in [8usize, 16] {
+            let mut al =
+                SpadAlloc::with_capacity(SimConfig::default().lane_spad_words);
+            let s0 = al.region("t.s0", (b * b) as i64).unwrap();
+            let plan = tile_plan(b).unwrap();
+            let prog = tile_getrf_program(&plan, b, s0, LaneMask::one(0));
+            let inst = instance(b, 2);
+            let mut m = machine(1);
+            for j in 0..b {
+                for i in 0..b {
+                    m.lanes[0].spad.write(
+                        s0.addr(at(b as i64, i as i64, j as i64)),
+                        inst.a[(i, j)],
+                    );
+                }
+            }
+            m.run(prog).unwrap();
+            for j in 0..b {
+                for i in 0..b {
+                    let got =
+                        m.lanes[0].spad.read(s0.addr(at(b as i64, i as i64, j as i64)));
+                    let want = inst.lu_ref[(i, j)];
+                    assert!(
+                        (got - want).abs() < 1e-9,
+                        "b={b} LU[{i}][{j}]: got {got}, want {want}"
+                    );
+                }
+            }
         }
     }
 }
