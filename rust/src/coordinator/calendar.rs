@@ -140,6 +140,30 @@ mod tests {
     }
 
     #[test]
+    fn same_timestamp_burst_of_10k_pops_in_push_order() {
+        // The fault plane leans on this hard: a crash kills and
+        // re-dispatches many stages at one virtual instant, so FIFO
+        // under a large same-timestamp burst is the invariant that
+        // keeps faulted runs bit-deterministic. Interleave a few other
+        // timestamps so the burst shares the heap with neighbors.
+        let mut c = Calendar::new();
+        c.push(0.5, usize::MAX); // before the burst
+        for i in 0..10_000usize {
+            c.push(1.0, i);
+        }
+        c.push(2.0, usize::MAX - 1); // after the burst
+        assert_eq!(c.len(), 10_002);
+        assert_eq!(c.pop(), Some((0.5, usize::MAX)));
+        for want in 0..10_000usize {
+            let (t, got) = c.pop().expect("burst event present");
+            assert_eq!(t, 1.0);
+            assert_eq!(got, want, "tie-break must be push order, not heap order");
+        }
+        assert_eq!(c.pop(), Some((2.0, usize::MAX - 1)));
+        assert!(c.is_empty());
+    }
+
+    #[test]
     fn pop_before_respects_the_horizon_and_fifo() {
         let mut c = Calendar::new();
         c.push(1.0, "a");

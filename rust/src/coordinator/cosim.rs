@@ -68,6 +68,7 @@ use crate::workloads::{self, Features, Goal, Prepared};
 
 use super::calendar::Calendar;
 use super::cluster::{Arrival, ClusterConfig, Completion, UnitStats, Workload};
+use super::faults::{DagFaultPlan, FaultPlan};
 
 /// Machine progress per calendar step while other events are pending,
 /// in cycles. Bounds calendar traffic (one event per chunk, not per
@@ -265,6 +266,17 @@ pub struct CosimRun {
     /// deliberately oversized window to prove the bound is
     /// load-bearing.
     pub causality_violations: usize,
+    /// Stage re-dispatches scheduled by the fault plane (transient
+    /// stage faults, crash kills, and all-units-down arrivals waiting
+    /// out an outage). Zero without an active [`FaultPlan`].
+    pub retries: usize,
+    /// In-flight stages killed by a unit crash.
+    pub crash_kills: usize,
+    /// Fronthaul messages lost in a link-drop window; each one was
+    /// re-offered to this (the origin) cell's own queue.
+    pub link_dropped: usize,
+    /// Fronthaul messages held back by a link-delay window.
+    pub link_delayed: usize,
     /// Mid-run stage failures, rendered (normally empty).
     pub stage_errors: Vec<String>,
 }
@@ -291,6 +303,11 @@ struct Job {
     foreign: bool,
     /// Any stage of this job ran via work stealing.
     stolen: bool,
+    /// Fault-plane re-dispatch attempts consumed so far (transient
+    /// stage faults and crash kills). Bounded by
+    /// [`FaultPlan::max_retries`]; also keys the identity-hashed
+    /// transient draw so each attempt gets an independent verdict.
+    attempts: u32,
     /// Live-measured cycles of completed stages.
     cycles: Vec<u64>,
 }
@@ -316,6 +333,12 @@ struct Unit {
     /// Predicted end of the in-service stage (valid while `run` is
     /// `Some`) — the dispatcher's in-service-remainder estimate.
     est_end_s: f64,
+    /// Crashed by the fault plane: ineligible for dispatch until the
+    /// matching recover event (if any) brings it back.
+    down: bool,
+    /// Degraded-unit cycle-time multiplier from the fault plan; 1.0
+    /// (the exact-identity multiplier) when healthy.
+    mult: f64,
     stats: UnitStats,
 }
 
@@ -326,6 +349,8 @@ impl Unit {
             queue: VecDeque::new(),
             queued_s: 0.0,
             est_end_s: 0.0,
+            down: false,
+            mult: 1.0,
             stats: UnitStats::default(),
         }
     }
@@ -347,6 +372,14 @@ enum Ev {
     /// A shed arrival re-offered by a peer lands here. Terminal: a
     /// second shed counts locally, it is never re-offered again.
     Rerouted(Arrival),
+    /// Fault plane: unit `usize` crashes at this instant (in-flight
+    /// stage killed, queue drained to peers).
+    Crash(usize),
+    /// Fault plane: unit `usize` comes back from its outage.
+    Recover(usize),
+    /// Fault plane: job `usize`'s current stage re-enters dispatch
+    /// after its retry backoff.
+    Retry(usize),
 }
 
 struct Engine<'a> {
@@ -399,6 +432,14 @@ struct Engine<'a> {
     /// behind it are causality violations.
     last_t: f64,
     causality_violations: usize,
+    /// The armed fault scenario (default = fault-free) plus the seed
+    /// its identity-keyed transient draws fold in.
+    faults: FaultPlan,
+    fault_seed: u64,
+    retries: usize,
+    crash_kills: usize,
+    link_dropped: usize,
+    link_delayed: usize,
     stage_errors: Vec<String>,
 }
 
@@ -431,10 +472,15 @@ impl Engine<'_> {
     /// job always find a queue — admission gates jobs, not the
     /// pipeline's interior.
     fn try_assign(&mut self, j: usize, now: f64) -> bool {
-        let first = self.jobs[j].stage == 0;
+        // A retried job already passed admission once, so a re-dispatch
+        // bypasses the stage-0 queue cap exactly like a mid-job stage.
+        let first = self.jobs[j].stage == 0 && self.jobs[j].attempts == 0;
         let mut best: Option<(f64, usize)> = None;
         for u in 0..self.units.len() {
             let unit = &self.units[u];
+            if unit.down {
+                continue;
+            }
             let eligible =
                 unit.run.is_none() || !first || unit.queue.len() < self.cfg.queue_cap;
             if !eligible {
@@ -526,7 +572,9 @@ impl Engine<'_> {
                 // (replay counts whole jobs; identical for single-stage
                 // classes). See `CosimRun::units`.
                 unit.stats.jobs += 1;
-                unit.est_end_s = now + est_s;
+                // A degraded unit is predicted (and simulated) `mult`
+                // times slower; `mult == 1.0` multiplies exactly.
+                unit.est_end_s = now + est_s * unit.mult;
                 unit.run = Some(Active { job: j, machine, verify, start_s: now, done: None });
                 self.cal.push(now, Ev::Step(u));
             }
@@ -559,6 +607,7 @@ impl Engine<'_> {
         // depend on chunking (advance_until is chunk-invisible); only
         // event interleaving granularity does.
         let others_pending = self.cal.peek_time().is_some();
+        let mult = self.units[u].mult;
         let next = {
             let Some(active) = self.units[u].run.as_mut() else { return };
             if active.done.is_some() {
@@ -569,14 +618,18 @@ impl Engine<'_> {
             } else {
                 u64::MAX
             };
+            // Degraded units stretch simulated cycles by `mult` in
+            // virtual time; the healthy multiplier 1.0 is bit-exact.
             match active.machine.advance_until(limit) {
                 Err(e) => Next::Fail(active.job, e.to_string()),
                 Ok(true) => {
-                    let finish = active.start_s + s_of(active.machine.now());
+                    let finish = active.start_s + s_of(active.machine.now()) * mult;
                     active.done = Some(finish);
                     Next::Done(finish)
                 }
-                Ok(false) => Next::Again(active.start_s + s_of(active.machine.now())),
+                Ok(false) => {
+                    Next::Again(active.start_s + s_of(active.machine.now()) * mult)
+                }
             }
         };
         match next {
@@ -608,10 +661,34 @@ impl Engine<'_> {
     /// its source cell's loop, which already resubmitted on egress).
     fn on_stage_done(&mut self, u: usize, t: f64) -> bool {
         let Some(active) = self.units[u].run.take() else { return false };
+        if active.done != Some(t) {
+            // Stale retirement: the stage this event was scheduled for
+            // was crash-killed and the unit has since started another.
+            // Put the live stage back; its own StageDone is pending.
+            self.units[u].run = Some(active);
+            return false;
+        }
         let Active { job: j, machine, verify, start_s: _, done } = active;
         let finish = done.unwrap_or(t);
         let cycles = machine.now();
-        self.units[u].stats.busy_s += s_of(cycles);
+        self.units[u].stats.busy_s += s_of(cycles) * self.units[u].mult;
+        // Transient fault plane: the draw is an identity-keyed hash of
+        // (seed, cell, job, stage, attempt) — never a stream RNG — so
+        // the verdict for this attempt is invariant under event pop
+        // order, reruns, and shard counts. A struck stage discards its
+        // result and re-enters dispatch through the bounded-retry path.
+        if self.faults.stage_fails(
+            self.fault_seed,
+            self.coupling.cell,
+            self.jobs[j].id,
+            self.jobs[j].stage,
+            self.jobs[j].attempts,
+        ) {
+            drop(machine);
+            self.retry_or_fail(j, finish, "transient stage fault");
+            self.dispatch_free(u, finish);
+            return false;
+        }
         let verdict = verify(&machine);
         drop(machine);
         let mut completed = false;
@@ -685,11 +762,119 @@ impl Engine<'_> {
             stage: job.stage + 1,
             cycles: job.cycles.clone(),
         };
-        self.outbox.push(Outbound {
-            dst: Some((self.coupling.cell + 1) % self.coupling.cells),
-            t_s: now + self.coupling.fronthaul_s,
-            msg: Msg::Migrate(m),
-        });
+        let dst = Some((self.coupling.cell + 1) % self.coupling.cells);
+        self.emit(dst, now, Msg::Migrate(m));
+    }
+
+    /// Put one cross-cell message on the fronthaul, applying any link
+    /// fault window covering its send time. A *dropped* message is
+    /// re-offered to this cell's own calendar after the (wasted)
+    /// traversal — the subframe or arrival rejoins the origin cell's
+    /// queue instead of being lost, so conservation holds with the link
+    /// down. A *delayed* message stays outbound with extra latency;
+    /// later delivery is always CMB-safe (strictly further into the
+    /// receiver's future than the lookahead requires).
+    fn emit(&mut self, dst: Option<usize>, now: f64, msg: Msg) {
+        let t_s = now + self.coupling.fronthaul_s;
+        match self.faults.link_fault_at(now).map(|l| l.extra_s) {
+            Some(None) => {
+                self.link_dropped += 1;
+                match msg {
+                    Msg::Migrate(m) => self.cal.push(t_s, Ev::MigrateIn(m)),
+                    Msg::Shed(a) => self.cal.push(t_s, Ev::Rerouted(a)),
+                }
+            }
+            Some(Some(extra_s)) => {
+                self.link_delayed += 1;
+                self.outbox.push(Outbound { dst, t_s: t_s + extra_s, msg });
+            }
+            None => self.outbox.push(Outbound { dst, t_s, msg }),
+        }
+    }
+
+    /// Job `j`'s current stage must run again (transient fault, crash
+    /// kill, or no unit available): consume one bounded-retry attempt.
+    /// Within budget, the stage re-enters dispatch after an exponential
+    /// virtual-time backoff; exhausted, the job lands in the `failed`
+    /// terminal (freeing its closed-loop client via `mid_run_deaths`).
+    fn retry_or_fail(&mut self, j: usize, now: f64, why: &str) {
+        self.jobs[j].attempts += 1;
+        let attempts = self.jobs[j].attempts;
+        if attempts > self.faults.max_retries {
+            self.failed += 1;
+            if !self.jobs[j].foreign {
+                self.mid_run_deaths += 1;
+            }
+            self.stage_errors.push(format!(
+                "cosim: job {} stage {} failed after {} attempts: {why}",
+                self.jobs[j].id,
+                self.jobs[j].stage,
+                attempts - 1
+            ));
+        } else {
+            self.retries += 1;
+            self.cal.push(now + self.faults.backoff_for(attempts), Ev::Retry(j));
+        }
+    }
+
+    /// Re-enter dispatch for job `j`'s current stage, falling back to
+    /// the bounded-retry path when no unit can take it (every unit
+    /// down). Fault-free runs never hit the fallback — with `>= 1`
+    /// healthy unit, mid-job and retried stages always find a queue.
+    fn redispatch(&mut self, j: usize, now: f64) {
+        if !self.try_assign(j, now) {
+            self.retry_or_fail(j, now, "no unit available");
+        }
+    }
+
+    /// Fault plane: unit `u` crashes. Its in-flight stage is killed
+    /// (the partial compute stays charged as busy time) and re-enters
+    /// dispatch through the retry path; its ready queue drains to the
+    /// surviving peers. With *every* unit down, admission-queued jobs
+    /// would deadlock the calendar — they enter the retry path too, so
+    /// the run always terminates with clean `failed` accounting even
+    /// when the only unit dies for good.
+    fn on_crash(&mut self, u: usize, now: f64) {
+        if self.units[u].down {
+            return;
+        }
+        self.units[u].down = true;
+        if let Some(active) = self.units[u].run.take() {
+            self.crash_kills += 1;
+            let j = active.job;
+            self.units[u].stats.busy_s += (now - active.start_s).max(0.0);
+            drop(active);
+            self.retry_or_fail(j, now, "unit crashed");
+        }
+        self.units[u].est_end_s = now;
+        let drained: Vec<usize> = self.units[u].queue.drain(..).collect();
+        self.units[u].queued_s = 0.0;
+        for j in drained {
+            self.redispatch(j, now);
+        }
+        if self.units.iter().all(|un| un.down) {
+            let stuck: Vec<usize> = self.admission.drain(..).collect();
+            for j in stuck {
+                self.retry_or_fail(j, now, "all units down");
+            }
+        }
+    }
+
+    /// Fault plane: unit `u` recovers from its outage and immediately
+    /// pulls ready work (its queue is empty — crashes drain it — so
+    /// this steals or drains admission).
+    fn on_recover(&mut self, u: usize, now: f64) {
+        if !self.units[u].down {
+            return;
+        }
+        self.units[u].down = false;
+        self.dispatch_free(u, now);
+    }
+
+    /// A backoff expired: the retried stage tries dispatch again (and
+    /// consumes another attempt if every unit is still down).
+    fn on_retry(&mut self, j: usize, now: f64) {
+        self.redispatch(j, now);
     }
 
     /// A migrant landed: resume it at its carried stage. Mid-chain
@@ -708,10 +893,12 @@ impl Engine<'_> {
             ord_set: false,
             foreign: true,
             stolen: m.stolen,
+            attempts: 0,
             cycles: m.cycles,
         });
-        let assigned = self.try_assign(j, now);
-        debug_assert!(assigned, "mid-job stages always find a queue");
+        // Mid-job stages always find a queue — unless every unit is
+        // down, in which case the migrant rides the retry path.
+        self.redispatch(j, now);
     }
 
     fn request_handoff(&mut self, j: usize, now: f64) {
@@ -743,10 +930,10 @@ impl Engine<'_> {
     fn on_bus_done(&mut self, j: usize, now: f64) {
         self.bus_busy = false;
         self.jobs[j].stage += 1;
-        let assigned = self.try_assign(j, now);
-        // Mid-job stages bypass the queue cap, so with >= 1 unit the
-        // dispatch above cannot fail.
-        debug_assert!(assigned, "mid-job stages always find a queue");
+        // Mid-job stages bypass the queue cap, so with >= 1 healthy
+        // unit this dispatch cannot fail; with every unit down the
+        // stage rides the bounded-retry path instead.
+        self.redispatch(j, now);
         self.try_grant(now);
     }
 
@@ -759,6 +946,7 @@ impl Engine<'_> {
             .map(CosimClass::demand_s)
             .unwrap_or(0.0);
         let best_wait = (0..self.units.len())
+            .filter(|&u| !self.units[u].down)
             .map(|u| self.load(u, now))
             .fold(f64::INFINITY, f64::min);
         let admitted: f64 = self
@@ -779,11 +967,7 @@ impl Engine<'_> {
         if self.coupling.reroute && !rerouted && self.coupling.active() {
             self.rerouted_out += 1;
             self.local_egress += 1;
-            self.outbox.push(Outbound {
-                dst: None,
-                t_s: now + self.coupling.fronthaul_s,
-                msg: Msg::Shed(a),
-            });
+            self.emit(None, now, Msg::Shed(a));
             false
         } else if slo {
             self.deadline_shed += 1;
@@ -824,9 +1008,17 @@ impl Engine<'_> {
             ord_set: false,
             foreign: rerouted,
             stolen: false,
+            attempts: 0,
             cycles: Vec::new(),
         });
         if self.try_assign(j, now) {
+            return false;
+        }
+        if self.units.iter().all(|un| un.down) {
+            // Every unit is down: the admission queue would never
+            // drain, so the job waits out the outage in the bounded-
+            // retry path (terminating in `failed` if nothing recovers).
+            self.retry_or_fail(j, now, "all units down");
             return false;
         }
         if self.admission.len() < self.cfg.admit_cap {
@@ -853,7 +1045,7 @@ impl Engine<'_> {
     /// Put a freed unit back to work: its own FIFO head, else a stolen
     /// stage; loop past stages that fail to prepare.
     fn dispatch_free(&mut self, u: usize, now: f64) {
-        while self.units[u].run.is_none() {
+        while self.units[u].run.is_none() && !self.units[u].down {
             let next = if let Some(j) = self.units[u].queue.pop_front() {
                 let est = self.cur_est(j);
                 self.units[u].queued_s -= est;
@@ -958,6 +1150,12 @@ impl<'a> CosimSession<'a> {
             local_egress: 0,
             last_t: f64::NEG_INFINITY,
             causality_violations: 0,
+            faults: FaultPlan::default(),
+            fault_seed: 0,
+            retries: 0,
+            crash_kills: 0,
+            link_dropped: 0,
+            link_delayed: 0,
             stage_errors: Vec::new(),
         };
         let mut s = CosimSession {
@@ -991,6 +1189,30 @@ impl<'a> CosimSession<'a> {
             }
         }
         s
+    }
+
+    /// Arm a fault scenario on this cell: store the plan (recovery
+    /// policy included), seed the identity-keyed transient stream with
+    /// the *cluster* seed (the cell index is folded into every draw's
+    /// key), apply degraded-unit multipliers, and schedule this cell's
+    /// crash/recover events. Call before the first
+    /// [`CosimSession::advance_to`]; an unarmed session is fault-free.
+    pub fn with_faults(mut self, plan: &FaultPlan, seed: u64) -> Self {
+        let cell = self.eng.coupling.cell;
+        for o in plan.outages_for(cell) {
+            if o.unit < self.eng.units.len() {
+                self.eng.cal.push(o.down_s, Ev::Crash(o.unit));
+                if o.up_s.is_finite() {
+                    self.eng.cal.push(o.up_s, Ev::Recover(o.unit));
+                }
+            }
+        }
+        for (u, unit) in self.eng.units.iter_mut().enumerate() {
+            unit.mult = plan.mult_for(cell, u);
+        }
+        self.eng.faults = plan.clone();
+        self.eng.fault_seed = seed;
+        self
     }
 
     /// Timestamp of the next pending event, if any — what a sharded
@@ -1038,6 +1260,20 @@ impl<'a> CosimSession<'a> {
                     // closed-loop client; its source cell already
                     // resubmitted on egress.
                     self.eng.on_arrive(a, now, true);
+                    false
+                }
+                // Fault-plane events resubmit through the
+                // `mid_run_deaths` delta below, never directly.
+                Ev::Crash(u) => {
+                    self.eng.on_crash(u, now);
+                    false
+                }
+                Ev::Recover(u) => {
+                    self.eng.on_recover(u, now);
+                    false
+                }
+                Ev::Retry(j) => {
+                    self.eng.on_retry(j, now);
                     false
                 }
             };
@@ -1134,6 +1370,10 @@ impl<'a> CosimSession<'a> {
             rerouted_out: eng.rerouted_out,
             rerouted_in: eng.rerouted_in,
             causality_violations: eng.causality_violations,
+            retries: eng.retries,
+            crash_kills: eng.crash_kills,
+            link_dropped: eng.link_dropped,
+            link_delayed: eng.link_delayed,
             stage_errors: eng.stage_errors,
         };
         // Events pop in time order, so the first Arrive seen is the
@@ -1229,6 +1469,13 @@ pub struct DagRun {
     /// FNV-1a digest of the factor bits ([`exec::digest`]): must be
     /// identical for every unit count and equal to the host replay.
     pub factor_digest: u64,
+    /// Fault plane: units killed by a [`DagFaultPlan`] crash.
+    pub unit_crashes: u64,
+    /// Fault plane: in-flight tasks killed with their unit and
+    /// re-executed on a survivor (timing only — the numerics of record
+    /// were applied at first dispatch and are never re-applied, which
+    /// is what pins the digest to the fault-free run).
+    pub tasks_rescheduled: u64,
     /// Per-unit occupancy.
     pub per_unit: Vec<DagUnitStat>,
 }
@@ -1249,6 +1496,8 @@ impl DagRun {
             ("bus_wait_cycles", Json::Num(self.bus_wait_cycles as f64)),
             ("resident_hits", Json::Num(self.resident_hits as f64)),
             ("evictions", Json::Num(self.evictions as f64)),
+            ("unit_crashes", Json::Num(self.unit_crashes as f64)),
+            ("tasks_rescheduled", Json::Num(self.tasks_rescheduled as f64)),
             ("factor_digest", Json::Str(format!("{:016x}", self.factor_digest))),
             (
                 "per_unit",
@@ -1273,11 +1522,13 @@ impl DagRun {
     }
 }
 
-/// DAG-engine calendar payload: one event kind — a unit finishing its
-/// tile task. (Dispatch is not an event: it happens eagerly whenever a
-/// completion frees a unit or releases successors.)
+/// DAG-engine calendar payload. (Dispatch is not an event: it happens
+/// eagerly whenever a completion frees a unit or releases successors.)
 enum DagEv {
+    /// A unit finishes its tile task.
     TaskDone { task: usize, unit: usize },
+    /// Fault plane: the unit dies at this cycle, for good.
+    Crash { unit: usize },
 }
 
 /// One tile-resident scratchpad slot of a unit.
@@ -1299,6 +1550,10 @@ struct DagUnit {
     alloc: SpadAlloc,
     slots: Vec<DagSlot>,
     busy: bool,
+    /// Cleared by a fault-plane crash; dead units never dispatch again.
+    alive: bool,
+    /// Task currently in flight (fault plane kills it on crash).
+    running: Option<usize>,
     tasks_done: usize,
     busy_cycles: u64,
 }
@@ -1313,8 +1568,28 @@ struct DagUnit {
 /// machines supply timing: per-task cycles measured live on the
 /// persistent machine after [`Machine::reset_retaining_spad`].
 pub fn run_dag(cfg: &DagConfig) -> Result<DagRun, String> {
+    run_dag_faulted(cfg, &DagFaultPlan::default())
+}
+
+/// [`run_dag`] under a [`DagFaultPlan`]: scheduled unit crashes kill
+/// the victim's in-flight task and invalidate its retained scratchpad
+/// slots; the task re-executes on a survivor. Because the numerics of
+/// record advance at *first* dispatch only, the factor digest is
+/// pinned bit-identical to the fault-free run; only timing and the
+/// fault counters differ. Every unit dead with work remaining is a
+/// typed error, never a hang.
+pub fn run_dag_faulted(
+    cfg: &DagConfig,
+    faults: &DagFaultPlan,
+) -> Result<DagRun, String> {
     if cfg.units == 0 {
         return Err("units must be >= 1".into());
+    }
+    if let Some(&(u, _)) = faults.crashes.iter().find(|&&(u, _)| u >= cfg.units) {
+        return Err(format!(
+            "fault plan crashes unit {u}, but the run has {} units",
+            cfg.units
+        ));
     }
     let dag = TileDag::build(cfg.kernel, cfg.n, cfg.tile)?;
     let b = cfg.tile;
@@ -1368,6 +1643,8 @@ pub fn run_dag(cfg: &DagConfig) -> Result<DagRun, String> {
             alloc: SpadAlloc::with_capacity(spad_words),
             slots: Vec::new(),
             busy: false,
+            alive: true,
+            running: None,
             tasks_done: 0,
             busy_cycles: 0,
         })
@@ -1394,8 +1671,16 @@ pub fn run_dag(cfg: &DagConfig) -> Result<DagRun, String> {
         resident_hits: 0,
         evictions: 0,
         factor_digest: 0,
+        unit_crashes: 0,
+        tasks_rescheduled: 0,
         per_unit: Vec::new(),
     };
+    // Host numerics advance exactly once per task (at first dispatch);
+    // fault-plane re-executions are timing-only.
+    let mut applied = vec![false; dag.tasks.len()];
+    for &(u, cycle) in &faults.crashes {
+        cal.push(cycle as f64, DagEv::Crash { unit: u });
+    }
 
     loop {
         // Greedy dispatch: drain (ready task, free unit) pairs.
@@ -1410,10 +1695,11 @@ pub fn run_dag(cfg: &DagConfig) -> Result<DagRun, String> {
             let op = dag.tasks[task_id].op;
             let mut needed: Vec<(usize, usize)> = vec![op.target()];
             needed.extend(op.operands());
-            // Free unit holding the most of this task's tiles resident
-            // (current version); ties to the lowest unit index.
+            // Free live unit holding the most of this task's tiles
+            // resident (current version); ties to the lowest unit
+            // index.
             let Some(best_unit) = (0..units.len())
-                .filter(|&u| !units[u].busy)
+                .filter(|&u| units[u].alive && !units[u].busy)
                 .max_by_key(|&u| {
                     let hits = needed
                         .iter()
@@ -1520,11 +1806,16 @@ pub fn run_dag(cfg: &DagConfig) -> Result<DagRun, String> {
 
             // Advance the numerics of record (dispatch order is a
             // dependence-respecting order), then publish the new tile
-            // version and mark every claimed slot current.
-            exec::apply(&op, b, &mut host);
-            let tgt = op.target();
-            let v = tile_version.entry(tgt).or_insert(0);
-            *v += 1;
+            // version and mark every claimed slot current. A fault-
+            // plane re-execution skips both — its numerics already
+            // landed at first dispatch, so the digest cannot move.
+            if !applied[task_id] {
+                applied[task_id] = true;
+                exec::apply(&op, b, &mut host);
+                let tgt = op.target();
+                let v = tile_version.entry(tgt).or_insert(0);
+                *v += 1;
+            }
             for (&tl, &si) in needed.iter().zip(&claimed) {
                 u.slots[si].tile = Some(tl);
                 u.slots[si].version = tile_version.get(&tl).copied().unwrap_or(0);
@@ -1546,6 +1837,7 @@ pub fn run_dag(cfg: &DagConfig) -> Result<DagRun, String> {
                 .map_err(|e| format!("task {task_id} ({}): {e}", op.class()))?;
             let delta = u.machine.now() - before;
             u.busy = true;
+            u.running = Some(task_id);
             u.busy_cycles += delta;
             run.total_compute_cycles += delta;
             cal.push(
@@ -1554,23 +1846,53 @@ pub fn run_dag(cfg: &DagConfig) -> Result<DagRun, String> {
             );
         }
 
-        let Some((t, DagEv::TaskDone { task, unit })) = cal.pop() else {
-            break;
-        };
+        let Some((t, ev)) = cal.pop() else { break };
         now = t;
-        run.makespan_cycles = run.makespan_cycles.max(t as u64);
-        units[unit].busy = false;
-        units[unit].tasks_done += 1;
-        done_tasks += 1;
-        for &s in &dependents[task] {
-            indeg[s] -= 1;
-            if indeg[s] == 0 {
-                ready.push(s);
+        match ev {
+            DagEv::Crash { unit } => {
+                let u = &mut units[unit];
+                if u.alive {
+                    u.alive = false;
+                    run.unit_crashes += 1;
+                    // Invalidate the dead unit's retained spad slots:
+                    // nothing resident there may ever satisfy a hit
+                    // again.
+                    u.slots.clear();
+                    if let Some(task) = u.running.take() {
+                        // Kill the in-flight task back to ready; its
+                        // stale TaskDone is dropped when it pops.
+                        run.tasks_rescheduled += 1;
+                        ready.push(task);
+                    }
+                }
+            }
+            DagEv::TaskDone { task, unit } => {
+                if units[unit].alive {
+                    run.makespan_cycles = run.makespan_cycles.max(t as u64);
+                    units[unit].busy = false;
+                    units[unit].running = None;
+                    units[unit].tasks_done += 1;
+                    done_tasks += 1;
+                    for &s in &dependents[task] {
+                        indeg[s] -= 1;
+                        if indeg[s] == 0 {
+                            ready.push(s);
+                        }
+                    }
+                }
+                // Dead unit: the crash already pushed `task` back to
+                // ready; this retirement never happened.
             }
         }
     }
 
     if done_tasks != dag.tasks.len() {
+        if units.iter().all(|u| !u.alive) {
+            return Err(format!(
+                "every unit crashed: {done_tasks}/{} tasks completed",
+                dag.tasks.len()
+            ));
+        }
         return Err(format!(
             "scheduler stalled: {done_tasks}/{} tasks completed",
             dag.tasks.len()

@@ -1,0 +1,467 @@
+//! Deterministic fault-injection plane for the serving engines.
+//!
+//! A [`FaultPlan`] describes *what goes wrong* in a metro run: per-cell
+//! unit crash/recover schedules, degraded units that run slower by a
+//! cycle multiplier, fronthaul link drop/delay windows, and a transient
+//! per-stage failure probability. Recovery policy (bounded retries with
+//! exponential virtual-time backoff) rides along in the same plan so one
+//! `--faults <spec>` string captures the whole scenario.
+//!
+//! Everything here is **seed-deterministic and shard-invariant**:
+//!
+//! - Crash/recover/degrade/link clauses are pure virtual-time windows —
+//!   no randomness at all, so they replay identically for any shard
+//!   count.
+//! - The transient stage-failure draw is *identity-keyed*: a hash of
+//!   `(salted seed, cell, job id, stage, attempt)` rather than a stream
+//!   RNG, so the verdict for a given stage attempt never depends on the
+//!   order events happen to pop within a window. Reruns and re-shards
+//!   see the same faults down to the bit.
+//!
+//! The spec grammar is a `;`-separated clause list (whitespace ignored):
+//!
+//! ```text
+//! crash=CELL.UNIT@DOWN_US..UP_US   unit crashes at DOWN_US, recovers at UP_US
+//! crash=CELL.UNIT@DOWN_US          ... and never recovers
+//! degrade=CELL.UNIT@MULT           unit runs MULT x slower (MULT >= 1.0)
+//! drop=FROM_US..TO_US              fronthaul messages sent in the window drop
+//! delay=FROM_US..TO_US@EXTRA_US    ... are delayed by EXTRA_US instead
+//! p=PROB                           transient per-stage failure probability
+//! retries=N                        bounded re-dispatch attempts (default 3)
+//! backoff=US                       base virtual-time backoff (default 50us)
+//! ```
+//!
+//! Example: `crash=0.1@200..900; p=0.02; retries=4; backoff=25`.
+
+use crate::runtime::RtError;
+
+/// Salt folded into the cluster seed for the transient-fault stream,
+/// mirroring `HANDOVER_SALT` in `serve` ("FAULTIN" in ASCII).
+pub const FAULT_SALT: u64 = 0x4641_554C_5449_4E00;
+
+/// One scheduled unit outage: down at `down_s`, back at `up_s`
+/// (`f64::INFINITY` when the unit never recovers).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Outage {
+    /// Cell index the outage applies to.
+    pub cell: usize,
+    /// Unit index within the cell.
+    pub unit: usize,
+    /// Virtual time (seconds) the unit crashes.
+    pub down_s: f64,
+    /// Virtual time (seconds) the unit recovers; infinite = never.
+    pub up_s: f64,
+}
+
+/// A permanently degraded unit: every simulated stage on it takes
+/// `mult` times longer in virtual time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Degrade {
+    /// Cell index.
+    pub cell: usize,
+    /// Unit index within the cell.
+    pub unit: usize,
+    /// Cycle-time multiplier, `>= 1.0` (1.0 is a no-op).
+    pub mult: f64,
+}
+
+/// A fronthaul fault window over message *send* times.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFault {
+    /// Window start (seconds, inclusive).
+    pub from_s: f64,
+    /// Window end (seconds, exclusive).
+    pub to_s: f64,
+    /// `None` = messages sent in the window are dropped (and re-offered
+    /// to the origin cell); `Some(extra_s)` = delivery is delayed by
+    /// `extra_s` seconds instead.
+    pub extra_s: Option<f64>,
+}
+
+/// Typed, validated fault scenario threaded through `serve`/`cosim`.
+///
+/// Defaults (`FaultPlan::default`) describe a fault-free run with the
+/// standard recovery policy (3 retries, 50us base backoff), so engines
+/// can hold a plan unconditionally.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Scheduled unit crash/recover windows.
+    pub outages: Vec<Outage>,
+    /// Permanently degraded (slow) units.
+    pub degrades: Vec<Degrade>,
+    /// Fronthaul drop/delay windows.
+    pub links: Vec<LinkFault>,
+    /// Transient per-stage failure probability in [0, 1).
+    pub stage_fail_p: f64,
+    /// Maximum re-dispatch attempts before a job lands in `failed`.
+    pub max_retries: u32,
+    /// Base virtual-time backoff (seconds); attempt k waits
+    /// `backoff_s * 2^(k-1)`.
+    pub backoff_s: f64,
+    /// The raw spec string, echoed into artifacts for provenance.
+    pub spec: String,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            outages: Vec::new(),
+            degrades: Vec::new(),
+            links: Vec::new(),
+            stage_fail_p: 0.0,
+            max_retries: 3,
+            backoff_s: 50.0e-6,
+            spec: String::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `;`-separated clause spec (see module docs for grammar).
+    pub fn parse(spec: &str) -> Result<FaultPlan, RtError> {
+        let mut plan = FaultPlan { spec: spec.trim().to_string(), ..FaultPlan::default() };
+        for raw in spec.split(';') {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| bad(clause, "expected key=value"))?;
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "crash" => {
+                    let (loc, times) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad(clause, "expected CELL.UNIT@US[..US]"))?;
+                    let (cell, unit) = parse_loc(clause, loc)?;
+                    let (down_us, up_us) = match times.split_once("..") {
+                        Some((d, u)) => (parse_us(clause, d)?, parse_us(clause, u)?),
+                        None => (parse_us(clause, times)?, f64::INFINITY),
+                    };
+                    if up_us <= down_us {
+                        return Err(bad(clause, "recover time must be after crash time"));
+                    }
+                    plan.outages.push(Outage {
+                        cell,
+                        unit,
+                        down_s: down_us * 1e-6,
+                        up_s: up_us * 1e-6,
+                    });
+                }
+                "degrade" => {
+                    let (loc, m) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad(clause, "expected CELL.UNIT@MULT"))?;
+                    let (cell, unit) = parse_loc(clause, loc)?;
+                    let mult: f64 = m
+                        .trim()
+                        .parse()
+                        .map_err(|_| bad(clause, "multiplier must be a number"))?;
+                    if !(mult.is_finite() && mult >= 1.0) {
+                        return Err(bad(clause, "multiplier must be finite and >= 1.0"));
+                    }
+                    plan.degrades.push(Degrade { cell, unit, mult });
+                }
+                "drop" => {
+                    let (from_s, to_s) = parse_window(clause, val)?;
+                    plan.links.push(LinkFault { from_s, to_s, extra_s: None });
+                }
+                "delay" => {
+                    let (win, extra) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad(clause, "expected FROM_US..TO_US@EXTRA_US"))?;
+                    let (from_s, to_s) = parse_window(clause, win)?;
+                    let extra_us = parse_us(clause, extra)?;
+                    if extra_us <= 0.0 {
+                        return Err(bad(clause, "delay must be positive"));
+                    }
+                    plan.links.push(LinkFault {
+                        from_s,
+                        to_s,
+                        extra_s: Some(extra_us * 1e-6),
+                    });
+                }
+                "p" => {
+                    let p: f64 = val
+                        .parse()
+                        .map_err(|_| bad(clause, "probability must be a number"))?;
+                    if !(p.is_finite() && (0.0..1.0).contains(&p)) {
+                        return Err(bad(clause, "probability must be in [0, 1)"));
+                    }
+                    plan.stage_fail_p = p;
+                }
+                "retries" => {
+                    plan.max_retries = val
+                        .parse()
+                        .map_err(|_| bad(clause, "retries must be a non-negative integer"))?;
+                }
+                "backoff" => {
+                    let us = parse_us(clause, val)?;
+                    if us <= 0.0 {
+                        return Err(bad(clause, "backoff must be positive"));
+                    }
+                    plan.backoff_s = us * 1e-6;
+                }
+                other => {
+                    return Err(RtError(format!(
+                        "fault spec: unknown clause key `{other}` in `{clause}` \
+                         (expected crash|degrade|drop|delay|p|retries|backoff)"
+                    )));
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects anything at all (recovery-policy
+    /// knobs alone do not make a plan active).
+    pub fn is_active(&self) -> bool {
+        !self.outages.is_empty()
+            || !self.degrades.is_empty()
+            || !self.links.is_empty()
+            || self.stage_fail_p > 0.0
+    }
+
+    /// Outages scheduled for one cell.
+    pub fn outages_for(&self, cell: usize) -> impl Iterator<Item = &Outage> {
+        self.outages.iter().filter(move |o| o.cell == cell)
+    }
+
+    /// Cycle-time multiplier for a unit (1.0 when not degraded).
+    pub fn mult_for(&self, cell: usize, unit: usize) -> f64 {
+        self.degrades
+            .iter()
+            .find(|d| d.cell == cell && d.unit == unit)
+            .map_or(1.0, |d| d.mult)
+    }
+
+    /// Link fault covering a message sent at `t_s`, if any. The first
+    /// matching window in spec order wins, so overlapping windows stay
+    /// deterministic.
+    pub fn link_fault_at(&self, t_s: f64) -> Option<&LinkFault> {
+        self.links.iter().find(|l| t_s >= l.from_s && t_s < l.to_s)
+    }
+
+    /// Identity-keyed transient-failure verdict for one stage attempt.
+    ///
+    /// Keyed on `(seed ^ FAULT_SALT, cell, job, stage, attempt)` via a
+    /// SplitMix64-style finalizer, so the draw is independent of event
+    /// pop order — the property the shard-invariance tests pin.
+    pub fn stage_fails(
+        &self,
+        seed: u64,
+        cell: usize,
+        job: u64,
+        stage: usize,
+        attempt: u32,
+    ) -> bool {
+        if self.stage_fail_p <= 0.0 {
+            return false;
+        }
+        let mut x = seed ^ FAULT_SALT;
+        for k in [cell as u64, job, stage as u64, attempt as u64] {
+            x = mix64(x ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        }
+        // Same u64 -> [0,1) mapping as util::Rng::f64.
+        let u = (x >> 11) as f64 / (1u64 << 53) as f64;
+        u < self.stage_fail_p
+    }
+
+    /// Virtual-time backoff before re-dispatch attempt `attempt`
+    /// (1-based): `backoff_s * 2^(attempt-1)`.
+    pub fn backoff_for(&self, attempt: u32) -> f64 {
+        self.backoff_s * f64::from(1u32 << (attempt.saturating_sub(1)).min(20))
+    }
+}
+
+/// Fault scenario for the tile-DAG scheduler, in the DAG's native time
+/// domain (cycles): each entry kills one unit at a cycle timestamp.
+/// Killed units lose their retained spad slots; their in-flight task is
+/// re-executed on a survivor, and the factor digest must still match
+/// the fault-free run bit-for-bit.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DagFaultPlan {
+    /// `(unit, crash_cycle)` pairs; a unit listed here never recovers.
+    pub crashes: Vec<(usize, u64)>,
+}
+
+impl DagFaultPlan {
+    /// Parse a `;`-separated list of `crash=UNIT@CYCLE` clauses.
+    pub fn parse(spec: &str) -> Result<DagFaultPlan, RtError> {
+        let mut plan = DagFaultPlan::default();
+        for raw in spec.split(';') {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let body = clause
+                .strip_prefix("crash=")
+                .ok_or_else(|| bad(clause, "expected crash=UNIT@CYCLE"))?;
+            let (u, c) = body
+                .split_once('@')
+                .ok_or_else(|| bad(clause, "expected crash=UNIT@CYCLE"))?;
+            let unit: usize = u
+                .trim()
+                .parse()
+                .map_err(|_| bad(clause, "unit must be an integer"))?;
+            let cycle: u64 = c
+                .trim()
+                .parse()
+                .map_err(|_| bad(clause, "cycle must be an integer"))?;
+            plan.crashes.push((unit, cycle));
+        }
+        Ok(plan)
+    }
+
+    /// True when at least one crash is scheduled.
+    pub fn is_active(&self) -> bool {
+        !self.crashes.is_empty()
+    }
+}
+
+/// SplitMix64 finalizer (also used by `util::Rng` seeding).
+fn mix64(z: u64) -> u64 {
+    let mut x = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn bad(clause: &str, why: &str) -> RtError {
+    RtError(format!("fault spec: `{clause}`: {why}"))
+}
+
+fn parse_loc(clause: &str, loc: &str) -> Result<(usize, usize), RtError> {
+    let (c, u) = loc
+        .split_once('.')
+        .ok_or_else(|| bad(clause, "location must be CELL.UNIT"))?;
+    let cell = c
+        .trim()
+        .parse()
+        .map_err(|_| bad(clause, "cell must be an integer"))?;
+    let unit = u
+        .trim()
+        .parse()
+        .map_err(|_| bad(clause, "unit must be an integer"))?;
+    Ok((cell, unit))
+}
+
+fn parse_us(clause: &str, s: &str) -> Result<f64, RtError> {
+    let v: f64 = s
+        .trim()
+        .parse()
+        .map_err(|_| bad(clause, "time must be a number (microseconds)"))?;
+    if !(v.is_finite() && v >= 0.0) {
+        return Err(bad(clause, "time must be finite and non-negative"));
+    }
+    Ok(v)
+}
+
+fn parse_window(clause: &str, s: &str) -> Result<(f64, f64), RtError> {
+    let (a, b) = s
+        .split_once("..")
+        .ok_or_else(|| bad(clause, "window must be FROM_US..TO_US"))?;
+    let (from_us, to_us) = (parse_us(clause, a)?, parse_us(clause, b)?);
+    if to_us <= from_us {
+        return Err(bad(clause, "window end must be after its start"));
+    }
+    Ok((from_us * 1e-6, to_us * 1e-6))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_spec_and_rejects_malformed_clauses() {
+        let p = FaultPlan::parse(
+            "crash=0.1@200..900; crash=1.0@50; degrade=0.0@2.5; \
+             drop=0..100; delay=100..200@25; p=0.02; retries=4; backoff=10",
+        )
+        .unwrap();
+        assert_eq!(p.outages.len(), 2);
+        assert_eq!(p.outages[0], Outage { cell: 0, unit: 1, down_s: 200e-6, up_s: 900e-6 });
+        assert_eq!(p.outages[1].up_s, f64::INFINITY);
+        assert_eq!(p.mult_for(0, 0), 2.5);
+        assert_eq!(p.mult_for(0, 1), 1.0);
+        assert_eq!(p.links.len(), 2);
+        assert_eq!(p.links[1].extra_s, Some(25e-6));
+        assert_eq!(p.stage_fail_p, 0.02);
+        assert_eq!(p.max_retries, 4);
+        assert!((p.backoff_s - 10e-6).abs() < 1e-12);
+        assert!(p.is_active());
+
+        for spec in [
+            "crash=0@100",          // location missing the unit
+            "crash=0.1@900..200",   // recover before crash
+            "degrade=0.0@0.5",      // speedup is not a degrade
+            "drop=100..50",         // inverted window
+            "delay=0..10@0",        // zero delay
+            "p=1.5",                // probability out of range
+            "p=nan",                // non-finite
+            "backoff=-1",           // negative time
+            "warp=9",               // unknown key
+            "crash",                // no '='
+        ] {
+            assert!(FaultPlan::parse(spec).is_err(), "spec `{spec}` should fail");
+        }
+
+        assert!(!FaultPlan::parse("").unwrap().is_active());
+        assert!(!FaultPlan::parse("retries=9; backoff=5").unwrap().is_active());
+    }
+
+    #[test]
+    fn stage_fail_draws_are_identity_keyed_and_match_the_rate() {
+        let p = FaultPlan::parse("p=0.25").unwrap();
+        // Same identity -> same verdict, always.
+        for job in 0..50 {
+            let a = p.stage_fails(7, 0, job, 1, 2);
+            let b = p.stage_fails(7, 0, job, 1, 2);
+            assert_eq!(a, b);
+        }
+        // Distinct attempts are independent draws; frequency tracks p.
+        let n: u64 = 20_000;
+        let hits = (0..n)
+            .filter(|&j| p.stage_fails(7, 0, j, 0, 1))
+            .count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+        // Seed and salt matter: a different seed flips some verdicts.
+        let flips = (0..n)
+            .filter(|&j| p.stage_fails(7, 0, j, 0, 1) != p.stage_fails(8, 0, j, 0, 1))
+            .count();
+        assert!(flips > 0);
+        // p=0 never fails regardless of identity.
+        let off = FaultPlan::default();
+        assert!(!off.stage_fails(7, 0, 0, 0, 1));
+    }
+
+    #[test]
+    fn backoff_doubles_per_attempt_and_link_windows_resolve_in_order() {
+        let p = FaultPlan::parse("backoff=50").unwrap();
+        assert!((p.backoff_for(1) - 50e-6).abs() < 1e-12);
+        assert!((p.backoff_for(2) - 100e-6).abs() < 1e-12);
+        assert!((p.backoff_for(3) - 200e-6).abs() < 1e-12);
+
+        let p = FaultPlan::parse("drop=0..100; delay=50..200@10").unwrap();
+        // 60us sits in both windows; the first clause (drop) wins.
+        assert_eq!(p.link_fault_at(60e-6).unwrap().extra_s, None);
+        assert_eq!(p.link_fault_at(150e-6).unwrap().extra_s, Some(10e-6));
+        assert!(p.link_fault_at(250e-6).is_none());
+        // Window end is exclusive; start is inclusive.
+        assert!(p.link_fault_at(200e-6).is_none());
+        assert!(p.link_fault_at(0.0).is_some());
+    }
+
+    #[test]
+    fn dag_plan_parses_and_rejects_garbage() {
+        let p = DagFaultPlan::parse("crash=1@5000; crash=0@9000").unwrap();
+        assert_eq!(p.crashes, vec![(1, 5000), (0, 9000)]);
+        assert!(p.is_active());
+        assert!(!DagFaultPlan::parse("").unwrap().is_active());
+        assert!(DagFaultPlan::parse("crash=1").is_err());
+        assert!(DagFaultPlan::parse("drop=0..9").is_err());
+        assert!(DagFaultPlan::parse("crash=x@1").is_err());
+    }
+}

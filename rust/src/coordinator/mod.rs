@@ -11,7 +11,7 @@
 //! routing, stage-level batching, admission control with backpressure,
 //! and latency/SLO accounting.
 //!
-//! The subsystem splits in seven:
+//! The subsystem splits in eight:
 //! * [`calendar`] — the shared wake-time calendar both engines
 //!   schedule on (one deterministic virtual timeline per cell).
 //! * [`cluster`] — the **replay** engine: N units with per-unit
@@ -35,6 +35,12 @@
 //!   the barriers; results are bit-identical for every shard count.
 //! * [`arrival`] — typed per-cell arrival processes: Poisson, bursty
 //!   MMPP, diurnal, recorded-trace replay, and closed client loops.
+//! * [`faults`] — the seed-deterministic fault-injection plane: typed
+//!   [`faults::FaultPlan`] scenarios (unit crash/recover schedules,
+//!   degraded units, fronthaul drop/delay windows, identity-keyed
+//!   transient stage faults) plus the recovery policy (bounded retries
+//!   with exponential virtual-time backoff) both engines honor.
+//!   Faults are shard- and rerun-invariant by construction.
 //! * [`slo`] — the latency accountant (p50/p95/p99/mean/max digests
 //!   end-to-end, queueing, and per stage).
 //! * [`serve`](mod@serve) — the typed [`serve::ClusterSpec`] /
@@ -42,8 +48,9 @@
 //!   via [`crate::util::Rng`] and [`serve::cell_seed`]), the batched
 //!   stage pre-simulation through the [`crate::harness`] memo cache,
 //!   engine selection (`--engine replay|cosim`), cross-cell coupling
-//!   knobs (`--handover-frac`, `--fronthaul-us`, `--reroute`), and the
-//!   `BENCH_serve.json` artifact (schema v4: multi-cell + coupling).
+//!   knobs (`--handover-frac`, `--fronthaul-us`, `--reroute`), fault
+//!   injection (`--faults`), and the `BENCH_serve.json` artifact
+//!   (schema v5: multi-cell + coupling + fault counters).
 //!
 //! Every stage kernel is functionally simulated and verified, so the
 //! pipeline doubles as an end-to-end correctness test of the whole
@@ -55,6 +62,7 @@ pub mod arrival;
 pub mod calendar;
 pub mod cluster;
 pub mod cosim;
+pub mod faults;
 pub mod serve;
 pub mod shard;
 pub mod slo;
@@ -63,9 +71,10 @@ pub use arrival::ArrivalProcess;
 pub use calendar::Calendar;
 pub use cluster::{Arrival, ClusterConfig, ClusterRun, Completion, UnitStats, Workload};
 pub use cosim::{
-    run_dag, CosimClass, CosimConfig, CosimRun, CosimSession, Coupling, DagConfig,
-    DagRun, DagUnitStat, Migrant, Msg, Outbound, StageTask,
+    run_dag, run_dag_faulted, CosimClass, CosimConfig, CosimRun, CosimSession,
+    Coupling, DagConfig, DagRun, DagUnitStat, Migrant, Msg, Outbound, StageTask,
 };
+pub use faults::{DagFaultPlan, FaultPlan};
 pub use serve::{
     cell_seed, read_artifact, serve, strong_scaling, write_artifact, Batching,
     CellReport, CellSpec, ClassReport, ClusterSpec, EngineKind, HostOnly, JobRecord,

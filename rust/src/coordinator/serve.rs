@@ -33,6 +33,15 @@
 //! union mix's [`ShardPlan::lookahead_s`]) becomes the cross-shard
 //! lookahead of [`ShardPlan::for_metro`] — the Chandy–Misra–Bryant
 //! bound that keeps coupled runs bit-identical for every shard count.
+//!
+//! Fault injection (co-sim only): an optional [`FaultPlan`]
+//! (`--faults <spec>`) arms unit crash/recover schedules, degraded
+//! units, fronthaul drop/delay windows, and identity-keyed transient
+//! stage faults on every cell. Recovery is bounded re-dispatch with
+//! exponential virtual-time backoff; jobs that exhaust their retries
+//! land in the `failed` terminal, so `admitted == completed + shed +
+//! failed` holds metro-wide with any plan active, and the fault
+//! counters ride the schema-v5 artifact.
 
 use std::sync::Arc;
 
@@ -45,6 +54,7 @@ use crate::workloads::{Features, Goal};
 use super::arrival::ArrivalProcess;
 use super::cluster::{self, Arrival, ClusterConfig, Completion, Workload};
 use super::cosim::{CosimClass, CosimConfig, CosimSession, Coupling};
+use super::faults::FaultPlan;
 use super::shard::{self, ShardPlan};
 use super::slo::{Pctls, SloAccountant, SloDigest};
 use super::{JobClass, CLASSES, STAGE_NAMES};
@@ -206,6 +216,10 @@ pub struct ClusterSpec {
     /// cell (one hop over the fronthaul) before counting them as
     /// `deadline_shed`/`dropped`. Co-sim metros only.
     pub reroute: bool,
+    /// Optional fault-injection scenario (unit outages, degraded
+    /// units, fronthaul faults, transient stage failures, recovery
+    /// policy). Co-sim engine only; `None` = fault-free.
+    pub faults: Option<FaultPlan>,
     /// The cells of the metro, in fixed cell order.
     pub cells: Vec<CellSpec>,
 }
@@ -220,6 +234,7 @@ impl Default for ClusterSpec {
             shards: None,
             fronthaul_us: None,
             reroute: false,
+            faults: None,
             cells: vec![CellSpec::default()],
         }
     }
@@ -262,6 +277,11 @@ impl ClusterSpec {
         self
     }
 
+    pub fn faults(mut self, plan: Option<FaultPlan>) -> Self {
+        self.faults = plan;
+        self
+    }
+
     /// Append one cell.
     pub fn cell(mut self, cell: CellSpec) -> Self {
         self.cells.push(cell);
@@ -293,6 +313,96 @@ impl ClusterSpec {
         self.shards
             .unwrap_or_else(|| self.cells.len().min(pool::default_workers()))
             .max(1)
+    }
+
+    /// Check the spec is runnable: non-empty cells and mixes, coupling
+    /// and fault knobs in range, and any [`FaultPlan`] naming real
+    /// cells/units. [`serve`] calls this first, so a bad knob is a
+    /// typed [`RtError`] at build time — never a silent clamp or a
+    /// fault clause that lands on a unit that does not exist.
+    pub fn validate(&self) -> Result<()> {
+        if self.cells.is_empty() {
+            return Err(RtError("serve: spec has no cells".into()));
+        }
+        for (i, cell) in self.cells.iter().enumerate() {
+            if cell.job_mix.is_empty() {
+                return Err(RtError(format!("serve: cell {i} has no job classes")));
+            }
+            if !(0.0..=1.0).contains(&cell.handover_frac) {
+                return Err(RtError(format!(
+                    "serve: cell {i}: handover_frac {} is outside [0, 1]",
+                    cell.handover_frac
+                )));
+            }
+            cell.arrival
+                .validate()
+                .map_err(|e| RtError(format!("serve: cell {i}: {e}")))?;
+        }
+        let wants_coupling =
+            self.reroute || self.cells.iter().any(|c| c.handover_frac > 0.0);
+        if wants_coupling && self.engine != EngineKind::Cosim {
+            return Err(RtError(
+                "serve: cross-cell coupling (--handover-frac / --reroute) \
+                 requires the cosim engine"
+                    .into(),
+            ));
+        }
+        if let Some(us) = self.fronthaul_us {
+            // Zero is a valid degenerate spec (co-located cells): it
+            // falls back to the one-bus-cycle lookahead floor
+            // downstream. Only negative or non-finite latencies are
+            // rejected.
+            if !(us.is_finite() && us >= 0.0) {
+                return Err(RtError(format!(
+                    "serve: fronthaul latency {us} us is not a non-negative \
+                     finite value"
+                )));
+            }
+        }
+        if self.coupled() {
+            // Cross-cell messages carry class *indices*; they only mean
+            // the same thing everywhere if every cell runs the same mix.
+            if self.cells.iter().any(|c| c.job_mix != self.cells[0].job_mix) {
+                return Err(RtError(
+                    "serve: cross-cell coupling requires an identical job_mix \
+                     in every cell (migrants carry class indices)"
+                        .into(),
+                ));
+            }
+        }
+        if let Some(plan) = &self.faults {
+            if self.engine != EngineKind::Cosim {
+                return Err(RtError(
+                    "serve: fault injection (--faults) requires the cosim \
+                     engine"
+                        .into(),
+                ));
+            }
+            let locate = |what: &str, cell: usize, unit: usize| -> Result<()> {
+                if cell >= self.cells.len() {
+                    return Err(RtError(format!(
+                        "serve: fault plan {what} names cell {cell}, but the \
+                         spec has {} cells",
+                        self.cells.len()
+                    )));
+                }
+                let units = self.cells[cell].units.max(1);
+                if unit >= units {
+                    return Err(RtError(format!(
+                        "serve: fault plan {what} names cell {cell} unit \
+                         {unit}, but that cell has {units} units"
+                    )));
+                }
+                Ok(())
+            };
+            for o in &plan.outages {
+                locate("crash", o.cell, o.unit)?;
+            }
+            for d in &plan.degrades {
+                locate("degrade", d.cell, d.unit)?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -409,6 +519,16 @@ pub struct CellReport {
     pub rerouted_out: usize,
     /// Re-offered arrivals this cell received from peers.
     pub rerouted_in: usize,
+    /// Stage re-dispatches scheduled by the fault plane (transient
+    /// faults, crash kills, outage waits). 0 without an active plan.
+    pub retries: usize,
+    /// In-flight stages killed by a scheduled unit crash.
+    pub crash_kills: usize,
+    /// Fronthaul messages a link-fault window dropped (each was
+    /// re-offered to this cell's own queue, not lost).
+    pub link_dropped: usize,
+    /// Fronthaul messages a link-fault window delayed.
+    pub link_delayed: usize,
     pub peak_admit_queue: usize,
     /// Virtual seconds from this cell's first arrival to its last
     /// pipeline exit.
@@ -436,6 +556,9 @@ pub struct ServeReport {
     pub fronthaul_us: Option<f64>,
     /// Echo of [`ClusterSpec::reroute`].
     pub reroute: bool,
+    /// Echo of the armed fault scenario's spec string (`None` =
+    /// fault-free run).
+    pub faults: Option<String>,
     /// Total jobs offered across all cells.
     pub jobs: usize,
     /// Per-cell reports, in cell order.
@@ -452,6 +575,15 @@ pub struct ServeReport {
     pub migrations: usize,
     /// Metro-wide shed re-offers (sum of per-cell `rerouted_out`).
     pub reroutes: usize,
+    /// Metro-wide fault-plane re-dispatches (sum of per-cell
+    /// `retries`).
+    pub retries: usize,
+    /// Metro-wide stages killed by unit crashes.
+    pub crash_kills: usize,
+    /// Metro-wide fronthaul messages dropped by link faults.
+    pub link_dropped: usize,
+    /// Metro-wide fronthaul messages delayed by link faults.
+    pub link_delayed: usize,
     pub peak_admit_queue: usize,
     /// Max over cell makespans (cells start at virtual t = 0).
     pub makespan_s: f64,
@@ -639,6 +771,10 @@ struct EngineOut {
     migrated_in: usize,
     rerouted_out: usize,
     rerouted_in: usize,
+    retries: usize,
+    crash_kills: usize,
+    link_dropped: usize,
+    link_delayed: usize,
     units: Vec<cluster::UnitStats>,
     makespan_s: f64,
     peak_admit_queue: usize,
@@ -652,54 +788,7 @@ struct EngineOut {
 /// [`RtError`] is returned only for unusable specs (no cells, empty
 /// mixes, degenerate arrival parameters, unreadable replay traces).
 pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
-    if spec.cells.is_empty() {
-        return Err(RtError("serve: spec has no cells".into()));
-    }
-    for (i, cell) in spec.cells.iter().enumerate() {
-        if cell.job_mix.is_empty() {
-            return Err(RtError(format!("serve: cell {i} has no job classes")));
-        }
-        if !(0.0..=1.0).contains(&cell.handover_frac) {
-            return Err(RtError(format!(
-                "serve: cell {i}: handover_frac {} is outside [0, 1]",
-                cell.handover_frac
-            )));
-        }
-        cell.arrival
-            .validate()
-            .map_err(|e| RtError(format!("serve: cell {i}: {e}")))?;
-    }
-    let wants_coupling =
-        spec.reroute || spec.cells.iter().any(|c| c.handover_frac > 0.0);
-    if wants_coupling && spec.engine != EngineKind::Cosim {
-        return Err(RtError(
-            "serve: cross-cell coupling (--handover-frac / --reroute) \
-             requires the cosim engine"
-                .into(),
-        ));
-    }
-    if let Some(us) = spec.fronthaul_us {
-        // Zero is a valid degenerate spec (co-located cells): it falls
-        // back to the one-bus-cycle lookahead floor downstream. Only
-        // negative or non-finite latencies are rejected.
-        if !(us.is_finite() && us >= 0.0) {
-            return Err(RtError(format!(
-                "serve: fronthaul latency {us} us is not a non-negative \
-                 finite value"
-            )));
-        }
-    }
-    if spec.coupled() {
-        // Cross-cell messages carry class *indices*; they only mean
-        // the same thing everywhere if every cell runs the same mix.
-        if spec.cells.iter().any(|c| c.job_mix != spec.cells[0].job_mix) {
-            return Err(RtError(
-                "serve: cross-cell coupling requires an identical job_mix \
-                 in every cell (migrants carry class indices)"
-                    .into(),
-            ));
-        }
-    }
+    spec.validate()?;
     harness::ensure_budget();
     // One batched pre-simulation over the union of every cell's mix;
     // each cell then slices its rows back out by offset.
@@ -776,6 +865,10 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
                     migrated_in: 0,
                     rerouted_out: 0,
                     rerouted_in: 0,
+                    retries: 0,
+                    crash_kills: 0,
+                    link_dropped: 0,
+                    link_delayed: 0,
                     units: r.units,
                     makespan_s: r.makespan_s,
                     peak_admit_queue: r.peak_admit_queue,
@@ -825,7 +918,16 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
                         fronthaul_s: f,
                         reroute: spec.reroute,
                     },
-                    None => Coupling::none(),
+                    // Uncoupled cells still carry their true metro
+                    // index: handover_frac 0 + reroute off emit nothing
+                    // (behaviorally Coupling::none()), but the fault
+                    // plane keys its per-cell schedules and transient
+                    // draws on `cell`.
+                    None => Coupling {
+                        cell: i,
+                        cells: cells_n,
+                        ..Coupling::none()
+                    },
                 };
                 let hand_rng = Rng::new(cell_seed(spec.seed, i) ^ HANDOVER_SALT);
                 let workload = match (p.trace.as_deref(), p.clients) {
@@ -839,16 +941,20 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
                 // pool threads), so it owns its RNG and weights.
                 let mut rng = std::mem::replace(&mut p.rng, Rng::new(0));
                 let cum = p.cum.clone();
-                sessions.push(CosimSession::with_coupling(
+                let mut session = CosimSession::with_coupling(
                     &ccfg,
                     table,
                     workload,
                     move || pick_weighted(&mut rng, &cum),
                     coupling,
                     hand_rng,
-                ));
+                );
+                if let Some(plan) = &spec.faults {
+                    session = session.with_faults(plan, spec.seed);
+                }
+                sessions.push(session);
             }
-            let outs = shard::run_sharded(sessions, &plan)
+            let outs = shard::run_sharded(sessions, &plan)?
                 .into_iter()
                 .map(|r| {
                     // serve() never shrinks the horizon below the
@@ -865,6 +971,10 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
                         migrated_in: r.migrated_in,
                         rerouted_out: r.rerouted_out,
                         rerouted_in: r.rerouted_in,
+                        retries: r.retries,
+                        crash_kills: r.crash_kills,
+                        link_dropped: r.link_dropped,
+                        link_delayed: r.link_delayed,
                         units: r.units,
                         makespan_s: r.makespan_s,
                         peak_admit_queue: r.peak_admit_queue,
@@ -950,6 +1060,10 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
             migrated_in: out.migrated_in,
             rerouted_out: out.rerouted_out,
             rerouted_in: out.rerouted_in,
+            retries: out.retries,
+            crash_kills: out.crash_kills,
+            link_dropped: out.link_dropped,
+            link_delayed: out.link_delayed,
             peak_admit_queue: out.peak_admit_queue,
             makespan_s: out.makespan_s,
             throughput_per_s: throughput,
@@ -966,6 +1080,7 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
         slo_deadline_us: spec.slo_deadline_us,
         fronthaul_us,
         reroute: spec.reroute,
+        faults: spec.faults.as_ref().map(|p| p.spec.clone()),
         jobs: total_jobs,
         completed,
         dropped: cells.iter().map(|c| c.dropped).sum(),
@@ -975,6 +1090,10 @@ pub fn serve(spec: &ClusterSpec) -> Result<ServeReport> {
         bus_wait_s: cells.iter().map(|c| c.bus_wait_s).sum(),
         migrations: cells.iter().map(|c| c.migrated_out).sum(),
         reroutes: cells.iter().map(|c| c.rerouted_out).sum(),
+        retries: cells.iter().map(|c| c.retries).sum(),
+        crash_kills: cells.iter().map(|c| c.crash_kills).sum(),
+        link_dropped: cells.iter().map(|c| c.link_dropped).sum(),
+        link_delayed: cells.iter().map(|c| c.link_delayed).sum(),
         peak_admit_queue: cells.iter().map(|c| c.peak_admit_queue).max().unwrap_or(0),
         makespan_s,
         throughput_per_s: if makespan_s > 0.0 { completed as f64 / makespan_s } else { 0.0 },
@@ -1202,6 +1321,10 @@ struct OutcomeFields {
     deadline_shed: usize,
     handoffs: usize,
     bus_wait_s: f64,
+    retries: usize,
+    crash_kills: usize,
+    link_dropped: usize,
+    link_delayed: usize,
     peak_admit_queue: usize,
     makespan_s: f64,
     throughput_per_s: f64,
@@ -1215,6 +1338,10 @@ fn outcome_to_json(o: &OutcomeFields, slo: &SloDigest) -> Vec<(&'static str, Jso
         ("deadline_shed", Json::Num(o.deadline_shed as f64)),
         ("handoffs", Json::Num(o.handoffs as f64)),
         ("bus_wait_s", Json::Num(o.bus_wait_s)),
+        ("retries", Json::Num(o.retries as f64)),
+        ("crash_kills", Json::Num(o.crash_kills as f64)),
+        ("link_dropped", Json::Num(o.link_dropped as f64)),
+        ("link_delayed", Json::Num(o.link_delayed as f64)),
         ("peak_admit_queue", Json::Num(o.peak_admit_queue as f64)),
         ("makespan_s", Json::Num(o.makespan_s)),
         ("throughput_per_s", Json::Num(o.throughput_per_s)),
@@ -1235,6 +1362,12 @@ fn outcome_from_json(v: &Json) -> std::result::Result<OutcomeFields, String> {
         deadline_shed: v.get("deadline_shed").and_then(Json::as_usize).unwrap_or(0),
         handoffs: v.get("handoffs").and_then(Json::as_usize).unwrap_or(0),
         bus_wait_s: v.get("bus_wait_s").and_then(Json::as_f64).unwrap_or(0.0),
+        // Fault counters arrived with schema v5; v1-v4 artifacts parse
+        // with them zeroed (fault injection did not exist yet).
+        retries: v.get("retries").and_then(Json::as_usize).unwrap_or(0),
+        crash_kills: v.get("crash_kills").and_then(Json::as_usize).unwrap_or(0),
+        link_dropped: v.get("link_dropped").and_then(Json::as_usize).unwrap_or(0),
+        link_delayed: v.get("link_delayed").and_then(Json::as_usize).unwrap_or(0),
         peak_admit_queue: num("peak_admit_queue")?,
         makespan_s: v
             .get("makespan_s")
@@ -1248,13 +1381,13 @@ fn outcome_from_json(v: &Json) -> std::result::Result<OutcomeFields, String> {
 }
 
 impl ServeReport {
-    /// Build the `BENCH_serve.json` document (schema version 4:
-    /// multi-cell + cross-cell coupling). Everything except the `host`
-    /// block is deterministic in the serve spec.
+    /// Build the `BENCH_serve.json` document (schema version 5:
+    /// multi-cell + cross-cell coupling + fault injection). Everything
+    /// except the `host` block is deterministic in the serve spec.
     pub fn to_json(&self, host_wall_s: f64, host_workers: usize, host_shards: usize) -> Json {
         Json::obj(vec![
             ("schema", Json::Str("revel-bench-serve".into())),
-            ("version", Json::Num(4.0)),
+            ("version", Json::Num(5.0)),
             ("freq_ghz", Json::Num(model::FREQ_GHZ)),
             (
                 "config",
@@ -1276,6 +1409,13 @@ impl ServeReport {
                         },
                     ),
                     ("reroute", Json::Bool(self.reroute)),
+                    (
+                        "faults",
+                        match &self.faults {
+                            None => Json::Null,
+                            Some(s) => Json::Str(s.clone()),
+                        },
+                    ),
                     ("jobs", Json::Num(self.jobs as f64)),
                     (
                         "cells",
@@ -1357,6 +1497,10 @@ impl ServeReport {
                             deadline_shed: self.deadline_shed,
                             handoffs: self.handoffs,
                             bus_wait_s: self.bus_wait_s,
+                            retries: self.retries,
+                            crash_kills: self.crash_kills,
+                            link_dropped: self.link_dropped,
+                            link_delayed: self.link_delayed,
                             peak_admit_queue: self.peak_admit_queue,
                             makespan_s: self.makespan_s,
                             throughput_per_s: self.throughput_per_s,
@@ -1390,6 +1534,10 @@ impl ServeReport {
                                     deadline_shed: c.deadline_shed,
                                     handoffs: c.handoffs,
                                     bus_wait_s: c.bus_wait_s,
+                                    retries: c.retries,
+                                    crash_kills: c.crash_kills,
+                                    link_dropped: c.link_dropped,
+                                    link_delayed: c.link_delayed,
                                     peak_admit_queue: c.peak_admit_queue,
                                     makespan_s: c.makespan_s,
                                     throughput_per_s: c.throughput_per_s,
@@ -1436,8 +1584,9 @@ impl ServeReport {
     /// intentionally dropped — it is the only nondeterministic part of
     /// the artifact). Pre-metro artifacts (schema versions 1/2: flat
     /// `config.units`/`config.mode`, no `per_cell`) parse as a
-    /// one-cell metro, and pre-coupling v3 artifacts parse with the
-    /// coupling counters zeroed, so every recorded `BENCH_serve.json`
+    /// one-cell metro, pre-coupling v3 artifacts parse with the
+    /// coupling counters zeroed, and pre-fault v4 artifacts parse with
+    /// the fault counters zeroed, so every recorded `BENCH_serve.json`
     /// stays readable and replayable.
     pub fn from_json(v: &Json) -> std::result::Result<ServeReport, String> {
         let err = |f: &str| format!("BENCH_serve document missing/invalid {f:?}");
@@ -1462,6 +1611,14 @@ impl ServeReport {
             Some(v) => Some(v.as_f64().ok_or_else(|| err("fronthaul_us"))?),
         };
         let reroute = cfg.get("reroute").and_then(Json::as_bool).unwrap_or(false);
+        // The fault-spec echo arrived with schema v5; older artifacts
+        // parse as fault-free.
+        let faults = match cfg.get("faults") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                Some(v.as_str().ok_or_else(|| err("faults"))?.to_string())
+            }
+        };
         let jobs = cfg.get("jobs").and_then(Json::as_usize).ok_or_else(|| err("jobs"))?;
         let slo = slo_from_json(summary, v.get("stage_us").ok_or_else(|| err("stage_us"))?)?;
         let metro = outcome_from_json(summary)?;
@@ -1506,6 +1663,10 @@ impl ServeReport {
                         migrated_in: cnt("migrated_in"),
                         rerouted_out: cnt("rerouted_out"),
                         rerouted_in: cnt("rerouted_in"),
+                        retries: o.retries,
+                        crash_kills: o.crash_kills,
+                        link_dropped: o.link_dropped,
+                        link_delayed: o.link_delayed,
                         peak_admit_queue: o.peak_admit_queue,
                         makespan_s: o.makespan_s,
                         throughput_per_s: o.throughput_per_s,
@@ -1553,6 +1714,10 @@ impl ServeReport {
                 migrated_in: 0,
                 rerouted_out: 0,
                 rerouted_in: 0,
+                retries: metro.retries,
+                crash_kills: metro.crash_kills,
+                link_dropped: metro.link_dropped,
+                link_delayed: metro.link_delayed,
                 peak_admit_queue: metro.peak_admit_queue,
                 makespan_s: metro.makespan_s,
                 throughput_per_s: metro.throughput_per_s,
@@ -1587,6 +1752,7 @@ impl ServeReport {
             slo_deadline_us,
             fronthaul_us,
             reroute,
+            faults,
             jobs,
             cells,
             completed: metro.completed,
@@ -1600,6 +1766,10 @@ impl ServeReport {
                 .and_then(Json::as_usize)
                 .unwrap_or(0),
             reroutes: summary.get("reroutes").and_then(Json::as_usize).unwrap_or(0),
+            retries: metro.retries,
+            crash_kills: metro.crash_kills,
+            link_dropped: metro.link_dropped,
+            link_delayed: metro.link_delayed,
             peak_admit_queue: metro.peak_admit_queue,
             makespan_s: metro.makespan_s,
             throughput_per_s: metro.throughput_per_s,
@@ -1731,8 +1901,8 @@ mod tests {
         assert!(back.strong_scaling.0.is_empty());
         assert_eq!(
             doc.get("version").and_then(Json::as_u64),
-            Some(4),
-            "multi-cell + coupling schema version"
+            Some(5),
+            "multi-cell + coupling + faults schema version"
         );
     }
 
@@ -1910,7 +2080,7 @@ mod tests {
         assert!(serve(&bad_fronthaul).is_err());
 
         // A coupled metro serves, counts its cross-cell traffic, and
-        // its v4 artifact round-trips bit-exactly.
+        // its v5 artifact round-trips bit-exactly.
         let coupled = ClusterSpec::new(7)
             .workers(Some(2))
             .engine(EngineKind::Cosim)
@@ -1936,6 +2106,72 @@ mod tests {
         assert_eq!(back, r);
         assert!(back.reroute);
         assert_eq!(back.cells[0].handover_frac, 1.0);
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_knobs_with_typed_errors() {
+        let cell = || CellSpec::new(1).jobs(5).job_mix(cheap_classes());
+        // handover_frac outside [0, 1] is a typed error, not a clamp.
+        let s = ClusterSpec::new(7)
+            .engine(EngineKind::Cosim)
+            .cells(2, cell().handover_frac(-0.1));
+        assert!(s.validate().unwrap_err().0.contains("handover_frac"));
+        // Non-finite fronthaul latency is rejected up front.
+        let s = ClusterSpec::new(7)
+            .engine(EngineKind::Cosim)
+            .fronthaul_us(Some(f64::NAN))
+            .cells(2, cell().handover_frac(0.5));
+        assert!(s.validate().unwrap_err().0.contains("fronthaul"));
+        // Fault injection needs the live-machine engine.
+        let s = ClusterSpec::new(7)
+            .faults(Some(FaultPlan::parse("p=0.1").unwrap()))
+            .cell(cell());
+        assert!(s.validate().unwrap_err().0.contains("cosim"));
+        // Fault clauses must name cells/units that exist.
+        let s = ClusterSpec::new(7)
+            .engine(EngineKind::Cosim)
+            .faults(Some(FaultPlan::parse("crash=2.0@100").unwrap()))
+            .cells(2, cell());
+        assert!(s.validate().unwrap_err().0.contains("cell 2"));
+        let s = ClusterSpec::new(7)
+            .engine(EngineKind::Cosim)
+            .faults(Some(FaultPlan::parse("degrade=0.3@2.0").unwrap()))
+            .cells(2, cell());
+        assert!(s.validate().unwrap_err().0.contains("unit 3"));
+        // A well-formed faulted spec passes.
+        ClusterSpec::new(7)
+            .engine(EngineKind::Cosim)
+            .faults(Some(FaultPlan::parse("crash=1.0@100..500; p=0.01").unwrap()))
+            .cells(2, cell())
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn faulted_serve_is_deterministic_conserves_jobs_and_roundtrips() {
+        let spec_str = "crash=0.0@0..400; p=0.05; retries=3; backoff=10";
+        let plan = FaultPlan::parse(spec_str).unwrap();
+        let c = cosim_spec(2, 10).faults(Some(plan));
+        let a = serve(&c).unwrap();
+        let b = serve(&c).unwrap();
+        assert_eq!(a, b, "fault plans replay bit-identically");
+        assert_eq!(
+            a.completed + a.dropped + a.deadline_shed + a.failed,
+            10,
+            "conservation holds under faults"
+        );
+        assert!(
+            a.crash_kills > 0 || a.retries > 0,
+            "the crash schedule actually fired"
+        );
+        assert_eq!(a.faults.as_deref(), Some(spec_str));
+        let back = read_artifact(&a.to_json(0.5, 2, 1).pretty()).unwrap();
+        assert_eq!(back, a, "fault counters and spec echo round-trip");
+        // The same spec without the plan completes everything: the
+        // fault plane is the only difference.
+        let clean = serve(&cosim_spec(2, 10)).unwrap();
+        assert_eq!(clean.faults, None);
+        assert_eq!(clean.crash_kills + clean.retries + clean.failed, 0);
     }
 
     /// Render `r` (a one-cell report) in the legacy flat schema the
@@ -1984,6 +2220,10 @@ mod tests {
                         deadline_shed: r.deadline_shed,
                         handoffs: r.handoffs,
                         bus_wait_s: r.bus_wait_s,
+                        retries: r.retries,
+                        crash_kills: r.crash_kills,
+                        link_dropped: r.link_dropped,
+                        link_delayed: r.link_delayed,
                         peak_admit_queue: r.peak_admit_queue,
                         makespan_s: r.makespan_s,
                         throughput_per_s: r.throughput_per_s,

@@ -48,6 +48,7 @@
 
 use crate::harness::pool;
 use crate::model;
+use crate::runtime::RtError;
 
 use super::cosim::{CosimClass, CosimRun, CosimSession, Outbound};
 
@@ -169,7 +170,15 @@ impl ShardPlan {
 /// Bit-identical for any `plan.shards`: the exchange happens at the
 /// same virtual times with the same canonical ordering whether one
 /// thread advances every cell or eight threads advance one each.
-pub fn run_sharded(sessions: Vec<CosimSession<'_>>, plan: &ShardPlan) -> Vec<CosimRun> {
+///
+/// A panicking cell does not abort the process: advancement runs
+/// under [`pool::try_scope`], so the error names the dead shard's
+/// cell range (`cells a..b`) and its panic payload — what a
+/// fault-injection test needs to say *which* cell died.
+pub fn run_sharded(
+    sessions: Vec<CosimSession<'_>>,
+    plan: &ShardPlan,
+) -> Result<Vec<CosimRun>, RtError> {
     let mut sessions = sessions;
     let n = sessions.len();
     let shards = plan.shards.max(1).min(n.max(1));
@@ -199,19 +208,31 @@ pub fn run_sharded(sessions: Vec<CosimSession<'_>>, plan: &ShardPlan) -> Vec<Cos
         let horizon = earliest + window;
         if shards == 1 {
             // One shard is the single-timeline engine, on this thread.
-            for session in sessions.iter_mut() {
-                session.advance_to(horizon);
+            // Catch panics here too so the error shape matches the
+            // multi-shard path (one labeled RtError, not an abort).
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                for session in sessions.iter_mut() {
+                    session.advance_to(horizon);
+                }
+            }));
+            if let Err(p) = r {
+                return Err(RtError(format!(
+                    "worker panic: cells 0..{n}: {}",
+                    pool::panic_message(p.as_ref())
+                )));
             }
         } else {
-            pool::scope(shards, |s| {
-                for group in sessions.chunks_mut(chunk) {
-                    s.spawn(move || {
+            pool::try_scope(shards, |s| {
+                for (g, group) in sessions.chunks_mut(chunk).enumerate() {
+                    let start = g * chunk;
+                    let end = start + group.len();
+                    s.spawn(format!("shard {g} (cells {start}..{end})"), move || {
                         for session in group.iter_mut() {
                             session.advance_to(horizon);
                         }
                     });
                 }
-            });
+            })?;
         }
         // Horizon barrier: exchange cross-cell messages in canonical
         // order — source cell order, emit order within a source. The
@@ -243,7 +264,7 @@ pub fn run_sharded(sessions: Vec<CosimSession<'_>>, plan: &ShardPlan) -> Vec<Cos
             sessions[dst].deliver(out);
         }
     }
-    sessions.into_iter().map(|s| s.finish()).collect()
+    Ok(sessions.into_iter().map(|s| s.finish()).collect())
 }
 
 #[cfg(test)]
@@ -382,7 +403,7 @@ mod tests {
                 .iter()
                 .map(|t| CosimSession::new(&cfg, &mix, Workload::Open(t), || 0))
                 .collect();
-            let runs = run_sharded(sessions, &plan);
+            let runs = run_sharded(sessions, &plan).unwrap();
             assert_eq!(runs, solo, "shards={shards} must be bit-identical");
         }
     }

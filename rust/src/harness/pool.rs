@@ -5,10 +5,16 @@
 //! one shared queue, runs the caller's closure (which submits jobs via
 //! [`Scope::spawn`]), and joins every worker — so returning from
 //! `scope` is a barrier. [`run_parallel`] (the sweep engine's
-//! map-over-items entry point) is a thin layer on top.
+//! map-over-items entry point) is a thin layer on top. [`try_scope`]
+//! is the structured-error variant: labeled jobs, panics caught and
+//! returned as one [`RtError`] naming every label that died — so a
+//! fault-test failure reports *which* shard's cells panicked instead
+//! of aborting the whole process.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::runtime::RtError;
 
 /// Worker count: `REVEL_WORKERS` if set (>0), else the machine's
 /// available parallelism.
@@ -92,6 +98,68 @@ pub fn scope<'env, R>(
         work.notify_all();
         r
     })
+}
+
+/// Best-effort human-readable panic payload (`&str` / `String` cover
+/// every `panic!` in practice; anything else gets a placeholder).
+pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Handle passed to the [`try_scope`] closure: like [`Scope`], but
+/// every job carries a label and a panicking job is *caught* — its
+/// label + payload are collected instead of unwinding through the
+/// pool — so the caller learns exactly which jobs died.
+pub struct TryScope<'env, 'p> {
+    inner: &'p Scope<'env, 'p>,
+    panics: Arc<Mutex<Vec<String>>>,
+}
+
+impl<'env, 'p> TryScope<'env, 'p> {
+    /// Submit a labeled job. If it panics, `label: payload` is
+    /// recorded and the remaining jobs keep running.
+    pub fn spawn(&self, label: impl Into<String>, job: impl FnOnce() + Send + 'env) {
+        let label = label.into();
+        let panics = Arc::clone(&self.panics);
+        self.inner.spawn(move || {
+            if let Err(p) =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+            {
+                let msg = panic_message(p.as_ref());
+                panics.lock().unwrap().push(format!("{label}: {msg}"));
+            }
+        });
+    }
+
+    /// Number of worker threads serving this scope.
+    pub fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+}
+
+/// Structured-error variant of [`scope`]: jobs are labeled, panics are
+/// caught per job, and the result is `Err` listing every label that
+/// panicked (in completion order) — the barrier still holds, so jobs
+/// queued behind a dead one run to completion first.
+pub fn try_scope<'env, R>(
+    workers: usize,
+    f: impl FnOnce(&TryScope<'env, '_>) -> R,
+) -> Result<R, RtError> {
+    let panics = Arc::new(Mutex::new(Vec::new()));
+    let collected = Arc::clone(&panics);
+    let r = scope(workers, |s| f(&TryScope { inner: s, panics }));
+    let died = collected.lock().unwrap();
+    if died.is_empty() {
+        Ok(r)
+    } else {
+        Err(RtError(format!("worker panic: {}", died.join("; "))))
+    }
 }
 
 /// Run `f` over every item on up to `workers` threads; the returned
@@ -204,5 +272,38 @@ mod tests {
         scope(2, |s| {
             s.spawn(|| panic!("job panic propagates"));
         });
+    }
+
+    #[test]
+    fn try_scope_reports_which_labeled_job_died() {
+        let hits = AtomicUsize::new(0);
+        let err = try_scope(2, |s| {
+            s.spawn("cells 0..2", || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            s.spawn("cells 2..4", || panic!("unit 3 exploded"));
+            s.spawn("cells 4..6", || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        })
+        .unwrap_err();
+        // The error names the dead shard's cell range and payload; the
+        // healthy jobs still ran to the barrier.
+        assert!(err.0.contains("cells 2..4"), "{err}");
+        assert!(err.0.contains("unit 3 exploded"), "{err}");
+        assert!(!err.0.contains("cells 0..2"), "{err}");
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn try_scope_returns_the_closure_value_when_nothing_dies() {
+        let got = try_scope(3, |s| {
+            for _ in 0..10 {
+                s.spawn("noop", || {});
+            }
+            s.workers()
+        })
+        .unwrap();
+        assert_eq!(got, 3);
     }
 }

@@ -13,16 +13,17 @@
 //!             [--lambda R] [--lambda-lo R] [--lambda-hi R] [--dwell-s T]
 //!             [--period-s T] [--depth D] [--trace FILE] [--clients C]
 //!             [--queue-cap Q] [--admit-cap A] [--slo-deadline-us D]
-//!             [--workers W] [--out FILE]
+//!             [--faults SPEC] [--workers W] [--out FILE]
 //! revel dag [--kernel cholesky|lu] [--n N] [--tile B] [--units U]
-//!           [--out BENCH_dag.json]
+//!           [--faults SPEC] [--out BENCH_dag.json]
 //! revel pipeline [jobs] [units]
 //! revel list
 //! ```
 
 use revel::analysis::kernels;
 use revel::coordinator::{
-    ArrivalProcess, CellSpec, ClusterSpec, EngineKind, ServeReport,
+    ArrivalProcess, CellSpec, ClusterSpec, DagFaultPlan, EngineKind, FaultPlan,
+    ServeReport,
 };
 use revel::harness;
 use revel::model;
@@ -60,6 +61,20 @@ fn print_serve(report: &ServeReport, wall_s: f64) {
             report.migrations,
             report.reroutes,
             if report.reroute { "" } else { " (reroute off)" }
+        );
+    }
+    if report.crash_kills + report.retries + report.link_dropped + report.link_delayed
+        > 0
+        || report.faults.is_some()
+    {
+        println!(
+            "  faults [{}]: {} crash-killed stages, {} retries, \
+             {} fronthaul msgs dropped, {} delayed",
+            report.faults.as_deref().unwrap_or("none"),
+            report.crash_kills,
+            report.retries,
+            report.link_dropped,
+            report.link_delayed
         );
     }
     println!(
@@ -440,6 +455,12 @@ fn main() {
                 .handover_frac(
                     flag("--handover-frac").and_then(|s| s.parse().ok()).unwrap_or(0.0),
                 );
+            let faults = flag("--faults").map(|s| {
+                FaultPlan::parse(s).unwrap_or_else(|e| {
+                    eprintln!("bad --faults spec: {e}");
+                    std::process::exit(2);
+                })
+            });
             let mut spec = ClusterSpec::new(seed)
                 .engine(engine)
                 .slo_deadline_us(
@@ -448,6 +469,7 @@ fn main() {
                 .workers(flag("--workers").and_then(|s| s.parse::<usize>().ok()))
                 .fronthaul_us(flag("--fronthaul-us").and_then(|s| s.parse::<f64>().ok()))
                 .reroute(args.iter().any(|a| a == "--reroute"))
+                .faults(faults)
                 .cells(cells_n, proto);
             if let Some(s) = flag("--shards").and_then(|s| s.parse::<usize>().ok()) {
                 spec = spec.shards(s);
@@ -509,9 +531,19 @@ fn main() {
             let out_path = flag("--out")
                 .cloned()
                 .unwrap_or_else(|| "BENCH_dag.json".to_string());
+            let faults = flag("--faults").map(|s| {
+                DagFaultPlan::parse(s).unwrap_or_else(|e| {
+                    eprintln!("bad --faults spec: {e}");
+                    std::process::exit(2);
+                })
+            });
             let cfg = revel::coordinator::DagConfig { kernel, n, tile, units };
             let t0 = std::time::Instant::now();
-            let run = revel::coordinator::run_dag(&cfg).unwrap_or_else(|e| {
+            let run = match &faults {
+                Some(plan) => revel::coordinator::run_dag_faulted(&cfg, plan),
+                None => revel::coordinator::run_dag(&cfg),
+            }
+            .unwrap_or_else(|e| {
                 eprintln!("dag failed: {e}");
                 std::process::exit(1);
             });
@@ -527,6 +559,13 @@ fn main() {
                         ("n", Json::Num(n as f64)),
                         ("tile", Json::Num(tile as f64)),
                         ("units", Json::Num(units as f64)),
+                        (
+                            "faults",
+                            match flag("--faults") {
+                                Some(s) => Json::Str(s.clone()),
+                                None => Json::Null,
+                            },
+                        ),
                     ]),
                 ),
                 ("summary", run.to_json()),
@@ -580,9 +619,11 @@ fn main() {
                               [--lambda R] [--lambda-lo R] [--lambda-hi R] [--dwell-s T]\n\
                               [--period-s T] [--depth D] [--trace FILE] [--clients C]\n\
                               [--queue-cap 8] [--admit-cap 1024] [--slo-deadline-us D]\n\
+                              [--faults 'crash=C.U@D..R; degrade=C.U@M; drop=A..B;\n\
+                               delay=A..B@E; p=P; retries=N; backoff=US']\n\
                               [--workers W] [--out BENCH_serve.json]\n\
                    revel dag [--kernel cholesky|lu] [--n 64] [--tile 16] [--units 4]\n\
-                             [--out BENCH_dag.json]\n\
+                             [--faults 'crash=UNIT@CYCLE'] [--out BENCH_dag.json]\n\
                    revel pipeline [jobs] [units]   (golden check + default serve run)"
             );
             std::process::exit(2);

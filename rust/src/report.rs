@@ -567,6 +567,13 @@ pub fn dag_summary(
         run.evictions,
         run.factor_digest,
     );
+    if run.unit_crashes > 0 || run.tasks_rescheduled > 0 {
+        out.push_str(&format!(
+            "faults: {} unit crashes, {} tasks re-executed on survivors \
+             (digest pinned to the fault-free run)\n",
+            run.unit_crashes, run.tasks_rescheduled,
+        ));
+    }
     let mut t = Table::new(&["unit", "tasks", "busy cycles", "occupancy"]);
     for u in &run.per_unit {
         t.row(vec![
@@ -606,6 +613,13 @@ mod tests {
         let s = dag_summary(&cfg, &run);
         assert!(s.contains("dag[cholesky]"), "{s}");
         assert!(s.contains("occupancy"), "{s}");
+        assert!(!s.contains("faults:"), "clean runs omit the fault line: {s}");
+        // A faulted run surfaces its counters in the summary.
+        let plan = coordinator::DagFaultPlan::parse("crash=0@1").unwrap();
+        let faulted = coordinator::run_dag_faulted(&cfg, &plan).unwrap();
+        let s = dag_summary(&cfg, &faulted);
+        assert!(s.contains("faults: 1 unit crashes"), "{s}");
+        assert_eq!(faulted.factor_digest, run.factor_digest);
     }
 
     #[test]

@@ -88,7 +88,7 @@ fn run_coupled_pair(
             )
         })
         .collect();
-    shard::run_sharded(sessions, plan)
+    shard::run_sharded(sessions, plan).expect("no shard panics in coupled pair")
 }
 
 /// The canary: the conservative window (== fronthaul) is load-bearing.

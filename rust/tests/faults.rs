@@ -1,0 +1,308 @@
+//! Fault-injection adversarial suite (the robustness tentpole).
+//!
+//! A [`FaultPlan`] is seed-deterministic by construction: crash and
+//! link windows are fixed virtual-time schedules, and transient stage
+//! faults are drawn from an identity-keyed hash of
+//! `(seed, cell, job, stage, attempt)` — never from a stream RNG — so
+//! the exact same stages fail no matter how the metro is sharded,
+//! rerun, or interleaved. These tests make that load-bearing:
+//!
+//! * shard-count {1, 2, 8} and rerun **bit-invariance under active
+//!   faults** (crashes, degrades, link drops/delays, and transient
+//!   failures all firing at once), at the engine level and through
+//!   `serve`;
+//! * **conservation**: every admitted job leaves the metro exactly
+//!   once — `completed + dropped + deadline_shed + failed` — with
+//!   links down and units dead;
+//! * the tile-DAG **factor digest pinned bit-identical** under unit
+//!   failure (re-execution is timing-only; numerics advance at first
+//!   dispatch);
+//! * retry **backoff showing up monotonically** in the virtual
+//!   timeline, with the retry schedule itself invariant to the
+//!   backoff setting;
+//! * the worst case: **killing the only unit** terminates with clean
+//!   `failed` accounting instead of deadlocking the calendar.
+
+use revel::coordinator::cosim::{CosimRun, CosimSession};
+use revel::coordinator::{
+    shard, Arrival, CellSpec, ClusterConfig, ClusterSpec, CosimClass, CosimConfig,
+    Coupling, DagFaultPlan, EngineKind, FaultPlan, JobClass, ShardPlan, StageSpec,
+    StageTask, Workload,
+};
+use revel::harness;
+use revel::model;
+use revel::util::Rng;
+use revel::workloads::{Features, Goal};
+
+fn est_s(kernel: &str, n: usize) -> f64 {
+    model::cycles_to_us(harness::cycles(kernel, n, Features::ALL, Goal::Latency).unwrap())
+        * 1e-6
+}
+
+/// The coupling suite's three-stage class: two migration boundaries
+/// per job, cheap enough to co-simulate live many times over.
+fn mix() -> Vec<Option<CosimClass>> {
+    vec![Some(CosimClass {
+        stages: vec![
+            StageTask { kernel: "solver".into(), n: 8, est_s: est_s("solver", 8) },
+            StageTask { kernel: "gemm".into(), n: 12, est_s: est_s("gemm", 12) },
+            StageTask { kernel: "fir".into(), n: 12, est_s: est_s("fir", 12) },
+        ],
+    })]
+}
+
+fn class_demand_s() -> f64 {
+    mix()[0].as_ref().unwrap().demand_s()
+}
+
+fn flood(jobs: usize) -> Vec<Arrival> {
+    (0..jobs).map(|i| Arrival { id: i as u64, class: 0, t_s: 0.0 }).collect()
+}
+
+/// Two single-unit cells, every boundary migrating, armed with `plan`:
+/// the densest cross-cell traffic the engine can produce, now with the
+/// fault plane live on top of it.
+fn run_faulted_pair(
+    plan: &FaultPlan,
+    traces: &[Vec<Arrival>; 2],
+    shards: usize,
+) -> Vec<CosimRun> {
+    let mix = mix();
+    let f = class_demand_s() * 0.5;
+    let cfg = CosimConfig {
+        cluster: ClusterConfig { units: 1, queue_cap: 16, admit_cap: 64 },
+        deadline_s: None,
+    };
+    let sessions: Vec<CosimSession<'_>> = traces
+        .iter()
+        .enumerate()
+        .map(|(cell, t)| {
+            CosimSession::with_coupling(
+                &cfg,
+                &mix,
+                Workload::Open(t),
+                || 0,
+                Coupling {
+                    cell,
+                    cells: 2,
+                    handover_frac: 1.0,
+                    fronthaul_s: f,
+                    reroute: true,
+                },
+                Rng::new(0x5EED ^ cell as u64),
+            )
+            .with_faults(plan, 0xFA17)
+        })
+        .collect();
+    let sp = ShardPlan::for_metro(shards, &mix, Some(f));
+    shard::run_sharded(sessions, &sp).expect("no shard panics under faults")
+}
+
+/// Every fault mechanism firing at once — a crash window on cell 1's
+/// only unit, a degraded cell 0, link drop and delay windows, and
+/// transient stage faults — and the metro still reruns and re-shards
+/// bit-identically, conserving every job.
+#[test]
+fn faulted_coupled_pair_is_shard_and_rerun_invariant() {
+    let plan = FaultPlan::parse(
+        "crash=1.0@5..40; degrade=0.0@1.5; drop=0..15; delay=15..30@3; \
+         p=0.1; retries=4; backoff=5",
+    )
+    .unwrap();
+    let traces = [flood(6), flood(6)];
+    let base = run_faulted_pair(&plan, &traces, 1);
+    for shards in [2usize, 8] {
+        let runs = run_faulted_pair(&plan, &traces, shards);
+        assert_eq!(runs, base, "shards={shards} must not change faulted results");
+    }
+    assert_eq!(run_faulted_pair(&plan, &traces, 1), base, "rerun bit-identical");
+    // The plan is genuinely active, not vacuously parsed.
+    let activity: usize = base
+        .iter()
+        .map(|r| r.retries + r.crash_kills + r.link_dropped + r.link_delayed)
+        .sum();
+    assert!(activity > 0, "fault plan produced no observable events");
+    assert!(
+        base.iter().map(|r| r.link_dropped + r.link_delayed).sum::<usize>() > 0,
+        "link-fault windows must catch fronthaul traffic"
+    );
+    // Conservation: 12 offered jobs each leave the metro exactly once,
+    // and the (faulted) fronthaul neither loses nor duplicates
+    // migrants — dropped messages re-offer locally, they don't vanish.
+    let completed: usize = base.iter().map(|r| r.completions.len()).sum();
+    let lost: usize = base.iter().map(|r| r.dropped + r.deadline_shed + r.failed).sum();
+    assert_eq!(completed + lost, 12);
+    assert_eq!(
+        base.iter().map(|r| r.migrated_out).sum::<usize>(),
+        base.iter().map(|r| r.migrated_in).sum::<usize>(),
+    );
+}
+
+/// The serve-layer 4-stage class the metro suites use.
+fn lite_mix() -> Vec<JobClass> {
+    vec![JobClass {
+        name: "lite",
+        stages: [
+            StageSpec { kernel: "solver", n: 8 },
+            StageSpec { kernel: "solver", n: 12 },
+            StageSpec { kernel: "gemm", n: 12 },
+            StageSpec { kernel: "fir", n: 12 },
+        ],
+        weight: 1.0,
+    }]
+}
+
+/// Through `serve`: a 3-cell coupled metro with two crash windows, a
+/// degraded cell, link faults, and transient failures serves
+/// bit-identically for shard counts {1, 2, 8} and under rerun, with
+/// metro-wide conservation and the spec string echoed for provenance.
+#[test]
+fn faulted_serve_is_shard_and_rerun_invariant_with_conservation() {
+    let spec_str = "crash=0.0@0..60; crash=1.1@10..80; degrade=2.0@2.0; \
+                    drop=5..20; delay=20..40@5; p=0.08; retries=4; backoff=8";
+    let build = |shards: usize| {
+        ClusterSpec::new(21)
+            .workers(Some(2))
+            .engine(EngineKind::Cosim)
+            .fronthaul_us(Some(2.0))
+            .reroute(true)
+            .faults(Some(FaultPlan::parse(spec_str).unwrap()))
+            .cells(3, CellSpec::new(2).jobs(8).job_mix(lite_mix()).handover_frac(0.5))
+            .shards(shards)
+    };
+    let base = revel::coordinator::serve(&build(1)).unwrap();
+    for shards in [2usize, 8] {
+        let r = revel::coordinator::serve(&build(shards)).unwrap();
+        assert_eq!(r, base, "shards={shards} must not change the report");
+    }
+    assert_eq!(revel::coordinator::serve(&build(1)).unwrap(), base, "rerun");
+    assert!(
+        base.crash_kills + base.retries + base.link_dropped + base.link_delayed > 0,
+        "fault counters must register activity"
+    );
+    assert_eq!(base.faults.as_deref(), Some(spec_str), "spec echoed verbatim");
+    // Conservation, metro-wide and per cell.
+    assert_eq!(base.completed + base.dropped + base.deadline_shed + base.failed, 24);
+    let cell_sum: usize = base
+        .cells
+        .iter()
+        .map(|c| c.retries + c.crash_kills + c.link_dropped + c.link_delayed)
+        .sum();
+    assert_eq!(
+        cell_sum,
+        base.crash_kills + base.retries + base.link_dropped + base.link_delayed,
+        "metro fault counters are the per-cell sums"
+    );
+}
+
+/// Unit failure never touches the numerics of record: the factor
+/// digest under any crash schedule is bit-identical to the fault-free
+/// run, for both DAG kernels, and the faulted run itself reruns
+/// bit-identically.
+#[test]
+fn dag_digest_is_bit_identical_under_unit_failures() {
+    for kernel in [
+        revel::taskgraph::DagKernel::Cholesky,
+        revel::taskgraph::DagKernel::Lu,
+    ] {
+        let cfg = revel::coordinator::DagConfig { kernel, n: 64, tile: 16, units: 3 };
+        let clean = revel::coordinator::run_dag(&cfg).unwrap();
+        assert_eq!(clean.unit_crashes, 0);
+        for spec in ["crash=0@50", "crash=0@50; crash=2@900"] {
+            let plan = DagFaultPlan::parse(spec).unwrap();
+            let faulted = revel::coordinator::run_dag_faulted(&cfg, &plan).unwrap();
+            assert_eq!(
+                faulted.factor_digest, clean.factor_digest,
+                "{} under '{spec}': digest must be pinned to the fault-free run",
+                kernel.name()
+            );
+            assert_eq!(faulted.unit_crashes as usize, plan.crashes.len());
+            assert_eq!(faulted.tasks, clean.tasks, "every task still retires");
+            let again = revel::coordinator::run_dag_faulted(&cfg, &plan).unwrap();
+            assert_eq!(again, faulted, "faulted DAG runs rerun bit-identically");
+        }
+    }
+    // Out-of-range plans are typed errors, and crashing every unit is
+    // a clean terminal error, never a hang.
+    let cfg = revel::coordinator::DagConfig {
+        kernel: revel::taskgraph::DagKernel::Cholesky,
+        n: 32,
+        tile: 16,
+        units: 2,
+    };
+    let err = revel::coordinator::run_dag_faulted(
+        &cfg,
+        &DagFaultPlan::parse("crash=5@10").unwrap(),
+    )
+    .unwrap_err();
+    assert!(err.contains("unit 5"), "{err}");
+    let err = revel::coordinator::run_dag_faulted(
+        &cfg,
+        &DagFaultPlan::parse("crash=0@0; crash=1@0").unwrap(),
+    )
+    .unwrap_err();
+    assert!(err.contains("every unit crashed"), "{err}");
+}
+
+/// The exponential backoff is real virtual time: because transient
+/// draws are keyed on `(job, stage, attempt)` — never on the clock —
+/// the *retry schedule is identical* for any backoff setting, so
+/// scaling the backoff only stretches the timeline. The makespan must
+/// be monotone in it.
+#[test]
+fn retry_backoff_is_monotone_in_virtual_time() {
+    let serve_with_backoff = |backoff_us: u32| {
+        let spec = ClusterSpec::new(5)
+            .workers(Some(2))
+            .engine(EngineKind::Cosim)
+            .faults(Some(
+                FaultPlan::parse(&format!("p=0.5; retries=12; backoff={backoff_us}"))
+                    .unwrap(),
+            ))
+            .cell(CellSpec::new(1).jobs(10).job_mix(lite_mix()));
+        revel::coordinator::serve(&spec).unwrap()
+    };
+    let r5 = serve_with_backoff(5);
+    let r20 = serve_with_backoff(20);
+    let r80 = serve_with_backoff(80);
+    assert!(r5.retries > 0, "p=0.5 over 40 stage attempts must retry");
+    assert_eq!(r5.retries, r20.retries, "retry schedule is backoff-invariant");
+    assert_eq!(r5.retries, r80.retries, "retry schedule is backoff-invariant");
+    assert_eq!(r5.failed, r20.failed);
+    assert_eq!(r5.failed, r80.failed);
+    assert!(
+        r20.makespan_s >= r5.makespan_s && r80.makespan_s >= r20.makespan_s,
+        "makespan must be monotone in the backoff ({} / {} / {})",
+        r5.makespan_s,
+        r20.makespan_s,
+        r80.makespan_s
+    );
+    assert!(
+        r80.makespan_s > r5.makespan_s,
+        "a 16x backoff stretch must be visible in the timeline ({} vs {})",
+        r5.makespan_s,
+        r80.makespan_s
+    );
+}
+
+/// The worst case: the metro's only unit dies at t=0 and never comes
+/// back. Every job must wait out its bounded retries and land in the
+/// `failed` terminal — the calendar drains to a clean report instead
+/// of deadlocking or losing jobs.
+#[test]
+fn killing_the_only_unit_terminates_with_clean_failed_accounting() {
+    let build = || {
+        ClusterSpec::new(3)
+            .workers(Some(2))
+            .engine(EngineKind::Cosim)
+            .faults(Some(FaultPlan::parse("crash=0.0@0; retries=2; backoff=5").unwrap()))
+            .cell(CellSpec::new(1).jobs(5).job_mix(lite_mix()))
+    };
+    let r = revel::coordinator::serve(&build()).unwrap();
+    assert_eq!(r.completed, 0, "a dead metro completes nothing");
+    assert_eq!(r.failed, 5, "every job lands in the failed terminal");
+    assert_eq!(r.dropped + r.deadline_shed, 0);
+    assert_eq!(r.completed + r.dropped + r.deadline_shed + r.failed, 5);
+    assert!(r.retries > 0, "jobs waited out their bounded retries");
+    assert_eq!(revel::coordinator::serve(&build()).unwrap(), r, "rerun");
+}

@@ -1,14 +1,16 @@
 //! BENCH_serve schema evolution: every schema version this repo has
 //! ever written must keep parsing to the same `ServeReport` a current
-//! run produces, and the current (v4, coupled-metro) schema must
+//! run produces, and the current (v5, fault-counter) schema must
 //! round-trip bit-exactly.
 //!
-//! The older-version fixtures are synthesized from live v4 documents
-//! by *removing* exactly the keys each schema bump added — v3 lacked
-//! the coupling fields, v2 was the flat one-cell layout, v1
-//! additionally predated the co-sim engine keys. That keeps the
-//! goldens honest (every retained number comes from a real run) while
-//! pinning the reader's defaulting behavior for the removed keys.
+//! The older-version fixtures are synthesized from live v5 documents
+//! by *removing* exactly the keys each schema bump added — v4 lacked
+//! the fault plane (no `config.faults`, no retry/crash/link
+//! counters), v3 lacked the coupling fields, v2 was the flat one-cell
+//! layout, v1 additionally predated the co-sim engine keys. That
+//! keeps the goldens honest (every retained number comes from a real
+//! run) while pinning the reader's defaulting behavior for the
+//! removed keys.
 
 use std::collections::BTreeMap;
 
@@ -38,10 +40,34 @@ fn obj_mut(j: &mut Json) -> &mut BTreeMap<String, Json> {
     }
 }
 
-/// Emit and re-parse the v4 document (exercises the text round-trip,
-/// not just the tree).
-fn v4_doc(r: &ServeReport) -> Json {
+/// Emit and re-parse the current (v5) document (exercises the text
+/// round-trip, not just the tree).
+fn current_doc(r: &ServeReport) -> Json {
     json::parse(&r.to_json(0.25, 2, 1).pretty()).unwrap()
+}
+
+/// The four per-outcome counters schema v5 (fault injection) added.
+const FAULT_COUNTERS: [&str; 4] =
+    ["retries", "crash_kills", "link_dropped", "link_delayed"];
+
+/// Remove the keys schema v5 (the fault plane) added.
+fn strip_to_v4(mut doc: Json) -> Json {
+    let top = obj_mut(&mut doc);
+    top.insert("version".into(), Json::Num(4.0));
+    obj_mut(top.get_mut("config").unwrap()).remove("faults");
+    let summary = obj_mut(top.get_mut("summary").unwrap());
+    for k in FAULT_COUNTERS {
+        summary.remove(k);
+    }
+    if let Json::Arr(per_cell) = top.get_mut("per_cell").unwrap() {
+        for c in per_cell {
+            let m = obj_mut(c);
+            for k in FAULT_COUNTERS {
+                m.remove(k);
+            }
+        }
+    }
+    doc
 }
 
 /// Remove the keys schema v4 (cross-cell coupling) added.
@@ -138,9 +164,10 @@ fn strip_to_v1(mut doc: Json) -> Json {
 }
 
 /// Current schema, coupled metro: the artifact round-trips bit-exactly
-/// (everything but the `host` block), coupling counters included.
+/// (everything but the `host` block), coupling and fault counters
+/// included.
 #[test]
-fn v4_coupled_artifacts_roundtrip_bit_exactly() {
+fn v5_coupled_artifacts_roundtrip_bit_exactly() {
     let mut spec = ClusterSpec::new(19)
         .workers(Some(2))
         .engine(EngineKind::Cosim)
@@ -155,16 +182,61 @@ fn v4_coupled_artifacts_roundtrip_bit_exactly() {
     assert!(r.migrations > 0, "frac 1.0 must migrate every boundary");
     let text = r.to_json(0.25, 2, 2).pretty();
     let doc = json::parse(&text).unwrap();
-    assert_eq!(doc.get("version").and_then(Json::as_u64), Some(4));
+    assert_eq!(doc.get("version").and_then(Json::as_u64), Some(5));
     assert!(
         doc.get("summary").and_then(|s| s.get("migrations")).is_some(),
-        "v4 summaries carry the migration counter"
+        "summaries carry the migration counter"
+    );
+    assert!(
+        doc.get("summary").and_then(|s| s.get("retries")).is_some(),
+        "v5 summaries carry the fault counters"
+    );
+    assert!(
+        matches!(doc.get("config").and_then(|c| c.get("faults")), Some(Json::Null)),
+        "a fault-free spec echoes faults: null"
     );
     let back = read_artifact(&text).unwrap();
-    assert_eq!(back, r, "v4 round-trips bit-exactly");
+    assert_eq!(back, r, "v5 round-trips bit-exactly");
     assert_eq!(back.migrations, r.migrations);
     assert_eq!(back.reroutes, r.reroutes);
     assert_eq!(back.cells[0].handover_frac, 1.0);
+}
+
+/// Schema v4 (coupled metro, pre-fault-plane): a v4 document — the
+/// current tree with `config.faults` and every fault counter removed
+/// by key surgery — reconstructs today's report exactly, with the
+/// counters zeroed and no fault spec.
+#[test]
+fn v4_documents_parse_with_fault_counters_zeroed() {
+    let mut spec = ClusterSpec::new(19)
+        .workers(Some(2))
+        .engine(EngineKind::Cosim)
+        .reroute(true)
+        .fronthaul_us(Some(4.0))
+        .cell(CellSpec::new(1).jobs(6).job_mix(lite_mix()))
+        .cell(CellSpec::new(1).jobs(6).job_mix(lite_mix()));
+    for c in &mut spec.cells {
+        c.handover_frac = 1.0;
+    }
+    let r = serve(&spec).unwrap();
+    assert!(r.faults.is_none() && r.retries + r.crash_kills == 0);
+    let v4 = strip_to_v4(current_doc(&r));
+    let text = v4.pretty();
+    assert!(!text.contains("\"faults\""), "v4 has no fault-spec echo");
+    for k in FAULT_COUNTERS {
+        assert!(!text.contains(k), "v4 has no {k} counter");
+    }
+    let back = read_artifact(&text).unwrap();
+    assert_eq!(back, r, "v4 reconstructs the fault-free report exactly");
+    assert!(back.faults.is_none());
+    assert_eq!(
+        (back.retries, back.crash_kills, back.link_dropped, back.link_delayed),
+        (0, 0, 0, 0)
+    );
+    assert!(back
+        .cells
+        .iter()
+        .all(|c| c.retries + c.crash_kills + c.link_dropped + c.link_delayed == 0));
 }
 
 /// Schema v3 (multi-cell, pre-coupling): an uncoupled metro's v3
@@ -185,7 +257,7 @@ fn v3_documents_parse_with_coupling_defaulted_off() {
     let r = serve(&spec).unwrap();
     assert_eq!(r.migrations, 0, "uncoupled metros never migrate");
     assert_eq!(r.fronthaul_us, None);
-    let v3 = strip_to_v3(v4_doc(&r));
+    let v3 = strip_to_v3(strip_to_v4(current_doc(&r)));
     let text = v3.pretty();
     assert!(!text.contains("handover_frac"), "v3 has no coupling keys");
     assert!(!text.contains("migrated_out"));
@@ -215,7 +287,7 @@ fn v2_flat_documents_parse_as_a_one_cell_metro() {
     );
     for spec in [open, closed] {
         let r = serve(&spec).unwrap();
-        let v2 = flatten_to_v2(v4_doc(&r));
+        let v2 = flatten_to_v2(strip_to_v4(current_doc(&r)));
         let text = v2.pretty();
         assert!(!text.contains("per_cell"), "the flat schema has no per_cell");
         let back = read_artifact(&text).unwrap();
@@ -238,7 +310,7 @@ fn v1_precosim_documents_parse_with_defaults() {
     );
     let r = serve(&spec).unwrap();
     assert_eq!((r.deadline_shed, r.handoffs), (0, 0), "replay runs fit v1");
-    let v1 = strip_to_v1(flatten_to_v2(v4_doc(&r)));
+    let v1 = strip_to_v1(flatten_to_v2(strip_to_v4(current_doc(&r))));
     let text = v1.pretty();
     assert!(!text.contains("slo_deadline_us"));
     let back = read_artifact(&text).unwrap();
