@@ -122,6 +122,28 @@ impl FabricSpec {
         v.into_iter()
     }
 
+    /// Mesh neighbors in ascending tile-index order (north, west, east,
+    /// south). Routers expand neighbors through this so search order —
+    /// and therefore tie-breaking — is pinned explicitly rather than
+    /// inherited from whatever order `neighbors` happens to push.
+    pub fn neighbors_sorted(&self, idx: usize) -> impl Iterator<Item = usize> + '_ {
+        let (x, y) = self.xy(idx);
+        let mut v = Vec::with_capacity(4);
+        if y > 0 {
+            v.push(self.idx(x, y - 1));
+        }
+        if x > 0 {
+            v.push(self.idx(x - 1, y));
+        }
+        if x + 1 < self.width {
+            v.push(self.idx(x + 1, y));
+        }
+        if y + 1 < self.height {
+            v.push(self.idx(x, y + 1));
+        }
+        v.into_iter()
+    }
+
     /// Directed link id between adjacent tiles (for congestion tracking).
     pub fn link_id(&self, a: usize, b: usize) -> usize {
         a * self.width * self.height + b
@@ -180,6 +202,18 @@ mod tests {
             for n in f.neighbors(t) {
                 assert!(f.neighbors(n).any(|m| m == t));
             }
+        }
+    }
+
+    #[test]
+    fn sorted_neighbors_ascend() {
+        let f = FabricSpec::default_revel();
+        for t in 0..f.num_tiles() {
+            let v: Vec<usize> = f.neighbors_sorted(t).collect();
+            assert!(v.windows(2).all(|w| w[0] < w[1]), "tile {t}: {v:?}");
+            let mut u: Vec<usize> = f.neighbors(t).collect();
+            u.sort_unstable();
+            assert_eq!(v, u, "same adjacency, pinned order");
         }
     }
 

@@ -6,7 +6,9 @@ pub mod fabric;
 pub mod place;
 
 pub use fabric::{FabricSpec, TileKind};
-pub use place::{compile, CompileError, CompileOptions, DfgTiming, Placement};
+pub use place::{
+    compile, CompileError, CompileOptions, DfgTiming, PlaceStrategy, Placement,
+};
 
 use crate::dataflow::LaneConfig;
 use std::sync::Arc;

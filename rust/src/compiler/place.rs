@@ -1,15 +1,36 @@
 //! Spatial compiler (paper §8): map every dataflow's nodes onto fabric
 //! tiles and route their edges on the circuit-switched mesh.
 //!
-//! Approach, as in the paper: stochastic placement (simulated annealing)
-//! with a Pathfinder-style negotiated router — links start cheap, overuse
-//! raises per-link history costs, and rerouting iterates until no link is
-//! shared or the iteration budget is spent. Dedicated nodes claim a
-//! FU-class-compatible tile each (vector nodes claim ceil(w/2) subword
-//! tiles — modeled as one *placement* tile plus a width cost); temporal
-//! nodes pack into temporal tiles up to the 32-inst capacity.
+//! Two placement engines live here, selected by
+//! [`CompileOptions::strategy`]:
+//!
+//! * [`PlaceStrategy::Greedy`] — the original one-shot pipeline:
+//!   first-fit greedy placement followed by simulated annealing over
+//!   swap moves, scored by a Pathfinder-lite router. This path is kept
+//!   **frozen** (same `Rng` stream, same duplicate-weighted routing
+//!   metric) because every archived simulated-cycle baseline was
+//!   produced by it.
+//! * [`PlaceStrategy::Negotiated`] (default) — an iterative
+//!   congestion-negotiated search in the PathFinder idiom: per-tile
+//!   *present* costs (how contested a tile is right now) plus *historic*
+//!   costs (how often it has been contested across rounds), rip-up and
+//!   re-place every node each round until tile overuse hits zero or the
+//!   [`CompileOptions::place_rounds`] budget expires. The final
+//!   placement is the better of {negotiated, frozen greedy+anneal}
+//!   under the frozen routing metric, so simulated cycles can only
+//!   improve relative to the archived baselines. Fully deterministic:
+//!   the only seed use is the initial round-robin offset, neighbor
+//!   expansion is pinned to ascending tile index, and every cost tie
+//!   breaks toward the lower tile index.
+//!
+//! Dedicated nodes claim a FU-class-compatible tile each (vector nodes
+//! claim ceil(w/2) subword tiles — modeled as one *placement* tile plus
+//! a width cost); temporal nodes pack into temporal tiles up to the
+//! 32-inst capacity. Critical (pipelined) dataflows always own their
+//! tiles exclusively; only non-critical nodes may time-multiplex, and
+//! only onto tiles that hold no critical node.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use super::fabric::{FabricSpec, TileKind};
 use crate::dataflow::{Criticality, Dfg, FuClass, LaneConfig, Operand};
@@ -31,19 +52,47 @@ pub struct DfgTiming {
 /// Result of compiling a LaneConfig onto a fabric.
 #[derive(Clone, Debug)]
 pub struct Placement {
+    /// Per-dataflow timing summaries, indexed like `LaneConfig::dfgs`.
     pub timing: Vec<DfgTiming>,
     /// node (dfg_idx, node_idx) -> tile index (dedicated-mapped nodes).
     pub tile_of: HashMap<(usize, usize), usize>,
-    /// Total routed wirelength (hops) — annealing objective.
+    /// Total routed wirelength (hops) over the *deduplicated* net list —
+    /// the physical wiring metric reported in sweep artifacts.
     pub wirelength: usize,
-    /// Residual link overuse after negotiation (0 = legal routing).
+    /// Residual link overuse after negotiation (0 = legal routing),
+    /// over the deduplicated net list.
     pub overuse: usize,
     /// Dedicated tiles consumed (for area/utilization reporting).
     pub tiles_used: usize,
     /// Temporal instructions placed.
     pub temporal_insts: usize,
+    /// True when the negotiated-congestion search won the portfolio
+    /// selection (false = the frozen greedy+anneal candidate won, or
+    /// [`PlaceStrategy::Greedy`] was requested).
+    pub negotiated: bool,
+    /// Rip-up-and-reroute rounds the negotiated search consumed
+    /// (0 under [`PlaceStrategy::Greedy`]).
+    pub rounds: usize,
+    /// Final routed tile path per deduplicated net, aligned with the
+    /// net-list order ([`Placement::nets`] entries).
+    pub routes: Vec<Vec<usize>>,
+    /// Deduplicated net count (distinct physical wires).
+    pub nets: usize,
 }
 
+/// Placement engine selection (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaceStrategy {
+    /// Frozen greedy + simulated-annealing pipeline — the pre-negotiation
+    /// baseline the archived cycle artifacts were produced with.
+    Greedy,
+    /// Portfolio: iterative congestion-negotiated search, selected over
+    /// the frozen candidate only when it is no worse under the frozen
+    /// (overuse, wirelength) metric.
+    Negotiated,
+}
+
+/// Spatial-compiler options.
 #[derive(Clone, Debug)]
 pub struct CompileOptions {
     /// Heterogeneous fabric enabled (paper Feature 5). When false,
@@ -51,19 +100,36 @@ pub struct CompileOptions {
     /// serialized through shared dedicated resources (Fig 19's pre-het
     /// configurations; Q9's all-dedicated alternative costs 2.75x area).
     pub heterogeneous: bool,
+    /// Simulated-annealing iterations of the frozen greedy candidate.
     pub anneal_iters: usize,
+    /// Deterministic seed: drives the annealer's `Rng` stream and the
+    /// negotiated search's initial round-robin offset. Placements are
+    /// bit-reproducible for a fixed (config, fabric, options) triple.
     pub seed: u64,
+    /// Which placement engine produces the final mapping.
+    pub strategy: PlaceStrategy,
+    /// Round budget of the negotiated rip-up-and-re-place loop.
+    pub place_rounds: usize,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        Self { heterogeneous: true, anneal_iters: 300, seed: 1 }
+        Self {
+            heterogeneous: true,
+            anneal_iters: 300,
+            seed: 1,
+            strategy: PlaceStrategy::Negotiated,
+            place_rounds: 16,
+        }
     }
 }
 
+/// Compile-time failure classes.
 #[derive(Debug)]
 pub enum CompileError {
+    /// The fabric lacks tiles/capacity for the requested mapping.
     Resources(String),
+    /// Port validation failed.
     Ports(String),
 }
 
@@ -135,6 +201,14 @@ pub fn compile(
     // ---- Placement + routing of dedicated nodes ------------------------
     // One placement tile per node (FU-class compatible); the subword width
     // is accounted in the resource check above and in the area model.
+    //
+    // Node order is the legacy flat order (dfg index, then node index):
+    // the greedy cursor sequence and the annealer's Rng stream must stay
+    // byte-identical to the pre-negotiation compiler whenever no overflow
+    // occurs — which is every real workload config — so archived
+    // placements and their simulated cycles reproduce exactly. The
+    // time-multiplex aliasing fix lives entirely in the overflow branch
+    // below, which legacy reached with an unrecorded rng pick.
     let mut rng = Rng::new(opts.seed);
     let nodes: Vec<(usize, usize)> = dedicated
         .iter()
@@ -150,9 +224,12 @@ pub fn compile(
     // Initial greedy placement (first-fit per class, round-robin offsets).
     let mut tile_of: HashMap<(usize, usize), usize> = HashMap::new();
     let mut used: HashMap<usize, (usize, usize)> = HashMap::new();
+    let mut crit_tiles: HashSet<usize> = HashSet::new();
+    let mut load: HashMap<usize, usize> = HashMap::new();
     {
         let mut cursor: HashMap<FuClass, usize> = HashMap::new();
         for &(di, ni) in &nodes {
+            let critical = cfg.dfgs[di].criticality == Criticality::Critical;
             let cls = cfg.dfgs[di].nodes[ni].op.fu_class();
             let pool = free.get(&cls).cloned().unwrap_or_default();
             if pool.is_empty() {
@@ -165,98 +242,104 @@ pub fn compile(
                 if !used.contains_key(&t) {
                     tile_of.insert((di, ni), t);
                     used.insert(t, (di, ni));
+                    if critical {
+                        crit_tiles.insert(t);
+                    }
+                    *load.entry(t).or_insert(0) += 1;
                     *c = (*c + k + 1) % pool.len();
                     placed = true;
                     break;
                 }
             }
-            if !placed {
-                // Time-multiplex: share the least-loaded tile of the class
-                // (legal only for non-critical dfgs forced dedicated).
-                let t = pool[rng.below(pool.len())];
-                tile_of.insert((di, ni), t);
+            if placed {
+                continue;
+            }
+            if critical {
+                // A critical node aliasing an occupied tile is a
+                // silent-corruption bug (pipelined dataflows fire every
+                // cycle), never a fallback. Reachable despite the demand
+                // check when earlier non-critical nodes consumed the
+                // class's tiles — the case the old compiler papered over
+                // with an unrecorded rng-chosen share.
+                return Err(CompileError::Resources(format!(
+                    "{cls:?}: no free tile for critical node {:?}.{ni}; \
+                     critical dataflows cannot time-multiplex",
+                    cfg.dfgs[di].name
+                )));
+            }
+            // Time-multiplex fallback for non-critical overflow:
+            // deterministic least-loaded tile of the class (ties break
+            // toward the lower tile index), and never a tile a critical
+            // node has pinned — those are pipelined every cycle.
+            let shared = pool
+                .iter()
+                .copied()
+                .filter(|t| !crit_tiles.contains(t))
+                .min_by_key(|t| (load.get(t).copied().unwrap_or(0), *t));
+            match shared {
+                Some(t) => {
+                    tile_of.insert((di, ni), t);
+                    *load.entry(t).or_insert(0) += 1;
+                }
+                None => {
+                    return Err(CompileError::Resources(format!(
+                        "{cls:?}: every tile is pinned by a critical node; \
+                         non-critical overflow has nowhere to time-multiplex"
+                    )));
+                }
             }
         }
     }
 
-    // Net list: (src tile endpoint, dst tile endpoint) per DFG edge.
-    let nets = |tile_of: &HashMap<(usize, usize), usize>| -> Vec<(usize, usize)> {
-        let mut v = Vec::new();
-        for &di in &dedicated {
-            let d: &Dfg = &cfg.dfgs[di];
-            for (ni, n) in d.nodes.iter().enumerate() {
-                let dst = tile_of[&(di, ni)];
-                for opnd in [Some(n.a), n.b, n.c].into_iter().flatten() {
-                    match opnd {
-                        Operand::Node(j) => v.push((tile_of[&(di, j)], dst)),
-                        Operand::Port(p) => {
-                            v.push((fabric.in_port_tile(d.in_ports[p].gid), dst))
-                        }
-                        Operand::Const(_) => {}
-                    }
+    // Frozen greedy+anneal candidate, scored on the duplicate-weighted
+    // net list exactly as the pre-negotiation compiler did.
+    let (greedy_best, greedy_wl, greedy_ou) = anneal(
+        cfg,
+        fabric,
+        &dedicated,
+        &nodes,
+        &free,
+        &mut rng,
+        opts.anneal_iters,
+        tile_of,
+    );
+
+    // Portfolio selection: the negotiated search must beat (or tie) the
+    // frozen candidate under the frozen metric to be adopted — so the
+    // duplicate-weighted wirelength that feeds the timing model below is
+    // monotonically non-increasing versus archived baselines, and
+    // simulated cycles can only improve.
+    let (tile_of, metric_wl, negotiated, rounds) = match opts.strategy {
+        PlaceStrategy::Greedy => (greedy_best, greedy_wl, false, 0),
+        PlaceStrategy::Negotiated => {
+            if nodes.is_empty() {
+                (greedy_best, greedy_wl, false, 0)
+            } else {
+                let (neg, neg_rounds) =
+                    negotiate(cfg, fabric, &dedicated, &nodes, &free, opts);
+                let legal = tile_violations(cfg, &neg) == 0;
+                let (nwl, nou) = route_cost(
+                    fabric,
+                    &collect_nets(cfg, fabric, &dedicated, &neg, false),
+                );
+                if legal && (nou, nwl) <= (greedy_ou, greedy_wl) {
+                    (neg, nwl, true, neg_rounds)
+                } else {
+                    (greedy_best, greedy_wl, false, neg_rounds)
                 }
             }
-            for o in &d.outs {
-                v.push((tile_of[&(di, o.node)], fabric.out_port_tile(o.gid)));
-            }
         }
-        v
     };
 
-    // Annealing over swap moves, objective = negotiated routing cost.
-    let mut best = tile_of.clone();
-    let (mut best_wl, mut best_ou) = route_cost(fabric, &nets(&tile_of));
-    let move_candidates: Vec<(usize, usize)> = nodes.clone();
-    if !move_candidates.is_empty() {
-        let mut cur = tile_of.clone();
-        let (mut cur_wl, mut cur_ou) = (best_wl, best_ou);
-        for it in 0..opts.anneal_iters {
-            let temp = 1.0 - it as f64 / opts.anneal_iters as f64;
-            let &(di, ni) = &move_candidates[rng.below(move_candidates.len())];
-            let cls = cfg.dfgs[di].nodes[ni].op.fu_class();
-            let pool = free.get(&cls).cloned().unwrap_or_default();
-            if pool.len() < 2 {
-                continue;
-            }
-            let new_tile = pool[rng.below(pool.len())];
-            let old_tile = cur[&(di, ni)];
-            if new_tile == old_tile {
-                continue;
-            }
-            let mut cand = cur.clone();
-            // Swap if occupied by a same-class node.
-            if let Some(&other) = cand
-                .iter()
-                .find(|(_, &t)| t == new_tile)
-                .map(|(k, _)| k)
-                .as_ref()
-            {
-                cand.insert(*other, old_tile);
-            }
-            cand.insert((di, ni), new_tile);
-            let (wl, ou) = route_cost(fabric, &nets(&cand));
-            let cost = wl as f64 + 50.0 * ou as f64;
-            let cur_cost = cur_wl as f64 + 50.0 * cur_ou as f64;
-            if cost < cur_cost || rng.f64() < 0.1 * temp {
-                cur = cand;
-                cur_wl = wl;
-                cur_ou = ou;
-                let best_cost = best_wl as f64 + 50.0 * best_ou as f64;
-                if (wl as f64) + 50.0 * (ou as f64) < best_cost {
-                    best = cur.clone();
-                    best_wl = wl;
-                    best_ou = ou;
-                }
-            }
-        }
-    }
-    let tile_of = best;
-
     // ---- Per-dfg timing -------------------------------------------------
+    // The average-hop estimate stays calibrated on the duplicate-weighted
+    // net list (its length is placement-independent), keeping the timing
+    // model continuous with every archived cycle baseline.
     let avg_hops = if nodes.is_empty() {
         0
     } else {
-        (best_wl / nets(&tile_of).len().max(1)).max(1)
+        let dup_nets = collect_nets(cfg, fabric, &dedicated, &tile_of, false);
+        (metric_wl / dup_nets.len().max(1)).max(1)
     };
     let mut timing = Vec::with_capacity(cfg.dfgs.len());
     for (i, d) in cfg.dfgs.iter().enumerate() {
@@ -296,18 +379,359 @@ pub fn compile(
         timing.push(t);
     }
 
+    // Physical report: route the *deduplicated* net list (one entry per
+    // distinct wire — an input feeding two operand slots of one node is
+    // a single routed value) through the negotiated router.
+    let phys_nets = collect_nets(cfg, fabric, &dedicated, &tile_of, true);
+    let (wirelength, overuse, routes) = negotiate_routes(fabric, &phys_nets, 8);
+
     Ok(Placement {
         timing,
-        tiles_used: tile_of.values().collect::<std::collections::HashSet<_>>().len(),
+        tiles_used: tile_of.values().collect::<HashSet<_>>().len(),
         tile_of,
-        wirelength: best_wl,
-        overuse: best_ou,
+        wirelength,
+        overuse,
         temporal_insts,
+        negotiated,
+        rounds,
+        routes,
+        nets: phys_nets.len(),
     })
 }
 
-/// Pathfinder-lite: route all nets by BFS with history costs; returns
-/// (total wirelength, residual overuse).
+/// Net endpoints (src tile, dst tile) of the dedicated placement.
+///
+/// `dedupe = false` reproduces the historical per-operand list (an input
+/// feeding two operand slots of one node appears twice) — the annealing
+/// metric and the timing model are calibrated on it. `dedupe = true`
+/// collapses duplicate operands of one node into the single physical
+/// wire they actually are, which is what the negotiated router and the
+/// reported wirelength/overuse use.
+fn collect_nets(
+    cfg: &LaneConfig,
+    fabric: &FabricSpec,
+    dedicated: &[usize],
+    tile_of: &HashMap<(usize, usize), usize>,
+    dedupe: bool,
+) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    for &di in dedicated {
+        let d: &Dfg = &cfg.dfgs[di];
+        for (ni, n) in d.nodes.iter().enumerate() {
+            let dst = tile_of[&(di, ni)];
+            let mut seen: Vec<(bool, usize)> = Vec::new();
+            for opnd in [Some(n.a), n.b, n.c].into_iter().flatten() {
+                if dedupe {
+                    let key = match opnd {
+                        Operand::Node(j) => Some((false, j)),
+                        Operand::Port(p) => Some((true, p)),
+                        Operand::Const(_) => None,
+                    };
+                    if let Some(k) = key {
+                        if seen.contains(&k) {
+                            continue;
+                        }
+                        seen.push(k);
+                    }
+                }
+                match opnd {
+                    Operand::Node(j) => v.push((tile_of[&(di, j)], dst)),
+                    Operand::Port(p) => {
+                        v.push((fabric.in_port_tile(d.in_ports[p].gid), dst))
+                    }
+                    Operand::Const(_) => {}
+                }
+            }
+        }
+        for o in &d.outs {
+            v.push((tile_of[&(di, o.node)], fabric.out_port_tile(o.gid)));
+        }
+    }
+    v
+}
+
+/// The frozen greedy+anneal candidate: simulated annealing over swap
+/// moves, objective = negotiated routing cost on the duplicate-weighted
+/// net list. Byte-for-byte the pre-negotiation behavior (same `Rng`
+/// stream, same `route_cost` metric) — archived simulated-cycle
+/// baselines were produced by exactly this path, so it anchors the
+/// portfolio selection in `compile`.
+#[allow(clippy::too_many_arguments)]
+fn anneal(
+    cfg: &LaneConfig,
+    fabric: &FabricSpec,
+    dedicated: &[usize],
+    nodes: &[(usize, usize)],
+    free: &HashMap<FuClass, Vec<usize>>,
+    rng: &mut Rng,
+    iters: usize,
+    tile_of: HashMap<(usize, usize), usize>,
+) -> (HashMap<(usize, usize), usize>, usize, usize) {
+    let nets = |t: &HashMap<(usize, usize), usize>| {
+        collect_nets(cfg, fabric, dedicated, t, false)
+    };
+    let mut best = tile_of.clone();
+    let (mut best_wl, mut best_ou) = route_cost(fabric, &nets(&tile_of));
+    if !nodes.is_empty() {
+        let mut cur = tile_of;
+        let (mut cur_wl, mut cur_ou) = (best_wl, best_ou);
+        for it in 0..iters {
+            let temp = 1.0 - it as f64 / iters as f64;
+            let &(di, ni) = &nodes[rng.below(nodes.len())];
+            let cls = cfg.dfgs[di].nodes[ni].op.fu_class();
+            let pool = free.get(&cls).cloned().unwrap_or_default();
+            if pool.len() < 2 {
+                continue;
+            }
+            let new_tile = pool[rng.below(pool.len())];
+            let old_tile = cur[&(di, ni)];
+            if new_tile == old_tile {
+                continue;
+            }
+            let mut cand = cur.clone();
+            // Swap if occupied by a same-class node.
+            if let Some(&other) = cand
+                .iter()
+                .find(|(_, &t)| t == new_tile)
+                .map(|(k, _)| k)
+                .as_ref()
+            {
+                cand.insert(*other, old_tile);
+            }
+            cand.insert((di, ni), new_tile);
+            let (wl, ou) = route_cost(fabric, &nets(&cand));
+            let cost = wl as f64 + 50.0 * ou as f64;
+            let cur_cost = cur_wl as f64 + 50.0 * cur_ou as f64;
+            if cost < cur_cost || rng.f64() < 0.1 * temp {
+                cur = cand;
+                cur_wl = wl;
+                cur_ou = ou;
+                let best_cost = best_wl as f64 + 50.0 * best_ou as f64;
+                if (wl as f64) + 50.0 * (ou as f64) < best_cost {
+                    best = cur.clone();
+                    best_wl = wl;
+                    best_ou = ou;
+                }
+            }
+        }
+    }
+    (best, best_wl, best_ou)
+}
+
+/// A placement anchor one node's nets attach to: another dedicated node
+/// (its tile moves during the search) or a fixed port tile.
+#[derive(Clone, Copy)]
+enum Anchor {
+    Node(usize, usize),
+    Fixed(usize),
+}
+
+/// Count of illegally shared tiles: any tile holding more than one node
+/// where at least one occupant is critical (pipelined dataflows own
+/// their tile; only non-critical nodes may serialize onto one tile).
+fn tile_violations(cfg: &LaneConfig, place: &HashMap<(usize, usize), usize>) -> usize {
+    let mut occ: HashMap<usize, (usize, bool)> = HashMap::new();
+    for (&(di, _), &t) in place {
+        let e = occ.entry(t).or_insert((0, false));
+        e.0 += 1;
+        e.1 |= cfg.dfgs[di].criticality == Criticality::Critical;
+    }
+    occ.values()
+        .filter(|&&(n, any_crit)| n > 1 && any_crit)
+        .map(|&(n, _)| n - 1)
+        .sum()
+}
+
+/// Iterative congestion-negotiated placement (PathFinder idiom, applied
+/// to tiles): every round rips up and re-places every node greedily
+/// against a cost that mixes estimated wirelength (all-pairs hop
+/// distances to the node's placed neighbors and fixed port anchors), a
+/// *present* sharing cost, and a *historic* cost that accumulates on
+/// tiles that keep being contested. Rounds run until a round is both
+/// legal (no critical tile sharing) and a fixed point, or the budget
+/// expires; the best (violations, estimated wirelength) round wins.
+///
+/// Deterministic by construction: node order is fixed (the flat
+/// dfg/node order), candidate tiles are scanned in ascending index with
+/// strict-improve acceptance, and the seed only offsets the initial
+/// round-robin.
+fn negotiate(
+    cfg: &LaneConfig,
+    fabric: &FabricSpec,
+    dedicated: &[usize],
+    nodes: &[(usize, usize)],
+    free: &HashMap<FuClass, Vec<usize>>,
+    opts: &CompileOptions,
+) -> (HashMap<(usize, usize), usize>, usize) {
+    let dist = all_pairs_hops(fabric);
+    let n_tiles = fabric.num_tiles();
+
+    // Deduplicated edge anchors per node (both directions), mirroring
+    // `collect_nets(dedupe = true)`.
+    let mut anchors: HashMap<(usize, usize), Vec<Anchor>> = HashMap::new();
+    for &di in dedicated {
+        let d = &cfg.dfgs[di];
+        for (ni, n) in d.nodes.iter().enumerate() {
+            let mut seen: Vec<(bool, usize)> = Vec::new();
+            for opnd in [Some(n.a), n.b, n.c].into_iter().flatten() {
+                let key = match opnd {
+                    Operand::Node(j) => Some((false, j)),
+                    Operand::Port(p) => Some((true, p)),
+                    Operand::Const(_) => None,
+                };
+                let Some(key) = key else { continue };
+                if seen.contains(&key) {
+                    continue;
+                }
+                seen.push(key);
+                match opnd {
+                    Operand::Node(j) => {
+                        anchors.entry((di, ni)).or_default().push(Anchor::Node(di, j));
+                        anchors.entry((di, j)).or_default().push(Anchor::Node(di, ni));
+                    }
+                    Operand::Port(p) => {
+                        anchors
+                            .entry((di, ni))
+                            .or_default()
+                            .push(Anchor::Fixed(fabric.in_port_tile(d.in_ports[p].gid)));
+                    }
+                    Operand::Const(_) => {}
+                }
+            }
+        }
+        for o in &d.outs {
+            anchors
+                .entry((di, o.node))
+                .or_default()
+                .push(Anchor::Fixed(fabric.out_port_tile(o.gid)));
+        }
+    }
+
+    // Seed-offset round-robin initial placement per class.
+    let mut place: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut occ: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_tiles];
+    {
+        let mut offs: HashMap<FuClass, usize> = HashMap::new();
+        for &(di, ni) in nodes {
+            let cls = cfg.dfgs[di].nodes[ni].op.fu_class();
+            let pool = &free[&cls];
+            let o = offs.entry(cls).or_insert(opts.seed as usize % pool.len());
+            let t = pool[*o % pool.len()];
+            *o += 1;
+            place.insert((di, ni), t);
+            occ[t].push((di, ni));
+        }
+    }
+
+    let est_wl = |place: &HashMap<(usize, usize), usize>| -> usize {
+        collect_nets(cfg, fabric, dedicated, place, true)
+            .iter()
+            .map(|&(s, t)| dist[s][t] as usize)
+            .sum()
+    };
+
+    let mut hist = vec![0.0f64; n_tiles];
+    let mut best = place.clone();
+    let mut best_cost = (tile_violations(cfg, &place), est_wl(&place));
+    let mut rounds_used = 0;
+    for _round in 0..opts.place_rounds {
+        rounds_used += 1;
+        let mut changed = false;
+        for &(di, ni) in nodes {
+            let critical = cfg.dfgs[di].criticality == Criticality::Critical;
+            let cls = cfg.dfgs[di].nodes[ni].op.fu_class();
+            let old = place[&(di, ni)];
+            occ[old].retain(|&x| x != (di, ni));
+            let mut best_t = old;
+            let mut best_c = f64::INFINITY;
+            // Ascending scan + strict improvement pins ties to the
+            // lowest tile index.
+            for &t in &free[&cls] {
+                let others = &occ[t];
+                let crit_other = others
+                    .iter()
+                    .any(|&(dj, _)| cfg.dfgs[dj].criticality == Criticality::Critical);
+                let present = if others.is_empty() {
+                    0.0
+                } else if critical || crit_other {
+                    1e6 * others.len() as f64
+                } else {
+                    8.0 * others.len() as f64 * (1.0 + hist[t])
+                };
+                let wire: f64 = anchors
+                    .get(&(di, ni))
+                    .map(|a| {
+                        a.iter()
+                            .map(|an| {
+                                let at = match *an {
+                                    Anchor::Node(dj, nj) => place[&(dj, nj)],
+                                    Anchor::Fixed(ft) => ft,
+                                };
+                                dist[t][at] as f64
+                            })
+                            .sum()
+                    })
+                    .unwrap_or(0.0);
+                let cost = wire + present;
+                if cost < best_c {
+                    best_c = cost;
+                    best_t = t;
+                }
+            }
+            if best_t != old {
+                changed = true;
+            }
+            place.insert((di, ni), best_t);
+            occ[best_t].push((di, ni));
+        }
+        // Raise historic cost on contested tiles so persistent sharing
+        // spreads out across rounds (the PathFinder negotiation step).
+        for (t, o) in occ.iter().enumerate() {
+            if o.len() > 1 {
+                let any_crit = o
+                    .iter()
+                    .any(|&(dj, _)| cfg.dfgs[dj].criticality == Criticality::Critical);
+                hist[t] += (o.len() - 1) as f64 * if any_crit { 4.0 } else { 1.0 };
+            }
+        }
+        let cost = (tile_violations(cfg, &place), est_wl(&place));
+        if cost < best_cost {
+            best_cost = cost;
+            best = place.clone();
+        }
+        if cost.0 == 0 && !changed {
+            break; // legal fixed point: converged
+        }
+    }
+    (best, rounds_used)
+}
+
+/// All-pairs hop distances over the mesh (BFS per tile; the fabric is
+/// tiny, so this is cheaper than memoizing per-net Dijkstra results).
+fn all_pairs_hops(fabric: &FabricSpec) -> Vec<Vec<u32>> {
+    let n = fabric.num_tiles();
+    let mut dist = vec![vec![u32::MAX; n]; n];
+    for s in 0..n {
+        let d = &mut dist[s];
+        d[s] = 0;
+        let mut queue = std::collections::VecDeque::from([s]);
+        while let Some(u) = queue.pop_front() {
+            for v in fabric.neighbors_sorted(u) {
+                if d[v] == u32::MAX {
+                    d[v] = d[u] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    dist
+}
+
+/// Pathfinder-lite metric router (frozen): route all nets by shortest
+/// path with history costs; returns (total wirelength, residual
+/// overuse). This is the scoring function of the annealed candidate and
+/// of the portfolio selection — its numbers must stay bit-identical to
+/// the archived baselines, so its cost model is never edited.
 fn route_cost(fabric: &FabricSpec, nets: &[(usize, usize)]) -> (usize, usize) {
     let n = fabric.num_tiles();
     let mut history = vec![0.0f64; n * n];
@@ -348,6 +772,9 @@ fn bfs_route(
         return vec![s];
     }
     // Dijkstra over link costs 1 + history + current-usage penalty.
+    // Neighbor expansion is pinned to ascending tile index
+    // (`neighbors_sorted`); the heap key (cost, tile) makes pop order —
+    // and therefore the whole search — independent of insertion order.
     let n = fabric.num_tiles();
     let mut dist = vec![f64::INFINITY; n];
     let mut prev = vec![usize::MAX; n];
@@ -362,7 +789,7 @@ fn bfs_route(
         if u == t {
             break;
         }
-        for v in fabric.neighbors(u) {
+        for v in fabric.neighbors_sorted(u) {
             let link = fabric.link_id(u, v);
             let cost = 1.0
                 + history[link]
@@ -372,6 +799,111 @@ fn bfs_route(
                 dist[v] = nd;
                 prev[v] = u;
                 heap.push((std::cmp::Reverse((nd * 1024.0) as u64), v));
+            }
+        }
+    }
+    let mut path = vec![t];
+    let mut cur = t;
+    while prev[cur] != usize::MAX {
+        cur = prev[cur];
+        path.push(cur);
+    }
+    path.reverse();
+    path
+}
+
+/// Negotiated-congestion link router (PathFinder): *present* cost grows
+/// with a link's current sharing and with the round number, *historic*
+/// cost accumulates on links that stay overused, and every round rips up
+/// and re-routes every net. Returns (wirelength, residual overuse, one
+/// routed tile path per net) for the best round. Fixed-point integer
+/// costs and a (cost, tile-index) heap key make every tie explicit:
+/// equal-cost routes resolve toward lower tile indices.
+fn negotiate_routes(
+    fabric: &FabricSpec,
+    nets: &[(usize, usize)],
+    rounds: usize,
+) -> (usize, usize, Vec<Vec<usize>>) {
+    let n = fabric.num_tiles();
+    let mut hist = vec![0u64; n * n];
+    let mut best: Option<(usize, usize, Vec<Vec<usize>>)> = None;
+    for round in 0..rounds {
+        let mut usage: HashMap<usize, usize> = HashMap::new();
+        let mut paths = Vec::with_capacity(nets.len());
+        let mut wl = 0;
+        // Present-cost factor sharpens each round (1x, 2x, 3x ...): early
+        // rounds explore, late rounds force nets off contested links.
+        let present = (round as u64 + 1) * 2 * SCALE;
+        for &(s, t) in nets {
+            let path = route_one(fabric, s, t, &hist, &usage, present);
+            wl += path.len();
+            for w in path.windows(2) {
+                *usage.entry(fabric.link_id(w[0], w[1])).or_insert(0) += 1;
+            }
+            paths.push(path);
+        }
+        let overuse: usize = usage.values().filter(|&&u| u > 1).map(|&u| u - 1).sum();
+        let better = match &best {
+            None => true,
+            Some(&(bwl, bou, _)) => (overuse, wl) < (bou, bwl),
+        };
+        if better {
+            best = Some((wl, overuse, paths));
+        }
+        if overuse == 0 {
+            break;
+        }
+        for (link, &u) in &usage {
+            if u > 1 {
+                hist[*link] += (u as u64 - 1) * (round as u64 + 1) * SCALE;
+            }
+        }
+    }
+    best.unwrap_or((0, 0, Vec::new()))
+}
+
+/// Fixed-point cost scale of the negotiated router (integer costs make
+/// tie-breaking exact — no epsilon comparisons).
+const SCALE: u64 = 1024;
+
+/// One net of the negotiated router: Dijkstra with integer costs
+/// `SCALE + hist[link] + present * usage[link]`, ascending-index
+/// neighbor expansion, and a min-heap keyed (cost, tile) so every
+/// equal-cost tie resolves toward the lower tile index.
+fn route_one(
+    fabric: &FabricSpec,
+    s: usize,
+    t: usize,
+    hist: &[u64],
+    usage: &HashMap<usize, usize>,
+    present: u64,
+) -> Vec<usize> {
+    if s == t {
+        return vec![s];
+    }
+    let n = fabric.num_tiles();
+    let mut dist = vec![u64::MAX; n];
+    let mut prev = vec![usize::MAX; n];
+    let mut heap = std::collections::BinaryHeap::new();
+    dist[s] = 0;
+    heap.push(std::cmp::Reverse((0u64, s)));
+    while let Some(std::cmp::Reverse((du, u))) = heap.pop() {
+        if du > dist[u] {
+            continue;
+        }
+        if u == t {
+            break;
+        }
+        for v in fabric.neighbors_sorted(u) {
+            let link = fabric.link_id(u, v);
+            let cost = SCALE
+                + hist[link]
+                + present * usage.get(&link).copied().unwrap_or(0) as u64;
+            let nd = du + cost;
+            if nd < dist[v] {
+                dist[v] = nd;
+                prev[v] = u;
+                heap.push(std::cmp::Reverse((nd, v)));
             }
         }
     }
@@ -430,6 +962,7 @@ mod tests {
         assert!(p.timing[2].depth >= cfg.dfgs[2].critical_path());
         assert_eq!(p.overuse, 0, "router must legalize");
         assert_eq!(p.temporal_insts, 2);
+        assert_eq!(p.routes.len(), p.nets, "one route per physical net");
     }
 
     #[test]
@@ -490,5 +1023,149 @@ mod tests {
         let b = compile(&cfg, &fabric, &CompileOptions::default()).unwrap();
         assert_eq!(a.wirelength, b.wirelength);
         assert_eq!(a.tile_of, b.tile_of);
+        // Full routes, not just totals: the router's tie-breaking is
+        // pinned (ascending neighbor order, lowest-tile-index ties), so
+        // every path must reproduce hop for hop.
+        assert_eq!(a.routes, b.routes);
+        assert_eq!(a.overuse, b.overuse);
+        assert_eq!((a.negotiated, a.rounds), (b.negotiated, b.rounds));
+    }
+
+    /// A config with more sqrt/div work than the 3 SqrtDiv tiles: a
+    /// critical dfg pinning all three plus a non-critical div forced
+    /// onto the dedicated fabric (het off).
+    fn sqrtdiv_oversubscribed_config() -> LaneConfig {
+        // Non-critical first: pre-fix, its div grabbed a tile ahead of
+        // the critical dfg, and a critical node then fell into the
+        // rng-chosen time-multiplex fallback and aliased a pipelined
+        // tile without ever being recorded as sharing it.
+        let mut nc = DfgBuilder::new("scalar", Criticality::NonCritical);
+        let a = nc.in_port(0, 1);
+        let b = nc.in_port(1, 1);
+        let q = nc.node(Op::Div, &[a, b]);
+        nc.out(0, q, 1);
+        let mut cr = DfgBuilder::new("pipes", Criticality::Critical);
+        let x = cr.in_port(2, 1);
+        let y = cr.in_port(3, 1);
+        let d1 = cr.node(Op::Div, &[x, y]);
+        let d2 = cr.node(Op::Sqrt, &[d1]);
+        let d3 = cr.node(Op::Div, &[d2, y]);
+        cr.out(1, d3, 1);
+        LaneConfig { name: "oversub".into(), dfgs: vec![nc.build(), cr.build()] }
+    }
+
+    #[test]
+    fn critical_nodes_never_share_and_overflow_is_hard_error() {
+        // Regression for the time-multiplex aliasing bug: with every
+        // SqrtDiv tile pinned by the critical dfg, the non-critical
+        // overflow has nowhere legal to time-multiplex. The pre-fix
+        // compiler silently placed a *critical* node onto an occupied
+        // rng-chosen tile; now this is a hard resource error.
+        let cfg = sqrtdiv_oversubscribed_config();
+        let opts = CompileOptions { heterogeneous: false, ..Default::default() };
+        let err = compile(&cfg, &FabricSpec::default_revel(), &opts);
+        assert!(
+            matches!(err, Err(CompileError::Resources(_))),
+            "critical overflow must be a hard error, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn noncritical_overflow_time_multiplexes_least_loaded() {
+        // Two critical divs pin two SqrtDiv tiles; two non-critical divs
+        // need the third plus one shared slot. The fallback must pick
+        // deterministically (least-loaded, lowest index), must record
+        // the sharing, and must never touch a critical tile.
+        let mut cr = DfgBuilder::new("pipes", Criticality::Critical);
+        let x = cr.in_port(0, 1);
+        let y = cr.in_port(1, 1);
+        let d1 = cr.node(Op::Div, &[x, y]);
+        let d2 = cr.node(Op::Div, &[d1, y]);
+        cr.out(0, d2, 1);
+        let mut nc = DfgBuilder::new("scalar", Criticality::NonCritical);
+        let a = nc.in_port(2, 1);
+        let b = nc.in_port(3, 1);
+        let q1 = nc.node(Op::Div, &[a, b]);
+        let q2 = nc.node(Op::Div, &[q1, b]);
+        nc.out(1, q2, 1);
+        let cfg = LaneConfig { name: "share".into(), dfgs: vec![cr.build(), nc.build()] };
+        // anneal_iters: 0 — the frozen annealer's swap moves predate
+        // tile sharing and are not sharing-aware; with a shared tile in
+        // play its HashMap-backed occupant lookup is the one legacy
+        // code path that is not order-stable. The fallback itself (the
+        // code under test) and the negotiated engine are deterministic.
+        let opts = CompileOptions {
+            heterogeneous: false,
+            anneal_iters: 0,
+            ..Default::default()
+        };
+        let p = compile(&cfg, &FabricSpec::default_revel(), &opts).unwrap();
+        // Critical nodes (dfg 0) own their tiles exclusively.
+        let crit_tiles: Vec<usize> =
+            (0..2).map(|ni| p.tile_of[&(0, ni)]).collect();
+        for (&(di, _), &t) in &p.tile_of {
+            if di != 0 {
+                assert!(
+                    !crit_tiles.contains(&t),
+                    "non-critical node aliases a pipelined tile {t}"
+                );
+            }
+        }
+        // And repeated compiles agree exactly (no rng in the fallback).
+        let q = compile(&cfg, &FabricSpec::default_revel(), &opts).unwrap();
+        assert_eq!(p.tile_of, q.tile_of);
+    }
+
+    #[test]
+    fn duplicate_operand_nets_are_deduped() {
+        // x*x: one input feeding both operand slots of one node is a
+        // single physical wire. Pre-fix, the net list counted it twice,
+        // inflating wirelength/overuse before they fed the router.
+        let mut b = DfgBuilder::new("sq", Criticality::Critical);
+        let x = b.in_port(0, 1);
+        let m = b.node(Op::Mul, &[x, x]);
+        b.out(0, m, 1);
+        let cfg = LaneConfig { name: "sq".into(), dfgs: vec![b.build()] };
+        let fabric = FabricSpec::default_revel();
+        let p = compile(&cfg, &fabric, &CompileOptions::default()).unwrap();
+        // Physical nets: port->mul (once, deduped) + mul->out.
+        assert_eq!(p.nets, 2, "duplicate operand must collapse to one wire");
+        let dup = collect_nets(&cfg, &fabric, &[0], &p.tile_of, false);
+        let phys = collect_nets(&cfg, &fabric, &[0], &p.tile_of, true);
+        assert_eq!(dup.len(), 3, "historical metric list keeps the duplicate");
+        assert_eq!(phys.len(), 2);
+    }
+
+    #[test]
+    fn negotiated_router_prefers_low_index_paths() {
+        // Two equal-cost L-shaped routes exist from (0,0) to (1,1); the
+        // pinned tie-break (min-heap keyed (cost, tile), ascending
+        // neighbor order) must pick the one through the lower tile index.
+        let fabric = FabricSpec::default_revel();
+        let s = fabric.idx(0, 0);
+        let t = fabric.idx(1, 1);
+        let (wl, ou, routes) = negotiate_routes(&fabric, &[(s, t)], 8);
+        assert_eq!(ou, 0);
+        assert_eq!(wl, 3);
+        assert_eq!(routes, vec![vec![s, fabric.idx(1, 0), t]]);
+    }
+
+    #[test]
+    fn negotiated_never_loses_to_greedy_on_frozen_metric() {
+        let cfg = cholesky_like_config();
+        let fabric = FabricSpec::default_revel();
+        let greedy = compile(
+            &cfg,
+            &fabric,
+            &CompileOptions { strategy: PlaceStrategy::Greedy, ..Default::default() },
+        )
+        .unwrap();
+        let neg = compile(&cfg, &fabric, &CompileOptions::default()).unwrap();
+        // The portfolio selection keys timing off the frozen metric, so
+        // the pipeline depth the simulator sees can only shrink.
+        for (a, b) in neg.timing.iter().zip(&greedy.timing) {
+            assert!(a.depth <= b.depth, "negotiated depth regressed");
+            assert_eq!(a.ii, b.ii);
+        }
     }
 }

@@ -88,6 +88,19 @@ pub struct SweepOutcome {
     pub wall_ns_mean: f64,
     /// Fastest observed execution of this point, nanoseconds.
     pub wall_ns_min: f64,
+    /// Routed wirelength (hops over deduplicated physical nets) of the
+    /// kernel's compiled placement. Zero when parsed from a pre-v3
+    /// artifact or when no placement was compiled. Informational —
+    /// never gates the cycle diff.
+    pub wirelength: u64,
+    /// Residual link overuse of the placement (0 = fully legalized).
+    pub overuse: u64,
+    /// Predicted scratchpad line fetches of the control program
+    /// (vsc reuse-accounting model), summed over configuration eras.
+    pub line_fetches: u64,
+    /// Predicted avoidable re-fetches ([`crate::vsc::TrafficReport`]
+    /// missed-reuse), summed over configuration eras.
+    pub missed_reuse: u64,
 }
 
 impl SweepOutcome {
@@ -142,6 +155,10 @@ impl SweepOutcome {
             ("flops_per_cycle", Json::Num(self.flops_per_cycle())),
             ("wall_ns_mean", Json::Num(self.wall_ns_mean)),
             ("wall_ns_min", Json::Num(self.wall_ns_min)),
+            ("wirelength", Json::Num(self.wirelength as f64)),
+            ("overuse", Json::Num(self.overuse as f64)),
+            ("line_fetches", Json::Num(self.line_fetches as f64)),
+            ("missed_reuse", Json::Num(self.missed_reuse as f64)),
             (
                 "lane_cycles",
                 Json::Arr(
@@ -253,6 +270,13 @@ impl SweepOutcome {
                 .and_then(Json::as_f64)
                 .unwrap_or(0.0),
             wall_ns_min: v.get("wall_ns_min").and_then(Json::as_f64).unwrap_or(0.0),
+            // Placement/reuse fields arrived with artifact version 3;
+            // older baselines parse as 0 ("unknown") so the placement
+            // delta report degrades instead of failing.
+            wirelength: v.get("wirelength").and_then(Json::as_u64).unwrap_or(0),
+            overuse: v.get("overuse").and_then(Json::as_u64).unwrap_or(0),
+            line_fetches: v.get("line_fetches").and_then(Json::as_u64).unwrap_or(0),
+            missed_reuse: v.get("missed_reuse").and_then(Json::as_u64).unwrap_or(0),
         })
     }
 }
@@ -290,12 +314,27 @@ pub fn execute_point(p: &SweepPoint) -> Result<SweepOutcome, WlError> {
     if let Some((w, h)) = p.fabric {
         workloads::set_fabric(Some(FabricSpec::revel(w, h)));
     }
-    let r = workloads::prepare(&p.kernel, p.n, p.feats, p.goal)
-        .and_then(|prep| prep.execute());
+    let r = workloads::prepare(&p.kernel, p.n, p.feats, p.goal).and_then(|prep| {
+        // Predicted scratchpad traffic of the control program (the vsc
+        // reuse-accounting model) — captured pre-execution, since
+        // `execute` consumes the prepared run.
+        let chk = crate::vsc::check_program(&prep.prog, &prep.machine.cfg);
+        let (fetches, missed) = chk
+            .traffic
+            .iter()
+            .fold((0u64, 0u64), |(f, m), t| (f + t.fetches, m + t.missed_reuse));
+        prep.execute().map(|o| (o, fetches, missed))
+    });
+    // Placement metrics: `prepare` populated the config cache under the
+    // (still installed) fabric override; peek, never recompile.
+    let place = workloads::peek_config(&p.kernel, p.feats);
     if p.fabric.is_some() {
         workloads::set_fabric(None);
     }
-    let r = r?;
+    let (r, line_fetches, missed_reuse) = r?;
+    let (wirelength, overuse) = place
+        .map(|c| (c.placement.wirelength as u64, c.placement.overuse as u64))
+        .unwrap_or((0, 0));
     let wall_ns = t0.elapsed().as_nanos() as f64;
     Ok(SweepOutcome {
         point: p.clone(),
@@ -306,6 +345,10 @@ pub fn execute_point(p: &SweepPoint) -> Result<SweepOutcome, WlError> {
         stats: r.stats,
         wall_ns_mean: wall_ns,
         wall_ns_min: wall_ns,
+        wirelength,
+        overuse,
+        line_fetches,
+        missed_reuse,
     })
 }
 
@@ -419,6 +462,10 @@ pub struct SweepDiff {
     /// the informational before/after report. Wall time never gates the
     /// diff — only the cycle classification above does.
     pub walls: Vec<WallRow>,
+    /// Matched points carrying placement data on both sides
+    /// (wirelength > 0), paired for the informational
+    /// wirelength/overuse/traffic delta table. Like walls, never gates.
+    pub places: Vec<PlaceRow>,
 }
 
 /// Per-point host wall-time pair of a matched baseline/current point.
@@ -430,6 +477,29 @@ pub struct WallRow {
     pub base_ns: f64,
     /// Current host wall time, nanoseconds (mean over reps).
     pub cur_ns: f64,
+}
+
+/// Per-point placement/traffic pair of a matched baseline/current point.
+#[derive(Clone, Debug)]
+pub struct PlaceRow {
+    /// Point identity ([`point_key`]).
+    pub key: String,
+    /// Baseline routed wirelength (hops).
+    pub base_wl: u64,
+    /// Current routed wirelength (hops).
+    pub cur_wl: u64,
+    /// Baseline residual link overuse.
+    pub base_ou: u64,
+    /// Current residual link overuse.
+    pub cur_ou: u64,
+    /// Baseline predicted line fetches.
+    pub base_fetches: u64,
+    /// Current predicted line fetches.
+    pub cur_fetches: u64,
+    /// Baseline predicted missed-reuse fetches.
+    pub base_missed: u64,
+    /// Current predicted missed-reuse fetches.
+    pub cur_missed: u64,
 }
 
 /// Stable identity string of a sweep point (kernel/n/features/goal/
@@ -472,6 +542,19 @@ pub fn diff_outcomes(
                 cur_ns: c.wall_ns_mean,
             });
         }
+        if b.wirelength > 0 && c.wirelength > 0 {
+            d.places.push(PlaceRow {
+                key: key.clone(),
+                base_wl: b.wirelength,
+                cur_wl: c.wirelength,
+                base_ou: b.overuse,
+                cur_ou: c.overuse,
+                base_fetches: b.line_fetches,
+                cur_fetches: c.line_fetches,
+                base_missed: b.missed_reuse,
+                cur_missed: c.missed_reuse,
+            });
+        }
         let limit = b.cycles as f64 * (1.0 + tol_pct / 100.0);
         let row = DiffRow { key, base: b.cycles, cur: c.cycles };
         if (c.cycles as f64) > limit {
@@ -500,8 +583,10 @@ pub fn artifact_json(
     Json::obj(vec![
         ("schema", Json::Str("revel-bench-sweep".into())),
         // Version 2 added per-point host wall time (wall_ns_mean /
-        // wall_ns_min); version-1 artifacts still parse (walls read 0).
-        ("version", Json::Num(2.0)),
+        // wall_ns_min); version 3 added placement + reuse-accounting
+        // fields (wirelength/overuse/line_fetches/missed_reuse).
+        // Version-1/-2 artifacts still parse (new fields read 0).
+        ("version", Json::Num(3.0)),
         ("workers", Json::Num(workers as f64)),
         ("wall_s", Json::Num(wall_s)),
         ("freq_ghz", Json::Num(model::FREQ_GHZ)),
@@ -632,6 +717,12 @@ mod tests {
             assert!(orig.wall_ns_mean > 0.0, "execution records wall time");
             assert_eq!(rt.wall_ns_mean, orig.wall_ns_mean);
             assert_eq!(rt.wall_ns_min, orig.wall_ns_min);
+            assert!(orig.wirelength > 0, "execution records placement metrics");
+            assert!(orig.line_fetches > 0, "execution records predicted traffic");
+            assert_eq!(rt.wirelength, orig.wirelength);
+            assert_eq!(rt.overuse, orig.overuse);
+            assert_eq!(rt.line_fetches, orig.line_fetches);
+            assert_eq!(rt.missed_reuse, orig.missed_reuse);
         }
         // Round-trip is a fixed point: re-serializing parses identically.
         let doc2 = artifact_json(
@@ -661,14 +752,20 @@ mod tests {
         assert_eq!(d.unchanged, 2);
         assert_eq!(d.walls.len(), 2);
         assert!(d.walls.iter().all(|w| w.base_ns > 0.0 && w.base_ns == w.cur_ns));
-        // A wall-less baseline (old artifact) degrades informationally.
+        assert_eq!(d.places.len(), 2, "placement data pairs on both sides");
+        assert!(d.places.iter().all(|r| r.base_wl == r.cur_wl && r.base_ou == r.cur_ou));
+        // A wall-less, placement-less baseline (old artifact) degrades
+        // informationally.
         let mut old = base.clone();
         for o in &mut old {
             o.wall_ns_mean = 0.0;
             o.wall_ns_min = 0.0;
+            o.wirelength = 0;
+            o.overuse = 0;
         }
         let d = diff_outcomes(&old, &base, 0.0);
         assert!(d.walls.is_empty(), "no wall data on one side: not paired");
+        assert!(d.places.is_empty(), "no placement data on one side: not paired");
         assert_eq!(d.unchanged, 2, "cycle gate unaffected by missing walls");
         // Inflate one current point: regression at 0%, absorbed by 200%.
         let mut slow = base.clone();

@@ -4,6 +4,7 @@
 //! revel report <fig1|pipeline|fig7|fig8|fig16|...|table6|headline|all>
 //! revel run <kernel> <n> [--throughput] [--features base|+inductive|...|all]
 //! revel trace <kernel> <n>
+//! revel place [kernel ...] [--strategy greedy|negotiated] [--n N] [--report]
 //! revel sweep [--out FILE] [--workers N] [kernel ...]
 //! revel sweep-diff <BASELINE.json> <CURRENT.json> [--tolerance PCT]
 //! revel serve [--engine replay|cosim] [--cells N] [--units U] [--jobs M]
@@ -21,6 +22,7 @@
 //! ```
 
 use revel::analysis::kernels;
+use revel::compiler::PlaceStrategy;
 use revel::coordinator::{
     ArrivalProcess, CellSpec, ClusterSpec, DagFaultPlan, EngineKind, FaultPlan,
     ServeReport,
@@ -207,6 +209,114 @@ fn main() {
                 s.regions
             );
         }
+        Some("place") => {
+            // Placement inspector: compile each kernel's configs under a
+            // chosen strategy and report the physical placement metrics
+            // the sweep artifact records (wirelength, overuse, tiles).
+            let flag = |name: &str| {
+                args.iter().position(|a| a == name).and_then(|i| args.get(i + 1))
+            };
+            let strategy = match flag("--strategy").map(|s| s.as_str()) {
+                None | Some("negotiated") => PlaceStrategy::Negotiated,
+                Some("greedy") => PlaceStrategy::Greedy,
+                Some(other) => {
+                    eprintln!(
+                        "unknown strategy {other} (expected greedy|negotiated)"
+                    );
+                    std::process::exit(2);
+                }
+            };
+            let n_override: Option<usize> =
+                flag("--n").and_then(|s| s.parse().ok());
+            let with_report = args.iter().any(|a| a == "--report");
+            let mut skip = std::collections::HashSet::new();
+            for f in ["--strategy", "--n"] {
+                if let Some(i) = args.iter().position(|a| a == f) {
+                    skip.insert(i);
+                    skip.insert(i + 1);
+                }
+            }
+            let kernels: Vec<&str> = args
+                .iter()
+                .enumerate()
+                .skip(1)
+                .filter(|(i, a)| !skip.contains(i) && !a.starts_with("--"))
+                .map(|(_, a)| a.as_str())
+                .collect();
+            let kernels: Vec<&str> = if kernels.is_empty() {
+                workloads::NAMES.to_vec()
+            } else {
+                for k in &kernels {
+                    assert!(
+                        workloads::NAMES.contains(k),
+                        "unknown kernel {k}; see `revel list`"
+                    );
+                }
+                kernels
+            };
+            workloads::set_place_strategy(Some(strategy));
+            let mut t = revel::util::stats::Table::new(&[
+                "kernel", "n", "strategy", "winner", "wirelength", "overuse",
+                "tiles", "nets", "rounds",
+            ]);
+            let mut reports = Vec::new();
+            for k in &kernels {
+                let n = n_override.unwrap_or_else(|| workloads::sizes(k)[0]);
+                let prep = workloads::prepare(k, n, Features::ALL, Goal::Latency)
+                    .unwrap_or_else(|e| panic!("prepare {k} n={n}: {e}"));
+                let cfg = workloads::peek_config(k, Features::ALL)
+                    .expect("prepare caches the compiled config");
+                let p = &cfg.placement;
+                t.row(vec![
+                    k.to_string(),
+                    n.to_string(),
+                    format!("{strategy:?}").to_lowercase(),
+                    if p.negotiated { "negotiated" } else { "greedy" }.into(),
+                    p.wirelength.to_string(),
+                    p.overuse.to_string(),
+                    p.tiles_used.to_string(),
+                    p.nets.to_string(),
+                    p.rounds.to_string(),
+                ]);
+                if with_report {
+                    let mut lines = vec![format!(
+                        "{k}: {} dfgs, {} temporal insts",
+                        p.timing.len(),
+                        p.temporal_insts
+                    )];
+                    for (i, dt) in p.timing.iter().enumerate() {
+                        lines.push(format!(
+                            "  dfg {i}: ii {}, depth {}, {} ({} insts)",
+                            dt.ii,
+                            dt.depth,
+                            if dt.temporal { "temporal" } else { "dedicated" },
+                            dt.insts
+                        ));
+                    }
+                    let chk =
+                        revel::vsc::check_program(&prep.prog, &prep.machine.cfg);
+                    for tr in &chk.traffic {
+                        lines.push(format!(
+                            "  traffic [{}]: {} loads, {} words, {} line \
+                             fetches ({} hits, {} missed-reuse), {} store lines",
+                            tr.config,
+                            tr.loads,
+                            tr.accesses,
+                            tr.fetches,
+                            tr.hits,
+                            tr.missed_reuse,
+                            tr.store_lines
+                        ));
+                    }
+                    reports.push(lines.join("\n"));
+                }
+            }
+            workloads::set_place_strategy(None);
+            println!("{}", t.render());
+            for r in &reports {
+                println!("{r}");
+            }
+        }
         Some("sweep") => {
             let out_path = args
                 .iter()
@@ -359,6 +469,34 @@ fn main() {
                 println!(
                     "host wall time: baseline artifact carries no per-point wall \
                      data (pre-v2 schema); skipping the informational table"
+                );
+            }
+            // Placement and reuse deltas (informational only — wirelength
+            // and overuse feed no gate; simulated cycles above decide).
+            if !d.places.is_empty() {
+                let mut pt = revel::util::stats::Table::new(&[
+                    "point",
+                    "wirelength",
+                    "overuse",
+                    "line fetches",
+                    "missed-reuse",
+                ]);
+                for p in &d.places {
+                    pt.row(vec![
+                        p.key.clone(),
+                        format!("{} -> {}", p.base_wl, p.cur_wl),
+                        format!("{} -> {}", p.base_ou, p.cur_ou),
+                        format!("{} -> {}", p.base_fetches, p.cur_fetches),
+                        format!("{} -> {}", p.base_missed, p.cur_missed),
+                    ]);
+                }
+                println!("placement / reuse deltas (informational):");
+                println!("{}", pt.render());
+            } else {
+                println!(
+                    "placement data: no matched point carries placement \
+                     metrics (pre-v3 schema baseline); skipping the \
+                     informational table"
                 );
             }
             // Lost coverage fails too: if baseline points stop matching
@@ -606,10 +744,12 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: revel <report|run|trace|sweep|sweep-diff|serve|dag|pipeline|list> ...\n\
+                "usage: revel <report|run|trace|place|sweep|sweep-diff|serve|dag|pipeline|list> ...\n\
                    revel report all\n\
                    revel run cholesky 16 [--throughput] [--features base]\n\
                    revel trace qr 32\n\
+                   revel place [cholesky lu ...] [--strategy greedy|negotiated]\n\
+                               [--n N] [--report]\n\
                    revel sweep --out BENCH_sweep.json [--workers 8] [cholesky solver ...]\n\
                    revel sweep-diff baseline.json BENCH_sweep.json [--tolerance 0]\n\
                    revel serve --cells 4 --units 4 --jobs 200 --seed 7\n\

@@ -55,6 +55,14 @@ impl Region {
         self.base + self.words
     }
 
+    /// Scratchpad lines the region spans (bases are line-aligned, so
+    /// this is the region's line-traffic footprint: a full reload of
+    /// the region fetches exactly this many lines).
+    pub fn lines(&self) -> i64 {
+        let line = LINE_WORDS as i64;
+        (self.words + line - 1) / line
+    }
+
     /// Region name (diagnostics).
     pub fn name(&self) -> &'static str {
         self.name
@@ -364,6 +372,8 @@ mod tests {
         let a = al.region("a", 32).unwrap();
         assert_eq!(a.lin(4, 8).start, 4);
         assert_eq!(a.addr(31), 31);
+        assert_eq!(a.lines(), 2, "32 words = 2 full lines");
+        assert_eq!(al.region("odd", 17).unwrap().lines(), 2, "17 words round up");
         let tri = a.inductive(0, 1, 4.0, 5, 4, -1.0);
         assert_eq!(tri.total_len(), 10);
     }

@@ -7,14 +7,23 @@
 //!
 //! Also home to [`programs_equal`], the structural command-stream
 //! comparator the old-vs-new port-equivalence property tests use.
+//!
+//! Beyond correctness, the pass runs a **reuse-budget accounting**
+//! model: a small LRU of live scratchpad lines per configuration era
+//! predicts line traffic (fetches, hits) for every local load stream
+//! and flags *missed reuse* — a line re-fetched after eviction that a
+//! legal stream reordering would have kept resident. The per-era
+//! [`TrafficReport`]s feed `revel place --report` and the sweep
+//! artifacts, so a kernel author sees predicted scratchpad traffic
+//! next to the structural diagnostics.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use crate::compiler::Configured;
 use crate::isa::{Cmd, Program, VsCommand};
 use crate::sim::lane::NUM_PORTS;
-use crate::sim::SimConfig;
+use crate::sim::{SimConfig, LINE_WORDS};
 
 /// Diagnostic severity.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,16 +34,53 @@ pub enum Severity {
     Warning,
 }
 
+/// What class of finding a diagnostic reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiagKind {
+    /// Structural soundness: unfed ports, undrained outputs, bounds.
+    Structural,
+    /// Reuse accounting: a stream re-fetches scratchpad lines that a
+    /// legal reordering would have kept resident in the line buffer.
+    MissedReuse,
+}
+
 /// One diagnostic: severity, the command index it anchors to (if any),
 /// and a rendered message.
 #[derive(Clone, Debug)]
 pub struct Diag {
     /// Error or warning.
     pub severity: Severity,
+    /// Finding class (structural vs reuse accounting).
+    pub kind: DiagKind,
     /// Index of the offending command in the program, if localized.
     pub at: Option<usize>,
     /// Human-readable description.
     pub msg: String,
+}
+
+/// Live scratchpad lines the reuse model assumes a lane's stream engine
+/// keeps resident (a small fully-associative LRU, the UniZK
+/// vector-chain idiom applied to scratchpad lines).
+pub const REUSE_LINES: usize = 8;
+
+/// Predicted scratchpad line traffic for one configuration era.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficReport {
+    /// Kernel/config name the era was configured with.
+    pub config: String,
+    /// Local load streams observed.
+    pub loads: u64,
+    /// Words touched by those load streams.
+    pub accesses: u64,
+    /// Line fetches the LRU model predicts (cold + capacity misses).
+    pub fetches: u64,
+    /// Accesses served from a resident line.
+    pub hits: u64,
+    /// Fetches of a line that was resident earlier in the era — traffic
+    /// a legal stream reordering could have avoided.
+    pub missed_reuse: u64,
+    /// Distinct lines written by local store streams.
+    pub store_lines: u64,
 }
 
 /// Result of [`check_program`].
@@ -42,6 +88,9 @@ pub struct Diag {
 pub struct CheckReport {
     /// All diagnostics, in discovery order.
     pub diags: Vec<Diag>,
+    /// Predicted line traffic, one entry per configuration era that
+    /// moved any scratchpad data.
+    pub traffic: Vec<TrafficReport>,
 }
 
 impl CheckReport {
@@ -61,18 +110,40 @@ impl CheckReport {
     }
 
     fn error(&mut self, at: Option<usize>, msg: String) {
-        self.diags.push(Diag { severity: Severity::Error, at, msg });
+        self.diags.push(Diag {
+            severity: Severity::Error,
+            kind: DiagKind::Structural,
+            at,
+            msg,
+        });
     }
 
     fn warn(&mut self, at: Option<usize>, msg: String) {
-        self.diags.push(Diag { severity: Severity::Warning, at, msg });
+        self.diags.push(Diag {
+            severity: Severity::Warning,
+            kind: DiagKind::Structural,
+            at,
+            msg,
+        });
+    }
+
+    fn warn_reuse(&mut self, at: Option<usize>, msg: String) {
+        self.diags.push(Diag {
+            severity: Severity::Warning,
+            kind: DiagKind::MissedReuse,
+            at,
+            msg,
+        });
     }
 }
 
 impl std::fmt::Display for CheckReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         if self.is_clean() {
-            return write!(f, "program check: clean");
+            if self.traffic.is_empty() {
+                return write!(f, "program check: clean");
+            }
+            writeln!(f, "program check: clean")?;
         }
         for d in &self.diags {
             let sev = match d.severity {
@@ -84,7 +155,85 @@ impl std::fmt::Display for CheckReport {
                 None => writeln!(f, "{sev}: {}", d.msg)?,
             }
         }
+        for t in &self.traffic {
+            writeln!(
+                f,
+                "traffic [{}]: {} loads, {} words, {} line fetches \
+                 ({} hits, {} missed-reuse), {} store lines",
+                t.config, t.loads, t.accesses, t.fetches, t.hits, t.missed_reuse,
+                t.store_lines
+            )?;
+        }
         Ok(())
+    }
+}
+
+/// The per-era LRU line-reuse model (UniZK vector-chain idiom): walk
+/// every local load stream element-by-element, keep the most recent
+/// [`REUSE_LINES`] scratchpad lines "resident", and classify each line
+/// touch as hit / cold fetch / *missed reuse* (the line was resident
+/// earlier this era and got evicted before this re-fetch).
+#[derive(Default)]
+struct ReuseModel {
+    /// Resident lines, most recently used first.
+    lru: Vec<i64>,
+    /// Every line fetched at least once this era.
+    seen: HashSet<i64>,
+    report: TrafficReport,
+}
+
+impl ReuseModel {
+    fn reset(&mut self, rep: &mut CheckReport, cfg: Option<&Configured>) {
+        if self.report.loads > 0 || self.report.store_lines > 0 {
+            let mut t = std::mem::take(&mut self.report);
+            t.config = cfg
+                .map(|c| c.config.name.clone())
+                .unwrap_or_else(|| "<unconfigured>".into());
+            rep.traffic.push(t);
+        } else {
+            self.report = TrafficReport::default();
+        }
+        self.lru.clear();
+        self.seen.clear();
+    }
+
+    /// Account one load stream; returns (missed-reuse fetches, distinct
+    /// lines) for this command so the caller can decide whether a
+    /// reordering warning is warranted.
+    fn load(&mut self, pat: &crate::isa::Pattern2D) -> (u64, usize) {
+        self.report.loads += 1;
+        let mut missed = 0u64;
+        let mut cmd_lines: HashSet<i64> = HashSet::new();
+        for (addr, _) in pat.iter() {
+            self.report.accesses += 1;
+            let line = addr.div_euclid(LINE_WORDS as i64);
+            cmd_lines.insert(line);
+            if let Some(pos) = self.lru.iter().position(|&l| l == line) {
+                self.report.hits += 1;
+                self.lru.remove(pos);
+                self.lru.insert(0, line);
+                continue;
+            }
+            self.report.fetches += 1;
+            if self.seen.contains(&line) {
+                self.report.missed_reuse += 1;
+                missed += 1;
+            }
+            self.seen.insert(line);
+            self.lru.insert(0, line);
+            self.lru.truncate(REUSE_LINES);
+        }
+        (missed, cmd_lines.len())
+    }
+
+    /// Account one store stream (distinct lines written; stores bypass
+    /// the read-reuse LRU — the stream engine write-combines them).
+    fn store(&mut self, pat: &crate::isa::Pattern2D) {
+        let lines: HashSet<i64> = pat
+            .iter()
+            .map(|(addr, _)| addr.div_euclid(LINE_WORDS as i64))
+            .collect();
+        self.report.store_lines += lines.len() as u64;
     }
 }
 
@@ -114,6 +263,7 @@ pub fn check_program(prog: &Program, sim: &SimConfig) -> CheckReport {
     let mut rep = CheckReport::default();
     let mut cfg: Option<Arc<Configured>> = None;
     let mut usage = Usage::default();
+    let mut reuse = ReuseModel::default();
 
     for (i, c) in prog.iter().enumerate() {
         if let Some(hi) = c.lanes.lanes().max() {
@@ -139,6 +289,7 @@ pub fn check_program(prog: &Program, sim: &SimConfig) -> CheckReport {
         match &c.cmd {
             Cmd::Configure(conf) => {
                 flush_coverage(&mut rep, cfg.as_deref(), &usage);
+                reuse.reset(&mut rep, cfg.as_deref());
                 usage = Usage::default();
                 cfg = Some(conf.clone());
             }
@@ -146,13 +297,29 @@ pub fn check_program(prog: &Program, sim: &SimConfig) -> CheckReport {
             _ if cfg.is_none() => {
                 rep.error(Some(i), "stream command before any Configure".into());
             }
-            Cmd::LocalLd { pat, port, reuse, .. } => {
+            Cmd::LocalLd { pat, port, reuse: port_reuse, .. } => {
                 if let Some(msg) = local_in_bounds(pat.bounds()) {
                     rep.error(Some(i), format!("load pattern {msg}"));
                 }
+                let (missed, cmd_lines) = reuse.load(pat);
+                if missed > 0 && cmd_lines <= REUSE_LINES {
+                    // The whole stream fits the line budget, yet some of
+                    // its lines were fetched (and evicted) earlier this
+                    // era: hoisting this stream next to the prior use
+                    // would have kept them resident.
+                    rep.warn_reuse(
+                        Some(i),
+                        format!(
+                            "stream re-fetches {missed} scratchpad line(s) \
+                             resident earlier in this era; a legal reordering \
+                             would have kept them live ({REUSE_LINES}-line \
+                             reuse budget)"
+                        ),
+                    );
+                }
                 match in_width(cfg.as_deref(), *port) {
                     Some(w) => {
-                        usage.feed(*port, pat.instances(w), reuse.is_some())
+                        usage.feed(*port, pat.instances(w), port_reuse.is_some())
                     }
                     None => rep.error(
                         Some(i),
@@ -171,6 +338,7 @@ pub fn check_program(prog: &Program, sim: &SimConfig) -> CheckReport {
                 if let Some(msg) = local_in_bounds(pat.bounds()) {
                     rep.error(Some(i), format!("store pattern {msg}"));
                 }
+                reuse.store(pat);
                 match out_width(cfg.as_deref(), *port) {
                     Some(_) => {
                         usage.drained.insert(*port, true);
@@ -270,6 +438,7 @@ pub fn check_program(prog: &Program, sim: &SimConfig) -> CheckReport {
         }
     }
     flush_coverage(&mut rep, cfg.as_deref(), &usage);
+    reuse.reset(&mut rep, cfg.as_deref());
     rep
 }
 
@@ -562,6 +731,77 @@ mod tests {
         let rep = check_program(&prog, &sim());
         assert!(
             rep.warnings().iter().any(|d| d.msg.contains("unbalanced")),
+            "{rep}"
+        );
+    }
+
+    #[test]
+    fn sequential_streams_report_no_missed_reuse() {
+        let (b, (x, s, o)) = built();
+        let cfg = cfg_of(&b);
+        let mut p = b.program(cfg, Features::ALL, LaneMask::one(0));
+        p.ld(Pattern2D::lin(0, 32), x);
+        p.gate_run(s, 2.0, 8);
+        p.st(Pattern2D::lin(64, 32), o);
+        let rep = check_program(&p.finish(), &sim());
+        assert!(rep.errors().is_empty(), "{rep}");
+        assert_eq!(rep.traffic.len(), 1, "{rep}");
+        let t = &rep.traffic[0];
+        assert_eq!(t.config, "chk");
+        assert_eq!(t.missed_reuse, 0);
+        assert_eq!(t.loads, 1);
+        assert_eq!(t.accesses, 32);
+        // 32 sequential words = 2 lines: 2 fetches, 30 resident hits.
+        assert_eq!((t.fetches, t.hits), (2, 30));
+        assert_eq!(t.store_lines, 2);
+        assert!(!rep.diags.iter().any(|d| d.kind == DiagKind::MissedReuse));
+    }
+
+    #[test]
+    fn evicted_refetch_warns_missed_reuse() {
+        let (b, (x, s, o)) = built();
+        let cfg = cfg_of(&b);
+        let mut p = b.program(cfg, Features::ALL, LaneMask::one(0));
+        // Lines 0-1, then a 9-line sweep (evicts them from the 8-line
+        // LRU), then lines 0-1 again: the re-fetch is avoidable by
+        // hoisting the third stream next to the first.
+        p.ld(Pattern2D::lin(0, 32), x);
+        p.ld(Pattern2D::lin(32, 144), x);
+        p.ld(Pattern2D::lin(0, 32), x);
+        p.gate_run(s, 2.0, 52);
+        p.st(Pattern2D::lin(256, 32), o);
+        let rep = check_program(&p.finish(), &sim());
+        assert!(rep.errors().is_empty(), "{rep}");
+        let t = &rep.traffic[0];
+        assert_eq!(t.missed_reuse, 2, "{rep}");
+        assert_eq!(t.loads, 3);
+        let reuse_warns: Vec<&Diag> = rep
+            .diags
+            .iter()
+            .filter(|d| d.kind == DiagKind::MissedReuse)
+            .collect();
+        assert_eq!(reuse_warns.len(), 1, "{rep}");
+        assert_eq!(reuse_warns[0].severity, Severity::Warning);
+        assert_eq!(reuse_warns[0].at, Some(3), "anchored to the re-fetch");
+    }
+
+    #[test]
+    fn capacity_bound_sweeps_do_not_warn() {
+        let (b, (x, s, o)) = built();
+        let cfg = cfg_of(&b);
+        let mut p = b.program(cfg, Features::ALL, LaneMask::one(0));
+        // Two 16-line sweeps: every re-fetch is a capacity miss (the
+        // stream itself overflows the budget), not a reordering miss —
+        // traffic is counted but no warning fires.
+        p.ld(Pattern2D::lin(0, 256), x);
+        p.ld(Pattern2D::lin(0, 256), x);
+        p.gate_run(s, 2.0, 128);
+        p.st(Pattern2D::lin(512, 32), o);
+        let rep = check_program(&p.finish(), &sim());
+        assert!(rep.errors().is_empty(), "{rep}");
+        assert_eq!(rep.traffic[0].missed_reuse, 16, "{rep}");
+        assert!(
+            !rep.diags.iter().any(|d| d.kind == DiagKind::MissedReuse),
             "{rep}"
         );
     }

@@ -23,9 +23,12 @@
 //!   construction. No workload hard-codes a base address anymore.
 //! * [`check`] — [`check_program`] validates a finished program
 //!   (every fed dataflow can fire, every produced output is drained,
-//!   patterns stay in bounds, instance totals balance) and renders
-//!   readable diagnostics; [`programs_equal`] is the structural
-//!   comparator behind the old-vs-new port equivalence tests.
+//!   patterns stay in bounds, instance totals balance), runs the
+//!   LRU reuse-budget accounting model (predicted line traffic per
+//!   configuration era, [`DiagKind::MissedReuse`] warnings for
+//!   avoidable re-fetches), and renders readable diagnostics;
+//!   [`programs_equal`] is the structural comparator behind the
+//!   old-vs-new port equivalence tests.
 
 #![deny(missing_docs)]
 
@@ -35,4 +38,7 @@ pub mod check;
 
 pub use alloc::{AllocError, Region, SpadAlloc};
 pub use builder::{BuiltKernel, DfgScope, In, Kernel, Out, ProgBuilder};
-pub use check::{check_program, programs_equal, CheckReport, Diag, Severity};
+pub use check::{
+    check_program, programs_equal, CheckReport, Diag, DiagKind, Severity,
+    TrafficReport, REUSE_LINES,
+};

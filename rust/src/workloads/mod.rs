@@ -23,7 +23,7 @@ pub mod qr;
 pub mod solver;
 pub mod svd;
 
-use crate::compiler::{CompileError, CompileOptions, FabricSpec};
+use crate::compiler::{CompileError, CompileOptions, FabricSpec, PlaceStrategy};
 use crate::isa::Program;
 use crate::sim::{Machine, SimConfig, SimError, Stats};
 
@@ -213,14 +213,33 @@ pub fn machine(lanes: usize) -> Machine {
 thread_local! {
     static FABRIC_OVERRIDE: std::cell::RefCell<Option<FabricSpec>> =
         const { std::cell::RefCell::new(None) };
+    static PLACE_OVERRIDE: std::cell::Cell<Option<PlaceStrategy>> =
+        const { std::cell::Cell::new(None) };
 }
 
-/// Spatial compilation is deterministic in (kernel, features, fabric):
-/// memoize the compiled configuration so repeated `prepare` calls (the
-/// benches re-run workloads hundreds of times) skip the annealer.
+/// Spatial compilation is deterministic in (kernel, features, fabric,
+/// placement strategy): memoize the compiled configuration so repeated
+/// `prepare` calls (the benches re-run workloads hundreds of times)
+/// skip the placer.
 static CONFIG_CACHE: std::sync::Mutex<
-    Option<std::collections::HashMap<(String, u8, usize, usize), std::sync::Arc<crate::compiler::Configured>>>,
+    Option<std::collections::HashMap<ConfigKey, std::sync::Arc<crate::compiler::Configured>>>,
 > = std::sync::Mutex::new(None);
+
+/// Cache key: (kernel, feature bits, temporal tiles, total tiles,
+/// placement-strategy discriminant).
+type ConfigKey = (String, u8, usize, usize, u8);
+
+fn config_key(kernel: &str, feats: Features, f: &FabricSpec) -> ConfigKey {
+    let bits = (feats.inductive as u8)
+        | (feats.fine_grain as u8) << 1
+        | (feats.heterogeneous as u8) << 2
+        | (feats.masking as u8) << 3;
+    let strat = match place_strategy() {
+        PlaceStrategy::Greedy => 0u8,
+        PlaceStrategy::Negotiated => 1u8,
+    };
+    (kernel.to_string(), bits, f.temporal_tiles(), f.num_tiles(), strat)
+}
 
 /// Memoized [`crate::compiler::Configured::new`] over the current fabric.
 pub fn cached_config(
@@ -229,11 +248,7 @@ pub fn cached_config(
     build: impl FnOnce() -> Result<crate::dataflow::LaneConfig, WlError>,
 ) -> Result<std::sync::Arc<crate::compiler::Configured>, WlError> {
     let f = fabric();
-    let bits = (feats.inductive as u8)
-        | (feats.fine_grain as u8) << 1
-        | (feats.heterogeneous as u8) << 2
-        | (feats.masking as u8) << 3;
-    let key = (kernel.to_string(), bits, f.temporal_tiles(), f.num_tiles());
+    let key = config_key(kernel, feats, &f);
     {
         let g = CONFIG_CACHE.lock().unwrap();
         if let Some(map) = g.as_ref() {
@@ -242,10 +257,29 @@ pub fn cached_config(
             }
         }
     }
-    let cfg = crate::compiler::Configured::new(build()?, &f, &feats.compile_opts())?;
+    let mut opts = feats.compile_opts();
+    opts.strategy = place_strategy();
+    let cfg = crate::compiler::Configured::new(build()?, &f, &opts)?;
     let mut g = CONFIG_CACHE.lock().unwrap();
     g.get_or_insert_with(Default::default).insert(key, cfg.clone());
     Ok(cfg)
+}
+
+/// Look up an already-compiled configuration without building (the
+/// harness peeks at placement metrics after a run; `prepare` has
+/// populated the cache by then). The solver kernel is cached under its
+/// feature-dependent name.
+pub fn peek_config(
+    kernel: &str,
+    feats: Features,
+) -> Option<std::sync::Arc<crate::compiler::Configured>> {
+    let name = match kernel {
+        "solver" if !feats.fine_grain => "solver_nofg",
+        k => k,
+    };
+    let key = config_key(name, feats, &fabric());
+    let g = CONFIG_CACHE.lock().unwrap();
+    g.as_ref()?.get(&key).cloned()
 }
 
 /// Override the fabric used when compiling workload configs on this
@@ -261,6 +295,19 @@ pub fn fabric() -> FabricSpec {
     FABRIC_OVERRIDE
         .with(|c| c.borrow().clone())
         .unwrap_or_else(FabricSpec::default_revel)
+}
+
+/// Override the placement strategy used when compiling workload configs
+/// on this thread (`revel place --strategy`, A/B property tests). Pass
+/// None to restore the default (negotiated).
+pub fn set_place_strategy(s: Option<PlaceStrategy>) {
+    PLACE_OVERRIDE.with(|c| c.set(s));
+}
+
+/// Placement strategy workload configs compile with (negotiated unless
+/// overridden via [`set_place_strategy`]).
+pub fn place_strategy() -> PlaceStrategy {
+    PLACE_OVERRIDE.with(|c| c.get()).unwrap_or(PlaceStrategy::Negotiated)
 }
 
 /// The registry of workload names in paper order (Table 4's LU joins
